@@ -1,0 +1,128 @@
+//! OoO reordering + staggering demo on REAL artifacts: shows the scheduler
+//! (a) reordering across streams so a tight-SLO op jumps a relaxed one,
+//! and (b) staggering a lone kernel until shape-compatible work arrives,
+//! executing everything as coalesced Pallas superkernels via PJRT.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example ooo_reordering
+//! ```
+
+use anyhow::{Context, Result};
+
+use vliw_jit::compiler::ir::{DispatchRequest, StreamId};
+use vliw_jit::compiler::jit::{JitCompiler, JitConfig};
+use vliw_jit::gpu::kernel::KernelDesc;
+use vliw_jit::runtime::PjrtExecutor;
+
+fn main() -> Result<()> {
+    let mut ex = PjrtExecutor::from_default_artifacts().context("make artifacts")?;
+    ex.warmup_supers().map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    // Scenario 1: REORDERING. Stream 0 submits a big class-C GEMM with a
+    // relaxed SLO at t=0; stream 1 submits a tiny class-A GEMM with a tight
+    // SLO at t=0. EDF must issue the class-A op first even though it
+    // arrived second in program order.
+    println!("-- scenario 1: SLO-aware reordering --");
+    let mut jit = JitCompiler::new(JitConfig::default(), ex);
+    let done = jit.run_trace(vec![
+        (
+            0.0,
+            DispatchRequest::new(StreamId(0), KernelDesc::gemm(64, 1024, 1024), 5e6)
+                .with_tag(100),
+        ),
+        (
+            0.0,
+            DispatchRequest::new(StreamId(1), KernelDesc::gemm(32, 256, 256), 30_000.0)
+                .with_tag(200),
+        ),
+    ]);
+    for c in &done {
+        println!(
+            "  tag {} (stream {}): issued @{:.2} ms, done @{:.2} ms, {}",
+            c.op.tag,
+            c.op.stream.0,
+            c.issue_us / 1e3,
+            c.done_us / 1e3,
+            if c.met_deadline { "SLO MET" } else { "SLO MISSED" }
+        );
+    }
+    let tight = done.iter().find(|c| c.op.tag == 200).unwrap();
+    let relaxed = done.iter().find(|c| c.op.tag == 100).unwrap();
+    assert!(
+        tight.issue_us <= relaxed.issue_us,
+        "tight-SLO op must issue first (OoO reorder)"
+    );
+    assert!(tight.met_deadline);
+
+    // Scenario 2: STAGGERING. One class-B op arrives with slack; three more
+    // compatible ops trickle in over the next 1.5 ms. The JIT holds the
+    // first op (purposeful delay, §5.2) and launches all four as ONE
+    // superkernel on the real super_B_p4 artifact.
+    println!("-- scenario 2: stagger-for-coalescing --");
+    let ex2 = PjrtExecutor::from_default_artifacts().context("artifacts")?;
+    let mut jit2 = JitCompiler::new(JitConfig::default(), ex2);
+    let ops: Vec<(f64, DispatchRequest)> = (0..4)
+        .map(|i| {
+            (
+                i as f64 * 500.0, // 0, 0.5, 1.0, 1.5 ms
+                DispatchRequest::new(StreamId(i), KernelDesc::gemm(32, 512, 512), 1e6)
+                    .with_tag(i as u64),
+            )
+        })
+        .collect();
+    let done2 = jit2.run_trace(ops);
+    println!(
+        "  4 staggered arrivals -> {} launch(es), mean pack {:.1}",
+        jit2.stats.launches,
+        jit2.stats.mean_pack()
+    );
+    for c in &done2 {
+        println!(
+            "  tag {}: arrived @{:.2} ms, issued @{:.2} ms (waited {:.2} ms), pack of {}",
+            c.op.tag,
+            c.op.arrival_us / 1e3,
+            c.issue_us / 1e3,
+            (c.issue_us - c.op.arrival_us) / 1e3,
+            c.pack_size
+        );
+    }
+    assert_eq!(jit2.stats.launches, 1, "staggering must merge all four");
+
+    // Scenario 3: the SAME arrivals with a zero coalescing window
+    // (early-binding): four separate launches, 4x the device work.
+    println!("-- scenario 3: same workload, no staggering (early binding) --");
+    let ex3 = PjrtExecutor::from_default_artifacts().context("artifacts")?;
+    let mut cfg = JitConfig::default();
+    cfg.policy.coalesce_window_us = 0.0;
+    cfg.policy.target_pack = 1;
+    cfg.coalescer.max_problems = 1; // early binding: one kernel per launch
+    let mut jit3 = JitCompiler::new(cfg, ex3);
+    let ops3: Vec<(f64, DispatchRequest)> = (0..4)
+        .map(|i| {
+            (
+                i as f64 * 500.0,
+                DispatchRequest::new(StreamId(i), KernelDesc::gemm(32, 512, 512), 1e6),
+            )
+        })
+        .collect();
+    let _ = jit3.run_trace(ops3);
+    println!(
+        "  {} launches (vs 1 coalesced); per-launch JIT+dispatch overhead is \
+         paid {}x instead of once",
+        jit3.stats.launches, jit3.stats.launches
+    );
+    assert_eq!(jit3.stats.launches, 4);
+    // NOTE: on the single-core CPU-PJRT backend the packed superkernel's
+    // wall time is ~the sum of its members (no SM-level parallelism to
+    // exploit), so the win here is launch-count, scheduling and SLO
+    // control. The *throughput* gains of packing on a parallel device are
+    // quantified by the V100 simulator (see `multi_tenant` and the fig6
+    // bench: 7.7x over time-mux).
+    println!(
+        "  device busy: {:.2} ms coalesced vs {:.2} ms early-binding (CPU backend)",
+        jit2.stats.busy_us / 1e3,
+        jit3.stats.busy_us / 1e3
+    );
+    println!("ooo_reordering OK");
+    Ok(())
+}

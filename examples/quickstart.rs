@@ -1,0 +1,74 @@
+//! Quickstart: load the AOT artifacts, run one real inference through the
+//! PJRT runtime, verify numerics against the python-computed golden, then
+//! push a small burst through the OoO VLIW JIT.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::{Context, Result};
+
+use vliw_jit::compiler::ir::{DispatchRequest, StreamId};
+use vliw_jit::compiler::jit::{JitCompiler, JitConfig};
+use vliw_jit::gpu::kernel::KernelDesc;
+use vliw_jit::runtime::PjrtExecutor;
+
+fn main() -> Result<()> {
+    // 1. load artifacts (compiled once by `make artifacts`; python is NOT
+    //    on this path — we only read HLO text + weight blobs)
+    let mut ex = PjrtExecutor::from_default_artifacts()
+        .context("run `make artifacts` first")?;
+    println!("loaded manifest with {} models", ex.manifest().models.len());
+
+    // 2. single real inference: mlp_small, batch 1
+    let x = vec![0.1f32; 256];
+    let out = ex
+        .execute_model("mlp_small", &[x])
+        .context("execute mlp_small")?;
+    println!(
+        "mlp_small b1: {} outputs in {:.2} ms (first: {:.4})",
+        out.outputs[0].len(),
+        out.duration_us / 1e3,
+        out.outputs[0][0]
+    );
+
+    // 3. end-to-end numeric self-check vs the python reference
+    let err = ex
+        .golden_check_model("mlp_small", 4)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("golden check (mlp_small b4): max rel err {err:.2e} — numerics OK");
+
+    // 4. declarative dispatch through the OoO VLIW JIT: four independent
+    //    streams issue class-A GEMMs; the JIT coalesces them into ONE
+    //    superkernel launch of the real Pallas batched artifact
+    let mut jit = JitCompiler::new(JitConfig::default(), ex);
+    let ops: Vec<(f64, DispatchRequest)> = (0..4)
+        .map(|s| {
+            (
+                0.0,
+                DispatchRequest::new(StreamId(s), KernelDesc::gemm(32, 256, 256), 1e6)
+                    .with_tag(s as u64),
+            )
+        })
+        .collect();
+    let done = jit.run_trace(ops);
+    println!(
+        "JIT: {} ops -> {} superkernel launch(es), mean pack {:.1}, pack eff {:.2}",
+        done.len(),
+        jit.stats.launches,
+        jit.stats.mean_pack(),
+        jit.stats.pack_efficiency()
+    );
+    for c in &done {
+        println!(
+            "  stream {} op {:?}: latency {:.2} ms (pack of {})",
+            c.op.stream.0,
+            c.op.id,
+            c.latency_us() / 1e3,
+            c.pack_size
+        );
+    }
+    assert_eq!(jit.stats.launches, 1, "4 compatible streams must coalesce");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,203 @@
+"""AOT compile path: lower every (model, batch) variant and every superkernel
+variant to HLO *text* + write `manifest.json` + weight blobs.
+
+Run once by `make artifacts` (python is never on the request path):
+
+    cd python && python -m compile.aot --outdir ../artifacts
+
+Interchange format is HLO TEXT, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the rust side's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md). Lowered with
+return_tuple=True; the rust runtime unwraps with `to_tuple1()`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import coalesced_matmul
+from .kernels import ref as R
+
+# Superkernel shape-classes (Fig. 7 clusters A/B/C, M scaled for CPU
+# tractability — class M in the paper includes im2col rows in the 10^3
+# range; the *packing semantics* are M-invariant).
+SUPER_CLASSES = {
+    "A": dict(m=32, k=256, n=256, problems=(1, 2, 4, 8)),
+    "B": dict(m=32, k=512, n=512, problems=(1, 2, 4, 8)),
+    "C": dict(m=64, k=1024, n=1024, problems=(1, 2, 4)),
+}
+
+#: hash01 stream bases for superkernel golden inputs (mirrored in rust).
+SUPER_A_BASE = 0
+SUPER_B_BASE = 1 << 20
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(spec, batch: int, weights) -> str:
+    """Lower spec.forward at a fixed batch to HLO text. Inputs are
+    (x, *weights) — weights are runtime parameters, not constants."""
+
+    def fn(x, *flat):
+        return (spec.forward(x, flat),)
+
+    x_spec = jax.ShapeDtypeStruct((batch, spec.d_in), jnp.float32)
+    w_specs = [jax.ShapeDtypeStruct(w.shape, jnp.float32) for w in weights]
+    lowered = jax.jit(fn).lower(x_spec, *w_specs)
+    return to_hlo_text(lowered)
+
+
+def lower_super(m: int, k: int, n: int, problems: int) -> str:
+    """Lower the raw coalesced-GEMM superkernel at a fixed capacity."""
+
+    def fn(a, b):
+        return (coalesced_matmul(a, b, config="greedy"),)
+
+    a_spec = jax.ShapeDtypeStruct((problems, m, k), jnp.float32)
+    b_spec = jax.ShapeDtypeStruct((problems, k, n), jnp.float32)
+    lowered = jax.jit(fn).lower(a_spec, b_spec)
+    return to_hlo_text(lowered)
+
+
+def model_golden(spec, batch: int, weights) -> dict:
+    """Golden vector via the pure-jnp reference (NOT the pallas path), so the
+    rust end-to-end check transitively validates kernel-vs-ref too."""
+    x = M.gen_input((batch, spec.d_in))
+    pairs = [(weights[i], weights[i + 1]) for i in range(0, len(weights), 2)]
+    if spec.kind == "mlp":
+        out = R.mlp_ref(jnp.asarray(x), pairs)
+    else:
+        out = R.gemmnet_ref(jnp.asarray(x), pairs[:-1], pairs[-1])
+    flat = np.asarray(out).reshape(-1)
+    return {
+        "out_prefix": [float(v) for v in flat[:8]],
+        "out_mean_abs": float(np.abs(flat).mean()),
+    }
+
+
+def super_golden(m: int, k: int, n: int, problems: int) -> dict:
+    a = M.hash01(np.arange(problems * m * k), base=SUPER_A_BASE).reshape(problems, m, k)
+    b = M.hash01(np.arange(problems * k * n), base=SUPER_B_BASE).reshape(problems, k, n)
+    out = np.asarray(R.coalesced_matmul_ref(jnp.asarray(a), jnp.asarray(b))).reshape(-1)
+    return {
+        "out_prefix": [float(v) for v in out[:8]],
+        "out_mean_abs": float(np.abs(out).mean()),
+    }
+
+
+def write_weights(outdir: str, spec, weights) -> tuple[str, list[dict]]:
+    """Concatenate weights (f32 LE raw) into <model>.weights.bin."""
+    fname = f"{spec.name}.weights.bin"
+    table, off = [], 0
+    with open(os.path.join(outdir, fname), "wb") as f:
+        for (nm, shp, _), w in zip(spec.weight_tensors(), weights):
+            raw = np.ascontiguousarray(w, dtype="<f4").tobytes()
+            table.append(
+                {"name": nm, "shape": list(shp), "offset_bytes": off, "nbytes": len(raw)}
+            )
+            f.write(raw)
+            off += len(raw)
+    return fname, table
+
+
+def build(outdir: str, only: str | None = None, quiet: bool = False) -> dict:
+    os.makedirs(outdir, exist_ok=True)
+    t0 = time.time()
+    manifest: dict = {
+        "version": 1,
+        "generator": "compile.aot",
+        "input_scheme": "hash01",
+        "models": [],
+        "supers": [],
+    }
+
+    for name, spec in M.MODELS.items():
+        if only and only not in (name, "models"):
+            continue
+        weights = M.init_weights(spec)
+        wfile, wtable = write_weights(outdir, spec, weights)
+        entry = {
+            "name": name,
+            "kind": spec.kind,
+            "d_in": spec.d_in,
+            "d_out": spec.d_out,
+            "params": M.param_count(spec),
+            "flops_per_query": spec.flops_per_query(),
+            "weights_file": wfile,
+            "weights": wtable,
+            "artifacts": [],
+        }
+        for b in M.BATCH_VARIANTS[name]:
+            fname = f"{name}_b{b}.hlo.txt"
+            hlo = lower_model(spec, b, weights)
+            with open(os.path.join(outdir, fname), "w") as f:
+                f.write(hlo)
+            entry["artifacts"].append(
+                {"batch": b, "file": fname, "golden": model_golden(spec, b, weights)}
+            )
+            if not quiet:
+                print(f"  [aot] {fname}  ({len(hlo)} chars)", flush=True)
+        manifest["models"].append(entry)
+
+    for cls, cfg in SUPER_CLASSES.items():
+        if only and only not in (cls, "supers"):
+            continue
+        for p in cfg["problems"]:
+            fname = f"super_{cls}_p{p}.hlo.txt"
+            hlo = lower_super(cfg["m"], cfg["k"], cfg["n"], p)
+            with open(os.path.join(outdir, fname), "w") as f:
+                f.write(hlo)
+            manifest["supers"].append(
+                {
+                    "class": cls,
+                    "m": cfg["m"],
+                    "k": cfg["k"],
+                    "n": cfg["n"],
+                    "problems": p,
+                    "file": fname,
+                    "golden": super_golden(cfg["m"], cfg["k"], cfg["n"], p),
+                }
+            )
+            if not quiet:
+                print(f"  [aot] {fname}  ({len(hlo)} chars)", flush=True)
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if not quiet:
+        n_art = sum(len(m["artifacts"]) for m in manifest["models"]) + len(
+            manifest["supers"]
+        )
+        print(f"[aot] wrote {n_art} artifacts + manifest in {time.time()-t0:.1f}s")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="model name / super class filter")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    build(args.outdir, only=args.only, quiet=args.quiet)
+
+
+if __name__ == "__main__":
+    main()

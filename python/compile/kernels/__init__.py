@@ -1,0 +1,14 @@
+"""Pallas kernels (L1) and their pure-jnp oracles.
+
+Build-time only: these lower into the model HLO via `compile.aot`; nothing
+here is imported by the rust request path.
+"""
+
+from .coalesced_matmul import (  # noqa: F401
+    CONFIGS,
+    BlockConfig,
+    coalesced_matmul,
+    mxu_utilization_estimate,
+    resolve_tiles,
+)
+from .fused_linear import ACTIVATIONS, fused_linear  # noqa: F401

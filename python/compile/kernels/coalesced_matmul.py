@@ -1,0 +1,161 @@
+"""L1 Pallas superkernel: coalesced (VLIW-packed) batched GEMM.
+
+This is the compute hot-spot of the paper: `cublasSgemmBatched`-style
+co-execution of P *independent* GEMM problems, one per coalesced stream of
+execution, rethought for TPU/Pallas:
+
+  * CUDA threadblock packing across SMs  ->  grid dimension 0 is the
+    *problem index*: one grid program per (problem, m-tile, n-tile), which is
+    exactly how cublasSgemmBatched assigns thread blocks per batch entry.
+  * shared-memory tiling                 ->  VMEM BlockSpec tiling: each grid
+    step pulls a (tm x tk) A-slab and a (tk x tn) B-slab into VMEM.
+  * tensor-core WMMA                     ->  MXU systolic matmul; tiles are
+    chosen as multiples of 128 where shapes allow (the paper's "minimal
+    padding within a cluster" argument at MXU granularity).
+
+VMEM budget per grid step (f32): 4*(tm*tk + tk*tn + tm*tn) bytes. The
+default "greedy" config (tm=tn=128, tk=512) uses 4*(64K+64K+16K) = 576 KiB,
+far under the ~16 MiB VMEM ceiling, leaving headroom for double-buffering.
+The "collaborative" config (Table 1) deliberately shrinks tiles to leave
+room for co-resident kernels; see `CONFIGS` below.
+
+Pallas is ALWAYS invoked with interpret=True here: the CPU PJRT plugin used
+by the rust runtime cannot execute Mosaic custom-calls, so the kernel is
+lowered to plain HLO through the interpreter path. Real-TPU performance is
+estimated analytically in DESIGN.md / EXPERIMENTS.md (see "SS-Perf").
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+@dataclass(frozen=True)
+class BlockConfig:
+    """A blocking (auto-tuning) configuration for the superkernel.
+
+    Mirrors `compiler::autotune::LaunchConfig` on the rust side: the AOT
+    autotuner picks one of these per shape-class, and the JIT applies it
+    when forming superkernels.
+    """
+
+    tm: int  # rows of the A/output tile resident in VMEM
+    tn: int  # cols of the B/output tile resident in VMEM
+    tk: int  # contraction slab; K is looped in steps of tk
+
+    def vmem_bytes(self, dtype_bytes: int = 4) -> int:
+        """Per-step VMEM residency: A-slab + B-slab + accumulator tile."""
+        return dtype_bytes * (
+            self.tm * self.tk + self.tk * self.tn + self.tm * self.tn
+        )
+
+
+#: Named configurations referenced by the autotuner (Table 1). "greedy"
+#: maximizes isolated MXU utilization with the largest tiles; "collaborative"
+#: trades ~20% isolated throughput for smaller VMEM/SM residency so that
+#: co-scheduled kernels overlap (1.25x multiplexed throughput in the paper).
+CONFIGS: dict[str, BlockConfig] = {
+    "greedy": BlockConfig(tm=128, tn=128, tk=512),
+    "collaborative": BlockConfig(tm=64, tn=64, tk=256),
+    "tiny": BlockConfig(tm=8, tn=8, tk=32),  # exercises multi-step grids in tests
+}
+
+
+def _pick(dim: int, want: int) -> int:
+    """Largest tile <= `want` that divides `dim` (shapes here are padded by
+    the coalescer to powers of two, so this terminates quickly)."""
+    t = min(want, dim)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def resolve_tiles(m: int, n: int, k: int, config: BlockConfig) -> BlockConfig:
+    """Clamp a config to tiles that evenly divide the (padded) problem."""
+    return BlockConfig(
+        tm=_pick(m, config.tm), tn=_pick(n, config.tn), tk=_pick(k, config.tk)
+    )
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, *, nk: int):
+    """Grid body: accumulate one (tm x tk) @ (tk x tn) product into the
+    output tile.
+
+    Grid is (P, M/tm, N/tn, K/tk); the K axis is innermost, so the output
+    block for a given (p, i, j) stays resident across K steps and serves as
+    the accumulator (f32), exactly the revisiting-output pattern Mosaic
+    double-buffers on real TPUs.
+    """
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[0, ...] += jnp.dot(
+        a_ref[0], b_ref[0], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def coalesced_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    config: BlockConfig | str = "greedy",
+) -> jax.Array:
+    """Execute P independent GEMMs as one superkernel.
+
+    Args:
+      a: [P, M, K] — P left operands, one per coalesced problem.
+      b: [P, K, N] — P right operands.
+      config: blocking configuration (name from CONFIGS or a BlockConfig).
+
+    Returns:
+      [P, M, N] f32 — the P products, computed in a single pallas_call whose
+      grid packs all problems (the VLIW "long instruction word").
+    """
+    if isinstance(config, str):
+        config = CONFIGS[config]
+    if a.ndim != 3 or b.ndim != 3:
+        raise ValueError(f"expected [P,M,K] and [P,K,N], got {a.shape} and {b.shape}")
+    p, m, k = a.shape
+    pb, kb, n = b.shape
+    if pb != p or kb != k:
+        raise ValueError(f"operand mismatch: a={a.shape} b={b.shape}")
+    cfg = resolve_tiles(m, n, k, config)
+    nk = k // cfg.tk
+    grid = (p, m // cfg.tm, n // cfg.tn, nk)
+
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, cfg.tm, cfg.tk), lambda pi, i, j, ki: (pi, i, ki)),
+            pl.BlockSpec((1, cfg.tk, cfg.tn), lambda pi, i, j, ki: (pi, ki, j)),
+        ],
+        out_specs=pl.BlockSpec((1, cfg.tm, cfg.tn), lambda pi, i, j, ki: (pi, i, j)),
+        out_shape=jax.ShapeDtypeStruct((p, m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def mxu_utilization_estimate(config: BlockConfig) -> float:
+    """Analytic MXU utilization estimate for a tile config (TPU target).
+
+    The MXU consumes 128x128 operand tiles; a (tm x tn) output tile built
+    from tk-deep slabs achieves util = coverage(tm) * coverage(tn) *
+    coverage(tk), where coverage(t) = t / (128 * ceil(t/128)). This is the
+    number DESIGN.md SS-Perf reports — interpret-mode wallclock is NOT a TPU
+    proxy, so structure is optimized instead of CPU timing.
+    """
+
+    def cov(t: int) -> float:
+        return t / (128.0 * math.ceil(t / 128.0))
+
+    return cov(config.tm) * cov(config.tn) * cov(config.tk)

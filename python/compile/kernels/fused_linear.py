@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: fused linear layer  y = act(x @ W + b).
+
+The per-layer building block of the L2 models. Fusing the bias add and
+activation into the GEMM epilogue removes two HBM round-trips per layer —
+the standard inference-serving fusion (cuBLASLt epilogue / TensorRT fused
+ops in the paper's world; on TPU the VPU applies the epilogue while the
+output tile is still resident in VMEM).
+
+Grid is (M/tm, N/tn, K/tk) with the K axis innermost; the output tile is
+the accumulator (revisited across K steps), and the epilogue fires on the
+last K step only. interpret=True throughout — see coalesced_matmul.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .coalesced_matmul import CONFIGS, BlockConfig, resolve_tiles
+
+#: Supported epilogue activations, by name (manifest-stable identifiers).
+ACTIVATIONS = ("none", "relu", "gelu")
+
+
+def _apply_act(x: jax.Array, act: str) -> jax.Array:
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "gelu":
+        return jax.nn.gelu(x)
+    return x
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, act: str):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+    @pl.when(ki == nk - 1)
+    def _epilogue():
+        o_ref[...] = _apply_act(o_ref[...] + b_ref[...], act)
+
+
+def fused_linear(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    act: str = "relu",
+    config: BlockConfig | str = "greedy",
+) -> jax.Array:
+    """y = act(x @ w + b) as a single Pallas kernel.
+
+    Args:
+      x: [M, K] activations (M = padded batch).
+      w: [K, N] weights.
+      b: [N] bias.
+      act: epilogue activation, one of ACTIVATIONS.
+      config: blocking configuration (see coalesced_matmul.CONFIGS).
+
+    Returns: [M, N] f32.
+    """
+    if isinstance(config, str):
+        config = CONFIGS[config]
+    if act not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {act!r}; expected one of {ACTIVATIONS}")
+    m, k = x.shape
+    kw, n = w.shape
+    if kw != k or b.shape != (n,):
+        raise ValueError(f"shape mismatch: x={x.shape} w={w.shape} b={b.shape}")
+    cfg = resolve_tiles(m, n, k, config)
+    nk = k // cfg.tk
+    grid = (m // cfg.tm, n // cfg.tn, nk)
+
+    return pl.pallas_call(
+        functools.partial(_linear_kernel, nk=nk, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((cfg.tm, cfg.tk), lambda i, j, ki: (i, ki)),
+            pl.BlockSpec((cfg.tk, cfg.tn), lambda i, j, ki: (ki, j)),
+            pl.BlockSpec((cfg.tn,), lambda i, j, ki: (j,)),
+        ],
+        out_specs=pl.BlockSpec((cfg.tm, cfg.tn), lambda i, j, ki: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every Pallas kernel in this package has a reference implementation here
+written with nothing but jax.numpy; pytest asserts allclose between the two
+across shape/dtype/config sweeps (see python/tests/). The rust runtime's
+numerics are in turn validated against golden vectors computed through
+these references at AOT time (manifest `golden` entries).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def coalesced_matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """[P,M,K] x [P,K,N] -> [P,M,N], f32 accumulation."""
+    return jnp.einsum(
+        "pmk,pkn->pmn", a.astype(jnp.float32), b.astype(jnp.float32)
+    ).astype(jnp.float32)
+
+
+def fused_linear_ref(
+    x: jax.Array, w: jax.Array, b: jax.Array, *, act: str = "relu"
+) -> jax.Array:
+    """act(x @ w + b), f32."""
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(jnp.float32)
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act == "gelu":
+        y = jax.nn.gelu(y)
+    elif act != "none":
+        raise ValueError(f"unknown activation {act!r}")
+    return y
+
+
+def mlp_ref(x: jax.Array, weights: list[tuple[jax.Array, jax.Array]]) -> jax.Array:
+    """Reference MLP forward: relu on hidden layers, identity on the head."""
+    h = x
+    for li, (w, b) in enumerate(weights):
+        act = "none" if li == len(weights) - 1 else "relu"
+        h = fused_linear_ref(h, w, b, act=act)
+    return h
+
+
+def gemmnet_ref(
+    x: jax.Array,
+    blocks: list[tuple[jax.Array, jax.Array]],
+    head: tuple[jax.Array, jax.Array],
+) -> jax.Array:
+    """Reference residual-GEMM network: h = h + relu(h @ W + b) per block."""
+    h = x.astype(jnp.float32)
+    for w, b in blocks:
+        h = h + fused_linear_ref(h, w, b, act="relu")
+    hw, hb = head
+    return fused_linear_ref(h, hw, hb, act="none")

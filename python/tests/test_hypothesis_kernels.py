@@ -1,0 +1,101 @@
+"""Property-based sweeps (hypothesis) over the Pallas kernels.
+
+Randomized shapes / dtypes / tile configs, always asserted against the
+pure-jnp oracle. Deadlines disabled: interpret-mode pallas is slow and
+single-core.
+"""
+
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.kernels import BlockConfig, coalesced_matmul, fused_linear, resolve_tiles
+from compile.kernels import ref as R
+
+SETTINGS = settings(
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+
+def _arr(shape, base):
+    return jnp.asarray(
+        M.hash01(np.arange(int(np.prod(shape))), base=base).reshape(shape)
+    )
+
+
+dims = st.sampled_from([1, 2, 4, 8, 16, 24, 32, 48, 64, 96, 128])
+kdims = st.sampled_from([8, 16, 32, 64, 128, 256, 384])
+tiles = st.sampled_from([4, 8, 16, 32, 64, 128])
+
+
+@SETTINGS
+@given(
+    p=st.integers(1, 6),
+    m=dims,
+    k=kdims,
+    n=dims,
+    tm=tiles,
+    tn=tiles,
+    tk=tiles,
+    base=st.integers(0, 1 << 16),
+)
+def test_coalesced_matmul_matches_ref(p, m, k, n, tm, tn, tk, base):
+    a = _arr((p, m, k), base)
+    b = _arr((p, k, n), base + 7919)
+    cfg = BlockConfig(tm=tm, tn=tn, tk=tk)
+    out = coalesced_matmul(a, b, config=cfg)
+    np.testing.assert_allclose(out, R.coalesced_matmul_ref(a, b), rtol=2e-4, atol=2e-4)
+
+
+@SETTINGS
+@given(
+    m=dims,
+    k=kdims,
+    n=dims,
+    act=st.sampled_from(["none", "relu", "gelu"]),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+    base=st.integers(0, 1 << 16),
+)
+def test_fused_linear_matches_ref(m, k, n, act, dtype, base):
+    dt = jnp.bfloat16 if dtype == "bfloat16" else jnp.float32
+    x = _arr((m, k), base).astype(dt)
+    w = _arr((k, n), base + 13).astype(dt)
+    b = _arr((n,), base + 29).astype(dt)
+    out = fused_linear(x, w, b, act=act)
+    tol = 5e-2 if dtype == "bfloat16" else 1e-4
+    np.testing.assert_allclose(
+        out, R.fused_linear_ref(x, w, b, act=act), rtol=tol, atol=tol
+    )
+
+
+@SETTINGS
+@given(
+    m=st.integers(1, 300),
+    n=st.integers(1, 300),
+    k=st.integers(1, 600),
+    tm=st.integers(1, 256),
+    tn=st.integers(1, 256),
+    tk=st.integers(1, 1024),
+)
+def test_resolve_tiles_always_divides(m, n, k, tm, tn, tk):
+    cfg = resolve_tiles(m, n, k, BlockConfig(tm=tm, tn=tn, tk=tk))
+    assert m % cfg.tm == 0 and n % cfg.tn == 0 and k % cfg.tk == 0
+    assert 1 <= cfg.tm <= m and 1 <= cfg.tn <= n and 1 <= cfg.tk <= k
+
+
+@SETTINGS
+@given(p=st.integers(2, 6), m=dims, k=kdims, n=dims, base=st.integers(0, 1 << 16))
+def test_packing_independence_property(p, m, k, n, base):
+    """For random packs, each problem's slice equals its solo computation —
+    the invariant the VLIW coalescer relies on."""
+    a = _arr((p, m, k), base)
+    b = _arr((p, k, n), base + 101)
+    packed = coalesced_matmul(a, b)
+    i = base % p
+    solo = coalesced_matmul(a[i : i + 1], b[i : i + 1])
+    np.testing.assert_allclose(packed[i], solo[0], rtol=1e-6, atol=1e-6)

@@ -1,0 +1,162 @@
+"""Kernel-vs-reference correctness: the CORE numeric signal of the stack.
+
+Every pallas kernel is checked against its pure-jnp oracle across problem
+counts, shapes, tile configs and activations. Tolerances: f32 paths must
+match to ~1e-5 relative (same accumulation order up to tiling).
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.kernels import (
+    CONFIGS,
+    BlockConfig,
+    coalesced_matmul,
+    fused_linear,
+    mxu_utilization_estimate,
+    resolve_tiles,
+)
+from compile.kernels import ref as R
+
+
+def _mk(shape, base=0):
+    return jnp.asarray(M.hash01(np.arange(int(np.prod(shape))), base=base).reshape(shape))
+
+
+# ---------------------------------------------------------------------------
+# coalesced_matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("p", [1, 2, 3, 5, 8])
+def test_coalesced_matmul_problem_counts(p):
+    a, b = _mk((p, 16, 64)), _mk((p, 64, 32), base=9)
+    out = coalesced_matmul(a, b, config="tiny")
+    np.testing.assert_allclose(out, R.coalesced_matmul_ref(a, b), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("cfg", sorted(CONFIGS))
+def test_coalesced_matmul_configs_match(cfg):
+    a, b = _mk((2, 64, 256)), _mk((2, 256, 128), base=3)
+    out = coalesced_matmul(a, b, config=cfg)
+    np.testing.assert_allclose(out, R.coalesced_matmul_ref(a, b), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [(8, 32, 8), (32, 256, 256), (32, 512, 512), (64, 1024, 1024), (1, 256, 64), (128, 128, 128)],
+)
+def test_coalesced_matmul_class_shapes(m, k, n):
+    """Covers the manifest's superkernel classes A/B/C plus edge sizes."""
+    a, b = _mk((2, m, k)), _mk((2, k, n), base=1 << 20)
+    out = coalesced_matmul(a, b)
+    np.testing.assert_allclose(out, R.coalesced_matmul_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_coalesced_matmul_bf16_inputs_accumulate_f32():
+    a = _mk((2, 32, 128)).astype(jnp.bfloat16)
+    b = _mk((2, 128, 64), base=5).astype(jnp.bfloat16)
+    out = coalesced_matmul(a, b)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(
+        out, R.coalesced_matmul_ref(a, b), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_coalesced_matmul_problems_are_independent():
+    """VLIW packing invariant: packing must not change any problem's result —
+    computing problems together == computing each alone."""
+    a, b = _mk((4, 16, 64)), _mk((4, 64, 32), base=11)
+    packed = coalesced_matmul(a, b, config="tiny")
+    for i in range(4):
+        alone = coalesced_matmul(a[i : i + 1], b[i : i + 1], config="tiny")
+        np.testing.assert_allclose(packed[i], alone[0], rtol=1e-6, atol=1e-6)
+
+
+def test_coalesced_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        coalesced_matmul(_mk((2, 8, 16)), _mk((3, 16, 8)))
+    with pytest.raises(ValueError):
+        coalesced_matmul(_mk((2, 8, 16)), _mk((2, 32, 8)))
+    with pytest.raises(ValueError):
+        coalesced_matmul(_mk((8, 16)), _mk((16, 8)))
+
+
+# ---------------------------------------------------------------------------
+# fused_linear
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("act", ["none", "relu", "gelu"])
+def test_fused_linear_activations(act):
+    x, w, b = _mk((8, 128)), _mk((128, 64), base=2), _mk((64,), base=4)
+    out = fused_linear(x, w, b, act=act)
+    np.testing.assert_allclose(
+        out, R.fused_linear_ref(x, w, b, act=act), rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("batch", [1, 2, 3, 7, 16, 32])
+def test_fused_linear_ragged_batches(batch):
+    """Batches that don't divide the tile: resolve_tiles must degrade
+    gracefully (tm falls back to a divisor)."""
+    x, w, b = _mk((batch, 256)), _mk((256, 64), base=8), _mk((64,), base=1)
+    out = fused_linear(x, w, b, act="relu")
+    np.testing.assert_allclose(
+        out, R.fused_linear_ref(x, w, b, act="relu"), rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("cfg", sorted(CONFIGS))
+def test_fused_linear_config_invariant(cfg):
+    """Tiling must be value-invariant: all configs produce the same y."""
+    x, w, b = _mk((16, 512)), _mk((512, 256), base=6), _mk((256,), base=3)
+    out = fused_linear(x, w, b, act="relu", config=cfg)
+    np.testing.assert_allclose(
+        out, R.fused_linear_ref(x, w, b, act="relu"), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_fused_linear_rejects_bad_activation():
+    x, w, b = _mk((4, 32)), _mk((32, 16)), _mk((16,))
+    with pytest.raises(ValueError):
+        fused_linear(x, w, b, act="swish")
+
+
+def test_fused_linear_rejects_shape_mismatch():
+    with pytest.raises(ValueError):
+        fused_linear(_mk((4, 32)), _mk((64, 16)), _mk((16,)))
+
+
+# ---------------------------------------------------------------------------
+# blocking configs
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_tiles_divides():
+    for m, n, k in [(3, 7, 5), (32, 256, 512), (1, 1, 1), (48, 96, 192)]:
+        cfg = resolve_tiles(m, n, k, CONFIGS["greedy"])
+        assert m % cfg.tm == 0 and n % cfg.tn == 0 and k % cfg.tk == 0
+        assert cfg.tm <= 128 and cfg.tn <= 128 and cfg.tk <= 512
+
+
+def test_vmem_budget_under_ceiling():
+    """All named configs must fit well under a 16 MiB VMEM ceiling, with
+    2x headroom for double-buffering."""
+    for name, cfg in CONFIGS.items():
+        assert 2 * cfg.vmem_bytes() < 16 * 1024 * 1024, name
+
+
+def test_greedy_config_has_full_mxu_utilization():
+    assert mxu_utilization_estimate(CONFIGS["greedy"]) == pytest.approx(1.0)
+    # collaborative trades utilization for co-residency
+    assert mxu_utilization_estimate(CONFIGS["collaborative"]) < 1.0
+
+
+def test_config_vmem_ordering():
+    """The collaborative config must be strictly lighter than greedy — that
+    is its entire reason to exist (Table 1)."""
+    assert CONFIGS["collaborative"].vmem_bytes() < CONFIGS["greedy"].vmem_bytes()

@@ -1,0 +1,103 @@
+"""L2 model tests: forward-vs-reference, shapes, determinism, and the
+cross-language hash01 golden values the rust side pins too."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.kernels import ref as R
+
+# ---------------------------------------------------------------------------
+# hash01 / fnv1a: these exact literals are also asserted by
+# rust/src/runtime/golden.rs — they pin the cross-language contract.
+# ---------------------------------------------------------------------------
+
+HASH01_FIRST6 = [0.195082441, 0.706475973, -0.552727699, -0.869781792, -0.42700702, 0.493466735]
+HASH01_BASE1M_FIRST3 = [-0.365425706, -0.783480048, -0.861492336]
+
+
+def test_hash01_golden_values():
+    np.testing.assert_allclose(M.hash01(np.arange(6)), HASH01_FIRST6, rtol=1e-6)
+    np.testing.assert_allclose(
+        M.hash01(np.arange(3), base=1 << 20), HASH01_BASE1M_FIRST3, rtol=1e-6
+    )
+
+
+def test_hash01_range_and_spread():
+    v = M.hash01(np.arange(100_000))
+    assert v.min() >= -1.0 and v.max() < 1.0
+    assert abs(float(v.mean())) < 0.01  # roughly centered
+    assert 0.5 < float(v.std()) < 0.65  # roughly uniform (std ~ 1/sqrt(3))
+
+
+def test_fnv1a_golden():
+    assert M.fnv1a("mlp_small.w0") == 1396747245
+
+
+def test_gen_weight_deterministic_and_scaled():
+    w1 = M.gen_weight("mlp_small.w0", (256, 256), 256)
+    w2 = M.gen_weight("mlp_small.w0", (256, 256), 256)
+    np.testing.assert_array_equal(w1, w2)
+    assert w1.reshape(-1)[0] == pytest.approx(0.0784961134, rel=1e-6)
+    # different tensor name -> different stream
+    w3 = M.gen_weight("mlp_small.w1", (256, 256), 256)
+    assert not np.array_equal(w1, w3)
+
+
+# ---------------------------------------------------------------------------
+# model forwards
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(M.MODELS))
+@pytest.mark.parametrize("batch", [1, 4])
+def test_forward_matches_reference(name, batch):
+    spec = M.MODELS[name]
+    ws = [jnp.asarray(w) for w in M.init_weights(spec)]
+    x = jnp.asarray(M.gen_input((batch, spec.d_in)))
+    out = spec.forward(x, ws)
+    pairs = [(ws[i], ws[i + 1]) for i in range(0, len(ws), 2)]
+    if spec.kind == "mlp":
+        ref = R.mlp_ref(x, pairs)
+    else:
+        ref = R.gemmnet_ref(x, pairs[:-1], pairs[-1])
+    assert out.shape == (batch, spec.d_out)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("name", sorted(M.MODELS))
+def test_param_counts(name):
+    spec = M.MODELS[name]
+    ws = M.init_weights(spec)
+    assert sum(w.size for w in ws) == M.param_count(spec)
+    # spot-check one by hand
+    if name == "mlp_small":
+        assert M.param_count(spec) == 256 * 256 + 256 + 256 * 256 + 256 + 256 * 64 + 64
+
+
+@pytest.mark.parametrize("name", sorted(M.MODELS))
+def test_flops_positive_and_consistent(name):
+    spec = M.MODELS[name]
+    f = spec.flops_per_query()
+    # FLOPs ~ 2 * params for GEMM-only nets (biases negligible)
+    assert 1.8 * M.param_count(spec) < f <= 2.0 * M.param_count(spec) + 1
+
+def test_batch_variants_cover_all_models():
+    assert set(M.BATCH_VARIANTS) == set(M.MODELS)
+    for name, bs in M.BATCH_VARIANTS.items():
+        assert bs == tuple(sorted(bs)) and bs[0] == 1
+        # powers of two so the dynamic batcher's pad-up rule is cheap
+        assert all(b & (b - 1) == 0 for b in bs)
+
+
+def test_weight_tensor_order_is_stable():
+    """The flat parameter order is the rust runtime's ABI — pin it."""
+    spec = M.MODELS["gemmnet6"]
+    names = [nm for nm, _, _ in spec.weight_tensors()]
+    assert names[0] == "gemmnet6.blk0.w"
+    assert names[1] == "gemmnet6.blk0.b"
+    assert names[-2] == "gemmnet6.head.w"
+    assert names[-1] == "gemmnet6.head.b"
+    assert len(names) == 2 * 6 + 2

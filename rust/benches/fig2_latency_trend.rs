@@ -1,0 +1,70 @@
+//! Figure 2: DNN model complexity and batch-1 inference latency over model
+//! generations, CPU vs GPU, against the 300 ms interactive SLO.
+//!
+//! Paper claims reproduced (shape): latency grows across model
+//! generations; most modern models miss 300 ms on CPU (SENet-class takes
+//! seconds); every zoo model fits comfortably on a V100.
+
+use vliw_jit::bench::{f, ms, Table};
+use vliw_jit::gpu::cost::CostModel;
+use vliw_jit::gpu::device::DeviceSpec;
+use vliw_jit::model::zoo::zoo;
+
+fn batch1_latency_us(cm: &CostModel, layers: &[vliw_jit::gpu::kernel::KernelDesc]) -> f64 {
+    layers
+        .iter()
+        .map(|k| cm.profile_default(k).duration_us + cm.device.layer_overhead_us)
+        .sum()
+}
+
+fn main() {
+    let cpu = CostModel::new(DeviceSpec::cpu_xeon());
+    let gpu = CostModel::v100();
+    let slo_us = 300_000.0;
+
+    let mut t = Table::new(
+        "Figure 2 — batch-1 latency by model generation (CPU vs V100, 300 ms SLO)",
+        &["model", "year", "GFLOP", "kernels", "cpu_ms", "gpu_ms", "cpu_SLO", "gpu_SLO"],
+    );
+    let mut cpu_misses = 0;
+    let mut gpu_misses = 0;
+    let mut models = zoo();
+    models.sort_by_key(|m| (m.year, m.name));
+    let n_models = models.len();
+    for m in &models {
+        let layers = m.gemms(1);
+        let lc = batch1_latency_us(&cpu, &layers);
+        let lg = batch1_latency_us(&gpu, &layers);
+        if lc > slo_us {
+            cpu_misses += 1;
+        }
+        if lg > slo_us {
+            gpu_misses += 1;
+        }
+        t.row(vec![
+            m.name.to_string(),
+            m.year.to_string(),
+            f(m.flops() / 1e9, 1),
+            layers.len().to_string(),
+            ms(lc),
+            ms(lg),
+            if lc <= slo_us { "ok" } else { "MISS" }.into(),
+            if lg <= slo_us { "ok" } else { "MISS" }.into(),
+        ]);
+    }
+    t.emit();
+
+    println!(
+        "summary: {cpu_misses}/{n} models miss the 300 ms SLO on CPU; {gpu_misses}/{n} on V100",
+        n = n_models
+    );
+    println!("paper: \"Most models fail to meet the 300ms latency SLO on a CPU\"");
+    println!(
+        "reproduced: {}",
+        if cpu_misses * 2 >= n_models && gpu_misses == 0 {
+            "YES (CPU majority-miss, GPU all-hit)"
+        } else {
+            "PARTIAL — see EXPERIMENTS.md"
+        }
+    );
+}

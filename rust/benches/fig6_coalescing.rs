@@ -1,0 +1,79 @@
+//! Figure 6: coalesced kernels approach ideal FP throughput.
+//!
+//! Paper numbers: coalescing the ResNet-18 conv2_2 SGEMM across streams
+//! yields geomean 7.71x throughput over time-multiplexing and 3.23x over
+//! Hyper-Q spatial multiplexing; coalescing LSTM/RNN matrix-vector work
+//! yields 2.48x over time-slicing.
+//!
+//! We sweep stream counts, report sustained TFLOPS per discipline on the
+//! V100 model, and geomean the ratios exactly as the paper does.
+
+use vliw_jit::bench::{f, Table};
+use vliw_jit::gpu::cost::CostModel;
+use vliw_jit::gpu::kernel::KernelDesc;
+use vliw_jit::gpu::multiplex::kernel_throughput;
+use vliw_jit::gpu::timeline::SharingModel;
+use vliw_jit::util::stats::geomean;
+
+fn main() {
+    let cm = CostModel::v100();
+    // ResNet-18 conv2_2 after im2col: (56*56) x (64*9) x 64
+    let conv = KernelDesc::gemm(56 * 56, 64 * 9, 64);
+
+    let mut t = Table::new(
+        "Figure 6 — conv2_2 SGEMM sustained TFLOPS by multiplexing discipline (V100)",
+        &["streams", "time_mux", "spatial", "coalesced", "coal/time", "coal/spatial"],
+    );
+    let mut vs_time = Vec::new();
+    let mut vs_spatial = Vec::new();
+    for s in [2u32, 4, 6, 8, 9, 12, 16] {
+        let r = kernel_throughput(&cm, &conv, s, SharingModel::default());
+        vs_time.push(r.coalesced_tflops / r.time_mux_tflops);
+        vs_spatial.push(r.coalesced_tflops / r.spatial_tflops);
+        t.row(vec![
+            s.to_string(),
+            f(r.time_mux_tflops, 2),
+            f(r.spatial_tflops, 2),
+            f(r.coalesced_tflops, 2),
+            f(r.coalesced_tflops / r.time_mux_tflops, 2),
+            f(r.coalesced_tflops / r.spatial_tflops, 2),
+        ]);
+    }
+    t.emit();
+
+    let g_time = geomean(&vs_time);
+    let g_spatial = geomean(&vs_spatial);
+    println!("paper:    coalesced/time-mux geomean 7.71x   coalesced/spatial 3.23x");
+    println!("measured: coalesced/time-mux geomean {g_time:.2}x   coalesced/spatial {g_spatial:.2}x");
+    println!(
+        "shape reproduced: {}",
+        if (4.0..14.0).contains(&g_time) && (1.8..6.0).contains(&g_spatial) {
+            "YES (who-wins and factor magnitudes hold)"
+        } else {
+            "PARTIAL — see EXPERIMENTS.md"
+        }
+    );
+
+    // LSTM GEMV coalescing (paper cites 2.48x over time-slicing [26])
+    let gemv = KernelDesc::gemm(1, 1536, 4096); // LSTM-1024 cell gate GEMM, m=1
+    let mut t2 = Table::new(
+        "Figure 6b — LSTM matrix-vector coalescing (V100)",
+        &["streams", "time_mux_TFLOPS", "coalesced_TFLOPS", "speedup"],
+    );
+    let mut gemv_speedups = Vec::new();
+    for s in [4u32, 8, 16, 32] {
+        let r = kernel_throughput(&cm, &gemv, s, SharingModel::default());
+        gemv_speedups.push(r.coalesced_tflops / r.time_mux_tflops);
+        t2.row(vec![
+            s.to_string(),
+            f(r.time_mux_tflops, 3),
+            f(r.coalesced_tflops, 3),
+            f(r.coalesced_tflops / r.time_mux_tflops, 2),
+        ]);
+    }
+    t2.emit();
+    println!(
+        "paper: RNN/LSTM coalescing 2.48x over time-slicing; measured geomean {:.2}x",
+        geomean(&gemv_speedups)
+    );
+}

@@ -1,0 +1,65 @@
+//! Table 1: auto-tuning the blocking configuration — greedy (single-tenant
+//! optimal) vs collaborative (co-tenancy optimal) kernels.
+//!
+//! Paper numbers: greedy 2.2 TFLOPS isolated / 4.5 TFLOPS multiplexed;
+//! collaborative 1.5 / 6.1 — i.e. ~20% isolated degradation buys ~1.25-1.36x
+//! multiplexed throughput. Both configurations emerge from the same grid
+//! search with different objectives; nothing is hard-coded.
+
+use vliw_jit::bench::{f, Table};
+use vliw_jit::compiler::autotune::{autotune, residency_of};
+use vliw_jit::gpu::cost::CostModel;
+use vliw_jit::gpu::kernel::KernelDesc;
+use vliw_jit::gpu::timeline::SharingModel;
+
+fn main() {
+    let cm = CostModel::v100();
+    // Table 1 workload: conv2_2-class SGEMM co-resident with `tenants`
+    // copies of itself (the paper multiplexes replicas of the same model)
+    let k = KernelDesc::gemm(56 * 56, 64 * 9, 64);
+
+    for tenants in [4u32, 6, 9] {
+        let res = autotune(&cm, &k, tenants, &SharingModel::default());
+        let mut t = Table::new(
+            &format!("Table 1 — autotuned kernels, {tenants} co-tenants (V100)"),
+            &["config", "tiles_mnk", "residency", "isolated_TFLOPS", "multiplexed_TFLOPS"],
+        );
+        t.row(vec![
+            "greedy".into(),
+            format!(
+                "{}x{}x{}",
+                res.greedy.config.tm, res.greedy.config.tn, res.greedy.config.tk
+            ),
+            f(res.greedy.config.residency, 2),
+            f(res.greedy.isolated_tflops, 2),
+            f(res.greedy.multiplexed_tflops, 2),
+        ]);
+        t.row(vec![
+            "collaborative".into(),
+            format!(
+                "{}x{}x{}",
+                res.collaborative.config.tm,
+                res.collaborative.config.tn,
+                res.collaborative.config.tk
+            ),
+            f(res.collaborative.config.residency, 2),
+            f(res.collaborative.isolated_tflops, 2),
+            f(res.collaborative.multiplexed_tflops, 2),
+        ]);
+        t.emit();
+        println!(
+            "  multiplexed speedup {:.2}x (paper 1.25x)  |  isolated degradation {:.0}% (paper ~20%)\n",
+            res.multiplexed_speedup(),
+            res.isolated_degradation() * 100.0
+        );
+    }
+
+    // the residency model backing the search (documentation output)
+    println!("residency model: smem(double-buffered A/B slabs)/128KiB");
+    for (tm, tn, tk) in [(128u32, 128u32, 32u32), (64, 64, 32), (32, 32, 16)] {
+        println!(
+            "  tiles {tm}x{tn}x{tk} -> residency {:.2}",
+            residency_of(tm, tn, tk)
+        );
+    }
+}

@@ -1,0 +1,185 @@
+//! Micro-benchmark harness + result tables (offline replacement for
+//! criterion). Every paper figure/table bench links this: it provides
+//! timing, table rendering aligned with the paper's rows, and JSON dumps
+//! for post-processing.
+
+use std::time::Instant;
+
+use crate::util::json::{obj, Json};
+
+/// Result of timing one closure.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    /// Median iteration time, µs.
+    pub median_us: f64,
+    /// Mean iteration time, µs.
+    pub mean_us: f64,
+    /// Min iteration time, µs.
+    pub min_us: f64,
+    /// Iterations measured.
+    pub iters: usize,
+}
+
+/// Time `f` with warmup; returns robust statistics.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    Timing {
+        median_us: median,
+        mean_us: mean,
+        min_us: samples[0],
+        iters: samples.len(),
+    }
+}
+
+/// A results table that renders fixed-width text and JSON.
+#[derive(Debug, Clone)]
+pub struct Table {
+    /// Title (e.g. "Figure 4").
+    pub title: String,
+    /// Column headers.
+    pub columns: Vec<String>,
+    /// Rows of cells.
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table.
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match column count).
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    /// Render fixed-width text.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut s = format!("== {} ==\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        s.push_str(&fmt_row(&self.columns, &widths));
+        s.push('\n');
+        s.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&fmt_row(row, &widths));
+            s.push('\n');
+        }
+        s
+    }
+
+    /// JSON form (for EXPERIMENTS.md tooling).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("title", Json::Str(self.title.clone())),
+            (
+                "columns",
+                Json::Arr(self.columns.iter().map(|c| Json::Str(c.clone())).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Print text and append the JSON line to `bench_results.jsonl` when
+    /// `VLIW_BENCH_JSON=1`.
+    pub fn emit(&self) {
+        println!("{}", self.render());
+        if std::env::var("VLIW_BENCH_JSON").as_deref() == Ok("1") {
+            use std::io::Write;
+            if let Ok(mut f) = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open("bench_results.jsonl")
+            {
+                let _ = writeln!(f, "{}", self.to_json().to_string_compact());
+            }
+        }
+    }
+}
+
+/// Format a float with fixed decimals (table cells).
+pub fn f(v: f64, decimals: usize) -> String {
+    format!("{v:.decimals$}")
+}
+
+/// Format µs as ms.
+pub fn ms(us: f64) -> String {
+    format!("{:.2}", us / 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_measures() {
+        let t = time_it(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(t.iters, 5);
+        assert!(t.min_us <= t.median_us);
+        assert!(t.median_us < 1e5);
+    }
+
+    #[test]
+    fn table_render_and_json() {
+        let mut t = Table::new("Fig X", &["a", "bee"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["333".into(), "4".into()]);
+        let r = t.render();
+        assert!(r.contains("Fig X") && r.contains("bee"));
+        let j = t.to_json();
+        assert_eq!(j.req_str("title").unwrap(), "Fig X");
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn row_arity_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(f(3.14159, 2), "3.14");
+        assert_eq!(ms(1500.0), "1.50");
+    }
+}

@@ -1,0 +1,211 @@
+//! Ahead-of-time autotuning (§5.3, Table 1).
+//!
+//! Searches the blocking-configuration space for two objectives:
+//!
+//! * **greedy** — maximize *isolated* throughput (what every vendor library
+//!   ships: the kernel assumes it owns the GPU);
+//! * **collaborative** — maximize *multiplexed* throughput with `tenants`
+//!   co-resident copies: a smaller per-launch SM footprint (fewer, beefier
+//!   blocks and/or lower shared-memory residency) so concurrent kernels
+//!   stop thrashing shared state and leave SMs for each other.
+//!
+//! The paper's Table 1 result — collaborative kernels lose ~20% alone but
+//! win 1.25–1.36× when multiplexed — emerges from the search, it is not
+//! hard-coded. The chosen configs feed the Pallas `CONFIGS` table (L1) and
+//! the JIT's runtime packing decisions.
+
+use crate::gpu::cost::CostModel;
+use crate::gpu::kernel::{KernelDesc, LaunchConfig};
+use crate::gpu::timeline::{SharingModel, SharingSim, SimKernel};
+
+/// Search space of tile sizes.
+pub const TILE_CHOICES: [u32; 4] = [32, 64, 128, 256];
+/// Search space of contraction slabs.
+pub const TK_CHOICES: [u32; 3] = [16, 32, 64];
+
+/// Residency a (tm, tn, tk) config demands from an SM: double-buffered
+/// A/B slabs in shared memory against a 128 KiB budget (V100-like).
+pub fn residency_of(tm: u32, tn: u32, tk: u32) -> f64 {
+    let smem = 2 * 4 * (tm * tk + tk * tn); // double-buffered f32 slabs
+    (smem as f64 / (128.0 * 1024.0)).clamp(0.05, 0.95)
+}
+
+/// One tuned configuration with its measured objectives.
+#[derive(Debug, Clone, Copy)]
+pub struct TunedConfig {
+    /// The configuration.
+    pub config: LaunchConfig,
+    /// Isolated throughput, TFLOPS.
+    pub isolated_tflops: f64,
+    /// Multiplexed aggregate throughput with `tenants` copies, TFLOPS.
+    pub multiplexed_tflops: f64,
+}
+
+/// Table-1 style autotuning outcome.
+#[derive(Debug, Clone, Copy)]
+pub struct AutotuneResult {
+    /// Best config by isolated throughput.
+    pub greedy: TunedConfig,
+    /// Best config by multiplexed throughput.
+    pub collaborative: TunedConfig,
+    /// Co-tenancy level used for the multiplexed objective.
+    pub tenants: u32,
+}
+
+impl AutotuneResult {
+    /// Multiplexed speedup of collaborative over greedy (paper: 1.25×).
+    pub fn multiplexed_speedup(&self) -> f64 {
+        self.collaborative.multiplexed_tflops / self.greedy.multiplexed_tflops
+    }
+
+    /// Isolated slowdown of collaborative vs greedy (paper: ~20%).
+    pub fn isolated_degradation(&self) -> f64 {
+        1.0 - self.collaborative.isolated_tflops / self.greedy.isolated_tflops
+    }
+}
+
+/// Measure one config under both objectives.
+pub fn measure(
+    cm: &CostModel,
+    k: &KernelDesc,
+    cfg: &LaunchConfig,
+    tenants: u32,
+    sharing: &SharingModel,
+) -> TunedConfig {
+    let prof = cm.profile(k, cfg);
+    let isolated_tflops = k.flops() / prof.duration_us / 1e6;
+    // multiplexed: `tenants` copies dispatched concurrently, same config
+    let kernels: Vec<SimKernel> = (0..tenants)
+        .map(|s| SimKernel {
+            id: s as u64,
+            stream: s,
+            profile: prof,
+            arrival_us: 0.0,
+        })
+        .collect();
+    let res = SharingSim::new(sharing.clone()).run(&kernels);
+    let multiplexed_tflops = k.flops() * tenants as f64 / res.makespan_us / 1e6;
+    TunedConfig {
+        config: *cfg,
+        isolated_tflops,
+        multiplexed_tflops,
+    }
+}
+
+/// Full grid search producing the Table 1 pair.
+pub fn autotune(
+    cm: &CostModel,
+    k: &KernelDesc,
+    tenants: u32,
+    sharing: &SharingModel,
+) -> AutotuneResult {
+    let mut best_iso: Option<TunedConfig> = None;
+    let mut best_mux: Option<TunedConfig> = None;
+    for &tm in &TILE_CHOICES {
+        for &tn in &TILE_CHOICES {
+            for &tk in &TK_CHOICES {
+                let cfg = LaunchConfig {
+                    tm,
+                    tn,
+                    tk,
+                    residency: residency_of(tm, tn, tk),
+                };
+                let t = measure(cm, k, &cfg, tenants, sharing);
+                if best_iso.map_or(true, |b| t.isolated_tflops > b.isolated_tflops) {
+                    best_iso = Some(t);
+                }
+                if best_mux.map_or(true, |b| t.multiplexed_tflops > b.multiplexed_tflops) {
+                    best_mux = Some(t);
+                }
+            }
+        }
+    }
+    AutotuneResult {
+        greedy: best_iso.expect("non-empty grid"),
+        collaborative: best_mux.expect("non-empty grid"),
+        tenants,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv_kernel() -> KernelDesc {
+        // the Table 1 workload: a conv2_2-class SGEMM
+        KernelDesc::gemm(3136, 576, 64)
+    }
+
+    #[test]
+    fn residency_monotone_in_tiles() {
+        assert!(residency_of(128, 128, 32) > residency_of(64, 64, 32));
+        assert!(residency_of(64, 64, 64) > residency_of(64, 64, 32));
+        let r = residency_of(256, 256, 64);
+        assert!(r <= 0.95);
+    }
+
+    #[test]
+    fn table1_shape_emerges() {
+        let cm = CostModel::v100();
+        let res = autotune(&cm, &conv_kernel(), 6, &SharingModel::default());
+        // collaborative must win multiplexed…
+        assert!(
+            res.multiplexed_speedup() >= 1.0,
+            "mux speedup {}",
+            res.multiplexed_speedup()
+        );
+        // …and the greedy config must be at least as good alone
+        assert!(res.isolated_degradation() >= -1e-9);
+        // the paper's magnitudes: 1.1–1.8x mux win, ≤50% isolated loss
+        assert!(
+            res.multiplexed_speedup() < 2.5,
+            "mux speedup {} out of plausible range",
+            res.multiplexed_speedup()
+        );
+        assert!(res.isolated_degradation() < 0.5);
+    }
+
+    #[test]
+    fn collaborative_config_has_smaller_sm_footprint() {
+        // the collaborative kernel must leave room for co-tenants: fewer
+        // blocks in flight (SM footprint) and/or lower smem residency
+        let cm = CostModel::v100();
+        let k = conv_kernel();
+        let res = autotune(&cm, &k, 6, &SharingModel::default());
+        let g = &res.greedy.config;
+        let c = &res.collaborative.config;
+        let footprint = |cfg: &LaunchConfig| cfg.blocks(&k) as f64 * cfg.residency;
+        assert!(
+            c.blocks(&k) <= g.blocks(&k) || footprint(c) <= footprint(g),
+            "collab {c:?} ({} blocks) vs greedy {g:?} ({} blocks)",
+            c.blocks(&k),
+            g.blocks(&k)
+        );
+    }
+
+    #[test]
+    fn measure_is_deterministic() {
+        let cm = CostModel::v100();
+        let cfg = LaunchConfig::greedy();
+        let a = measure(&cm, &conv_kernel(), &cfg, 4, &SharingModel::default());
+        let b = measure(&cm, &conv_kernel(), &cfg, 4, &SharingModel::default());
+        assert_eq!(a.isolated_tflops, b.isolated_tflops);
+        assert_eq!(a.multiplexed_tflops, b.multiplexed_tflops);
+    }
+
+    #[test]
+    fn collaborative_wins_at_every_tenancy_level() {
+        // the discrete grid makes the speedup non-monotone in tenant count,
+        // but collaborative must never lose the multiplexed objective
+        let cm = CostModel::v100();
+        let k = conv_kernel();
+        for tenants in [2u32, 4, 6, 8] {
+            let r = autotune(&cm, &k, tenants, &SharingModel::default());
+            assert!(
+                r.multiplexed_speedup() >= 1.0,
+                "tenants={tenants}: speedup {}",
+                r.multiplexed_speedup()
+            );
+        }
+    }
+}

@@ -1,0 +1,283 @@
+//! GEMM shape clustering (Fig. 7): "matrix multiply kernels from multiple
+//! frequently used DNNs can be clustered by their dimensions. Within each
+//! cluster, problems can be coalesced with minimal padding overhead."
+//!
+//! k-means in log-shape space (log2 m, log2 k, log2 n) over every GEMM in
+//! the model zoo. The cluster centroids become the superkernel shape
+//! classes the AOT pipeline compiles artifacts for.
+
+use crate::gpu::kernel::KernelDesc;
+use crate::util::rng::Rng;
+
+/// A clustered set of GEMM shapes.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    /// Centroid in log2 space (m, k, n).
+    pub centroid: [f64; 3],
+    /// Member kernels.
+    pub members: Vec<KernelDesc>,
+    /// Mean padding overhead if every member coalesces to the cluster's
+    /// bounding power-of-two class.
+    pub mean_padding: f64,
+    /// The power-of-two shape class covering the members.
+    pub class: (u32, u32, u32),
+}
+
+impl Cluster {
+    /// Members count.
+    pub fn size(&self) -> usize {
+        self.members.len()
+    }
+}
+
+fn feat(k: &KernelDesc) -> [f64; 3] {
+    [
+        (k.m.max(1) as f64).log2(),
+        (k.k.max(1) as f64).log2(),
+        (k.n.max(1) as f64).log2(),
+    ]
+}
+
+fn dist2(a: &[f64; 3], b: &[f64; 3]) -> f64 {
+    (0..3).map(|i| (a[i] - b[i]) * (a[i] - b[i])).sum()
+}
+
+/// k-means over GEMM shapes. Deterministic (seeded k-means++ init), runs to
+/// convergence or `max_iters`.
+pub fn kmeans(kernels: &[KernelDesc], k: usize, seed: u64, max_iters: usize) -> Vec<Cluster> {
+    assert!(k >= 1 && !kernels.is_empty());
+    let k = k.min(kernels.len());
+    let feats: Vec<[f64; 3]> = kernels.iter().map(feat).collect();
+    let mut rng = Rng::new(seed);
+
+    // k-means++ init
+    let mut centroids: Vec<[f64; 3]> = Vec::with_capacity(k);
+    centroids.push(feats[rng.below(feats.len() as u64) as usize]);
+    while centroids.len() < k {
+        let d2: Vec<f64> = feats
+            .iter()
+            .map(|f| {
+                centroids
+                    .iter()
+                    .map(|c| dist2(f, c))
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect();
+        let total: f64 = d2.iter().sum();
+        if total <= 1e-12 {
+            // all points identical to existing centroids
+            centroids.push(feats[rng.below(feats.len() as u64) as usize]);
+            continue;
+        }
+        let mut u = rng.f64() * total;
+        let mut pick = 0;
+        for (i, d) in d2.iter().enumerate() {
+            u -= d;
+            if u <= 0.0 {
+                pick = i;
+                break;
+            }
+        }
+        centroids.push(feats[pick]);
+    }
+
+    let mut assign = vec![0usize; feats.len()];
+    for _ in 0..max_iters {
+        // assign
+        let mut changed = false;
+        for (i, f) in feats.iter().enumerate() {
+            let best = (0..k)
+                .min_by(|&a, &b| {
+                    dist2(f, &centroids[a])
+                        .partial_cmp(&dist2(f, &centroids[b]))
+                        .unwrap()
+                })
+                .unwrap();
+            if assign[i] != best {
+                assign[i] = best;
+                changed = true;
+            }
+        }
+        // update
+        for c in 0..k {
+            let mine: Vec<&[f64; 3]> = feats
+                .iter()
+                .zip(&assign)
+                .filter(|(_, &a)| a == c)
+                .map(|(f, _)| f)
+                .collect();
+            if mine.is_empty() {
+                continue;
+            }
+            for d in 0..3 {
+                centroids[c][d] =
+                    mine.iter().map(|f| f[d]).sum::<f64>() / mine.len() as f64;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // materialize clusters
+    (0..k)
+        .filter_map(|c| {
+            let members: Vec<KernelDesc> = kernels
+                .iter()
+                .zip(&assign)
+                .filter(|(_, &a)| a == c)
+                .map(|(kd, _)| *kd)
+                .collect();
+            if members.is_empty() {
+                return None;
+            }
+            // representative pow2 class: centroid rounded up (what an AOT
+            // artifact for this cluster would be compiled as)
+            let class = (
+                (centroids[c][0].exp2().ceil() as u32).next_power_of_two(),
+                (centroids[c][1].exp2().ceil() as u32).next_power_of_two(),
+                (centroids[c][2].exp2().ceil() as u32).next_power_of_two(),
+            );
+            // padding the *coalescer* actually pays: each member quantizes
+            // to its own pow2 class (see compiler::coalescer::ShapeClass)
+            let pad = |kd: &KernelDesc| {
+                let q = |d: u32| d.max(1).next_power_of_two() as f64;
+                1.0 - (kd.m as f64 * kd.k as f64 * kd.n as f64)
+                    / (q(kd.m) * q(kd.k) * q(kd.n))
+            };
+            let mean_padding =
+                members.iter().map(pad).sum::<f64>() / members.len() as f64;
+            Some(Cluster {
+                centroid: centroids[c],
+                members,
+                mean_padding,
+                class,
+            })
+        })
+        .collect()
+}
+
+/// Exact coalescing-class histogram: how many zoo kernels quantize to each
+/// power-of-two [`crate::compiler::coalescer::ShapeClass`]. The size of a
+/// class = the number of kernels that can ride the same superkernel
+/// artifact — the direct measure of Fig. 7's "coalescing opportunity".
+pub fn class_histogram(kernels: &[KernelDesc]) -> Vec<((u32, u32, u32), usize)> {
+    use std::collections::BTreeMap;
+    let mut h: BTreeMap<(u32, u32, u32), usize> = BTreeMap::new();
+    for kd in kernels {
+        let q = |d: u32| d.max(1).next_power_of_two();
+        *h.entry((q(kd.m), q(kd.k), q(kd.n))).or_default() += 1;
+    }
+    let mut v: Vec<((u32, u32, u32), usize)> = h.into_iter().collect();
+    v.sort_by(|a, b| b.1.cmp(&a.1));
+    v
+}
+
+/// Within-cluster sum of squares (elbow metric / quality check).
+pub fn wcss(clusters: &[Cluster]) -> f64 {
+    clusters
+        .iter()
+        .map(|c| {
+            c.members
+                .iter()
+                .map(|m| dist2(&feat(m), &c.centroid))
+                .sum::<f64>()
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::zoo;
+
+    fn zoo_gemms() -> Vec<KernelDesc> {
+        zoo().iter().flat_map(|m| m.gemms(1)).collect()
+    }
+
+    #[test]
+    fn clusters_cover_all_kernels() {
+        let ks = zoo_gemms();
+        let cs = kmeans(&ks, 6, 42, 50);
+        let total: usize = cs.iter().map(|c| c.size()).sum();
+        assert_eq!(total, ks.len());
+        assert!(cs.len() <= 6 && !cs.is_empty());
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let ks = zoo_gemms();
+        let a = kmeans(&ks, 5, 7, 50);
+        let b = kmeans(&ks, 5, 7, 50);
+        let sa: Vec<usize> = a.iter().map(|c| c.size()).collect();
+        let sb: Vec<usize> = b.iter().map(|c| c.size()).collect();
+        assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn zoo_shapes_concentrate_fig7() {
+        // Fig. 7's claim: a handful of clusters captures most kernels with
+        // small within-cluster spread
+        let ks = zoo_gemms();
+        let c6 = kmeans(&ks, 6, 42, 100);
+        let c1 = kmeans(&ks, 1, 42, 100);
+        assert!(
+            wcss(&c6) < 0.35 * wcss(&c1),
+            "6 clusters must explain >65% of shape variance: {} vs {}",
+            wcss(&c6),
+            wcss(&c1)
+        );
+        // top-3 clusters hold the majority of kernels
+        let mut sizes: Vec<usize> = c6.iter().map(|c| c.size()).collect();
+        sizes.sort_unstable_by(|a, b| b.cmp(a));
+        let top3: usize = sizes.iter().take(3).sum();
+        assert!(top3 * 2 > ks.len(), "top3={top3} of {}", ks.len());
+    }
+
+    #[test]
+    fn more_clusters_reduce_wcss() {
+        let ks = zoo_gemms();
+        let w2 = wcss(&kmeans(&ks, 2, 1, 100));
+        let w8 = wcss(&kmeans(&ks, 8, 1, 100));
+        assert!(w8 < w2);
+    }
+
+    #[test]
+    fn padding_overhead_is_bounded() {
+        let ks = zoo_gemms();
+        for c in kmeans(&ks, 8, 42, 100) {
+            assert!(
+                (0.0..1.0).contains(&c.mean_padding),
+                "padding {}",
+                c.mean_padding
+            );
+        }
+    }
+
+    #[test]
+    fn class_histogram_concentrates() {
+        // Fig. 7: a few classes dominate => big coalescing opportunity
+        let ks = zoo_gemms();
+        let h = class_histogram(&ks);
+        assert!(!h.is_empty());
+        let total: usize = h.iter().map(|(_, n)| n).sum();
+        assert_eq!(total, ks.len());
+        let top10: usize = h.iter().take(10).map(|(_, n)| n).sum();
+        assert!(
+            top10 * 2 > total,
+            "top-10 classes must cover >50%: {top10}/{total}"
+        );
+        // histogram is sorted descending
+        assert!(h.windows(2).all(|w| w[0].1 >= w[1].1));
+    }
+
+    #[test]
+    fn single_point_cluster() {
+        let ks = vec![KernelDesc::gemm(64, 64, 64)];
+        let cs = kmeans(&ks, 3, 0, 10);
+        assert_eq!(cs.iter().map(|c| c.size()).sum::<usize>(), 1);
+        let c = cs.iter().find(|c| c.size() == 1).unwrap();
+        assert_eq!(c.class, (64, 64, 64));
+        assert!(c.mean_padding.abs() < 1e-12);
+    }
+}

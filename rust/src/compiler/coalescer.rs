@@ -1,0 +1,262 @@
+//! The VLIW packer (§5.3): coalesce shape-compatible kernels from
+//! independent streams into superkernels.
+//!
+//! Two ops coalesce when they quantize to the same [`ShapeClass`] — all
+//! dimensions padded up to the class shape — and the padding overhead
+//! (wasted FLOPs) stays under a configurable bound. The packed result is a
+//! batched GEMM (`problems = Σ`), executed by the `cublasSgemmBatched`
+//! analogue: the Pallas coalesced superkernel (real path) or a batched
+//! [`KernelDesc`] (simulator path).
+
+use std::collections::BTreeMap;
+
+use crate::compiler::ir::{OpId, TensorOp};
+use crate::gpu::kernel::KernelDesc;
+
+/// A quantized GEMM shape class: the grid the coalescer pads into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ShapeClass {
+    /// Padded rows.
+    pub m: u32,
+    /// Padded contraction depth.
+    pub k: u32,
+    /// Padded columns.
+    pub n: u32,
+}
+
+impl ShapeClass {
+    /// Quantize a kernel to its class: each dim rounds up to the next power
+    /// of two (GEMV-class ops keep m = 1 and coalesce along the problem
+    /// dimension — the paper's RNN/LSTM case). Power-of-two quantization keeps the artifact set
+    /// small (one AOT executable per class × capacity) at a bounded padding
+    /// cost — at most 2× per dim, typically ≪ that within a Fig. 7 cluster.
+    pub fn of(k: &KernelDesc) -> ShapeClass {
+        fn q(d: u32) -> u32 {
+            d.max(1).next_power_of_two()
+        }
+        ShapeClass {
+            m: q(k.m),
+            k: q(k.k),
+            n: q(k.n),
+        }
+    }
+
+    /// The padded per-problem kernel shape of this class.
+    pub fn kernel(&self, problems: u32) -> KernelDesc {
+        KernelDesc::batched(problems, self.m, self.k, self.n)
+    }
+
+    /// Fraction of FLOPs wasted when `k` is padded into this class
+    /// (0 = perfect fit).
+    pub fn padding_overhead(&self, k: &KernelDesc) -> f64 {
+        let real = k.m as f64 * k.k as f64 * k.n as f64;
+        let padded = self.m as f64 * self.k as f64 * self.n as f64;
+        debug_assert!(padded >= real, "class must contain the kernel");
+        1.0 - real / padded
+    }
+}
+
+/// A packed superkernel: ops from distinct streams sharing one launch.
+#[derive(Debug, Clone)]
+pub struct SuperKernel {
+    /// Shape class of the pack.
+    pub class: ShapeClass,
+    /// Member op ids, in pack order (problem index = position).
+    pub ops: Vec<OpId>,
+    /// Aggregate FLOPs actually requested (pre-padding).
+    pub useful_flops: f64,
+    /// The batched kernel to execute.
+    pub kernel: KernelDesc,
+}
+
+impl SuperKernel {
+    /// Number of coalesced problems.
+    pub fn problems(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Padding efficiency: useful FLOPs / launched FLOPs.
+    pub fn pack_efficiency(&self) -> f64 {
+        self.useful_flops / self.kernel.flops()
+    }
+}
+
+/// Packing configuration.
+#[derive(Debug, Clone)]
+pub struct Coalescer {
+    /// Max problems per superkernel (AOT artifact capacity ceiling).
+    pub max_problems: usize,
+    /// Reject pads wasting more than this FLOP fraction per op.
+    pub max_padding: f64,
+}
+
+impl Default for Coalescer {
+    fn default() -> Self {
+        Coalescer {
+            max_problems: 8,
+            max_padding: 0.75,
+        }
+    }
+}
+
+impl Coalescer {
+    /// New coalescer.
+    pub fn new(max_problems: usize, max_padding: f64) -> Self {
+        Coalescer {
+            max_problems,
+            max_padding,
+        }
+    }
+
+    /// Group ready ops into superkernels.
+    ///
+    /// Greedy class-bucket packing: quantize every op, group by class,
+    /// split groups into chunks of `max_problems`. Ops whose padding
+    /// overhead exceeds `max_padding` go into singleton packs at their own
+    /// (tighter) quantization. Input order is preserved inside a class so
+    /// the scheduler's priority order (EDF) survives packing.
+    pub fn pack(&self, ops: &[&TensorOp]) -> Vec<SuperKernel> {
+        let mut buckets: BTreeMap<ShapeClass, Vec<&TensorOp>> = BTreeMap::new();
+        for op in ops {
+            let class = ShapeClass::of(&op.kernel);
+            if class.padding_overhead(&op.kernel) <= self.max_padding {
+                buckets.entry(class).or_default().push(op);
+            } else {
+                // out-of-band shape: exact singleton class
+                let exact = ShapeClass {
+                    m: op.kernel.m,
+                    k: op.kernel.k,
+                    n: op.kernel.n,
+                };
+                buckets.entry(exact).or_default().push(op);
+            }
+        }
+        let mut packs = Vec::new();
+        for (class, members) in buckets {
+            for chunk in members.chunks(self.max_problems.max(1)) {
+                let useful: f64 = chunk.iter().map(|o| o.kernel.flops()).sum();
+                packs.push(SuperKernel {
+                    class,
+                    ops: chunk.iter().map(|o| o.id).collect(),
+                    useful_flops: useful,
+                    kernel: class.kernel(chunk.len() as u32),
+                });
+            }
+        }
+        packs
+    }
+
+    /// Would these two kernels coalesce?
+    pub fn compatible(&self, a: &KernelDesc, b: &KernelDesc) -> bool {
+        let ca = ShapeClass::of(a);
+        ca == ShapeClass::of(b)
+            && ca.padding_overhead(a) <= self.max_padding
+            && ca.padding_overhead(b) <= self.max_padding
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::ir::StreamId;
+
+    fn op(id: u64, stream: u32, m: u32, k: u32, n: u32) -> TensorOp {
+        TensorOp {
+            id: OpId(id),
+            stream: StreamId(stream),
+            seq: 0,
+            kernel: KernelDesc::gemm(m, k, n),
+            arrival_us: 0.0,
+            deadline_us: 1e9,
+            tag: 0,
+        }
+    }
+
+    #[test]
+    fn quantization_rounds_up_pow2() {
+        let c = ShapeClass::of(&KernelDesc::gemm(100, 576, 64));
+        assert_eq!((c.m, c.k, c.n), (128, 1024, 64));
+        // already pow2: unchanged
+        let c2 = ShapeClass::of(&KernelDesc::gemm(128, 512, 64));
+        assert_eq!((c2.m, c2.k, c2.n), (128, 512, 64));
+        // GEMV-class ops keep m = 1 (they coalesce along the problem
+        // dimension instead of padding rows)
+        let c3 = ShapeClass::of(&KernelDesc::gemm(1, 3, 5));
+        assert_eq!((c3.m, c3.k, c3.n), (1, 4, 8));
+    }
+
+    #[test]
+    fn padding_overhead_bounds() {
+        let k = KernelDesc::gemm(65, 512, 65);
+        let c = ShapeClass::of(&k);
+        let o = c.padding_overhead(&k);
+        assert!(o > 0.0 && o < 0.75, "overhead={o}");
+        let exact = KernelDesc::gemm(128, 512, 64);
+        assert_eq!(ShapeClass::of(&exact).padding_overhead(&exact), 0.0);
+    }
+
+    #[test]
+    fn same_class_ops_pack_together() {
+        let a = op(0, 0, 120, 500, 60);
+        let b = op(1, 1, 128, 512, 64);
+        let c = op(2, 2, 100, 480, 50);
+        let packs = Coalescer::default().pack(&[&a, &b, &c]);
+        assert_eq!(packs.len(), 1);
+        assert_eq!(packs[0].problems(), 3);
+        assert_eq!(packs[0].kernel.problems, 3);
+        assert!(packs[0].pack_efficiency() > 0.5);
+    }
+
+    #[test]
+    fn different_classes_do_not_pack() {
+        let a = op(0, 0, 128, 512, 64);
+        let b = op(1, 1, 1024, 1024, 1024);
+        let packs = Coalescer::default().pack(&[&a, &b]);
+        assert_eq!(packs.len(), 2);
+        assert!(packs.iter().all(|p| p.problems() == 1));
+    }
+
+    #[test]
+    fn max_problems_splits_chunks() {
+        let ops: Vec<TensorOp> = (0..10).map(|i| op(i, i as u32, 128, 512, 64)).collect();
+        let refs: Vec<&TensorOp> = ops.iter().collect();
+        let packs = Coalescer::new(4, 0.75).pack(&refs);
+        let sizes: Vec<usize> = packs.iter().map(|p| p.problems()).collect();
+        assert_eq!(sizes, vec![4, 4, 2]);
+    }
+
+    #[test]
+    fn pack_order_preserves_input_priority() {
+        // scheduler passes EDF order; the earliest-deadline op must be in
+        // the first pack
+        let a = op(7, 0, 128, 512, 64);
+        let b = op(3, 1, 128, 512, 64);
+        let packs = Coalescer::new(1, 0.75).pack(&[&a, &b]);
+        assert_eq!(packs[0].ops, vec![OpId(7)]);
+        assert_eq!(packs[1].ops, vec![OpId(3)]);
+    }
+
+    #[test]
+    fn compatibility_check() {
+        let c = Coalescer::default();
+        assert!(c.compatible(
+            &KernelDesc::gemm(120, 500, 60),
+            &KernelDesc::gemm(128, 512, 64)
+        ));
+        assert!(!c.compatible(
+            &KernelDesc::gemm(128, 512, 64),
+            &KernelDesc::gemm(2048, 512, 64)
+        ));
+    }
+
+    #[test]
+    fn useful_flops_accounted() {
+        let a = op(0, 0, 100, 500, 60);
+        let b = op(1, 1, 128, 512, 64);
+        let packs = Coalescer::default().pack(&[&a, &b]);
+        let p = &packs[0];
+        let expect = a.kernel.flops() + b.kernel.flops();
+        assert!((p.useful_flops - expect).abs() < 1.0);
+        assert!(p.kernel.flops() >= p.useful_flops);
+    }
+}

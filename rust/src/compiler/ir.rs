@@ -1,0 +1,113 @@
+//! Declarative dispatch IR (§5.1).
+//!
+//! The programmer "specifies the operators, the inputs, and latency
+//! constraints" — never thread/block geometry. A [`TensorOp`] is the unit
+//! the JIT schedules: one algebraic tensor operation from one stream of
+//! execution, carrying its deadline. The JIT, not the programmer, decides
+//! the launch configuration, the packing and the issue time (*late
+//! binding*, *context aware*).
+
+use crate::gpu::kernel::KernelDesc;
+
+/// Identifier of a stream of execution (a tenant's command stream).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct StreamId(pub u32);
+
+/// Identifier of a scheduled op, unique within a JIT instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct OpId(pub u64);
+
+/// One declaratively-dispatched tensor op.
+#[derive(Debug, Clone)]
+pub struct TensorOp {
+    /// Unique id (assigned by the window on submit).
+    pub id: OpId,
+    /// Issuing stream.
+    pub stream: StreamId,
+    /// Position in the stream's program order; op `seq` is only ready once
+    /// op `seq−1` of the same stream completed (data dependence within a
+    /// stream — streams are mutually independent, §1).
+    pub seq: u64,
+    /// The tensor operation, already lowered to its GEMM form.
+    pub kernel: KernelDesc,
+    /// Submission time, µs.
+    pub arrival_us: f64,
+    /// Absolute deadline, µs (arrival + the stream's SLO share).
+    pub deadline_us: f64,
+    /// Opaque request handle for completion fan-out (serving layer).
+    pub tag: u64,
+}
+
+impl TensorOp {
+    /// Slack remaining at `now` given an estimated execution time.
+    pub fn slack_us(&self, now: f64, est_exec_us: f64) -> f64 {
+        self.deadline_us - now - est_exec_us
+    }
+
+    /// True if issuing at `now` with estimate `est` would already be late.
+    pub fn is_critical(&self, now: f64, est_exec_us: f64) -> bool {
+        self.slack_us(now, est_exec_us) <= 0.0
+    }
+}
+
+/// Builder for submitting ops (the public declarative API).
+#[derive(Debug, Clone)]
+pub struct DispatchRequest {
+    /// Issuing stream.
+    pub stream: StreamId,
+    /// The operation.
+    pub kernel: KernelDesc,
+    /// Relative SLO budget for this op, µs.
+    pub slo_us: f64,
+    /// Opaque completion tag.
+    pub tag: u64,
+}
+
+impl DispatchRequest {
+    /// Declarative dispatch: operator + input shapes + latency constraint.
+    pub fn new(stream: StreamId, kernel: KernelDesc, slo_us: f64) -> Self {
+        Self {
+            stream,
+            kernel,
+            slo_us,
+            tag: 0,
+        }
+    }
+
+    /// Attach a completion tag.
+    pub fn with_tag(mut self, tag: u64) -> Self {
+        self.tag = tag;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::kernel::KernelDesc;
+
+    #[test]
+    fn slack_and_criticality() {
+        let op = TensorOp {
+            id: OpId(1),
+            stream: StreamId(0),
+            seq: 0,
+            kernel: KernelDesc::gemm(32, 256, 256),
+            arrival_us: 0.0,
+            deadline_us: 1_000.0,
+            tag: 0,
+        };
+        assert_eq!(op.slack_us(200.0, 300.0), 500.0);
+        assert!(!op.is_critical(200.0, 300.0));
+        assert!(op.is_critical(900.0, 300.0));
+    }
+
+    #[test]
+    fn dispatch_request_builder() {
+        let r = DispatchRequest::new(StreamId(3), KernelDesc::gemm(1, 2, 3), 5_000.0)
+            .with_tag(77);
+        assert_eq!(r.stream, StreamId(3));
+        assert_eq!(r.tag, 77);
+        assert_eq!(r.slo_us, 5_000.0);
+    }
+}

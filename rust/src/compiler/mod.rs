@@ -1,0 +1,40 @@
+//! The OoO VLIW JIT compiler — the paper's contribution (§5).
+//!
+//! Pipeline, mirroring Fig. 1:
+//!
+//! ```text
+//!   streams of execution (declarative dispatch, §5.1)
+//!        │ submit(TensorOp { kernel, stream, deadline })
+//!        ▼
+//!   [window]     OoO issue window: pending ops, per-stream program order,
+//!                deadline bookkeeping
+//!        ▼
+//!   [scheduler]  SLO-aware reordering (§5.2): EDF base order, slack-driven
+//!                *staggering* of ill-fitting kernels, coalescing window,
+//!                straggler eviction
+//!        ▼
+//!   [coalescer]  VLIW packing (§5.3): shape classes, padding-overhead
+//!                model, superkernel formation
+//!        ▼
+//!   [jit]        issue loop: launches superkernels on an executor
+//!                (PJRT CPU or the V100 simulator)
+//! ```
+//!
+//! Ahead-of-time components: [`autotune`] (greedy vs collaborative blocking
+//! configs, Table 1) and [`cluster`] (GEMM shape clustering, Fig. 7) feed
+//! the runtime decisions, exactly as §5.3 prescribes ("our dynamic approach
+//! uses both ahead-of-time tuning and runtime packing").
+
+pub mod autotune;
+pub mod cluster;
+pub mod coalescer;
+pub mod ir;
+pub mod jit;
+pub mod scheduler;
+pub mod window;
+
+pub use coalescer::{Coalescer, ShapeClass, SuperKernel};
+pub use ir::{OpId, StreamId, TensorOp};
+pub use jit::{JitCompiler, JitConfig, JitStats};
+pub use scheduler::{Decision, Policy, Scheduler};
+pub use window::Window;

@@ -1,0 +1,258 @@
+//! SLO-aware OoO scheduling (§5.2): EDF base order, slack-driven
+//! staggering, coalescing window, straggler eviction.
+//!
+//! The core tension the paper identifies: launching a ready kernel *now*
+//! wastes the chance to coalesce with kernels arriving moments later, but
+//! waiting burns SLO slack. The scheduler resolves it with a bounded
+//! *coalescing window*: a pack is held while (a) every member still has
+//! slack beyond the safety margin, and (b) the oldest member has waited
+//! less than the window — "purposefully delays/staggers ill-fitting kernels
+//! for better coalescing at a (slightly) later time" (§5).
+
+use crate::compiler::coalescer::{Coalescer, SuperKernel};
+use crate::compiler::window::Window;
+use crate::gpu::kernel::KernelDesc;
+
+/// Scheduling policy knobs.
+#[derive(Debug, Clone)]
+pub struct Policy {
+    /// Max artificial delay for coalescing, µs.
+    pub coalesce_window_us: f64,
+    /// Launch immediately once a pack reaches this many problems.
+    pub target_pack: usize,
+    /// Slack reserve: launch when `deadline − now − est` falls below this.
+    pub safety_margin_us: f64,
+    /// Evict an in-flight op when its runtime exceeds `eviction_factor ×`
+    /// its estimate (§5.2 "simply evict degraded workers").
+    pub eviction_factor: f64,
+}
+
+impl Default for Policy {
+    fn default() -> Self {
+        Policy {
+            coalesce_window_us: 2_000.0,
+            target_pack: 4,
+            safety_margin_us: 500.0,
+            eviction_factor: 3.0,
+        }
+    }
+}
+
+/// A scheduling decision for the current instant.
+#[derive(Debug, Clone)]
+pub enum Decision {
+    /// Launch this superkernel now.
+    Launch(SuperKernel),
+    /// Nothing should launch before this time (stagger for coalescing).
+    Wait {
+        /// Re-evaluate at this time, µs.
+        until_us: f64,
+    },
+    /// Window empty.
+    Idle,
+}
+
+/// The OoO scheduler.
+#[derive(Debug, Clone, Default)]
+pub struct Scheduler {
+    /// Policy knobs.
+    pub policy: Policy,
+    /// Packing rules.
+    pub coalescer: Coalescer,
+}
+
+impl Scheduler {
+    /// New scheduler.
+    pub fn new(policy: Policy, coalescer: Coalescer) -> Self {
+        Scheduler { policy, coalescer }
+    }
+
+    /// Decide what to do at time `now`. `est_exec` estimates a batched
+    /// kernel's execution time (µs) — supplied by the executor's cost model
+    /// so the scheduler stays backend-agnostic.
+    pub fn decide<F>(&self, window: &Window, now: f64, est_exec: F) -> Decision
+    where
+        F: Fn(&KernelDesc) -> f64,
+    {
+        let mut ready = window.ready();
+        if ready.is_empty() {
+            return Decision::Idle;
+        }
+        // EDF base order (the OoO reordering step); ties broken by op id so
+        // scheduling is fully deterministic (the window hands us ops in
+        // hash-map order)
+        ready.sort_by(|a, b| {
+            a.deadline_us
+                .partial_cmp(&b.deadline_us)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        let packs = self.coalescer.pack(&ready);
+        // priority pack = the one containing the globally earliest deadline
+        let urgent_id = ready[0].id;
+        let pack = packs
+            .into_iter()
+            .find(|p| p.ops.contains(&urgent_id))
+            .expect("urgent op must be in some pack");
+
+        // full pack: no reason to wait
+        if pack.problems() >= self.policy.target_pack
+            || pack.problems() >= self.coalescer.max_problems
+        {
+            return Decision::Launch(pack);
+        }
+
+        let est = est_exec(&pack.kernel);
+        // latest safe launch time for the pack (tightest member)
+        let critical_us = pack
+            .ops
+            .iter()
+            .map(|id| window.get(*id).expect("pack member in window").deadline_us)
+            .fold(f64::INFINITY, f64::min)
+            - est
+            - self.policy.safety_margin_us;
+        // stagger budget: oldest member may wait at most coalesce_window
+        let oldest_arrival = pack
+            .ops
+            .iter()
+            .map(|id| window.get(*id).expect("member").arrival_us)
+            .fold(f64::INFINITY, f64::min);
+        let window_closes = oldest_arrival + self.policy.coalesce_window_us;
+
+        let hold_until = critical_us.min(window_closes);
+        if now >= hold_until {
+            Decision::Launch(pack)
+        } else {
+            Decision::Wait {
+                until_us: hold_until,
+            }
+        }
+    }
+
+    /// Straggler test (§5.2): should an op issued at `issued_us` with
+    /// estimate `est_us` be evicted at `now`?
+    pub fn should_evict(&self, issued_us: f64, est_us: f64, now: f64) -> bool {
+        now - issued_us > self.policy.eviction_factor * est_us + 50.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::ir::{DispatchRequest, StreamId};
+    use crate::gpu::cost::CostModel;
+
+    fn est(cm: &CostModel) -> impl Fn(&KernelDesc) -> f64 + '_ {
+        move |k| cm.profile_default(k).duration_us
+    }
+
+    fn sched() -> Scheduler {
+        Scheduler::new(Policy::default(), Coalescer::default())
+    }
+
+    fn submit(w: &mut Window, stream: u32, slo_us: f64, now: f64) {
+        w.submit(
+            DispatchRequest::new(
+                StreamId(stream),
+                KernelDesc::gemm(128, 512, 64),
+                slo_us,
+            ),
+            now,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn idle_on_empty_window() {
+        let w = Window::new(8);
+        let cm = CostModel::v100();
+        assert!(matches!(sched().decide(&w, 0.0, est(&cm)), Decision::Idle));
+    }
+
+    #[test]
+    fn small_pack_with_slack_staggers() {
+        let mut w = Window::new(8);
+        submit(&mut w, 0, 50_000.0, 0.0); // huge slack
+        let cm = CostModel::v100();
+        match sched().decide(&w, 0.0, est(&cm)) {
+            Decision::Wait { until_us } => {
+                assert!(until_us > 0.0 && until_us <= 2_000.0, "until={until_us}");
+            }
+            other => panic!("expected Wait, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn critical_deadline_launches_immediately() {
+        let mut w = Window::new(8);
+        submit(&mut w, 0, 600.0, 0.0); // slack ≈ safety margin
+        let cm = CostModel::v100();
+        match sched().decide(&w, 0.0, est(&cm)) {
+            Decision::Launch(p) => assert_eq!(p.problems(), 1),
+            other => panic!("expected Launch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn full_pack_launches_without_waiting() {
+        let mut w = Window::new(16);
+        for s in 0..4 {
+            submit(&mut w, s, 50_000.0, 0.0);
+        }
+        let cm = CostModel::v100();
+        match sched().decide(&w, 0.0, est(&cm)) {
+            Decision::Launch(p) => assert_eq!(p.problems(), 4),
+            other => panic!("expected Launch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn wait_expires_at_window_close() {
+        let mut w = Window::new(8);
+        submit(&mut w, 0, 100_000.0, 0.0);
+        let cm = CostModel::v100();
+        let s = sched();
+        // before window close: wait
+        let until = match s.decide(&w, 100.0, est(&cm)) {
+            Decision::Wait { until_us } => until_us,
+            other => panic!("expected Wait, got {other:?}"),
+        };
+        // at/after the wait point: launch
+        match s.decide(&w, until, est(&cm)) {
+            Decision::Launch(p) => assert_eq!(p.problems(), 1),
+            other => panic!("expected Launch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn edf_orders_pack_priority() {
+        let mut w = Window::new(8);
+        // stream 0: relaxed; stream 1: tight and incompatible shape
+        w.submit(
+            DispatchRequest::new(StreamId(0), KernelDesc::gemm(128, 512, 64), 90_000.0),
+            0.0,
+        )
+        .unwrap();
+        w.submit(
+            DispatchRequest::new(StreamId(1), KernelDesc::gemm(2048, 2048, 2048), 900.0),
+            0.0,
+        )
+        .unwrap();
+        let cm = CostModel::v100();
+        // the urgent (big) op's pack must be chosen, not the relaxed one's
+        match sched().decide(&w, 0.0, est(&cm)) {
+            Decision::Launch(p) => {
+                assert_eq!(p.kernel.m, 2048);
+            }
+            Decision::Wait { .. } => panic!("urgent op must launch"),
+            Decision::Idle => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn eviction_threshold() {
+        let s = sched();
+        assert!(!s.should_evict(0.0, 100.0, 200.0)); // 2x: fine
+        assert!(s.should_evict(0.0, 100.0, 400.0)); // 4x: evict
+    }
+}

@@ -1,0 +1,288 @@
+//! The OoO issue window.
+//!
+//! Holds pending [`TensorOp`]s from all streams, tracks per-stream program
+//! order (an op is *ready* once its predecessor in the same stream has
+//! completed) and deadline bookkeeping. This is the VLIW analogy's
+//! instruction window: the scheduler picks ready ops out of order, the
+//! coalescer packs them into long words.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+use crate::compiler::ir::{DispatchRequest, OpId, StreamId, TensorOp};
+
+/// Issue-window state for one op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpState {
+    /// Waiting on an earlier op of the same stream.
+    Blocked,
+    /// Eligible for issue.
+    Ready,
+    /// Issued to the executor, not yet complete.
+    InFlight,
+}
+
+/// The out-of-order issue window.
+#[derive(Debug, Default)]
+pub struct Window {
+    ops: HashMap<OpId, (TensorOp, OpState)>,
+    /// per-stream queue of pending op ids in program order
+    streams: BTreeMap<StreamId, VecDeque<OpId>>,
+    /// per-stream next sequence number
+    next_seq: HashMap<StreamId, u64>,
+    /// per-stream in-flight count (head-of-line dependency tracking)
+    inflight: HashMap<StreamId, usize>,
+    next_id: u64,
+    capacity: usize,
+}
+
+impl Window {
+    /// Window with a capacity bound (admission control backstop).
+    pub fn new(capacity: usize) -> Self {
+        Window {
+            capacity,
+            ..Default::default()
+        }
+    }
+
+    /// Number of pending + in-flight ops.
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// True if no ops are pending or in flight.
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// True if at capacity (submit would fail).
+    pub fn is_full(&self) -> bool {
+        self.ops.len() >= self.capacity
+    }
+
+    /// Submit a dispatch request at time `now`. Returns the assigned op id,
+    /// or `None` when the window is full (caller applies backpressure).
+    pub fn submit(&mut self, req: DispatchRequest, now: f64) -> Option<OpId> {
+        if self.is_full() {
+            return None;
+        }
+        let id = OpId(self.next_id);
+        self.next_id += 1;
+        let seq_ref = self.next_seq.entry(req.stream).or_insert(0);
+        let seq = *seq_ref;
+        *seq_ref += 1;
+        let op = TensorOp {
+            id,
+            stream: req.stream,
+            seq,
+            kernel: req.kernel,
+            arrival_us: now,
+            deadline_us: now + req.slo_us,
+            tag: req.tag,
+        };
+        let q = self.streams.entry(req.stream).or_default();
+        // ready iff nothing earlier from this stream is pending or in flight
+        let state = if q.is_empty() && self.inflight.get(&req.stream).copied().unwrap_or(0) == 0
+        {
+            OpState::Ready
+        } else {
+            OpState::Blocked
+        };
+        q.push_back(id);
+        self.ops.insert(id, (op, state));
+        Some(id)
+    }
+
+    /// All currently ready ops (unordered; scheduler imposes policy order).
+    pub fn ready(&self) -> Vec<&TensorOp> {
+        self.ops
+            .values()
+            .filter(|(_, s)| *s == OpState::Ready)
+            .map(|(op, _)| op)
+            .collect()
+    }
+
+    /// Number of ready ops.
+    pub fn ready_count(&self) -> usize {
+        self.ops
+            .values()
+            .filter(|(_, s)| *s == OpState::Ready)
+            .count()
+    }
+
+    /// Look up an op.
+    pub fn get(&self, id: OpId) -> Option<&TensorOp> {
+        self.ops.get(&id).map(|(op, _)| op)
+    }
+
+    /// State of an op.
+    pub fn state(&self, id: OpId) -> Option<OpState> {
+        self.ops.get(&id).map(|(_, s)| *s)
+    }
+
+    /// Mark ops as issued (Ready → InFlight). Panics if any op is not ready
+    /// — the scheduler must never issue blocked ops.
+    pub fn issue(&mut self, ids: &[OpId]) {
+        for id in ids {
+            let (op, state) = self.ops.get_mut(id).expect("issue of unknown op");
+            assert_eq!(
+                *state,
+                OpState::Ready,
+                "scheduler issued non-ready op {id:?}"
+            );
+            *state = OpState::InFlight;
+            *self.inflight.entry(op.stream).or_insert(0) += 1;
+            // pop from the stream queue head (must be the head by program
+            // order; ready implies it is)
+            let q = self.streams.get_mut(&op.stream).expect("stream queue");
+            let head = q.pop_front().expect("queue non-empty");
+            assert_eq!(head, *id, "program order violated on issue");
+        }
+    }
+
+    /// Complete an in-flight op, unblocking its stream successor. Returns
+    /// the completed op.
+    pub fn complete(&mut self, id: OpId) -> TensorOp {
+        let (op, state) = self.ops.remove(&id).expect("complete of unknown op");
+        assert_eq!(state, OpState::InFlight, "complete of non-inflight op");
+        let cnt = self.inflight.get_mut(&op.stream).expect("inflight count");
+        *cnt -= 1;
+        if *cnt == 0 {
+            // head of this stream's queue (if any) becomes ready
+            if let Some(q) = self.streams.get(&op.stream) {
+                if let Some(&head) = q.front() {
+                    if let Some((_, s)) = self.ops.get_mut(&head) {
+                        *s = OpState::Ready;
+                    }
+                }
+            }
+        }
+        op
+    }
+
+    /// Re-queue an evicted in-flight op (straggler eviction, §5.2): it goes
+    /// back to the *front* of its stream as Ready with its original
+    /// deadline, so the scheduler re-prioritizes it immediately.
+    pub fn requeue(&mut self, id: OpId) {
+        let (op, state) = self.ops.get_mut(&id).expect("requeue of unknown op");
+        assert_eq!(*state, OpState::InFlight, "requeue of non-inflight op");
+        *state = OpState::Ready;
+        let cnt = self.inflight.get_mut(&op.stream).expect("inflight count");
+        *cnt -= 1;
+        let q = self.streams.entry(op.stream).or_default();
+        q.push_front(id);
+        // if something else of this stream is in flight, it must block
+        if self.inflight.get(&op.stream).copied().unwrap_or(0) > 0 {
+            let (_, s) = self.ops.get_mut(&id).unwrap();
+            *s = OpState::Blocked;
+        }
+    }
+
+    /// Earliest deadline among ready ops (scheduler's EDF pivot).
+    pub fn earliest_deadline(&self) -> Option<f64> {
+        self.ops
+            .values()
+            .filter(|(_, s)| *s == OpState::Ready)
+            .map(|(op, _)| op.deadline_us)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::kernel::KernelDesc;
+
+    fn req(stream: u32) -> DispatchRequest {
+        DispatchRequest::new(StreamId(stream), KernelDesc::gemm(32, 256, 64), 10_000.0)
+    }
+
+    #[test]
+    fn submit_assigns_program_order() {
+        let mut w = Window::new(16);
+        let a = w.submit(req(0), 0.0).unwrap();
+        let b = w.submit(req(0), 1.0).unwrap();
+        assert_eq!(w.get(a).unwrap().seq, 0);
+        assert_eq!(w.get(b).unwrap().seq, 1);
+        assert_eq!(w.state(a), Some(OpState::Ready));
+        assert_eq!(w.state(b), Some(OpState::Blocked));
+    }
+
+    #[test]
+    fn streams_are_independent() {
+        let mut w = Window::new(16);
+        let _a = w.submit(req(0), 0.0).unwrap();
+        let b = w.submit(req(1), 0.0).unwrap();
+        // different stream: immediately ready despite stream 0's pending op
+        assert_eq!(w.state(b), Some(OpState::Ready));
+        assert_eq!(w.ready_count(), 2);
+    }
+
+    #[test]
+    fn complete_unblocks_successor() {
+        let mut w = Window::new(16);
+        let a = w.submit(req(0), 0.0).unwrap();
+        let b = w.submit(req(0), 0.0).unwrap();
+        w.issue(&[a]);
+        assert_eq!(w.state(b), Some(OpState::Blocked));
+        w.complete(a);
+        assert_eq!(w.state(b), Some(OpState::Ready));
+        w.issue(&[b]);
+        w.complete(b);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-ready")]
+    fn issuing_blocked_op_panics() {
+        let mut w = Window::new(16);
+        let _a = w.submit(req(0), 0.0).unwrap();
+        let b = w.submit(req(0), 0.0).unwrap();
+        w.issue(&[b]);
+    }
+
+    #[test]
+    fn capacity_backpressure() {
+        let mut w = Window::new(2);
+        assert!(w.submit(req(0), 0.0).is_some());
+        assert!(w.submit(req(1), 0.0).is_some());
+        assert!(w.submit(req(2), 0.0).is_none());
+        assert!(w.is_full());
+    }
+
+    #[test]
+    fn requeue_restores_readiness_and_order() {
+        let mut w = Window::new(16);
+        let a = w.submit(req(0), 0.0).unwrap();
+        let b = w.submit(req(0), 0.0).unwrap();
+        w.issue(&[a]);
+        w.requeue(a); // evicted straggler
+        assert_eq!(w.state(a), Some(OpState::Ready));
+        assert_eq!(w.state(b), Some(OpState::Blocked));
+        // must issue a before b again
+        w.issue(&[a]);
+        w.complete(a);
+        assert_eq!(w.state(b), Some(OpState::Ready));
+    }
+
+    #[test]
+    fn earliest_deadline_tracks_ready_only() {
+        let mut w = Window::new(16);
+        let a = w
+            .submit(
+                DispatchRequest::new(StreamId(0), KernelDesc::gemm(1, 1, 1), 5_000.0),
+                0.0,
+            )
+            .unwrap();
+        let _b = w
+            .submit(
+                DispatchRequest::new(StreamId(0), KernelDesc::gemm(1, 1, 1), 1_000.0),
+                0.0,
+            )
+            .unwrap();
+        // b has the tighter deadline but is blocked behind a
+        assert_eq!(w.earliest_deadline(), Some(5_000.0));
+        w.issue(&[a]);
+        w.complete(a);
+        assert_eq!(w.earliest_deadline(), Some(1_000.0));
+    }
+}

@@ -1,0 +1,234 @@
+//! Roofline + wave-quantization cost model.
+//!
+//! Produces, for a (kernel, launch-config, device) triple:
+//!
+//! * the **isolated duration** — what the kernel takes owning the device;
+//! * the **demand** — the fraction of the device it can actually exploit
+//!   (the paper's utilization gap: interactive kernels have demand ≪ 1);
+//! * the **attainable throughput** — `min(peak·eff, AI·BW)` per the
+//!   roofline model [Williams et al. 2009], which §3 cites directly.
+//!
+//! The timeline engine ([`crate::gpu::timeline`]) then shares the device
+//! between concurrent kernels using these profiles.
+
+use crate::gpu::device::DeviceSpec;
+use crate::gpu::kernel::{KernelDesc, LaunchConfig};
+
+/// Cost model bound to one device.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// The device being modeled.
+    pub device: DeviceSpec,
+}
+
+/// Everything the simulator needs to know about one kernel launch.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelProfile {
+    /// Isolated wall time, µs (includes launch overhead).
+    pub duration_us: f64,
+    /// Pure execution time without launch overhead, µs.
+    pub exec_us: f64,
+    /// Fraction of the device the kernel can exploit at once (0, 1].
+    pub demand: f64,
+    /// Co-residency pressure on shared SM state when multiplexed spatially
+    /// (from the launch config's tuning; see §4.2 / Table 1).
+    pub residency: f64,
+    /// Attainable FLOP/s when run alone.
+    pub attainable_flops: f64,
+    /// Utilization vs device peak (the Fig. 3 y-axis).
+    pub utilization: f64,
+    /// Total FLOPs.
+    pub flops: f64,
+    /// True if the roofline memory ceiling binds (AI < knee).
+    pub memory_bound: bool,
+}
+
+/// Clamp tile sizes to the problem (shape dispatch): never use a tile
+/// larger than the next power of two covering the dimension.
+fn clamp_config(cfg: &LaunchConfig, k: &KernelDesc) -> LaunchConfig {
+    let np2 = |d: u32| d.max(1).next_power_of_two();
+    LaunchConfig {
+        tm: cfg.tm.min(np2(k.m)),
+        tn: cfg.tn.min(np2(k.n)),
+        tk: cfg.tk.min(np2(k.k)),
+        residency: cfg.residency,
+    }
+}
+
+impl CostModel {
+    /// Model for a device.
+    pub fn new(device: DeviceSpec) -> Self {
+        CostModel { device }
+    }
+
+    /// V100 model (the paper's testbed).
+    pub fn v100() -> Self {
+        Self::new(DeviceSpec::v100())
+    }
+
+    /// Profile a kernel under a launch config.
+    ///
+    /// Tiles are first clamped to the problem (`tm' = min(tm, 2^⌈log2 m⌉)`,
+    /// same for n): real GEMM libraries shape-dispatch, so an m=1 GEMV is
+    /// never executed with 128-row tiles. The *clamped* config determines
+    /// blocks, edge waste and ILP.
+    pub fn profile(&self, k: &KernelDesc, cfg: &LaunchConfig) -> KernelProfile {
+        let d = &self.device;
+        let cfg = clamp_config(cfg, k);
+        let cfg = &cfg;
+        let blocks = cfg.blocks(k);
+        let rbs = cfg.resident_blocks_per_sm(d) as u64;
+        let capacity = (d.sms as u64) * rbs;
+
+        // Spatial efficiency: a launch with B blocks can occupy at most B
+        // SMs (one block keeps one SM busy; extra resident blocks per SM
+        // only hide latency, which `max_eff` already folds in). Continuous
+        // block-drain beyond that — superkernel grids amortize wave tails.
+        let spatial_eff = (blocks as f64 / d.sms as f64).min(1.0);
+        let _ = capacity;
+
+        // Per-block efficiency: tile shape (edge waste) × ILP (tile size).
+        let shape_eff = cfg.tile_efficiency(k) * cfg.ilp_efficiency();
+
+        // Compute ceiling.
+        let compute_eff = (d.max_eff * shape_eff * spatial_eff).clamp(1e-6, 1.0);
+        let compute_flops = d.peak_flops * compute_eff;
+
+        // Memory ceiling: bandwidth also needs parallelism to saturate
+        // (a handful of blocks cannot keep 900 GB/s busy); ~half the SMs
+        // streaming suffices (memory-level parallelism saturates earlier
+        // than compute).
+        let bw_sat = (blocks as f64 / (0.5 * d.sms as f64)).min(1.0);
+        let mem_flops = k.arithmetic_intensity() * d.mem_bw * bw_sat.max(1e-3);
+
+        let attainable = compute_flops.min(mem_flops).max(1.0);
+        let exec_us = k.flops() / attainable * 1e6;
+        let duration_us = exec_us + d.launch_us;
+
+        KernelProfile {
+            duration_us,
+            exec_us,
+            demand: (blocks as f64 / d.sms as f64).clamp(0.01, 1.0),
+            // Co-residency pressure this launch puts on shared SM state
+            // (registers/L1/L2): a property of how the kernel was *tuned*,
+            // not of its size — greedy kernels assume they own the device
+            // (§4.2 "kernels are tuned assuming they are single-tenant").
+            residency: cfg.residency,
+            attainable_flops: attainable,
+            utilization: attainable / d.peak_flops,
+            flops: k.flops(),
+            memory_bound: mem_flops < compute_flops,
+        }
+    }
+
+    /// Profile with the greedy default config (what an early-binding,
+    /// context-free programmer ships — §5.1).
+    pub fn profile_default(&self, k: &KernelDesc) -> KernelProfile {
+        self.profile(k, &LaunchConfig::greedy())
+    }
+
+    /// Throughput (problem instances per second) if this kernel is run
+    /// back-to-back alone.
+    pub fn isolated_throughput(&self, k: &KernelDesc, cfg: &LaunchConfig) -> f64 {
+        let p = self.profile(k, cfg);
+        k.problems as f64 / (p.duration_us / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v100() -> CostModel {
+        CostModel::v100()
+    }
+
+    /// ResNet-50 conv-as-GEMM at batch b: a representative mid-network
+    /// 3x3 conv layer (28x28x128 -> 128ch).
+    fn rn50_layer(b: u32) -> KernelDesc {
+        KernelDesc::gemm(b * 28 * 28, 128 * 9, 128)
+    }
+
+    #[test]
+    fn batch1_underutilizes_v100() {
+        // Fig. 3: interactive latencies => <25-30% of peak
+        let p = v100().profile_default(&rn50_layer(1));
+        assert!(
+            p.utilization < 0.30,
+            "batch-1 utilization {} should be <30%",
+            p.utilization
+        );
+    }
+
+    #[test]
+    fn large_batch_improves_but_caps_below_peak() {
+        // Fig. 3: "larger batch sizes struggle to achieve 40% of peak"
+        let cm = v100();
+        let u1 = cm.profile_default(&rn50_layer(1)).utilization;
+        let u64b = cm.profile_default(&rn50_layer(64)).utilization;
+        assert!(u64b > 2.0 * u1, "batching must help: {u1} -> {u64b}");
+        assert!(u64b < 0.95, "never reaches peak: {u64b}");
+    }
+
+    #[test]
+    fn coalescing_beats_sequential_small_kernels() {
+        // the Fig. 6 mechanism: P small GEMMs coalesced as one batched
+        // kernel finish faster than P isolated runs
+        let cm = v100();
+        let single = KernelDesc::gemm(56 * 56, 64 * 9, 64); // rn18 conv2_2
+        let coal = KernelDesc::batched(8, 56 * 56, 64 * 9, 64);
+        let t_seq = 8.0 * cm.profile_default(&single).duration_us;
+        let t_coal = cm.profile_default(&coal).duration_us;
+        assert!(
+            t_coal < t_seq / 2.0,
+            "coalesced {t_coal}µs vs sequential {t_seq}µs"
+        );
+    }
+
+    #[test]
+    fn tiny_gemv_is_memory_bound() {
+        // LSTM-style matrix-vector work sits under the roofline knee
+        let p = v100().profile_default(&KernelDesc::gemm(1, 1024, 1024));
+        assert!(p.memory_bound);
+        assert!(p.utilization < 0.05);
+    }
+
+    #[test]
+    fn duration_scales_roughly_linearly_in_flops_at_scale() {
+        let cm = v100();
+        let a = cm.profile_default(&KernelDesc::gemm(4096, 4096, 4096));
+        let b = cm.profile_default(&KernelDesc::gemm(8192, 4096, 4096));
+        let ratio = b.exec_us / a.exec_us;
+        assert!((1.8..2.2).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn demand_reflects_parallelism() {
+        let cm = v100();
+        let small = cm.profile_default(&KernelDesc::gemm(128, 512, 128));
+        let big = cm.profile_default(&KernelDesc::gemm(8192, 512, 8192));
+        assert!(small.demand < 0.05);
+        assert!(big.demand >= 1.0 - 1e-9);
+    }
+
+    #[test]
+    fn collaborative_config_slower_alone() {
+        // Table 1: collaborative kernel is ~20% slower in isolation
+        let cm = v100();
+        let k = KernelDesc::batched(4, 1024, 1024, 1024);
+        let tg = cm.isolated_throughput(&k, &LaunchConfig::greedy());
+        let tc = cm.isolated_throughput(&k, &LaunchConfig::collaborative());
+        assert!(tc < tg, "collab {tc} must be < greedy {tg} in isolation");
+        assert!(tc > 0.5 * tg, "but not catastrophically slower");
+    }
+
+    #[test]
+    fn cpu_is_orders_slower_than_v100() {
+        let cpu = CostModel::new(DeviceSpec::cpu_xeon());
+        let v = v100();
+        let k = rn50_layer(1);
+        let t_cpu = cpu.profile_default(&k).duration_us;
+        let t_gpu = v.profile_default(&k).duration_us;
+        assert!(t_cpu > 10.0 * t_gpu, "cpu {t_cpu}µs vs gpu {t_gpu}µs");
+    }
+}

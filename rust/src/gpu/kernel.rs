@@ -1,0 +1,202 @@
+//! Kernel descriptors and launch (blocking) configurations.
+//!
+//! Everything the JIT schedules reduces to *batched GEMM*: convolutions are
+//! im2col'd by `model::layers`, LSTM cells are GEMV stacks, attention is QKV
+//! GEMMs — exactly the paper's observation that "the set of operations to
+//! coalesce is restricted largely to algebraic tensor operations".
+
+use crate::gpu::device::DeviceSpec;
+
+/// A batched-GEMM kernel: `problems` independent (m × k) · (k × n) products.
+/// `problems > 1` is a *superkernel* (the VLIW long instruction word).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelDesc {
+    /// Independent problems packed in this launch (cublasSgemmBatched-style).
+    pub problems: u32,
+    /// Rows of each left operand (batch·spatial after im2col).
+    pub m: u32,
+    /// Contraction depth.
+    pub k: u32,
+    /// Columns of each right operand (output channels).
+    pub n: u32,
+    /// Bytes per element (4 = f32).
+    pub dtype_bytes: u32,
+}
+
+impl KernelDesc {
+    /// Single-problem f32 GEMM.
+    pub fn gemm(m: u32, k: u32, n: u32) -> Self {
+        KernelDesc {
+            problems: 1,
+            m,
+            k,
+            n,
+            dtype_bytes: 4,
+        }
+    }
+
+    /// Batched/coalesced f32 GEMM.
+    pub fn batched(problems: u32, m: u32, k: u32, n: u32) -> Self {
+        KernelDesc {
+            problems,
+            m,
+            k,
+            n,
+            dtype_bytes: 4,
+        }
+    }
+
+    /// Total floating-point work (multiply-adds × 2).
+    pub fn flops(&self) -> f64 {
+        2.0 * self.problems as f64 * self.m as f64 * self.k as f64 * self.n as f64
+    }
+
+    /// Minimum HBM traffic: read A and B once, write C once.
+    pub fn bytes(&self) -> f64 {
+        self.problems as f64
+            * self.dtype_bytes as f64
+            * (self.m as f64 * self.k as f64
+                + self.k as f64 * self.n as f64
+                + self.m as f64 * self.n as f64)
+    }
+
+    /// Arithmetic intensity (FLOP/byte) — roofline x-coordinate.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.flops() / self.bytes()
+    }
+
+    /// Pad this problem up to a class shape (coalescer use). Returns the
+    /// padded descriptor; padding never shrinks.
+    pub fn pad_to(&self, m: u32, k: u32, n: u32) -> KernelDesc {
+        KernelDesc {
+            problems: self.problems,
+            m: self.m.max(m),
+            k: self.k.max(k),
+            n: self.n.max(n),
+            dtype_bytes: self.dtype_bytes,
+        }
+    }
+}
+
+/// A blocking configuration — the GPU-side analogue of the Pallas
+/// `BlockConfig` in `python/compile/kernels/coalesced_matmul.py`. The
+/// autotuner (Table 1) searches over these.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LaunchConfig {
+    /// Output-tile rows per block.
+    pub tm: u32,
+    /// Output-tile cols per block.
+    pub tn: u32,
+    /// Contraction slab per iteration.
+    pub tk: u32,
+    /// Fraction of one SM's register/shared-memory budget a resident block
+    /// consumes. Greedy kernels hog (~0.5, so 2 blocks/SM); collaborative
+    /// kernels leave room for co-tenants (§5.3 / Table 1).
+    pub residency: f64,
+}
+
+impl LaunchConfig {
+    /// The "greedy" single-tenant-optimal config (Table 1 row 1).
+    pub fn greedy() -> Self {
+        LaunchConfig {
+            tm: 128,
+            tn: 128,
+            tk: 32,
+            residency: 0.50,
+        }
+    }
+
+    /// The "collaborative" co-tenancy-optimal config (Table 1 row 2).
+    pub fn collaborative() -> Self {
+        LaunchConfig {
+            tm: 64,
+            tn: 64,
+            tk: 32,
+            residency: 0.20,
+        }
+    }
+
+    /// Blocks this config launches for a kernel (wave math input).
+    pub fn blocks(&self, k: &KernelDesc) -> u64 {
+        let mt = (k.m as u64).div_ceil(self.tm as u64);
+        let nt = (k.n as u64).div_ceil(self.tn as u64);
+        k.problems as u64 * mt * nt
+    }
+
+    /// Tile efficiency: how much of each tile's FLOP slots do real elements
+    /// fill (edge-tile waste). 1.0 when tiles divide the problem exactly.
+    pub fn tile_efficiency(&self, k: &KernelDesc) -> f64 {
+        let cover = |dim: u32, tile: u32| -> f64 {
+            let tiles = (dim as u64).div_ceil(tile as u64);
+            dim as f64 / (tiles * tile as u64) as f64
+        };
+        cover(k.m, self.tm) * cover(k.n, self.tn)
+    }
+
+    /// Per-block instruction-level efficiency: bigger tiles amortize
+    /// loads/stores over more FMAs. Saturates at 128×128 (the paper's
+    /// "throughput-optimal convolutional block size" observation, §5).
+    pub fn ilp_efficiency(&self) -> f64 {
+        let area = (self.tm * self.tn) as f64;
+        let full = (128 * 128) as f64;
+        // sqrt: diminishing returns as tiles grow
+        (area / full).sqrt().min(1.0).max(0.25)
+    }
+
+    /// Max resident blocks per SM under this config's residency demand.
+    pub fn resident_blocks_per_sm(&self, d: &DeviceSpec) -> u32 {
+        ((1.0 / self.residency).floor() as u32).clamp(1, d.blocks_per_sm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flops_and_bytes() {
+        let k = KernelDesc::gemm(64, 128, 32);
+        assert_eq!(k.flops(), 2.0 * 64.0 * 128.0 * 32.0);
+        assert_eq!(k.bytes(), 4.0 * (64.0 * 128.0 + 128.0 * 32.0 + 64.0 * 32.0));
+        let b = KernelDesc::batched(4, 64, 128, 32);
+        assert_eq!(b.flops(), 4.0 * k.flops());
+        assert_eq!(b.bytes(), 4.0 * k.bytes());
+    }
+
+    #[test]
+    fn arithmetic_intensity_grows_with_m() {
+        // the Fig. 3 mechanism: small batch (small m) => low intensity
+        let small = KernelDesc::gemm(1, 1024, 1024).arithmetic_intensity();
+        let big = KernelDesc::gemm(256, 1024, 1024).arithmetic_intensity();
+        assert!(small < 1.0, "ai(batch=1)={small}");
+        assert!(big > 50.0, "ai(batch=256)={big}");
+    }
+
+    #[test]
+    fn blocks_and_tile_efficiency() {
+        let cfg = LaunchConfig::greedy();
+        let k = KernelDesc::gemm(256, 512, 256);
+        assert_eq!(cfg.blocks(&k), 2 * 2);
+        assert_eq!(cfg.tile_efficiency(&k), 1.0);
+        // ragged: 130x130 output in 128-tiles wastes most of 4 tiles
+        let ragged = KernelDesc::gemm(130, 512, 130);
+        assert_eq!(cfg.blocks(&ragged), 4);
+        assert!(cfg.tile_efficiency(&ragged) < 0.3);
+    }
+
+    #[test]
+    fn collaborative_trades_ilp_for_residency() {
+        let g = LaunchConfig::greedy();
+        let c = LaunchConfig::collaborative();
+        assert!(c.ilp_efficiency() < g.ilp_efficiency());
+        let d = DeviceSpec::v100();
+        assert!(c.resident_blocks_per_sm(&d) > g.resident_blocks_per_sm(&d));
+    }
+
+    #[test]
+    fn pad_never_shrinks() {
+        let k = KernelDesc::gemm(100, 300, 50);
+        let p = k.pad_to(64, 512, 64);
+        assert_eq!((p.m, p.k, p.n), (100, 512, 64));
+    }
+}

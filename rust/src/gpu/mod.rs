@@ -1,0 +1,27 @@
+//! Space-time GPU simulator — the substrate substituting for the paper's
+//! V100 testbed (see DESIGN.md §2 for the substitution argument).
+//!
+//! The simulator is a *first-order resource-occupancy* model:
+//!
+//! * [`device`] — device specs (V100, T4, K80, TPU-v2-like, Xeon-class CPU)
+//!   with peak FLOPS, memory bandwidth, SM counts and switching overheads;
+//! * [`kernel`] — kernel descriptors (batched GEMM) and launch (blocking)
+//!   configurations, with FLOP/byte/block accounting;
+//! * [`cost`] — the roofline + wave-quantization cost model producing
+//!   isolated kernel durations and attainable throughput;
+//! * [`timeline`] — a processor-sharing discrete-event engine that executes
+//!   kernels in GPU space-time, with scheduling-anomaly (straggler)
+//!   injection to reproduce the paper's Fig. 4/5 unpredictability;
+//! * [`multiplex`] — the three execution disciplines the paper compares:
+//!   time multiplexing, Hyper-Q-style spatial multiplexing, and VLIW
+//!   coalescing.
+
+pub mod cost;
+pub mod device;
+pub mod kernel;
+pub mod multiplex;
+pub mod timeline;
+
+pub use cost::CostModel;
+pub use device::DeviceSpec;
+pub use kernel::{KernelDesc, LaunchConfig};

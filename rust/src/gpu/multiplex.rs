@@ -1,0 +1,410 @@
+//! The three GPU multiplexing disciplines the paper compares (§4, §5):
+//!
+//! * **Time multiplexing** — one CUDA context at a time, kernel-granular
+//!   round-robin with pipeline-flush context switches (§4.1, Fig. 4);
+//! * **Spatial multiplexing** — Hyper-Q/MPS-style concurrent execution via
+//!   the processor-sharing engine, with contention + anomalies (§4.2,
+//!   Fig. 4/5);
+//! * **VLIW coalescing** — the paper's proposal: pack the streams' current
+//!   kernels into superkernels (§5, Fig. 6).
+//!
+//! Model-level runs respect intra-stream dependencies: layer j+1 of a
+//! stream only becomes runnable when layer j completes (`ChainSim`).
+
+use crate::gpu::cost::CostModel;
+use crate::gpu::kernel::{KernelDesc, LaunchConfig};
+use crate::gpu::timeline::{run_time_mux, Completion, SharingModel, SharingSim, SimKernel, SimResult};
+
+/// A per-stream inference: an ordered chain of layer kernels.
+#[derive(Debug, Clone)]
+pub struct InferenceJob {
+    /// Stream (tenant/replica) id.
+    pub stream: u32,
+    /// Layer kernels in program order.
+    pub layers: Vec<KernelDesc>,
+    /// Arrival time, µs.
+    pub arrival_us: f64,
+}
+
+/// Per-stream completion of a whole inference.
+#[derive(Debug, Clone, Copy)]
+pub struct JobCompletion {
+    /// Stream id.
+    pub stream: u32,
+    /// End-to-end inference latency, µs.
+    pub latency_us: f64,
+    /// Completion time, µs.
+    pub end_us: f64,
+    /// Number of layers that were degraded by anomalies.
+    pub stragglers: u32,
+}
+
+/// Result of a model-level multiplexing run.
+#[derive(Debug, Clone)]
+pub struct MuxResult {
+    /// One completion per job.
+    pub jobs: Vec<JobCompletion>,
+    /// Makespan, µs.
+    pub makespan_us: f64,
+    /// Time-averaged device utilization.
+    pub utilization: f64,
+}
+
+impl MuxResult {
+    /// Mean inference latency, µs.
+    pub fn mean_latency_us(&self) -> f64 {
+        if self.jobs.is_empty() {
+            return 0.0;
+        }
+        self.jobs.iter().map(|j| j.latency_us).sum::<f64>() / self.jobs.len() as f64
+    }
+
+    /// Max inference latency, µs.
+    pub fn max_latency_us(&self) -> f64 {
+        self.jobs.iter().map(|j| j.latency_us).fold(0.0, f64::max)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Time multiplexing (§4.1)
+// ---------------------------------------------------------------------------
+
+/// Kernel-granular round-robin across streams; the on-device scheduler
+/// serializes everything and flushes the pipeline on context switches.
+pub fn time_mux(cm: &CostModel, jobs: &[InferenceJob]) -> MuxResult {
+    // flatten respecting round-robin interleave: take layer 0 of each
+    // stream, then layer 1, ... (the fairest thing a context scheduler does)
+    let max_layers = jobs.iter().map(|j| j.layers.len()).max().unwrap_or(0);
+    let mut kernels = Vec::new();
+    let mut id = 0u64;
+    for li in 0..max_layers {
+        for job in jobs {
+            if let Some(k) = job.layers.get(li) {
+                kernels.push(SimKernel {
+                    id,
+                    stream: job.stream,
+                    profile: cm.profile_default(k),
+                    arrival_us: job.arrival_us,
+                });
+                id += 1;
+            }
+        }
+    }
+    let res = run_time_mux(&kernels, cm.device.ctx_switch_us);
+    finish_jobs(jobs, &res)
+}
+
+// ---------------------------------------------------------------------------
+// Spatial multiplexing (§4.2) — dependency-aware processor sharing
+// ---------------------------------------------------------------------------
+
+/// Hyper-Q-style concurrent execution with intra-stream chaining: layer
+/// j+1 is released the instant layer j completes. Implemented as repeated
+/// rounds of the sharing engine: each round runs every stream's *current*
+/// layer; a stream's next layer arrives at its previous completion time.
+pub fn spatial_mux(cm: &CostModel, model: SharingModel, jobs: &[InferenceJob]) -> MuxResult {
+    // Iterative release: maintain per-stream (next-layer-index, ready-time).
+    // We simulate in waves but with exact release times by re-running the
+    // sharing engine over the full kernel set with arrival = ready time,
+    // iterating until release times fix-point (they do in ≤ L iterations
+    // because layer l's completion only depends on layers ≤ l).
+    let n = jobs.len();
+    let max_layers = jobs.iter().map(|j| j.layers.len()).max().unwrap_or(0);
+    let mut ready: Vec<Vec<f64>> = jobs
+        .iter()
+        .map(|j| {
+            let mut v = vec![f64::INFINITY; j.layers.len() + 1];
+            v[0] = j.arrival_us;
+            v
+        })
+        .collect();
+    let sim = SharingSim::new(model);
+    let mut final_res: Option<SimResult> = None;
+    for _round in 0..max_layers.max(1) {
+        // build kernel set with current release estimates (unknown layers
+        // use +inf and are excluded)
+        let mut kernels = Vec::new();
+        for (ji, job) in jobs.iter().enumerate() {
+            for (li, k) in job.layers.iter().enumerate() {
+                if ready[ji][li].is_finite() {
+                    kernels.push(SimKernel {
+                        id: (ji * max_layers + li) as u64,
+                        stream: job.stream,
+                        profile: cm.profile_default(k),
+                        arrival_us: ready[ji][li],
+                    });
+                }
+            }
+        }
+        let res = sim.run(&kernels);
+        // update next-layer release times from completions
+        let mut changed = false;
+        for c in &res.completions {
+            let ji = (c.id as usize) / max_layers;
+            let li = (c.id as usize) % max_layers;
+            if li + 1 < ready[ji].len() {
+                let newt = c.end_us;
+                if (ready[ji][li + 1] - newt).abs() > 1e-6 {
+                    ready[ji][li + 1] = newt;
+                    changed = true;
+                }
+            }
+        }
+        final_res = Some(res);
+        if !changed {
+            break;
+        }
+    }
+    let res = final_res.expect("at least one round");
+    // per-job: latency = last layer end − arrival
+    let mut jobsout = Vec::with_capacity(n);
+    for (ji, job) in jobs.iter().enumerate() {
+        let mut end = job.arrival_us;
+        let mut stragglers = 0u32;
+        for c in &res.completions {
+            let cji = (c.id as usize) / max_layers;
+            if cji == ji {
+                end = end.max(c.end_us);
+                stragglers += c.straggler as u32;
+            }
+        }
+        jobsout.push(JobCompletion {
+            stream: job.stream,
+            latency_us: end - job.arrival_us,
+            end_us: end,
+            stragglers,
+        });
+    }
+    MuxResult {
+        makespan_us: res.makespan_us,
+        utilization: res.utilization,
+        jobs: jobsout,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Whole-batch oracle & VLIW coalescing (§5)
+// ---------------------------------------------------------------------------
+
+/// The batched-inference oracle (Fig. 4's lower bound): all R requests for
+/// the *same* model run as one batch-R inference — per layer, m scales by R.
+pub fn batched_oracle(cm: &CostModel, layers: &[KernelDesc], replicas: u32) -> f64 {
+    layers
+        .iter()
+        .map(|k| {
+            let batched = KernelDesc {
+                m: k.m * replicas,
+                ..*k
+            };
+            cm.profile_default(&batched).duration_us + cm.device.layer_overhead_us
+        })
+        .sum()
+}
+
+/// VLIW coalescing: per layer, pack the R streams' kernels into one
+/// superkernel (`problems = R`). Unlike the batch oracle this preserves
+/// stream independence (no shared weights assumption beyond shape class)
+/// and pays one launch per superkernel plus the JIT's packing overhead.
+pub fn coalesced(
+    cm: &CostModel,
+    layers: &[KernelDesc],
+    replicas: u32,
+    cfg: &LaunchConfig,
+    jit_overhead_us: f64,
+) -> f64 {
+    layers
+        .iter()
+        .map(|k| {
+            let packed = KernelDesc {
+                problems: k.problems * replicas,
+                ..*k
+            };
+            cm.profile(&packed, cfg).duration_us + jit_overhead_us
+        })
+        .sum()
+}
+
+// ---------------------------------------------------------------------------
+// Kernel-level throughput comparisons (Fig. 6 / Table 1)
+// ---------------------------------------------------------------------------
+
+/// Sustained TFLOPS when `streams` copies of `k` are executed under each
+/// discipline, back-to-back for `iters` rounds.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelTput {
+    /// Time multiplexing (§4.1).
+    pub time_mux_tflops: f64,
+    /// Hyper-Q spatial multiplexing (§4.2).
+    pub spatial_tflops: f64,
+    /// VLIW coalesced superkernel (§5.3).
+    pub coalesced_tflops: f64,
+}
+
+/// Fig. 6 experiment: conv2_2-class SGEMM replicated across `streams`.
+pub fn kernel_throughput(
+    cm: &CostModel,
+    k: &KernelDesc,
+    streams: u32,
+    model: SharingModel,
+) -> KernelTput {
+    let flops_total = k.flops() * streams as f64;
+    // time mux: serial + ctx switch between streams
+    let kernels: Vec<SimKernel> = (0..streams)
+        .map(|s| SimKernel {
+            id: s as u64,
+            stream: s,
+            profile: cm.profile_default(k),
+            arrival_us: 0.0,
+        })
+        .collect();
+    let tm = run_time_mux(&kernels, cm.device.ctx_switch_us);
+    let sp = SharingSim::new(model).run(&kernels);
+    let packed = KernelDesc {
+        problems: k.problems * streams,
+        ..*k
+    };
+    let coal_us = cm.profile_default(&packed).duration_us;
+    KernelTput {
+        time_mux_tflops: flops_total / tm.makespan_us / 1e6,
+        spatial_tflops: flops_total / sp.makespan_us / 1e6,
+        coalesced_tflops: flops_total / coal_us / 1e6,
+    }
+}
+
+fn finish_jobs(jobs: &[InferenceJob], res: &SimResult) -> MuxResult {
+    let mut out = Vec::with_capacity(jobs.len());
+    for job in jobs {
+        let mine: Vec<&Completion> = res
+            .completions
+            .iter()
+            .filter(|c| c.stream == job.stream)
+            .collect();
+        let end = mine.iter().map(|c| c.end_us).fold(job.arrival_us, f64::max);
+        out.push(JobCompletion {
+            stream: job.stream,
+            latency_us: end - job.arrival_us,
+            end_us: end,
+            stragglers: mine.iter().filter(|c| c.straggler).count() as u32,
+        });
+    }
+    MuxResult {
+        jobs: out,
+        makespan_us: res.makespan_us,
+        utilization: res.utilization,
+    }
+}
+
+/// Build R identical replica jobs from a layer trace (Fig. 4 workload).
+pub fn replicate_jobs(layers: &[KernelDesc], replicas: u32) -> Vec<InferenceJob> {
+    (0..replicas)
+        .map(|s| InferenceJob {
+            stream: s,
+            layers: layers.to_vec(),
+            arrival_us: 0.0,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rn18_conv2_2() -> KernelDesc {
+        // ResNet-18 conv2_2 after im2col: 56*56 x (64*9) x 64
+        KernelDesc::gemm(56 * 56, 64 * 9, 64)
+    }
+
+    fn small_trace() -> Vec<KernelDesc> {
+        vec![
+            KernelDesc::gemm(3136, 576, 64),
+            KernelDesc::gemm(784, 1152, 128),
+            KernelDesc::gemm(196, 2304, 256),
+        ]
+    }
+
+    #[test]
+    fn time_mux_latency_grows_linearly_with_replicas() {
+        // Fig. 4: "inference latency increased linearly"
+        let cm = CostModel::v100();
+        let l1 = time_mux(&cm, &replicate_jobs(&small_trace(), 1)).mean_latency_us();
+        let l4 = time_mux(&cm, &replicate_jobs(&small_trace(), 4)).mean_latency_us();
+        let l8 = time_mux(&cm, &replicate_jobs(&small_trace(), 8)).mean_latency_us();
+        assert!(l4 > 2.5 * l1, "l1={l1} l4={l4}");
+        assert!(l8 > 1.7 * l4, "l4={l4} l8={l8}");
+    }
+
+    #[test]
+    fn spatial_beats_time_mux_but_not_batched() {
+        // Fig. 4 ordering: batched < spatial < time-mux
+        let cm = CostModel::v100();
+        let trace = small_trace();
+        let r = 8;
+        let tm = time_mux(&cm, &replicate_jobs(&trace, r)).mean_latency_us();
+        let sp = spatial_mux(&cm, SharingModel::default(), &replicate_jobs(&trace, r))
+            .mean_latency_us();
+        let bo = batched_oracle(&cm, &trace, r);
+        assert!(sp < tm, "spatial {sp} must beat time-mux {tm}");
+        assert!(bo < sp, "batched {bo} must beat spatial {sp}");
+    }
+
+    #[test]
+    fn spatial_variability_increases_with_tenants() {
+        // Fig. 5: more tenants -> more per-stream latency variance
+        let cm = CostModel::v100();
+        let trace = small_trace();
+        let cov = |r: u32| {
+            let res = spatial_mux(&cm, SharingModel::default(), &replicate_jobs(&trace, r));
+            let mut s = crate::util::stats::Streaming::new();
+            for j in &res.jobs {
+                s.push(j.latency_us);
+            }
+            s.cov()
+        };
+        assert!(cov(13) > cov(2), "cov13={} cov2={}", cov(13), cov(2));
+    }
+
+    #[test]
+    fn coalesced_throughput_dominates_fig6() {
+        // Fig. 6 shape: coalesced > spatial > time-mux, with the coalesced/
+        // time-mux gap in the high single digits and coalesced/spatial ~2-4x
+        let cm = CostModel::v100();
+        let t = kernel_throughput(&cm, &rn18_conv2_2(), 9, SharingModel::default());
+        assert!(t.coalesced_tflops > t.spatial_tflops);
+        assert!(t.spatial_tflops > t.time_mux_tflops);
+        let vs_time = t.coalesced_tflops / t.time_mux_tflops;
+        let vs_spatial = t.coalesced_tflops / t.spatial_tflops;
+        assert!(
+            (4.0..14.0).contains(&vs_time),
+            "coalesced/time-mux = {vs_time} (paper: 7.71)"
+        );
+        assert!(
+            (1.8..6.0).contains(&vs_spatial),
+            "coalesced/spatial = {vs_spatial} (paper: 3.23)"
+        );
+    }
+
+    #[test]
+    fn chained_spatial_respects_dependencies() {
+        // a 2-layer job can never finish faster than the sum of its layers'
+        // isolated durations
+        let cm = CostModel::v100();
+        let trace = small_trace();
+        let min_sum: f64 = trace
+            .iter()
+            .map(|k| cm.profile_default(k).duration_us)
+            .sum();
+        let res = spatial_mux(&cm, SharingModel::default(), &replicate_jobs(&trace, 3));
+        for j in &res.jobs {
+            assert!(j.latency_us >= min_sum * 0.99, "{} < {min_sum}", j.latency_us);
+        }
+    }
+
+    #[test]
+    fn batched_oracle_sublinear_in_replicas() {
+        let cm = CostModel::v100();
+        let trace = small_trace();
+        let b1 = batched_oracle(&cm, &trace, 1);
+        let b8 = batched_oracle(&cm, &trace, 8);
+        assert!(b8 < 6.0 * b1, "b1={b1} b8={b8}");
+    }
+}

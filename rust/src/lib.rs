@@ -1,0 +1,77 @@
+//! # vliw-jit — The OoO VLIW JIT Compiler for GPU Inference
+//!
+//! A full reproduction of *"The OoO VLIW JIT Compiler for GPU Inference"*
+//! (Jain, Mo, Jain, Tumanov, Gonzalez, Stoica — UC Berkeley/MIT, 2019) as a
+//! three-layer Rust + JAX + Pallas serving stack:
+//!
+//! * **Layer 1** (`python/compile/kernels/`) — Pallas superkernels: the
+//!   `cublasSgemmBatched`-style coalesced GEMM and a fused linear layer,
+//!   validated against pure-jnp oracles.
+//! * **Layer 2** (`python/compile/model.py`) — JAX model graphs built from
+//!   the L1 kernels, AOT-lowered to HLO text per (model, batch) variant.
+//! * **Layer 3** (this crate) — the paper's contribution: an out-of-order,
+//!   SLO-aware, VLIW-inspired JIT that **coalesces** shape-compatible
+//!   kernels from independent execution streams into superkernels,
+//!   **reorders** them in GPU space-time under per-stream deadlines, and
+//!   **retunes** them with a co-tenancy-aware autotuner. Python never runs
+//!   on the request path; compiled artifacts execute through the PJRT CPU
+//!   client (`runtime::pjrt`), and V100-scale numbers come from the
+//!   discrete-event GPU simulator (`gpu`).
+//!
+//! See `DESIGN.md` for the system inventory and the per-figure experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! ## Crate map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | substrates built in-repo: PRNG, stats, JSON, CLI, threadpool, logging |
+//! | [`gpu`] | V100-calibrated space-time GPU simulator (device, cost model, timeline, multiplexing) |
+//! | [`model`] | DNN model zoo: per-layer GEMM shape extraction (Fig. 2/7 source data) |
+//! | [`workload`] | arrival processes, tenant specs, trace generation/replay |
+//! | [`compiler`] | the OoO VLIW JIT: IR, issue window, coalescer, scheduler, autotuner, clustering |
+//! | [`runtime`] | artifact manifest + PJRT executor + golden self-checks |
+//! | [`serve`] | multi-tenant serving loop, metrics, admission control |
+//! | [`bench`] | micro-benchmark harness (criterion replacement) |
+
+pub mod bench;
+pub mod compiler;
+pub mod gpu;
+pub mod model;
+pub mod runtime;
+pub mod serve;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Artifact manifest missing/corrupt, or lookup failed.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+    /// PJRT / XLA runtime failure.
+    #[error("xla error: {0}")]
+    Xla(#[from] xla::Error),
+    /// I/O failure (manifest, weights, traces).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    /// JSON parse failure.
+    #[error("json error: {0}")]
+    Json(String),
+    /// Invalid configuration or argument.
+    #[error("config error: {0}")]
+    Config(String),
+    /// Scheduling invariant violation / infeasible request.
+    #[error("scheduler error: {0}")]
+    Sched(String),
+}
+
+impl Error {
+    /// Shorthand constructor for config errors.
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+}

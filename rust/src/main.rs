@@ -1,0 +1,238 @@
+//! `vliwd` — the OoO VLIW JIT serving daemon / toolbox.
+//!
+//! Subcommands:
+//!
+//! * `info`          — artifact + device inventory
+//! * `golden`        — end-to-end numeric self-check of every artifact
+//! * `serve`         — threaded multi-tenant serving demo on real artifacts
+//! * `autotune`      — Table-1 style greedy-vs-collaborative search
+//! * `cluster`       — Fig-7 style GEMM shape clustering of the model zoo
+//!
+//! Run `vliwd <cmd> --help` for flags.
+
+use anyhow::{bail, Context, Result};
+
+use vliw_jit::compiler::{autotune, cluster};
+use vliw_jit::gpu::cost::CostModel;
+use vliw_jit::gpu::device::DeviceSpec;
+use vliw_jit::gpu::kernel::KernelDesc;
+use vliw_jit::gpu::timeline::SharingModel;
+use vliw_jit::model::zoo;
+use vliw_jit::runtime::{Manifest, PjrtExecutor};
+use vliw_jit::serve::{BatchPolicy, Server};
+use vliw_jit::util::cli::Args;
+use vliw_jit::util::logging;
+use vliw_jit::workload::trace::{mixed_tenants, Trace};
+
+fn main() -> Result<()> {
+    let cmd = std::env::args().nth(1).unwrap_or_else(|| "help".into());
+    // shift argv so per-command Args::parse sees only the flags
+    match cmd.as_str() {
+        "info" => info(),
+        "golden" => golden(),
+        "serve" => serve(),
+        "autotune" => cmd_autotune(),
+        "cluster" => cmd_cluster(),
+        "help" | "--help" | "-h" => {
+            println!(
+                "vliwd — OoO VLIW JIT for accelerator inference\n\n\
+                 USAGE: vliwd <info|golden|serve|autotune|cluster> [flags]\n\
+                 Run `vliwd <cmd> --help` for per-command flags."
+            );
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `vliwd help`)"),
+    }
+}
+
+fn parse(mut args: Args) -> Result<vliw_jit::util::cli::Parsed> {
+    let argv: Vec<String> = std::env::args().skip(2).collect();
+    if argv.iter().any(|a| a == "--help" || a == "-h") {
+        print!("{}", args.help());
+        std::process::exit(0);
+    }
+    let _ = &mut args;
+    args.parse_from(argv).map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+fn info() -> Result<()> {
+    let m = Manifest::load_default().context("load manifest")?;
+    println!("artifacts: {}", m.dir.display());
+    let mut names: Vec<&String> = m.models.keys().collect();
+    names.sort();
+    for name in names {
+        let e = &m.models[name];
+        println!(
+            "  model {name}: {} params, {} MFLOP/query, batches {:?}",
+            e.params,
+            e.flops_per_query / 1_000_000,
+            e.artifacts.iter().map(|a| a.batch).collect::<Vec<_>>()
+        );
+    }
+    for (class, mm, kk, nn, maxp) in m.super_classes() {
+        println!("  super {class}: {mm}x{kk}x{nn}, up to {maxp} problems");
+    }
+    for d in ["v100", "t4", "k80", "tpuv2", "cpu"] {
+        let spec = DeviceSpec::by_name(d).expect("known");
+        println!(
+            "  device {:<8} {:>3} SMs  {:>5.1} TFLOPS  {:>4.0} GB/s  op:byte {:>5.1}",
+            spec.name,
+            spec.sms,
+            spec.peak_flops / 1e12,
+            spec.mem_bw / 1e9,
+            spec.op_byte_ratio()
+        );
+    }
+    Ok(())
+}
+
+fn golden() -> Result<()> {
+    let mut ex = PjrtExecutor::from_default_artifacts().context("artifacts")?;
+    let mut failures = 0;
+    let mut models: Vec<(String, Vec<u32>)> = ex
+        .manifest()
+        .models
+        .values()
+        .map(|e| (e.name.clone(), e.artifacts.iter().map(|a| a.batch).collect()))
+        .collect();
+    models.sort();
+    for (model, batches) in models {
+        for b in batches {
+            match ex.golden_check_model(&model, b) {
+                Ok(err) => println!("  OK  {model} b{b}  (max rel err {err:.2e})"),
+                Err(e) => {
+                    failures += 1;
+                    println!("  FAIL {model} b{b}: {e}");
+                }
+            }
+        }
+    }
+    let supers = ex.manifest().supers.clone();
+    for s in supers {
+        match ex.golden_check_super(&s) {
+            Ok(err) => println!(
+                "  OK  super_{}_p{}  (max rel err {err:.2e})",
+                s.class, s.problems
+            ),
+            Err(e) => {
+                failures += 1;
+                println!("  FAIL super_{}_p{}: {e}", s.class, s.problems);
+            }
+        }
+    }
+    if failures > 0 {
+        bail!("{failures} golden check(s) failed");
+    }
+    println!("all goldens passed");
+    Ok(())
+}
+
+fn serve() -> Result<()> {
+    let mut args = Args::new("vliwd serve", "threaded multi-tenant serving demo");
+    args.flag("tenants", "6", "number of tenants")
+        .flag("rate", "120", "per-tenant request rate (req/s)")
+        .flag("requests", "40", "requests per tenant")
+        .flag("speedup", "1", "trace time compression factor")
+        .flag("seed", "42", "trace seed")
+        .flag("log", "info", "log level")
+        .switch("no-batching", "serve batch-1 FIFO (baseline)");
+    let p = parse(args)?;
+    logging::set_level_str(p.get("log"));
+    let n = p.get_u64("tenants").map_err(|e| anyhow::anyhow!("{e}"))? as u32;
+    let rate = p.get_f64("rate").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let per = p.get_usize("requests").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let speedup = p.get_f64("speedup").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let seed = p.get_u64("seed").map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let mut ex = PjrtExecutor::from_default_artifacts().context("artifacts")?;
+    for m in ["mlp_small", "mlp_large", "gemmnet6"] {
+        let us = ex.warmup_model(m).map_err(|e| anyhow::anyhow!("{e}"))?;
+        println!("warmed {m} in {:.1} ms", us / 1e3);
+    }
+    let policy = if p.get_bool("no-batching") {
+        BatchPolicy::NoBatching
+    } else {
+        BatchPolicy::coalescing()
+    };
+    let tenants = mixed_tenants(n, &["mlp_small", "gemmnet6", "mlp_large"], rate);
+    let trace = Trace::generate(&tenants, per, seed);
+    println!(
+        "serving {} requests from {n} tenants (offered {:.0} req/s, speedup {speedup}x)...",
+        trace.requests.len(),
+        trace.offered_load()
+    );
+    let mut server = Server::new(ex, policy);
+    let report = server.run_realtime(&trace, speedup);
+    println!("{}", report.render());
+    Ok(())
+}
+
+fn cmd_autotune() -> Result<()> {
+    let mut args = Args::new("vliwd autotune", "Table-1 greedy vs collaborative search");
+    args.flag("tenants", "6", "co-tenancy level")
+        .flag("m", "3136", "GEMM rows")
+        .flag("k", "576", "GEMM depth")
+        .flag("n", "64", "GEMM cols")
+        .flag("device", "v100", "device model");
+    let p = parse(args)?;
+    let dev = DeviceSpec::by_name(p.get("device")).context("unknown device")?;
+    let cm = CostModel::new(dev);
+    let k = KernelDesc::gemm(
+        p.get_u64("m").unwrap() as u32,
+        p.get_u64("k").unwrap() as u32,
+        p.get_u64("n").unwrap() as u32,
+    );
+    let res = autotune::autotune(
+        &cm,
+        &k,
+        p.get_u64("tenants").unwrap() as u32,
+        &SharingModel::default(),
+    );
+    println!(
+        "greedy:        cfg {:?}  isolated {:.2} TFLOPS  multiplexed {:.2} TFLOPS",
+        (res.greedy.config.tm, res.greedy.config.tn, res.greedy.config.tk),
+        res.greedy.isolated_tflops,
+        res.greedy.multiplexed_tflops
+    );
+    println!(
+        "collaborative: cfg {:?}  isolated {:.2} TFLOPS  multiplexed {:.2} TFLOPS",
+        (
+            res.collaborative.config.tm,
+            res.collaborative.config.tn,
+            res.collaborative.config.tk
+        ),
+        res.collaborative.isolated_tflops,
+        res.collaborative.multiplexed_tflops
+    );
+    println!(
+        "multiplexed speedup {:.2}x, isolated degradation {:.0}%  (paper: 1.25x / ~20%)",
+        res.multiplexed_speedup(),
+        res.isolated_degradation() * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_cluster() -> Result<()> {
+    let mut args = Args::new("vliwd cluster", "Fig-7 GEMM shape clustering");
+    args.flag("k", "6", "clusters").flag("seed", "42", "kmeans seed");
+    let p = parse(args)?;
+    let kernels: Vec<KernelDesc> = zoo::zoo().iter().flat_map(|m| m.gemms(1)).collect();
+    let clusters = cluster::kmeans(
+        &kernels,
+        p.get_usize("k").unwrap(),
+        p.get_u64("seed").unwrap(),
+        100,
+    );
+    println!("{} kernels from {} models:", kernels.len(), zoo::zoo().len());
+    for (i, c) in clusters.iter().enumerate() {
+        println!(
+            "  cluster {i}: {:>3} kernels  class {}x{}x{}  mean padding {:.1}%",
+            c.size(),
+            c.class.0,
+            c.class.1,
+            c.class.2,
+            c.mean_padding * 100.0
+        );
+    }
+    Ok(())
+}

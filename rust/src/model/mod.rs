@@ -1,0 +1,14 @@
+//! DNN model zoo: per-layer GEMM shape extraction.
+//!
+//! Fig. 2 (latency-over-model-generations) and Fig. 7 (GEMM shape
+//! clustering) are functions of *architectural facts* — layer shapes —
+//! which this module reproduces exactly from the papers describing each
+//! network. Convolutions become GEMMs by im2col, recurrent cells by gate
+//! stacking, attention by QKV projection — matching how cuDNN/cuBLAS (and
+//! our Pallas superkernel) actually execute them.
+
+pub mod layers;
+pub mod zoo;
+
+pub use layers::LayerDesc;
+pub use zoo::{zoo, Model};

@@ -1,0 +1,404 @@
+//! The model zoo: 12 networks spanning 2012–2018, with release year and
+//! per-layer shapes — the source data for Fig. 2 (latency over model
+//! generations) and Fig. 7 (GEMM shape clustering).
+//!
+//! Layer tables follow the original papers (AlexNet [29], VGG [38],
+//! ResNet [22], DenseNet [25], SENet [24]); very deep models use stage
+//! replication exactly as published. Aggregate FLOPs are asserted against
+//! the commonly cited numbers in tests.
+
+use crate::gpu::kernel::KernelDesc;
+use crate::model::layers::LayerDesc;
+
+/// A zoo model: name, release year, layer chain.
+#[derive(Debug, Clone)]
+pub struct Model {
+    /// Canonical name ("resnet50", ...).
+    pub name: &'static str,
+    /// Publication year (Fig. 2 x-axis).
+    pub year: u32,
+    /// Layers in program order.
+    pub layers: Vec<LayerDesc>,
+}
+
+impl Model {
+    /// All layer GEMMs at batch `b`, in program order.
+    pub fn gemms(&self, b: u32) -> Vec<KernelDesc> {
+        self.layers.iter().flat_map(|l| l.gemms(b)).collect()
+    }
+
+    /// Total FLOPs per query at batch 1.
+    pub fn flops(&self) -> f64 {
+        self.layers.iter().map(|l| l.flops(1)).sum()
+    }
+
+    /// Number of scheduled kernels at batch 1.
+    pub fn kernel_count(&self) -> usize {
+        self.gemms(1).len()
+    }
+}
+
+fn conv(out_hw: u32, in_ch: u32, out_ch: u32, ksize: u32) -> LayerDesc {
+    LayerDesc::Conv {
+        out_hw,
+        in_ch,
+        out_ch,
+        ksize,
+    }
+}
+
+fn fc(d_in: u32, d_out: u32) -> LayerDesc {
+    LayerDesc::Fc { d_in, d_out }
+}
+
+fn alexnet() -> Model {
+    Model {
+        name: "alexnet",
+        year: 2012,
+        layers: vec![
+            conv(55, 3, 96, 11),
+            // convs 2, 4, 5 are 2-way grouped in the original (half in_ch)
+            conv(27, 48, 256, 5),
+            conv(13, 256, 384, 3),
+            conv(13, 192, 384, 3),
+            conv(13, 192, 256, 3),
+            fc(9216, 4096),
+            fc(4096, 4096),
+            fc(4096, 1000),
+        ],
+    }
+}
+
+fn vgg16() -> Model {
+    let mut layers = Vec::new();
+    // (repeat, out_hw, in_ch, out_ch)
+    for &(rep, hw, ic, oc) in &[
+        (1, 224, 3, 64),
+        (1, 224, 64, 64),
+        (1, 112, 64, 128),
+        (1, 112, 128, 128),
+        (1, 56, 128, 256),
+        (2, 56, 256, 256),
+        (1, 28, 256, 512),
+        (2, 28, 512, 512),
+        (1, 14, 512, 512),
+        (2, 14, 512, 512),
+    ] {
+        for _ in 0..rep {
+            layers.push(conv(hw, ic, oc, 3));
+        }
+    }
+    layers.push(fc(25088, 4096));
+    layers.push(fc(4096, 4096));
+    layers.push(fc(4096, 1000));
+    Model {
+        name: "vgg16",
+        year: 2014,
+        layers,
+    }
+}
+
+fn inception_v3() -> Model {
+    // representative trunk + mixed blocks (shape-faithful, stage-replicated)
+    let mut layers = vec![
+        conv(149, 3, 32, 3),
+        conv(147, 32, 32, 3),
+        conv(147, 32, 64, 3),
+        conv(73, 64, 80, 1),
+        conv(71, 80, 192, 3),
+    ];
+    for _ in 0..3 {
+        layers.push(conv(35, 192, 64, 1));
+        layers.push(conv(35, 64, 96, 3));
+        layers.push(conv(35, 48, 64, 5));
+    }
+    for _ in 0..4 {
+        layers.push(conv(17, 768, 192, 1));
+        layers.push(conv(17, 128, 192, 7)); // 1x7/7x1 factorized pair (as one)
+    }
+    for _ in 0..2 {
+        layers.push(conv(8, 1280, 320, 1));
+        layers.push(conv(8, 384, 384, 3));
+    }
+    layers.push(fc(2048, 1000));
+    Model {
+        name: "inception_v3",
+        year: 2015,
+        layers,
+    }
+}
+
+fn resnet_basic(name: &'static str, year: u32, blocks: [u32; 4]) -> Model {
+    // basic blocks (two 3x3 convs), ResNet-18/34 style
+    let mut layers = vec![conv(112, 3, 64, 7)];
+    let stages = [(56u32, 64u32), (28, 128), (14, 256), (7, 512)];
+    for (si, &(hw, ch)) in stages.iter().enumerate() {
+        for b in 0..blocks[si] {
+            let in_ch = if b == 0 && si > 0 { ch / 2 } else { ch };
+            layers.push(conv(hw, in_ch, ch, 3));
+            layers.push(conv(hw, ch, ch, 3));
+        }
+    }
+    layers.push(fc(512, 1000));
+    Model { name, year, layers }
+}
+
+fn resnet_bottleneck(name: &'static str, year: u32, blocks: [u32; 4]) -> Model {
+    // bottleneck blocks (1x1 -> 3x3 -> 1x1), ResNet-50/101/152 style
+    let mut layers = vec![conv(112, 3, 64, 7)];
+    let stages = [(56u32, 64u32), (28, 128), (14, 256), (7, 512)];
+    for (si, &(hw, ch)) in stages.iter().enumerate() {
+        let expanded = ch * 4;
+        for b in 0..blocks[si] {
+            let in_ch = if b == 0 {
+                if si == 0 {
+                    64
+                } else {
+                    ch * 2
+                }
+            } else {
+                expanded
+            };
+            layers.push(conv(hw, in_ch, ch, 1));
+            layers.push(conv(hw, ch, ch, 3));
+            layers.push(conv(hw, ch, expanded, 1));
+        }
+    }
+    layers.push(fc(2048, 1000));
+    Model { name, year, layers }
+}
+
+fn densenet121() -> Model {
+    // dense blocks with growth 32; each layer: 1x1 (4g) + 3x3 (g)
+    let mut layers = vec![conv(112, 3, 64, 7)];
+    let cfg = [(56u32, 6u32, 64u32), (28, 12, 128), (14, 24, 256), (7, 16, 512)];
+    for &(hw, n, ch0) in &cfg {
+        let mut ch = ch0;
+        for _ in 0..n {
+            layers.push(conv(hw, ch, 128, 1));
+            layers.push(conv(hw, 128, 32, 3));
+            ch += 32;
+        }
+    }
+    layers.push(fc(1024, 1000));
+    Model {
+        name: "densenet121",
+        year: 2016,
+        layers,
+    }
+}
+
+fn senet(name: &'static str, year: u32, blocks: [u32; 4], width: u32) -> Model {
+    // SE-ResNeXt-style: bottlenecks + SE gating FCs per block
+    let mut m = resnet_bottleneck("tmp", year, blocks);
+    let mut layers = Vec::new();
+    let stages = [(56u32, 64u32), (28, 128), (14, 256), (7, 512)];
+    let mut block_idx = 0usize;
+    layers.push(m.layers.remove(0));
+    for (si, &(_hw, ch)) in stages.iter().enumerate() {
+        for _ in 0..blocks[si] {
+            for _ in 0..3 {
+                layers.push(m.layers.remove(0));
+            }
+            // SE: squeeze FC pair on the expanded channels
+            let c = ch * 4 * width / 64;
+            layers.push(fc(c, c / 16));
+            layers.push(fc(c / 16, c));
+            block_idx += 1;
+        }
+    }
+    let _ = block_idx;
+    layers.push(fc(2048, 1000));
+    Model { name, year, layers }
+}
+
+fn mobilenet_v1() -> Model {
+    let mut layers = vec![conv(112, 3, 32, 3)];
+    for &(hw, ch, oc) in &[
+        (112u32, 32u32, 64u32),
+        (56, 64, 128),
+        (56, 128, 128),
+        (28, 128, 256),
+        (28, 256, 256),
+        (14, 256, 512),
+        (14, 512, 512),
+        (14, 512, 512),
+        (14, 512, 512),
+        (14, 512, 512),
+        (14, 512, 512),
+        (7, 512, 1024),
+        (7, 1024, 1024),
+    ] {
+        layers.push(LayerDesc::DwConv { out_hw: hw, ch, out_ch: oc });
+    }
+    layers.push(fc(1024, 1000));
+    Model {
+        name: "mobilenet_v1",
+        year: 2017,
+        layers,
+    }
+}
+
+fn lstm_2x1024() -> Model {
+    Model {
+        name: "lstm_2x1024",
+        year: 2015,
+        layers: vec![
+            LayerDesc::Lstm {
+                d_in: 512,
+                hidden: 1024,
+                steps: 50,
+            },
+            LayerDesc::Lstm {
+                d_in: 1024,
+                hidden: 1024,
+                steps: 50,
+            },
+            fc(1024, 32000),
+        ],
+    }
+}
+
+fn gru_512() -> Model {
+    Model {
+        name: "gru_512",
+        year: 2016,
+        layers: vec![
+            LayerDesc::Lstm {
+                d_in: 256,
+                hidden: 512,
+                steps: 30,
+            },
+            fc(512, 10000),
+        ],
+    }
+}
+
+fn bert_base() -> Model {
+    Model {
+        name: "bert_base",
+        year: 2018,
+        layers: (0..12)
+            .map(|_| LayerDesc::Attention { seq: 128, d: 768 })
+            .chain(std::iter::once(fc(768, 2)))
+            .collect(),
+    }
+}
+
+fn transformer_small() -> Model {
+    Model {
+        name: "transformer_small",
+        year: 2017,
+        layers: (0..6)
+            .map(|_| LayerDesc::Attention { seq: 64, d: 512 })
+            .chain(std::iter::once(fc(512, 32000)))
+            .collect(),
+    }
+}
+
+/// The full zoo, ordered by release year.
+pub fn zoo() -> Vec<Model> {
+    vec![
+        alexnet(),
+        vgg16(),
+        inception_v3(),
+        resnet_basic("resnet18", 2015, [2, 2, 2, 2]),
+        resnet_bottleneck("resnet50", 2015, [3, 4, 6, 3]),
+        lstm_2x1024(),
+        densenet121(),
+        gru_512(),
+        mobilenet_v1(),
+        transformer_small(),
+        senet("senet154", 2017, [3, 8, 36, 3], 64),
+        bert_base(),
+    ]
+}
+
+/// Look a model up by name.
+pub fn by_name(name: &str) -> Option<Model> {
+    zoo().into_iter().find(|m| m.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_has_twelve_models_sorted_by_year() {
+        let z = zoo();
+        assert_eq!(z.len(), 12);
+        let years: Vec<u32> = z.iter().map(|m| m.year).collect();
+        let mut sorted = years.clone();
+        sorted.sort_unstable();
+        assert_eq!(years, sorted);
+    }
+
+    #[test]
+    fn flops_match_literature() {
+        // commonly cited per-image FLOPs (2·MACs), generous tolerance since
+        // we count GEMM work only:
+        let checks = [
+            ("alexnet", 1.4e9, 0.5),      // ~1.4 GFLOP
+            ("vgg16", 31.0e9, 0.3),       // ~31 GFLOP
+            ("resnet18", 3.6e9, 0.4),     // ~3.6 GFLOP
+            ("resnet50", 7.7e9, 0.4),     // ~8 GFLOP (2*MACs)
+            ("densenet121", 5.7e9, 0.5),  // ~5.7 GFLOP
+            ("mobilenet_v1", 1.1e9, 0.5), // ~1.1 GFLOP
+            ("bert_base", 22.0e9, 0.5),   // ~22 GFLOP @ seq128 (GEMM part)
+        ];
+        for (name, expect, tol) in checks {
+            let m = by_name(name).unwrap();
+            let f = m.flops();
+            assert!(
+                (f - expect).abs() / expect < tol,
+                "{name}: {:.2e} vs expected {:.2e}",
+                f,
+                expect
+            );
+        }
+    }
+
+    #[test]
+    fn senet_is_heaviest_conv_net() {
+        let z = zoo();
+        let se = z.iter().find(|m| m.name == "senet154").unwrap();
+        let rn = z.iter().find(|m| m.name == "resnet50").unwrap();
+        assert!(se.flops() > 2.0 * rn.flops());
+        assert!(se.kernel_count() > 150);
+    }
+
+    #[test]
+    fn models_grow_over_time() {
+        // Fig. 2's premise: newer CNNs are heavier than AlexNet
+        let a = by_name("alexnet").unwrap().flops();
+        let s = by_name("senet154").unwrap().flops();
+        assert!(s > 10.0 * a);
+    }
+
+    #[test]
+    fn gemm_extraction_batch_scaling() {
+        let m = by_name("resnet50").unwrap();
+        let g1 = m.gemms(1);
+        let g8 = m.gemms(8);
+        assert_eq!(g1.len(), g8.len());
+        for (a, b) in g1.iter().zip(&g8) {
+            assert_eq!(b.m, 8 * a.m);
+            assert_eq!((b.k, b.n), (a.k, a.n));
+        }
+    }
+
+    #[test]
+    fn resnet18_contains_conv2_2_shape() {
+        // the Fig. 6 kernel must exist in the zoo extraction
+        let m = by_name("resnet18").unwrap();
+        assert!(m
+            .gemms(1)
+            .iter()
+            .any(|k| k.m == 3136 && k.k == 576 && k.n == 64));
+    }
+
+    #[test]
+    fn lookup_unknown_is_none() {
+        assert!(by_name("resnet9000").is_none());
+    }
+}

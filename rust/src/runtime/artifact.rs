@@ -1,0 +1,362 @@
+//! Artifact manifest: the contract between the python compile path and the
+//! rust request path (`artifacts/manifest.json`, written by `compile.aot`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Golden self-check data for one artifact.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    /// First 8 output values (flattened).
+    pub out_prefix: Vec<f64>,
+    /// Mean |output|.
+    pub out_mean_abs: f64,
+}
+
+/// One weight tensor inside a model's weight blob.
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    /// Tensor name ("mlp_small.w0").
+    pub name: String,
+    /// Shape.
+    pub shape: Vec<usize>,
+    /// Byte offset in the blob.
+    pub offset_bytes: usize,
+    /// Byte length.
+    pub nbytes: usize,
+}
+
+/// One (model, batch) compiled variant.
+#[derive(Debug, Clone)]
+pub struct ModelArtifact {
+    /// Batch size this executable was lowered for.
+    pub batch: u32,
+    /// HLO text file name.
+    pub file: String,
+    /// Golden check.
+    pub golden: Golden,
+}
+
+/// A model entry.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    /// Model name.
+    pub name: String,
+    /// "mlp" | "gemmnet".
+    pub kind: String,
+    /// Input features.
+    pub d_in: u32,
+    /// Output features.
+    pub d_out: u32,
+    /// Parameter count.
+    pub params: u64,
+    /// FLOPs per query.
+    pub flops_per_query: u64,
+    /// Weight blob file.
+    pub weights_file: String,
+    /// Weight table.
+    pub weights: Vec<WeightEntry>,
+    /// Batch variants (ascending batch).
+    pub artifacts: Vec<ModelArtifact>,
+}
+
+impl ModelEntry {
+    /// Smallest compiled batch ≥ `n` (the batcher's pad-up rule).
+    pub fn variant_for(&self, n: u32) -> Option<&ModelArtifact> {
+        self.artifacts.iter().find(|a| a.batch >= n)
+    }
+
+    /// Largest compiled batch (batcher's chunk size under load).
+    pub fn max_batch(&self) -> u32 {
+        self.artifacts.iter().map(|a| a.batch).max().unwrap_or(1)
+    }
+}
+
+/// One compiled superkernel variant.
+#[derive(Debug, Clone)]
+pub struct SuperArtifact {
+    /// Shape class label ("A"/"B"/"C").
+    pub class: String,
+    /// Per-problem rows.
+    pub m: u32,
+    /// Contraction depth.
+    pub k: u32,
+    /// Per-problem cols.
+    pub n: u32,
+    /// Capacity (problems packed).
+    pub problems: u32,
+    /// HLO text file name.
+    pub file: String,
+    /// Golden check.
+    pub golden: Golden,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Directory containing the artifacts.
+    pub dir: PathBuf,
+    /// Models by name.
+    pub models: HashMap<String, ModelEntry>,
+    /// Superkernels (all classes/capacities).
+    pub supers: Vec<SuperArtifact>,
+}
+
+fn parse_golden(j: &Json) -> Result<Golden> {
+    let prefix = j
+        .req("out_prefix")?
+        .as_arr()
+        .ok_or_else(|| Error::Json("out_prefix not an array".into()))?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| Error::Json("non-number in prefix".into())))
+        .collect::<Result<Vec<f64>>>()?;
+    Ok(Golden {
+        out_prefix: prefix,
+        out_mean_abs: j.req_f64("out_mean_abs")?,
+    })
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let j = Json::parse(&text)?;
+        if j.req_u64("version")? != 1 {
+            return Err(Error::Artifact("unsupported manifest version".into()));
+        }
+        let mut models = HashMap::new();
+        for m in j.req("models")?.as_arr().unwrap_or(&[]) {
+            let mut weights = Vec::new();
+            for w in m.req("weights")?.as_arr().unwrap_or(&[]) {
+                weights.push(WeightEntry {
+                    name: w.req_str("name")?,
+                    shape: w
+                        .req("shape")?
+                        .as_arr()
+                        .ok_or_else(|| Error::Json("shape not array".into()))?
+                        .iter()
+                        .map(|v| v.as_u64().map(|x| x as usize))
+                        .collect::<Option<Vec<usize>>>()
+                        .ok_or_else(|| Error::Json("bad shape".into()))?,
+                    offset_bytes: m_usize(w, "offset_bytes")?,
+                    nbytes: m_usize(w, "nbytes")?,
+                });
+            }
+            let mut artifacts = Vec::new();
+            for a in m.req("artifacts")?.as_arr().unwrap_or(&[]) {
+                artifacts.push(ModelArtifact {
+                    batch: a.req_u64("batch")? as u32,
+                    file: a.req_str("file")?,
+                    golden: parse_golden(a.req("golden")?)?,
+                });
+            }
+            artifacts.sort_by_key(|a| a.batch);
+            let entry = ModelEntry {
+                name: m.req_str("name")?,
+                kind: m.req_str("kind")?,
+                d_in: m.req_u64("d_in")? as u32,
+                d_out: m.req_u64("d_out")? as u32,
+                params: m.req_u64("params")?,
+                flops_per_query: m.req_u64("flops_per_query")?,
+                weights_file: m.req_str("weights_file")?,
+                weights,
+                artifacts,
+            };
+            models.insert(entry.name.clone(), entry);
+        }
+        let mut supers = Vec::new();
+        for s in j.req("supers")?.as_arr().unwrap_or(&[]) {
+            supers.push(SuperArtifact {
+                class: s.req_str("class")?,
+                m: s.req_u64("m")? as u32,
+                k: s.req_u64("k")? as u32,
+                n: s.req_u64("n")? as u32,
+                problems: s.req_u64("problems")? as u32,
+                file: s.req_str("file")?,
+                golden: parse_golden(s.req("golden")?)?,
+            });
+        }
+        Ok(Manifest {
+            dir,
+            models,
+            supers,
+        })
+    }
+
+    /// Load from the repo-default location (`$CARGO_MANIFEST_DIR/artifacts`
+    /// or `./artifacts`).
+    pub fn load_default() -> Result<Manifest> {
+        let candidates = [
+            std::env::var("VLIW_ARTIFACTS").unwrap_or_default(),
+            format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")),
+            "artifacts".to_string(),
+        ];
+        for c in candidates.iter().filter(|c| !c.is_empty()) {
+            if Path::new(c).join("manifest.json").exists() {
+                return Self::load(c);
+            }
+        }
+        Err(Error::Artifact(
+            "no artifacts/manifest.json found; run `make artifacts`".into(),
+        ))
+    }
+
+    /// A model by name.
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("unknown model '{name}'")))
+    }
+
+    /// Smallest-capacity superkernel of class (m,k,n) with `problems ≥ p`.
+    pub fn super_for(&self, m: u32, k: u32, n: u32, p: u32) -> Option<&SuperArtifact> {
+        self.supers
+            .iter()
+            .filter(|s| s.m == m && s.k == k && s.n == n && s.problems >= p)
+            .min_by_key(|s| s.problems)
+    }
+
+    /// All superkernel classes present: (class, m, k, n, max problems).
+    pub fn super_classes(&self) -> Vec<(String, u32, u32, u32, u32)> {
+        let mut out: Vec<(String, u32, u32, u32, u32)> = Vec::new();
+        for s in &self.supers {
+            if let Some(e) = out.iter_mut().find(|e| e.0 == s.class) {
+                e.4 = e.4.max(s.problems);
+            } else {
+                out.push((s.class.clone(), s.m, s.k, s.n, s.problems));
+            }
+        }
+        out
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path_of(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Load a model's weight tensors as flat f32 vectors (in ABI order).
+    pub fn load_weights(&self, model: &str) -> Result<Vec<(WeightEntry, Vec<f32>)>> {
+        let entry = self.model(model)?;
+        let blob = std::fs::read(self.path_of(&entry.weights_file))?;
+        entry
+            .weights
+            .iter()
+            .map(|w| {
+                let end = w.offset_bytes + w.nbytes;
+                if end > blob.len() {
+                    return Err(Error::Artifact(format!(
+                        "weight {} out of range: {}..{end} > {}",
+                        w.name,
+                        w.offset_bytes,
+                        blob.len()
+                    )));
+                }
+                let raw = &blob[w.offset_bytes..end];
+                let vals: Vec<f32> = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                let expect: usize = w.shape.iter().product();
+                if vals.len() != expect {
+                    return Err(Error::Artifact(format!(
+                        "weight {}: {} values, shape wants {expect}",
+                        w.name,
+                        vals.len()
+                    )));
+                }
+                Ok((w.clone(), vals))
+            })
+            .collect()
+    }
+}
+
+fn m_usize(j: &Json, key: &str) -> Result<usize> {
+    Ok(j.req_u64(key)? as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::golden;
+
+    fn manifest() -> Manifest {
+        Manifest::load_default().expect("artifacts built (make artifacts)")
+    }
+
+    #[test]
+    fn loads_all_models_and_supers() {
+        let m = manifest();
+        assert_eq!(m.models.len(), 3);
+        for name in ["mlp_small", "mlp_large", "gemmnet6"] {
+            let e = m.model(name).unwrap();
+            assert!(!e.artifacts.is_empty());
+            assert!(e.params > 0 && e.flops_per_query > 0);
+        }
+        assert_eq!(m.supers.len(), 11);
+    }
+
+    #[test]
+    fn variant_pad_up_rule() {
+        let m = manifest();
+        let e = m.model("mlp_small").unwrap();
+        assert_eq!(e.variant_for(1).unwrap().batch, 1);
+        assert_eq!(e.variant_for(3).unwrap().batch, 4);
+        assert_eq!(e.variant_for(17).unwrap().batch, 32);
+        assert!(e.variant_for(1000).is_none());
+        assert_eq!(e.max_batch(), 32);
+    }
+
+    #[test]
+    fn super_lookup() {
+        let m = manifest();
+        let s = m.super_for(32, 256, 256, 3).unwrap();
+        assert_eq!(s.problems, 4);
+        assert_eq!(s.class, "A");
+        assert!(m.super_for(32, 256, 256, 100).is_none());
+        assert!(m.super_for(999, 999, 999, 1).is_none());
+        let classes = m.super_classes();
+        assert_eq!(classes.len(), 3);
+    }
+
+    #[test]
+    fn weights_load_and_match_generator() {
+        let m = manifest();
+        let ws = m.load_weights("mlp_small").unwrap();
+        assert_eq!(ws.len(), 6);
+        let (w0, vals) = &ws[0];
+        assert_eq!(w0.name, "mlp_small.w0");
+        assert_eq!(w0.shape, vec![256, 256]);
+        // python: gen_weight seeds hash01 with fnv1a(name), scale sqrt(3/fan_in)
+        let scale = (3.0f64 / 256.0).sqrt() as f32;
+        let expect0 = golden::hash01(0, golden::fnv1a("mlp_small.w0") as u64) * scale;
+        assert!((vals[0] - expect0).abs() < 1e-6, "{} vs {expect0}", vals[0]);
+    }
+
+    #[test]
+    fn goldens_present_and_finite() {
+        let m = manifest();
+        for e in m.models.values() {
+            for a in &e.artifacts {
+                assert_eq!(a.golden.out_prefix.len(), 8);
+                assert!(a.golden.out_prefix.iter().all(|v| v.is_finite()));
+                assert!(a.golden.out_mean_abs > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn missing_dir_is_clean_error() {
+        let err = Manifest::load("/nonexistent/path").unwrap_err();
+        assert!(format!("{err}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,127 @@
+//! Bit-exact mirror of the python deterministic generators
+//! (`python/compile/model.py`: `hash01`, `fnv1a`) and golden-check helpers.
+//!
+//! The AOT manifest records, per artifact, the expected output prefix for a
+//! `hash01`-generated input. Because the generator is pure integer
+//! arithmetic, the rust runtime regenerates identical inputs and verifies
+//! the *whole* path — manifest → HLO → PJRT compile → execute — against the
+//! python reference numerics without shipping tensors.
+
+/// `hash01(idx, base)`: deterministic uniform f32 in [-1, 1).
+/// Mirrors `compile.model.hash01` exactly (tests pin shared literals).
+pub fn hash01(idx: u64, base: u64) -> f32 {
+    const KNUTH: u64 = 2654435761;
+    const MOD: u64 = 0xFFFF_FFFF;
+    let i = idx.wrapping_add(base).wrapping_add(1);
+    let mut u = i.wrapping_mul(KNUTH) & MOD;
+    u = ((u ^ (u >> 13)).wrapping_mul(0x5BD1_E995)) & MOD;
+    u ^= u >> 15;
+    (u as f64 / 2147483648.0 - 1.0) as f32
+}
+
+/// Fill a buffer with the hash01 stream starting at `base`.
+pub fn fill_hash01(out: &mut [f32], base: u64) {
+    for (i, v) in out.iter_mut().enumerate() {
+        *v = hash01(i as u64, base);
+    }
+}
+
+/// Allocate and fill.
+pub fn gen_hash01(n: usize, base: u64) -> Vec<f32> {
+    let mut v = vec![0.0; n];
+    fill_hash01(&mut v, base);
+    v
+}
+
+/// FNV-1a 32-bit (per-tensor weight seed base in python).
+pub fn fnv1a(s: &str) -> u32 {
+    let mut h: u32 = 2166136261;
+    for b in s.as_bytes() {
+        h = (h ^ *b as u32).wrapping_mul(16777619);
+    }
+    h
+}
+
+/// hash01 stream bases used for superkernel golden inputs
+/// (`compile.aot.SUPER_A_BASE` / `SUPER_B_BASE`).
+pub const SUPER_A_BASE: u64 = 0;
+/// Right-operand stream base.
+pub const SUPER_B_BASE: u64 = 1 << 20;
+
+/// Compare the first `prefix.len()` outputs and the mean|x| against a
+/// manifest golden entry. Returns the max relative error on the prefix.
+pub fn check_prefix(out: &[f32], prefix: &[f64], mean_abs: f64, tol: f64) -> Result<f64, String> {
+    if out.len() < prefix.len() {
+        return Err(format!(
+            "output too short: {} < {}",
+            out.len(),
+            prefix.len()
+        ));
+    }
+    let mut max_rel = 0.0f64;
+    for (i, (&o, &g)) in out.iter().zip(prefix.iter()).enumerate() {
+        let denom = g.abs().max(1e-3);
+        let rel = ((o as f64 - g).abs()) / denom;
+        if rel > tol {
+            return Err(format!("output[{i}] = {o} vs golden {g} (rel {rel:.2e})"));
+        }
+        max_rel = max_rel.max(rel);
+    }
+    let got_mean = out.iter().map(|v| v.abs() as f64).sum::<f64>() / out.len() as f64;
+    let mean_rel = (got_mean - mean_abs).abs() / mean_abs.max(1e-9);
+    if mean_rel > tol {
+        return Err(format!(
+            "mean|out| = {got_mean:.6} vs golden {mean_abs:.6} (rel {mean_rel:.2e})"
+        ));
+    }
+    Ok(max_rel)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash01_matches_python_literals() {
+        // pinned in python/tests/test_model.py::test_hash01_golden_values
+        let expect = [
+            0.195082441f32,
+            0.706475973,
+            -0.552727699,
+            -0.869781792,
+            -0.42700702,
+            0.493466735,
+        ];
+        for (i, e) in expect.iter().enumerate() {
+            let got = hash01(i as u64, 0);
+            assert!((got - e).abs() < 1e-6, "idx {i}: {got} vs {e}");
+        }
+        let expect_b = [-0.365425706f32, -0.783480048, -0.861492336];
+        for (i, e) in expect_b.iter().enumerate() {
+            let got = hash01(i as u64, 1 << 20);
+            assert!((got - e).abs() < 1e-6, "idx {i}: {got} vs {e}");
+        }
+    }
+
+    #[test]
+    fn fnv1a_matches_python() {
+        assert_eq!(fnv1a("mlp_small.w0"), 1396747245);
+    }
+
+    #[test]
+    fn stream_is_roughly_uniform() {
+        let v = gen_hash01(100_000, 0);
+        let mean: f64 = v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!(v.iter().all(|&x| (-1.0..1.0).contains(&x)));
+    }
+
+    #[test]
+    fn check_prefix_accepts_and_rejects() {
+        let out = [1.0f32, 2.0, 3.0];
+        assert!(check_prefix(&out, &[1.0, 2.0, 3.0], 2.0, 1e-4).is_ok());
+        assert!(check_prefix(&out, &[1.0, 2.5, 3.0], 2.0, 1e-4).is_err());
+        assert!(check_prefix(&out, &[1.0, 2.0, 3.0], 9.0, 1e-4).is_err());
+        assert!(check_prefix(&out[..2], &[1.0, 2.0, 3.0], 2.0, 1e-4).is_err());
+    }
+}

@@ -1,0 +1,23 @@
+//! Request-path runtime: load AOT artifacts, execute via PJRT, self-check
+//! numerics.
+//!
+//! Python runs once (`make artifacts`); everything here is pure rust:
+//!
+//! * [`artifact`] — `manifest.json` model + weight-blob loading;
+//! * [`golden`] — bit-exact mirror of the python `hash01`/`fnv1a`
+//!   generators, so the runtime can regenerate test inputs and verify
+//!   outputs against manifest goldens without shipping tensors;
+//! * [`pjrt`] — PJRT CPU client wrapper: HLO text → compiled executable
+//!   cache;
+//! * [`executor`] — the [`crate::compiler::jit::KernelExecutor`]
+//!   implementation over PJRT (real path) plus model-level batched
+//!   execution for the serving layer.
+
+pub mod artifact;
+pub mod executor;
+pub mod golden;
+pub mod pjrt;
+
+pub use artifact::Manifest;
+pub use executor::PjrtExecutor;
+pub use pjrt::PjrtRuntime;

@@ -1,0 +1,173 @@
+//! PJRT CPU client wrapper: HLO text → compiled executable cache → execute.
+//!
+//! The interchange format is HLO *text* (see `python/compile/aot.py`): the
+//! text parser reassigns instruction ids, avoiding the 64-bit-id proto
+//! incompatibility between jax ≥ 0.5 and xla_extension 0.5.1.
+//!
+//! One `PjrtRuntime` owns the process-wide PJRT client and a compile cache:
+//! each artifact is compiled exactly once (at first use or via
+//! [`PjrtRuntime::warmup`]) and reused across the serving loop — compile
+//! time never sits on the request path.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::{Error, Result};
+
+/// An input tensor for execution: flat f32 data + dims.
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    /// Row-major f32 data.
+    pub data: Vec<f32>,
+    /// Dimensions.
+    pub dims: Vec<i64>,
+}
+
+impl HostTensor {
+    /// New tensor (checks element count).
+    pub fn new(data: Vec<f32>, dims: Vec<i64>) -> Result<Self> {
+        let n: i64 = dims.iter().product();
+        if n as usize != data.len() {
+            return Err(Error::config(format!(
+                "tensor data {} != dims product {n}",
+                data.len()
+            )));
+        }
+        Ok(HostTensor { data, dims })
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(&self.data).reshape(&self.dims)?)
+    }
+}
+
+/// Result of one execution.
+#[derive(Debug, Clone)]
+pub struct ExecOutput {
+    /// Flattened f32 output (first tuple element).
+    pub data: Vec<f32>,
+    /// Wall-clock execution time, µs (transfer + compute + readback).
+    pub duration_us: f64,
+}
+
+/// PJRT CPU runtime with a compile cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<Self> {
+        Ok(PjrtRuntime {
+            client: xla::PjRtClient::cpu()?,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of executables compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Compile (once) an HLO-text artifact; returns compile time in µs
+    /// (0 when cached).
+    pub fn warmup(&mut self, path: &Path) -> Result<f64> {
+        let key = path.to_string_lossy().to_string();
+        if self.cache.contains_key(&key) {
+            return Ok(0.0);
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::config("non-utf8 artifact path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let dt = t0.elapsed().as_secs_f64() * 1e6;
+        self.cache.insert(key, exe);
+        Ok(dt)
+    }
+
+    /// Execute an artifact with the given inputs; unwraps the 1-tuple
+    /// output (artifacts are lowered with `return_tuple=True`).
+    pub fn execute(&mut self, path: &Path, inputs: &[HostTensor]) -> Result<ExecOutput> {
+        self.warmup(path)?;
+        let key = path.to_string_lossy().to_string();
+        let exe = self.cache.get(&key).expect("just warmed");
+        let t0 = Instant::now();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let data = out.to_vec::<f32>()?;
+        Ok(ExecOutput {
+            data,
+            duration_us: t0.elapsed().as_secs_f64() * 1e6,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::Manifest;
+    use crate::runtime::golden;
+
+    #[test]
+    fn host_tensor_validates_dims() {
+        assert!(HostTensor::new(vec![0.0; 6], vec![2, 3]).is_ok());
+        assert!(HostTensor::new(vec![0.0; 5], vec![2, 3]).is_err());
+    }
+
+    // Full PJRT round-trip: compile a real superkernel artifact, execute
+    // with hash01 inputs, verify against the python-computed golden.
+    #[test]
+    fn super_a_p2_matches_python_golden() {
+        let m = Manifest::load_default().expect("make artifacts");
+        let s = m.super_for(32, 256, 256, 2).expect("super_A_p2");
+        assert_eq!(s.problems, 2);
+        let mut rt = PjrtRuntime::cpu().unwrap();
+        let p = s.problems as usize;
+        let (mm, kk, nn) = (s.m as usize, s.k as usize, s.n as usize);
+        let a = HostTensor::new(
+            golden::gen_hash01(p * mm * kk, golden::SUPER_A_BASE),
+            vec![p as i64, mm as i64, kk as i64],
+        )
+        .unwrap();
+        let b = HostTensor::new(
+            golden::gen_hash01(p * kk * nn, golden::SUPER_B_BASE),
+            vec![p as i64, kk as i64, nn as i64],
+        )
+        .unwrap();
+        let out = rt.execute(&m.path_of(&s.file), &[a, b]).unwrap();
+        assert_eq!(out.data.len(), p * mm * nn);
+        golden::check_prefix(
+            &out.data,
+            &s.golden.out_prefix,
+            s.golden.out_mean_abs,
+            1e-3,
+        )
+        .expect("pjrt output matches python reference");
+    }
+
+    #[test]
+    fn compile_cache_hits() {
+        let m = Manifest::load_default().expect("make artifacts");
+        let s = m.super_for(32, 256, 256, 1).unwrap();
+        let mut rt = PjrtRuntime::cpu().unwrap();
+        let t1 = rt.warmup(&m.path_of(&s.file)).unwrap();
+        assert!(t1 > 0.0, "first compile takes time");
+        let t2 = rt.warmup(&m.path_of(&s.file)).unwrap();
+        assert_eq!(t2, 0.0, "second compile is cached");
+        assert_eq!(rt.compiled_count(), 1);
+    }
+}

@@ -1,0 +1,75 @@
+//! Admission control: bounded per-model queues with a drop-oldest-deadline
+//! policy under overload (backpressure toward the client, §3's
+//! peak-provisioning discussion).
+
+/// Admission decision for an incoming request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admit {
+    /// Enqueue.
+    Accept,
+    /// Reject (queue full and request is not more urgent than the tail).
+    Reject,
+}
+
+/// Bounded-queue admission controller.
+#[derive(Debug, Clone)]
+pub struct Admission {
+    /// Max queued requests per model.
+    pub max_queue: usize,
+}
+
+impl Default for Admission {
+    fn default() -> Self {
+        Admission { max_queue: 256 }
+    }
+}
+
+impl Admission {
+    /// New controller.
+    pub fn new(max_queue: usize) -> Self {
+        Admission { max_queue }
+    }
+
+    /// Decide for a queue currently holding `depth` requests. A request
+    /// that would still meet its deadline after the estimated queue drain
+    /// (`drain_us`) is accepted while there is room; hopeless requests
+    /// (deadline already unreachable) are rejected eagerly so they don't
+    /// burn device time (§5.2 reprioritization).
+    pub fn decide(&self, depth: usize, slack_after_drain_us: f64) -> Admit {
+        if depth >= self.max_queue {
+            return Admit::Reject;
+        }
+        if slack_after_drain_us < 0.0 && depth > 0 {
+            // already doomed and there is real work queued: shed it
+            return Admit::Reject;
+        }
+        Admit::Accept
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accepts_with_room_and_slack() {
+        let a = Admission::new(4);
+        assert_eq!(a.decide(0, 10_000.0), Admit::Accept);
+        assert_eq!(a.decide(3, 0.0), Admit::Accept);
+    }
+
+    #[test]
+    fn rejects_when_full() {
+        let a = Admission::new(4);
+        assert_eq!(a.decide(4, 1e9), Admit::Reject);
+    }
+
+    #[test]
+    fn sheds_doomed_requests_under_load() {
+        let a = Admission::new(4);
+        assert_eq!(a.decide(2, -1.0), Admit::Reject);
+        // but a doomed request into an empty queue still runs (nothing to
+        // protect; client gets a late answer rather than none)
+        assert_eq!(a.decide(0, -1.0), Admit::Accept);
+    }
+}

@@ -1,0 +1,216 @@
+//! Serving metrics: per-tenant latency distributions, SLO attainment,
+//! batch occupancy and device-busy accounting.
+
+use std::collections::BTreeMap;
+
+use crate::util::stats::LatencyHist;
+
+/// Metrics for one tenant.
+#[derive(Debug, Clone, Default)]
+pub struct TenantMetrics {
+    /// Latency distribution (µs).
+    pub latency: LatencyHist,
+    /// Requests meeting their deadline.
+    pub slo_hits: u64,
+    /// Requests missing their deadline.
+    pub slo_misses: u64,
+    /// Requests dropped by admission control.
+    pub dropped: u64,
+}
+
+impl TenantMetrics {
+    /// SLO attainment in [0,1] (dropped requests count as misses).
+    pub fn attainment(&self) -> f64 {
+        let total = self.slo_hits + self.slo_misses + self.dropped;
+        if total == 0 {
+            1.0
+        } else {
+            self.slo_hits as f64 / total as f64
+        }
+    }
+
+    /// Completed request count.
+    pub fn completed(&self) -> u64 {
+        self.slo_hits + self.slo_misses
+    }
+}
+
+/// Aggregated serving metrics.
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    /// Per-tenant metrics.
+    pub tenants: BTreeMap<u32, TenantMetrics>,
+    /// Histogram of executed batch occupancy (real rows, not padding).
+    pub batch_occupancy: BTreeMap<u32, u64>,
+    /// Executed batches.
+    pub batches: u64,
+    /// Total rows executed (incl. padding).
+    pub padded_rows: u64,
+    /// Total useful rows executed.
+    pub useful_rows: u64,
+    /// Device busy time, µs.
+    pub busy_us: f64,
+    /// Wall/virtual span of the run, µs.
+    pub span_us: f64,
+}
+
+impl ServeMetrics {
+    /// Record one completed request.
+    pub fn complete(&mut self, tenant: u32, latency_us: f64, met: bool) {
+        let t = self.tenants.entry(tenant).or_default();
+        t.latency.record_us(latency_us);
+        if met {
+            t.slo_hits += 1;
+        } else {
+            t.slo_misses += 1;
+        }
+    }
+
+    /// Record a dropped request.
+    pub fn drop_request(&mut self, tenant: u32) {
+        self.tenants.entry(tenant).or_default().dropped += 1;
+    }
+
+    /// Record one executed batch (useful rows, padded variant size, µs).
+    pub fn batch(&mut self, useful: u32, padded: u32, dur_us: f64) {
+        *self.batch_occupancy.entry(useful).or_default() += 1;
+        self.batches += 1;
+        self.useful_rows += useful as u64;
+        self.padded_rows += padded as u64;
+        self.busy_us += dur_us;
+    }
+
+    /// Completed requests across tenants.
+    pub fn total_completed(&self) -> u64 {
+        self.tenants.values().map(|t| t.completed()).sum()
+    }
+
+    /// Overall SLO attainment.
+    pub fn overall_attainment(&self) -> f64 {
+        let hits: u64 = self.tenants.values().map(|t| t.slo_hits).sum();
+        let total: u64 = self
+            .tenants
+            .values()
+            .map(|t| t.slo_hits + t.slo_misses + t.dropped)
+            .sum();
+        if total == 0 {
+            1.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+
+    /// Goodput in requests/s over the span.
+    pub fn throughput(&self) -> f64 {
+        if self.span_us <= 0.0 {
+            0.0
+        } else {
+            self.total_completed() as f64 / (self.span_us / 1e6)
+        }
+    }
+
+    /// Mean executed batch occupancy.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.useful_rows as f64 / self.batches as f64
+        }
+    }
+
+    /// Padding efficiency (useful / executed rows).
+    pub fn row_efficiency(&self) -> f64 {
+        if self.padded_rows == 0 {
+            1.0
+        } else {
+            self.useful_rows as f64 / self.padded_rows as f64
+        }
+    }
+
+    /// Device duty cycle over the span.
+    pub fn duty_cycle(&self) -> f64 {
+        if self.span_us <= 0.0 {
+            0.0
+        } else {
+            (self.busy_us / self.span_us).min(1.0)
+        }
+    }
+
+    /// Human-readable report table.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "requests={} batches={} mean_occ={:.2} row_eff={:.2} duty={:.2} thpt={:.1}/s attain={:.3}\n",
+            self.total_completed(),
+            self.batches,
+            self.mean_occupancy(),
+            self.row_efficiency(),
+            self.duty_cycle(),
+            self.throughput(),
+            self.overall_attainment(),
+        ));
+        s.push_str("tenant     n     p50(ms)  p99(ms)  max(ms)  attain  drops\n");
+        for (id, t) in &self.tenants {
+            s.push_str(&format!(
+                "{:<8} {:<6} {:<8.2} {:<8.2} {:<8.2} {:<7.3} {}\n",
+                id,
+                t.completed(),
+                t.latency.quantile_us(0.5) / 1e3,
+                t.latency.quantile_us(0.99) / 1e3,
+                t.latency.max_us() / 1e3,
+                t.attainment(),
+                t.dropped,
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attainment_counts_drops_as_misses() {
+        let mut m = ServeMetrics::default();
+        m.complete(0, 1000.0, true);
+        m.complete(0, 1000.0, true);
+        m.drop_request(0);
+        let t = &m.tenants[&0];
+        assert!((t.attainment() - 2.0 / 3.0).abs() < 1e-9);
+        assert!((m.overall_attainment() - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let mut m = ServeMetrics::default();
+        m.batch(3, 4, 100.0);
+        m.batch(1, 1, 50.0);
+        assert_eq!(m.batches, 2);
+        assert_eq!(m.mean_occupancy(), 2.0);
+        assert!((m.row_efficiency() - 4.0 / 5.0).abs() < 1e-9);
+        assert_eq!(m.batch_occupancy[&3], 1);
+    }
+
+    #[test]
+    fn throughput_and_duty() {
+        let mut m = ServeMetrics::default();
+        for _ in 0..10 {
+            m.complete(1, 500.0, true);
+        }
+        m.busy_us = 400_000.0;
+        m.span_us = 1_000_000.0;
+        assert!((m.throughput() - 10.0).abs() < 1e-9);
+        assert!((m.duty_cycle() - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn render_contains_tenants() {
+        let mut m = ServeMetrics::default();
+        m.complete(7, 2_000.0, false);
+        m.span_us = 1e6;
+        let r = m.render();
+        assert!(r.contains("tenant"));
+        assert!(r.contains('7'));
+    }
+}

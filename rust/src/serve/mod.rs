@@ -1,0 +1,22 @@
+//! Multi-tenant model serving over the OoO JIT runtime.
+//!
+//! The serving layer is the *model-granularity* deployment of the paper's
+//! scheduler: requests from independent tenants are EDF-ordered, held in a
+//! bounded coalescing window, and coalesced into the smallest compiled
+//! batch variant (the model-level analogue of superkernel packing; the
+//! kernel-level path is exercised through `compiler::jit` +
+//! `runtime::executor`). Python never runs here.
+//!
+//! * [`server`] — the serving loop: virtual-paced trace replay (benches,
+//!   reproducible) and a threaded real-time mode (tenant threads → batcher
+//!   thread → executor);
+//! * [`metrics`] — per-tenant latency histograms, SLO attainment,
+//!   batch-occupancy accounting;
+//! * [`admission`] — bounded queues + drop policy (backpressure).
+
+pub mod admission;
+pub mod metrics;
+pub mod server;
+
+pub use metrics::ServeMetrics;
+pub use server::{BatchPolicy, ServeReport, Server};

@@ -1,0 +1,258 @@
+//! Declarative flag parser (no `clap` offline). Supports `--flag value`,
+//! `--flag=value`, boolean switches, defaults, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// One declared flag.
+#[derive(Debug, Clone)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_switch: bool,
+}
+
+/// Declarative CLI argument parser.
+///
+/// ```no_run
+/// # use vliw_jit::util::cli::Args;
+/// let mut args = Args::new("demo", "demo tool");
+/// args.flag("seed", "42", "rng seed");
+/// args.switch("verbose", "log more");
+/// let parsed = args.parse_from(vec!["--seed=7".into(), "--verbose".into()]).unwrap();
+/// assert_eq!(parsed.get_u64("seed").unwrap(), 7);
+/// assert!(parsed.get_bool("verbose"));
+/// ```
+#[derive(Debug, Clone)]
+pub struct Args {
+    prog: String,
+    about: String,
+    specs: Vec<FlagSpec>,
+}
+
+/// Parsed flag values.
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+    /// positional (non-flag) arguments, in order
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// New parser for a program.
+    pub fn new(prog: &str, about: &str) -> Self {
+        Self {
+            prog: prog.to_string(),
+            about: about.to_string(),
+            specs: Vec::new(),
+        }
+    }
+
+    /// Declare a valued flag with a default.
+    pub fn flag(&mut self, name: &str, default: &str, help: &str) -> &mut Self {
+        self.specs.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_switch: false,
+        });
+        self
+    }
+
+    /// Declare a boolean switch (default false).
+    pub fn switch(&mut self, name: &str, help: &str) -> &mut Self {
+        self.specs.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_switch: true,
+        });
+        self
+    }
+
+    /// Render `--help` text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nFLAGS:\n", self.prog, self.about);
+        for f in &self.specs {
+            let d = f
+                .default
+                .as_ref()
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{:<22} {}{}\n", f.name, f.help, d));
+        }
+        s.push_str("  --help                   print this help\n");
+        s
+    }
+
+    /// Parse `std::env::args()` (exits on --help).
+    pub fn parse(&self) -> Result<Parsed> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        if argv.iter().any(|a| a == "--help" || a == "-h") {
+            print!("{}", self.help());
+            std::process::exit(0);
+        }
+        self.parse_from(argv)
+    }
+
+    /// Parse an explicit argv (testable).
+    pub fn parse_from(&self, argv: Vec<String>) -> Result<Parsed> {
+        let mut p = Parsed {
+            values: BTreeMap::new(),
+            switches: BTreeMap::new(),
+            positional: Vec::new(),
+        };
+        for f in &self.specs {
+            if let Some(d) = &f.default {
+                p.values.insert(f.name.clone(), d.clone());
+            }
+            if f.is_switch {
+                p.switches.insert(f.name.clone(), false);
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| Error::config(format!("unknown flag --{name}")))?;
+                if spec.is_switch {
+                    if inline.is_some() {
+                        return Err(Error::config(format!("switch --{name} takes no value")));
+                    }
+                    p.switches.insert(name, true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| Error::config(format!("--{name} needs a value")))?,
+                    };
+                    p.values.insert(name, v);
+                }
+            } else {
+                p.positional.push(a);
+            }
+        }
+        Ok(p)
+    }
+}
+
+impl Parsed {
+    /// String flag value.
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag '{name}' not declared"))
+    }
+
+    /// u64 flag value.
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        self.get(name)
+            .parse()
+            .map_err(|_| Error::config(format!("--{name} must be a u64, got '{}'", self.get(name))))
+    }
+
+    /// usize flag value.
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        Ok(self.get_u64(name)? as usize)
+    }
+
+    /// f64 flag value.
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        self.get(name)
+            .parse()
+            .map_err(|_| Error::config(format!("--{name} must be a number, got '{}'", self.get(name))))
+    }
+
+    /// Switch state.
+    pub fn get_bool(&self, name: &str) -> bool {
+        *self
+            .switches
+            .get(name)
+            .unwrap_or_else(|| panic!("switch '{name}' not declared"))
+    }
+
+    /// Comma-separated list flag.
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        let v = self.get(name);
+        if v.is_empty() {
+            Vec::new()
+        } else {
+            v.split(',').map(|s| s.trim().to_string()).collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args() -> Args {
+        let mut a = Args::new("t", "test");
+        a.flag("seed", "42", "rng seed")
+            .flag("models", "", "model list")
+            .flag("rate", "1.5", "req/s")
+            .switch("verbose", "chatty");
+        a
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = args().parse_from(vec![]).unwrap();
+        assert_eq!(p.get_u64("seed").unwrap(), 42);
+        assert!((p.get_f64("rate").unwrap() - 1.5).abs() < 1e-12);
+        assert!(!p.get_bool("verbose"));
+        assert!(p.get_list("models").is_empty());
+    }
+
+    #[test]
+    fn equals_and_space_forms() {
+        let p = args()
+            .parse_from(vec!["--seed=7".into(), "--rate".into(), "2.0".into()])
+            .unwrap();
+        assert_eq!(p.get_u64("seed").unwrap(), 7);
+        assert_eq!(p.get_f64("rate").unwrap(), 2.0);
+    }
+
+    #[test]
+    fn switches_and_positional() {
+        let p = args()
+            .parse_from(vec!["pos1".into(), "--verbose".into(), "pos2".into()])
+            .unwrap();
+        assert!(p.get_bool("verbose"));
+        assert_eq!(p.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let p = args()
+            .parse_from(vec!["--models=a, b,c".into()])
+            .unwrap();
+        assert_eq!(p.get_list("models"), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(args().parse_from(vec!["--nope".into()]).is_err());
+        assert!(args().parse_from(vec!["--seed".into()]).is_err());
+        assert!(args().parse_from(vec!["--verbose=1".into()]).is_err());
+        let p = args().parse_from(vec!["--seed=abc".into()]).unwrap();
+        assert!(p.get_u64("seed").is_err());
+    }
+
+    #[test]
+    fn help_mentions_flags() {
+        let h = args().help();
+        assert!(h.contains("--seed") && h.contains("default: 42"));
+    }
+}

@@ -1,0 +1,110 @@
+//! Leveled stderr logger (no `log`/`env_logger` needed on the hot path —
+//! macro calls compile to a branch on a relaxed atomic).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log verbosity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    /// Errors only.
+    Error = 0,
+    /// + warnings.
+    Warn = 1,
+    /// + high-level lifecycle events (default).
+    Info = 2,
+    /// + per-batch scheduling decisions.
+    Debug = 3,
+    /// + per-kernel detail.
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Set the global level.
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Set from a string ("error".."trace"); unknown values keep the default.
+pub fn set_level_str(s: &str) {
+    let l = match s {
+        "error" => Level::Error,
+        "warn" => Level::Warn,
+        "info" => Level::Info,
+        "debug" => Level::Debug,
+        "trace" => Level::Trace,
+        _ => return,
+    };
+    set_level(l);
+}
+
+/// Is this level enabled?
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Internal: emit one line.
+pub fn emit(l: Level, args: std::fmt::Arguments<'_>) {
+    let tag = match l {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    eprintln!("[{tag}] {args}");
+}
+
+/// Log at Info.
+#[macro_export]
+macro_rules! log_info {
+    ($($t:tt)*) => {
+        if $crate::util::logging::enabled($crate::util::logging::Level::Info) {
+            $crate::util::logging::emit($crate::util::logging::Level::Info, format_args!($($t)*));
+        }
+    };
+}
+
+/// Log at Warn.
+#[macro_export]
+macro_rules! log_warn {
+    ($($t:tt)*) => {
+        if $crate::util::logging::enabled($crate::util::logging::Level::Warn) {
+            $crate::util::logging::emit($crate::util::logging::Level::Warn, format_args!($($t)*));
+        }
+    };
+}
+
+/// Log at Debug.
+#[macro_export]
+macro_rules! log_debug {
+    ($($t:tt)*) => {
+        if $crate::util::logging::enabled($crate::util::logging::Level::Debug) {
+            $crate::util::logging::emit($crate::util::logging::Level::Debug, format_args!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info); // restore default for other tests
+    }
+
+    #[test]
+    fn level_from_str() {
+        set_level_str("trace");
+        assert!(enabled(Level::Trace));
+        set_level_str("not-a-level"); // no-op
+        assert!(enabled(Level::Trace));
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,36 @@
+//! In-repo substrates (the offline crate cache has no rand/serde/clap/
+//! tokio/criterion, so the pieces a serving system needs are built here).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+/// Seconds → microseconds as u64 (saturating; sim time is µs everywhere).
+pub fn secs_to_us(s: f64) -> u64 {
+    if s <= 0.0 {
+        0
+    } else {
+        (s * 1e6).round() as u64
+    }
+}
+
+/// Microseconds → milliseconds as f64 (reporting convenience).
+pub fn us_to_ms(us: u64) -> f64 {
+    us as f64 / 1e3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_conversions_round_trip() {
+        assert_eq!(secs_to_us(1.5), 1_500_000);
+        assert_eq!(secs_to_us(0.0), 0);
+        assert_eq!(secs_to_us(-3.0), 0);
+        assert!((us_to_ms(1500) - 1.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,343 @@
+//! Streaming statistics, exact quantiles, and fixed-bucket latency
+//! histograms — the measurement substrate for SLO attainment (Fig. 5),
+//! latency distributions (Fig. 4) and the bench harness.
+
+/// Streaming mean/variance (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Streaming {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Streaming {
+    /// Empty accumulator.
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Add one observation.
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Mean (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    /// Population variance.
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Population standard deviation.
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    /// Coefficient of variation (std/mean) — the Fig. 5 "unpredictability"
+    /// metric.
+    pub fn cov(&self) -> f64 {
+        if self.mean().abs() < 1e-12 {
+            0.0
+        } else {
+            self.std() / self.mean()
+        }
+    }
+
+    /// Minimum observation (+inf when empty).
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Maximum observation (-inf when empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Exact quantile estimator: stores samples, sorts on query. Fine for the
+/// ≤10^6-sample runs the benches produce; the serving path uses [`LatencyHist`].
+#[derive(Debug, Clone, Default)]
+pub struct Quantiles {
+    xs: Vec<f64>,
+}
+
+impl Quantiles {
+    /// Empty estimator.
+    pub fn new() -> Self {
+        Self { xs: Vec::new() }
+    }
+
+    /// Add one observation.
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// q-quantile (nearest-rank, q in [0,1]); 0 when empty.
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        self.xs
+            .sort_unstable_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
+        let idx = ((self.xs.len() as f64 - 1.0) * q.clamp(0.0, 1.0)).round() as usize;
+        self.xs[idx]
+    }
+
+    /// Convenience p50/p99 pair.
+    pub fn p50_p99(&mut self) -> (f64, f64) {
+        (self.quantile(0.50), self.quantile(0.99))
+    }
+
+    /// Mean of all observations.
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            0.0
+        } else {
+            self.xs.iter().sum::<f64>() / self.xs.len() as f64
+        }
+    }
+}
+
+/// Log-bucketed latency histogram (HdrHistogram-lite): fixed memory,
+/// ~4% relative error, used on the serving hot path where storing every
+/// sample would allocate.
+#[derive(Debug, Clone)]
+pub struct LatencyHist {
+    /// bucket i covers [lo * g^i, lo * g^(i+1))
+    counts: Vec<u64>,
+    lo_us: f64,
+    growth: f64,
+    total: u64,
+    sum_us: f64,
+    max_us: f64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    /// Buckets spanning 1µs .. ~100s with 4% growth.
+    pub fn new() -> Self {
+        Self::with_range(1.0, 1.04, 480)
+    }
+
+    /// Custom range: `lo_us` first bucket edge, geometric `growth`, `n` buckets.
+    pub fn with_range(lo_us: f64, growth: f64, n: usize) -> Self {
+        Self {
+            counts: vec![0; n],
+            lo_us,
+            growth,
+            total: 0,
+            sum_us: 0.0,
+            max_us: 0.0,
+        }
+    }
+
+    fn bucket(&self, us: f64) -> usize {
+        if us < self.lo_us {
+            return 0;
+        }
+        let b = (us / self.lo_us).ln() / self.growth.ln();
+        (b as usize).min(self.counts.len() - 1)
+    }
+
+    /// Record one latency in microseconds.
+    pub fn record_us(&mut self, us: f64) {
+        let b = self.bucket(us);
+        self.counts[b] += 1;
+        self.total += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Total recorded samples.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Mean latency (µs).
+    pub fn mean_us(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_us / self.total as f64
+        }
+    }
+
+    /// Max latency (µs).
+    pub fn max_us(&self) -> f64 {
+        self.max_us
+    }
+
+    /// Approximate quantile (µs): bucket upper edge at the target rank.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                return self.lo_us * self.growth.powi(i as i32 + 1);
+            }
+        }
+        self.max_us
+    }
+
+    /// Fraction of samples at or below `limit_us` — SLO attainment.
+    pub fn frac_leq(&self, limit_us: f64) -> f64 {
+        if self.total == 0 {
+            return 1.0;
+        }
+        let lim_bucket = self.bucket(limit_us);
+        let acc: u64 = self.counts[..=lim_bucket].iter().sum();
+        acc as f64 / self.total as f64
+    }
+
+    /// Merge another histogram (same geometry) into this one.
+    pub fn merge(&mut self, other: &LatencyHist) {
+        assert_eq!(self.counts.len(), other.counts.len(), "geometry mismatch");
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+}
+
+/// Geometric mean of a slice (the paper reports geo-mean speedups, Fig. 6).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn streaming_moments() {
+        let mut s = Streaming::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std() - 2.0).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn streaming_cov_zero_mean_guard() {
+        let mut s = Streaming::new();
+        s.push(0.0);
+        s.push(0.0);
+        assert_eq!(s.cov(), 0.0);
+    }
+
+    #[test]
+    fn quantiles_nearest_rank() {
+        let mut q = Quantiles::new();
+        for i in 1..=100 {
+            q.push(i as f64);
+        }
+        assert_eq!(q.quantile(0.0), 1.0);
+        assert_eq!(q.quantile(1.0), 100.0);
+        assert!((q.quantile(0.5) - 50.0).abs() <= 1.0);
+        assert!((q.quantile(0.99) - 99.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn quantiles_empty_is_zero() {
+        let mut q = Quantiles::new();
+        assert_eq!(q.quantile(0.5), 0.0);
+        assert_eq!(q.mean(), 0.0);
+    }
+
+    #[test]
+    fn hist_quantile_within_bucket_error() {
+        let mut h = LatencyHist::new();
+        for i in 1..=10_000u64 {
+            h.record_us(i as f64);
+        }
+        let p50 = h.quantile_us(0.5);
+        assert!((p50 - 5_000.0).abs() / 5_000.0 < 0.08, "p50={p50}");
+        let p99 = h.quantile_us(0.99);
+        assert!((p99 - 9_900.0).abs() / 9_900.0 < 0.08, "p99={p99}");
+        assert!((h.mean_us() - 5_000.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn hist_slo_attainment() {
+        let mut h = LatencyHist::new();
+        for _ in 0..90 {
+            h.record_us(1_000.0);
+        }
+        for _ in 0..10 {
+            h.record_us(100_000.0);
+        }
+        let att = h.frac_leq(10_000.0);
+        assert!((att - 0.9).abs() < 0.02, "att={att}");
+    }
+
+    #[test]
+    fn hist_merge_adds_counts() {
+        let mut a = LatencyHist::new();
+        let mut b = LatencyHist::new();
+        a.record_us(10.0);
+        b.record_us(20.0);
+        b.record_us(30.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.max_us(), 30.0);
+    }
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 100.0]) - 10.0).abs() < 1e-9);
+        assert!((geomean(&[7.71]) - 7.71).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+}

@@ -1,0 +1,163 @@
+//! Arrival processes: Poisson, MMPP (bursty), deterministic.
+//!
+//! §3: "requests arrive stochastically, occasional bursts in request volume
+//! require overprovisioning" — the MMPP process reproduces exactly that
+//! burstiness for the SLO-attainment experiments.
+
+use crate::util::rng::Rng;
+
+/// An arrival process: yields successive inter-arrival gaps in µs.
+pub trait Arrivals {
+    /// Next inter-arrival gap, µs.
+    fn next_gap_us(&mut self) -> f64;
+
+    /// Generate absolute arrival times for `n` requests starting at t=0.
+    fn times_us(&mut self, n: usize) -> Vec<f64> {
+        let mut t = 0.0;
+        (0..n)
+            .map(|_| {
+                t += self.next_gap_us();
+                t
+            })
+            .collect()
+    }
+}
+
+/// Poisson arrivals at a fixed rate (requests/s).
+#[derive(Debug, Clone)]
+pub struct Poisson {
+    rate_per_us: f64,
+    rng: Rng,
+}
+
+impl Poisson {
+    /// `rate` in requests per second.
+    pub fn new(rate: f64, seed: u64) -> Self {
+        assert!(rate > 0.0, "rate must be positive");
+        Self {
+            rate_per_us: rate / 1e6,
+            rng: Rng::new(seed),
+        }
+    }
+}
+
+impl Arrivals for Poisson {
+    fn next_gap_us(&mut self) -> f64 {
+        self.rng.exp(self.rate_per_us)
+    }
+}
+
+/// Markov-modulated Poisson process: two states (calm, burst) with
+/// different rates; geometric dwell times. Models diurnal/bursty serving
+/// traffic.
+#[derive(Debug, Clone)]
+pub struct Mmpp {
+    calm_rate_us: f64,
+    burst_rate_us: f64,
+    /// probability of switching state after each arrival
+    p_switch: f64,
+    in_burst: bool,
+    rng: Rng,
+}
+
+impl Mmpp {
+    /// `calm_rate`/`burst_rate` in requests per second; `p_switch` the
+    /// per-arrival state-flip probability.
+    pub fn new(calm_rate: f64, burst_rate: f64, p_switch: f64, seed: u64) -> Self {
+        assert!(calm_rate > 0.0 && burst_rate > 0.0);
+        Self {
+            calm_rate_us: calm_rate / 1e6,
+            burst_rate_us: burst_rate / 1e6,
+            p_switch: p_switch.clamp(0.0, 1.0),
+            in_burst: false,
+            rng: Rng::new(seed),
+        }
+    }
+}
+
+impl Arrivals for Mmpp {
+    fn next_gap_us(&mut self) -> f64 {
+        if self.rng.f64() < self.p_switch {
+            self.in_burst = !self.in_burst;
+        }
+        let r = if self.in_burst {
+            self.burst_rate_us
+        } else {
+            self.calm_rate_us
+        };
+        self.rng.exp(r)
+    }
+}
+
+/// Deterministic (closed-loop / fixed-rate) arrivals.
+#[derive(Debug, Clone)]
+pub struct Uniform {
+    gap_us: f64,
+}
+
+impl Uniform {
+    /// `rate` in requests per second.
+    pub fn new(rate: f64) -> Self {
+        assert!(rate > 0.0);
+        Self { gap_us: 1e6 / rate }
+    }
+}
+
+impl Arrivals for Uniform {
+    fn next_gap_us(&mut self) -> f64 {
+        self.gap_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean_rate() {
+        let mut p = Poisson::new(1000.0, 1); // 1000 req/s => mean gap 1000µs
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| p.next_gap_us()).sum::<f64>() / n as f64;
+        assert!((mean - 1000.0).abs() < 20.0, "mean={mean}");
+    }
+
+    #[test]
+    fn poisson_deterministic_by_seed() {
+        let mut a = Poisson::new(10.0, 7);
+        let mut b = Poisson::new(10.0, 7);
+        for _ in 0..100 {
+            assert_eq!(a.next_gap_us(), b.next_gap_us());
+        }
+    }
+
+    #[test]
+    fn times_are_monotone() {
+        let mut p = Poisson::new(100.0, 3);
+        let ts = p.times_us(1000);
+        assert!(ts.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn mmpp_is_burstier_than_poisson() {
+        // squared coefficient of variation of inter-arrivals: Poisson = 1,
+        // MMPP > 1
+        let cv2 = |gaps: &[f64]| {
+            let m = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let v = gaps.iter().map(|g| (g - m) * (g - m)).sum::<f64>() / gaps.len() as f64;
+            v / (m * m)
+        };
+        let mut p = Poisson::new(100.0, 5);
+        let mut mm = Mmpp::new(20.0, 500.0, 0.02, 5);
+        let gp: Vec<f64> = (0..30_000).map(|_| p.next_gap_us()).collect();
+        let gm: Vec<f64> = (0..30_000).map(|_| mm.next_gap_us()).collect();
+        assert!((cv2(&gp) - 1.0).abs() < 0.15, "poisson cv2={}", cv2(&gp));
+        assert!(cv2(&gm) > 1.5, "mmpp cv2={}", cv2(&gm));
+    }
+
+    #[test]
+    fn uniform_exact() {
+        let mut u = Uniform::new(200.0);
+        assert_eq!(u.next_gap_us(), 5000.0);
+        assert_eq!(u.times_us(3), vec![5000.0, 10000.0, 15000.0]);
+    }
+}

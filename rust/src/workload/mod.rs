@@ -1,0 +1,9 @@
+//! Workload generation: arrival processes, tenant specifications and
+//! request traces — the synthetic stand-in for production inference streams
+//! (the paper's own evaluation uses synthetic replicas, §4).
+
+pub mod arrivals;
+pub mod trace;
+
+pub use arrivals::{Arrivals, Mmpp, Poisson};
+pub use trace::{Request, TenantSpec, Trace};

@@ -1,0 +1,237 @@
+//! Request traces and tenant specifications.
+//!
+//! A *tenant* is one stream of execution in the paper's terminology: a
+//! model, a latency SLO, and an arrival process. A *trace* merges all
+//! tenants' requests into one time-ordered stream for replay against the
+//! JIT or the baselines.
+
+use crate::util::rng::Rng;
+use crate::workload::arrivals::{Arrivals, Mmpp, Poisson, Uniform};
+
+/// Arrival process choice for a tenant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalKind {
+    /// Poisson at `rate` req/s.
+    Poisson,
+    /// Bursty MMPP (calm = rate, burst = 10×rate, p_switch = 2%).
+    Bursty,
+    /// Fixed-gap arrivals.
+    Uniform,
+}
+
+/// One tenant (stream of execution).
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    /// Tenant id (stream id).
+    pub id: u32,
+    /// Model served for this tenant (manifest model name or zoo name).
+    pub model: String,
+    /// Latency SLO, µs (deadline = arrival + slo).
+    pub slo_us: u64,
+    /// Mean request rate, req/s.
+    pub rate: f64,
+    /// Arrival process.
+    pub kind: ArrivalKind,
+}
+
+impl TenantSpec {
+    /// Convenience constructor.
+    pub fn new(id: u32, model: &str, slo_us: u64, rate: f64, kind: ArrivalKind) -> Self {
+        Self {
+            id,
+            model: model.to_string(),
+            slo_us,
+            rate,
+            kind,
+        }
+    }
+}
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Globally unique id.
+    pub id: u64,
+    /// Issuing tenant.
+    pub tenant: u32,
+    /// Model name.
+    pub model: String,
+    /// Arrival time, µs.
+    pub arrival_us: f64,
+    /// Absolute deadline, µs.
+    pub deadline_us: f64,
+}
+
+impl Request {
+    /// Remaining slack at time `now`, µs (negative = already late).
+    pub fn slack_us(&self, now: f64) -> f64 {
+        self.deadline_us - now
+    }
+}
+
+/// A merged, time-ordered request trace.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    /// Requests sorted by arrival time.
+    pub requests: Vec<Request>,
+    /// The tenants that produced it.
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl Trace {
+    /// Generate `per_tenant` requests from each tenant, merge and sort.
+    pub fn generate(tenants: &[TenantSpec], per_tenant: usize, seed: u64) -> Trace {
+        let mut requests = Vec::with_capacity(tenants.len() * per_tenant);
+        let mut id = 0u64;
+        for t in tenants {
+            let tseed = Rng::new(seed ^ (t.id as u64).wrapping_mul(0x9E3779B97F4A7C15)).next_u64();
+            let times = match t.kind {
+                ArrivalKind::Poisson => Poisson::new(t.rate, tseed).times_us(per_tenant),
+                ArrivalKind::Bursty => {
+                    Mmpp::new(t.rate, t.rate * 10.0, 0.02, tseed).times_us(per_tenant)
+                }
+                ArrivalKind::Uniform => Uniform::new(t.rate).times_us(per_tenant),
+            };
+            for at in times {
+                requests.push(Request {
+                    id,
+                    tenant: t.id,
+                    model: t.model.clone(),
+                    arrival_us: at,
+                    deadline_us: at + t.slo_us as f64,
+                });
+                id += 1;
+            }
+        }
+        requests.sort_by(|a, b| a.arrival_us.partial_cmp(&b.arrival_us).unwrap());
+        // re-number in arrival order so ids are monotone in time
+        for (i, r) in requests.iter_mut().enumerate() {
+            r.id = i as u64;
+        }
+        Trace {
+            requests,
+            tenants: tenants.to_vec(),
+        }
+    }
+
+    /// Duration spanned by the trace, µs.
+    pub fn span_us(&self) -> f64 {
+        self.requests.last().map(|r| r.arrival_us).unwrap_or(0.0)
+    }
+
+    /// Aggregate offered load, req/s.
+    pub fn offered_load(&self) -> f64 {
+        if self.span_us() <= 0.0 {
+            return 0.0;
+        }
+        self.requests.len() as f64 / (self.span_us() / 1e6)
+    }
+
+    /// Requests of one tenant.
+    pub fn of_tenant(&self, id: u32) -> impl Iterator<Item = &Request> {
+        self.requests.iter().filter(move |r| r.tenant == id)
+    }
+}
+
+/// A standard multi-tenant setup used by examples/benches: `n` tenants with
+/// mixed SLOs (tight 25 ms, medium 100 ms, relaxed 500 ms) round-robin over
+/// the given models.
+pub fn mixed_tenants(n: u32, models: &[&str], rate: f64) -> Vec<TenantSpec> {
+    let slos = [25_000u64, 100_000, 500_000];
+    (0..n)
+        .map(|i| {
+            TenantSpec::new(
+                i,
+                models[i as usize % models.len()],
+                slos[i as usize % slos.len()],
+                rate,
+                if i % 4 == 3 {
+                    ArrivalKind::Bursty
+                } else {
+                    ArrivalKind::Poisson
+                },
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tenants() -> Vec<TenantSpec> {
+        vec![
+            TenantSpec::new(0, "mlp_small", 25_000, 100.0, ArrivalKind::Poisson),
+            TenantSpec::new(1, "gemmnet6", 100_000, 50.0, ArrivalKind::Bursty),
+            TenantSpec::new(2, "mlp_large", 500_000, 20.0, ArrivalKind::Uniform),
+        ]
+    }
+
+    #[test]
+    fn trace_sorted_and_complete() {
+        let t = Trace::generate(&tenants(), 200, 42);
+        assert_eq!(t.requests.len(), 600);
+        assert!(t
+            .requests
+            .windows(2)
+            .all(|w| w[0].arrival_us <= w[1].arrival_us));
+        // ids monotone
+        assert!(t.requests.windows(2).all(|w| w[0].id < w[1].id));
+        for id in 0..3 {
+            assert_eq!(t.of_tenant(id).count(), 200);
+        }
+    }
+
+    #[test]
+    fn deadlines_encode_slo() {
+        let t = Trace::generate(&tenants(), 50, 1);
+        for r in t.of_tenant(0) {
+            assert!((r.deadline_us - r.arrival_us - 25_000.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_tenant_independent() {
+        let a = Trace::generate(&tenants(), 100, 9);
+        let b = Trace::generate(&tenants(), 100, 9);
+        assert_eq!(a.requests.len(), b.requests.len());
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.arrival_us, y.arrival_us);
+            assert_eq!(x.tenant, y.tenant);
+        }
+        // different seed -> different trace
+        let c = Trace::generate(&tenants(), 100, 10);
+        assert!(a
+            .requests
+            .iter()
+            .zip(&c.requests)
+            .any(|(x, y)| x.arrival_us != y.arrival_us));
+    }
+
+    #[test]
+    fn slack_sign() {
+        let t = Trace::generate(&tenants(), 10, 2);
+        let r = &t.requests[0];
+        assert!(r.slack_us(r.arrival_us) > 0.0);
+        assert!(r.slack_us(r.deadline_us + 1.0) < 0.0);
+    }
+
+    #[test]
+    fn mixed_tenants_cycle_models_and_slos() {
+        let ts = mixed_tenants(10, &["a", "b"], 50.0);
+        assert_eq!(ts.len(), 10);
+        assert_eq!(ts[0].model, "a");
+        assert_eq!(ts[1].model, "b");
+        assert_eq!(ts[0].slo_us, 25_000);
+        assert_eq!(ts[1].slo_us, 100_000);
+        assert_eq!(ts[3].kind, ArrivalKind::Bursty);
+    }
+
+    #[test]
+    fn offered_load_close_to_nominal() {
+        let ts = vec![TenantSpec::new(0, "m", 1_000_000, 200.0, ArrivalKind::Poisson)];
+        let t = Trace::generate(&ts, 5_000, 3);
+        let load = t.offered_load();
+        assert!((load - 200.0).abs() < 15.0, "load={load}");
+    }
+}

@@ -1,0 +1,171 @@
+//! Integration tests across the full stack: manifest → PJRT → JIT →
+//! serving, on the real compiled artifacts (requires `make artifacts`).
+
+use vliw_jit::compiler::ir::{DispatchRequest, StreamId};
+use vliw_jit::compiler::jit::{JitCompiler, JitConfig};
+use vliw_jit::gpu::kernel::KernelDesc;
+use vliw_jit::runtime::{Manifest, PjrtExecutor};
+use vliw_jit::serve::{BatchPolicy, Server};
+use vliw_jit::workload::trace::{ArrivalKind, TenantSpec, Trace};
+
+fn executor() -> PjrtExecutor {
+    PjrtExecutor::from_default_artifacts().expect("make artifacts first")
+}
+
+#[test]
+fn every_artifact_golden_checks() {
+    // The strongest numeric statement in the repo: every compiled model
+    // variant and every superkernel matches the python jnp reference.
+    let mut ex = executor();
+    let models: Vec<(String, Vec<u32>)> = ex
+        .manifest()
+        .models
+        .values()
+        .map(|e| (e.name.clone(), e.artifacts.iter().map(|a| a.batch).collect()))
+        .collect();
+    for (model, batches) in models {
+        for b in batches {
+            let err = ex
+                .golden_check_model(&model, b)
+                .unwrap_or_else(|e| panic!("{model} b{b}: {e}"));
+            assert!(err < 2e-3, "{model} b{b}: rel err {err}");
+        }
+    }
+    let supers = ex.manifest().supers.clone();
+    for s in supers {
+        let err = ex
+            .golden_check_super(&s)
+            .unwrap_or_else(|e| panic!("super_{}_p{}: {e}", s.class, s.problems));
+        assert!(err < 1e-3, "super_{}_p{}: {err}", s.class, s.problems);
+    }
+}
+
+#[test]
+fn jit_coalesces_mixed_classes_on_real_artifacts() {
+    // streams issue a mix of class-A and class-B shapes; the JIT must form
+    // one superkernel per class and execute both on real artifacts
+    let mut jit = JitCompiler::new(JitConfig::default(), executor());
+    let mut ops = Vec::new();
+    for s in 0..3u32 {
+        ops.push((
+            0.0,
+            DispatchRequest::new(StreamId(s), KernelDesc::gemm(32, 256, 256), 1e7),
+        ));
+    }
+    for s in 3..6u32 {
+        ops.push((
+            0.0,
+            DispatchRequest::new(StreamId(s), KernelDesc::gemm(32, 512, 512), 1e7),
+        ));
+    }
+    let done = jit.run_trace(ops);
+    assert_eq!(done.len(), 6);
+    assert_eq!(jit.stats.launches, 2, "one superkernel per shape class");
+    assert_eq!(jit.executor().executions, 2);
+    assert!(done.iter().all(|c| c.pack_size == 3));
+    assert_eq!(jit.stats.slo_attainment(), 1.0);
+}
+
+#[test]
+fn jit_respects_slo_priority_on_real_artifacts() {
+    let mut jit = JitCompiler::new(JitConfig::default(), executor());
+    let done = jit.run_trace(vec![
+        (
+            0.0,
+            DispatchRequest::new(StreamId(0), KernelDesc::gemm(64, 1024, 1024), 1e8)
+                .with_tag(1),
+        ),
+        (
+            0.0,
+            DispatchRequest::new(StreamId(1), KernelDesc::gemm(32, 256, 256), 40_000.0)
+                .with_tag(2),
+        ),
+    ]);
+    let tight = done.iter().find(|c| c.op.tag == 2).unwrap();
+    let big = done.iter().find(|c| c.op.tag == 1).unwrap();
+    assert!(tight.issue_us <= big.issue_us, "EDF must win");
+    assert!(tight.met_deadline);
+}
+
+#[test]
+fn serve_replay_accounts_every_request() {
+    let tenants = vec![
+        TenantSpec::new(0, "mlp_small", 50_000, 300.0, ArrivalKind::Poisson),
+        TenantSpec::new(1, "mlp_small", 200_000, 200.0, ArrivalKind::Bursty),
+        TenantSpec::new(2, "gemmnet6", 200_000, 100.0, ArrivalKind::Poisson),
+    ];
+    let trace = Trace::generate(&tenants, 30, 7);
+    let mut server = Server::new(executor(), BatchPolicy::coalescing());
+    let report = server.replay(&trace);
+    let drops: u64 = report.metrics.tenants.values().map(|t| t.dropped).sum();
+    assert_eq!(
+        report.metrics.total_completed() + drops,
+        90,
+        "conservation: every request completes or is dropped"
+    );
+    assert!(report.metrics.batches > 0);
+    assert!(report.metrics.mean_occupancy() >= 1.0);
+    // batching must actually happen under concurrent load
+    assert!(
+        report.metrics.mean_occupancy() > 1.2,
+        "occupancy {}",
+        report.metrics.mean_occupancy()
+    );
+}
+
+#[test]
+fn serve_fifo_vs_coalescing_device_time() {
+    let tenants = vec![
+        TenantSpec::new(0, "mlp_small", 1_000_000, 400.0, ArrivalKind::Poisson),
+        TenantSpec::new(1, "mlp_small", 1_000_000, 400.0, ArrivalKind::Poisson),
+    ];
+    let trace = Trace::generate(&tenants, 40, 3);
+    let mut coal = Server::new(executor(), BatchPolicy::coalescing());
+    let rc = coal.replay(&trace);
+    let mut fifo = Server::new(executor(), BatchPolicy::NoBatching);
+    let rf = fifo.replay(&trace);
+    assert!(
+        rc.metrics.busy_us < rf.metrics.busy_us,
+        "coalescing {} µs must use less device time than fifo {} µs",
+        rc.metrics.busy_us,
+        rf.metrics.busy_us
+    );
+}
+
+#[test]
+fn manifest_round_trips_through_json_writer() {
+    // parse → serialize → parse: structural identity
+    let m = Manifest::load_default().expect("artifacts");
+    let text = std::fs::read_to_string(m.dir.join("manifest.json")).unwrap();
+    let j = vliw_jit::util::json::Json::parse(&text).unwrap();
+    let again = vliw_jit::util::json::Json::parse(&j.to_string_compact()).unwrap();
+    assert_eq!(j, again);
+}
+
+#[test]
+fn backpressure_returns_none_not_panic() {
+    let mut cfg = JitConfig::default();
+    cfg.window_capacity = 2;
+    let mut jit = JitCompiler::new(cfg, vliw_jit::compiler::jit::SimExecutor::v100());
+    assert!(jit
+        .submit(DispatchRequest::new(
+            StreamId(0),
+            KernelDesc::gemm(8, 8, 8),
+            1e6
+        ))
+        .is_some());
+    assert!(jit
+        .submit(DispatchRequest::new(
+            StreamId(1),
+            KernelDesc::gemm(8, 8, 8),
+            1e6
+        ))
+        .is_some());
+    assert!(jit
+        .submit(DispatchRequest::new(
+            StreamId(2),
+            KernelDesc::gemm(8, 8, 8),
+            1e6
+        ))
+        .is_none());
+}

