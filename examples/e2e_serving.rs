@@ -1,10 +1,13 @@
 //! END-TO-END serving driver (the repo's headline validation run).
 //!
 //! Loads the real compiled models, serves a multi-tenant Poisson workload
-//! through the full stack — tenants → EDF + coalescing-window batcher →
-//! padded batch variants → PJRT CPU execution of the AOT Pallas models —
-//! and reports per-tenant latency (p50/p99), throughput, SLO attainment and
-//! batch occupancy, against the batch-1 FIFO baseline.
+//! through the full stack — tenants → the shared OoO JIT core (EDF +
+//! coalescing window + per-model groups) → padded batch variants → PJRT
+//! CPU execution of the AOT Pallas models — and reports per-tenant latency
+//! (p50/p99), throughput, SLO attainment, batch occupancy and JIT pack
+//! stats, against the batch-1 FIFO baseline. A final section drives the
+//! *concurrent* real-time path: 3 models execute on 3 pool workers (one
+//! PJRT backend each) in parallel.
 //!
 //! Results are recorded in EXPERIMENTS.md §E2E.
 //!
@@ -103,6 +106,35 @@ fn main() -> Result<()> {
     if coal.metrics.overall_attainment() < fifo.metrics.overall_attainment() {
         println!("WARNING: coalescing lost attainment — check policy knobs");
     }
+    println!(
+        "jit core: launches={} mean_pack={:.2} pack_eff={:.2} evictions={}",
+        coal.metrics.jit.launches,
+        coal.metrics.jit.mean_pack(),
+        coal.metrics.jit.pack_efficiency(),
+        coal.metrics.jit.evictions
+    );
+
+    // --- concurrent real-time path: 3 models on 3 pool workers ---
+    // Each worker owns its own PJRT executor (built + warmed on its own
+    // thread), so superkernels for different models execute in parallel;
+    // the shared JIT core keeps making every hold/launch decision.
+    println!("\n== real-time concurrent launch stage (3 workers) ==");
+    let rt_trace = Trace::generate(&tenants(), per_tenant.min(40), seed);
+    let ex3 = PjrtExecutor::from_default_artifacts().context("artifacts")?;
+    let mut rt = Server::new(ex3, BatchPolicy::coalescing());
+    let report = rt.run_realtime_pooled(&rt_trace, 4.0, 3, |i| {
+        let mut ex = PjrtExecutor::from_default_artifacts().expect("worker artifacts");
+        for m in ["mlp_small", "mlp_large", "gemmnet6"] {
+            let _ = ex.warmup_model(m);
+        }
+        eprintln!("worker {i} ready");
+        ex
+    });
+    println!("{}", report.render());
+    assert!(
+        report.metrics.jit.launches > 0,
+        "concurrent path must serve through the JIT core"
+    );
     println!("e2e_serving OK");
     Ok(())
 }

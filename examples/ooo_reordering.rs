@@ -11,6 +11,7 @@ use anyhow::{Context, Result};
 
 use vliw_jit::compiler::ir::{DispatchRequest, StreamId};
 use vliw_jit::compiler::jit::{JitCompiler, JitConfig};
+use vliw_jit::compiler::{Coalescer, Policy};
 use vliw_jit::gpu::kernel::KernelDesc;
 use vliw_jit::runtime::PjrtExecutor;
 
@@ -92,10 +93,15 @@ fn main() -> Result<()> {
     // (early-binding): four separate launches, 4x the device work.
     println!("-- scenario 3: same workload, no staggering (early binding) --");
     let ex3 = PjrtExecutor::from_default_artifacts().context("artifacts")?;
-    let mut cfg = JitConfig::default();
-    cfg.policy.coalesce_window_us = 0.0;
-    cfg.policy.target_pack = 1;
-    cfg.coalescer.max_problems = 1; // early binding: one kernel per launch
+    let cfg = JitConfig {
+        policy: Policy {
+            coalesce_window_us: 0.0,
+            target_pack: 1,
+            ..Policy::default()
+        },
+        coalescer: Coalescer::new(1, 0.75), // early binding: one kernel/launch
+        ..JitConfig::default()
+    };
     let mut jit3 = JitCompiler::new(cfg, ex3);
     let ops3: Vec<(f64, DispatchRequest)> = (0..4)
         .map(|i| {

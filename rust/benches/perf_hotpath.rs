@@ -56,7 +56,7 @@ fn main() {
             // drain via decide+issue until empty (full scheduling work)
             let mut now = 0.0;
             loop {
-                match sched.decide(&w, now, |k| cm.profile_default(k).duration_us) {
+                match sched.decide(&w, now, |k, _ops| cm.profile_default(k).duration_us) {
                     Decision::Launch(p) => {
                         w.issue(&p.ops);
                         for id in p.ops {
@@ -86,6 +86,7 @@ fn main() {
             kernel: mixed_kernel(&mut rng),
             arrival_us: 0.0,
             deadline_us: 1e9,
+            group: 0,
             tag: 0,
         })
         .collect();

@@ -88,6 +88,9 @@ pub struct Coalescer {
     pub max_problems: usize,
     /// Reject pads wasting more than this FLOP fraction per op.
     pub max_padding: f64,
+    /// Per-group pack-size caps (serving: a model's largest compiled batch
+    /// variant). Groups without an entry use `max_problems`.
+    pub group_caps: BTreeMap<u64, usize>,
 }
 
 impl Default for Coalescer {
@@ -95,6 +98,7 @@ impl Default for Coalescer {
         Coalescer {
             max_problems: 8,
             max_padding: 0.75,
+            group_caps: BTreeMap::new(),
         }
     }
 }
@@ -105,22 +109,41 @@ impl Coalescer {
         Coalescer {
             max_problems,
             max_padding,
+            group_caps: BTreeMap::new(),
         }
+    }
+
+    /// Cap packs of `group` at `cap` problems (builder style).
+    pub fn with_group_cap(mut self, group: u64, cap: usize) -> Self {
+        self.group_caps.insert(group, cap);
+        self
+    }
+
+    /// Effective pack-size cap for a group — the scheduler launches a pack
+    /// that has reached this cap immediately (it can never grow further).
+    pub fn cap_of(&self, group: u64) -> usize {
+        self.group_caps
+            .get(&group)
+            .copied()
+            .unwrap_or(self.max_problems)
+            .min(self.max_problems)
+            .max(1)
     }
 
     /// Group ready ops into superkernels.
     ///
-    /// Greedy class-bucket packing: quantize every op, group by class,
-    /// split groups into chunks of `max_problems`. Ops whose padding
-    /// overhead exceeds `max_padding` go into singleton packs at their own
-    /// (tighter) quantization. Input order is preserved inside a class so
-    /// the scheduler's priority order (EDF) survives packing.
+    /// Greedy class-bucket packing: quantize every op, bucket by
+    /// (coalescing group, class), split buckets into chunks of the group's
+    /// cap. Ops whose padding overhead exceeds `max_padding` go into
+    /// singleton packs at their own (tighter) quantization. Input order is
+    /// preserved inside a bucket so the scheduler's priority order (EDF)
+    /// survives packing.
     pub fn pack(&self, ops: &[&TensorOp]) -> Vec<SuperKernel> {
-        let mut buckets: BTreeMap<ShapeClass, Vec<&TensorOp>> = BTreeMap::new();
+        let mut buckets: BTreeMap<(u64, ShapeClass), Vec<&TensorOp>> = BTreeMap::new();
         for op in ops {
             let class = ShapeClass::of(&op.kernel);
             if class.padding_overhead(&op.kernel) <= self.max_padding {
-                buckets.entry(class).or_default().push(op);
+                buckets.entry((op.group, class)).or_default().push(op);
             } else {
                 // out-of-band shape: exact singleton class
                 let exact = ShapeClass {
@@ -128,12 +151,12 @@ impl Coalescer {
                     k: op.kernel.k,
                     n: op.kernel.n,
                 };
-                buckets.entry(exact).or_default().push(op);
+                buckets.entry((op.group, exact)).or_default().push(op);
             }
         }
         let mut packs = Vec::new();
-        for (class, members) in buckets {
-            for chunk in members.chunks(self.max_problems.max(1)) {
+        for ((group, class), members) in buckets {
+            for chunk in members.chunks(self.cap_of(group)) {
                 let useful: f64 = chunk.iter().map(|o| o.kernel.flops()).sum();
                 packs.push(SuperKernel {
                     class,
@@ -168,6 +191,7 @@ mod tests {
             kernel: KernelDesc::gemm(m, k, n),
             arrival_us: 0.0,
             deadline_us: 1e9,
+            group: 0,
             tag: 0,
         }
     }
@@ -247,6 +271,34 @@ mod tests {
             &KernelDesc::gemm(128, 512, 64),
             &KernelDesc::gemm(2048, 512, 64)
         ));
+    }
+
+    #[test]
+    fn groups_do_not_pack_together() {
+        // same shape class, different coalescing groups (two models whose
+        // request shapes coincide): must stay in separate launches
+        let mut a = op(0, 0, 128, 512, 64);
+        let mut b = op(1, 1, 128, 512, 64);
+        a.group = 1;
+        b.group = 2;
+        let packs = Coalescer::default().pack(&[&a, &b]);
+        assert_eq!(packs.len(), 2);
+        assert!(packs.iter().all(|p| p.problems() == 1));
+    }
+
+    #[test]
+    fn group_caps_bound_pack_size() {
+        let ops: Vec<TensorOp> = (0..10)
+            .map(|i| {
+                let mut o = op(i, i as u32, 128, 512, 64);
+                o.group = 5;
+                o
+            })
+            .collect();
+        let refs: Vec<&TensorOp> = ops.iter().collect();
+        let packs = Coalescer::new(8, 0.75).with_group_cap(5, 3).pack(&refs);
+        let sizes: Vec<usize> = packs.iter().map(|p| p.problems()).collect();
+        assert_eq!(sizes, vec![3, 3, 3, 1]);
     }
 
     #[test]

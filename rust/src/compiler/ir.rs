@@ -34,6 +34,10 @@ pub struct TensorOp {
     pub arrival_us: f64,
     /// Absolute deadline, µs (arrival + the stream's SLO share).
     pub deadline_us: f64,
+    /// Coalescing group: ops only pack with ops of the same group. The
+    /// serving layer keys this by model, so two models whose request
+    /// shapes quantize to the same class never share a launch.
+    pub group: u64,
     /// Opaque request handle for completion fan-out (serving layer).
     pub tag: u64,
 }
@@ -59,6 +63,8 @@ pub struct DispatchRequest {
     pub kernel: KernelDesc,
     /// Relative SLO budget for this op, µs.
     pub slo_us: f64,
+    /// Coalescing group (see [`TensorOp::group`]).
+    pub group: u64,
     /// Opaque completion tag.
     pub tag: u64,
 }
@@ -70,6 +76,7 @@ impl DispatchRequest {
             stream,
             kernel,
             slo_us,
+            group: 0,
             tag: 0,
         }
     }
@@ -77,6 +84,12 @@ impl DispatchRequest {
     /// Attach a completion tag.
     pub fn with_tag(mut self, tag: u64) -> Self {
         self.tag = tag;
+        self
+    }
+
+    /// Restrict coalescing to a group (the serving layer's model key).
+    pub fn with_group(mut self, group: u64) -> Self {
+        self.group = group;
         self
     }
 }
@@ -95,6 +108,7 @@ mod tests {
             kernel: KernelDesc::gemm(32, 256, 256),
             arrival_us: 0.0,
             deadline_us: 1_000.0,
+            group: 0,
             tag: 0,
         };
         assert_eq!(op.slack_us(200.0, 300.0), 500.0);
@@ -105,9 +119,11 @@ mod tests {
     #[test]
     fn dispatch_request_builder() {
         let r = DispatchRequest::new(StreamId(3), KernelDesc::gemm(1, 2, 3), 5_000.0)
-            .with_tag(77);
+            .with_tag(77)
+            .with_group(4);
         assert_eq!(r.stream, StreamId(3));
         assert_eq!(r.tag, 77);
+        assert_eq!(r.group, 4);
         assert_eq!(r.slo_us, 5_000.0);
     }
 }

@@ -1,14 +1,24 @@
 //! The JIT issue loop: window + scheduler + coalescer + executor.
 //!
-//! `JitCompiler` is the synchronous core shared by both deployment modes:
+//! `JitCompiler` is the core shared by every deployment mode:
 //!
 //! * **virtual time** (benches, simulator executor): `run_trace` replays a
 //!   timed op trace, advancing a virtual clock through scheduler decisions;
-//! * **real time** (`serve::server`, PJRT executor): the serving loop calls
-//!   `submit`/`pump` with wall-clock timestamps.
+//! * **real time, synchronous** (`serve::Server::replay`): the driver calls
+//!   `submit_at`/`pump` and real measured executions advance the clock;
+//! * **real time, concurrent** (`serve::Server::run_realtime`): the driver
+//!   calls `issue_ready` to obtain launch tickets, executes them on worker
+//!   threads, and reports back through `finish_launch` — several
+//!   superkernels (for different models) run in parallel.
 //!
-//! The executor is abstract ([`KernelExecutor`]): the V100 cost model backs
-//! the paper's figures, the PJRT CPU client backs the real end-to-end path.
+//! The executor is abstract: [`KernelExecutor`] is the payload-free
+//! kernel-level backend (V100 cost model, PJRT superkernels);
+//! [`PackExecutor`] generalizes it to packs carrying an attached request
+//! payload `P` (the serving layer attaches request rows and executes the
+//! pack as one padded model batch). Every `KernelExecutor` is a
+//! `PackExecutor<()>` for free.
+
+use std::collections::HashMap;
 
 use crate::compiler::coalescer::{Coalescer, SuperKernel};
 use crate::compiler::ir::{DispatchRequest, OpId, TensorOp};
@@ -24,6 +34,55 @@ pub trait KernelExecutor {
     fn execute(&mut self, sk: &SuperKernel) -> f64;
 }
 
+/// One pack member handed to a payload-aware executor: the scheduled op
+/// plus the payload attached at submission.
+pub struct PackMember<'a, P> {
+    /// The scheduled op.
+    pub op: &'a TensorOp,
+    /// The attached request payload.
+    pub payload: &'a P,
+}
+
+/// Outcome of executing one pack.
+#[derive(Debug, Clone)]
+pub struct PackRun {
+    /// Measured (or charged) execution time, µs.
+    pub duration_us: f64,
+    /// Problems/batch capacity actually executed after padding
+    /// (≥ pack size).
+    pub executed: u32,
+    /// False when the backend failed; member ops complete as dropped.
+    pub ok: bool,
+}
+
+/// Payload-aware pack execution. Estimation sees the member ops (group +
+/// count) so backends can price the *padded* variant that will actually
+/// run; execution sees the payloads. Implemented for every
+/// [`KernelExecutor`] with `P = ()`.
+pub trait PackExecutor<P> {
+    /// Estimated execution time for a pack of these members, µs.
+    fn estimate_pack_us(&self, k: &KernelDesc, ops: &[&TensorOp]) -> f64;
+    /// Execute a pack with its payloads.
+    fn execute_pack(&mut self, sk: &SuperKernel, members: &[PackMember<'_, P>]) -> PackRun;
+    /// Fold a finished launch back into learned estimates. Called once per
+    /// launch by the JIT (both drive modes), never by `execute_pack`.
+    fn observe_pack(&mut self, _sk: &SuperKernel, _ops: &[&TensorOp], _run: &PackRun) {}
+}
+
+impl<E: KernelExecutor> PackExecutor<()> for E {
+    fn estimate_pack_us(&self, k: &KernelDesc, _ops: &[&TensorOp]) -> f64 {
+        self.estimate_us(k)
+    }
+
+    fn execute_pack(&mut self, sk: &SuperKernel, _members: &[PackMember<'_, ()>]) -> PackRun {
+        PackRun {
+            duration_us: self.execute(&sk.kernel_for_exec()),
+            executed: sk.kernel.problems,
+            ok: true,
+        }
+    }
+}
+
 /// JIT configuration.
 #[derive(Debug, Clone)]
 pub struct JitConfig {
@@ -33,7 +92,9 @@ pub struct JitConfig {
     pub coalescer: Coalescer,
     /// Issue-window capacity (backpressure bound).
     pub window_capacity: usize,
-    /// Per-launch JIT bookkeeping overhead, µs (measured by perf_hotpath).
+    /// Per-launch JIT bookkeeping overhead, µs (measured by perf_hotpath);
+    /// charged in the synchronous drive mode only — in real time it is
+    /// part of the measured wall clock.
     pub packing_overhead_us: f64,
 }
 
@@ -63,6 +124,9 @@ pub struct OpCompletion {
     pub met_deadline: bool,
     /// True if the launch was evicted once as a straggler and retried.
     pub evicted: bool,
+    /// True if the backend execution failed (the op was dropped, not
+    /// served; never counted as an SLO hit).
+    pub failed: bool,
 }
 
 impl OpCompletion {
@@ -77,8 +141,10 @@ impl OpCompletion {
 pub struct JitStats {
     /// Superkernels launched.
     pub launches: u64,
-    /// Ops completed.
+    /// Ops completed (including failed ones).
     pub ops: u64,
+    /// Ops whose backend execution failed.
+    pub failed_ops: u64,
     /// Useful FLOPs (pre-padding).
     pub useful_flops: f64,
     /// Launched FLOPs (incl. padding).
@@ -123,27 +189,68 @@ impl JitStats {
     }
 }
 
-/// The OoO VLIW JIT compiler instance.
-pub struct JitCompiler<E: KernelExecutor> {
+/// Per-launch record surfaced to the serving metrics.
+#[derive(Debug, Clone)]
+pub struct LaunchRecord {
+    /// Useful problems in the pack.
+    pub pack_size: u32,
+    /// Executed (padded) problems/batch.
+    pub executed: u32,
+    /// Charged/measured duration, µs.
+    pub duration_us: f64,
+    /// Backend execution succeeded.
+    pub ok: bool,
+}
+
+/// An issued-but-unfinished launch in the concurrent drive mode.
+pub struct PendingLaunch {
+    /// Handle to pass back to [`JitCompiler::finish_launch`].
+    pub ticket: u64,
+    /// The pack to execute (ops in EDF order).
+    pub pack: SuperKernel,
+    /// Scheduler estimate at issue, µs.
+    pub est_us: f64,
+    /// Issue time, µs.
+    pub issue_us: f64,
+}
+
+struct IssuedPack {
+    pack: SuperKernel,
+    issue_us: f64,
+    est_us: f64,
+}
+
+/// The OoO VLIW JIT compiler instance, generic over the executor and an
+/// attached per-op request payload `P` (rows for the serving layer, `()`
+/// for kernel-level deployments).
+pub struct JitCompiler<E, P = ()> {
     /// Issue window.
     pub window: Window,
     scheduler: Scheduler,
     executor: E,
     cfg: JitConfig,
+    payloads: HashMap<OpId, P>,
+    pending: HashMap<u64, IssuedPack>,
+    next_ticket: u64,
+    launch_log: Vec<LaunchRecord>,
     /// Virtual/wall clock, µs.
     pub now_us: f64,
     /// Aggregate stats.
     pub stats: JitStats,
 }
 
-impl<E: KernelExecutor> JitCompiler<E> {
-    /// New JIT over an executor.
-    pub fn new(cfg: JitConfig, executor: E) -> Self {
+impl<E, P> JitCompiler<E, P> {
+    /// New JIT with an attached-payload type.
+    pub fn with_payloads(cfg: JitConfig, executor: E) -> Self {
         JitCompiler {
             window: Window::new(cfg.window_capacity),
             scheduler: Scheduler::new(cfg.policy.clone(), cfg.coalescer.clone()),
             executor,
             cfg,
+            payloads: HashMap::new(),
+            pending: HashMap::new(),
+            next_ticket: 0,
+            launch_log: Vec::new(),
             now_us: 0.0,
             stats: JitStats::default(),
         }
@@ -154,64 +261,266 @@ impl<E: KernelExecutor> JitCompiler<E> {
         &self.executor
     }
 
+    /// Mutably borrow the executor.
+    pub fn executor_mut(&mut self) -> &mut E {
+        &mut self.executor
+    }
+
+    /// Advance the clock to (at least) `now_us` — the real-time drivers'
+    /// wall-clock feed. Never moves the clock backwards.
+    pub fn advance_to(&mut self, now_us: f64) {
+        self.now_us = self.now_us.max(now_us);
+    }
+
+    /// Launches issued but not yet finished (concurrent drive mode).
+    pub fn inflight_launches(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Drain the per-launch log accumulated since the last call.
+    pub fn take_launches(&mut self) -> Vec<LaunchRecord> {
+        std::mem::take(&mut self.launch_log)
+    }
+
+    /// Payloads attached to the given ops (issue order preserved).
+    pub fn payloads_of(&self, ops: &[OpId]) -> Vec<&P> {
+        ops.iter()
+            .map(|id| self.payloads.get(id).expect("payload present"))
+            .collect()
+    }
+}
+
+impl<E> JitCompiler<E> {
+    /// New payload-free JIT over an executor.
+    pub fn new(cfg: JitConfig, executor: E) -> Self {
+        Self::with_payloads(cfg, executor)
+    }
+}
+
+impl<E, P> JitCompiler<E, P>
+where
+    E: PackExecutor<P>,
+{
     /// Submit an op at the current clock. Returns None on backpressure.
-    pub fn submit(&mut self, req: DispatchRequest) -> Option<OpId> {
-        self.window.submit(req, self.now_us)
+    pub fn submit(&mut self, req: DispatchRequest) -> Option<OpId>
+    where
+        P: Default,
+    {
+        let now = self.now_us;
+        self.submit_at(req, now, P::default())
+    }
+
+    /// Submit an op with a payload at the current clock.
+    pub fn submit_with(&mut self, req: DispatchRequest, payload: P) -> Option<OpId> {
+        let now = self.now_us;
+        self.submit_at(req, now, payload)
+    }
+
+    /// Submit an op with an explicit arrival time (≤ the current clock):
+    /// the serving replay driver admits requests whose true arrival
+    /// precedes the instant the device freed up, and latency/deadline
+    /// accounting must use the true arrival.
+    pub fn submit_at(
+        &mut self,
+        req: DispatchRequest,
+        arrival_us: f64,
+        payload: P,
+    ) -> Option<OpId> {
+        let id = self.window.submit(req, arrival_us)?;
+        self.payloads.insert(id, payload);
+        Some(id)
+    }
+
+    fn decide(&self) -> Decision {
+        let ex = &self.executor;
+        self.scheduler
+            .decide(&self.window, self.now_us, |k, ops| ex.estimate_pack_us(k, ops))
     }
 
     /// Drive the loop at the current instant: launch everything the policy
-    /// allows. Returns completions and the time the next decision is due
-    /// (None = window drained or all blocked).
+    /// allows, executing synchronously. Returns completions and the time
+    /// the next decision is due (None = window drained or all blocked).
     pub fn pump(&mut self) -> (Vec<OpCompletion>, Option<f64>) {
         let mut out = Vec::new();
         loop {
-            let est = {
-                let ex = &self.executor;
-                move |k: &KernelDesc| ex.estimate_us(k)
-            };
-            match self.scheduler.decide(&self.window, self.now_us, est) {
+            match self.decide() {
                 Decision::Idle => return (out, None),
                 Decision::Wait { until_us } => return (out, Some(until_us)),
                 Decision::Launch(pack) => {
-                    out.extend(self.launch(pack));
+                    out.extend(self.launch_sync(pack));
                 }
             }
         }
     }
 
+    /// Issue (without executing) every pack the policy allows right now —
+    /// the concurrent drive mode's planning step. Issued packs are
+    /// in-flight until [`JitCompiler::finish_launch`]; their streams keep
+    /// feeding successor ops into later packs (issue-order readiness), so
+    /// independent superkernels pipeline across worker threads.
+    pub fn issue_ready(&mut self) -> (Vec<PendingLaunch>, Option<f64>) {
+        let mut out = Vec::new();
+        loop {
+            match self.decide() {
+                Decision::Idle => return (out, None),
+                Decision::Wait { until_us } => return (out, Some(until_us)),
+                Decision::Launch(pack) => {
+                    self.window.issue(&pack.ops);
+                    let est = {
+                        let members = Self::members(&self.window, &pack);
+                        self.executor.estimate_pack_us(&pack.kernel, &members)
+                    };
+                    let ticket = self.next_ticket;
+                    self.next_ticket += 1;
+                    let issue_us = self.now_us;
+                    self.pending.insert(
+                        ticket,
+                        IssuedPack {
+                            pack: pack.clone(),
+                            issue_us,
+                            est_us: est,
+                        },
+                    );
+                    out.push(PendingLaunch {
+                        ticket,
+                        pack,
+                        est_us: est,
+                        issue_us,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Execute an issued launch inline on the JIT's own executor (the
+    /// single-threaded real-time driver). Pair with
+    /// [`JitCompiler::finish_launch`] using the measured wall time.
+    pub fn run_issued(&mut self, ticket: u64) -> PackRun {
+        let pack = self
+            .pending
+            .get(&ticket)
+            .expect("unknown launch ticket")
+            .pack
+            .clone();
+        let members = Self::members(&self.window, &pack);
+        let pm: Vec<PackMember<'_, P>> = members
+            .iter()
+            .map(|op| PackMember {
+                op: *op,
+                payload: self.payloads.get(&op.id).expect("payload present"),
+            })
+            .collect();
+        self.executor.execute_pack(&pack, &pm)
+    }
+
+    /// Complete an issued launch with its outcome, observed at wall time
+    /// `done_us`. Applies straggler-eviction accounting (no retry: in real
+    /// time the work has already happened) and returns the completions.
+    pub fn finish_launch(
+        &mut self,
+        ticket: u64,
+        done_us: f64,
+        run: PackRun,
+    ) -> Vec<OpCompletion> {
+        let issued = self.pending.remove(&ticket).expect("unknown launch ticket");
+        self.advance_to(done_us);
+        {
+            let members = Self::members(&self.window, &issued.pack);
+            self.executor.observe_pack(&issued.pack, &members, &run);
+        }
+        let evicted = run.ok
+            && self.scheduler.should_evict(
+                issued.issue_us,
+                issued.est_us,
+                issued.issue_us + run.duration_us,
+            );
+        if evicted {
+            self.stats.evictions += 1;
+        }
+        self.record_launch(&issued.pack, &run);
+        self.complete_pack(&issued.pack, issued.issue_us, done_us, &run, evicted)
+    }
+
     /// Execute one superkernel synchronously, advancing the clock by its
     /// duration (+ packing overhead), applying straggler eviction (§5.2):
-    /// if the actual runtime blows past `eviction_factor ×` estimate, the
-    /// launch is evicted and retried once (counted in stats).
-    fn launch(&mut self, pack: SuperKernel) -> Vec<OpCompletion> {
+    /// if the actual runtime blows past the eviction threshold, the launch
+    /// is charged the straggler time up to the trigger plus a clean re-run
+    /// at estimate (counted in stats).
+    fn launch_sync(&mut self, pack: SuperKernel) -> Vec<OpCompletion> {
         self.window.issue(&pack.ops);
         let issue_us = self.now_us;
-        let est = self.executor.estimate_us(&pack.kernel);
-        let mut dur = self.executor.execute(&pack.kernel_for_exec());
+        let (est, mut run) = {
+            let members = Self::members(&self.window, &pack);
+            let est = self.executor.estimate_pack_us(&pack.kernel, &members);
+            let pm: Vec<PackMember<'_, P>> = members
+                .iter()
+                .map(|op| PackMember {
+                    op: *op,
+                    payload: self.payloads.get(&op.id).expect("payload present"),
+                })
+                .collect();
+            let run = self.executor.execute_pack(&pack, &pm);
+            drop(pm);
+            self.executor.observe_pack(&pack, &members, &run);
+            (est, run)
+        };
         let mut evicted = false;
-        if self
-            .scheduler
-            .should_evict(issue_us, est, issue_us + dur)
+        if run.ok
+            && self
+                .scheduler
+                .should_evict(issue_us, est, issue_us + run.duration_us)
         {
             // evict + retry once: pay the straggler time up to the eviction
-            // point, then a clean re-run at estimate
+            // trigger, then a clean re-run at estimate
             self.stats.evictions += 1;
             evicted = true;
-            dur = self.cfg.policy.eviction_factor * est + est;
+            run.duration_us = self.scheduler.eviction_charge_us(est) + est;
         }
-        let total = dur + self.cfg.packing_overhead_us;
-        self.now_us += total;
-        self.stats.busy_us += total;
+        run.duration_us += self.cfg.packing_overhead_us;
+        self.now_us += run.duration_us;
+        self.record_launch(&pack, &run);
+        let done_us = self.now_us;
+        self.complete_pack(&pack, issue_us, done_us, &run, evicted)
+    }
+
+    fn members<'a>(window: &'a Window, pack: &SuperKernel) -> Vec<&'a TensorOp> {
+        pack.ops
+            .iter()
+            .map(|id| window.get(*id).expect("pack member in window"))
+            .collect()
+    }
+
+    fn record_launch(&mut self, pack: &SuperKernel, run: &PackRun) {
         self.stats.launches += 1;
         self.stats.useful_flops += pack.useful_flops;
-        self.stats.launched_flops += pack.kernel.flops();
-        let done_us = self.now_us;
+        let executed = run.executed.max(pack.ops.len() as u32);
+        self.stats.launched_flops += pack.class.kernel(executed).flops();
+        self.stats.busy_us += run.duration_us;
+        self.launch_log.push(LaunchRecord {
+            pack_size: pack.ops.len() as u32,
+            executed,
+            duration_us: run.duration_us,
+            ok: run.ok,
+        });
+    }
+
+    fn complete_pack(
+        &mut self,
+        pack: &SuperKernel,
+        issue_us: f64,
+        done_us: f64,
+        run: &PackRun,
+        evicted: bool,
+    ) -> Vec<OpCompletion> {
         pack.ops
             .iter()
             .map(|id| {
                 let op = self.window.complete(*id);
-                let met = done_us <= op.deadline_us;
-                if met {
+                self.payloads.remove(id);
+                let met = run.ok && done_us <= op.deadline_us;
+                if !run.ok {
+                    self.stats.failed_ops += 1;
+                } else if met {
                     self.stats.slo_hits += 1;
                 } else {
                     self.stats.slo_misses += 1;
@@ -224,6 +533,7 @@ impl<E: KernelExecutor> JitCompiler<E> {
                     pack_size: pack.ops.len(),
                     met_deadline: met,
                     evicted,
+                    failed: !run.ok,
                 }
             })
             .collect()
@@ -231,7 +541,10 @@ impl<E: KernelExecutor> JitCompiler<E> {
 
     /// Replay a timed trace in virtual time. `ops` must be sorted by
     /// arrival. Returns all completions.
-    pub fn run_trace(&mut self, ops: Vec<(f64, DispatchRequest)>) -> Vec<OpCompletion> {
+    pub fn run_trace(&mut self, ops: Vec<(f64, DispatchRequest)>) -> Vec<OpCompletion>
+    where
+        P: Default,
+    {
         let mut out = Vec::new();
         let mut next = 0usize;
         loop {
@@ -390,7 +703,8 @@ mod tests {
             (0.0, req(0, 128, 50_000.0)),
             (0.0, req(0, 128, 50_000.0)),
         ]);
-        // same stream: sequential, 3 launches, completion order = seq order
+        // same stream: sequential issue, 3 launches (a pack never holds
+        // two ops of one stream), completion order = seq order
         assert_eq!(j.stats.launches, 3);
         let seqs: Vec<u64> = done.iter().map(|c| c.op.seq).collect();
         assert_eq!(seqs, vec![0, 1, 2]);
@@ -449,5 +763,76 @@ mod tests {
             assert!(c.done_us >= last);
             last = c.done_us;
         }
+    }
+
+    #[test]
+    fn launch_log_records_every_launch() {
+        let mut j = jit();
+        j.run_trace(vec![
+            (0.0, req(0, 128, 50_000.0)),
+            (0.0, req(1, 128, 50_000.0)),
+        ]);
+        let log = j.take_launches();
+        assert_eq!(log.len(), 1);
+        assert_eq!(log[0].pack_size, 2);
+        assert!(log[0].ok);
+        assert!(log[0].duration_us > 0.0);
+        assert!(j.take_launches().is_empty(), "log drains");
+    }
+
+    fn eager_jit() -> JitCompiler<SimExecutor> {
+        // target_pack 1: every pack launches the moment it forms, so the
+        // async tests don't depend on cost-model magnitudes
+        let cfg = JitConfig {
+            policy: Policy {
+                target_pack: 1,
+                ..Policy::default()
+            },
+            ..JitConfig::default()
+        };
+        JitCompiler::new(cfg, SimExecutor::v100())
+    }
+
+    #[test]
+    fn async_drive_issues_and_finishes() {
+        // the concurrent drive mode: issue tickets, execute "remotely",
+        // finish with measured outcomes
+        let mut j = eager_jit();
+        assert!(j.submit(req(0, 128, 50_000.0)).is_some());
+        assert!(j.submit(req(1, 2048, 50_000.0)).is_some()); // different class
+        let (launches, _wake) = j.issue_ready();
+        assert_eq!(launches.len(), 2, "both packs issue without waiting");
+        assert_eq!(j.inflight_launches(), 2);
+        // finish out of order with synthetic measured durations
+        for l in launches.into_iter().rev() {
+            let run = j.run_issued(l.ticket);
+            assert!(run.ok);
+            let done_us = l.issue_us + run.duration_us;
+            let completions = j.finish_launch(l.ticket, done_us, run);
+            assert_eq!(completions.len(), 1);
+        }
+        assert_eq!(j.inflight_launches(), 0);
+        assert!(j.window.is_empty());
+        assert_eq!(j.stats.launches, 2);
+        assert_eq!(j.stats.ops, 2);
+    }
+
+    #[test]
+    fn async_drive_pipelines_one_stream() {
+        // issue-order readiness: one stream's ops issue in sequence but
+        // overlap in flight (the multi-worker launch stage's invariant)
+        let mut j = eager_jit();
+        assert!(j.submit(req(0, 128, 50_000.0)).is_some());
+        assert!(j.submit(req(0, 128, 50_000.0)).is_some());
+        let (launches, _) = j.issue_ready();
+        assert_eq!(launches.len(), 2, "successor issues while head in flight");
+        assert_eq!(j.inflight_launches(), 2);
+        // seq order at issue is preserved
+        assert!(launches[0].issue_us <= launches[1].issue_us);
+        for l in launches {
+            let run = j.run_issued(l.ticket);
+            j.finish_launch(l.ticket, l.issue_us + run.duration_us, run);
+        }
+        assert!(j.window.is_empty());
     }
 }

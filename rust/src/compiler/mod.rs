@@ -17,7 +17,9 @@
 //!                model, superkernel formation
 //!        ▼
 //!   [jit]        issue loop: launches superkernels on an executor
-//!                (PJRT CPU or the V100 simulator)
+//!                (PJRT CPU or the V100 simulator); ops may carry a
+//!                request payload (serving rows) and launches may run
+//!                synchronously or fan out to worker threads
 //! ```
 //!
 //! Ahead-of-time components: [`autotune`] (greedy vs collaborative blocking
@@ -34,7 +36,10 @@ pub mod scheduler;
 pub mod window;
 
 pub use coalescer::{Coalescer, ShapeClass, SuperKernel};
-pub use ir::{OpId, StreamId, TensorOp};
-pub use jit::{JitCompiler, JitConfig, JitStats};
+pub use ir::{DispatchRequest, OpId, StreamId, TensorOp};
+pub use jit::{
+    JitCompiler, JitConfig, JitStats, KernelExecutor, LaunchRecord, PackExecutor,
+    PackMember, PackRun, PendingLaunch,
+};
 pub use scheduler::{Decision, Policy, Scheduler};
 pub use window::Window;

@@ -10,6 +10,7 @@
 //! for better coalescing at a (slightly) later time" (§5).
 
 use crate::compiler::coalescer::{Coalescer, SuperKernel};
+use crate::compiler::ir::TensorOp;
 use crate::compiler::window::Window;
 use crate::gpu::kernel::KernelDesc;
 
@@ -25,6 +26,11 @@ pub struct Policy {
     /// Evict an in-flight op when its runtime exceeds `eviction_factor ×`
     /// its estimate (§5.2 "simply evict degraded workers").
     pub eviction_factor: f64,
+    /// Absolute slop added to the eviction threshold, µs — keeps tiny
+    /// kernels (estimate ≈ 0) from being evicted on scheduling noise. The
+    /// eviction charge in the JIT uses the same slop, so the time billed
+    /// to an evicted straggler equals the trigger threshold.
+    pub eviction_slop_us: f64,
 }
 
 impl Default for Policy {
@@ -34,6 +40,7 @@ impl Default for Policy {
             target_pack: 4,
             safety_margin_us: 500.0,
             eviction_factor: 3.0,
+            eviction_slop_us: 50.0,
         }
     }
 }
@@ -68,11 +75,16 @@ impl Scheduler {
     }
 
     /// Decide what to do at time `now`. `est_exec` estimates a batched
-    /// kernel's execution time (µs) — supplied by the executor's cost model
-    /// so the scheduler stays backend-agnostic.
+    /// kernel's execution time (µs) given the pack's member ops — supplied
+    /// by the executor's cost model so the scheduler stays backend-agnostic
+    /// (the serving executor uses the members' group and count to estimate
+    /// the padded compiled variant that will actually run).
+    ///
+    /// `Wait { until_us }` is monotone for a fixed window: a `decide` at
+    /// (or after) `until_us` launches, it never returns a later wait.
     pub fn decide<F>(&self, window: &Window, now: f64, est_exec: F) -> Decision
     where
-        F: Fn(&KernelDesc) -> f64,
+        F: Fn(&KernelDesc, &[&TensorOp]) -> f64,
     {
         let mut ready = window.ready();
         if ready.is_empty() {
@@ -87,52 +99,77 @@ impl Scheduler {
                 .unwrap()
                 .then(a.id.cmp(&b.id))
         });
-        let packs = self.coalescer.pack(&ready);
-        // priority pack = the one containing the globally earliest deadline
-        let urgent_id = ready[0].id;
-        let pack = packs
-            .into_iter()
-            .find(|p| p.ops.contains(&urgent_id))
-            .expect("urgent op must be in some pack");
-
-        // full pack: no reason to wait
-        if pack.problems() >= self.policy.target_pack
-            || pack.problems() >= self.coalescer.max_problems
-        {
-            return Decision::Launch(pack);
-        }
-
-        let est = est_exec(&pack.kernel);
-        // latest safe launch time for the pack (tightest member)
-        let critical_us = pack
-            .ops
-            .iter()
-            .map(|id| window.get(*id).expect("pack member in window").deadline_us)
-            .fold(f64::INFINITY, f64::min)
-            - est
-            - self.policy.safety_margin_us;
-        // stagger budget: oldest member may wait at most coalesce_window
-        let oldest_arrival = pack
-            .ops
-            .iter()
-            .map(|id| window.get(*id).expect("member").arrival_us)
-            .fold(f64::INFINITY, f64::min);
-        let window_closes = oldest_arrival + self.policy.coalesce_window_us;
-
-        let hold_until = critical_us.min(window_closes);
-        if now >= hold_until {
-            Decision::Launch(pack)
-        } else {
-            Decision::Wait {
-                until_us: hold_until,
+        let mut packs = self.coalescer.pack(&ready);
+        // EDF across packs: order by each pack's earliest member deadline
+        // (= its first member — buckets preserve the EDF input order),
+        // ties by first member id for determinism. The highest-priority
+        // *launchable* pack launches; a staggering urgent pack never holds
+        // a full pack for another group hostage.
+        packs.sort_by(|a, b| {
+            let da = window.get(a.ops[0]).expect("pack member").deadline_us;
+            let db = window.get(b.ops[0]).expect("pack member").deadline_us;
+            da.partial_cmp(&db).unwrap().then(a.ops[0].cmp(&b.ops[0]))
+        });
+        let mut earliest_hold = f64::INFINITY;
+        for pack in packs {
+            // full pack: no reason to wait. "Full" includes the pack's
+            // group cap (a model's largest compiled batch variant) — a
+            // pack at its cap can never grow, so holding it is pure
+            // added latency.
+            let group = window.get(pack.ops[0]).expect("pack member").group;
+            if pack.problems() >= self.policy.target_pack
+                || pack.problems() >= self.coalescer.max_problems
+                || pack.problems() >= self.coalescer.cap_of(group)
+            {
+                return Decision::Launch(pack);
             }
+            let members: Vec<&TensorOp> = pack
+                .ops
+                .iter()
+                .map(|id| window.get(*id).expect("pack member in window"))
+                .collect();
+            let est = est_exec(&pack.kernel, &members);
+            // latest safe launch time for the pack (tightest member)
+            let critical_us = members
+                .iter()
+                .map(|op| op.deadline_us)
+                .fold(f64::INFINITY, f64::min)
+                - est
+                - self.policy.safety_margin_us;
+            // stagger budget: oldest member may wait at most coalesce_window
+            let oldest_arrival = members
+                .iter()
+                .map(|op| op.arrival_us)
+                .fold(f64::INFINITY, f64::min);
+            let window_closes = oldest_arrival + self.policy.coalesce_window_us;
+
+            let hold_until = critical_us.min(window_closes);
+            // launch at (or within float jitter of) the promised wake-up
+            // time: a decide at a previously returned `until_us` must never
+            // wait again
+            if now + 1e-9 >= hold_until {
+                return Decision::Launch(pack);
+            }
+            earliest_hold = earliest_hold.min(hold_until);
+        }
+        Decision::Wait {
+            until_us: earliest_hold,
         }
     }
 
     /// Straggler test (§5.2): should an op issued at `issued_us` with
     /// estimate `est_us` be evicted at `now`?
     pub fn should_evict(&self, issued_us: f64, est_us: f64, now: f64) -> bool {
-        now - issued_us > self.policy.eviction_factor * est_us + 50.0
+        now - issued_us
+            > self.policy.eviction_factor * est_us + self.policy.eviction_slop_us
+    }
+
+    /// The straggler time charged to an evicted launch: it runs up to the
+    /// eviction trigger, then is killed. Kept identical to the
+    /// [`Scheduler::should_evict`] threshold so simulated accounting and
+    /// the trigger can never drift apart.
+    pub fn eviction_charge_us(&self, est_us: f64) -> f64 {
+        self.policy.eviction_factor * est_us + self.policy.eviction_slop_us
     }
 }
 
@@ -142,8 +179,8 @@ mod tests {
     use crate::compiler::ir::{DispatchRequest, StreamId};
     use crate::gpu::cost::CostModel;
 
-    fn est(cm: &CostModel) -> impl Fn(&KernelDesc) -> f64 + '_ {
-        move |k| cm.profile_default(k).duration_us
+    fn est(cm: &CostModel) -> impl Fn(&KernelDesc, &[&TensorOp]) -> f64 + '_ {
+        move |k, _ops| cm.profile_default(k).duration_us
     }
 
     fn sched() -> Scheduler {
@@ -225,6 +262,32 @@ mod tests {
     }
 
     #[test]
+    fn wait_is_monotone_even_when_estimates_drift() {
+        // the promised wake-up must be honored even if the estimator
+        // returns a smaller value at the second decide (learned estimates
+        // shrink as real measurements come in): a decide at `until_us`
+        // launches, it never pushes the wait later
+        let mut w = Window::new(8);
+        submit(&mut w, 0, 100_000.0, 0.0);
+        let cm = CostModel::v100();
+        let s = sched();
+        let until = match s.decide(&w, 0.0, est(&cm)) {
+            Decision::Wait { until_us } => until_us,
+            other => panic!("expected Wait, got {other:?}"),
+        };
+        // estimator drops to one tenth of the cost-model time
+        let drifted =
+            |k: &KernelDesc, _ops: &[&TensorOp]| cm.profile_default(k).duration_us / 10.0;
+        match s.decide(&w, until, drifted) {
+            Decision::Launch(_) => {}
+            Decision::Wait { until_us } => {
+                panic!("wait at {until} re-postponed to {until_us}")
+            }
+            Decision::Idle => unreachable!(),
+        }
+    }
+
+    #[test]
     fn edf_orders_pack_priority() {
         let mut w = Window::new(8);
         // stream 0: relaxed; stream 1: tight and incompatible shape
@@ -250,9 +313,85 @@ mod tests {
     }
 
     #[test]
+    fn pack_at_group_cap_launches_without_waiting() {
+        // a pack that has reached its group cap (a model's largest
+        // compiled batch variant) can never grow — it must launch even
+        // though it is below target_pack and the global max_problems
+        let mut w = Window::new(8);
+        for s in 0..2 {
+            w.submit(
+                DispatchRequest::new(
+                    StreamId(s),
+                    KernelDesc::gemm(128, 512, 64),
+                    50_000.0, // huge slack: only the cap forces the launch
+                )
+                .with_group(3),
+                0.0,
+            )
+            .unwrap();
+        }
+        let s = Scheduler::new(
+            Policy::default(), // target_pack 4
+            Coalescer::new(8, 0.75).with_group_cap(3, 2),
+        );
+        let cm = CostModel::v100();
+        match s.decide(&w, 0.0, est(&cm)) {
+            Decision::Launch(p) => assert_eq!(p.problems(), 2),
+            other => panic!("capped pack must launch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn staggering_urgent_pack_does_not_hold_full_pack_hostage() {
+        let mut w = Window::new(16);
+        // stream 0: the urgent op (earliest deadline) with plenty of slack
+        // — its singleton pack staggers for coalescing
+        submit(&mut w, 0, 50_000.0, 0.0);
+        // streams 1..=4: a FULL pack of an incompatible shape, later
+        // deadlines — must not idle behind the staggering urgent pack
+        for s in 1..=4 {
+            w.submit(
+                DispatchRequest::new(
+                    StreamId(s),
+                    KernelDesc::gemm(2048, 2048, 2048),
+                    60_000.0,
+                ),
+                0.0,
+            )
+            .unwrap();
+        }
+        let cm = CostModel::v100();
+        match sched().decide(&w, 0.0, est(&cm)) {
+            Decision::Launch(p) => {
+                assert_eq!(p.problems(), 4, "the full pack launches");
+                assert_eq!(p.kernel.m, 2048);
+            }
+            other => panic!("expected Launch of the full pack, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn eviction_threshold() {
         let s = sched();
         assert!(!s.should_evict(0.0, 100.0, 200.0)); // 2x: fine
         assert!(s.should_evict(0.0, 100.0, 400.0)); // 4x: evict
+    }
+
+    #[test]
+    fn eviction_slop_is_a_policy_knob_and_matches_charge() {
+        let p = Policy {
+            eviction_factor: 2.0,
+            eviction_slop_us: 10.0,
+            ..Policy::default()
+        };
+        let s = Scheduler::new(p, Coalescer::default());
+        // threshold = 2×est + slop = 210
+        assert!(!s.should_evict(0.0, 100.0, 210.0));
+        assert!(s.should_evict(0.0, 100.0, 210.1));
+        // the charged straggler time equals the trigger threshold
+        assert_eq!(s.eviction_charge_us(100.0), 210.0);
+        // zero-estimate kernels are protected by the slop alone
+        assert!(!s.should_evict(0.0, 0.0, 9.0));
+        assert!(s.should_evict(0.0, 0.0, 11.0));
     }
 }

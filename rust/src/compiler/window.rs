@@ -1,10 +1,18 @@
 //! The OoO issue window.
 //!
 //! Holds pending [`TensorOp`]s from all streams, tracks per-stream program
-//! order (an op is *ready* once its predecessor in the same stream has
-//! completed) and deadline bookkeeping. This is the VLIW analogy's
-//! instruction window: the scheduler picks ready ops out of order, the
-//! coalescer packs them into long words.
+//! order and deadline bookkeeping. This is the VLIW analogy's instruction
+//! window: the scheduler picks ready ops out of order, the coalescer packs
+//! them into long words.
+//!
+//! Readiness is *issue-order*, not completion-order: an op is ready once
+//! every earlier op of its stream has been **issued**. Program order is
+//! still enforced at issue time (a stream's ops enter the device in
+//! sequence), but a stream may have several ops in flight at once — the
+//! pipelining the concurrent launch stage needs. Deployments that require
+//! a completion barrier between a stream's ops get it for free in the
+//! synchronous drive mode, where every launch completes before the next
+//! decision.
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
 
@@ -13,7 +21,7 @@ use crate::compiler::ir::{DispatchRequest, OpId, StreamId, TensorOp};
 /// Issue-window state for one op.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum OpState {
-    /// Waiting on an earlier op of the same stream.
+    /// Waiting on an earlier op of the same stream to issue.
     Blocked,
     /// Eligible for issue.
     Ready,
@@ -25,12 +33,16 @@ pub enum OpState {
 #[derive(Debug, Default)]
 pub struct Window {
     ops: HashMap<OpId, (TensorOp, OpState)>,
-    /// per-stream queue of pending op ids in program order
+    /// per-stream queue of pending (un-issued) op ids in program order
     streams: BTreeMap<StreamId, VecDeque<OpId>>,
     /// per-stream next sequence number
     next_seq: HashMap<StreamId, u64>,
-    /// per-stream in-flight count (head-of-line dependency tracking)
+    /// per-stream in-flight count (several ops of one stream may be in
+    /// flight at once under the concurrent launch stage)
     inflight: HashMap<StreamId, usize>,
+    /// per-group pending (un-issued) op count — the admission layer's
+    /// queue-depth signal
+    group_pending: HashMap<u64, usize>,
     next_id: u64,
     capacity: usize,
 }
@@ -59,6 +71,12 @@ impl Window {
         self.ops.len() >= self.capacity
     }
 
+    /// Pending (un-issued) ops in a coalescing group — the serving layer's
+    /// per-model queue depth.
+    pub fn pending_in_group(&self, group: u64) -> usize {
+        self.group_pending.get(&group).copied().unwrap_or(0)
+    }
+
     /// Submit a dispatch request at time `now`. Returns the assigned op id,
     /// or `None` when the window is full (caller applies backpressure).
     pub fn submit(&mut self, req: DispatchRequest, now: f64) -> Option<OpId> {
@@ -77,17 +95,18 @@ impl Window {
             kernel: req.kernel,
             arrival_us: now,
             deadline_us: now + req.slo_us,
+            group: req.group,
             tag: req.tag,
         };
         let q = self.streams.entry(req.stream).or_default();
-        // ready iff nothing earlier from this stream is pending or in flight
-        let state = if q.is_empty() && self.inflight.get(&req.stream).copied().unwrap_or(0) == 0
-        {
+        // ready iff nothing earlier from this stream awaits issue
+        let state = if q.is_empty() {
             OpState::Ready
         } else {
             OpState::Blocked
         };
         q.push_back(id);
+        *self.group_pending.entry(req.group).or_insert(0) += 1;
         self.ops.insert(id, (op, state));
         Some(id)
     }
@@ -119,8 +138,9 @@ impl Window {
         self.ops.get(&id).map(|(_, s)| *s)
     }
 
-    /// Mark ops as issued (Ready → InFlight). Panics if any op is not ready
-    /// — the scheduler must never issue blocked ops.
+    /// Mark ops as issued (Ready → InFlight), unblocking each stream's
+    /// successor. Panics if any op is not ready — the scheduler must never
+    /// issue blocked ops.
     pub fn issue(&mut self, ids: &[OpId]) {
         for id in ids {
             let (op, state) = self.ops.get_mut(id).expect("issue of unknown op");
@@ -130,51 +150,56 @@ impl Window {
                 "scheduler issued non-ready op {id:?}"
             );
             *state = OpState::InFlight;
-            *self.inflight.entry(op.stream).or_insert(0) += 1;
+            let (stream, group) = (op.stream, op.group);
+            *self.inflight.entry(stream).or_insert(0) += 1;
+            let pending = self
+                .group_pending
+                .get_mut(&group)
+                .expect("group pending count");
+            *pending -= 1;
             // pop from the stream queue head (must be the head by program
             // order; ready implies it is)
-            let q = self.streams.get_mut(&op.stream).expect("stream queue");
+            let q = self.streams.get_mut(&stream).expect("stream queue");
             let head = q.pop_front().expect("queue non-empty");
             assert_eq!(head, *id, "program order violated on issue");
+            // the next op of this stream (if any) becomes ready: program
+            // order is enforced at issue, not at completion
+            if let Some(&next) = q.front() {
+                if let Some((_, s)) = self.ops.get_mut(&next) {
+                    *s = OpState::Ready;
+                }
+            }
         }
     }
 
-    /// Complete an in-flight op, unblocking its stream successor. Returns
-    /// the completed op.
+    /// Complete an in-flight op. Returns the completed op.
     pub fn complete(&mut self, id: OpId) -> TensorOp {
         let (op, state) = self.ops.remove(&id).expect("complete of unknown op");
         assert_eq!(state, OpState::InFlight, "complete of non-inflight op");
         let cnt = self.inflight.get_mut(&op.stream).expect("inflight count");
         *cnt -= 1;
-        if *cnt == 0 {
-            // head of this stream's queue (if any) becomes ready
-            if let Some(q) = self.streams.get(&op.stream) {
-                if let Some(&head) = q.front() {
-                    if let Some((_, s)) = self.ops.get_mut(&head) {
-                        *s = OpState::Ready;
-                    }
-                }
-            }
-        }
         op
     }
 
     /// Re-queue an evicted in-flight op (straggler eviction, §5.2): it goes
     /// back to the *front* of its stream as Ready with its original
-    /// deadline, so the scheduler re-prioritizes it immediately.
+    /// deadline, so the scheduler re-prioritizes it immediately. The
+    /// previous head (if any) blocks again behind it.
     pub fn requeue(&mut self, id: OpId) {
         let (op, state) = self.ops.get_mut(&id).expect("requeue of unknown op");
         assert_eq!(*state, OpState::InFlight, "requeue of non-inflight op");
         *state = OpState::Ready;
-        let cnt = self.inflight.get_mut(&op.stream).expect("inflight count");
+        let (stream, group) = (op.stream, op.group);
+        let cnt = self.inflight.get_mut(&stream).expect("inflight count");
         *cnt -= 1;
-        let q = self.streams.entry(op.stream).or_default();
-        q.push_front(id);
-        // if something else of this stream is in flight, it must block
-        if self.inflight.get(&op.stream).copied().unwrap_or(0) > 0 {
-            let (_, s) = self.ops.get_mut(&id).unwrap();
-            *s = OpState::Blocked;
+        *self.group_pending.entry(group).or_insert(0) += 1;
+        let q = self.streams.entry(stream).or_default();
+        if let Some(&old_head) = q.front() {
+            if let Some((_, s)) = self.ops.get_mut(&old_head) {
+                *s = OpState::Blocked;
+            }
         }
+        q.push_front(id);
     }
 
     /// Earliest deadline among ready ops (scheduler's EDF pivot).
@@ -218,16 +243,32 @@ mod tests {
     }
 
     #[test]
-    fn complete_unblocks_successor() {
+    fn issue_unblocks_successor_for_pipelining() {
+        // issue-order readiness: b becomes ready as soon as a is issued,
+        // so one stream can keep several ops in flight
         let mut w = Window::new(16);
         let a = w.submit(req(0), 0.0).unwrap();
         let b = w.submit(req(0), 0.0).unwrap();
         w.issue(&[a]);
-        assert_eq!(w.state(b), Some(OpState::Blocked));
-        w.complete(a);
         assert_eq!(w.state(b), Some(OpState::Ready));
         w.issue(&[b]);
+        assert_eq!(w.state(a), Some(OpState::InFlight));
+        assert_eq!(w.state(b), Some(OpState::InFlight));
+        w.complete(a);
         w.complete(b);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn completion_order_free_within_stream() {
+        // two in-flight ops of one stream may complete out of order
+        let mut w = Window::new(16);
+        let a = w.submit(req(0), 0.0).unwrap();
+        let b = w.submit(req(0), 0.0).unwrap();
+        w.issue(&[a]);
+        w.issue(&[b]);
+        w.complete(b);
+        w.complete(a);
         assert!(w.is_empty());
     }
 
@@ -262,6 +303,51 @@ mod tests {
         w.issue(&[a]);
         w.complete(a);
         assert_eq!(w.state(b), Some(OpState::Ready));
+    }
+
+    #[test]
+    fn requeue_with_multiple_inflight_ops_per_stream() {
+        // a and b both in flight; a straggles and is evicted: it must come
+        // back at the *front* of the stream, ahead of pending c, while b
+        // stays in flight and can still complete
+        let mut w = Window::new(16);
+        let a = w.submit(req(0), 0.0).unwrap();
+        let b = w.submit(req(0), 0.0).unwrap();
+        let c = w.submit(req(0), 0.0).unwrap();
+        w.issue(&[a]);
+        w.issue(&[b]);
+        assert_eq!(w.state(c), Some(OpState::Ready));
+        w.requeue(a);
+        assert_eq!(w.state(a), Some(OpState::Ready));
+        assert_eq!(w.state(c), Some(OpState::Blocked), "a re-enters ahead of c");
+        assert_eq!(w.state(b), Some(OpState::InFlight));
+        w.complete(b); // out-of-order completion is fine
+        w.issue(&[a]);
+        assert_eq!(w.state(c), Some(OpState::Ready));
+        w.complete(a);
+        w.issue(&[c]);
+        w.complete(c);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn group_pending_tracks_unissued_ops() {
+        let mut w = Window::new(16);
+        let a = w
+            .submit(req(0).with_group(7), 0.0)
+            .unwrap();
+        let _b = w.submit(req(1).with_group(7), 0.0).unwrap();
+        let _c = w.submit(req(2).with_group(9), 0.0).unwrap();
+        assert_eq!(w.pending_in_group(7), 2);
+        assert_eq!(w.pending_in_group(9), 1);
+        assert_eq!(w.pending_in_group(42), 0);
+        w.issue(&[a]);
+        assert_eq!(w.pending_in_group(7), 1, "in-flight ops are not pending");
+        w.requeue(a);
+        assert_eq!(w.pending_in_group(7), 2, "requeue restores pending");
+        w.issue(&[a]);
+        w.complete(a);
+        assert_eq!(w.pending_in_group(7), 1);
     }
 
     #[test]

@@ -134,6 +134,7 @@ fn serve() -> Result<()> {
         .flag("requests", "40", "requests per tenant")
         .flag("speedup", "1", "trace time compression factor")
         .flag("seed", "42", "trace seed")
+        .flag("workers", "1", "launch-stage workers (>1: one backend per worker, models execute concurrently)")
         .flag("log", "info", "log level")
         .switch("no-batching", "serve batch-1 FIFO (baseline)");
     let p = parse(args)?;
@@ -143,9 +144,11 @@ fn serve() -> Result<()> {
     let per = p.get_usize("requests").map_err(|e| anyhow::anyhow!("{e}"))?;
     let speedup = p.get_f64("speedup").map_err(|e| anyhow::anyhow!("{e}"))?;
     let seed = p.get_u64("seed").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let workers = p.get_usize("workers").map_err(|e| anyhow::anyhow!("{e}"))?;
 
+    let models = ["mlp_small", "gemmnet6", "mlp_large"];
     let mut ex = PjrtExecutor::from_default_artifacts().context("artifacts")?;
-    for m in ["mlp_small", "mlp_large", "gemmnet6"] {
+    for m in models {
         let us = ex.warmup_model(m).map_err(|e| anyhow::anyhow!("{e}"))?;
         println!("warmed {m} in {:.1} ms", us / 1e3);
     }
@@ -154,15 +157,32 @@ fn serve() -> Result<()> {
     } else {
         BatchPolicy::coalescing()
     };
-    let tenants = mixed_tenants(n, &["mlp_small", "gemmnet6", "mlp_large"], rate);
+    let tenants = mixed_tenants(n, &models, rate);
     let trace = Trace::generate(&tenants, per, seed);
     println!(
-        "serving {} requests from {n} tenants (offered {:.0} req/s, speedup {speedup}x)...",
+        "serving {} requests from {n} tenants (offered {:.0} req/s, speedup {speedup}x, {workers} worker(s))...",
         trace.requests.len(),
         trace.offered_load()
     );
     let mut server = Server::new(ex, policy);
-    let report = server.run_realtime(&trace, speedup);
+    let report = if workers > 1 {
+        // concurrent launch stage: each worker builds + warms its own
+        // executor on its own thread; models execute in parallel
+        server.run_realtime_pooled(&trace, speedup, workers, move |i| {
+            let mut ex = PjrtExecutor::from_default_artifacts()
+                .expect("worker artifacts");
+            for m in models {
+                let _ = ex.warmup_model(m);
+            }
+            logging::emit(
+                logging::Level::Info,
+                format_args!("launch worker {i} ready"),
+            );
+            ex
+        })
+    } else {
+        server.run_realtime(&trace, speedup)
+    };
     println!("{}", report.render());
     Ok(())
 }

@@ -20,28 +20,8 @@ use crate::gpu::kernel::KernelDesc;
 use crate::runtime::artifact::{Manifest, SuperArtifact};
 use crate::runtime::golden;
 use crate::runtime::pjrt::{HostTensor, PjrtRuntime};
+use crate::util::stats::Ewma;
 use crate::{Error, Result};
-
-/// EWMA latency estimator.
-#[derive(Debug, Clone, Copy)]
-struct Ewma {
-    value: f64,
-    alpha: f64,
-}
-
-impl Ewma {
-    fn new(alpha: f64) -> Self {
-        Ewma { value: 0.0, alpha }
-    }
-
-    fn observe(&mut self, x: f64) {
-        self.value = if self.value == 0.0 {
-            x
-        } else {
-            self.alpha * x + (1.0 - self.alpha) * self.value
-        };
-    }
-}
 
 /// Result of a batched model execution.
 #[derive(Debug, Clone)]
@@ -245,10 +225,14 @@ impl PjrtExecutor {
             .observe(us);
     }
 
-    fn estimate_file(&self, file: &str, flops: f64) -> f64 {
-        match self.est.get(file) {
-            Some(e) if e.value > 0.0 => e.value,
-            _ => flops / (self.prior_gflops * 1e3), // µs
+    /// Learned per-artifact estimate, falling back to the FLOPS prior only
+    /// while the artifact has never been observed (the estimator's
+    /// observation count — not a 0-value sentinel — decides; a genuine
+    /// ~0 µs measurement is a valid estimate).
+    pub(crate) fn estimate_file(&self, file: &str, flops: f64) -> f64 {
+        match self.est.get(file).and_then(|e| e.value()) {
+            Some(v) => v,
+            None => flops / (self.prior_gflops * 1e3), // µs
         }
     }
 
@@ -418,6 +402,17 @@ mod tests {
             (post - measured).abs() / measured < 0.5,
             "estimate {post} should track measurement {measured} (prior {prior})"
         );
+    }
+
+    #[test]
+    fn zero_observation_overrides_prior() {
+        // regression: a genuine ~0 µs measurement must beat the FLOPS
+        // prior, not be mistaken for "never observed"
+        let mut e = exec();
+        e.observe("synthetic_artifact", 0.0);
+        assert_eq!(e.estimate_file("synthetic_artifact", 1e9), 0.0);
+        let prior = e.estimate_file("unseen_artifact", 1e9);
+        assert!(prior > 0.0, "unseen artifacts still use the prior");
     }
 
     #[test]

@@ -1,8 +1,10 @@
 //! Serving metrics: per-tenant latency distributions, SLO attainment,
-//! batch occupancy and device-busy accounting.
+//! batch occupancy, device-busy accounting, and the JIT core's per-launch
+//! pack statistics (mean pack, padding efficiency, evictions).
 
 use std::collections::BTreeMap;
 
+use crate::compiler::jit::JitStats;
 use crate::util::stats::LatencyHist;
 
 /// Metrics for one tenant.
@@ -52,6 +54,10 @@ pub struct ServeMetrics {
     pub busy_us: f64,
     /// Wall/virtual span of the run, µs.
     pub span_us: f64,
+    /// The JIT core's aggregate stats for the run (launches, mean pack,
+    /// pack efficiency, evictions) — the serving layer and the scheduler
+    /// share one core, so these are the same numbers the benches report.
+    pub jit: JitStats,
 }
 
 impl ServeMetrics {
@@ -149,6 +155,16 @@ impl ServeMetrics {
             self.throughput(),
             self.overall_attainment(),
         ));
+        if self.jit.launches > 0 {
+            s.push_str(&format!(
+                "jit: launches={} mean_pack={:.2} pack_eff={:.2} evictions={} slo_attain={:.3}\n",
+                self.jit.launches,
+                self.jit.mean_pack(),
+                self.jit.pack_efficiency(),
+                self.jit.evictions,
+                self.jit.slo_attainment(),
+            ));
+        }
         s.push_str("tenant     n     p50(ms)  p99(ms)  max(ms)  attain  drops\n");
         for (id, t) in &self.tenants {
             s.push_str(&format!(
@@ -212,5 +228,20 @@ mod tests {
         let r = m.render();
         assert!(r.contains("tenant"));
         assert!(r.contains('7'));
+    }
+
+    #[test]
+    fn render_shows_jit_stats_when_present() {
+        let mut m = ServeMetrics::default();
+        m.complete(0, 1_000.0, true);
+        m.span_us = 1e6;
+        assert!(!m.render().contains("jit:"), "no jit line before launches");
+        m.jit.launches = 4;
+        m.jit.ops = 12;
+        m.jit.evictions = 1;
+        let r = m.render();
+        assert!(r.contains("jit:"));
+        assert!(r.contains("mean_pack=3.00"));
+        assert!(r.contains("evictions=1"));
     }
 }

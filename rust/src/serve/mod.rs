@@ -1,22 +1,24 @@
 //! Multi-tenant model serving over the OoO JIT runtime.
 //!
-//! The serving layer is the *model-granularity* deployment of the paper's
-//! scheduler: requests from independent tenants are EDF-ordered, held in a
-//! bounded coalescing window, and coalesced into the smallest compiled
-//! batch variant (the model-level analogue of superkernel packing; the
-//! kernel-level path is exercised through `compiler::jit` +
-//! `runtime::executor`). Python never runs here.
+//! The serving layer is a *thin driver* over the one scheduler in this
+//! repo (`compiler::{window, scheduler, jit}`): requests become
+//! `DispatchRequest`s with attached row payloads, each (tenant, model)
+//! pair is a stream, each model a coalescing group, and every hold/launch
+//! decision is the JIT core's. Packs execute as padded compiled batch
+//! variants through the [`server::ServeExecutor`] adapter. Python never
+//! runs here.
 //!
-//! * [`server`] — the serving loop: virtual-paced trace replay (benches,
-//!   reproducible) and a threaded real-time mode (tenant threads → batcher
-//!   thread → executor);
+//! * [`server`] — the serving drivers: virtual-paced trace replay
+//!   (benches, reproducible), an inline real-time mode, and a concurrent
+//!   real-time mode with per-model worker backends;
 //! * [`metrics`] — per-tenant latency histograms, SLO attainment,
-//!   batch-occupancy accounting;
-//! * [`admission`] — bounded queues + drop policy (backpressure).
+//!   batch-occupancy accounting, JIT pack stats;
+//! * [`admission`] — bounded queues + drop policy (backpressure), sharing
+//!   the scheduler's service-time estimator.
 
 pub mod admission;
 pub mod metrics;
 pub mod server;
 
 pub use metrics::ServeMetrics;
-pub use server::{BatchPolicy, ServeReport, Server};
+pub use server::{BatchPolicy, ModelBackend, ModelSlot, ServeExecutor, ServeReport, Server};

@@ -1,26 +1,54 @@
-//! The serving loop: declarative requests in, coalesced batches out.
+//! The serving loop — a thin driver over the OoO JIT core.
 //!
-//! Two drive modes share one batching core:
+//! There is exactly ONE scheduler in this repo: `compiler::{window,
+//! scheduler, jit}`. The serving layer no longer re-implements EDF/hold
+//! logic; it maps requests onto the JIT's declarative dispatch IR and lets
+//! the shared core make every decision:
 //!
-//! * [`Server::replay`] — virtual-paced: arrivals advance a virtual clock,
-//!   service times are *real measured executions* (PJRT). Deterministic
-//!   given a trace; used by benches and the e2e example.
-//! * [`Server::run_realtime`] — threaded: per-tenant generator threads
-//!   pace arrivals on the wall clock and a batcher thread drains them;
-//!   latencies are wall-clock. Used by `vliwd serve`.
+//! * each **(tenant, model)** pair is a [`StreamId`] (a stream of
+//!   execution in the paper's sense);
+//! * each **model** is a coalescing *group*: requests for one model pack
+//!   into one launch (up to the model's largest compiled batch variant),
+//!   requests for different models never share a launch;
+//! * each **request** is a [`DispatchRequest`] carrying its SLO and its
+//!   input row as the attached payload;
+//! * a pack launch executes as one padded model batch through
+//!   [`ModelBackend::execute`] (the [`ServeExecutor`] adapter).
 //!
-//! The batching rule is the model-level instance of the paper's scheduler:
-//! EDF across queues, bounded coalescing window, pad-up to the smallest
-//! compiled batch variant, launch early when a deadline approaches.
+//! Three drive modes, one core:
+//!
+//! * [`Server::replay`] — virtual-paced arrivals, real measured service
+//!   times, synchronous `pump`. Deterministic given a trace and a
+//!   deterministic backend.
+//! * [`Server::run_realtime`] — wall-clock arrivals from a generator
+//!   thread, launches executed inline (`issue_ready` → `run_issued` →
+//!   `finish_launch`).
+//! * [`Server::run_realtime_pooled`] — the concurrent launch stage:
+//!   launches fan out to a [`StatefulPool`] where each worker owns its own
+//!   backend, so superkernels for different models execute in parallel;
+//!   window capacity is the admission backstop.
+//!
+//! Admission and the scheduler share one estimator
+//! ([`ServeExecutor::estimate_group_us`]), priced at the *padded* compiled
+//! variant that will actually run — they can no longer disagree.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
+use crate::compiler::ir::{DispatchRequest, StreamId, TensorOp};
+use crate::compiler::jit::{
+    JitCompiler, JitConfig, OpCompletion, PackExecutor, PackMember, PackRun,
+};
+use crate::compiler::coalescer::{Coalescer, SuperKernel};
+use crate::compiler::scheduler::Policy;
+use crate::gpu::kernel::KernelDesc;
 use crate::runtime::executor::{ModelExec, PjrtExecutor};
 use crate::runtime::golden;
 use crate::serve::admission::{Admission, Admit};
 use crate::serve::metrics::ServeMetrics;
+use crate::util::stats::Ewma;
+use crate::util::threadpool::StatefulPool;
 use crate::workload::trace::Trace;
 use crate::Result;
 
@@ -57,18 +85,93 @@ impl BatchPolicy {
             BatchPolicy::Coalescing { .. } => "ooo-coalescing",
         }
     }
+
+    /// Lower the serving policy onto the JIT core's knobs: per-model pack
+    /// caps (largest compiled variant) and the shared scheduler policy.
+    fn jit_config(&self, models: &[ModelSlot], window_capacity: usize) -> JitConfig {
+        let max_b = models
+            .iter()
+            .map(|m| m.max_batch as usize)
+            .max()
+            .unwrap_or(1)
+            .max(1);
+        let (policy, max_problems) = match *self {
+            BatchPolicy::NoBatching => (
+                Policy {
+                    coalesce_window_us: 0.0,
+                    target_pack: 1,
+                    safety_margin_us: 0.0,
+                    ..Policy::default()
+                },
+                1,
+            ),
+            BatchPolicy::Coalescing {
+                window_us,
+                target_batch,
+                safety_margin_us,
+            } => (
+                Policy {
+                    coalesce_window_us: window_us,
+                    target_pack: (target_batch as usize).max(1),
+                    safety_margin_us,
+                    ..Policy::default()
+                },
+                max_b,
+            ),
+        };
+        let mut coalescer = Coalescer::new(max_problems, 1.0);
+        for (g, m) in models.iter().enumerate() {
+            coalescer
+                .group_caps
+                .insert(g as u64, (m.max_batch as usize).max(1));
+        }
+        JitConfig {
+            policy,
+            coalescer,
+            window_capacity,
+            packing_overhead_us: 0.0,
+        }
+    }
 }
 
 /// Backend abstraction (real PJRT or a test stub).
 pub trait ModelBackend {
     /// Execute a batch of rows on a model.
     fn execute(&mut self, model: &str, rows: &[Vec<f32>]) -> Result<ModelExec>;
-    /// Estimated service time for a batch of `n`, µs.
-    fn estimate_us(&mut self, model: &str, n: u32) -> f64;
+    /// Estimated service time for a batch of `n`, µs. Implementations
+    /// should price the padded variant that `n` rows would actually run.
+    fn estimate_us(&self, model: &str, n: u32) -> f64;
     /// Largest compiled batch.
     fn max_batch(&self, model: &str) -> u32;
     /// Input feature count.
     fn d_in(&self, model: &str) -> usize;
+    /// The batch size `n` rows actually execute at (smallest compiled
+    /// variant that fits). Defaults to no padding knowledge.
+    fn padded_batch(&self, model: &str, n: u32) -> u32 {
+        n.max(1).min(self.max_batch(model).max(1))
+    }
+}
+
+impl<B: ModelBackend + ?Sized> ModelBackend for &mut B {
+    fn execute(&mut self, model: &str, rows: &[Vec<f32>]) -> Result<ModelExec> {
+        (**self).execute(model, rows)
+    }
+
+    fn estimate_us(&self, model: &str, n: u32) -> f64 {
+        (**self).estimate_us(model, n)
+    }
+
+    fn max_batch(&self, model: &str) -> u32 {
+        (**self).max_batch(model)
+    }
+
+    fn d_in(&self, model: &str) -> usize {
+        (**self).d_in(model)
+    }
+
+    fn padded_batch(&self, model: &str, n: u32) -> u32 {
+        (**self).padded_batch(model, n)
+    }
 }
 
 impl ModelBackend for PjrtExecutor {
@@ -76,15 +179,21 @@ impl ModelBackend for PjrtExecutor {
         PjrtExecutor::execute_model(self, model, rows)
     }
 
-    fn estimate_us(&mut self, model: &str, n: u32) -> f64 {
-        // flops-proportional prior scaled by the learned model rate; use
-        // per-query flops × padded batch
-        let (flops, _) = match self.manifest().model(model) {
-            Ok(e) => (e.flops_per_query as f64, e.d_in),
-            Err(_) => return 1_000.0,
+    /// Service-time estimate for `n` rows: the *padded compiled variant*
+    /// that will actually run, using the learned per-artifact latency when
+    /// available, else the FLOPS-proportional prior scaled by the padded
+    /// batch (not the raw `n` — underestimating the padded launch made the
+    /// old batcher hold too long near deadlines).
+    fn estimate_us(&self, model: &str, n: u32) -> f64 {
+        let Ok(entry) = self.manifest().model(model) else {
+            return 1_000.0;
         };
-        let batch = n.max(1) as f64;
-        flops * batch / (self.prior_gflops * 1e3)
+        let per_query = entry.flops_per_query as f64;
+        match entry.variant_for(n.max(1)) {
+            Some(art) => self.estimate_file(&art.file, per_query * art.batch as f64),
+            // batch exceeds the largest variant: extrapolate on the prior
+            None => per_query * n.max(1) as f64 / (self.prior_gflops * 1e3),
+        }
     }
 
     fn max_batch(&self, model: &str) -> u32 {
@@ -100,14 +209,121 @@ impl ModelBackend for PjrtExecutor {
             .map(|e| e.d_in as usize)
             .unwrap_or(0)
     }
+
+    fn padded_batch(&self, model: &str, n: u32) -> u32 {
+        self.manifest()
+            .model(model)
+            .ok()
+            .and_then(|e| e.variant_for(n.max(1)).map(|a| a.batch))
+            .unwrap_or_else(|| self.max_batch(model))
+    }
 }
 
+/// One served model: the coalescing-group table entry.
 #[derive(Debug, Clone)]
-struct Pending {
-    tenant: u32,
-    arrival_us: f64,
-    deadline_us: f64,
-    row: Vec<f32>,
+pub struct ModelSlot {
+    /// Manifest model name.
+    pub name: String,
+    /// Input feature count.
+    pub d_in: usize,
+    /// Largest compiled batch variant.
+    pub max_batch: u32,
+}
+
+/// Adapter: executes JIT packs as padded model batches on a
+/// [`ModelBackend`]. This is what makes `JitCompiler` the single serving
+/// core — estimation (admission + scheduler) and execution both live here.
+pub struct ServeExecutor<B: ModelBackend> {
+    backend: B,
+    models: Vec<ModelSlot>,
+    /// learned per-(group, padded batch) service time, µs
+    est: HashMap<(u64, u32), Ewma>,
+}
+
+impl<B: ModelBackend> ServeExecutor<B> {
+    /// New adapter over a backend and the run's model table.
+    pub fn new(backend: B, models: Vec<ModelSlot>) -> Self {
+        ServeExecutor {
+            backend,
+            models,
+            est: HashMap::new(),
+        }
+    }
+
+    /// Borrow the backend.
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    /// The model table (group id = index).
+    pub fn models(&self) -> &[ModelSlot] {
+        &self.models
+    }
+
+    /// Estimated service time of `n` queued requests for a model group,
+    /// priced at the padded compiled variant that would actually run —
+    /// the ONE estimator shared by admission and the scheduler.
+    pub fn estimate_group_us(&self, group: u64, n: u32) -> f64 {
+        let slot = &self.models[group as usize];
+        let padded = self.backend.padded_batch(&slot.name, n);
+        match self.est.get(&(group, padded)).and_then(|e| e.value()) {
+            Some(v) => v,
+            None => self.backend.estimate_us(&slot.name, n),
+        }
+    }
+
+    fn observe_group(&mut self, group: u64, padded: u32, us: f64) {
+        self.est
+            .entry((group, padded))
+            .or_insert_with(|| Ewma::new(0.3))
+            .observe(us);
+    }
+}
+
+impl<B: ModelBackend> PackExecutor<Vec<f32>> for ServeExecutor<B> {
+    fn estimate_pack_us(&self, _k: &KernelDesc, ops: &[&TensorOp]) -> f64 {
+        match ops.first() {
+            Some(op) => self.estimate_group_us(op.group, ops.len() as u32),
+            None => 0.0,
+        }
+    }
+
+    fn execute_pack(
+        &mut self,
+        sk: &SuperKernel,
+        members: &[PackMember<'_, Vec<f32>>],
+    ) -> PackRun {
+        let group = members.first().map(|m| m.op.group).unwrap_or(0);
+        let name = self.models[group as usize].name.clone();
+        let rows: Vec<Vec<f32>> = members.iter().map(|m| m.payload.clone()).collect();
+        match self.backend.execute(&name, &rows) {
+            Ok(exec) => PackRun {
+                duration_us: exec.duration_us,
+                executed: exec.batch,
+                ok: true,
+            },
+            Err(e) => {
+                crate::util::logging::emit(
+                    crate::util::logging::Level::Error,
+                    format_args!("execute {name} failed: {e}"),
+                );
+                PackRun {
+                    duration_us: 0.0,
+                    executed: sk.kernel.problems,
+                    ok: false,
+                }
+            }
+        }
+    }
+
+    fn observe_pack(&mut self, _sk: &SuperKernel, ops: &[&TensorOp], run: &PackRun) {
+        if !run.ok {
+            return;
+        }
+        if let Some(op) = ops.first() {
+            self.observe_group(op.group, run.executed, run.duration_us);
+        }
+    }
 }
 
 /// Serving report.
@@ -126,6 +342,55 @@ impl ServeReport {
     }
 }
 
+/// A (tenant, model-group) pair is one stream of execution: per-tenant
+/// program order within a model, full independence across pairs. Stream
+/// ids are interned per run in first-appearance order (no bit packing —
+/// arbitrary tenant ids can never collide).
+fn intern_stream(
+    streams: &mut BTreeMap<(u32, u64), u32>,
+    tenant: u32,
+    group: u64,
+) -> StreamId {
+    let next = streams.len() as u32;
+    StreamId(*streams.entry((tenant, group)).or_insert(next))
+}
+
+/// Build the run's model table (group id = sorted-name index) from the
+/// trace and the backend's manifest knowledge.
+fn model_slots<B: ModelBackend>(
+    backend: &B,
+    trace: &Trace,
+) -> (Vec<ModelSlot>, BTreeMap<String, u64>) {
+    let mut names: BTreeSet<String> =
+        trace.tenants.iter().map(|t| t.model.clone()).collect();
+    for r in &trace.requests {
+        names.insert(r.model.clone());
+    }
+    let slots: Vec<ModelSlot> = names
+        .iter()
+        .map(|n| ModelSlot {
+            name: n.clone(),
+            d_in: backend.d_in(n),
+            max_batch: backend.max_batch(n).max(1),
+        })
+        .collect();
+    let index: BTreeMap<String, u64> = slots
+        .iter()
+        .enumerate()
+        .map(|(i, s)| (s.name.clone(), i as u64))
+        .collect();
+    (slots, index)
+}
+
+fn record_completion(metrics: &mut ServeMetrics, c: &OpCompletion) {
+    let tenant = c.op.tag as u32;
+    if c.failed {
+        metrics.drop_request(tenant);
+    } else {
+        metrics.complete(tenant, c.latency_us(), c.met_deadline);
+    }
+}
+
 /// The multi-tenant server.
 pub struct Server<B: ModelBackend> {
     backend: B,
@@ -133,6 +398,9 @@ pub struct Server<B: ModelBackend> {
     pub policy: BatchPolicy,
     /// Admission control.
     pub admission: Admission,
+    /// JIT issue-window capacity — the backpressure backstop behind
+    /// admission.
+    pub window_capacity: usize,
 }
 
 impl<B: ModelBackend> Server<B> {
@@ -142,6 +410,7 @@ impl<B: ModelBackend> Server<B> {
             backend,
             policy,
             admission: Admission::default(),
+            window_capacity: 1024,
         }
     }
 
@@ -155,253 +424,332 @@ impl<B: ModelBackend> Server<B> {
         &mut self.backend
     }
 
-    /// Replay a trace in virtual time with real service executions.
-    /// Request payloads are deterministic hash01 rows.
-    pub fn replay(&mut self, trace: &Trace) -> ServeReport {
-        let mut metrics = ServeMetrics::default();
-        let mut queues: BTreeMap<String, VecDeque<Pending>> = BTreeMap::new();
-        let reqs = &trace.requests;
-        let mut next = 0usize;
-        let mut now = 0.0f64;
-        while next < reqs.len() || queues.values().any(|q| !q.is_empty()) {
-            // 1. admit arrivals
-            while next < reqs.len() && reqs[next].arrival_us <= now + 1e-9 {
-                let r = &reqs[next];
-                next += 1;
-                let d_in = self.backend.d_in(&r.model);
-                let q = queues.entry(r.model.clone()).or_default();
-                let est = self.backend.estimate_us(&r.model, q.len() as u32 + 1);
-                let slack_after = r.deadline_us - now - est;
-                match self.admission.decide(q.len(), slack_after) {
-                    Admit::Reject => metrics.drop_request(r.tenant),
-                    Admit::Accept => q.push_back(Pending {
-                        tenant: r.tenant,
-                        arrival_us: r.arrival_us,
-                        deadline_us: r.deadline_us,
-                        row: golden::gen_hash01(d_in, r.id.wrapping_mul(7919)),
-                    }),
-                }
-            }
-            // 2. pick the queue whose head deadline is earliest
-            let pick = queues
-                .iter()
-                .filter(|(_, q)| !q.is_empty())
-                .min_by(|(_, a), (_, b)| {
-                    let da = a.iter().map(|p| p.deadline_us).fold(f64::INFINITY, f64::min);
-                    let db = b.iter().map(|p| p.deadline_us).fold(f64::INFINITY, f64::min);
-                    da.partial_cmp(&db).unwrap()
-                })
-                .map(|(m, _)| m.clone());
-            let Some(model) = pick else {
-                // idle: jump to next arrival
-                if next < reqs.len() {
-                    now = now.max(reqs[next].arrival_us);
-                    continue;
-                }
-                break;
-            };
-            // 3. launch or hold
-            let launch_at = self.hold_until(&model, &queues[&model], now);
-            let next_arrival = reqs.get(next).map(|r| r.arrival_us);
-            if now + 1e-9 < launch_at {
-                // wait for either the window to close or a new arrival
-                now = match next_arrival {
-                    Some(t) if t < launch_at => t,
-                    _ => launch_at,
-                };
-                continue;
-            }
-            // 4. execute: EDF order within the queue, up to max batch
-            let q = queues.get_mut(&model).expect("picked");
-            let max_b = self.backend.max_batch(&model) as usize;
-            let take = match self.policy {
-                BatchPolicy::NoBatching => 1,
-                BatchPolicy::Coalescing { .. } => q.len().min(max_b),
-            };
-            let mut batch: Vec<Pending> = q.drain(..take).collect();
-            batch.sort_by(|a, b| a.deadline_us.partial_cmp(&b.deadline_us).unwrap());
-            let rows: Vec<Vec<f32>> = batch.iter().map(|p| p.row.clone()).collect();
-            match self.backend.execute(&model, &rows) {
-                Ok(exec) => {
-                    now += exec.duration_us;
-                    metrics.batch(rows.len() as u32, exec.batch, exec.duration_us);
-                    for p in &batch {
-                        metrics.complete(p.tenant, now - p.arrival_us, now <= p.deadline_us);
-                    }
-                }
-                Err(e) => {
-                    crate::util::logging::emit(
-                        crate::util::logging::Level::Error,
-                        format_args!("execute {model} failed: {e}"),
-                    );
-                    for p in &batch {
-                        metrics.drop_request(p.tenant);
-                    }
-                }
-            }
+    /// Admission decision for one request; on Accept, submits it into the
+    /// JIT (window backpressure sheds as a backstop). Records drops.
+    #[allow(clippy::too_many_arguments)]
+    fn admit_request(
+        jit: &mut JitCompiler<ServeExecutor<&mut B>, Vec<f32>>,
+        streams: &mut BTreeMap<(u32, u64), u32>,
+        admission: &Admission,
+        metrics: &mut ServeMetrics,
+        slots: &[ModelSlot],
+        group: u64,
+        tenant: u32,
+        arrival_us: f64,
+        deadline_us: f64,
+        row: Vec<f32>,
+    ) {
+        let depth = jit.window.pending_in_group(group);
+        let est = jit.executor().estimate_group_us(group, depth as u32 + 1);
+        let slack_after = deadline_us - jit.now_us - est;
+        if admission.decide(depth, slack_after) == Admit::Reject {
+            metrics.drop_request(tenant);
+            return;
         }
-        metrics.span_us = now;
-        ServeReport {
-            metrics,
-            policy: self.policy.name(),
+        let slot = &slots[group as usize];
+        let req = DispatchRequest::new(
+            intern_stream(streams, tenant, group),
+            KernelDesc::gemm(1, slot.d_in as u32, 1),
+            deadline_us - arrival_us,
+        )
+        .with_group(group)
+        .with_tag(tenant as u64);
+        if jit.submit_at(req, arrival_us, row).is_none() {
+            // window full: the backpressure backstop sheds the request
+            metrics.drop_request(tenant);
         }
     }
 
-    /// When may the given queue launch, per the coalescing policy?
-    fn hold_until(&mut self, model: &str, q: &VecDeque<Pending>, _now: f64) -> f64 {
-        match self.policy {
-            BatchPolicy::NoBatching => 0.0,
-            BatchPolicy::Coalescing {
-                window_us,
-                target_batch,
-                safety_margin_us,
-            } => {
-                let max_b = self.backend.max_batch(model);
-                if q.len() as u32 >= target_batch.min(max_b) {
-                    return 0.0; // full enough: go now
-                }
-                let est = self.backend.estimate_us(model, q.len() as u32);
-                let critical = q
-                    .iter()
-                    .map(|p| p.deadline_us)
-                    .fold(f64::INFINITY, f64::min)
-                    - est
-                    - safety_margin_us;
-                let oldest = q
-                    .iter()
-                    .map(|p| p.arrival_us)
-                    .fold(f64::INFINITY, f64::min);
-                critical.min(oldest + window_us)
+    /// Replay a trace in virtual time with real service executions,
+    /// entirely through the JIT core. Request payloads are deterministic
+    /// hash01 rows.
+    pub fn replay(&mut self, trace: &Trace) -> ServeReport {
+        let mut metrics = ServeMetrics::default();
+        let (slots, index) = model_slots(&self.backend, trace);
+        let cfg = self.policy.jit_config(&slots, self.window_capacity);
+        let policy_name = self.policy.name();
+        let admission = self.admission.clone();
+        let mut jit: JitCompiler<ServeExecutor<&mut B>, Vec<f32>> =
+            JitCompiler::with_payloads(
+                cfg,
+                ServeExecutor::new(&mut self.backend, slots.clone()),
+            );
+        let mut streams: BTreeMap<(u32, u64), u32> = BTreeMap::new();
+        let reqs = &trace.requests;
+        let mut next = 0usize;
+        loop {
+            // 1. admit everything that has arrived (true arrival times)
+            while next < reqs.len() && reqs[next].arrival_us <= jit.now_us + 1e-9 {
+                let r = &reqs[next];
+                next += 1;
+                let group = index[&r.model];
+                let row =
+                    golden::gen_hash01(slots[group as usize].d_in, r.id.wrapping_mul(7919));
+                Self::admit_request(
+                    &mut jit,
+                    &mut streams,
+                    &admission,
+                    &mut metrics,
+                    &slots,
+                    group,
+                    r.tenant,
+                    r.arrival_us,
+                    r.deadline_us,
+                    row,
+                );
             }
+            // 2. let the core launch everything the policy allows
+            let (done, wake) = jit.pump();
+            for c in &done {
+                record_completion(&mut metrics, c);
+            }
+            for l in jit.take_launches() {
+                if l.ok {
+                    metrics.batch(l.pack_size, l.executed, l.duration_us);
+                }
+            }
+            // 3. advance the virtual clock to the next event
+            let next_arrival = reqs.get(next).map(|r| r.arrival_us);
+            match (wake, next_arrival) {
+                (None, None) => {
+                    debug_assert!(jit.window.is_empty(), "deadlocked window");
+                    break;
+                }
+                (None, Some(t)) => jit.advance_to(t),
+                (Some(w), None) => jit.advance_to(w),
+                (Some(w), Some(t)) => jit.advance_to(w.min(t)),
+            }
+        }
+        metrics.span_us = jit.now_us;
+        metrics.jit = jit.stats.clone();
+        ServeReport {
+            metrics,
+            policy: policy_name,
         }
     }
 
     /// Threaded real-time mode: a generator thread paces the trace on the
-    /// wall clock (compressed by `speedup`), the current thread batches and
-    /// executes. Returns wall-clock metrics.
-    pub fn run_realtime(&mut self, trace: &Trace, speedup: f64) -> ServeReport {
+    /// wall clock (compressed by `speedup`); the current thread drives the
+    /// JIT core and executes launches inline. Returns wall-clock metrics.
+    pub fn run_realtime(&mut self, trace: &Trace, speedup: f64) -> ServeReport
+    where
+        B: 'static,
+    {
+        self.realtime_loop(trace, speedup, None)
+    }
+
+    /// Concurrent real-time mode: launches fan out to `workers` pool
+    /// workers, each owning its own backend built by `factory` on its own
+    /// thread (the backend type need not be `Send`). Superkernels for
+    /// different models execute in parallel; one model's launches stay
+    /// serialized (and cache-warm) on its owning worker.
+    pub fn run_realtime_pooled<F>(
+        &mut self,
+        trace: &Trace,
+        speedup: f64,
+        workers: usize,
+        factory: F,
+    ) -> ServeReport
+    where
+        B: 'static,
+        F: Fn(usize) -> B + Send + Sync + 'static,
+    {
+        let pool = StatefulPool::new(workers, factory);
+        self.realtime_loop(trace, speedup, Some(&pool))
+    }
+
+    fn realtime_loop(
+        &mut self,
+        trace: &Trace,
+        speedup: f64,
+        pool: Option<&StatefulPool<B>>,
+    ) -> ServeReport
+    where
+        B: 'static,
+    {
         struct Incoming {
             tenant: u32,
-            model: String,
+            group: u64,
             slo_us: f64,
-            sent: Instant,
+            arrival: Instant,
             row: Vec<f32>,
         }
-        let (tx, rx) = mpsc::channel::<Incoming>();
-        let reqs: Vec<(f64, u32, String, f64, u64)> = trace
+        let (slots, index) = model_slots(&self.backend, trace);
+        let gen_reqs: Vec<(f64, u32, u64, f64, u64)> = trace
             .requests
             .iter()
             .map(|r| {
                 (
                     r.arrival_us / speedup,
                     r.tenant,
-                    r.model.clone(),
+                    index[&r.model],
                     r.deadline_us - r.arrival_us,
                     r.id,
                 )
             })
             .collect();
-        let d_ins: BTreeMap<String, usize> = reqs
-            .iter()
-            .map(|(_, _, m, _, _)| (m.clone(), self.backend.d_in(m)))
-            .collect();
+        let d_ins: Vec<usize> = slots.iter().map(|s| s.d_in).collect();
+        let t0 = Instant::now();
+        let (tx, rx) = mpsc::channel::<Incoming>();
         let gen = std::thread::spawn(move || {
-            let t0 = Instant::now();
-            for (at_us, tenant, model, slo, id) in reqs {
+            let g0 = Instant::now();
+            for (at_us, tenant, group, slo, id) in gen_reqs {
                 let target = Duration::from_micros(at_us as u64);
-                let elapsed = t0.elapsed();
+                let elapsed = g0.elapsed();
                 if target > elapsed {
                     std::thread::sleep(target - elapsed);
                 }
-                let d_in = d_ins.get(&model).copied().unwrap_or(0);
+                let d_in = d_ins[group as usize];
                 let _ = tx.send(Incoming {
                     tenant,
-                    model,
+                    group,
                     slo_us: slo,
-                    sent: Instant::now(),
+                    arrival: Instant::now(),
                     row: golden::gen_hash01(d_in, id.wrapping_mul(7919)),
                 });
             }
         });
 
+        let cfg = self.policy.jit_config(&slots, self.window_capacity);
+        let policy_name = self.policy.name();
+        let admission = self.admission.clone();
         let mut metrics = ServeMetrics::default();
-        let mut queues: BTreeMap<String, VecDeque<(Incoming, Instant)>> = BTreeMap::new();
-        let t0 = Instant::now();
+        let (res_tx, res_rx) =
+            mpsc::channel::<(u64, std::result::Result<ModelExec, String>)>();
+        let mut jit: JitCompiler<ServeExecutor<&mut B>, Vec<f32>> =
+            JitCompiler::with_payloads(
+                cfg,
+                ServeExecutor::new(&mut self.backend, slots.clone()),
+            );
+        let wall_us = |t0: Instant| t0.elapsed().as_secs_f64() * 1e6;
+        let mut streams: BTreeMap<(u32, u64), u32> = BTreeMap::new();
         let mut disconnected = false;
         loop {
-            // drain the channel (bounded wait when idle)
-            let timeout = Duration::from_micros(500);
-            match rx.recv_timeout(timeout) {
-                Ok(inc) => {
-                    let now = Instant::now();
-                    queues
-                        .entry(inc.model.clone())
-                        .or_default()
-                        .push_back((inc, now));
-                    // keep draining whatever already arrived
-                    while let Ok(inc) = rx.try_recv() {
-                        let now = Instant::now();
-                        queues
-                            .entry(inc.model.clone())
-                            .or_default()
-                            .push_back((inc, now));
+            // 1. drain arrivals (bounded wait when idle); once the
+            // generator is gone the channel stays empty — pace the loop
+            // with a short sleep instead of spinning on it
+            let mut arrivals: Vec<Incoming> = Vec::new();
+            if disconnected {
+                std::thread::sleep(Duration::from_micros(200));
+            } else {
+                match rx.recv_timeout(Duration::from_micros(500)) {
+                    Ok(inc) => {
+                        arrivals.push(inc);
+                        while let Ok(inc) = rx.try_recv() {
+                            arrivals.push(inc);
+                        }
                     }
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => {}
-                Err(mpsc::RecvTimeoutError::Disconnected) => disconnected = true,
-            }
-            // launch every queue that is due (window close or full)
-            let models: Vec<String> = queues
-                .iter()
-                .filter(|(_, q)| !q.is_empty())
-                .map(|(m, _)| m.clone())
-                .collect();
-            for model in models {
-                let q = queues.get_mut(&model).expect("exists");
-                let max_b = self.backend.max_batch(&model) as usize;
-                let (window_us, target) = match self.policy {
-                    BatchPolicy::NoBatching => (0.0, 1usize),
-                    BatchPolicy::Coalescing {
-                        window_us,
-                        target_batch,
-                        ..
-                    } => (window_us, target_batch as usize),
-                };
-                let oldest_wait = q
-                    .front()
-                    .map(|(_, t)| t.elapsed().as_secs_f64() * 1e6)
-                    .unwrap_or(0.0);
-                let due = q.len() >= target.min(max_b) || oldest_wait >= window_us;
-                if !due {
-                    continue;
-                }
-                let take = match self.policy {
-                    BatchPolicy::NoBatching => 1,
-                    _ => q.len().min(max_b),
-                };
-                let batch: Vec<(Incoming, Instant)> = q.drain(..take).collect();
-                let rows: Vec<Vec<f32>> = batch.iter().map(|(i, _)| i.row.clone()).collect();
-                if let Ok(exec) = self.backend.execute(&model, &rows) {
-                    metrics.batch(rows.len() as u32, exec.batch, exec.duration_us);
-                    for (inc, _) in &batch {
-                        let lat_us = inc.sent.elapsed().as_secs_f64() * 1e6;
-                        metrics.complete(inc.tenant, lat_us, lat_us <= inc.slo_us);
-                    }
-                } else {
-                    for (inc, _) in &batch {
-                        metrics.drop_request(inc.tenant);
-                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => disconnected = true,
                 }
             }
-            if disconnected && queues.values().all(|q| q.is_empty()) {
+            jit.advance_to(wall_us(t0));
+            for inc in arrivals {
+                let arrival_us =
+                    inc.arrival.saturating_duration_since(t0).as_secs_f64() * 1e6;
+                Self::admit_request(
+                    &mut jit,
+                    &mut streams,
+                    &admission,
+                    &mut metrics,
+                    &slots,
+                    inc.group,
+                    inc.tenant,
+                    arrival_us,
+                    arrival_us + inc.slo_us,
+                    inc.row,
+                );
+            }
+            // 2. issue every launch the policy allows right now
+            let (launches, _wake) = jit.issue_ready();
+            match pool {
+                Some(pool) => {
+                    // concurrent launch stage: one worker per model group
+                    for l in launches {
+                        let group = jit
+                            .window
+                            .get(l.pack.ops[0])
+                            .map(|op| op.group)
+                            .unwrap_or(0);
+                        let model = slots[group as usize].name.clone();
+                        let rows: Vec<Vec<f32>> = jit
+                            .payloads_of(&l.pack.ops)
+                            .into_iter()
+                            .cloned()
+                            .collect();
+                        let res_tx = res_tx.clone();
+                        let ticket = l.ticket;
+                        pool.submit_to(group as usize, move |backend: &mut B| {
+                            let r = backend
+                                .execute(&model, &rows)
+                                .map_err(|e| e.to_string());
+                            let _ = res_tx.send((ticket, r));
+                        });
+                    }
+                }
+                None => {
+                    // inline execution on the driver thread
+                    for l in launches {
+                        let run = jit.run_issued(l.ticket);
+                        let done = jit.finish_launch(l.ticket, wall_us(t0), run);
+                        for c in &done {
+                            record_completion(&mut metrics, c);
+                        }
+                    }
+                }
+            }
+            // 3. fold in finished pool launches (block briefly when the
+            // arrival channel is gone and only results remain — avoids a
+            // busy spin on the disconnected arrival channel)
+            let mut results: Vec<(u64, std::result::Result<ModelExec, String>)> =
+                Vec::new();
+            if disconnected && jit.inflight_launches() > 0 {
+                if let Ok(r) = res_rx.recv_timeout(Duration::from_micros(500)) {
+                    results.push(r);
+                }
+            }
+            while let Ok(r) = res_rx.try_recv() {
+                results.push(r);
+            }
+            for (ticket, result) in results {
+                let run = match result {
+                    Ok(exec) => PackRun {
+                        duration_us: exec.duration_us,
+                        executed: exec.batch,
+                        ok: true,
+                    },
+                    Err(e) => {
+                        crate::util::logging::emit(
+                            crate::util::logging::Level::Error,
+                            format_args!("pooled execute failed: {e}"),
+                        );
+                        PackRun {
+                            duration_us: 0.0,
+                            executed: 0,
+                            ok: false,
+                        }
+                    }
+                };
+                let done = jit.finish_launch(ticket, wall_us(t0), run);
+                for c in &done {
+                    record_completion(&mut metrics, c);
+                }
+            }
+            for l in jit.take_launches() {
+                if l.ok {
+                    metrics.batch(l.pack_size, l.executed, l.duration_us);
+                }
+            }
+            if disconnected && jit.window.is_empty() && jit.inflight_launches() == 0 {
                 break;
             }
         }
         gen.join().expect("generator thread");
-        metrics.span_us = t0.elapsed().as_secs_f64() * 1e6;
+        metrics.span_us = wall_us(t0);
+        metrics.jit = jit.stats.clone();
         ServeReport {
             metrics,
-            policy: self.policy.name(),
+            policy: policy_name,
         }
     }
 }
@@ -417,7 +765,6 @@ mod tests {
         fixed_us: f64,
         per_row_us: f64,
         max_b: u32,
-        calls: u64,
     }
 
     impl FakeBackend {
@@ -426,14 +773,12 @@ mod tests {
                 fixed_us: 500.0,
                 per_row_us: 50.0,
                 max_b: 16,
-                calls: 0,
             }
         }
     }
 
     impl ModelBackend for FakeBackend {
         fn execute(&mut self, _model: &str, rows: &[Vec<f32>]) -> Result<ModelExec> {
-            self.calls += 1;
             let batch = (rows.len() as u32).next_power_of_two().min(self.max_b);
             let dur = self.fixed_us + self.per_row_us * batch as f64;
             Ok(ModelExec {
@@ -443,8 +788,9 @@ mod tests {
             })
         }
 
-        fn estimate_us(&mut self, _m: &str, n: u32) -> f64 {
-            self.fixed_us + self.per_row_us * n.max(1) as f64
+        fn estimate_us(&self, _m: &str, n: u32) -> f64 {
+            let padded = n.max(1).next_power_of_two().min(self.max_b);
+            self.fixed_us + self.per_row_us * padded as f64
         }
 
         fn max_batch(&self, _m: &str) -> u32 {
@@ -453,6 +799,10 @@ mod tests {
 
         fn d_in(&self, _m: &str) -> usize {
             4
+        }
+
+        fn padded_batch(&self, _m: &str, n: u32) -> u32 {
+            n.max(1).next_power_of_two().min(self.max_b)
         }
     }
 
@@ -535,6 +885,60 @@ mod tests {
     }
 
     #[test]
+    fn no_batching_runs_batch_one() {
+        let trace = Trace::generate(&tenants(4, 100.0, 100_000), 20, 21);
+        let mut s = Server::new(FakeBackend::new(), BatchPolicy::NoBatching);
+        let r = s.replay(&trace);
+        assert_eq!(r.metrics.total_completed(), 80);
+        assert_eq!(r.metrics.mean_occupancy(), 1.0);
+        assert_eq!(r.metrics.jit.mean_pack(), 1.0);
+    }
+
+    #[test]
+    fn replay_is_deterministic_through_unified_core() {
+        // two identical traces through the unified core must produce
+        // identical metrics (deterministic backend => deterministic
+        // schedule, bit-for-bit)
+        let trace = Trace::generate(&tenants(4, 150.0, 50_000), 40, 13);
+        let run = || {
+            let mut s = Server::new(FakeBackend::new(), BatchPolicy::coalescing());
+            s.replay(&trace)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.metrics.total_completed(), b.metrics.total_completed());
+        assert_eq!(a.metrics.batches, b.metrics.batches);
+        assert_eq!(a.metrics.useful_rows, b.metrics.useful_rows);
+        assert_eq!(a.metrics.padded_rows, b.metrics.padded_rows);
+        assert_eq!(a.metrics.span_us.to_bits(), b.metrics.span_us.to_bits());
+        assert_eq!(a.metrics.busy_us.to_bits(), b.metrics.busy_us.to_bits());
+        assert_eq!(a.metrics.jit.launches, b.metrics.jit.launches);
+        assert_eq!(a.metrics.jit.slo_hits, b.metrics.jit.slo_hits);
+        for (ta, tb) in a.metrics.tenants.iter().zip(b.metrics.tenants.iter()) {
+            assert_eq!(ta.0, tb.0);
+            assert_eq!(ta.1.slo_hits, tb.1.slo_hits);
+            assert_eq!(ta.1.slo_misses, tb.1.slo_misses);
+            assert_eq!(ta.1.dropped, tb.1.dropped);
+            assert_eq!(
+                ta.1.latency.quantile_us(0.99).to_bits(),
+                tb.1.latency.quantile_us(0.99).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn jit_pack_stats_surface_in_metrics() {
+        let trace = Trace::generate(&tenants(6, 300.0, 100_000), 30, 17);
+        let mut s = Server::new(FakeBackend::new(), BatchPolicy::coalescing());
+        let r = s.replay(&trace);
+        assert!(r.metrics.jit.launches > 0);
+        assert!(r.metrics.jit.mean_pack() > 1.0, "packing must happen");
+        let eff = r.metrics.jit.pack_efficiency();
+        assert!(eff > 0.0 && eff <= 1.0 + 1e-9, "eff={eff}");
+        assert!(r.render().contains("jit:"), "report shows jit stats");
+    }
+
+    #[test]
     fn realtime_mode_serves_everything() {
         let trace = Trace::generate(&tenants(3, 300.0, 200_000), 10, 11);
         let mut s = Server::new(FakeBackend::new(), BatchPolicy::coalescing());
@@ -542,5 +946,24 @@ mod tests {
         let drops: u64 = r.metrics.tenants.values().map(|t| t.dropped).sum();
         assert_eq!(r.metrics.total_completed() + drops, 30);
         assert!(r.metrics.span_us > 0.0);
+        assert!(r.metrics.jit.launches > 0, "served through the JIT core");
+    }
+
+    #[test]
+    fn realtime_pooled_serves_two_models_concurrently() {
+        // two models → two coalescing groups → two pool workers, each
+        // owning its own backend; every request completes or is shed
+        let tenants = vec![
+            TenantSpec::new(0, "alpha", 200_000, 300.0, ArrivalKind::Poisson),
+            TenantSpec::new(1, "beta", 200_000, 300.0, ArrivalKind::Poisson),
+            TenantSpec::new(2, "alpha", 200_000, 300.0, ArrivalKind::Poisson),
+        ];
+        let trace = Trace::generate(&tenants, 10, 23);
+        let mut s = Server::new(FakeBackend::new(), BatchPolicy::coalescing());
+        let r = s.run_realtime_pooled(&trace, 50.0, 2, |_| FakeBackend::new());
+        let drops: u64 = r.metrics.tenants.values().map(|t| t.dropped).sum();
+        assert_eq!(r.metrics.total_completed() + drops, 30);
+        assert!(r.metrics.jit.launches > 0);
+        assert!(r.metrics.batches > 0);
     }
 }

@@ -252,6 +252,52 @@ pub fn geomean(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
 }
 
+/// Exponentially-weighted moving average with an explicit observation
+/// count. The count (not a magic value) distinguishes "never observed"
+/// from a genuine ~0 observation, so callers fall back to their prior only
+/// while `value()` is `None`.
+#[derive(Debug, Clone, Copy)]
+pub struct Ewma {
+    value: f64,
+    alpha: f64,
+    count: u64,
+}
+
+impl Ewma {
+    /// New estimator with smoothing factor `alpha` in (0, 1].
+    pub fn new(alpha: f64) -> Self {
+        Ewma {
+            value: 0.0,
+            alpha,
+            count: 0,
+        }
+    }
+
+    /// Fold in one observation.
+    pub fn observe(&mut self, x: f64) {
+        self.value = if self.count == 0 {
+            x
+        } else {
+            self.alpha * x + (1.0 - self.alpha) * self.value
+        };
+        self.count += 1;
+    }
+
+    /// Current estimate, or `None` before the first observation.
+    pub fn value(&self) -> Option<f64> {
+        if self.count == 0 {
+            None
+        } else {
+            Some(self.value)
+        }
+    }
+
+    /// Observations folded in so far.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -339,5 +385,35 @@ mod tests {
         assert!((geomean(&[1.0, 100.0]) - 10.0).abs() < 1e-9);
         assert!((geomean(&[7.71]) - 7.71).abs() < 1e-12);
         assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn ewma_unobserved_is_none() {
+        let e = Ewma::new(0.3);
+        assert_eq!(e.value(), None);
+        assert_eq!(e.count(), 0);
+    }
+
+    #[test]
+    fn ewma_zero_observation_is_a_real_estimate() {
+        // regression: a genuine 0-valued measurement must not look like
+        // "never observed" and pin callers to their prior forever
+        let mut e = Ewma::new(0.3);
+        e.observe(0.0);
+        assert_eq!(e.value(), Some(0.0));
+        assert_eq!(e.count(), 1);
+        e.observe(10.0);
+        let v = e.value().unwrap();
+        assert!((v - 3.0).abs() < 1e-9, "v={v}");
+    }
+
+    #[test]
+    fn ewma_tracks_observations() {
+        let mut e = Ewma::new(0.5);
+        e.observe(100.0);
+        assert_eq!(e.value(), Some(100.0));
+        e.observe(200.0);
+        assert_eq!(e.value(), Some(150.0));
+        assert_eq!(e.count(), 2);
     }
 }

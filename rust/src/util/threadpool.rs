@@ -1,8 +1,13 @@
-//! Fixed-size worker pool over std threads + channels (no tokio offline).
+//! Fixed-size worker pools over std threads + channels (no tokio offline).
 //!
-//! The serving layer uses this for tenant frontends and executor workers:
-//! submit closures, optionally collect results through `scoped_map`, shut
-//! down cleanly on drop.
+//! Two pools:
+//!
+//! * [`ThreadPool`] — stateless FIFO pool: submit closures, optionally
+//!   collect results through `map`, shut down cleanly on drop.
+//! * [`StatefulPool`] — per-worker owned state with targeted dispatch: the
+//!   serving layer's multi-worker launch stage, where each worker owns a
+//!   full model backend (PJRT client, compile caches, weights) built on
+//!   its own thread, so the state type needs neither `Send` nor `Sync`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -122,6 +127,95 @@ impl Drop for ThreadPool {
     }
 }
 
+type StateJob<S> = Box<dyn FnOnce(&mut S) + Send + 'static>;
+
+/// Worker pool with per-worker owned state and targeted dispatch.
+///
+/// Worker `i` owns the state built by `init(i)` **on its own thread**, so
+/// `S` needs neither `Send` nor `Sync` — one model backend per worker,
+/// never crossing threads. Jobs are routed to a chosen worker: the serving
+/// layer keys by model, so independent superkernels for different models
+/// execute in parallel while one model's launches stay serialized (and
+/// cache-warm) on their owner.
+pub struct StatefulPool<S> {
+    txs: Vec<mpsc::Sender<StateJob<S>>>,
+    workers: Vec<JoinHandle<()>>,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl<S: 'static> StatefulPool<S> {
+    /// Spawn `n` workers (n >= 1); worker `i` runs `init(i)` before its
+    /// job loop.
+    pub fn new<F>(n: usize, init: F) -> Self
+    where
+        F: Fn(usize) -> S + Send + Sync + 'static,
+    {
+        let n = n.max(1);
+        let init = Arc::new(init);
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let mut txs = Vec::with_capacity(n);
+        let workers = (0..n)
+            .map(|i| {
+                let (tx, rx) = mpsc::channel::<StateJob<S>>();
+                txs.push(tx);
+                let init = Arc::clone(&init);
+                let inflight = Arc::clone(&in_flight);
+                std::thread::Builder::new()
+                    .name(format!("vliw-launch-{i}"))
+                    .spawn(move || {
+                        let mut state = init(i);
+                        while let Ok(job) = rx.recv() {
+                            job(&mut state);
+                            inflight.fetch_sub(1, Ordering::Release);
+                        }
+                    })
+                    .expect("spawn launch worker")
+            })
+            .collect();
+        Self {
+            txs,
+            workers,
+            in_flight,
+        }
+    }
+
+    /// Number of workers.
+    pub fn workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Submit a job to worker `worker % n` (the caller's affinity key).
+    pub fn submit_to<F>(&self, worker: usize, f: F)
+    where
+        F: FnOnce(&mut S) + Send + 'static,
+    {
+        self.in_flight.fetch_add(1, Ordering::Acquire);
+        let w = worker % self.txs.len();
+        self.txs[w].send(Box::new(f)).expect("worker alive");
+    }
+
+    /// Jobs submitted but not yet finished.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Acquire)
+    }
+
+    /// Busy-wait (with yield) until all submitted jobs finish.
+    pub fn wait_idle(&self) {
+        while self.in_flight() > 0 {
+            std::thread::yield_now();
+        }
+    }
+}
+
+impl<S> Drop for StatefulPool<S> {
+    fn drop(&mut self) {
+        self.txs.clear(); // closes channels; workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,5 +259,53 @@ mod tests {
         }
         pool.wait_idle();
         assert_eq!(*order.lock().unwrap(), (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn stateful_pool_state_needs_no_send() {
+        // Rc is !Send: the state lives entirely on its worker thread
+        use std::rc::Rc;
+        let pool = StatefulPool::new(3, |i| Rc::new(i as u64 * 100));
+        let (tx, rx) = mpsc::channel::<u64>();
+        for w in 0..3usize {
+            for j in 0..5u64 {
+                let tx = tx.clone();
+                pool.submit_to(w, move |s: &mut Rc<u64>| {
+                    tx.send(**s + j).unwrap();
+                });
+            }
+        }
+        pool.wait_idle();
+        drop(tx);
+        let mut got: Vec<u64> = rx.iter().collect();
+        got.sort_unstable();
+        let mut want: Vec<u64> = (0..3u64)
+            .flat_map(|w| (0..5).map(move |j| w * 100 + j))
+            .collect();
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn stateful_pool_serializes_per_worker() {
+        // all jobs routed to one worker run FIFO against its state
+        let pool = StatefulPool::new(2, |_| Vec::<u64>::new());
+        let (tx, rx) = mpsc::channel::<Vec<u64>>();
+        for i in 0..10u64 {
+            pool.submit_to(0, move |s: &mut Vec<u64>| s.push(i));
+        }
+        pool.submit_to(0, move |s: &mut Vec<u64>| tx.send(s.clone()).unwrap());
+        pool.wait_idle();
+        assert_eq!(rx.recv().unwrap(), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn stateful_pool_drop_joins_cleanly() {
+        let pool = StatefulPool::new(2, |_| 0u64);
+        pool.submit_to(1, |s| {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            *s += 1;
+        });
+        drop(pool); // must not hang or panic
     }
 }

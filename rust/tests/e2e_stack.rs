@@ -144,8 +144,10 @@ fn manifest_round_trips_through_json_writer() {
 
 #[test]
 fn backpressure_returns_none_not_panic() {
-    let mut cfg = JitConfig::default();
-    cfg.window_capacity = 2;
+    let cfg = JitConfig {
+        window_capacity: 2,
+        ..JitConfig::default()
+    };
     let mut jit = JitCompiler::new(cfg, vliw_jit::compiler::jit::SimExecutor::v100());
     assert!(jit
         .submit(DispatchRequest::new(

@@ -39,6 +39,7 @@ fn prop_pack_partitions_ops() {
                 kernel: rand_kernel(&mut rng),
                 arrival_us: 0.0,
                 deadline_us: 1e9,
+                group: 0,
                 tag: 0,
             })
             .collect();
