@@ -88,6 +88,7 @@ fn main() {
             deadline_us: 1e9,
             group: 0,
             tag: 0,
+            independent: false,
         })
         .collect();
     let refs: Vec<&TensorOp> = ops.iter().collect();

@@ -56,7 +56,10 @@ impl ShapeClass {
     }
 }
 
-/// A packed superkernel: ops from distinct streams sharing one launch.
+/// A packed superkernel: shape-compatible ops sharing one launch. Members
+/// usually come from distinct streams; a stream's *independent* ops (the
+/// window's ready prefix) may contribute several problems to one pack —
+/// the serving layer's single-tenant burst case.
 #[derive(Debug, Clone)]
 pub struct SuperKernel {
     /// Shape class of the pack.
@@ -178,6 +181,24 @@ impl Coalescer {
     }
 }
 
+/// Rows of a pack that share a stream with an earlier row of the same pack
+/// (0 = every member from a distinct stream). This is the launch-level
+/// measure of stream-prefix coalescing: a single-tenant burst riding one
+/// superkernel shows up here, singleton-per-stream packing stays at 0.
+pub fn same_stream_rows(members: &[&TensorOp]) -> usize {
+    let mut seen: Vec<crate::compiler::ir::StreamId> =
+        Vec::with_capacity(members.len());
+    let mut extra = 0;
+    for op in members {
+        if seen.contains(&op.stream) {
+            extra += 1;
+        } else {
+            seen.push(op.stream);
+        }
+    }
+    extra
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -193,6 +214,7 @@ mod tests {
             deadline_us: 1e9,
             group: 0,
             tag: 0,
+            independent: false,
         }
     }
 
@@ -299,6 +321,42 @@ mod tests {
         let packs = Coalescer::new(8, 0.75).with_group_cap(5, 3).pack(&refs);
         let sizes: Vec<usize> = packs.iter().map(|p| p.problems()).collect();
         assert_eq!(sizes, vec![3, 3, 3, 1]);
+    }
+
+    #[test]
+    fn same_stream_ops_pack_into_one_superkernel() {
+        // the window only exposes multiple ops of one stream when they are
+        // independent; the packer must then coalesce them like any other
+        // shape-compatible ops, preserving input (EDF) order
+        let ops: Vec<TensorOp> = (0..4)
+            .map(|i| {
+                let mut o = op(i, 0, 128, 512, 64); // all stream 0
+                o.seq = i;
+                o.independent = true;
+                o
+            })
+            .collect();
+        let refs: Vec<&TensorOp> = ops.iter().collect();
+        let packs = Coalescer::default().pack(&refs);
+        assert_eq!(packs.len(), 1, "one burst, one launch");
+        assert_eq!(packs[0].problems(), 4);
+        assert_eq!(
+            packs[0].ops,
+            vec![OpId(0), OpId(1), OpId(2), OpId(3)],
+            "input order survives packing"
+        );
+        assert_eq!(same_stream_rows(&refs), 3);
+    }
+
+    #[test]
+    fn same_stream_rows_counts_extra_rows_only() {
+        let a = op(0, 0, 128, 512, 64);
+        let b = op(1, 1, 128, 512, 64);
+        let c = op(2, 0, 128, 512, 64);
+        let d = op(3, 2, 128, 512, 64);
+        assert_eq!(same_stream_rows(&[&a, &b, &d]), 0, "all distinct streams");
+        assert_eq!(same_stream_rows(&[&a, &b, &c, &d]), 1, "c repeats stream 0");
+        assert_eq!(same_stream_rows(&[]), 0);
     }
 
     #[test]

@@ -24,10 +24,18 @@ pub struct TensorOp {
     pub id: OpId,
     /// Issuing stream.
     pub stream: StreamId,
-    /// Position in the stream's program order; op `seq` is only ready once
-    /// op `seq−1` of the same stream completed (data dependence within a
-    /// stream — streams are mutually independent, §1).
+    /// Position in the stream's program order; unless the op is marked
+    /// [`TensorOp::independent`], op `seq` is only ready once op `seq−1` of
+    /// the same stream issued (data dependence within a stream — streams
+    /// are mutually independent, §1).
     pub seq: u64,
+    /// True when this op carries no data dependence on earlier ops of its
+    /// stream (serving: stateless inference requests). Independent ops may
+    /// become ready while earlier stream ops are still pending, ride the
+    /// same superkernel launch as other ops of their stream, and issue out
+    /// of program order. Ops with the flag unset (the default) keep strict
+    /// per-stream issue order.
+    pub independent: bool,
     /// The tensor operation, already lowered to its GEMM form.
     pub kernel: KernelDesc,
     /// Submission time, µs.
@@ -67,6 +75,9 @@ pub struct DispatchRequest {
     pub group: u64,
     /// Opaque completion tag.
     pub tag: u64,
+    /// Independence of earlier ops in the stream (see
+    /// [`TensorOp::independent`]).
+    pub independent: bool,
 }
 
 impl DispatchRequest {
@@ -78,6 +89,7 @@ impl DispatchRequest {
             slo_us,
             group: 0,
             tag: 0,
+            independent: false,
         }
     }
 
@@ -90,6 +102,15 @@ impl DispatchRequest {
     /// Restrict coalescing to a group (the serving layer's model key).
     pub fn with_group(mut self, group: u64) -> Self {
         self.group = group;
+        self
+    }
+
+    /// Declare this request independent of its stream's earlier ops
+    /// (serving: stateless inference). Independent ops may coalesce with
+    /// other ops of their own stream into one launch; ops with the flag
+    /// unset keep strict per-stream program order.
+    pub fn with_independent(mut self, independent: bool) -> Self {
+        self.independent = independent;
         self
     }
 }
@@ -110,6 +131,7 @@ mod tests {
             deadline_us: 1_000.0,
             group: 0,
             tag: 0,
+            independent: false,
         };
         assert_eq!(op.slack_us(200.0, 300.0), 500.0);
         assert!(!op.is_critical(200.0, 300.0));
@@ -125,5 +147,8 @@ mod tests {
         assert_eq!(r.tag, 77);
         assert_eq!(r.group, 4);
         assert_eq!(r.slo_us, 5_000.0);
+        assert!(!r.independent, "program order binds by default");
+        let r = r.with_independent(true);
+        assert!(r.independent);
     }
 }

@@ -17,10 +17,30 @@
 //! payload `P` (the serving layer attaches request rows and executes the
 //! pack as one padded model batch). Every `KernelExecutor` is a
 //! `PackExecutor<()>` for free.
+//!
+//! # Straggler-eviction accounting contract (§5.2)
+//!
+//! The two drive modes charge stragglers differently, **on purpose**:
+//!
+//! * **Synchronous** (`launch_sync`, virtual time): eviction happens
+//!   *inside* the simulated launch. The pack is charged the straggler time
+//!   up to the eviction trigger ([`crate::compiler::scheduler::Scheduler::eviction_charge_us`],
+//!   identical to the `should_evict` threshold) **plus a clean re-run at
+//!   estimate** — in a simulated world the killed work really must be
+//!   redone before the ops can complete.
+//! * **Asynchronous** (`finish_launch`, real time): the measured wall
+//!   duration is what it is. By the time the driver reports back, the work
+//!   has already happened, so an over-threshold launch is *counted* as an
+//!   eviction (stats + completion flags, feeding the same §5.2 telemetry)
+//!   but is charged only its measured time — charging a retry would
+//!   double-bill work that was never re-executed.
+//!
+//! Both paths are pinned by tests (`sync_eviction_charges_straggler_plus_retry`,
+//! `async_eviction_counts_but_never_recharges`).
 
 use std::collections::HashMap;
 
-use crate::compiler::coalescer::{Coalescer, SuperKernel};
+use crate::compiler::coalescer::{same_stream_rows, Coalescer, SuperKernel};
 use crate::compiler::ir::{DispatchRequest, OpId, TensorOp};
 use crate::compiler::scheduler::{Decision, Policy, Scheduler};
 use crate::compiler::window::Window;
@@ -157,6 +177,9 @@ pub struct JitStats {
     pub slo_misses: u64,
     /// Straggler evictions (§5.2).
     pub evictions: u64,
+    /// Pack rows that shared a launch with an earlier row of the same
+    /// stream — the stream-prefix coalescing the independence flag buys.
+    pub same_stream_rows: u64,
 }
 
 impl JitStats {
@@ -200,6 +223,9 @@ pub struct LaunchRecord {
     pub duration_us: f64,
     /// Backend execution succeeded.
     pub ok: bool,
+    /// Rows sharing this launch with an earlier row of the same stream
+    /// (stream-prefix coalescing; 0 = all members from distinct streams).
+    pub same_stream_rows: u32,
 }
 
 /// An issued-but-unfinished launch in the concurrent drive mode.
@@ -275,6 +301,33 @@ impl<E, P> JitCompiler<E, P> {
     /// Launches issued but not yet finished (concurrent drive mode).
     pub fn inflight_launches(&self) -> usize {
         self.pending.len()
+    }
+
+    /// Effective per-launch pack-size cap for a group (the coalescer's
+    /// group cap bounded by `max_problems`) — how many queued ops one
+    /// launch can drain, the admission layer's queue-pricing divisor.
+    pub fn pack_cap(&self, group: u64) -> usize {
+        self.cfg.coalescer.cap_of(group)
+    }
+
+    /// Summed scheduler estimates of the issued-but-unfinished launches of
+    /// a coalescing group — the admission layer's in-flight drain term.
+    /// Priced *per launch* (several small launches keep their per-launch
+    /// fixed overheads; one big pack is one estimate), an upper bound on
+    /// the remaining single-worker drain: execution time already elapsed
+    /// is not subtracted.
+    pub fn inflight_group_est_us(&self, group: u64) -> f64 {
+        self.pending
+            .values()
+            .filter(|p| {
+                p.pack
+                    .ops
+                    .first()
+                    .and_then(|id| self.window.get(*id))
+                    .is_some_and(|op| op.group == group)
+            })
+            .map(|p| p.est_us)
+            .sum()
     }
 
     /// Drain the per-launch log accumulated since the last call.
@@ -491,8 +544,15 @@ where
     }
 
     fn record_launch(&mut self, pack: &SuperKernel, run: &PackRun) {
+        // members are still in the window at record time (issued, not yet
+        // completed), so the pack's stream composition is observable here
+        let same_stream = {
+            let members = Self::members(&self.window, pack);
+            same_stream_rows(&members) as u32
+        };
         self.stats.launches += 1;
         self.stats.useful_flops += pack.useful_flops;
+        self.stats.same_stream_rows += same_stream as u64;
         let executed = run.executed.max(pack.ops.len() as u32);
         self.stats.launched_flops += pack.class.kernel(executed).flops();
         self.stats.busy_us += run.duration_us;
@@ -501,6 +561,7 @@ where
             executed,
             duration_us: run.duration_us,
             ok: run.ok,
+            same_stream_rows: same_stream,
         });
     }
 
@@ -735,6 +796,97 @@ mod tests {
         assert_eq!(done.len(), 2);
         assert_eq!(j.stats.evictions, 1);
         assert!(done.iter().any(|c| c.evicted));
+    }
+
+    #[test]
+    fn single_stream_independent_burst_coalesces_into_one_launch() {
+        // 8 independent requests from ONE stream: the ready prefix lets the
+        // whole burst ride a single superkernel (the paper's coalescing
+        // opportunity, now available within a tenant's own queue)
+        let mut j = jit();
+        let ops: Vec<(f64, DispatchRequest)> = (0..8)
+            .map(|_| (0.0, req(0, 128, 50_000.0).with_independent(true)))
+            .collect();
+        let done = j.run_trace(ops);
+        assert_eq!(done.len(), 8);
+        assert_eq!(j.stats.launches, 1, "one burst, one launch");
+        assert_eq!(j.stats.mean_pack(), 8.0);
+        assert_eq!(j.stats.same_stream_rows, 7, "7 rows share stream 0");
+        assert!(done.iter().all(|c| c.pack_size == 8));
+        let log = j.take_launches();
+        assert_eq!(log[0].same_stream_rows, 7);
+    }
+
+    #[test]
+    fn dependent_burst_still_serializes() {
+        // without the independence flag the same burst keeps strict
+        // per-stream issue order: one op per launch, zero same-stream rows
+        let mut j = jit();
+        let ops: Vec<(f64, DispatchRequest)> =
+            (0..3).map(|_| (0.0, req(0, 128, 50_000.0))).collect();
+        let done = j.run_trace(ops);
+        assert_eq!(j.stats.launches, 3);
+        assert_eq!(j.stats.same_stream_rows, 0);
+        let seqs: Vec<u64> = done.iter().map(|c| c.op.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn sync_eviction_charges_straggler_plus_retry() {
+        // the synchronous drive mode's accounting contract: an evicted
+        // launch is charged up to the eviction trigger PLUS a clean re-run
+        // at estimate (the simulated world must redo the killed work)
+        let mut j = JitCompiler::new(
+            JitConfig::default(),
+            SimExecutor::v100().with_stragglers(1, 10.0), // every launch straggles
+        );
+        let done = j.run_trace(vec![(0.0, req(0, 2048, 1e9))]);
+        assert_eq!(j.stats.evictions, 1);
+        assert!(done[0].evicted);
+        let est = SimExecutor::v100()
+            .estimate_us(&KernelDesc::batched(1, 2048, 512, 64));
+        // charge = eviction threshold (factor·est + slop) + retry at est,
+        // plus the per-launch packing overhead
+        let p = Policy::default();
+        let expect =
+            p.eviction_factor * est + p.eviction_slop_us + est + 2.0;
+        let charged = done[0].done_us - done[0].issue_us;
+        assert!(
+            (charged - expect).abs() < 1e-6,
+            "charged {charged} != contract {expect}"
+        );
+        assert!((j.stats.busy_us - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn async_eviction_counts_but_never_recharges() {
+        // the real-time contract: the work already happened, so an
+        // over-threshold launch is counted as an eviction but charged only
+        // its measured duration — no simulated retry on top
+        let mut j = eager_jit();
+        assert!(j.submit(req(0, 2048, 1e9)).is_some());
+        let (launches, _) = j.issue_ready();
+        assert_eq!(launches.len(), 1);
+        let l = &launches[0];
+        let measured = l.est_us * 10.0; // well past the 3x + slop threshold
+        let done_us = l.issue_us + measured;
+        let completions = j.finish_launch(
+            l.ticket,
+            done_us,
+            PackRun {
+                duration_us: measured,
+                executed: 1,
+                ok: true,
+            },
+        );
+        assert_eq!(j.stats.evictions, 1);
+        assert!(completions[0].evicted);
+        assert_eq!(completions[0].done_us, done_us, "measured time stands");
+        assert!(
+            (j.stats.busy_us - measured).abs() < 1e-9,
+            "busy {} must equal the measured duration, uncharged of any retry",
+            j.stats.busy_us
+        );
     }
 
     #[test]

@@ -82,6 +82,12 @@ impl Scheduler {
     ///
     /// `Wait { until_us }` is monotone for a fixed window: a `decide` at
     /// (or after) `until_us` launches, it never returns a later wait.
+    ///
+    /// The ready set may contain several ops of ONE stream (the window's
+    /// independent-op ready prefix), so a single hot tenant can fill a
+    /// pack — and hit the target/cap launch triggers — by itself. The
+    /// cap/hold logic is per-pack, never per-stream: a pack at its group
+    /// cap launches immediately regardless of how many streams filled it.
     pub fn decide<F>(&self, window: &Window, now: f64, est_exec: F) -> Decision
     where
         F: Fn(&KernelDesc, &[&TensorOp]) -> f64,
@@ -338,6 +344,75 @@ mod tests {
         match s.decide(&w, 0.0, est(&cm)) {
             Decision::Launch(p) => assert_eq!(p.problems(), 2),
             other => panic!("capped pack must launch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn single_stream_burst_fills_a_pack_by_itself() {
+        // 8 independent ops of ONE stream: the ready prefix exposes all of
+        // them and the pack reaches max_problems — launch without waiting,
+        // exactly like 8 distinct streams would
+        let mut w = Window::new(16);
+        for _ in 0..8 {
+            w.submit(
+                DispatchRequest::new(
+                    StreamId(0),
+                    KernelDesc::gemm(128, 512, 64),
+                    50_000.0,
+                )
+                .with_independent(true),
+                0.0,
+            )
+            .unwrap();
+        }
+        let cm = CostModel::v100();
+        match sched().decide(&w, 0.0, est(&cm)) {
+            Decision::Launch(p) => assert_eq!(p.problems(), 8),
+            other => panic!("expected Launch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn single_stream_pack_at_group_cap_launches_immediately() {
+        // one stream fills its model's cap alone: the cap trigger must not
+        // assume one-op-per-stream
+        let mut w = Window::new(8);
+        for _ in 0..2 {
+            w.submit(
+                DispatchRequest::new(
+                    StreamId(0),
+                    KernelDesc::gemm(128, 512, 64),
+                    50_000.0,
+                )
+                .with_group(3)
+                .with_independent(true),
+                0.0,
+            )
+            .unwrap();
+        }
+        let s = Scheduler::new(
+            Policy::default(), // target_pack 4
+            Coalescer::new(8, 0.75).with_group_cap(3, 2),
+        );
+        let cm = CostModel::v100();
+        match s.decide(&w, 0.0, est(&cm)) {
+            Decision::Launch(p) => assert_eq!(p.problems(), 2),
+            other => panic!("capped single-stream pack must launch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dependent_stream_stays_one_ready_op() {
+        // without the independence flag only the head is ready — a burst
+        // from a stateful stream cannot fill a pack
+        let mut w = Window::new(16);
+        for _ in 0..8 {
+            submit(&mut w, 0, 600.0, 0.0); // tight: forces launch now
+        }
+        let cm = CostModel::v100();
+        match sched().decide(&w, 0.0, est(&cm)) {
+            Decision::Launch(p) => assert_eq!(p.problems(), 1),
+            other => panic!("expected singleton Launch, got {other:?}"),
         }
     }
 

@@ -13,6 +13,18 @@
 //! a completion barrier between a stream's ops get it for free in the
 //! synchronous drive mode, where every launch completes before the next
 //! decision.
+//!
+//! **Independent ops relax this further.** An op submitted with
+//! [`DispatchRequest::with_independent`] carries no data dependence on its
+//! stream's earlier ops (the serving layer's stateless inference
+//! requests), so the window exposes a stream's contiguous ready **prefix**
+//! rather than just its head: the queue front is always ready, and
+//! independent ops directly behind it are ready too, until the first
+//! dependent op blocks itself and everything after it. A whole burst from
+//! one (tenant, model) stream can therefore ride a single superkernel
+//! launch instead of serializing into singleton packs. Independent ops may
+//! also issue out of prefix order (e.g. when shape classes split a prefix
+//! across packs); dependent ops keep strict per-stream issue order.
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
 
@@ -21,7 +33,8 @@ use crate::compiler::ir::{DispatchRequest, OpId, StreamId, TensorOp};
 /// Issue-window state for one op.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum OpState {
-    /// Waiting on an earlier op of the same stream to issue.
+    /// Waiting on an earlier op of the same stream to issue (or, for a
+    /// queued op behind a dependent one, on the prefix ahead of it).
     Blocked,
     /// Eligible for issue.
     Ready,
@@ -43,6 +56,9 @@ pub struct Window {
     /// per-group pending (un-issued) op count — the admission layer's
     /// queue-depth signal
     group_pending: HashMap<u64, usize>,
+    /// per-group in-flight op count — launches already on the device still
+    /// drain ahead of a newly admitted request (admission pricing)
+    group_inflight: HashMap<u64, usize>,
     next_id: u64,
     capacity: usize,
 }
@@ -77,6 +93,59 @@ impl Window {
         self.group_pending.get(&group).copied().unwrap_or(0)
     }
 
+    /// In-flight (issued, not yet complete) ops in a coalescing group.
+    /// Admission must price these too: under the pooled/async drive mode a
+    /// new request drains behind the launches already on the device, not
+    /// just behind the un-issued queue.
+    pub fn inflight_in_group(&self, group: u64) -> usize {
+        self.group_inflight.get(&group).copied().unwrap_or(0)
+    }
+
+    /// Longest per-stream pending run within a group. When program order
+    /// binds (no independence flag), each launch takes at most one op per
+    /// stream, so this — not the total group depth — bounds the number of
+    /// launches a drain needs (admission's dependent-mode pricing).
+    /// O(pending ops) per call; fine for admission-rate queries.
+    pub fn max_stream_depth_in_group(&self, group: u64) -> usize {
+        self.streams
+            .values()
+            .map(|q| {
+                q.iter()
+                    .filter(|id| self.ops[*id].0.group == group)
+                    .count()
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Pending ops of one stream within a group (that stream's own queue
+    /// run — the companion to [`Window::max_stream_depth_in_group`]).
+    pub fn stream_depth_in_group(&self, stream: StreamId, group: u64) -> usize {
+        self.streams
+            .get(&stream)
+            .map(|q| {
+                q.iter()
+                    .filter(|id| self.ops[*id].0.group == group)
+                    .count()
+            })
+            .unwrap_or(0)
+    }
+
+    /// Streams with live bookkeeping (pending queue, seq counter, or
+    /// in-flight counter). Bounded by the set of streams with work in the
+    /// window — the regression surface for the tenant-churn leak fix.
+    pub fn tracked_streams(&self) -> usize {
+        self.streams
+            .len()
+            .max(self.next_seq.len())
+            .max(self.inflight.len())
+    }
+
+    /// Groups with live bookkeeping (pending or in-flight counters).
+    pub fn tracked_groups(&self) -> usize {
+        self.group_pending.len().max(self.group_inflight.len())
+    }
+
     /// Submit a dispatch request at time `now`. Returns the assigned op id,
     /// or `None` when the window is full (caller applies backpressure).
     pub fn submit(&mut self, req: DispatchRequest, now: f64) -> Option<OpId> {
@@ -97,13 +166,21 @@ impl Window {
             deadline_us: now + req.slo_us,
             group: req.group,
             tag: req.tag,
+            independent: req.independent,
         };
         let q = self.streams.entry(req.stream).or_default();
-        // ready iff nothing earlier from this stream awaits issue
-        let state = if q.is_empty() {
-            OpState::Ready
-        } else {
-            OpState::Blocked
+        // ready iff nothing earlier from this stream awaits issue, or the
+        // op is independent and joins a fully-ready prefix (the previous
+        // queue tail being ready implies every queued predecessor is)
+        let state = match q.back() {
+            None => OpState::Ready,
+            Some(prev)
+                if req.independent
+                    && matches!(self.ops.get(prev), Some((_, OpState::Ready))) =>
+            {
+                OpState::Ready
+            }
+            _ => OpState::Blocked,
         };
         q.push_back(id);
         *self.group_pending.entry(req.group).or_insert(0) += 1;
@@ -139,9 +216,17 @@ impl Window {
     }
 
     /// Mark ops as issued (Ready → InFlight), unblocking each stream's
-    /// successor. Panics if any op is not ready — the scheduler must never
-    /// issue blocked ops.
+    /// successor prefix. Panics if any op is not ready — the scheduler must
+    /// never issue blocked ops. Dependent ops leave from the queue front
+    /// (program order); independent ops may leave from the middle of the
+    /// ready prefix (e.g. when shape classes split a prefix across packs).
     pub fn issue(&mut self, ids: &[OpId]) {
+        // streams touched by this pack; readiness is refreshed once per
+        // stream after all removals (issuing only ever EXTENDS a prefix —
+        // it never revokes another op's readiness — so deferring the
+        // relabel is safe and keeps a k-op same-stream pack O(k + queue)
+        // instead of O(k·queue))
+        let mut touched: Vec<StreamId> = Vec::with_capacity(ids.len());
         for id in ids {
             let (op, state) = self.ops.get_mut(id).expect("issue of unknown op");
             assert_eq!(
@@ -150,56 +235,149 @@ impl Window {
                 "scheduler issued non-ready op {id:?}"
             );
             *state = OpState::InFlight;
-            let (stream, group) = (op.stream, op.group);
+            let (stream, group, independent) = (op.stream, op.group, op.independent);
             *self.inflight.entry(stream).or_insert(0) += 1;
+            *self.group_inflight.entry(group).or_insert(0) += 1;
             let pending = self
                 .group_pending
                 .get_mut(&group)
                 .expect("group pending count");
             *pending -= 1;
-            // pop from the stream queue head (must be the head by program
-            // order; ready implies it is)
+            if *pending == 0 {
+                self.group_pending.remove(&group);
+            }
             let q = self.streams.get_mut(&stream).expect("stream queue");
-            let head = q.pop_front().expect("queue non-empty");
-            assert_eq!(head, *id, "program order violated on issue");
-            // the next op of this stream (if any) becomes ready: program
-            // order is enforced at issue, not at completion
-            if let Some(&next) = q.front() {
-                if let Some((_, s)) = self.ops.get_mut(&next) {
-                    *s = OpState::Ready;
+            if q.front() == Some(id) {
+                q.pop_front();
+            } else {
+                assert!(independent, "dependent op issued out of program order");
+                let pos = q
+                    .iter()
+                    .position(|x| x == id)
+                    .expect("issued op in its stream queue");
+                let _ = q.remove(pos);
+            }
+            if !touched.contains(&stream) {
+                touched.push(stream);
+            }
+        }
+        // ops behind the issued ones may become ready: the new front
+        // always is, and independents extend the prefix behind it
+        for stream in touched {
+            self.refresh_ready(stream);
+        }
+    }
+
+    /// Recompute a stream's ready prefix: the queue front is ready (all of
+    /// its predecessors issued), and ops behind it stay ready only while
+    /// every one of them is independent — the first dependent op blocks
+    /// itself and everything after it (contiguous-prefix readiness).
+    ///
+    /// Cost is O(ready prefix), not O(queue): every public mutation leaves
+    /// the queue Ready-prefix-then-Blocked-suffix EXCEPT a `requeue` that
+    /// just inserted one Blocked op mid-queue — so while relabeling past
+    /// the prefix, a single already-Blocked op may still be followed by
+    /// stale Ready ops needing demotion, but TWO consecutive already-
+    /// Blocked ops mean the walk has reached the settled suffix and may
+    /// stop (by induction, the shape held before the one-op insert). A
+    /// deep dependent-only backlog therefore pays O(1) per issue.
+    fn refresh_ready(&mut self, stream: StreamId) {
+        let Some(q) = self.streams.get(&stream) else {
+            return;
+        };
+        let mut ready = true;
+        let mut prev_already_blocked = false;
+        for (i, id) in q.iter().enumerate() {
+            let (op, state) = self.ops.get_mut(id).expect("queued op in window");
+            debug_assert_ne!(*state, OpState::InFlight, "queued op cannot be in flight");
+            ready = ready && (i == 0 || op.independent);
+            if ready {
+                *state = OpState::Ready;
+                prev_already_blocked = false;
+            } else {
+                let already_blocked = *state == OpState::Blocked;
+                if already_blocked && prev_already_blocked {
+                    break; // settled Blocked suffix (see above)
                 }
+                *state = OpState::Blocked;
+                prev_already_blocked = already_blocked;
             }
         }
     }
 
-    /// Complete an in-flight op. Returns the completed op.
+    /// Complete an in-flight op. Returns the completed op. Bookkeeping for
+    /// fully-drained streams and groups is dropped here — a long-running
+    /// server sees tenants come and go, and retaining every (tenant, model)
+    /// queue/seq/counter entry forever is an unbounded leak. A stream that
+    /// later returns restarts at seq 0 against an empty queue, which still
+    /// preserves program order (nothing of its old life remains pending).
     pub fn complete(&mut self, id: OpId) -> TensorOp {
         let (op, state) = self.ops.remove(&id).expect("complete of unknown op");
         assert_eq!(state, OpState::InFlight, "complete of non-inflight op");
         let cnt = self.inflight.get_mut(&op.stream).expect("inflight count");
         *cnt -= 1;
+        let stream_drained = *cnt == 0;
+        if stream_drained {
+            self.inflight.remove(&op.stream);
+        }
+        let gcnt = self
+            .group_inflight
+            .get_mut(&op.group)
+            .expect("group inflight count");
+        *gcnt -= 1;
+        if *gcnt == 0 {
+            self.group_inflight.remove(&op.group);
+        }
+        let queue_empty = match self.streams.get(&op.stream) {
+            Some(q) => q.is_empty(),
+            None => true,
+        };
+        if stream_drained && queue_empty {
+            self.streams.remove(&op.stream);
+            self.next_seq.remove(&op.stream);
+        }
         op
     }
 
-    /// Re-queue an evicted in-flight op (straggler eviction, §5.2): it goes
-    /// back to the *front* of its stream as Ready with its original
-    /// deadline, so the scheduler re-prioritizes it immediately. The
-    /// previous head (if any) blocks again behind it.
+    /// Re-queue an evicted in-flight op (straggler eviction, §5.2): it
+    /// re-enters its stream's pending queue *in program order* with its
+    /// original deadline, so the scheduler re-prioritizes it immediately.
+    /// In the common case (in-order issue) that is the queue front; an
+    /// independent op that issued out of prefix order re-enters behind any
+    /// still-pending lower-seq peers — the queue must stay sorted by seq,
+    /// or a dependent op whose predecessors have all issued would be
+    /// spuriously demoted behind the returning straggler. Dependent ops
+    /// with higher seq block again; independents stay in the ready prefix.
     pub fn requeue(&mut self, id: OpId) {
         let (op, state) = self.ops.get_mut(&id).expect("requeue of unknown op");
         assert_eq!(*state, OpState::InFlight, "requeue of non-inflight op");
-        *state = OpState::Ready;
-        let (stream, group) = (op.stream, op.group);
+        // re-enter as Blocked and let refresh_ready promote it: pre-marking
+        // Ready would go stale when the op lands behind a Blocked op (the
+        // prefix walk stops at the first Blocked entry and would never
+        // visit it), letting a dependent op schedule out of program order
+        *state = OpState::Blocked;
+        let (stream, group, seq) = (op.stream, op.group, op.seq);
         let cnt = self.inflight.get_mut(&stream).expect("inflight count");
         *cnt -= 1;
+        if *cnt == 0 {
+            self.inflight.remove(&stream);
+        }
+        let gcnt = self
+            .group_inflight
+            .get_mut(&group)
+            .expect("group inflight count");
+        *gcnt -= 1;
+        if *gcnt == 0 {
+            self.group_inflight.remove(&group);
+        }
         *self.group_pending.entry(group).or_insert(0) += 1;
         let q = self.streams.entry(stream).or_default();
-        if let Some(&old_head) = q.front() {
-            if let Some((_, s)) = self.ops.get_mut(&old_head) {
-                *s = OpState::Blocked;
-            }
-        }
-        q.push_front(id);
+        let pos = q
+            .iter()
+            .position(|x| self.ops[x].0.seq > seq)
+            .unwrap_or(q.len());
+        q.insert(pos, id);
+        self.refresh_ready(stream);
     }
 
     /// Earliest deadline among ready ops (scheduler's EDF pivot).
@@ -331,6 +509,28 @@ mod tests {
     }
 
     #[test]
+    fn max_stream_depth_in_group_tracks_longest_pending_run() {
+        let mut w = Window::new(16);
+        w.submit(req(0).with_group(7), 0.0).unwrap();
+        w.submit(req(0).with_group(7), 0.0).unwrap();
+        w.submit(req(1).with_group(7), 0.0).unwrap();
+        let a = w.submit(req(2).with_group(9), 0.0).unwrap();
+        assert_eq!(w.max_stream_depth_in_group(7), 2, "stream 0's run of 2");
+        assert_eq!(w.max_stream_depth_in_group(9), 1);
+        assert_eq!(w.max_stream_depth_in_group(42), 0);
+        assert_eq!(w.stream_depth_in_group(StreamId(0), 7), 2);
+        assert_eq!(w.stream_depth_in_group(StreamId(1), 7), 1);
+        assert_eq!(w.stream_depth_in_group(StreamId(1), 9), 0);
+        assert_eq!(w.stream_depth_in_group(StreamId(99), 7), 0, "unknown stream");
+        w.issue(&[a]);
+        assert_eq!(
+            w.max_stream_depth_in_group(9),
+            0,
+            "in-flight ops are not pending"
+        );
+    }
+
+    #[test]
     fn group_pending_tracks_unissued_ops() {
         let mut w = Window::new(16);
         let a = w
@@ -348,6 +548,226 @@ mod tests {
         w.issue(&[a]);
         w.complete(a);
         assert_eq!(w.pending_in_group(7), 1);
+    }
+
+    fn ind(stream: u32) -> DispatchRequest {
+        req(stream).with_independent(true)
+    }
+
+    #[test]
+    fn independent_ops_form_a_contiguous_ready_prefix() {
+        let mut w = Window::new(16);
+        let a = w.submit(req(0), 0.0).unwrap(); // head: always ready
+        let b = w.submit(ind(0), 0.0).unwrap();
+        let c = w.submit(ind(0), 0.0).unwrap();
+        let d = w.submit(req(0), 0.0).unwrap(); // dependent: blocks
+        let e = w.submit(ind(0), 0.0).unwrap(); // behind d: blocked too
+        assert_eq!(w.state(a), Some(OpState::Ready));
+        assert_eq!(w.state(b), Some(OpState::Ready));
+        assert_eq!(w.state(c), Some(OpState::Ready));
+        assert_eq!(w.state(d), Some(OpState::Blocked));
+        assert_eq!(w.state(e), Some(OpState::Blocked), "prefix is contiguous");
+        assert_eq!(w.ready_count(), 3);
+        // issuing the whole prefix at once (one pack) works front-to-back
+        w.issue(&[a, b, c]);
+        assert_eq!(w.state(d), Some(OpState::Ready), "d is the new front");
+        assert_eq!(
+            w.state(e),
+            Some(OpState::Ready),
+            "independent e rejoins the ready prefix behind the new front"
+        );
+    }
+
+    #[test]
+    fn independent_op_can_issue_out_of_prefix_order() {
+        // a (front) and b (independent) are both ready; b's pack launches
+        // first (e.g. a different shape class won EDF): b leaves from the
+        // middle of the queue, a stays issuable
+        let mut w = Window::new(16);
+        let a = w.submit(req(0), 0.0).unwrap();
+        let b = w.submit(ind(0), 0.0).unwrap();
+        w.issue(&[b]);
+        assert_eq!(w.state(a), Some(OpState::Ready));
+        assert_eq!(w.state(b), Some(OpState::InFlight));
+        w.issue(&[a]);
+        w.complete(b);
+        w.complete(a);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-ready")]
+    fn blocked_op_behind_dependent_still_panics_on_issue() {
+        let mut w = Window::new(16);
+        let _a = w.submit(req(0), 0.0).unwrap();
+        let _d = w.submit(req(0), 0.0).unwrap(); // dependent, blocked
+        let e = w.submit(ind(0), 0.0).unwrap(); // behind d: blocked
+        w.issue(&[e]);
+    }
+
+    #[test]
+    fn requeue_keeps_independent_successors_ready() {
+        let mut w = Window::new(16);
+        let a = w.submit(ind(0), 0.0).unwrap();
+        let b = w.submit(ind(0), 0.0).unwrap();
+        w.issue(&[a]);
+        w.requeue(a); // evicted straggler returns to the front
+        assert_eq!(w.state(a), Some(OpState::Ready));
+        assert_eq!(
+            w.state(b),
+            Some(OpState::Ready),
+            "independent b stays in the ready prefix behind requeued a"
+        );
+        w.issue(&[a, b]);
+        w.complete(a);
+        w.complete(b);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn requeue_of_out_of_order_issued_op_respects_program_order() {
+        // a (dependent, seq 0) still pending; b (independent, seq 1) issued
+        // out of prefix order, then evicted: b must re-enter BEHIND a — a
+        // has no pending predecessors and must keep its readiness, not be
+        // demoted behind the returning straggler
+        let mut w = Window::new(16);
+        let a = w.submit(req(0), 0.0).unwrap();
+        let b = w.submit(ind(0), 0.0).unwrap();
+        w.issue(&[b]); // legal: b is independent
+        w.requeue(b); // evicted straggler
+        assert_eq!(
+            w.state(a),
+            Some(OpState::Ready),
+            "a's predecessors are not pending — it stays ready"
+        );
+        assert_eq!(
+            w.state(b),
+            Some(OpState::Ready),
+            "independent b rejoins the ready prefix behind a"
+        );
+        w.issue(&[a, b]);
+        w.complete(a);
+        w.complete(b);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn multiple_requeues_never_leave_a_stale_ready_op() {
+        // three dependent ops of one stream issue in order, all straggle,
+        // and are requeued out of order (f, e, d): the rebuilt queue must
+        // be [e Ready, f Blocked, d Blocked] — a requeued op landing
+        // behind a Blocked op must NOT keep a stale Ready state, or the
+        // scheduler would issue it out of program order
+        let mut w = Window::new(16);
+        let e = w.submit(req(0), 0.0).unwrap(); // seq 0
+        let f = w.submit(req(0), 0.0).unwrap(); // seq 1
+        let d = w.submit(req(0), 0.0).unwrap(); // seq 2
+        w.issue(&[e]);
+        w.issue(&[f]);
+        w.issue(&[d]);
+        w.requeue(f);
+        w.requeue(e);
+        w.requeue(d);
+        assert_eq!(w.state(e), Some(OpState::Ready));
+        assert_eq!(w.state(f), Some(OpState::Blocked));
+        assert_eq!(w.state(d), Some(OpState::Blocked), "no stale Ready");
+        // program order drains cleanly
+        for id in [e, f, d] {
+            w.issue(&[id]);
+            w.complete(id);
+        }
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn requeue_demotes_independent_successors_behind_a_blocked_op() {
+        // a(ind seq0), b(dep seq1), c(ind seq2): after a and b issue, c is
+        // the ready front. Requeue a, then b: the rebuilt queue [a, b, c]
+        // must demote c — the contiguous prefix ends at dependent b, and a
+        // stale Ready must not survive behind the freshly-inserted Blocked
+        // op (the refresh walk may not stop at the first Blocked entry)
+        let mut w = Window::new(16);
+        let a = w.submit(ind(0), 0.0).unwrap();
+        let b = w.submit(req(0), 0.0).unwrap();
+        let c = w.submit(ind(0), 0.0).unwrap();
+        w.issue(&[a]);
+        w.issue(&[b]);
+        assert_eq!(w.state(c), Some(OpState::Ready));
+        w.requeue(a);
+        assert_eq!(w.state(a), Some(OpState::Ready));
+        assert_eq!(w.state(c), Some(OpState::Ready), "c rides behind ready a");
+        w.requeue(b);
+        assert_eq!(w.state(a), Some(OpState::Ready));
+        assert_eq!(w.state(b), Some(OpState::Blocked), "b waits for a");
+        assert_eq!(
+            w.state(c),
+            Some(OpState::Blocked),
+            "contiguous prefix: c demotes behind dependent b"
+        );
+        w.issue(&[a]);
+        assert_eq!(w.state(b), Some(OpState::Ready));
+        w.issue(&[b]);
+        assert_eq!(w.state(c), Some(OpState::Ready));
+        w.issue(&[c]);
+        for id in [a, b, c] {
+            w.complete(id);
+        }
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn inflight_in_group_tracks_issued_ops() {
+        let mut w = Window::new(16);
+        let a = w.submit(req(0).with_group(7), 0.0).unwrap();
+        let b = w.submit(req(1).with_group(7), 0.0).unwrap();
+        assert_eq!(w.inflight_in_group(7), 0);
+        w.issue(&[a]);
+        assert_eq!(w.inflight_in_group(7), 1);
+        assert_eq!(w.pending_in_group(7), 1);
+        w.issue(&[b]);
+        assert_eq!(w.inflight_in_group(7), 2);
+        w.requeue(a);
+        assert_eq!(w.inflight_in_group(7), 1, "requeue returns op to pending");
+        assert_eq!(w.pending_in_group(7), 1);
+        w.issue(&[a]);
+        w.complete(a);
+        w.complete(b);
+        assert_eq!(w.inflight_in_group(7), 0);
+    }
+
+    #[test]
+    fn bookkeeping_bounded_under_tenant_churn() {
+        // regression for the window leak: N tenants each submit, run and
+        // drain a couple of ops; after the churn every per-stream and
+        // per-group map must be empty again, not grown to N entries
+        let mut w = Window::new(16);
+        for t in 0..200u32 {
+            let a = w.submit(req(t).with_group(t as u64), 0.0).unwrap();
+            let b = w.submit(ind(t).with_group(t as u64), 0.0).unwrap();
+            w.issue(&[a, b]);
+            w.complete(a);
+            w.complete(b);
+            assert!(w.is_empty());
+            assert_eq!(w.tracked_streams(), 0, "stream maps leak after tenant {t}");
+            assert_eq!(w.tracked_groups(), 0, "group maps leak after tenant {t}");
+        }
+    }
+
+    #[test]
+    fn returning_stream_restarts_clean_after_drain() {
+        // a stream that drains completely and comes back gets fresh seq
+        // numbering against an empty queue — program order still holds
+        let mut w = Window::new(16);
+        let a = w.submit(req(0), 0.0).unwrap();
+        w.issue(&[a]);
+        w.complete(a);
+        assert_eq!(w.tracked_streams(), 0);
+        let b = w.submit(req(0), 1.0).unwrap();
+        let c = w.submit(req(0), 1.0).unwrap();
+        assert_eq!(w.get(b).unwrap().seq, 0, "fresh life restarts at seq 0");
+        assert_eq!(w.get(c).unwrap().seq, 1);
+        assert_eq!(w.state(b), Some(OpState::Ready));
+        assert_eq!(w.state(c), Some(OpState::Blocked));
     }
 
     #[test]

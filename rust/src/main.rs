@@ -5,6 +5,8 @@
 //! * `info`          — artifact + device inventory
 //! * `golden`        — end-to-end numeric self-check of every artifact
 //! * `serve`         — threaded multi-tenant serving demo on real artifacts
+//! * `bench`         — simulator-backend serving benchmark, machine-readable
+//!                     JSON out (the CI perf-trajectory smoke)
 //! * `autotune`      — Table-1 style greedy-vs-collaborative search
 //! * `cluster`       — Fig-7 style GEMM shape clustering of the model zoo
 //!
@@ -19,9 +21,11 @@ use vliw_jit::gpu::kernel::KernelDesc;
 use vliw_jit::gpu::timeline::SharingModel;
 use vliw_jit::model::zoo;
 use vliw_jit::runtime::{Manifest, PjrtExecutor};
-use vliw_jit::serve::{BatchPolicy, Server};
+use vliw_jit::serve::{BatchPolicy, Server, SimBackend};
 use vliw_jit::util::cli::Args;
+use vliw_jit::util::json::Json;
 use vliw_jit::util::logging;
+use vliw_jit::util::stats::LatencyHist;
 use vliw_jit::workload::trace::{mixed_tenants, Trace};
 
 fn main() -> Result<()> {
@@ -31,12 +35,13 @@ fn main() -> Result<()> {
         "info" => info(),
         "golden" => golden(),
         "serve" => serve(),
+        "bench" => cmd_bench(),
         "autotune" => cmd_autotune(),
         "cluster" => cmd_cluster(),
         "help" | "--help" | "-h" => {
             println!(
                 "vliwd — OoO VLIW JIT for accelerator inference\n\n\
-                 USAGE: vliwd <info|golden|serve|autotune|cluster> [flags]\n\
+                 USAGE: vliwd <info|golden|serve|bench|autotune|cluster> [flags]\n\
                  Run `vliwd <cmd> --help` for per-command flags."
             );
             Ok(())
@@ -184,6 +189,64 @@ fn serve() -> Result<()> {
         server.run_realtime(&trace, speedup)
     };
     println!("{}", report.render());
+    Ok(())
+}
+
+fn cmd_bench() -> Result<()> {
+    let mut args = Args::new(
+        "vliwd bench",
+        "simulator-backend serving benchmark with machine-readable JSON output",
+    );
+    args.flag("tenants", "6", "number of tenants")
+        .flag("rate", "300", "per-tenant request rate (req/s)")
+        .flag("requests", "200", "requests per tenant")
+        .flag("seed", "42", "trace seed")
+        .flag("out", "BENCH_2.json", "output JSON path");
+    let p = parse(args)?;
+    let n = p.get_u64("tenants").map_err(|e| anyhow::anyhow!("{e}"))? as u32;
+    let rate = p.get_f64("rate").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let per = p.get_usize("requests").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let seed = p.get_u64("seed").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let out = p.get("out").to_string();
+
+    // mixed SLOs + one bursty tenant per four (stream-prefix coalescing
+    // shows up in same_stream_rows), replayed deterministically on the
+    // simulator backend — runs anywhere, no PJRT artifacts needed
+    let tenants = mixed_tenants(n, &["simnet"], rate);
+    let trace = Trace::generate(&tenants, per, seed);
+    let mut server = Server::new(SimBackend::default(), BatchPolicy::coalescing());
+    let wall = std::time::Instant::now();
+    let report = server.replay(&trace);
+    let wall_ms = wall.elapsed().as_secs_f64() * 1e3;
+    println!("{}", report.render());
+
+    let m = &report.metrics;
+    let mut merged = LatencyHist::new();
+    for t in m.tenants.values() {
+        merged.merge(&t.latency);
+    }
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("bench".to_string(), Json::Str("serve_sim".to_string()));
+    o.insert("policy".to_string(), Json::Str(report.policy.to_string()));
+    o.insert("requests".to_string(), Json::Num(m.total_completed() as f64));
+    o.insert("throughput_rps".to_string(), Json::Num(m.throughput()));
+    o.insert("mean_pack".to_string(), Json::Num(m.jit.mean_pack()));
+    o.insert(
+        "pack_efficiency".to_string(),
+        Json::Num(m.jit.pack_efficiency()),
+    );
+    o.insert("p99_us".to_string(), Json::Num(merged.quantile_us(0.99)));
+    o.insert("attainment".to_string(), Json::Num(m.overall_attainment()));
+    o.insert(
+        "same_stream_rows".to_string(),
+        Json::Num(m.same_stream_rows as f64),
+    );
+    o.insert("launches".to_string(), Json::Num(m.jit.launches as f64));
+    o.insert("evictions".to_string(), Json::Num(m.jit.evictions as f64));
+    o.insert("wall_ms".to_string(), Json::Num(wall_ms));
+    std::fs::write(&out, Json::Obj(o).to_string_compact())
+        .with_context(|| format!("write {out}"))?;
+    println!("wrote {out}");
     Ok(())
 }
 

@@ -4,7 +4,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::compiler::jit::JitStats;
+use crate::compiler::jit::{JitStats, LaunchRecord};
 use crate::util::stats::LatencyHist;
 
 /// Metrics for one tenant.
@@ -50,6 +50,14 @@ pub struct ServeMetrics {
     pub padded_rows: u64,
     /// Total useful rows executed.
     pub useful_rows: u64,
+    /// Rows that shared a launch with an earlier row of the same (tenant,
+    /// model) stream — the stream-prefix coalescing a single tenant's
+    /// burst now gets (0 under one-request-per-stream packing). Counts
+    /// *executed* (ok) launches only, consistent with `batches` /
+    /// `useful_rows`; the JIT-level count over all launches including
+    /// failed ones is `jit.same_stream_rows` (they differ exactly when a
+    /// backend execution failed).
+    pub same_stream_rows: u64,
     /// Device busy time, µs.
     pub busy_us: f64,
     /// Wall/virtual span of the run, µs.
@@ -84,6 +92,13 @@ impl ServeMetrics {
         self.useful_rows += useful as u64;
         self.padded_rows += padded as u64;
         self.busy_us += dur_us;
+    }
+
+    /// Record one executed launch from the JIT's per-launch log (batch
+    /// accounting plus the launch's same-stream row count).
+    pub fn launch(&mut self, l: &LaunchRecord) {
+        self.batch(l.pack_size, l.executed, l.duration_us);
+        self.same_stream_rows += l.same_stream_rows as u64;
     }
 
     /// Completed requests across tenants.
@@ -146,10 +161,11 @@ impl ServeMetrics {
     pub fn render(&self) -> String {
         let mut s = String::new();
         s.push_str(&format!(
-            "requests={} batches={} mean_occ={:.2} row_eff={:.2} duty={:.2} thpt={:.1}/s attain={:.3}\n",
+            "requests={} batches={} mean_occ={:.2} same_stream={} row_eff={:.2} duty={:.2} thpt={:.1}/s attain={:.3}\n",
             self.total_completed(),
             self.batches,
             self.mean_occupancy(),
+            self.same_stream_rows,
             self.row_efficiency(),
             self.duty_cycle(),
             self.throughput(),
@@ -206,6 +222,29 @@ mod tests {
         assert_eq!(m.mean_occupancy(), 2.0);
         assert!((m.row_efficiency() - 4.0 / 5.0).abs() < 1e-9);
         assert_eq!(m.batch_occupancy[&3], 1);
+    }
+
+    #[test]
+    fn launch_records_same_stream_rows() {
+        let mut m = ServeMetrics::default();
+        m.launch(&LaunchRecord {
+            pack_size: 4,
+            executed: 4,
+            duration_us: 100.0,
+            ok: true,
+            same_stream_rows: 3,
+        });
+        m.launch(&LaunchRecord {
+            pack_size: 2,
+            executed: 2,
+            duration_us: 50.0,
+            ok: true,
+            same_stream_rows: 0,
+        });
+        assert_eq!(m.batches, 2);
+        assert_eq!(m.useful_rows, 6);
+        assert_eq!(m.same_stream_rows, 3);
+        assert!(m.render().contains("same_stream=3"));
     }
 
     #[test]

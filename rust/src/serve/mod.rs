@@ -21,4 +21,6 @@ pub mod metrics;
 pub mod server;
 
 pub use metrics::ServeMetrics;
-pub use server::{BatchPolicy, ModelBackend, ModelSlot, ServeExecutor, ServeReport, Server};
+pub use server::{
+    BatchPolicy, ModelBackend, ModelSlot, ServeExecutor, ServeReport, Server, SimBackend,
+};

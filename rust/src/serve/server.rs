@@ -11,7 +11,10 @@
 //!   into one launch (up to the model's largest compiled batch variant),
 //!   requests for different models never share a launch;
 //! * each **request** is a [`DispatchRequest`] carrying its SLO and its
-//!   input row as the attached payload;
+//!   input row as the attached payload — marked *independent* of its
+//!   stream's earlier requests (stateless inference), so a hot tenant's
+//!   burst rides one superkernel launch instead of serializing into
+//!   singleton packs (see [`Server::independent_streams`]);
 //! * a pack launch executes as one padded model batch through
 //!   [`ModelBackend::execute`] (the [`ServeExecutor`] adapter).
 //!
@@ -326,6 +329,62 @@ impl<B: ModelBackend> PackExecutor<Vec<f32>> for ServeExecutor<B> {
     }
 }
 
+/// Deterministic simulator backend: fixed per-launch overhead plus a
+/// per-row cost, padding up to power-of-two compiled variants like the
+/// real artifact set. Drives `vliwd bench` and the CI smoke run (no PJRT
+/// artifacts required) and the serving unit tests.
+#[derive(Debug, Clone)]
+pub struct SimBackend {
+    /// Fixed per-launch overhead, µs.
+    pub fixed_us: f64,
+    /// Marginal cost per padded row, µs.
+    pub per_row_us: f64,
+    /// Largest compiled batch variant.
+    pub max_b: u32,
+    /// Input feature count (every model).
+    pub d_in: usize,
+}
+
+impl Default for SimBackend {
+    fn default() -> Self {
+        SimBackend {
+            fixed_us: 500.0,
+            per_row_us: 50.0,
+            max_b: 16,
+            d_in: 4,
+        }
+    }
+}
+
+impl ModelBackend for SimBackend {
+    fn execute(&mut self, model: &str, rows: &[Vec<f32>]) -> Result<ModelExec> {
+        let batch = self.padded_batch(model, rows.len() as u32);
+        let dur = self.fixed_us + self.per_row_us * batch as f64;
+        Ok(ModelExec {
+            outputs: rows.iter().map(|_| vec![0.0; 4]).collect(),
+            batch,
+            duration_us: dur,
+        })
+    }
+
+    fn estimate_us(&self, model: &str, n: u32) -> f64 {
+        let padded = self.padded_batch(model, n);
+        self.fixed_us + self.per_row_us * padded as f64
+    }
+
+    fn max_batch(&self, _m: &str) -> u32 {
+        self.max_b
+    }
+
+    fn d_in(&self, _m: &str) -> usize {
+        self.d_in
+    }
+
+    fn padded_batch(&self, _m: &str, n: u32) -> u32 {
+        n.max(1).next_power_of_two().min(self.max_b)
+    }
+}
+
 /// Serving report.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
@@ -391,6 +450,17 @@ fn record_completion(metrics: &mut ServeMetrics, c: &OpCompletion) {
     }
 }
 
+/// One request at the admission gate (bundled so the drivers cannot
+/// transpose the adjacent time/flag fields at a call site).
+struct AdmitReq {
+    group: u64,
+    tenant: u32,
+    arrival_us: f64,
+    deadline_us: f64,
+    independent: bool,
+    row: Vec<f32>,
+}
+
 /// The multi-tenant server.
 pub struct Server<B: ModelBackend> {
     backend: B,
@@ -401,6 +471,13 @@ pub struct Server<B: ModelBackend> {
     /// JIT issue-window capacity — the backpressure backstop behind
     /// admission.
     pub window_capacity: usize,
+    /// Treat requests within one (tenant, model) stream as independent
+    /// (stateless inference, the default): a tenant's burst may then
+    /// coalesce into one launch and issue out of arrival order within its
+    /// stream. Turn off for deployments whose per-stream requests carry
+    /// state — program order then binds and at most one request per stream
+    /// rides each launch.
+    pub independent_streams: bool,
 }
 
 impl<B: ModelBackend> Server<B> {
@@ -411,6 +488,7 @@ impl<B: ModelBackend> Server<B> {
             policy,
             admission: Admission::default(),
             window_capacity: 1024,
+            independent_streams: true,
         }
     }
 
@@ -426,34 +504,80 @@ impl<B: ModelBackend> Server<B> {
 
     /// Admission decision for one request; on Accept, submits it into the
     /// JIT (window backpressure sheds as a backstop). Records drops.
-    #[allow(clippy::too_many_arguments)]
+    ///
+    /// Drain pricing covers BOTH the un-issued queue and the group's
+    /// in-flight launches: under the pooled/async drive mode a new request
+    /// waits behind work already on the device, and ignoring it
+    /// systematically under-estimated drain and admitted doomed requests.
+    /// Both terms are priced *per launch*. Independent streams drain in
+    /// ceil(queued / pack_cap) cap-wide launches; dependent streams expose
+    /// one op per stream per launch, so the longest pending stream bounds
+    /// the launch count (cross-stream coalescing still fills each launch).
+    /// The in-flight term sums the scheduler's own estimate of every
+    /// pending launch (N singleton launches keep N fixed overheads).
+    /// Still unpriced: execution time already elapsed and pooled-worker
+    /// parallelism; refining those belongs to the async-admission
+    /// frontend (ROADMAP).
     fn admit_request(
         jit: &mut JitCompiler<ServeExecutor<&mut B>, Vec<f32>>,
         streams: &mut BTreeMap<(u32, u64), u32>,
         admission: &Admission,
         metrics: &mut ServeMetrics,
         slots: &[ModelSlot],
-        group: u64,
-        tenant: u32,
-        arrival_us: f64,
-        deadline_us: f64,
-        row: Vec<f32>,
+        r: AdmitReq,
     ) {
+        let AdmitReq {
+            group,
+            tenant,
+            arrival_us,
+            deadline_us,
+            independent,
+            row,
+        } = r;
+        let stream = intern_stream(streams, tenant, group);
         let depth = jit.window.pending_in_group(group);
-        let est = jit.executor().estimate_group_us(group, depth as u32 + 1);
+        let inflight = jit.window.inflight_in_group(group);
+        let cap = (jit.pack_cap(group) as u32).max(1);
+        let queued = depth as u32 + 1;
+        let mut est = if independent {
+            // cap-wide packs: full launches at the cap plus a remainder
+            let full = queued / cap;
+            let rem = queued % cap;
+            f64::from(full) * jit.executor().estimate_group_us(group, cap)
+                + if rem > 0 {
+                    jit.executor().estimate_group_us(group, rem)
+                } else {
+                    0.0
+                }
+        } else {
+            // program order binds: each launch takes at most one op per
+            // stream, so the longest pending stream — counting this
+            // request on its own stream — sets the launch count (a
+            // single-stream backlog is NOT one padded batch), while
+            // cross-stream coalescing still packs each launch up to `cap`
+            // wide across streams
+            let own = jit.window.stream_depth_in_group(stream, group) as u32 + 1;
+            let launches = (jit.window.max_stream_depth_in_group(group) as u32)
+                .max(own)
+                .max(queued.div_ceil(cap));
+            let per_launch = queued.div_ceil(launches).min(cap).max(1);
+            f64::from(launches) * jit.executor().estimate_group_us(group, per_launch)
+        };
+        est += jit.inflight_group_est_us(group);
         let slack_after = deadline_us - jit.now_us - est;
-        if admission.decide(depth, slack_after) == Admit::Reject {
+        if admission.decide(depth + inflight, slack_after) == Admit::Reject {
             metrics.drop_request(tenant);
             return;
         }
         let slot = &slots[group as usize];
         let req = DispatchRequest::new(
-            intern_stream(streams, tenant, group),
+            stream,
             KernelDesc::gemm(1, slot.d_in as u32, 1),
             deadline_us - arrival_us,
         )
         .with_group(group)
-        .with_tag(tenant as u64);
+        .with_tag(tenant as u64)
+        .with_independent(independent);
         if jit.submit_at(req, arrival_us, row).is_none() {
             // window full: the backpressure backstop sheds the request
             metrics.drop_request(tenant);
@@ -469,6 +593,7 @@ impl<B: ModelBackend> Server<B> {
         let cfg = self.policy.jit_config(&slots, self.window_capacity);
         let policy_name = self.policy.name();
         let admission = self.admission.clone();
+        let independent = self.independent_streams;
         let mut jit: JitCompiler<ServeExecutor<&mut B>, Vec<f32>> =
             JitCompiler::with_payloads(
                 cfg,
@@ -491,11 +616,14 @@ impl<B: ModelBackend> Server<B> {
                     &admission,
                     &mut metrics,
                     &slots,
-                    group,
-                    r.tenant,
-                    r.arrival_us,
-                    r.deadline_us,
-                    row,
+                    AdmitReq {
+                        group,
+                        tenant: r.tenant,
+                        arrival_us: r.arrival_us,
+                        deadline_us: r.deadline_us,
+                        independent,
+                        row,
+                    },
                 );
             }
             // 2. let the core launch everything the policy allows
@@ -505,7 +633,7 @@ impl<B: ModelBackend> Server<B> {
             }
             for l in jit.take_launches() {
                 if l.ok {
-                    metrics.batch(l.pack_size, l.executed, l.duration_us);
+                    metrics.launch(&l);
                 }
             }
             // 3. advance the virtual clock to the next event
@@ -613,6 +741,7 @@ impl<B: ModelBackend> Server<B> {
         let cfg = self.policy.jit_config(&slots, self.window_capacity);
         let policy_name = self.policy.name();
         let admission = self.admission.clone();
+        let independent = self.independent_streams;
         let mut metrics = ServeMetrics::default();
         let (res_tx, res_rx) =
             mpsc::channel::<(u64, std::result::Result<ModelExec, String>)>();
@@ -653,11 +782,14 @@ impl<B: ModelBackend> Server<B> {
                     &admission,
                     &mut metrics,
                     &slots,
-                    inc.group,
-                    inc.tenant,
-                    arrival_us,
-                    arrival_us + inc.slo_us,
-                    inc.row,
+                    AdmitReq {
+                        group: inc.group,
+                        tenant: inc.tenant,
+                        arrival_us,
+                        deadline_us: arrival_us + inc.slo_us,
+                        independent,
+                        row: inc.row,
+                    },
                 );
             }
             // 2. issue every launch the policy allows right now
@@ -737,7 +869,7 @@ impl<B: ModelBackend> Server<B> {
             }
             for l in jit.take_launches() {
                 if l.ok {
-                    metrics.batch(l.pack_size, l.executed, l.duration_us);
+                    metrics.launch(&l);
                 }
             }
             if disconnected && jit.window.is_empty() && jit.inflight_launches() == 0 {
@@ -757,53 +889,12 @@ impl<B: ModelBackend> Server<B> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workload::trace::{ArrivalKind, TenantSpec, Trace};
+    use crate::workload::trace::{ArrivalKind, Request, TenantSpec, Trace};
 
-    /// Deterministic fake backend: fixed per-row cost + fixed overhead,
-    /// pad-up to pow2 variants like the real artifact set.
-    struct FakeBackend {
-        fixed_us: f64,
-        per_row_us: f64,
-        max_b: u32,
-    }
-
-    impl FakeBackend {
-        fn new() -> Self {
-            FakeBackend {
-                fixed_us: 500.0,
-                per_row_us: 50.0,
-                max_b: 16,
-            }
-        }
-    }
-
-    impl ModelBackend for FakeBackend {
-        fn execute(&mut self, _model: &str, rows: &[Vec<f32>]) -> Result<ModelExec> {
-            let batch = (rows.len() as u32).next_power_of_two().min(self.max_b);
-            let dur = self.fixed_us + self.per_row_us * batch as f64;
-            Ok(ModelExec {
-                outputs: rows.iter().map(|_| vec![0.0; 4]).collect(),
-                batch,
-                duration_us: dur,
-            })
-        }
-
-        fn estimate_us(&self, _m: &str, n: u32) -> f64 {
-            let padded = n.max(1).next_power_of_two().min(self.max_b);
-            self.fixed_us + self.per_row_us * padded as f64
-        }
-
-        fn max_batch(&self, _m: &str) -> u32 {
-            self.max_b
-        }
-
-        fn d_in(&self, _m: &str) -> usize {
-            4
-        }
-
-        fn padded_batch(&self, _m: &str, n: u32) -> u32 {
-            n.max(1).next_power_of_two().min(self.max_b)
-        }
+    /// The deterministic simulator backend (now public as [`SimBackend`]):
+    /// fixed per-launch overhead + per-row cost, pow2 padded variants.
+    fn sim() -> SimBackend {
+        SimBackend::default()
     }
 
     fn tenants(n: u32, rate: f64, slo_us: u64) -> Vec<TenantSpec> {
@@ -815,9 +906,9 @@ mod tests {
     #[test]
     fn coalescing_batches_more_than_fifo() {
         let trace = Trace::generate(&tenants(8, 200.0, 100_000), 50, 42);
-        let mut fifo = Server::new(FakeBackend::new(), BatchPolicy::NoBatching);
+        let mut fifo = Server::new(sim(), BatchPolicy::NoBatching);
         let r1 = fifo.replay(&trace);
-        let mut coal = Server::new(FakeBackend::new(), BatchPolicy::coalescing());
+        let mut coal = Server::new(sim(), BatchPolicy::coalescing());
         let r2 = coal.replay(&trace);
         assert!(r2.metrics.mean_occupancy() > 2.0 * r1.metrics.mean_occupancy());
         assert!(r2.metrics.batches < r1.metrics.batches);
@@ -831,9 +922,9 @@ mod tests {
         // 8 tenants at high rate: FIFO's serialization blows deadlines,
         // coalescing amortizes the fixed cost
         let trace = Trace::generate(&tenants(8, 400.0, 30_000), 80, 7);
-        let mut fifo = Server::new(FakeBackend::new(), BatchPolicy::NoBatching);
+        let mut fifo = Server::new(sim(), BatchPolicy::NoBatching);
         let a1 = fifo.replay(&trace).metrics.overall_attainment();
-        let mut coal = Server::new(FakeBackend::new(), BatchPolicy::coalescing());
+        let mut coal = Server::new(sim(), BatchPolicy::coalescing());
         let a2 = coal.replay(&trace).metrics.overall_attainment();
         assert!(a2 > a1, "coalescing {a2} must beat fifo {a1}");
         assert!(a2 > 0.9, "coalescing attainment {a2}");
@@ -842,7 +933,7 @@ mod tests {
     #[test]
     fn light_load_latency_stays_low() {
         let trace = Trace::generate(&tenants(2, 20.0, 100_000), 30, 3);
-        let mut s = Server::new(FakeBackend::new(), BatchPolicy::coalescing());
+        let mut s = Server::new(sim(), BatchPolicy::coalescing());
         let r = s.replay(&trace);
         assert_eq!(r.metrics.overall_attainment(), 1.0);
         // nobody waits longer than window + exec
@@ -857,7 +948,7 @@ mod tests {
         // launch well before the 50ms window
         let trace = Trace::generate(&tenants(1, 100.0, 2_000), 20, 9);
         let mut s = Server::new(
-            FakeBackend::new(),
+            sim(),
             BatchPolicy::Coalescing {
                 window_us: 50_000.0,
                 target_batch: 16,
@@ -875,7 +966,7 @@ mod tests {
     #[test]
     fn overload_drops_via_admission() {
         let trace = Trace::generate(&tenants(4, 5_000.0, 1_000), 400, 5);
-        let mut s = Server::new(FakeBackend::new(), BatchPolicy::coalescing());
+        let mut s = Server::new(sim(), BatchPolicy::coalescing());
         s.admission = Admission::new(32);
         let r = s.replay(&trace);
         let drops: u64 = r.metrics.tenants.values().map(|t| t.dropped).sum();
@@ -887,7 +978,7 @@ mod tests {
     #[test]
     fn no_batching_runs_batch_one() {
         let trace = Trace::generate(&tenants(4, 100.0, 100_000), 20, 21);
-        let mut s = Server::new(FakeBackend::new(), BatchPolicy::NoBatching);
+        let mut s = Server::new(sim(), BatchPolicy::NoBatching);
         let r = s.replay(&trace);
         assert_eq!(r.metrics.total_completed(), 80);
         assert_eq!(r.metrics.mean_occupancy(), 1.0);
@@ -901,7 +992,7 @@ mod tests {
         // schedule, bit-for-bit)
         let trace = Trace::generate(&tenants(4, 150.0, 50_000), 40, 13);
         let run = || {
-            let mut s = Server::new(FakeBackend::new(), BatchPolicy::coalescing());
+            let mut s = Server::new(sim(), BatchPolicy::coalescing());
             s.replay(&trace)
         };
         let a = run();
@@ -929,7 +1020,7 @@ mod tests {
     #[test]
     fn jit_pack_stats_surface_in_metrics() {
         let trace = Trace::generate(&tenants(6, 300.0, 100_000), 30, 17);
-        let mut s = Server::new(FakeBackend::new(), BatchPolicy::coalescing());
+        let mut s = Server::new(sim(), BatchPolicy::coalescing());
         let r = s.replay(&trace);
         assert!(r.metrics.jit.launches > 0);
         assert!(r.metrics.jit.mean_pack() > 1.0, "packing must happen");
@@ -938,10 +1029,431 @@ mod tests {
         assert!(r.render().contains("jit:"), "report shows jit stats");
     }
 
+    fn burst_trace(n: usize, gap_us: f64, slo_us: u64) -> Trace {
+        let requests = (0..n)
+            .map(|i| Request {
+                id: i as u64,
+                tenant: 0,
+                model: "m".to_string(),
+                arrival_us: i as f64 * gap_us,
+                deadline_us: i as f64 * gap_us + slo_us as f64,
+            })
+            .collect();
+        Trace {
+            requests,
+            tenants: vec![TenantSpec::new(0, "m", slo_us, 1_000.0, ArrivalKind::Poisson)],
+        }
+    }
+
+    #[test]
+    fn single_tenant_burst_coalesces_at_no_attainment_cost() {
+        // the tentpole acceptance: 8 requests from ONE (tenant, model)
+        // stream, 50µs apart. Under the independence contract the burst
+        // rides multi-problem packs; with program order binding (the
+        // pre-change behavior, still available via `independent_streams`)
+        // the same burst serializes into singleton launches and loses SLOs.
+        let trace = burst_trace(8, 50.0, 3_000);
+        let mut s = Server::new(sim(), BatchPolicy::coalescing());
+        let r_ind = s.replay(&trace);
+        let mut s_dep = Server::new(sim(), BatchPolicy::coalescing());
+        s_dep.independent_streams = false;
+        let r_dep = s_dep.replay(&trace);
+        assert!(
+            r_ind.metrics.jit.mean_pack() > 1.5,
+            "burst must coalesce, mean_pack {}",
+            r_ind.metrics.jit.mean_pack()
+        );
+        assert_eq!(
+            r_dep.metrics.jit.mean_pack(),
+            1.0,
+            "dependent stream keeps one op per launch"
+        );
+        assert!(
+            r_ind.metrics.overall_attainment() >= r_dep.metrics.overall_attainment(),
+            "coalescing may never lose attainment: {} vs {}",
+            r_ind.metrics.overall_attainment(),
+            r_dep.metrics.overall_attainment()
+        );
+        assert_eq!(r_ind.metrics.total_completed(), 8);
+        assert!(r_ind.metrics.same_stream_rows > 0, "burst shares launches");
+        assert_eq!(r_dep.metrics.same_stream_rows, 0);
+        // conservation in the dependent run too (late burst members may be
+        // shed by the per-op drain pricing — they were doomed anyway)
+        let dep_drops: u64 = r_dep.metrics.tenants.values().map(|t| t.dropped).sum();
+        assert_eq!(r_dep.metrics.total_completed() + dep_drops, 8);
+    }
+
+    #[test]
+    fn dependent_stream_admission_prices_per_op_drain() {
+        // with program order binding a queued stream drains one op per
+        // launch — pricing it at the pack cap (one padded batch) would
+        // re-open the doomed-admission hole for stateful streams
+        let slots = vec![ModelSlot {
+            name: "m".to_string(),
+            d_in: 4,
+            max_batch: 16,
+        }];
+        let mut backend = sim();
+        let cfg = BatchPolicy::coalescing().jit_config(&slots, 64); // cap 16
+        let mut jit: JitCompiler<ServeExecutor<&mut SimBackend>, Vec<f32>> =
+            JitCompiler::with_payloads(
+                cfg,
+                ServeExecutor::new(&mut backend, slots.clone()),
+            );
+        let admission = Admission::default();
+        let mut metrics = ServeMetrics::default();
+        let mut streams: BTreeMap<(u32, u64), u32> = BTreeMap::new();
+        for _ in 0..4 {
+            Server::<SimBackend>::admit_request(
+                &mut jit,
+                &mut streams,
+                &admission,
+                &mut metrics,
+                &slots,
+                AdmitReq {
+                    group: 0,
+                    tenant: 0, // ONE dependent stream
+                    arrival_us: 0.0,
+                    deadline_us: 1e9,
+                    independent: false,
+                    row: vec![0.0; 4],
+                },
+            );
+        }
+        assert_eq!(jit.window.pending_in_group(0), 4);
+        // true drain is 5 singleton launches (2750µs), not one padded
+        // batch (900µs): a 1500µs deadline must be shed
+        Server::<SimBackend>::admit_request(
+            &mut jit,
+            &mut streams,
+            &admission,
+            &mut metrics,
+            &slots,
+            AdmitReq {
+                group: 0,
+                tenant: 0,
+                arrival_us: 0.0,
+                deadline_us: 1_500.0,
+                independent: false,
+                row: vec![0.0; 4],
+            },
+        );
+        let drops: u64 = metrics.tenants.values().map(|t| t.dropped).sum();
+        assert_eq!(drops, 1, "doomed dependent request is shed");
+    }
+
+    #[test]
+    fn dependent_multi_stream_queue_prices_cross_stream_packing() {
+        // 8 DISTINCT dependent streams with one op each drain in about one
+        // cap-wide launch — admission must not price them as 8 serial
+        // launches and shed an easily-servable 9th request
+        let slots = vec![ModelSlot {
+            name: "m".to_string(),
+            d_in: 4,
+            max_batch: 16,
+        }];
+        let mut backend = sim();
+        let cfg = BatchPolicy::coalescing().jit_config(&slots, 64); // cap 16
+        let mut jit: JitCompiler<ServeExecutor<&mut SimBackend>, Vec<f32>> =
+            JitCompiler::with_payloads(
+                cfg,
+                ServeExecutor::new(&mut backend, slots.clone()),
+            );
+        let admission = Admission::default();
+        let mut metrics = ServeMetrics::default();
+        let mut streams: BTreeMap<(u32, u64), u32> = BTreeMap::new();
+        for t in 0..8 {
+            Server::<SimBackend>::admit_request(
+                &mut jit,
+                &mut streams,
+                &admission,
+                &mut metrics,
+                &slots,
+                AdmitReq {
+                    group: 0,
+                    tenant: t, // eight different streams
+                    arrival_us: 0.0,
+                    deadline_us: 1e9,
+                    independent: false,
+                    row: vec![0.0; 4],
+                },
+            );
+        }
+        assert_eq!(jit.window.pending_in_group(0), 8);
+        // all 9 ops are stream heads, so the drain is ONE 9-wide launch
+        // (padded 16) ≈ 1300µs — well inside a 2.5ms deadline (a naive
+        // one-launch-per-op price of 9·550µs = 4950µs would shed it)
+        Server::<SimBackend>::admit_request(
+            &mut jit,
+            &mut streams,
+            &admission,
+            &mut metrics,
+            &slots,
+            AdmitReq {
+                group: 0,
+                tenant: 9,
+                arrival_us: 0.0,
+                deadline_us: 2_500.0,
+                independent: false,
+                row: vec![0.0; 4],
+            },
+        );
+        let drops: u64 = metrics.tenants.values().map(|t| t.dropped).sum();
+        assert_eq!(drops, 0, "servable multi-stream dependent load admitted");
+        assert_eq!(jit.window.pending_in_group(0), 9);
+    }
+
+    #[test]
+    fn admission_prices_inflight_drain() {
+        // satellite bugfix: a request that survives queue-only pricing but
+        // is doomed behind the group's in-flight launches must be shed
+        // (the pooled/async drive mode's systematic under-estimate)
+        let slots = vec![ModelSlot {
+            name: "m".to_string(),
+            d_in: 4,
+            max_batch: 16,
+        }];
+        let mut backend = sim();
+        let policy = BatchPolicy::Coalescing {
+            window_us: 0.0,
+            target_batch: 1,
+            safety_margin_us: 0.0,
+        };
+        let cfg = policy.jit_config(&slots, 64);
+        let mut jit: JitCompiler<ServeExecutor<&mut SimBackend>, Vec<f32>> =
+            JitCompiler::with_payloads(
+                cfg,
+                ServeExecutor::new(&mut backend, slots.clone()),
+            );
+        let admission = Admission::default();
+        let mut metrics = ServeMetrics::default();
+        let mut streams: BTreeMap<(u32, u64), u32> = BTreeMap::new();
+        for t in 0..4 {
+            Server::<SimBackend>::admit_request(
+                &mut jit,
+                &mut streams,
+                &admission,
+                &mut metrics,
+                &slots,
+                AdmitReq {
+                    group: 0,
+                    tenant: t,
+                    arrival_us: 0.0,
+                    deadline_us: 1e9,
+                    independent: true,
+                    row: vec![0.0; 4],
+                },
+            );
+        }
+        let (launches, _) = jit.issue_ready();
+        assert!(!launches.is_empty());
+        assert_eq!(jit.window.inflight_in_group(0), 4, "work is on the device");
+        assert_eq!(jit.window.pending_in_group(0), 0);
+        // queue-only estimate for a fresh singleton is 550µs (fixed 500 +
+        // 50/row); the in-flight drain adds the pending batch-4 launch's
+        // own scheduler estimate, 700µs. A 600µs deadline survives the old
+        // (queue-only) pricing but is doomed in reality.
+        Server::<SimBackend>::admit_request(
+            &mut jit,
+            &mut streams,
+            &admission,
+            &mut metrics,
+            &slots,
+            AdmitReq {
+                group: 0,
+                tenant: 9,
+                arrival_us: 0.0,
+                deadline_us: 600.0,
+                independent: true,
+                row: vec![0.0; 4],
+            },
+        );
+        let drops: u64 = metrics.tenants.values().map(|t| t.dropped).sum();
+        assert_eq!(drops, 1, "doomed request behind in-flight work is shed");
+        assert_eq!(jit.window.pending_in_group(0), 0, "it was never submitted");
+        // enough slack to survive the full (queue + in-flight) drain: admitted
+        Server::<SimBackend>::admit_request(
+            &mut jit,
+            &mut streams,
+            &admission,
+            &mut metrics,
+            &slots,
+            AdmitReq {
+                group: 0,
+                tenant: 10,
+                arrival_us: 0.0,
+                deadline_us: 1_500.0,
+                independent: true,
+                row: vec![0.0; 4],
+            },
+        );
+        assert_eq!(jit.window.pending_in_group(0), 1);
+        let drops: u64 = metrics.tenants.values().map(|t| t.dropped).sum();
+        assert_eq!(drops, 1, "no new drop");
+    }
+
+    #[test]
+    fn admission_prices_each_inflight_launch_separately() {
+        // several small in-flight launches each pay their fixed per-launch
+        // overhead: 4 singleton launches drain in 4·550µs = 2200µs, NOT the
+        // 700µs one batch-4 launch would take — pricing them as one batch
+        // (the naive estimate) would re-open the doomed-admission hole
+        let slots = vec![ModelSlot {
+            name: "m".to_string(),
+            d_in: 4,
+            max_batch: 16,
+        }];
+        let mut backend = sim();
+        let cfg = BatchPolicy::NoBatching.jit_config(&slots, 64); // singleton packs
+        let mut jit: JitCompiler<ServeExecutor<&mut SimBackend>, Vec<f32>> =
+            JitCompiler::with_payloads(
+                cfg,
+                ServeExecutor::new(&mut backend, slots.clone()),
+            );
+        let admission = Admission::default();
+        let mut metrics = ServeMetrics::default();
+        let mut streams: BTreeMap<(u32, u64), u32> = BTreeMap::new();
+        for t in 0..4 {
+            Server::<SimBackend>::admit_request(
+                &mut jit,
+                &mut streams,
+                &admission,
+                &mut metrics,
+                &slots,
+                AdmitReq {
+                    group: 0,
+                    tenant: t,
+                    arrival_us: 0.0,
+                    deadline_us: 1e9,
+                    independent: true,
+                    row: vec![0.0; 4],
+                },
+            );
+        }
+        let (launches, _) = jit.issue_ready();
+        assert_eq!(launches.len(), 4, "NoBatching issues singletons");
+        assert!((jit.inflight_group_est_us(0) - 2_200.0).abs() < 1e-9);
+        // deadline 1500µs would survive one-batch pricing (700 + 550) but
+        // not the true per-launch drain (2200 + 550)
+        Server::<SimBackend>::admit_request(
+            &mut jit,
+            &mut streams,
+            &admission,
+            &mut metrics,
+            &slots,
+            AdmitReq {
+                group: 0,
+                tenant: 9,
+                arrival_us: 0.0,
+                deadline_us: 1_500.0,
+                independent: true,
+                row: vec![0.0; 4],
+            },
+        );
+        let drops: u64 = metrics.tenants.values().map(|t| t.dropped).sum();
+        assert_eq!(drops, 1, "doomed behind four singleton launches");
+        // a deadline past the full per-launch drain is still admitted
+        Server::<SimBackend>::admit_request(
+            &mut jit,
+            &mut streams,
+            &admission,
+            &mut metrics,
+            &slots,
+            AdmitReq {
+                group: 0,
+                tenant: 10,
+                arrival_us: 0.0,
+                deadline_us: 3_000.0,
+                independent: true,
+                row: vec![0.0; 4],
+            },
+        );
+        assert_eq!(jit.window.pending_in_group(0), 1);
+    }
+
+    #[test]
+    fn admission_prices_queue_deeper_than_one_pack_per_launch() {
+        // the un-issued queue drains in ceil(queued/pack_cap) launches, not
+        // one padded batch: under NoBatching (pack cap 1), 4 queued
+        // singletons + this request cost 5·550µs = 2750µs, not the 900µs a
+        // single padded batch-8 estimate would claim
+        let slots = vec![ModelSlot {
+            name: "m".to_string(),
+            d_in: 4,
+            max_batch: 16,
+        }];
+        let mut backend = sim();
+        let cfg = BatchPolicy::NoBatching.jit_config(&slots, 64);
+        let mut jit: JitCompiler<ServeExecutor<&mut SimBackend>, Vec<f32>> =
+            JitCompiler::with_payloads(
+                cfg,
+                ServeExecutor::new(&mut backend, slots.clone()),
+            );
+        let admission = Admission::default();
+        let mut metrics = ServeMetrics::default();
+        let mut streams: BTreeMap<(u32, u64), u32> = BTreeMap::new();
+        for t in 0..4 {
+            Server::<SimBackend>::admit_request(
+                &mut jit,
+                &mut streams,
+                &admission,
+                &mut metrics,
+                &slots,
+                AdmitReq {
+                    group: 0,
+                    tenant: t,
+                    arrival_us: 0.0,
+                    deadline_us: 1e9,
+                    independent: true,
+                    row: vec![0.0; 4],
+                },
+            );
+        }
+        // nothing issued: all four wait in the un-issued queue
+        assert_eq!(jit.window.pending_in_group(0), 4);
+        assert_eq!(jit.window.inflight_in_group(0), 0);
+        // deadline 1500µs survives one-padded-batch pricing (900µs) but
+        // not the true per-launch queue drain (2750µs)
+        Server::<SimBackend>::admit_request(
+            &mut jit,
+            &mut streams,
+            &admission,
+            &mut metrics,
+            &slots,
+            AdmitReq {
+                group: 0,
+                tenant: 9,
+                arrival_us: 0.0,
+                deadline_us: 1_500.0,
+                independent: true,
+                row: vec![0.0; 4],
+            },
+        );
+        let drops: u64 = metrics.tenants.values().map(|t| t.dropped).sum();
+        assert_eq!(drops, 1, "doomed behind a deep singleton queue");
+        // past the full drain it is admitted
+        Server::<SimBackend>::admit_request(
+            &mut jit,
+            &mut streams,
+            &admission,
+            &mut metrics,
+            &slots,
+            AdmitReq {
+                group: 0,
+                tenant: 10,
+                arrival_us: 0.0,
+                deadline_us: 3_000.0,
+                independent: true,
+                row: vec![0.0; 4],
+            },
+        );
+        assert_eq!(jit.window.pending_in_group(0), 5);
+    }
+
     #[test]
     fn realtime_mode_serves_everything() {
         let trace = Trace::generate(&tenants(3, 300.0, 200_000), 10, 11);
-        let mut s = Server::new(FakeBackend::new(), BatchPolicy::coalescing());
+        let mut s = Server::new(sim(), BatchPolicy::coalescing());
         let r = s.run_realtime(&trace, 50.0); // 50x compressed
         let drops: u64 = r.metrics.tenants.values().map(|t| t.dropped).sum();
         assert_eq!(r.metrics.total_completed() + drops, 30);
@@ -959,8 +1471,8 @@ mod tests {
             TenantSpec::new(2, "alpha", 200_000, 300.0, ArrivalKind::Poisson),
         ];
         let trace = Trace::generate(&tenants, 10, 23);
-        let mut s = Server::new(FakeBackend::new(), BatchPolicy::coalescing());
-        let r = s.run_realtime_pooled(&trace, 50.0, 2, |_| FakeBackend::new());
+        let mut s = Server::new(sim(), BatchPolicy::coalescing());
+        let r = s.run_realtime_pooled(&trace, 50.0, 2, |_| sim());
         let drops: u64 = r.metrics.tenants.values().map(|t| t.dropped).sum();
         assert_eq!(r.metrics.total_completed() + drops, 30);
         assert!(r.metrics.jit.launches > 0);

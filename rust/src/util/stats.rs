@@ -206,7 +206,11 @@ impl LatencyHist {
         self.max_us
     }
 
-    /// Approximate quantile (µs): bucket upper edge at the target rank.
+    /// Approximate quantile (µs): the upper edge of the bucket holding the
+    /// target rank, clamped to the recorded max. Reporting the *upper*
+    /// edge keeps the pair consistent with [`LatencyHist::frac_leq`]:
+    /// `frac_leq(quantile_us(q)) >= q` always holds, because `frac_leq`
+    /// counts exactly the buckets whose upper edge is within the limit.
     pub fn quantile_us(&self, q: f64) -> f64 {
         if self.total == 0 {
             return 0.0;
@@ -216,19 +220,45 @@ impl LatencyHist {
         for (i, &c) in self.counts.iter().enumerate() {
             acc += c;
             if acc >= target.max(1) {
-                return self.lo_us * self.growth.powi(i as i32 + 1);
+                if i + 1 == self.counts.len() {
+                    // the overflow bucket is unbounded above — its nominal
+                    // edge would under-report; the recorded max is its
+                    // true upper bound (and frac_leq(max) = 1 exactly)
+                    return self.max_us;
+                }
+                let edge = self.lo_us * self.growth.powi(i as i32 + 1);
+                // the true value is ≤ both the bucket's upper edge and the
+                // recorded max
+                return edge.min(self.max_us);
             }
         }
         self.max_us
     }
 
     /// Fraction of samples at or below `limit_us` — SLO attainment.
+    ///
+    /// Counts only buckets whose *upper* edge is ≤ the limit. Counting the
+    /// whole bucket containing `limit_us` (the old behavior) credited up
+    /// to one ~4% bucket of samples strictly above the SLO, inflating
+    /// attainment; the bucketed answer is now a lower bound on the truth.
     pub fn frac_leq(&self, limit_us: f64) -> f64 {
         if self.total == 0 {
             return 1.0;
         }
-        let lim_bucket = self.bucket(limit_us);
-        let acc: u64 = self.counts[..=lim_bucket].iter().sum();
+        if limit_us >= self.max_us {
+            return 1.0; // every recorded sample is ≤ the limit, exactly
+        }
+        let mut full_buckets = 0usize;
+        if limit_us >= self.lo_us {
+            // bucket i covers [lo·g^i, lo·g^(i+1)): include i while its
+            // upper edge lo·g^(i+1) ≤ limit (epsilon forgives float error
+            // when the limit sits exactly on an edge)
+            let b = (limit_us / self.lo_us).ln() / self.growth.ln() + 1e-9;
+            // cap below the overflow bucket: it is unbounded above, so it
+            // only counts via the max_us shortcut
+            full_buckets = (b.floor() as usize).min(self.counts.len() - 1);
+        }
+        let acc: u64 = self.counts[..full_buckets].iter().sum();
         acc as f64 / self.total as f64
     }
 
@@ -366,6 +396,58 @@ mod tests {
         }
         let att = h.frac_leq(10_000.0);
         assert!((att - 0.9).abs() < 0.02, "att={att}");
+    }
+
+    #[test]
+    fn frac_leq_excludes_bucket_straddling_the_limit() {
+        // regression: buckets [100,200) and [200,400); samples at 150 and
+        // 300. A 250µs SLO sits inside the second bucket — the old code
+        // counted the whole straddling bucket and reported 100% attainment
+        // even though the 300µs sample misses the SLO.
+        let mut h = LatencyHist::with_range(100.0, 2.0, 10);
+        h.record_us(150.0);
+        h.record_us(300.0);
+        assert_eq!(h.frac_leq(250.0), 0.5, "the 300µs sample is not ≤ 250µs");
+        // a limit exactly on a bucket edge counts every bucket below it
+        assert_eq!(h.frac_leq(200.0), 0.5);
+        assert_eq!(h.frac_leq(400.0), 1.0);
+        // a limit below the first bucket edge counts nothing
+        assert_eq!(h.frac_leq(99.0), 0.0);
+        // a limit at/above the recorded max is exact
+        assert_eq!(h.frac_leq(300.0), 1.0);
+    }
+
+    #[test]
+    fn quantile_edge_consistent_with_frac_leq() {
+        // the reported quantile edge must attain its own rank:
+        // frac_leq(quantile_us(q)) >= q for any q
+        let mut h = LatencyHist::new();
+        for i in 0..1000u64 {
+            h.record_us(10.0 + (i as f64) * 97.0); // spread over many buckets
+        }
+        for q in [0.1, 0.5, 0.9, 0.99, 1.0] {
+            let edge = h.quantile_us(q);
+            let attained = h.frac_leq(edge);
+            assert!(
+                attained >= q,
+                "q={q}: edge {edge} attains only {attained}"
+            );
+        }
+        // the quantile never exceeds the recorded max
+        assert!(h.quantile_us(1.0) <= h.max_us());
+    }
+
+    #[test]
+    fn overflow_bucket_quantile_reports_recorded_max() {
+        // a rank landing in the unbounded overflow bucket must report the
+        // recorded max, not the (far smaller) nominal bucket edge — and
+        // stay consistent with frac_leq
+        let mut h = LatencyHist::with_range(100.0, 2.0, 2); // [100,200), [200,∞)
+        h.record_us(150.0);
+        h.record_us(10_000.0); // overflow bucket
+        assert_eq!(h.quantile_us(1.0), 10_000.0, "p100 is the recorded max");
+        assert_eq!(h.frac_leq(h.quantile_us(1.0)), 1.0);
+        assert_eq!(h.frac_leq(h.quantile_us(0.5)), 0.5);
     }
 
     #[test]

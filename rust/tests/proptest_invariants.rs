@@ -41,6 +41,7 @@ fn prop_pack_partitions_ops() {
                 deadline_us: 1e9,
                 group: 0,
                 tag: 0,
+                independent: false,
             })
             .collect();
         let refs: Vec<&TensorOp> = ops.iter().collect();
@@ -138,6 +139,98 @@ fn prop_window_program_order_per_stream() {
                 }
             }
         }
+    }
+}
+
+#[test]
+fn prop_window_independent_ready_prefix_is_safe() {
+    // with random independence flags, randomized issue order of ready ops
+    // — plus random straggler evictions (requeue) — never lets a DEPENDENT
+    // op issue while an earlier op of its stream is still pending
+    // (independent ops are free to overtake)
+    let mut rng = Rng::new(0x1DE9);
+    for case in 0..100 {
+        let mut w = Window::new(256);
+        // (id, stream, seq) of submitted-but-unissued ops
+        let mut pending: Vec<(OpId, u32, u64)> = Vec::new();
+        let mut inflight: Vec<OpId> = Vec::new();
+        for _ in 0..200 {
+            match rng.below(4) {
+                0 => {
+                    let stream = rng.below(4) as u32;
+                    let ind = rng.below(2) == 1;
+                    if let Some(id) = w.submit(
+                        DispatchRequest::new(
+                            StreamId(stream),
+                            rand_kernel(&mut rng),
+                            1e9,
+                        )
+                        .with_independent(ind),
+                        0.0,
+                    ) {
+                        let seq = w.get(id).unwrap().seq;
+                        pending.push((id, stream, seq));
+                    }
+                }
+                1 => {
+                    let ready: Vec<OpId> = w.ready().iter().map(|o| o.id).collect();
+                    if !ready.is_empty() {
+                        let pick = rng.below(ready.len() as u64) as usize;
+                        let id = ready[pick];
+                        assert_eq!(w.state(id), Some(OpState::Ready));
+                        let op = w.get(id).unwrap().clone();
+                        if !op.independent {
+                            assert!(
+                                !pending.iter().any(|&(pid, s, seq)| pid != id
+                                    && s == op.stream.0
+                                    && seq < op.seq),
+                                "case {case}: dependent op {id:?} ready over an \
+                                 earlier pending op of stream {}",
+                                op.stream.0
+                            );
+                        }
+                        w.issue(&[id]);
+                        pending.retain(|&(pid, _, _)| pid != id);
+                        inflight.push(id);
+                    }
+                }
+                2 => {
+                    // straggler eviction: a random in-flight op re-enters
+                    // its stream's pending queue in program order
+                    if !inflight.is_empty() {
+                        let i = rng.below(inflight.len() as u64) as usize;
+                        let id = inflight.swap_remove(i);
+                        let op = w.get(id).unwrap().clone();
+                        w.requeue(id);
+                        pending.push((id, op.stream.0, op.seq));
+                    }
+                }
+                _ => {
+                    if !inflight.is_empty() {
+                        let i = rng.below(inflight.len() as u64) as usize;
+                        let id = inflight.swap_remove(i);
+                        w.complete(id);
+                    }
+                }
+            }
+        }
+        // drain: bookkeeping must shrink back to zero with the work
+        loop {
+            let next = w.ready().first().map(|o| o.id);
+            match next {
+                Some(id) => {
+                    w.issue(&[id]);
+                    inflight.push(id);
+                }
+                None => break,
+            }
+        }
+        for id in inflight {
+            w.complete(id);
+        }
+        assert!(w.is_empty(), "case {case}: window drains");
+        assert_eq!(w.tracked_streams(), 0, "case {case}: stream maps drain");
+        assert_eq!(w.tracked_groups(), 0, "case {case}: group maps drain");
     }
 }
 
