@@ -73,6 +73,10 @@ pub struct PackRun {
     pub executed: u32,
     /// False when the backend failed; member ops complete as dropped.
     pub ok: bool,
+    /// Device class that executed the launch (0 = the fleet reference /
+    /// single-device drive modes). Keys the executor's learned estimates
+    /// so heterogeneous workers never pollute each other's EWMAs.
+    pub device_class: u32,
 }
 
 /// Payload-aware pack execution. Estimation sees the member ops (group +
@@ -99,6 +103,7 @@ impl<E: KernelExecutor> PackExecutor<()> for E {
             duration_us: self.execute(&sk.kernel_for_exec()),
             executed: sk.kernel.problems,
             ok: true,
+            device_class: 0,
         }
     }
 }
@@ -313,21 +318,60 @@ impl<E, P> JitCompiler<E, P> {
     /// Summed scheduler estimates of the issued-but-unfinished launches of
     /// a coalescing group — the admission layer's in-flight drain term.
     /// Priced *per launch* (several small launches keep their per-launch
-    /// fixed overheads; one big pack is one estimate), an upper bound on
-    /// the remaining single-worker drain: execution time already elapsed
-    /// is not subtracted.
-    pub fn inflight_group_est_us(&self, group: u64) -> f64 {
-        self.pending
-            .values()
-            .filter(|p| {
+    /// fixed overheads; one big pack is one estimate), with the execution
+    /// time already elapsed subtracted from the `concurrency` *oldest*
+    /// launches only (clamped at zero: a straggler past its estimate
+    /// contributes nothing rather than a negative drain). `concurrency`
+    /// is how many of the group's launches can actually be executing at
+    /// once — the pool workers serving it (its placement replica count; 1
+    /// for the single-device modes). Launches behind them sit queued, not
+    /// executing, so wall time since their issue must NOT be credited —
+    /// doing so for every launch re-opens the doomed-admission hole this
+    /// term exists to close.
+    pub fn inflight_group_est_us(&self, group: u64, concurrency: u32) -> f64 {
+        let mut launches: Vec<(f64, u64, f64)> = self
+            .pending
+            .iter()
+            .filter(|(_, p)| {
                 p.pack
                     .ops
                     .first()
                     .and_then(|id| self.window.get(*id))
                     .is_some_and(|op| op.group == group)
             })
-            .map(|p| p.est_us)
+            .map(|(ticket, p)| (p.issue_us, *ticket, p.est_us))
+            .collect();
+        // oldest first; ticket tie-break keeps the sum order deterministic
+        launches.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .expect("NaN issue time")
+                .then(a.1.cmp(&b.1))
+        });
+        let executing = concurrency.max(1) as usize;
+        launches
+            .iter()
+            .enumerate()
+            .map(|(i, (issue_us, _, est_us))| {
+                if i < executing {
+                    (est_us - (self.now_us - issue_us).max(0.0)).max(0.0)
+                } else {
+                    *est_us
+                }
+            })
             .sum()
+    }
+
+    /// Re-price an issued-but-unfinished launch's estimate. The placed
+    /// drivers call this once routing is known: the issue-time estimate
+    /// was priced on the group's *primary* device class, but straggler
+    /// eviction (and the in-flight drain term) must judge the launch
+    /// against the device that actually runs it — a k80-routed replica
+    /// launch legitimately takes ~4x the v100 estimate and is not a
+    /// straggler. No-op for unknown tickets.
+    pub fn reprice_pending(&mut self, ticket: u64, est_us: f64) {
+        if let Some(p) = self.pending.get_mut(&ticket) {
+            p.est_us = est_us;
+        }
     }
 
     /// Drain the per-launch log accumulated since the last call.
@@ -877,6 +921,7 @@ mod tests {
                 duration_us: measured,
                 executed: 1,
                 ok: true,
+                device_class: 0,
             },
         );
         assert_eq!(j.stats.evictions, 1);
@@ -967,6 +1012,64 @@ mod tests {
         assert!(j.window.is_empty());
         assert_eq!(j.stats.launches, 2);
         assert_eq!(j.stats.ops, 2);
+    }
+
+    #[test]
+    fn inflight_drain_subtracts_elapsed_execution() {
+        // the admission pricing term: a launch halfway through its
+        // estimate owes half its estimate, and a straggler past its
+        // estimate owes zero (never negative)
+        let mut j = eager_jit();
+        assert!(j.submit(req(0, 128, 1e9)).is_some());
+        let (launches, _) = j.issue_ready();
+        assert_eq!(launches.len(), 1);
+        let l = &launches[0];
+        let est = l.est_us;
+        assert!(est > 0.0);
+        assert!(
+            (j.inflight_group_est_us(0, 1) - est).abs() < 1e-9,
+            "nothing elapsed"
+        );
+        j.advance_to(l.issue_us + est * 0.5);
+        assert!(
+            (j.inflight_group_est_us(0, 1) - est * 0.5).abs() < 1e-9,
+            "half elapsed, half owed"
+        );
+        j.advance_to(l.issue_us + est * 4.0);
+        assert_eq!(
+            j.inflight_group_est_us(0, 1),
+            0.0,
+            "straggler owes zero, not negative"
+        );
+        let run = j.run_issued(l.ticket);
+        j.finish_launch(l.ticket, l.issue_us + est * 4.0, run);
+        assert_eq!(j.inflight_group_est_us(0, 1), 0.0);
+    }
+
+    #[test]
+    fn inflight_drain_credits_elapsed_to_executing_launches_only() {
+        // two launches but one serving worker (concurrency 1): wall time
+        // elapses for both, yet only the oldest launch is executing — the
+        // queued one still owes its full estimate. Crediting elapsed time
+        // to queued launches would re-open the doomed-admission hole.
+        let mut j = eager_jit();
+        assert!(j.submit(req(0, 128, 1e9)).is_some());
+        assert!(j.submit(req(1, 2048, 1e9)).is_some()); // different class
+        let (launches, _) = j.issue_ready();
+        assert_eq!(launches.len(), 2);
+        let est0 = launches[0].est_us;
+        let est1 = launches[1].est_us;
+        let elapsed = est0 * 0.5;
+        j.advance_to(launches[0].issue_us + elapsed);
+        assert!(
+            (j.inflight_group_est_us(0, 1) - (est0 - elapsed + est1)).abs() < 1e-9,
+            "queued launch owes its full estimate"
+        );
+        // two workers: both launches execute concurrently, both credited
+        assert!(
+            (j.inflight_group_est_us(0, 2) - (est0 - elapsed + est1 - elapsed)).abs()
+                < 1e-9
+        );
     }
 
     #[test]

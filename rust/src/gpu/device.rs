@@ -128,6 +128,9 @@ impl DeviceSpec {
         self.sms as u64 * self.blocks_per_sm as u64
     }
 
+    /// Every name [`DeviceSpec::by_name`] accepts.
+    pub const NAMES: [&'static str; 6] = ["v100", "t4", "k80", "tpuv2", "cpu", "cpu-xeon"];
+
     /// Look a device up by name.
     pub fn by_name(name: &str) -> Option<Self> {
         match name {
@@ -138,6 +141,19 @@ impl DeviceSpec {
             "cpu" | "cpu-xeon" => Some(Self::cpu_xeon()),
             _ => None,
         }
+    }
+
+    /// Parse a CLI device name. Unlike [`DeviceSpec::by_name`]'s silent
+    /// `None`, a bad name is a hard error that names the offender and
+    /// lists every valid spec — a typo'd `--devices` must never fall back
+    /// to a default device.
+    pub fn parse(name: &str) -> crate::Result<Self> {
+        Self::by_name(name).ok_or_else(|| {
+            crate::Error::config(format!(
+                "unknown device '{name}' (valid: {})",
+                Self::NAMES.join(", ")
+            ))
+        })
     }
 }
 
@@ -165,6 +181,20 @@ mod tests {
         assert_eq!(DeviceSpec::by_name("v100").unwrap().sms, 80);
         assert_eq!(DeviceSpec::by_name("cpu").unwrap().name, "cpu-xeon");
         assert!(DeviceSpec::by_name("h100").is_none());
+    }
+
+    #[test]
+    fn parse_reports_bad_name_and_valid_specs() {
+        assert_eq!(DeviceSpec::parse("t4").unwrap().sms, 40);
+        let err = DeviceSpec::parse("h100").unwrap_err().to_string();
+        assert!(err.contains("h100"), "names the offender: {err}");
+        for valid in DeviceSpec::NAMES {
+            assert!(err.contains(valid), "lists '{valid}': {err}");
+        }
+        // every advertised name round-trips
+        for valid in DeviceSpec::NAMES {
+            assert!(DeviceSpec::parse(valid).is_ok(), "{valid}");
+        }
     }
 
     #[test]

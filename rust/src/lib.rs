@@ -31,6 +31,7 @@
 //! | [`workload`] | arrival processes, tenant specs, trace generation/replay |
 //! | [`compiler`] | the OoO VLIW JIT: IR, issue window, coalescer, scheduler, autotuner, clustering |
 //! | [`runtime`] | artifact manifest + PJRT executor + golden self-checks |
+//! | [`placement`] | device placement: fleet topology, group→device table, load rebalancer |
 //! | [`serve`] | multi-tenant serving loop, metrics, admission control |
 //! | [`bench`] | micro-benchmark harness (criterion replacement) |
 
@@ -38,6 +39,7 @@ pub mod bench;
 pub mod compiler;
 pub mod gpu;
 pub mod model;
+pub mod placement;
 pub mod runtime;
 pub mod serve;
 pub mod util;

@@ -5,8 +5,10 @@
 //! * `info`          — artifact + device inventory
 //! * `golden`        — end-to-end numeric self-check of every artifact
 //! * `serve`         — threaded multi-tenant serving demo on real artifacts
-//! * `bench`         — simulator-backend serving benchmark, machine-readable
-//!                     JSON out (the CI perf-trajectory smoke)
+//!                     (`--devices v100,t4` turns on the placed launch stage)
+//! * `bench`         — simulator-backend serving benchmark over a device
+//!                     topology, machine-readable JSON out with per-device
+//!                     utilization + rebalance counts (the CI smoke)
 //! * `autotune`      — Table-1 style greedy-vs-collaborative search
 //! * `cluster`       — Fig-7 style GEMM shape clustering of the model zoo
 //!
@@ -20,13 +22,14 @@ use vliw_jit::gpu::device::DeviceSpec;
 use vliw_jit::gpu::kernel::KernelDesc;
 use vliw_jit::gpu::timeline::SharingModel;
 use vliw_jit::model::zoo;
+use vliw_jit::placement::{DeviceTopology, RebalanceConfig};
 use vliw_jit::runtime::{Manifest, PjrtExecutor};
 use vliw_jit::serve::{BatchPolicy, Server, SimBackend};
 use vliw_jit::util::cli::Args;
 use vliw_jit::util::json::Json;
 use vliw_jit::util::logging;
 use vliw_jit::util::stats::LatencyHist;
-use vliw_jit::workload::trace::{mixed_tenants, Trace};
+use vliw_jit::workload::trace::{mixed_tenants, ArrivalKind, TenantSpec, Trace};
 
 fn main() -> Result<()> {
     let cmd = std::env::args().nth(1).unwrap_or_else(|| "help".into());
@@ -140,6 +143,11 @@ fn serve() -> Result<()> {
         .flag("speedup", "1", "trace time compression factor")
         .flag("seed", "42", "trace seed")
         .flag("workers", "1", "launch-stage workers (>1: one backend per worker, models execute concurrently)")
+        .flag(
+            "devices",
+            "",
+            "device specs for the placed launch stage (e.g. v100,t4); overrides --workers and enables rebalancing",
+        )
         .flag("log", "info", "log level")
         .switch("no-batching", "serve batch-1 FIFO (baseline)");
     let p = parse(args)?;
@@ -150,6 +158,15 @@ fn serve() -> Result<()> {
     let speedup = p.get_f64("speedup").map_err(|e| anyhow::anyhow!("{e}"))?;
     let seed = p.get_u64("seed").map_err(|e| anyhow::anyhow!("{e}"))?;
     let workers = p.get_usize("workers").map_err(|e| anyhow::anyhow!("{e}"))?;
+    // unset = legacy pool; set = must name at least one valid device
+    // (same parsing as `vliwd bench`, so `--devices v100,` cannot fail
+    // with a confusing "unknown device ''")
+    let devices = if p.get("devices").trim().is_empty() {
+        Vec::new()
+    } else {
+        p.get_nonempty_list("devices")
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+    };
 
     let models = ["mlp_small", "gemmnet6", "mlp_large"];
     let mut ex = PjrtExecutor::from_default_artifacts().context("artifacts")?;
@@ -170,7 +187,30 @@ fn serve() -> Result<()> {
         trace.offered_load()
     );
     let mut server = Server::new(ex, policy);
-    let report = if workers > 1 {
+    let report = if !devices.is_empty() {
+        // placed launch stage: one worker per device spec, routed through
+        // the placement table with rebalancing enabled
+        let topo = DeviceTopology::from_names(&devices).map_err(|e| anyhow::anyhow!("{e}"))?;
+        server.run_realtime_placed(
+            &trace,
+            speedup,
+            topo,
+            Some(RebalanceConfig::default()),
+            move |i, spec| {
+                let mut ex = PjrtExecutor::from_default_artifacts()
+                    .expect("worker artifacts");
+                for m in models {
+                    let _ = ex.warmup_model(m);
+                }
+                let name = spec.name;
+                logging::emit(
+                    logging::Level::Info,
+                    format_args!("launch worker {i} ({name}) ready"),
+                );
+                ex
+            },
+        )
+    } else if workers > 1 {
         // concurrent launch stage: each worker builds + warms its own
         // executor on its own thread; models execute in parallel
         server.run_realtime_pooled(&trace, speedup, workers, move |i| {
@@ -192,33 +232,81 @@ fn serve() -> Result<()> {
     Ok(())
 }
 
+/// Skewed two-model tenant set for the placement bench: 3 of 4 tenants
+/// hammer the `hot` model at full rate, the rest trickle onto `cold` —
+/// the per-device load imbalance the rebalancer exists to fix.
+fn skewed_tenants(n: u32, rate: f64) -> Vec<TenantSpec> {
+    let slos = [25_000u64, 100_000, 500_000];
+    (0..n)
+        .map(|i| {
+            let hot = i % 4 != 3;
+            TenantSpec::new(
+                i,
+                if hot { "hot" } else { "cold" },
+                slos[i as usize % slos.len()],
+                if hot { rate } else { rate / 4.0 },
+                ArrivalKind::Poisson,
+            )
+        })
+        .collect()
+}
+
 fn cmd_bench() -> Result<()> {
     let mut args = Args::new(
         "vliwd bench",
-        "simulator-backend serving benchmark with machine-readable JSON output",
+        "simulator-backend placed serving benchmark with machine-readable JSON output",
     );
     args.flag("tenants", "6", "number of tenants")
         .flag("rate", "300", "per-tenant request rate (req/s)")
         .flag("requests", "200", "requests per tenant")
         .flag("seed", "42", "trace seed")
-        .flag("out", "BENCH_2.json", "output JSON path");
+        .flag("devices", "v100", "device topology (comma-separated specs)")
+        .flag(
+            "workload",
+            "skewed",
+            "trace shape: 'skewed' (two-model hot/cold, exercises placement) or 'mixed' (bursty multi-SLO single model, the stream-prefix coalescing trajectory)",
+        )
+        .flag("out", "BENCH_3.json", "output JSON path")
+        .switch("static", "pin the initial placement (disable rebalancing)");
     let p = parse(args)?;
     let n = p.get_u64("tenants").map_err(|e| anyhow::anyhow!("{e}"))? as u32;
     let rate = p.get_f64("rate").map_err(|e| anyhow::anyhow!("{e}"))?;
     let per = p.get_usize("requests").map_err(|e| anyhow::anyhow!("{e}"))?;
     let seed = p.get_u64("seed").map_err(|e| anyhow::anyhow!("{e}"))?;
     let out = p.get("out").to_string();
+    let devices = p
+        .get_nonempty_list("devices")
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let topo = DeviceTopology::from_names(&devices).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let rebalance = if p.get_bool("static") {
+        None
+    } else {
+        Some(RebalanceConfig::default())
+    };
 
-    // mixed SLOs + one bursty tenant per four (stream-prefix coalescing
-    // shows up in same_stream_rows), replayed deterministically on the
-    // simulator backend — runs anywhere, no PJRT artifacts needed
-    let tenants = mixed_tenants(n, &["simnet"], rate);
+    // replayed deterministically on the simulator backend through the
+    // placement-aware multi-device drive mode — runs anywhere, no PJRT
+    // artifacts needed
+    let tenants = match p.get("workload") {
+        "skewed" => skewed_tenants(n, rate),
+        // one bursty tenant per four: the PR-2 stream-prefix coalescing
+        // signal (same_stream_rows / mean_pack trajectory)
+        "mixed" => mixed_tenants(n, &["simnet"], rate),
+        other => bail!("unknown --workload '{other}' (valid: skewed, mixed)"),
+    };
     let trace = Trace::generate(&tenants, per, seed);
     let mut server = Server::new(SimBackend::default(), BatchPolicy::coalescing());
     let wall = std::time::Instant::now();
-    let report = server.replay(&trace);
+    let (report, table) = server.replay_placed(&trace, &topo, rebalance);
     let wall_ms = wall.elapsed().as_secs_f64() * 1e3;
     println!("{}", report.render());
+    // a replicated hot group shows up as max replicas > 1
+    let max_replicas = table
+        .groups()
+        .map(|g| table.replicas_of(g).len())
+        .max()
+        .unwrap_or(0);
+    println!("placement: max replicas per group = {max_replicas}");
 
     let m = &report.metrics;
     let mut merged = LatencyHist::new();
@@ -243,6 +331,27 @@ fn cmd_bench() -> Result<()> {
     );
     o.insert("launches".to_string(), Json::Num(m.jit.launches as f64));
     o.insert("evictions".to_string(), Json::Num(m.jit.evictions as f64));
+    let devices_json: Vec<Json> = m
+        .devices
+        .iter()
+        .enumerate()
+        .map(|(w, d)| {
+            let mut od = std::collections::BTreeMap::new();
+            od.insert("worker".to_string(), Json::Num(w as f64));
+            od.insert("name".to_string(), Json::Str(d.name.clone()));
+            od.insert("launches".to_string(), Json::Num(d.launches as f64));
+            od.insert("busy_us".to_string(), Json::Num(d.busy_us));
+            od.insert(
+                "utilization".to_string(),
+                Json::Num(d.utilization(m.span_us)),
+            );
+            Json::Obj(od)
+        })
+        .collect();
+    o.insert("devices".to_string(), Json::Arr(devices_json));
+    o.insert("replications".to_string(), Json::Num(m.replications as f64));
+    o.insert("migrations".to_string(), Json::Num(m.migrations as f64));
+    o.insert("max_replicas".to_string(), Json::Num(max_replicas as f64));
     o.insert("wall_ms".to_string(), Json::Num(wall_ms));
     std::fs::write(&out, Json::Obj(o).to_string_compact())
         .with_context(|| format!("write {out}"))?;
@@ -258,7 +367,9 @@ fn cmd_autotune() -> Result<()> {
         .flag("n", "64", "GEMM cols")
         .flag("device", "v100", "device model");
     let p = parse(args)?;
-    let dev = DeviceSpec::by_name(p.get("device")).context("unknown device")?;
+    // parse (not by_name): a typo'd device errors with the valid list
+    // instead of silently falling back
+    let dev = DeviceSpec::parse(p.get("device")).map_err(|e| anyhow::anyhow!("{e}"))?;
     let cm = CostModel::new(dev);
     let k = KernelDesc::gemm(
         p.get_u64("m").unwrap() as u32,

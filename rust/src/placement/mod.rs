@@ -1,0 +1,46 @@
+//! Device placement: shard model groups across a (heterogeneous) fleet.
+//!
+//! The paper's late-binding argument cuts both ways: a JIT that binds ops
+//! to *launches* late should also bind launches to *devices* late. This
+//! module is that layer — the runtime decision of **which device executes
+//! which model group**, sitting between the scheduler (which decides
+//! *when* a pack launches) and the executors (which run it):
+//!
+//! * [`topology`] — the fleet: pool workers backed by [`crate::gpu::device::DeviceSpec`]s,
+//!   deduplicated into *device classes* (learned service-time estimates
+//!   are keyed per class so heterogeneous workers never pollute each
+//!   other's estimates);
+//! * [`placer`] — initial assignment (cost-aware LPT) and the
+//!   [`placer::PlacementTable`] the launch stage consults per launch
+//!   (least-loaded replica routing);
+//! * [`rebalancer`] — windowed load observation that **replicates** hot
+//!   groups onto cooler devices and **migrates** cold groups off
+//!   overloaded ones, strict-improvement gated so stationary load cannot
+//!   thrash.
+//!
+//! # The placement / rebalance contract
+//!
+//! 1. **Totality** — every model group maps to ≥ 1 live worker at every
+//!    instant. The placer seeds one replica per group; replication only
+//!    adds; migration adds its destination replica before releasing the
+//!    source, and the table refuses to drop a last replica. Routing
+//!    additionally falls back to group-hash for an unplaced group.
+//! 2. **Bounded churn** — at most
+//!    [`rebalancer::RebalanceConfig::max_moves_per_window`] placement
+//!    changes per observation window, and a migration must strictly lower
+//!    the fleet's peak utilization (no A→B→A ping-pong under stationary
+//!    load). Replication is idempotent per (group, worker).
+//! 3. **Estimate isolation** — executors learn (device class, group,
+//!    padded batch) service times; an observation from one class never
+//!    updates another class's estimate.
+//!
+//! Cross-*host* sharding (multiple machines, network transfer costs) is
+//! out of scope here and tracked in ROADMAP.
+
+pub mod placer;
+pub mod rebalancer;
+pub mod topology;
+
+pub use placer::{Placer, PlacementTable};
+pub use rebalancer::{RebalanceAction, RebalanceConfig, RebalanceStats, Rebalancer};
+pub use topology::{relative_speed, DeviceTopology, WorkerDevice};

@@ -1,0 +1,213 @@
+//! Initial placement: cost-aware LPT assignment of model groups onto
+//! workers, plus the routing table the launch stage consults per launch.
+//!
+//! The table maps each coalescing group to its replica workers (primary
+//! first). **Totality invariant:** every group holds ≥ 1 replica at all
+//! times — [`PlacementTable::remove_replica`] refuses to drop the last one,
+//! and [`PlacementTable::route`] falls back to hashing only for a group
+//! that was never placed (defense in depth; pinned by the placement
+//! property tests).
+
+use std::collections::BTreeMap;
+
+use crate::placement::topology::DeviceTopology;
+
+/// Group → replica-worker routing table.
+#[derive(Debug, Clone, Default)]
+pub struct PlacementTable {
+    replicas: BTreeMap<u64, Vec<usize>>,
+}
+
+impl PlacementTable {
+    /// Replica workers of a group (primary first; empty = never placed).
+    pub fn replicas_of(&self, group: u64) -> &[usize] {
+        self.replicas.get(&group).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Primary (first-placed) worker of a group.
+    pub fn primary_of(&self, group: u64) -> Option<usize> {
+        self.replicas_of(group).first().copied()
+    }
+
+    /// Groups with at least one replica.
+    pub fn groups(&self) -> impl Iterator<Item = u64> + '_ {
+        self.replicas.keys().copied()
+    }
+
+    /// Groups replicated on a worker.
+    pub fn groups_on(&self, worker: usize) -> Vec<u64> {
+        self.replicas
+            .iter()
+            .filter(|(_, ws)| ws.contains(&worker))
+            .map(|(g, _)| *g)
+            .collect()
+    }
+
+    /// Add a replica (no-op if already present). Returns true if added.
+    pub fn add_replica(&mut self, group: u64, worker: usize) -> bool {
+        let ws = self.replicas.entry(group).or_default();
+        if ws.contains(&worker) {
+            false
+        } else {
+            ws.push(worker);
+            true
+        }
+    }
+
+    /// Drop a replica. Refuses to remove the last one (totality) or a
+    /// worker the group is not on. Returns true if removed.
+    pub fn remove_replica(&mut self, group: u64, worker: usize) -> bool {
+        let Some(ws) = self.replicas.get_mut(&group) else {
+            return false;
+        };
+        if ws.len() <= 1 {
+            return false;
+        }
+        match ws.iter().position(|w| *w == worker) {
+            Some(i) => {
+                ws.remove(i);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Route one launch: the least-loaded replica under the caller's load
+    /// signal (`load[w]` = queue depth, busy-until time, ... — lower is
+    /// freer), ties to the lowest worker id for determinism. A group that
+    /// was never placed falls back to the legacy group-hash route so
+    /// routing stays total even against a buggy placer.
+    pub fn route(&self, group: u64, load: &[f64]) -> usize {
+        let ws = self.replicas_of(group);
+        if ws.is_empty() {
+            return if load.is_empty() {
+                0
+            } else {
+                group as usize % load.len()
+            };
+        }
+        let mut best = ws[0];
+        let mut best_load = load.get(best).copied().unwrap_or(0.0);
+        for &w in &ws[1..] {
+            let l = load.get(w).copied().unwrap_or(0.0);
+            if l < best_load || (l == best_load && w < best) {
+                best = w;
+                best_load = l;
+            }
+        }
+        best
+    }
+
+    /// True when every group in `0..groups` has ≥ 1 replica and every
+    /// replica id addresses a live worker (< `workers`), with no duplicate
+    /// replicas — the property the placement tests pin.
+    pub fn is_total(&self, groups: u64, workers: usize) -> bool {
+        (0..groups).all(|g| {
+            let ws = self.replicas_of(g);
+            !ws.is_empty()
+                && ws.iter().all(|w| *w < workers)
+                && ws.iter().enumerate().all(|(i, w)| !ws[..i].contains(w))
+        })
+    }
+}
+
+/// Greedy longest-processing-time placer.
+#[derive(Debug, Clone, Default)]
+pub struct Placer;
+
+impl Placer {
+    /// Place groups onto workers: heaviest estimated total work first, each
+    /// onto the worker whose *normalized* finish time (accumulated work ÷
+    /// device speed) stays lowest. Every group gets exactly one initial
+    /// replica; the rebalancer grows hot groups later.
+    pub fn place(costs: &[(u64, f64)], topo: &DeviceTopology) -> PlacementTable {
+        let mut table = PlacementTable::default();
+        if topo.is_empty() {
+            return table;
+        }
+        let mut sorted: Vec<(u64, f64)> = costs.to_vec();
+        sorted.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1)
+                .expect("NaN placement cost")
+                .then(a.0.cmp(&b.0))
+        });
+        let mut load = vec![0.0f64; topo.len()];
+        for (group, cost) in sorted {
+            let mut best = 0usize;
+            let mut best_finish = f64::INFINITY;
+            for (w, l) in load.iter().enumerate() {
+                let finish = (*l + cost) / topo.speed_of_worker(w).max(1e-9);
+                if finish < best_finish {
+                    best = w;
+                    best_finish = finish;
+                }
+            }
+            load[best] += cost;
+            table.add_replica(group, best);
+        }
+        table
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::device::DeviceSpec;
+
+    fn topo2() -> DeviceTopology {
+        DeviceTopology::new(vec![DeviceSpec::v100(), DeviceSpec::t4()])
+    }
+
+    #[test]
+    fn place_is_total_and_balances() {
+        let costs: Vec<(u64, f64)> = (0..6).map(|g| (g, 100.0 * (g + 1) as f64)).collect();
+        let t = Placer::place(&costs, &topo2());
+        assert!(t.is_total(6, 2));
+        // both workers get work
+        assert!(!t.groups_on(0).is_empty());
+        assert!(!t.groups_on(1).is_empty());
+        // the heaviest group lands on the fastest (empty) device first
+        assert_eq!(t.primary_of(5), Some(0));
+    }
+
+    #[test]
+    fn single_worker_takes_everything() {
+        let topo = DeviceTopology::homogeneous(1, DeviceSpec::v100());
+        let costs = vec![(0u64, 10.0), (1, 20.0)];
+        let t = Placer::place(&costs, &topo);
+        assert!(t.is_total(2, 1));
+        assert_eq!(t.groups_on(0), vec![0, 1]);
+    }
+
+    #[test]
+    fn route_picks_least_loaded_replica() {
+        let mut t = PlacementTable::default();
+        t.add_replica(3, 0);
+        t.add_replica(3, 2);
+        assert_eq!(t.route(3, &[5.0, 0.0, 1.0]), 2, "worker 1 is not a replica");
+        assert_eq!(t.route(3, &[0.5, 0.0, 1.0]), 0);
+        // tie goes to the lowest worker id
+        assert_eq!(t.route(3, &[1.0, 9.0, 1.0]), 0);
+        // unplaced group: legacy hash fallback stays in range
+        assert_eq!(t.route(7, &[0.0, 0.0, 0.0]), 1);
+    }
+
+    #[test]
+    fn remove_replica_refuses_last() {
+        let mut t = PlacementTable::default();
+        t.add_replica(0, 1);
+        assert!(!t.remove_replica(0, 1), "last replica is pinned");
+        t.add_replica(0, 2);
+        assert!(t.remove_replica(0, 1));
+        assert_eq!(t.replicas_of(0), &[2]);
+        assert!(!t.remove_replica(0, 5), "not a replica");
+    }
+
+    #[test]
+    fn add_replica_idempotent() {
+        let mut t = PlacementTable::default();
+        assert!(t.add_replica(0, 1));
+        assert!(!t.add_replica(0, 1));
+        assert_eq!(t.replicas_of(0).len(), 1);
+    }
+}

@@ -1,0 +1,384 @@
+//! Load-driven rebalancing: replicate hot groups onto cooler devices,
+//! migrate cold groups off overloaded ones.
+//!
+//! The rebalancer folds per-launch observations (group, worker, measured
+//! duration) into fixed windows. When a window closes with the busiest
+//! device's utilization both high in absolute terms and skewed against the
+//! coolest device, it acts — at most
+//! [`RebalanceConfig::max_moves_per_window`] placement changes per window:
+//!
+//! * **Replicate** the hottest group of the hot device onto the coolest
+//!   device (idempotent: a fully replicated group never fires again), so
+//!   its launches split across both timelines;
+//! * **Migrate** a cold group off the hot device, but only when the move
+//!   *strictly lowers the peak utilization* — the classic load-balancing
+//!   potential argument that rules out A→B→A ping-pong under stationary
+//!   load.
+//!
+//! Both actions preserve the placement-table totality invariant by
+//! construction: replication only adds replicas, and migration adds the
+//! destination replica before dropping the source (which
+//! [`PlacementTable::remove_replica`] refuses for a last replica anyway).
+
+use std::collections::HashMap;
+
+use crate::placement::placer::PlacementTable;
+use crate::placement::topology::DeviceTopology;
+
+/// Rebalancing policy knobs.
+#[derive(Debug, Clone)]
+pub struct RebalanceConfig {
+    /// Observation window, µs.
+    pub window_us: f64,
+    /// Act when hot-device utilization exceeds `skew_ratio ×` the coolest
+    /// device's.
+    pub skew_ratio: f64,
+    /// Max placement changes (replications + migrations) per window.
+    pub max_moves_per_window: u32,
+    /// Hot-device utilization floor below which no window acts (an idle
+    /// fleet is skewed by noise, not by load).
+    pub min_hot_util: f64,
+}
+
+impl Default for RebalanceConfig {
+    fn default() -> Self {
+        RebalanceConfig {
+            window_us: 50_000.0,
+            skew_ratio: 2.0,
+            max_moves_per_window: 2,
+            min_hot_util: 0.5,
+        }
+    }
+}
+
+/// One placement change decided at a window boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RebalanceAction {
+    /// Group gained a replica on `to`.
+    Replicate {
+        /// Replicated group.
+        group: u64,
+        /// Destination worker.
+        to: usize,
+    },
+    /// Group moved from `from` to `to` (destination replica added first).
+    Migrate {
+        /// Migrated group.
+        group: u64,
+        /// Source worker.
+        from: usize,
+        /// Destination worker.
+        to: usize,
+    },
+}
+
+/// Aggregate rebalancing statistics.
+#[derive(Debug, Clone, Default)]
+pub struct RebalanceStats {
+    /// Windows evaluated.
+    pub windows: u64,
+    /// Replications applied.
+    pub replications: u64,
+    /// Migrations applied.
+    pub migrations: u64,
+}
+
+impl RebalanceStats {
+    /// Total placement changes.
+    pub fn moves(&self) -> u64 {
+        self.replications + self.migrations
+    }
+}
+
+/// The windowed load rebalancer.
+#[derive(Debug, Clone)]
+pub struct Rebalancer {
+    /// Policy knobs.
+    pub cfg: RebalanceConfig,
+    /// Aggregate stats.
+    pub stats: RebalanceStats,
+    window_start_us: f64,
+    /// Busy µs per worker this window.
+    device_busy: Vec<f64>,
+    /// Busy µs per (group, worker) this window.
+    group_busy: HashMap<(u64, usize), f64>,
+}
+
+impl Rebalancer {
+    /// New rebalancer over `workers` pool workers.
+    pub fn new(cfg: RebalanceConfig, workers: usize) -> Self {
+        Rebalancer {
+            cfg,
+            stats: RebalanceStats::default(),
+            window_start_us: 0.0,
+            device_busy: vec![0.0; workers.max(1)],
+            group_busy: HashMap::new(),
+        }
+    }
+
+    /// Fold in one finished launch.
+    pub fn observe_launch(&mut self, group: u64, worker: usize, duration_us: f64) {
+        let w = worker % self.device_busy.len();
+        self.device_busy[w] += duration_us;
+        *self.group_busy.entry((group, w)).or_insert(0.0) += duration_us;
+    }
+
+    /// Close the window if due and apply at most `max_moves_per_window`
+    /// placement changes. Call with the current clock from the drive loop;
+    /// cheap no-op while the window is still open.
+    pub fn maybe_rebalance(
+        &mut self,
+        now_us: f64,
+        table: &mut PlacementTable,
+        topo: &DeviceTopology,
+    ) -> Vec<RebalanceAction> {
+        if now_us < self.window_start_us + self.cfg.window_us {
+            return Vec::new();
+        }
+        let span = (now_us - self.window_start_us).max(1e-9);
+        self.stats.windows += 1;
+        let util: Vec<f64> = self.device_busy.iter().map(|b| b / span).collect();
+        let mut hot = 0usize;
+        let mut cool = 0usize;
+        for (w, u) in util.iter().enumerate() {
+            if *u > util[hot] {
+                hot = w;
+            }
+            if *u < util[cool] {
+                cool = w;
+            }
+        }
+        let mut actions = Vec::new();
+        let skewed = hot != cool
+            && util[hot] >= self.cfg.min_hot_util
+            && util[hot] > self.cfg.skew_ratio * util[cool].max(1e-9);
+        if skewed {
+            let max_moves = self.cfg.max_moves_per_window as usize;
+            // 1) replicate the hot device's hottest group onto the coolest
+            let hottest = self.hottest_group_on(hot);
+            if let Some(g) = hottest {
+                if actions.len() < max_moves && table.add_replica(g, cool) {
+                    self.stats.replications += 1;
+                    actions.push(RebalanceAction::Replicate { group: g, to: cool });
+                }
+            }
+            // 2) migrate the coldest co-resident group, strict-improvement
+            // gated: the post-move peak must drop, or we skip (no ping-pong)
+            if actions.len() < max_moves {
+                // coldest group with OBSERVED load: a zero-busy group can
+                // never pass the strict-improvement gate (moving it changes
+                // nothing), and picking one would block the migration of a
+                // real candidate behind it forever
+                let candidate = table
+                    .groups_on(hot)
+                    .into_iter()
+                    .filter(|g| Some(*g) != hottest && self.busy_of(*g, hot) > 0.0)
+                    .min_by(|a, b| {
+                        let ba = self.busy_of(*a, hot);
+                        let bb = self.busy_of(*b, hot);
+                        ba.partial_cmp(&bb).expect("NaN busy").then(a.cmp(b))
+                    });
+                if let Some(g) = candidate {
+                    let moved = self.busy_of(g, hot) / span;
+                    let speed_ratio = topo.speed_of_worker(hot)
+                        / topo.speed_of_worker(cool).max(1e-9);
+                    let hot_after = util[hot] - moved;
+                    let cool_after = util[cool] + moved * speed_ratio;
+                    if hot_after.max(cool_after) < util[hot].max(util[cool]) - 1e-9 {
+                        table.add_replica(g, cool);
+                        if table.remove_replica(g, hot) {
+                            self.stats.migrations += 1;
+                            actions.push(RebalanceAction::Migrate {
+                                group: g,
+                                from: hot,
+                                to: cool,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        self.window_start_us = now_us;
+        for b in &mut self.device_busy {
+            *b = 0.0;
+        }
+        self.group_busy.clear();
+        actions
+    }
+
+    fn busy_of(&self, group: u64, worker: usize) -> f64 {
+        self.group_busy
+            .get(&(group, worker))
+            .copied()
+            .unwrap_or(0.0)
+    }
+
+    fn hottest_group_on(&self, worker: usize) -> Option<u64> {
+        self.group_busy
+            .iter()
+            .filter(|((_, w), busy)| *w == worker && **busy > 0.0)
+            .max_by(|(ka, a), (kb, b)| {
+                a.partial_cmp(b)
+                    .expect("NaN busy")
+                    .then(kb.0.cmp(&ka.0))
+            })
+            .map(|((g, _), _)| *g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::device::DeviceSpec;
+    use crate::placement::placer::Placer;
+
+    fn topo_het() -> DeviceTopology {
+        DeviceTopology::new(vec![DeviceSpec::v100(), DeviceSpec::t4()])
+    }
+
+    fn table_of(pairs: &[(u64, usize)]) -> PlacementTable {
+        let mut t = PlacementTable::default();
+        for (g, w) in pairs {
+            t.add_replica(*g, *w);
+        }
+        t
+    }
+
+    #[test]
+    fn hot_group_replicates_under_skew() {
+        let topo = topo_het();
+        let mut table = table_of(&[(0, 0), (1, 1)]);
+        let mut rb = Rebalancer::new(RebalanceConfig::default(), 2);
+        rb.observe_launch(0, 0, 45_000.0); // group 0 saturates worker 0
+        rb.observe_launch(1, 1, 2_000.0);
+        let actions = rb.maybe_rebalance(50_000.0, &mut table, &topo);
+        assert_eq!(
+            actions,
+            vec![RebalanceAction::Replicate { group: 0, to: 1 }]
+        );
+        assert_eq!(table.replicas_of(0), &[0, 1]);
+        assert_eq!(rb.stats.replications, 1);
+        assert!(table.is_total(2, 2));
+    }
+
+    #[test]
+    fn no_action_while_window_open_or_fleet_idle() {
+        let topo = topo_het();
+        let mut table = table_of(&[(0, 0), (1, 1)]);
+        let mut rb = Rebalancer::new(RebalanceConfig::default(), 2);
+        rb.observe_launch(0, 0, 45_000.0);
+        assert!(rb.maybe_rebalance(10_000.0, &mut table, &topo).is_empty());
+        // window closes but the fleet is idle: 10% hot util is noise
+        let mut rb2 = Rebalancer::new(RebalanceConfig::default(), 2);
+        rb2.observe_launch(0, 0, 5_000.0);
+        assert!(rb2.maybe_rebalance(50_000.0, &mut table, &topo).is_empty());
+        assert_eq!(rb2.stats.windows, 1, "the window was still evaluated");
+    }
+
+    #[test]
+    fn cold_group_migrates_only_on_strict_improvement() {
+        let topo = DeviceTopology::homogeneous(2, DeviceSpec::v100());
+        let mut table = table_of(&[(0, 0), (1, 0)]);
+        let mut rb = Rebalancer::new(RebalanceConfig::default(), 2);
+        rb.observe_launch(0, 0, 30_000.0);
+        rb.observe_launch(1, 0, 12_000.0);
+        let actions = rb.maybe_rebalance(50_000.0, &mut table, &topo);
+        assert!(actions.contains(&RebalanceAction::Replicate { group: 0, to: 1 }));
+        assert!(actions.contains(&RebalanceAction::Migrate {
+            group: 1,
+            from: 0,
+            to: 1
+        }));
+        assert_eq!(table.replicas_of(1), &[1], "group 1 left worker 0");
+        assert!(table.is_total(2, 2));
+        // a dominating single group must NOT migrate (the swap would just
+        // relabel the hot device) — replication is the only action
+        let mut table2 = table_of(&[(0, 0), (1, 1)]);
+        let mut rb2 = Rebalancer::new(RebalanceConfig::default(), 2);
+        rb2.observe_launch(0, 0, 45_000.0);
+        let actions2 = rb2.maybe_rebalance(50_000.0, &mut table2, &topo);
+        assert_eq!(
+            actions2,
+            vec![RebalanceAction::Replicate { group: 0, to: 1 }]
+        );
+        assert_eq!(rb2.stats.migrations, 0);
+    }
+
+    #[test]
+    fn idle_group_never_blocks_a_real_migration_candidate() {
+        // worker 0 hosts hot A (g0), idle B (g1, zero launches) and
+        // moderate C (g2): the migration candidate must be C — picking
+        // idle B (busy 0, no possible improvement) would block C forever
+        let topo = DeviceTopology::homogeneous(2, DeviceSpec::v100());
+        let mut table = table_of(&[(0, 0), (1, 0), (2, 0)]);
+        let mut rb = Rebalancer::new(RebalanceConfig::default(), 2);
+        rb.observe_launch(0, 0, 30_000.0);
+        rb.observe_launch(2, 0, 7_500.0);
+        let actions = rb.maybe_rebalance(50_000.0, &mut table, &topo);
+        assert!(actions.contains(&RebalanceAction::Migrate {
+            group: 2,
+            from: 0,
+            to: 1
+        }));
+        assert_eq!(table.replicas_of(2), &[1]);
+        assert_eq!(table.replicas_of(1), &[0], "idle group stays put");
+        assert!(table.is_total(3, 2));
+    }
+
+    #[test]
+    fn moves_bounded_per_window() {
+        let topo = DeviceTopology::homogeneous(2, DeviceSpec::v100());
+        let mut table = table_of(&[(0, 0), (1, 0)]);
+        let cfg = RebalanceConfig {
+            max_moves_per_window: 1,
+            ..RebalanceConfig::default()
+        };
+        let mut rb = Rebalancer::new(cfg, 2);
+        rb.observe_launch(0, 0, 30_000.0);
+        rb.observe_launch(1, 0, 12_000.0);
+        let actions = rb.maybe_rebalance(50_000.0, &mut table, &topo);
+        assert_eq!(actions.len(), 1, "cap binds");
+        assert_eq!(rb.stats.moves(), 1);
+    }
+
+    #[test]
+    fn replication_is_idempotent_across_windows() {
+        let topo = topo_het();
+        let mut table = table_of(&[(0, 0), (1, 1)]);
+        let mut rb = Rebalancer::new(RebalanceConfig::default(), 2);
+        let mut now = 0.0;
+        for _ in 0..5 {
+            rb.observe_launch(0, 0, 45_000.0);
+            rb.observe_launch(1, 1, 1_000.0);
+            now += 50_000.0;
+            rb.maybe_rebalance(now, &mut table, &topo);
+        }
+        assert_eq!(
+            rb.stats.replications, 1,
+            "a fully replicated group never re-fires"
+        );
+        assert_eq!(table.replicas_of(0).len(), 2);
+    }
+
+    #[test]
+    fn placed_then_rebalanced_stays_total() {
+        let topo = topo_het();
+        let costs: Vec<(u64, f64)> = (0..5).map(|g| (g, (g + 1) as f64 * 50.0)).collect();
+        let mut table = Placer::place(&costs, &topo);
+        let mut rb = Rebalancer::new(RebalanceConfig::default(), 2);
+        let mut now = 0.0;
+        for round in 0..10 {
+            for g in 0..5u64 {
+                let reps = table.replicas_of(g).to_vec();
+                let total = if g == 0 { 40_000.0 } else { 1_500.0 };
+                for w in &reps {
+                    rb.observe_launch(g, *w, total / reps.len() as f64);
+                }
+            }
+            now += 50_000.0;
+            let actions = rb.maybe_rebalance(now, &mut table, &topo);
+            assert!(actions.len() <= 2, "round {round}: bounded moves");
+            assert!(table.is_total(5, 2), "round {round}: totality");
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! The serving fleet: N launch-stage workers, each backed by a device.
+//!
+//! A *worker* is one slot of the `StatefulPool` launch stage (one backend,
+//! one execution timeline). A *device class* groups workers on identical
+//! hardware: learned service-time estimates are keyed per class, so a
+//! t4 observation never pollutes a v100 estimate and vice versa.
+
+use crate::gpu::device::DeviceSpec;
+use crate::Result;
+
+/// One worker in the fleet.
+#[derive(Debug, Clone)]
+pub struct WorkerDevice {
+    /// Pool worker index (stable for the run).
+    pub worker: usize,
+    /// Device backing this worker.
+    pub spec: DeviceSpec,
+    /// Device-class id: index into [`DeviceTopology::classes`]. Workers on
+    /// identical hardware share a class (and learned estimates).
+    pub class: u32,
+}
+
+/// Relative effective throughput of a device against the V100 reference
+/// (peak FLOPS × sustained efficiency). v100 = 1.0, t4 ≈ 0.52, k80 ≈ 0.25.
+pub fn relative_speed(spec: &DeviceSpec) -> f64 {
+    let reference = DeviceSpec::v100();
+    (spec.peak_flops * spec.max_eff) / (reference.peak_flops * reference.max_eff)
+}
+
+/// The fleet topology: workers plus the dedup'd device-class table.
+#[derive(Debug, Clone)]
+pub struct DeviceTopology {
+    workers: Vec<WorkerDevice>,
+    /// One representative spec per distinct device name; class id = index.
+    classes: Vec<DeviceSpec>,
+}
+
+impl DeviceTopology {
+    /// Topology over an explicit device list (one worker per spec).
+    /// Workers with the same spec *name* share a device class.
+    pub fn new(specs: Vec<DeviceSpec>) -> Self {
+        let mut classes: Vec<DeviceSpec> = Vec::new();
+        let workers = specs
+            .into_iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                let class = match classes.iter().position(|c| c.name == spec.name) {
+                    Some(c) => c as u32,
+                    None => {
+                        classes.push(spec.clone());
+                        (classes.len() - 1) as u32
+                    }
+                };
+                WorkerDevice {
+                    worker: i,
+                    spec,
+                    class,
+                }
+            })
+            .collect();
+        DeviceTopology { workers, classes }
+    }
+
+    /// Topology from CLI device names (`v100,t4,...`). Unknown names are a
+    /// hard error naming the offender and the valid specs — never a silent
+    /// fallback to a default device.
+    pub fn from_names(names: &[String]) -> Result<Self> {
+        let mut specs = Vec::with_capacity(names.len());
+        for n in names {
+            specs.push(DeviceSpec::parse(n)?);
+        }
+        Ok(Self::new(specs))
+    }
+
+    /// `n` identical workers (the legacy single-class pool).
+    pub fn homogeneous(n: usize, spec: DeviceSpec) -> Self {
+        Self::new(vec![spec; n.max(1)])
+    }
+
+    /// Number of workers.
+    pub fn len(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// True when the fleet has no workers.
+    pub fn is_empty(&self) -> bool {
+        self.workers.is_empty()
+    }
+
+    /// All workers.
+    pub fn workers(&self) -> &[WorkerDevice] {
+        &self.workers
+    }
+
+    /// The distinct device classes (class id = index).
+    pub fn classes(&self) -> &[DeviceSpec] {
+        &self.classes
+    }
+
+    /// Device class of a worker.
+    pub fn class_of(&self, worker: usize) -> u32 {
+        self.workers[worker % self.workers.len()].class
+    }
+
+    /// Spec backing a worker.
+    pub fn spec_of(&self, worker: usize) -> &DeviceSpec {
+        &self.workers[worker % self.workers.len()].spec
+    }
+
+    /// Relative speed of a worker's device (v100 = 1.0).
+    pub fn speed_of_worker(&self, worker: usize) -> f64 {
+        relative_speed(self.spec_of(worker))
+    }
+
+    /// Relative speed per device class, indexed by class id.
+    pub fn class_speeds(&self) -> Vec<f64> {
+        self.classes.iter().map(relative_speed).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_dedupe_by_name() {
+        let t = DeviceTopology::new(vec![
+            DeviceSpec::v100(),
+            DeviceSpec::t4(),
+            DeviceSpec::v100(),
+        ]);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.classes().len(), 2);
+        assert_eq!(t.class_of(0), 0);
+        assert_eq!(t.class_of(1), 1);
+        assert_eq!(t.class_of(2), 0, "second v100 shares the class");
+        assert_eq!(t.spec_of(1).name, "t4");
+    }
+
+    #[test]
+    fn from_names_parses_and_rejects() {
+        let t =
+            DeviceTopology::from_names(&["v100".to_string(), "t4".to_string()]).unwrap();
+        assert_eq!(t.len(), 2);
+        let err = DeviceTopology::from_names(&["v100".to_string(), "h100".to_string()])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("h100"), "names the offender: {err}");
+        assert!(err.contains("v100") && err.contains("tpuv2"), "lists specs: {err}");
+    }
+
+    #[test]
+    fn speeds_order_matches_hardware() {
+        let t = DeviceTopology::new(vec![
+            DeviceSpec::v100(),
+            DeviceSpec::t4(),
+            DeviceSpec::k80(),
+        ]);
+        let s = t.class_speeds();
+        assert!((s[0] - 1.0).abs() < 1e-12, "v100 is the reference");
+        assert!(s[0] > s[1] && s[1] > s[2], "v100 > t4 > k80: {s:?}");
+        assert!(t.speed_of_worker(1) > 0.4 && t.speed_of_worker(1) < 0.7);
+    }
+
+    #[test]
+    fn homogeneous_has_one_class() {
+        let t = DeviceTopology::homogeneous(4, DeviceSpec::t4());
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.classes().len(), 1);
+        for w in 0..4 {
+            assert_eq!(t.class_of(w), 0);
+        }
+    }
+}

@@ -37,6 +37,30 @@ impl TenantMetrics {
     }
 }
 
+/// Per-device accounting for placed (multi-device) runs: which worker
+/// executed how much. Indexed by pool-worker id in
+/// [`ServeMetrics::devices`]; empty for single-device drive modes.
+#[derive(Debug, Clone, Default)]
+pub struct DeviceMetrics {
+    /// Device spec name backing the worker ("v100", ...).
+    pub name: String,
+    /// Launches executed on this worker.
+    pub launches: u64,
+    /// Busy time on this worker, µs.
+    pub busy_us: f64,
+}
+
+impl DeviceMetrics {
+    /// Fraction of the run's span this worker was busy.
+    pub fn utilization(&self, span_us: f64) -> f64 {
+        if span_us <= 0.0 {
+            0.0
+        } else {
+            (self.busy_us / span_us).min(1.0)
+        }
+    }
+}
+
 /// Aggregated serving metrics.
 #[derive(Debug, Clone, Default)]
 pub struct ServeMetrics {
@@ -66,6 +90,12 @@ pub struct ServeMetrics {
     /// pack efficiency, evictions) — the serving layer and the scheduler
     /// share one core, so these are the same numbers the benches report.
     pub jit: JitStats,
+    /// Per-worker device accounting (placed runs; empty otherwise).
+    pub devices: Vec<DeviceMetrics>,
+    /// Hot-group replications applied by the rebalancer.
+    pub replications: u64,
+    /// Cold-group migrations applied by the rebalancer.
+    pub migrations: u64,
 }
 
 impl ServeMetrics {
@@ -99,6 +129,25 @@ impl ServeMetrics {
     pub fn launch(&mut self, l: &LaunchRecord) {
         self.batch(l.pack_size, l.executed, l.duration_us);
         self.same_stream_rows += l.same_stream_rows as u64;
+    }
+
+    /// Register a fleet worker so placed runs report every device, busy
+    /// or idle (BENCH per-device utilization must show the idle t4 too).
+    pub fn ensure_device(&mut self, worker: usize, name: &str) {
+        while self.devices.len() <= worker {
+            self.devices.push(DeviceMetrics::default());
+        }
+        if self.devices[worker].name.is_empty() {
+            self.devices[worker].name = name.to_string();
+        }
+    }
+
+    /// Record one executed launch against the worker that ran it.
+    pub fn device_launch(&mut self, worker: usize, name: &str, duration_us: f64) {
+        self.ensure_device(worker, name);
+        let d = &mut self.devices[worker];
+        d.launches += 1;
+        d.busy_us += duration_us;
     }
 
     /// Completed requests across tenants.
@@ -181,6 +230,21 @@ impl ServeMetrics {
                 self.jit.slo_attainment(),
             ));
         }
+        if !self.devices.is_empty() {
+            s.push_str(&format!(
+                "placement: replications={} migrations={}\n",
+                self.replications, self.migrations
+            ));
+            for (w, d) in self.devices.iter().enumerate() {
+                s.push_str(&format!(
+                    "device {w} ({}): launches={} busy={:.1}ms util={:.2}\n",
+                    d.name,
+                    d.launches,
+                    d.busy_us / 1e3,
+                    d.utilization(self.span_us),
+                ));
+            }
+        }
         s.push_str("tenant     n     p50(ms)  p99(ms)  max(ms)  attain  drops\n");
         for (id, t) in &self.tenants {
             s.push_str(&format!(
@@ -245,6 +309,35 @@ mod tests {
         assert_eq!(m.useful_rows, 6);
         assert_eq!(m.same_stream_rows, 3);
         assert!(m.render().contains("same_stream=3"));
+    }
+
+    #[test]
+    fn device_accounting_and_render() {
+        let mut m = ServeMetrics::default();
+        m.ensure_device(0, "v100");
+        m.ensure_device(1, "t4");
+        m.device_launch(0, "v100", 400_000.0);
+        m.device_launch(0, "v100", 100_000.0);
+        m.span_us = 1_000_000.0;
+        m.replications = 1;
+        assert_eq!(m.devices.len(), 2);
+        assert_eq!(m.devices[0].launches, 2);
+        assert!((m.devices[0].utilization(m.span_us) - 0.5).abs() < 1e-9);
+        assert_eq!(m.devices[1].launches, 0, "idle device still reported");
+        assert_eq!(m.devices[1].name, "t4");
+        let r = m.render();
+        assert!(r.contains("device 0 (v100)"), "{r}");
+        assert!(r.contains("device 1 (t4)"), "{r}");
+        assert!(r.contains("replications=1"), "{r}");
+    }
+
+    #[test]
+    fn render_omits_devices_for_single_device_runs() {
+        let mut m = ServeMetrics::default();
+        m.complete(0, 1_000.0, true);
+        m.span_us = 1e6;
+        assert!(!m.render().contains("device 0"));
+        assert!(!m.render().contains("placement:"));
     }
 
     #[test]

@@ -9,18 +9,22 @@
 //! runs here.
 //!
 //! * [`server`] — the serving drivers: virtual-paced trace replay
-//!   (benches, reproducible), an inline real-time mode, and a concurrent
-//!   real-time mode with per-model worker backends;
+//!   (benches, reproducible), the placement-aware multi-device replay
+//!   (`replay_placed`), an inline real-time mode, and the concurrent
+//!   real-time modes whose launch stage routes through the
+//!   [`crate::placement`] table (least-loaded replica per launch,
+//!   rebalancer-driven replication of hot model groups);
 //! * [`metrics`] — per-tenant latency histograms, SLO attainment,
-//!   batch-occupancy accounting, JIT pack stats;
+//!   batch-occupancy accounting, JIT pack stats, per-device utilization;
 //! * [`admission`] — bounded queues + drop policy (backpressure), sharing
-//!   the scheduler's service-time estimator.
+//!   the scheduler's service-time estimator (drain priced per launch,
+//!   elapsed execution subtracted, divided across a group's replicas).
 
 pub mod admission;
 pub mod metrics;
 pub mod server;
 
-pub use metrics::ServeMetrics;
+pub use metrics::{DeviceMetrics, ServeMetrics};
 pub use server::{
     BatchPolicy, ModelBackend, ModelSlot, ServeExecutor, ServeReport, Server, SimBackend,
 };

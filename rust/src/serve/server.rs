@@ -18,18 +18,23 @@
 //! * a pack launch executes as one padded model batch through
 //!   [`ModelBackend::execute`] (the [`ServeExecutor`] adapter).
 //!
-//! Three drive modes, one core:
+//! Four drive modes, one core:
 //!
 //! * [`Server::replay`] — virtual-paced arrivals, real measured service
 //!   times, synchronous `pump`. Deterministic given a trace and a
 //!   deterministic backend.
+//! * [`Server::replay_placed`] — the multi-device virtual-time replay:
+//!   launches route through a [`crate::placement`] table onto per-worker
+//!   device timelines (heterogeneous speeds, per-class learned
+//!   estimates), with optional hot-group rebalancing. Deterministic.
 //! * [`Server::run_realtime`] — wall-clock arrivals from a generator
 //!   thread, launches executed inline (`issue_ready` → `run_issued` →
 //!   `finish_launch`).
-//! * [`Server::run_realtime_pooled`] — the concurrent launch stage:
-//!   launches fan out to a [`StatefulPool`] where each worker owns its own
-//!   backend, so superkernels for different models execute in parallel;
-//!   window capacity is the admission backstop.
+//! * [`Server::run_realtime_pooled`] / [`Server::run_realtime_placed`] —
+//!   the concurrent launch stage: launches fan out to a [`StatefulPool`]
+//!   where each worker owns its own backend, routed to the least-loaded
+//!   replica of the launch's group in the placement table; window
+//!   capacity is the admission backstop.
 //!
 //! Admission and the scheduler share one estimator
 //! ([`ServeExecutor::estimate_group_us`]), priced at the *padded* compiled
@@ -45,7 +50,11 @@ use crate::compiler::jit::{
 };
 use crate::compiler::coalescer::{Coalescer, SuperKernel};
 use crate::compiler::scheduler::Policy;
+use crate::gpu::device::DeviceSpec;
 use crate::gpu::kernel::KernelDesc;
+use crate::placement::{
+    DeviceTopology, Placer, PlacementTable, RebalanceConfig, Rebalancer,
+};
 use crate::runtime::executor::{ModelExec, PjrtExecutor};
 use crate::runtime::golden;
 use crate::serve::admission::{Admission, Admit};
@@ -239,8 +248,15 @@ pub struct ModelSlot {
 pub struct ServeExecutor<B: ModelBackend> {
     backend: B,
     models: Vec<ModelSlot>,
-    /// learned per-(group, padded batch) service time, µs
-    est: HashMap<(u64, u32), Ewma>,
+    /// learned per-(device class, group, padded batch) service time, µs —
+    /// keyed per class so a t4 observation never updates a v100 estimate
+    est: HashMap<(u32, u64, u32), Ewma>,
+    /// relative speed per device class (index = class id); a single 1.0
+    /// entry for the legacy single-device drive modes
+    class_speeds: Vec<f64>,
+    /// primary device class per group (the estimation target for
+    /// admission and the scheduler); groups default to class 0
+    group_class: HashMap<u64, u32>,
 }
 
 impl<B: ModelBackend> ServeExecutor<B> {
@@ -250,6 +266,8 @@ impl<B: ModelBackend> ServeExecutor<B> {
             backend,
             models,
             est: HashMap::new(),
+            class_speeds: vec![1.0],
+            group_class: HashMap::new(),
         }
     }
 
@@ -263,21 +281,57 @@ impl<B: ModelBackend> ServeExecutor<B> {
         &self.models
     }
 
-    /// Estimated service time of `n` queued requests for a model group,
-    /// priced at the padded compiled variant that would actually run —
-    /// the ONE estimator shared by admission and the scheduler.
-    pub fn estimate_group_us(&self, group: u64, n: u32) -> f64 {
-        let slot = &self.models[group as usize];
-        let padded = self.backend.padded_batch(&slot.name, n);
-        match self.est.get(&(group, padded)).and_then(|e| e.value()) {
-            Some(v) => v,
-            None => self.backend.estimate_us(&slot.name, n),
+    /// Install the fleet's device-class speed table (relative throughput,
+    /// index = class id). The placed drivers call this once at startup.
+    pub fn set_class_speeds(&mut self, speeds: Vec<f64>) {
+        if !speeds.is_empty() {
+            self.class_speeds = speeds;
         }
     }
 
-    fn observe_group(&mut self, group: u64, padded: u32, us: f64) {
+    /// Pin a group's primary device class (follows the placement table's
+    /// primary replica; updated again after every rebalance).
+    pub fn set_group_class(&mut self, group: u64, class: u32) {
+        self.group_class.insert(group, class);
+    }
+
+    /// The device class a group's estimates are currently priced on.
+    pub fn class_of_group(&self, group: u64) -> u32 {
+        self.group_class.get(&group).copied().unwrap_or(0)
+    }
+
+    fn speed_of_class(&self, class: u32) -> f64 {
+        self.class_speeds
+            .get(class as usize)
+            .copied()
+            .unwrap_or(1.0)
+            .max(1e-9)
+    }
+
+    /// Estimated service time of `n` queued requests for a model group,
+    /// priced at the padded compiled variant that would actually run on
+    /// the group's *primary device class* — the ONE estimator shared by
+    /// admission and the scheduler.
+    pub fn estimate_group_us(&self, group: u64, n: u32) -> f64 {
+        self.estimate_group_on_class_us(group, self.class_of_group(group), n)
+    }
+
+    /// Estimate for an explicit device class: the class's learned EWMA
+    /// when observed, else the backend prior scaled by the class's
+    /// relative speed (a t4 runs the same padded variant ~2× longer than
+    /// the v100 reference).
+    pub fn estimate_group_on_class_us(&self, group: u64, class: u32, n: u32) -> f64 {
+        let slot = &self.models[group as usize];
+        let padded = self.backend.padded_batch(&slot.name, n);
+        match self.est.get(&(class, group, padded)).and_then(|e| e.value()) {
+            Some(v) => v,
+            None => self.backend.estimate_us(&slot.name, n) / self.speed_of_class(class),
+        }
+    }
+
+    fn observe_group(&mut self, class: u32, group: u64, padded: u32, us: f64) {
         self.est
-            .entry((group, padded))
+            .entry((class, group, padded))
             .or_insert_with(|| Ewma::new(0.3))
             .observe(us);
     }
@@ -304,6 +358,7 @@ impl<B: ModelBackend> PackExecutor<Vec<f32>> for ServeExecutor<B> {
                 duration_us: exec.duration_us,
                 executed: exec.batch,
                 ok: true,
+                device_class: 0,
             },
             Err(e) => {
                 crate::util::logging::emit(
@@ -314,6 +369,7 @@ impl<B: ModelBackend> PackExecutor<Vec<f32>> for ServeExecutor<B> {
                     duration_us: 0.0,
                     executed: sk.kernel.problems,
                     ok: false,
+                    device_class: 0,
                 }
             }
         }
@@ -324,7 +380,7 @@ impl<B: ModelBackend> PackExecutor<Vec<f32>> for ServeExecutor<B> {
             return;
         }
         if let Some(op) = ops.first() {
-            self.observe_group(op.group, run.executed, run.duration_us);
+            self.observe_group(run.device_class, op.group, run.executed, run.duration_us);
         }
     }
 }
@@ -441,6 +497,57 @@ fn model_slots<B: ModelBackend>(
     (slots, index)
 }
 
+/// Seed the placement table: LPT over each group's total estimated work
+/// in the trace (batch-1 estimates x request count). Shared by the placed
+/// replay and realtime drivers so their initial placements cannot diverge.
+fn seed_placement<B: ModelBackend>(
+    backend: &B,
+    trace: &Trace,
+    index: &BTreeMap<String, u64>,
+    groups: u64,
+    topo: &DeviceTopology,
+) -> PlacementTable {
+    let mut work: BTreeMap<u64, f64> = (0..groups).map(|g| (g, 0.0)).collect();
+    for r in &trace.requests {
+        *work.entry(index[&r.model]).or_insert(0.0) += backend.estimate_us(&r.model, 1);
+    }
+    let costs: Vec<(u64, f64)> = work.into_iter().collect();
+    Placer::place(&costs, topo)
+}
+
+/// Effective drain parallelism of a group's replica set: how many
+/// primary-class-equivalents serve it (Σ replica speed ÷ primary-replica
+/// speed, so the units match the estimate, which is priced on the primary
+/// class). Two equal replicas = 2.0; a v100 primary with a k80 replica =
+/// ~1.25 — dividing the drain by the raw replica count would underprice
+/// it on mixed fleets and re-admit doomed requests.
+fn drain_parallelism(table: &PlacementTable, topo: &DeviceTopology, group: u64) -> f64 {
+    let reps = table.replicas_of(group);
+    match reps.first() {
+        None => 1.0,
+        Some(p) => {
+            let primary = topo.speed_of_worker(*p).max(1e-9);
+            (reps.iter().map(|w| topo.speed_of_worker(*w)).sum::<f64>() / primary)
+                .max(1.0)
+        }
+    }
+}
+
+/// Pin every group's primary estimation class to its current primary
+/// replica's device class (called at startup and after each rebalance).
+fn repin_group_classes<B: ModelBackend>(
+    exec: &mut ServeExecutor<B>,
+    table: &PlacementTable,
+    topo: &DeviceTopology,
+    groups: u64,
+) {
+    for g in 0..groups {
+        if let Some(w) = table.primary_of(g) {
+            exec.set_group_class(g, topo.class_of(w));
+        }
+    }
+}
+
 fn record_completion(metrics: &mut ServeMetrics, c: &OpCompletion) {
     let tenant = c.op.tag as u32;
     if c.failed {
@@ -458,6 +565,17 @@ struct AdmitReq {
     arrival_us: f64,
     deadline_us: f64,
     independent: bool,
+    /// Effective drain parallelism of the group's serving workers (speed-
+    /// weighted replica count from [`drain_parallelism`]; 1.0 for the
+    /// single-device drive modes) — the drain estimate's divisor.
+    parallelism: f64,
+    /// Measured backlog on the group's least-loaded replica timeline, µs
+    /// (the placed virtual-time driver's device queues, which already
+    /// include every issued launch — other groups' included). `Some`
+    /// replaces the JIT's in-flight estimate term, which cannot see
+    /// device queueing and would underprice launches waiting for a busy
+    /// device. `None` for drive modes without device timelines.
+    device_backlog_us: Option<f64>,
     row: Vec<f32>,
 }
 
@@ -514,10 +632,12 @@ impl<B: ModelBackend> Server<B> {
     /// one op per stream per launch, so the longest pending stream bounds
     /// the launch count (cross-stream coalescing still fills each launch).
     /// The in-flight term sums the scheduler's own estimate of every
-    /// pending launch (N singleton launches keep N fixed overheads).
-    /// Still unpriced: execution time already elapsed and pooled-worker
-    /// parallelism; refining those belongs to the async-admission
-    /// frontend (ROADMAP).
+    /// pending launch (N singleton launches keep N fixed overheads),
+    /// minus the execution time already elapsed on each (a launch halfway
+    /// through its estimate owes half). The whole drain is then divided
+    /// by the number of pool workers serving the group — the placement
+    /// table's replica count — since replicated groups drain their
+    /// backlog concurrently.
     fn admit_request(
         jit: &mut JitCompiler<ServeExecutor<&mut B>, Vec<f32>>,
         streams: &mut BTreeMap<(u32, u64), u32>,
@@ -532,6 +652,8 @@ impl<B: ModelBackend> Server<B> {
             arrival_us,
             deadline_us,
             independent,
+            parallelism,
+            device_backlog_us,
             row,
         } = r;
         let stream = intern_stream(streams, tenant, group);
@@ -563,7 +685,22 @@ impl<B: ModelBackend> Server<B> {
             let per_launch = queued.div_ceil(launches).min(cap).max(1);
             f64::from(launches) * jit.executor().estimate_group_us(group, per_launch)
         };
-        est += jit.inflight_group_est_us(group);
+        // replicated groups drain their queue on several workers at once
+        // (speed-weighted: a slow replica adds less than one worker)
+        let parallelism = parallelism.max(1.0);
+        est /= parallelism;
+        est += match device_backlog_us {
+            // device timelines known: the least-loaded replica's queued
+            // work is the true wait (already per-worker, not divided)
+            Some(backlog) => backlog,
+            // otherwise the JIT's in-flight term (elapsed execution
+            // subtracted from the launches actually running — at most one
+            // per serving worker), spread across the workers like the queue
+            None => {
+                jit.inflight_group_est_us(group, parallelism.round() as u32)
+                    / parallelism
+            }
+        };
         let slack_after = deadline_us - jit.now_us - est;
         if admission.decide(depth + inflight, slack_after) == Admit::Reject {
             metrics.drop_request(tenant);
@@ -622,6 +759,8 @@ impl<B: ModelBackend> Server<B> {
                         arrival_us: r.arrival_us,
                         deadline_us: r.deadline_us,
                         independent,
+                        parallelism: 1.0,
+                        device_backlog_us: None,
                         row,
                     },
                 );
@@ -656,6 +795,175 @@ impl<B: ModelBackend> Server<B> {
         }
     }
 
+    /// Multi-device virtual-time replay: the placement-aware sibling of
+    /// [`Server::replay`]. Launches issue through the one JIT core, then
+    /// route to topology workers via a placement table (least-busy
+    /// replica); each worker keeps its own busy-until timeline, so a
+    /// replicated group drains on several devices in parallel. Execution
+    /// durations come from the shared backend scaled by each device's
+    /// relative speed; learned estimates are keyed per device class.
+    /// With `rebalance` set, hot groups replicate onto cooler devices and
+    /// cold groups migrate off hot ones between observation windows.
+    ///
+    /// Deterministic given a trace, a deterministic backend, and a fixed
+    /// topology. Returns the report plus the final placement table.
+    pub fn replay_placed(
+        &mut self,
+        trace: &Trace,
+        topo: &DeviceTopology,
+        rebalance: Option<RebalanceConfig>,
+    ) -> (ServeReport, PlacementTable) {
+        let mut metrics = ServeMetrics::default();
+        let (slots, index) = model_slots(&self.backend, trace);
+        let groups = slots.len() as u64;
+        let mut table = seed_placement(&self.backend, trace, &index, groups, topo);
+        let mut rebal = rebalance.map(|c| Rebalancer::new(c, topo.len()));
+
+        let cfg = self.policy.jit_config(&slots, self.window_capacity);
+        let policy_name = self.policy.name();
+        let admission = self.admission.clone();
+        let independent = self.independent_streams;
+        let mut exec = ServeExecutor::new(&mut self.backend, slots.clone());
+        exec.set_class_speeds(topo.class_speeds());
+        repin_group_classes(&mut exec, &table, topo, groups);
+        let mut jit: JitCompiler<ServeExecutor<&mut B>, Vec<f32>> =
+            JitCompiler::with_payloads(cfg, exec);
+        for w in topo.workers() {
+            metrics.ensure_device(w.worker, w.spec.name);
+        }
+
+        let mut streams: BTreeMap<(u32, u64), u32> = BTreeMap::new();
+        // per-worker busy-until time: the device timelines
+        let mut free_at: Vec<f64> = vec![0.0; topo.len()];
+        // issued-but-unfinished launches: (done_us, ticket, worker, group, run)
+        let mut inflight: Vec<(f64, u64, usize, u64, PackRun)> = Vec::new();
+        let reqs = &trace.requests;
+        let mut next = 0usize;
+        loop {
+            // 1. admit everything that has arrived (true arrival times)
+            while next < reqs.len() && reqs[next].arrival_us <= jit.now_us + 1e-9 {
+                let r = &reqs[next];
+                next += 1;
+                let group = index[&r.model];
+                let parallelism = drain_parallelism(&table, topo, group);
+                // the true wait: queued work on the least-loaded replica
+                let backlog = table
+                    .replicas_of(group)
+                    .iter()
+                    .map(|w| (free_at[*w] - jit.now_us).max(0.0))
+                    .fold(f64::INFINITY, f64::min);
+                let backlog = if backlog.is_finite() { backlog } else { 0.0 };
+                let row =
+                    golden::gen_hash01(slots[group as usize].d_in, r.id.wrapping_mul(7919));
+                Self::admit_request(
+                    &mut jit,
+                    &mut streams,
+                    &admission,
+                    &mut metrics,
+                    &slots,
+                    AdmitReq {
+                        group,
+                        tenant: r.tenant,
+                        arrival_us: r.arrival_us,
+                        deadline_us: r.deadline_us,
+                        independent,
+                        parallelism,
+                        device_backlog_us: Some(backlog),
+                        row,
+                    },
+                );
+            }
+            // 2. issue every launch the policy allows; route each to the
+            // least-busy replica and queue it on that device's timeline
+            let (launches, wake) = jit.issue_ready();
+            for l in launches {
+                let group = jit
+                    .window
+                    .get(l.pack.ops[0])
+                    .map(|op| op.group)
+                    .unwrap_or(0);
+                let worker = table.route(group, &free_at);
+                // re-price on the routed class: a slow replica running at
+                // its own speed is not a straggler
+                let est_routed = jit.executor().estimate_group_on_class_us(
+                    group,
+                    topo.class_of(worker),
+                    l.pack.ops.len() as u32,
+                );
+                jit.reprice_pending(l.ticket, est_routed);
+                let mut run = jit.run_issued(l.ticket);
+                run.duration_us /= topo.speed_of_worker(worker).max(1e-9);
+                run.device_class = topo.class_of(worker);
+                let start = free_at[worker].max(jit.now_us);
+                let done = start + run.duration_us;
+                free_at[worker] = done;
+                inflight.push((done, l.ticket, worker, group, run));
+            }
+            // 3. advance the virtual clock to the next event
+            let next_done = inflight.iter().map(|e| e.0).fold(f64::INFINITY, f64::min);
+            let next_arrival = reqs
+                .get(next)
+                .map(|r| r.arrival_us)
+                .unwrap_or(f64::INFINITY);
+            let t = next_done.min(next_arrival).min(wake.unwrap_or(f64::INFINITY));
+            if !t.is_finite() {
+                debug_assert!(jit.window.is_empty(), "deadlocked placed window");
+                break;
+            }
+            jit.advance_to(t);
+            // 4. fold in completions now due, in deterministic time order
+            let mut due: Vec<(f64, u64, usize, u64, PackRun)> = Vec::new();
+            let mut i = 0;
+            while i < inflight.len() {
+                if inflight[i].0 <= jit.now_us + 1e-9 {
+                    due.push(inflight.swap_remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+            due.sort_by(|a, b| {
+                a.0.partial_cmp(&b.0).expect("NaN done time").then(a.1.cmp(&b.1))
+            });
+            for (done_us, ticket, worker, group, run) in due {
+                let (ok, dur) = (run.ok, run.duration_us);
+                let completions = jit.finish_launch(ticket, done_us, run);
+                for c in &completions {
+                    record_completion(&mut metrics, c);
+                }
+                if ok {
+                    metrics.device_launch(worker, topo.spec_of(worker).name, dur);
+                    if let Some(rb) = rebal.as_mut() {
+                        rb.observe_launch(group, worker, dur);
+                    }
+                }
+            }
+            for l in jit.take_launches() {
+                if l.ok {
+                    metrics.launch(&l);
+                }
+            }
+            // 5. rebalance between observation windows; re-pin each
+            // group's primary estimation class to its new primary replica
+            if let Some(rb) = rebal.as_mut() {
+                let actions = rb.maybe_rebalance(jit.now_us, &mut table, topo);
+                if !actions.is_empty() {
+                    repin_group_classes(jit.executor_mut(), &table, topo, groups);
+                }
+                metrics.replications = rb.stats.replications;
+                metrics.migrations = rb.stats.migrations;
+            }
+        }
+        metrics.span_us = jit.now_us;
+        metrics.jit = jit.stats.clone();
+        (
+            ServeReport {
+                metrics,
+                policy: policy_name,
+            },
+            table,
+        )
+    }
+
     /// Threaded real-time mode: a generator thread paces the trace on the
     /// wall clock (compressed by `speedup`); the current thread drives the
     /// JIT core and executes launches inline. Returns wall-clock metrics.
@@ -663,14 +971,16 @@ impl<B: ModelBackend> Server<B> {
     where
         B: 'static,
     {
-        self.realtime_loop(trace, speedup, None)
+        self.realtime_loop(trace, speedup, None, None, None, false)
     }
 
     /// Concurrent real-time mode: launches fan out to `workers` pool
     /// workers, each owning its own backend built by `factory` on its own
-    /// thread (the backend type need not be `Send`). Superkernels for
-    /// different models execute in parallel; one model's launches stay
-    /// serialized (and cache-warm) on its owning worker.
+    /// thread (the backend type need not be `Send`). The launch stage
+    /// routes through a placement table over a homogeneous fleet (one
+    /// device class), so superkernels for different models execute in
+    /// parallel while one model's launches stay serialized (and
+    /// cache-warm) on their placed worker.
     pub fn run_realtime_pooled<F>(
         &mut self,
         trace: &Trace,
@@ -683,7 +993,35 @@ impl<B: ModelBackend> Server<B> {
         F: Fn(usize) -> B + Send + Sync + 'static,
     {
         let pool = StatefulPool::new(workers, factory);
-        self.realtime_loop(trace, speedup, Some(&pool))
+        // placement routing over an anonymous homogeneous fleet; device
+        // names are NOT reported — this mode runs on whatever hardware
+        // the caller's backends really use, and metrics.devices staying
+        // empty is the documented single-device-modes contract
+        let topo = DeviceTopology::homogeneous(workers, DeviceSpec::v100());
+        self.realtime_loop(trace, speedup, Some(&pool), Some(topo), None, false)
+    }
+
+    /// Device-placed real-time mode: one pool worker per topology device,
+    /// each owning the backend `factory(worker, spec)` builds on its own
+    /// thread. Launches route to the least-loaded replica of their
+    /// group's placement-table entry; when `rebalance` is set, hot groups
+    /// replicate onto cooler devices (and cold ones migrate off hot
+    /// devices) as per-device load skews.
+    pub fn run_realtime_placed<F>(
+        &mut self,
+        trace: &Trace,
+        speedup: f64,
+        topo: DeviceTopology,
+        rebalance: Option<RebalanceConfig>,
+        factory: F,
+    ) -> ServeReport
+    where
+        B: 'static,
+        F: Fn(usize, &DeviceSpec) -> B + Send + Sync + 'static,
+    {
+        let specs = topo.clone();
+        let pool = StatefulPool::new(topo.len(), move |i| factory(i, specs.spec_of(i)));
+        self.realtime_loop(trace, speedup, Some(&pool), Some(topo), rebalance, true)
     }
 
     fn realtime_loop(
@@ -691,6 +1029,9 @@ impl<B: ModelBackend> Server<B> {
         trace: &Trace,
         speedup: f64,
         pool: Option<&StatefulPool<B>>,
+        topo: Option<DeviceTopology>,
+        rebalance: Option<RebalanceConfig>,
+        report_devices: bool,
     ) -> ServeReport
     where
         B: 'static,
@@ -703,6 +1044,20 @@ impl<B: ModelBackend> Server<B> {
             row: Vec<f32>,
         }
         let (slots, index) = model_slots(&self.backend, trace);
+        // placement for the pooled launch stage: LPT over each group's
+        // total estimated work; each launch then routes to the
+        // least-loaded replica of its group's table entry
+        let groups = slots.len() as u64;
+        let mut placed: Option<(DeviceTopology, PlacementTable, Option<Rebalancer>)> =
+            match topo {
+                Some(topo) if pool.is_some() => {
+                    let table =
+                        seed_placement(&self.backend, trace, &index, groups, &topo);
+                    let rebal = rebalance.map(|c| Rebalancer::new(c, topo.len()));
+                    Some((topo, table, rebal))
+                }
+                _ => None,
+            };
         let gen_reqs: Vec<(f64, u32, u64, f64, u64)> = trace
             .requests
             .iter()
@@ -750,8 +1105,25 @@ impl<B: ModelBackend> Server<B> {
                 cfg,
                 ServeExecutor::new(&mut self.backend, slots.clone()),
             );
+        if let Some((topo, table, _)) = &placed {
+            jit.executor_mut().set_class_speeds(topo.class_speeds());
+            repin_group_classes(jit.executor_mut(), table, topo, groups);
+            if report_devices {
+                for w in topo.workers() {
+                    metrics.ensure_device(w.worker, w.spec.name);
+                }
+            }
+        }
         let wall_us = |t0: Instant| t0.elapsed().as_secs_f64() * 1e6;
         let mut streams: BTreeMap<(u32, u64), u32> = BTreeMap::new();
+        // pooled-launch routing decisions, keyed by launch ticket:
+        // (worker, group, routed-class estimate)
+        let mut ticket_route: HashMap<u64, (usize, u64, f64)> = HashMap::new();
+        // estimated un-finished work per pool worker, µs — admission's
+        // device-backlog signal (conservative: head-job progress is not
+        // subtracted; a wall-clock driver cannot observe it)
+        let mut worker_backlog: Vec<f64> =
+            vec![0.0; pool.map(|p| p.workers()).unwrap_or(0)];
         let mut disconnected = false;
         loop {
             // 1. drain arrivals (bounded wait when idle); once the
@@ -776,6 +1148,20 @@ impl<B: ModelBackend> Server<B> {
             for inc in arrivals {
                 let arrival_us =
                     inc.arrival.saturating_duration_since(t0).as_secs_f64() * 1e6;
+                let (parallelism, backlog) = match &placed {
+                    Some((topo, table, _)) => {
+                        let b = table
+                            .replicas_of(inc.group)
+                            .iter()
+                            .map(|w| worker_backlog.get(*w).copied().unwrap_or(0.0))
+                            .fold(f64::INFINITY, f64::min);
+                        (
+                            drain_parallelism(table, topo, inc.group),
+                            Some(if b.is_finite() { b } else { 0.0 }),
+                        )
+                    }
+                    None => (1.0, None),
+                };
                 Self::admit_request(
                     &mut jit,
                     &mut streams,
@@ -788,6 +1174,8 @@ impl<B: ModelBackend> Server<B> {
                         arrival_us,
                         deadline_us: arrival_us + inc.slo_us,
                         independent,
+                        parallelism,
+                        device_backlog_us: backlog,
                         row: inc.row,
                     },
                 );
@@ -796,13 +1184,41 @@ impl<B: ModelBackend> Server<B> {
             let (launches, _wake) = jit.issue_ready();
             match pool {
                 Some(pool) => {
-                    // concurrent launch stage: one worker per model group
+                    // concurrent launch stage: route each launch through
+                    // the placement table to the least-loaded replica of
+                    // its group (legacy group-hash when unplaced)
                     for l in launches {
                         let group = jit
                             .window
                             .get(l.pack.ops[0])
                             .map(|op| op.group)
                             .unwrap_or(0);
+                        let worker = match &placed {
+                            Some((_, table, _)) => {
+                                let loads: Vec<f64> = (0..pool.workers())
+                                    .map(|w| pool.in_flight_of(w) as f64)
+                                    .collect();
+                                table.route(group, &loads)
+                            }
+                            None => group as usize % pool.workers(),
+                        };
+                        // re-price on the routed class (a slow replica is
+                        // not a straggler) and book the worker's backlog
+                        let est_routed = match &placed {
+                            Some((topo, _, _)) => {
+                                jit.executor().estimate_group_on_class_us(
+                                    group,
+                                    topo.class_of(worker),
+                                    l.pack.ops.len() as u32,
+                                )
+                            }
+                            None => l.est_us,
+                        };
+                        jit.reprice_pending(l.ticket, est_routed);
+                        if let Some(b) = worker_backlog.get_mut(worker) {
+                            *b += est_routed;
+                        }
+                        ticket_route.insert(l.ticket, (worker, group, est_routed));
                         let model = slots[group as usize].name.clone();
                         let rows: Vec<Vec<f32>> = jit
                             .payloads_of(&l.pack.ops)
@@ -811,7 +1227,7 @@ impl<B: ModelBackend> Server<B> {
                             .collect();
                         let res_tx = res_tx.clone();
                         let ticket = l.ticket;
-                        pool.submit_to(group as usize, move |backend: &mut B| {
+                        pool.submit_to(worker, move |backend: &mut B| {
                             let r = backend
                                 .execute(&model, &rows)
                                 .map_err(|e| e.to_string());
@@ -844,11 +1260,17 @@ impl<B: ModelBackend> Server<B> {
                 results.push(r);
             }
             for (ticket, result) in results {
-                let run = match result {
+                let (worker, group, booked_est) =
+                    ticket_route.remove(&ticket).unwrap_or((0, 0, 0.0));
+                if let Some(b) = worker_backlog.get_mut(worker) {
+                    *b = (*b - booked_est).max(0.0);
+                }
+                let mut run = match result {
                     Ok(exec) => PackRun {
                         duration_us: exec.duration_us,
                         executed: exec.batch,
                         ok: true,
+                        device_class: 0,
                     },
                     Err(e) => {
                         crate::util::logging::emit(
@@ -859,17 +1281,48 @@ impl<B: ModelBackend> Server<B> {
                             duration_us: 0.0,
                             executed: 0,
                             ok: false,
+                            device_class: 0,
                         }
                     }
                 };
+                if let Some((topo, _, _)) = &placed {
+                    run.device_class = topo.class_of(worker);
+                }
+                let (ok, dur) = (run.ok, run.duration_us);
                 let done = jit.finish_launch(ticket, wall_us(t0), run);
                 for c in &done {
                     record_completion(&mut metrics, c);
+                }
+                if ok {
+                    if let Some((topo, _, rebal)) = placed.as_mut() {
+                        if report_devices {
+                            metrics.device_launch(
+                                worker,
+                                topo.spec_of(worker).name,
+                                dur,
+                            );
+                        }
+                        if let Some(rb) = rebal.as_mut() {
+                            rb.observe_launch(group, worker, dur);
+                        }
+                    }
                 }
             }
             for l in jit.take_launches() {
                 if l.ok {
                     metrics.launch(&l);
+                }
+            }
+            // rebalance between windows (wall clock); keep the estimator's
+            // primary device class in step with the table's primaries
+            if let Some((topo, table, rebal)) = placed.as_mut() {
+                if let Some(rb) = rebal.as_mut() {
+                    let actions = rb.maybe_rebalance(wall_us(t0), table, topo);
+                    if !actions.is_empty() {
+                        repin_group_classes(jit.executor_mut(), table, topo, groups);
+                    }
+                    metrics.replications = rb.stats.replications;
+                    metrics.migrations = rb.stats.migrations;
                 }
             }
             if disconnected && jit.window.is_empty() && jit.inflight_launches() == 0 {
@@ -1116,6 +1569,8 @@ mod tests {
                     arrival_us: 0.0,
                     deadline_us: 1e9,
                     independent: false,
+                    parallelism: 1.0,
+                    device_backlog_us: None,
                     row: vec![0.0; 4],
                 },
             );
@@ -1135,6 +1590,8 @@ mod tests {
                 arrival_us: 0.0,
                 deadline_us: 1_500.0,
                 independent: false,
+                parallelism: 1.0,
+                device_backlog_us: None,
                 row: vec![0.0; 4],
             },
         );
@@ -1175,6 +1632,8 @@ mod tests {
                     arrival_us: 0.0,
                     deadline_us: 1e9,
                     independent: false,
+                    parallelism: 1.0,
+                    device_backlog_us: None,
                     row: vec![0.0; 4],
                 },
             );
@@ -1195,6 +1654,8 @@ mod tests {
                 arrival_us: 0.0,
                 deadline_us: 2_500.0,
                 independent: false,
+                parallelism: 1.0,
+                device_backlog_us: None,
                 row: vec![0.0; 4],
             },
         );
@@ -1241,6 +1702,8 @@ mod tests {
                     arrival_us: 0.0,
                     deadline_us: 1e9,
                     independent: true,
+                    parallelism: 1.0,
+                    device_backlog_us: None,
                     row: vec![0.0; 4],
                 },
             );
@@ -1265,6 +1728,8 @@ mod tests {
                 arrival_us: 0.0,
                 deadline_us: 600.0,
                 independent: true,
+                parallelism: 1.0,
+                device_backlog_us: None,
                 row: vec![0.0; 4],
             },
         );
@@ -1284,6 +1749,8 @@ mod tests {
                 arrival_us: 0.0,
                 deadline_us: 1_500.0,
                 independent: true,
+                parallelism: 1.0,
+                device_backlog_us: None,
                 row: vec![0.0; 4],
             },
         );
@@ -1326,13 +1793,15 @@ mod tests {
                     arrival_us: 0.0,
                     deadline_us: 1e9,
                     independent: true,
+                    parallelism: 1.0,
+                    device_backlog_us: None,
                     row: vec![0.0; 4],
                 },
             );
         }
         let (launches, _) = jit.issue_ready();
         assert_eq!(launches.len(), 4, "NoBatching issues singletons");
-        assert!((jit.inflight_group_est_us(0) - 2_200.0).abs() < 1e-9);
+        assert!((jit.inflight_group_est_us(0, 1) - 2_200.0).abs() < 1e-9);
         // deadline 1500µs would survive one-batch pricing (700 + 550) but
         // not the true per-launch drain (2200 + 550)
         Server::<SimBackend>::admit_request(
@@ -1347,6 +1816,8 @@ mod tests {
                 arrival_us: 0.0,
                 deadline_us: 1_500.0,
                 independent: true,
+                parallelism: 1.0,
+                device_backlog_us: None,
                 row: vec![0.0; 4],
             },
         );
@@ -1365,6 +1836,8 @@ mod tests {
                 arrival_us: 0.0,
                 deadline_us: 3_000.0,
                 independent: true,
+                parallelism: 1.0,
+                device_backlog_us: None,
                 row: vec![0.0; 4],
             },
         );
@@ -1405,6 +1878,8 @@ mod tests {
                     arrival_us: 0.0,
                     deadline_us: 1e9,
                     independent: true,
+                    parallelism: 1.0,
+                    device_backlog_us: None,
                     row: vec![0.0; 4],
                 },
             );
@@ -1426,6 +1901,8 @@ mod tests {
                 arrival_us: 0.0,
                 deadline_us: 1_500.0,
                 independent: true,
+                parallelism: 1.0,
+                device_backlog_us: None,
                 row: vec![0.0; 4],
             },
         );
@@ -1444,9 +1921,288 @@ mod tests {
                 arrival_us: 0.0,
                 deadline_us: 3_000.0,
                 independent: true,
+                parallelism: 1.0,
+                device_backlog_us: None,
                 row: vec![0.0; 4],
             },
         );
+        assert_eq!(jit.window.pending_in_group(0), 5);
+    }
+
+    #[test]
+    fn per_device_class_ewmas_are_isolated() {
+        // the worker-aware-estimates contract: a t4 (class 1) observation
+        // must never update the v100 (class 0) estimate, and vice versa
+        let slots = vec![ModelSlot {
+            name: "m".to_string(),
+            d_in: 4,
+            max_batch: 16,
+        }];
+        let mut backend = sim();
+        let mut ex = ServeExecutor::new(&mut backend, slots);
+        ex.set_class_speeds(vec![1.0, 0.5]);
+        let prior_v100 = ex.estimate_group_on_class_us(0, 0, 4);
+        let prior_t4 = ex.estimate_group_on_class_us(0, 1, 4);
+        // unlearned estimates fall back to the backend prior scaled by the
+        // class's relative speed: the t4 prior is 2x the v100 prior
+        assert!((prior_t4 - prior_v100 * 2.0).abs() < 1e-9);
+        // a t4 observation lands in the t4 slot only
+        ex.observe_group(1, 0, 4, 9_999.0);
+        assert_eq!(
+            ex.estimate_group_on_class_us(0, 0, 4),
+            prior_v100,
+            "t4 observation must not touch the v100 estimate"
+        );
+        assert_eq!(ex.estimate_group_on_class_us(0, 1, 4), 9_999.0);
+        // and a v100 observation leaves the learned t4 estimate alone
+        ex.observe_group(0, 0, 4, 123.0);
+        assert_eq!(ex.estimate_group_on_class_us(0, 0, 4), 123.0);
+        assert_eq!(ex.estimate_group_on_class_us(0, 1, 4), 9_999.0);
+        // the group's primary class picks which estimate admission sees
+        assert_eq!(ex.estimate_group_us(0, 4), 123.0, "default class 0");
+        ex.set_group_class(0, 1);
+        assert_eq!(ex.estimate_group_us(0, 4), 9_999.0);
+    }
+
+    /// A fleet-saturating two-model workload: `hot` overloads one v100,
+    /// `cold` idles along — the rebalancer's bread and butter.
+    fn skewed_trace(per_tenant: usize) -> Trace {
+        let tenants = vec![
+            TenantSpec::new(0, "hot", 30_000, 2_000.0, ArrivalKind::Poisson),
+            TenantSpec::new(1, "hot", 30_000, 2_000.0, ArrivalKind::Poisson),
+            TenantSpec::new(2, "hot", 30_000, 2_000.0, ArrivalKind::Poisson),
+            TenantSpec::new(3, "cold", 30_000, 300.0, ArrivalKind::Poisson),
+        ];
+        Trace::generate(&tenants, per_tenant, 71)
+    }
+
+    fn heavy_sim() -> SimBackend {
+        // per-row cost high enough that 6000 hot rows/s overload a single
+        // v100-speed worker (batch-8 launch = 1800µs -> ~4400 rows/s)
+        SimBackend {
+            fixed_us: 200.0,
+            per_row_us: 200.0,
+            max_b: 8,
+            d_in: 4,
+        }
+    }
+
+    #[test]
+    fn replay_placed_replicates_hot_group_and_beats_static_placement() {
+        let trace = skewed_trace(400);
+        let offered = trace.requests.len() as u64;
+        let topo = DeviceTopology::from_names(&["v100".into(), "t4".into()]).unwrap();
+        let rb_cfg = RebalanceConfig {
+            window_us: 25_000.0,
+            ..RebalanceConfig::default()
+        };
+        // dynamic: rebalancer enabled
+        let mut dynamic = Server::new(heavy_sim(), BatchPolicy::coalescing());
+        let (dyn_report, table) = dynamic.replay_placed(&trace, &topo, Some(rb_cfg));
+        // static: the same initial placement, pinned for the whole run
+        let mut pinned = Server::new(heavy_sim(), BatchPolicy::coalescing());
+        let (static_report, _) = pinned.replay_placed(&trace, &topo, None);
+
+        // groups are sorted by model name: cold = 0, hot = 1
+        assert!(
+            dyn_report.metrics.replications >= 1,
+            "the hot group must replicate: {:?}",
+            dyn_report.metrics
+        );
+        assert!(
+            table.replicas_of(1).len() >= 2,
+            "hot group on both devices: {:?}",
+            table.replicas_of(1)
+        );
+        // both devices pull hot load after replication
+        assert_eq!(dyn_report.metrics.devices.len(), 2);
+        assert!(dyn_report.metrics.devices[0].busy_us > 0.0);
+        assert!(dyn_report.metrics.devices[1].busy_us > 0.0);
+        // conservation in both runs
+        for r in [&dyn_report, &static_report] {
+            let drops: u64 = r.metrics.tenants.values().map(|t| t.dropped).sum();
+            assert_eq!(r.metrics.total_completed() + drops, offered);
+        }
+        // the acceptance bar: replication buys aggregate throughput at no
+        // worse SLO attainment than the pinned placement
+        assert!(
+            dyn_report.metrics.throughput() > static_report.metrics.throughput(),
+            "dynamic {:.0}/s must beat static {:.0}/s",
+            dyn_report.metrics.throughput(),
+            static_report.metrics.throughput()
+        );
+        assert!(
+            dyn_report.metrics.overall_attainment()
+                >= static_report.metrics.overall_attainment(),
+            "attainment may not regress: {:.3} vs {:.3}",
+            dyn_report.metrics.overall_attainment(),
+            static_report.metrics.overall_attainment()
+        );
+    }
+
+    #[test]
+    fn slow_replica_launches_are_not_false_evictions() {
+        // v100 + k80: the speed ratio (~4x) exceeds the 3x eviction
+        // factor, so once the hot group replicates onto the k80 its
+        // k80-routed launches run ~4x the primary-class estimate. The
+        // launch estimate is re-priced on the routed class at issue — a
+        // slow replica running at its own speed is not a straggler.
+        let tenants = vec![
+            TenantSpec::new(0, "hot", 30_000, 2_000.0, ArrivalKind::Poisson),
+            TenantSpec::new(1, "hot", 30_000, 2_000.0, ArrivalKind::Poisson),
+            TenantSpec::new(2, "hot", 30_000, 2_000.0, ArrivalKind::Poisson),
+            TenantSpec::new(3, "cold", 30_000, 150.0, ArrivalKind::Poisson),
+        ];
+        let trace = Trace::generate(&tenants, 300, 29);
+        let topo = DeviceTopology::from_names(&["v100".into(), "k80".into()]).unwrap();
+        let mut s = Server::new(heavy_sim(), BatchPolicy::coalescing());
+        let (r, table) = s.replay_placed(
+            &trace,
+            &topo,
+            Some(RebalanceConfig {
+                window_us: 25_000.0,
+                ..RebalanceConfig::default()
+            }),
+        );
+        assert!(
+            r.metrics.replications >= 1,
+            "hot group must replicate onto the k80"
+        );
+        assert!(table.replicas_of(1).len() >= 2);
+        assert_eq!(
+            r.metrics.jit.evictions, 0,
+            "slow-replica launches must not count as stragglers"
+        );
+    }
+
+    #[test]
+    fn replay_placed_single_worker_conserves_and_reports_devices() {
+        let trace = Trace::generate(&tenants(4, 150.0, 100_000), 30, 19);
+        let topo = DeviceTopology::from_names(&["v100".into()]).unwrap();
+        let mut s = Server::new(sim(), BatchPolicy::coalescing());
+        let (r, table) = s.replay_placed(&trace, &topo, None);
+        let drops: u64 = r.metrics.tenants.values().map(|t| t.dropped).sum();
+        assert_eq!(r.metrics.total_completed() + drops, 120);
+        assert_eq!(r.metrics.devices.len(), 1);
+        assert_eq!(r.metrics.devices[0].name, "v100");
+        assert!(r.metrics.devices[0].launches > 0);
+        assert!(table.is_total(1, 1), "single group on the single worker");
+        assert!(r.render().contains("device 0 (v100)"));
+    }
+
+    #[test]
+    fn replay_placed_is_deterministic() {
+        let trace = skewed_trace(120);
+        let topo = DeviceTopology::from_names(&["v100".into(), "t4".into()]).unwrap();
+        let run = || {
+            let mut s = Server::new(heavy_sim(), BatchPolicy::coalescing());
+            let (r, _) = s.replay_placed(
+                &trace,
+                &topo,
+                Some(RebalanceConfig {
+                    window_us: 25_000.0,
+                    ..RebalanceConfig::default()
+                }),
+            );
+            r
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.metrics.total_completed(), b.metrics.total_completed());
+        assert_eq!(a.metrics.batches, b.metrics.batches);
+        assert_eq!(a.metrics.span_us.to_bits(), b.metrics.span_us.to_bits());
+        assert_eq!(a.metrics.replications, b.metrics.replications);
+        assert_eq!(a.metrics.migrations, b.metrics.migrations);
+        for (da, db) in a.metrics.devices.iter().zip(b.metrics.devices.iter()) {
+            assert_eq!(da.launches, db.launches);
+            assert_eq!(da.busy_us.to_bits(), db.busy_us.to_bits());
+        }
+    }
+
+    #[test]
+    fn admission_divides_drain_across_replicas() {
+        // 4 queued singletons at NoBatching drain in 5 launches = 2750µs
+        // on one worker; on two replicas the same queue is priced at half,
+        // so a 1500µs deadline that a single worker must shed is admitted
+        let slots = vec![ModelSlot {
+            name: "m".to_string(),
+            d_in: 4,
+            max_batch: 16,
+        }];
+        let mut backend = sim();
+        let cfg = BatchPolicy::NoBatching.jit_config(&slots, 64);
+        let mut jit: JitCompiler<ServeExecutor<&mut SimBackend>, Vec<f32>> =
+            JitCompiler::with_payloads(
+                cfg,
+                ServeExecutor::new(&mut backend, slots.clone()),
+            );
+        let admission = Admission::default();
+        let mut metrics = ServeMetrics::default();
+        let mut streams: BTreeMap<(u32, u64), u32> = BTreeMap::new();
+        for t in 0..4 {
+            Server::<SimBackend>::admit_request(
+                &mut jit,
+                &mut streams,
+                &admission,
+                &mut metrics,
+                &slots,
+                AdmitReq {
+                    group: 0,
+                    tenant: t,
+                    arrival_us: 0.0,
+                    deadline_us: 1e9,
+                    independent: true,
+                    parallelism: 1.0,
+                    device_backlog_us: None,
+                    row: vec![0.0; 4],
+                },
+            );
+        }
+        assert_eq!(jit.window.pending_in_group(0), 4);
+        // two replicas: drain 2750/2 = 1375µs < 1500µs deadline -> admit
+        Server::<SimBackend>::admit_request(
+            &mut jit,
+            &mut streams,
+            &admission,
+            &mut metrics,
+            &slots,
+            AdmitReq {
+                group: 0,
+                tenant: 9,
+                arrival_us: 0.0,
+                deadline_us: 1_500.0,
+                independent: true,
+                parallelism: 2.0,
+                device_backlog_us: None,
+                row: vec![0.0; 4],
+            },
+        );
+        let drops: u64 = metrics.tenants.values().map(|t| t.dropped).sum();
+        assert_eq!(drops, 0, "two-replica drain fits the deadline");
+        assert_eq!(jit.window.pending_in_group(0), 5);
+        // heterogeneous replicas are speed-weighted, not counted: a v100
+        // primary plus a k80 replica is ~1.25 workers — the queue of 6
+        // drains in 6·550/1.25 = 2640µs, so the same 1500µs deadline that
+        // two FULL replicas could serve must be shed
+        Server::<SimBackend>::admit_request(
+            &mut jit,
+            &mut streams,
+            &admission,
+            &mut metrics,
+            &slots,
+            AdmitReq {
+                group: 0,
+                tenant: 10,
+                arrival_us: 0.0,
+                deadline_us: 1_500.0,
+                independent: true,
+                parallelism: 1.25,
+                device_backlog_us: None,
+                row: vec![0.0; 4],
+            },
+        );
+        let drops: u64 = metrics.tenants.values().map(|t| t.dropped).sum();
+        assert_eq!(drops, 1, "slow replica must not count as a full worker");
         assert_eq!(jit.window.pending_in_group(0), 5);
     }
 

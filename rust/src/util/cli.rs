@@ -191,6 +191,22 @@ impl Parsed {
             v.split(',').map(|s| s.trim().to_string()).collect()
         }
     }
+
+    /// Comma-separated list flag that must hold at least one non-empty
+    /// item (`--devices ,,` or `--devices ""` is a config error, not an
+    /// empty fleet).
+    pub fn get_nonempty_list(&self, name: &str) -> Result<Vec<String>> {
+        let items: Vec<String> = self
+            .get_list(name)
+            .into_iter()
+            .filter(|s| !s.is_empty())
+            .collect();
+        if items.is_empty() {
+            Err(Error::config(format!("--{name} needs at least one item")))
+        } else {
+            Ok(items)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -239,6 +255,16 @@ mod tests {
             .parse_from(vec!["--models=a, b,c".into()])
             .unwrap();
         assert_eq!(p.get_list("models"), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn nonempty_list_rejects_blank() {
+        let p = args().parse_from(vec!["--models=a,,b".into()]).unwrap();
+        assert_eq!(p.get_nonempty_list("models").unwrap(), vec!["a", "b"]);
+        let empty = args().parse_from(vec![]).unwrap();
+        assert!(empty.get_nonempty_list("models").is_err());
+        let blank = args().parse_from(vec!["--models=,".into()]).unwrap();
+        assert!(blank.get_nonempty_list("models").is_err());
     }
 
     #[test]

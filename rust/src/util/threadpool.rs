@@ -141,6 +141,9 @@ pub struct StatefulPool<S> {
     txs: Vec<mpsc::Sender<StateJob<S>>>,
     workers: Vec<JoinHandle<()>>,
     in_flight: Arc<AtomicUsize>,
+    /// Per-worker submitted-but-unfinished counts — the placement layer's
+    /// load signal for least-loaded replica routing.
+    per_worker: Vec<Arc<AtomicUsize>>,
 }
 
 impl<S: 'static> StatefulPool<S> {
@@ -154,10 +157,13 @@ impl<S: 'static> StatefulPool<S> {
         let init = Arc::new(init);
         let in_flight = Arc::new(AtomicUsize::new(0));
         let mut txs = Vec::with_capacity(n);
+        let mut per_worker = Vec::with_capacity(n);
         let workers = (0..n)
             .map(|i| {
                 let (tx, rx) = mpsc::channel::<StateJob<S>>();
                 txs.push(tx);
+                let mine = Arc::new(AtomicUsize::new(0));
+                per_worker.push(Arc::clone(&mine));
                 let init = Arc::clone(&init);
                 let inflight = Arc::clone(&in_flight);
                 std::thread::Builder::new()
@@ -166,6 +172,7 @@ impl<S: 'static> StatefulPool<S> {
                         let mut state = init(i);
                         while let Ok(job) = rx.recv() {
                             job(&mut state);
+                            mine.fetch_sub(1, Ordering::Release);
                             inflight.fetch_sub(1, Ordering::Release);
                         }
                     })
@@ -176,6 +183,7 @@ impl<S: 'static> StatefulPool<S> {
             txs,
             workers,
             in_flight,
+            per_worker,
         }
     }
 
@@ -191,12 +199,19 @@ impl<S: 'static> StatefulPool<S> {
     {
         self.in_flight.fetch_add(1, Ordering::Acquire);
         let w = worker % self.txs.len();
+        self.per_worker[w].fetch_add(1, Ordering::Acquire);
         self.txs[w].send(Box::new(f)).expect("worker alive");
     }
 
     /// Jobs submitted but not yet finished.
     pub fn in_flight(&self) -> usize {
         self.in_flight.load(Ordering::Acquire)
+    }
+
+    /// Jobs submitted to one worker but not yet finished (queued +
+    /// running) — the launch stage's per-device load signal.
+    pub fn in_flight_of(&self, worker: usize) -> usize {
+        self.per_worker[worker % self.per_worker.len()].load(Ordering::Acquire)
     }
 
     /// Busy-wait (with yield) until all submitted jobs finish.
@@ -297,6 +312,27 @@ mod tests {
         pool.submit_to(0, move |s: &mut Vec<u64>| tx.send(s.clone()).unwrap());
         pool.wait_idle();
         assert_eq!(rx.recv().unwrap(), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn stateful_pool_tracks_per_worker_load() {
+        let pool = StatefulPool::new(2, |_| ());
+        let gate = Arc::new(Mutex::new(()));
+        let held = gate.lock().unwrap();
+        for _ in 0..3 {
+            let g = Arc::clone(&gate);
+            pool.submit_to(1, move |_| {
+                let _ = g.lock().unwrap();
+            });
+        }
+        // worker 1 holds 3 jobs (1 blocked on the gate + 2 queued), worker
+        // 0 none — the routing signal the placement table consumes
+        assert_eq!(pool.in_flight_of(1), 3);
+        assert_eq!(pool.in_flight_of(0), 0);
+        assert_eq!(pool.in_flight(), 3);
+        drop(held);
+        pool.wait_idle();
+        assert_eq!(pool.in_flight_of(1), 0);
     }
 
     #[test]

@@ -7,8 +7,10 @@ use vliw_jit::compiler::ir::{DispatchRequest, OpId, StreamId, TensorOp};
 use vliw_jit::compiler::jit::{JitCompiler, JitConfig, SimExecutor};
 use vliw_jit::compiler::window::{OpState, Window};
 use vliw_jit::gpu::cost::CostModel;
+use vliw_jit::gpu::device::DeviceSpec;
 use vliw_jit::gpu::kernel::{KernelDesc, LaunchConfig};
 use vliw_jit::gpu::timeline::{SharingModel, SharingSim, SimKernel};
+use vliw_jit::placement::{DeviceTopology, Placer, RebalanceConfig, Rebalancer};
 use vliw_jit::util::rng::Rng;
 
 fn rand_kernel(rng: &mut Rng) -> KernelDesc {
@@ -235,8 +237,110 @@ fn prop_window_independent_ready_prefix_is_safe() {
 }
 
 // ---------------------------------------------------------------------------
-// JIT end-to-end properties (simulator executor)
+// Placement properties
 // ---------------------------------------------------------------------------
+
+fn rand_topology(rng: &mut Rng) -> DeviceTopology {
+    let pool = [
+        DeviceSpec::v100(),
+        DeviceSpec::t4(),
+        DeviceSpec::k80(),
+        DeviceSpec::tpuv2(),
+    ];
+    let n = 1 + rng.below(4) as usize;
+    let specs: Vec<DeviceSpec> = (0..n)
+        .map(|_| pool[rng.below(pool.len() as u64) as usize].clone())
+        .collect();
+    DeviceTopology::new(specs)
+}
+
+#[test]
+fn prop_placement_table_is_total() {
+    // every group maps to >= 1 live device straight out of the placer,
+    // for random topologies and random cost profiles
+    let mut rng = Rng::new(0x91ACE);
+    for case in 0..150 {
+        let topo = rand_topology(&mut rng);
+        let ng = 1 + rng.below(16);
+        let costs: Vec<(u64, f64)> = (0..ng)
+            .map(|g| (g, rng.f64() * 2_000.0))
+            .collect();
+        let table = Placer::place(&costs, &topo);
+        assert!(
+            table.is_total(ng, topo.len()),
+            "case {case}: non-total placement for {ng} groups on {} workers",
+            topo.len()
+        );
+        // routing always lands on a live worker, replica or not
+        let load = vec![0.0; topo.len()];
+        for g in 0..ng + 3 {
+            assert!(table.route(g, &load) < topo.len(), "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_rebalance_converges_without_thrashing() {
+    // a stationary skewed load (one hot group, the rest cold) where each
+    // window's observations follow the *current* table: rebalancing must
+    // (a) keep the table total, (b) never exceed the per-window move
+    // budget, and (c) quiesce — cumulative moves bounded well below one
+    // per window — rather than oscillate groups between devices
+    let mut rng = Rng::new(0xBA1A9CE);
+    for case in 0..60 {
+        let topo = rand_topology(&mut rng);
+        let nw = topo.len();
+        let ng = 1 + rng.below(10);
+        let costs: Vec<(u64, f64)> = (0..ng)
+            .map(|g| (g, 100.0 + rng.f64() * 1_000.0))
+            .collect();
+        let mut table = Placer::place(&costs, &topo);
+        let cfg = RebalanceConfig::default();
+        let window_us = cfg.window_us;
+        let max_moves = cfg.max_moves_per_window as usize;
+        let mut rb = Rebalancer::new(cfg, nw);
+        let hot = rng.below(ng);
+        let mut now = 0.0;
+        let mut total_moves = 0usize;
+        let windows = 40usize;
+        for w in 0..windows {
+            // synthesize a window of launches consistent with the table:
+            // the hot group saturates its replicas, cold groups trickle
+            for g in 0..ng {
+                let reps = table.replicas_of(g).to_vec();
+                assert!(!reps.is_empty(), "case {case} window {w}: totality");
+                let busy = if g == hot {
+                    0.9 * window_us
+                } else {
+                    0.04 * window_us
+                };
+                for r in &reps {
+                    rb.observe_launch(g, *r, busy / reps.len() as f64);
+                }
+            }
+            now += window_us;
+            let actions = rb.maybe_rebalance(now, &mut table, &topo);
+            assert!(
+                actions.len() <= max_moves,
+                "case {case} window {w}: {} moves > budget {max_moves}",
+                actions.len()
+            );
+            total_moves += actions.len();
+            assert!(
+                table.is_total(ng, nw),
+                "case {case} window {w}: rebalance broke totality"
+            );
+        }
+        // replication is bounded by (groups x workers) and migration by
+        // the strict-improvement rule; a thrashing rebalancer would move
+        // every window and blow straight through this bound
+        let bound = (ng as usize * nw + nw).min(windows / 2);
+        assert!(
+            total_moves <= bound,
+            "case {case}: {total_moves} moves over {windows} windows (bound {bound}) — thrashing"
+        );
+    }
+}
 
 #[test]
 fn prop_jit_conserves_ops_and_meets_generous_slos() {
