@@ -131,6 +131,23 @@ impl Window {
             .unwrap_or(0)
     }
 
+    /// Pending depth of every stream holding un-issued ops in `group` —
+    /// the admission snapshot's dependent-mode pricing input (the
+    /// per-stream companion to [`Window::max_stream_depth_in_group`],
+    /// whose value is this list's max). O(pending ops) per call, same as
+    /// the max variant; called per snapshot publication on the frontend
+    /// path and per admission on the synchronous one (which previously
+    /// paid the same two O(pending) scans inline).
+    pub fn stream_depths_in_group(&self, group: u64) -> Vec<(StreamId, usize)> {
+        self.streams
+            .iter()
+            .filter_map(|(s, q)| {
+                let d = q.iter().filter(|id| self.ops[*id].0.group == group).count();
+                (d > 0).then_some((*s, d))
+            })
+            .collect()
+    }
+
     /// Streams with live bookkeeping (pending queue, seq counter, or
     /// in-flight counter). Bounded by the set of streams with work in the
     /// window — the regression surface for the tenant-churn leak fix.
@@ -418,6 +435,26 @@ mod tests {
         // different stream: immediately ready despite stream 0's pending op
         assert_eq!(w.state(b), Some(OpState::Ready));
         assert_eq!(w.ready_count(), 2);
+    }
+
+    #[test]
+    fn stream_depths_in_group_counts_pending_only() {
+        let mut w = Window::new(16);
+        let g = |stream: u32| req(stream).with_group(7);
+        let a = w.submit(g(0), 0.0).unwrap();
+        let _b = w.submit(g(0).with_independent(true), 0.0).unwrap();
+        let _c = w.submit(g(1), 0.0).unwrap();
+        let mut d = w.stream_depths_in_group(7);
+        d.sort();
+        assert_eq!(d, vec![(StreamId(0), 2), (StreamId(1), 1)]);
+        assert!(w.stream_depths_in_group(99).is_empty());
+        // issue removes the op from its stream's pending run
+        w.issue(&[a]);
+        let mut d = w.stream_depths_in_group(7);
+        d.sort();
+        assert_eq!(d, vec![(StreamId(0), 1), (StreamId(1), 1)]);
+        // consistency with the max variant
+        assert_eq!(w.max_stream_depth_in_group(7), 1);
     }
 
     #[test]

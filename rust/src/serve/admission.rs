@@ -14,7 +14,7 @@ pub enum Admit {
 /// Bounded-queue admission controller.
 #[derive(Debug, Clone)]
 pub struct Admission {
-    /// Max queued requests per model.
+    /// Max outstanding requests per model (queued + in flight).
     pub max_queue: usize,
 }
 
@@ -30,17 +30,31 @@ impl Admission {
         Admission { max_queue }
     }
 
-    /// Decide for a queue currently holding `depth` requests. A request
-    /// that would still meet its deadline after the estimated queue drain
-    /// (`drain_us`) is accepted while there is room; hopeless requests
-    /// (deadline already unreachable) are rejected eagerly so they don't
-    /// burn device time (§5.2 reprioritization).
-    pub fn decide(&self, depth: usize, slack_after_drain_us: f64) -> Admit {
-        if depth >= self.max_queue {
+    /// Decide for a group currently holding `queued` un-issued requests
+    /// and `inflight` issued-but-unfinished ones. The two are separate
+    /// inputs because they back two different contracts:
+    ///
+    /// * **Backpressure bound**: total outstanding work (`queued +
+    ///   inflight`) is capped at `max_queue` — launches on the device
+    ///   still owe service time, so ignoring them would let the window
+    ///   absorb unbounded doomed work under the concurrent launch stage.
+    /// * **Doomed-shed escape hatch**: a request whose deadline is
+    ///   already unreachable (`slack_after_drain_us < 0`) is shed eagerly
+    ///   *only when real work is queued behind the gate* (§5.2
+    ///   reprioritization — a doomed request has the earliest deadline,
+    ///   so EDF would run it first and delay every queued request). With
+    ///   an empty queue there is nothing for it to delay: in-flight
+    ///   launches are already on the device and cannot be displaced, so
+    ///   the doomed request still runs and the client gets a late answer
+    ///   rather than none. (Folding `inflight` into the old single
+    ///   `depth` argument silently disabled this hatch whenever any
+    ///   launch was in flight.)
+    pub fn decide(&self, queued: usize, inflight: usize, slack_after_drain_us: f64) -> Admit {
+        if queued + inflight >= self.max_queue {
             return Admit::Reject;
         }
-        if slack_after_drain_us < 0.0 && depth > 0 {
-            // already doomed and there is real work queued: shed it
+        if slack_after_drain_us < 0.0 && queued > 0 {
+            // already doomed and there is real queued work to protect
             return Admit::Reject;
         }
         Admit::Accept
@@ -54,22 +68,29 @@ mod tests {
     #[test]
     fn accepts_with_room_and_slack() {
         let a = Admission::new(4);
-        assert_eq!(a.decide(0, 10_000.0), Admit::Accept);
-        assert_eq!(a.decide(3, 0.0), Admit::Accept);
+        assert_eq!(a.decide(0, 0, 10_000.0), Admit::Accept);
+        assert_eq!(a.decide(3, 0, 0.0), Admit::Accept);
     }
 
     #[test]
     fn rejects_when_full() {
         let a = Admission::new(4);
-        assert_eq!(a.decide(4, 1e9), Admit::Reject);
+        assert_eq!(a.decide(4, 0, 1e9), Admit::Reject);
+        // the outstanding bound counts in-flight launches too: work on
+        // the device still owes service time
+        assert_eq!(a.decide(2, 2, 1e9), Admit::Reject);
+        assert_eq!(a.decide(0, 4, 1e9), Admit::Reject);
     }
 
     #[test]
     fn sheds_doomed_requests_under_load() {
         let a = Admission::new(4);
-        assert_eq!(a.decide(2, -1.0), Admit::Reject);
+        assert_eq!(a.decide(2, 0, -1.0), Admit::Reject);
         // but a doomed request into an empty queue still runs (nothing to
         // protect; client gets a late answer rather than none)
-        assert_eq!(a.decide(0, -1.0), Admit::Accept);
+        assert_eq!(a.decide(0, 0, -1.0), Admit::Accept);
+        // ... and in-flight launches don't close the hatch: they are
+        // already on the device, a doomed newcomer cannot delay them
+        assert_eq!(a.decide(0, 3, -1.0), Admit::Accept);
     }
 }

@@ -1,0 +1,617 @@
+//! The admission frontend stage: tenant connections never wait on the
+//! scheduler loop.
+//!
+//! The paper's late-binding story only holds if *admission* is late-bound
+//! too: a tenant's accept/reject must not stall behind a full
+//! issue/launch/collect iteration of the scheduler thread (the
+//! early-binding head-of-line coupling §3 argues against). This module
+//! splits admission into its own pipeline stage:
+//!
+//! ```text
+//!  generator ──Incoming──▶ frontend thread ──Admitted──▶ scheduler loop
+//!  (clients)               (owns the gate)               (owns the JIT)
+//!                              ▲                             │
+//!                              └──── AdmissionView ◀─────────┘
+//!                                    (published snapshot)
+//! ```
+//!
+//! **Threading model / queue ownership.**
+//!
+//! * The *generator* (client side) owns nothing: it sends `Incoming`
+//!   requests into the intake MPSC channel and never blocks on serving
+//!   state.
+//! * The *frontend thread* owns the intake receiver, the admission gate
+//!   ([`FrontendGate`]: the bounded-queue policy plus the cumulative
+//!   accept counters), and the (tenant, model) → stream interning table.
+//!   It prices every request against the latest published
+//!   [`AdmissionView`] — never against live scheduler state — so a
+//!   decision costs a snapshot load plus arithmetic, bounded regardless
+//!   of what the scheduler thread is doing. Accepted requests flow to the
+//!   scheduler as pre-priced `Admitted` records; rejects turn around to
+//!   the client without ever touching the scheduler thread.
+//! * The *scheduler thread* owns the JIT (window, clock, launch stage)
+//!   and the accepted-requests receiver. Once per loop iteration — after
+//!   draining accepted requests, issuing launches, and folding in
+//!   completions — it publishes a fresh `AdmissionView` through the
+//!   shared [`ViewCell`]. Publication order (snapshot built *after* the
+//!   iteration's submits and completions, `seq` monotonically increasing)
+//!   means a view can only ever lag reality, never lead it.
+//!
+//! **Staleness is safe by construction.** Between publications the
+//! frontend keeps accepting against an old snapshot, so it tracks its own
+//! cumulative accept counts per group and per stream; the scheduler
+//! publishes how many of those it has drained into the window. The
+//! difference — requests still in the accepted channel — is added to the
+//! snapshot's queue depth before every decision, so the gate can never
+//! admit more outstanding work than `max_queue` no matter how stale the
+//! view is (pinned by `prop_stale_view_never_over_admits`). Estimate
+//! staleness errs the same way: the in-flight drain term was computed at
+//! publish time, before some execution elapsed, so a stale view
+//! *over*-prices the drain and sheds extra rather than over-admitting.
+//!
+//! **One frontend thread, not a pool.** Per-stream program order is the
+//! order requests enter the window, which is the order the frontend
+//! forwards them. A pool would need to shard the intake by stream hash to
+//! preserve that; today's single thread decides in well under a
+//! microsecond, so sharding is deferred until admission itself measures
+//! hot (`ServeMetrics::admission_latency` is the histogram to watch).
+//!
+//! **Bookkeeping bound.** The gate's interning table and cumulative
+//! counters (and the scheduler's mirrored drain counters, copied into
+//! each snapshot) grow with the number of *distinct (tenant, model)
+//! pairs ever served* in a run — unlike the window, whose per-stream
+//! state drops on drain. That is fine for trace-driven runs (streams ≈
+//! tenants × models); a long-lived server with unbounded tenant churn
+//! needs epoch-based counter compaction, recorded alongside frontend
+//! sharding as the next scale step in ROADMAP.md.
+//!
+//! **Why the `replay*` modes keep the synchronous gate.** The virtual-time
+//! replays are deterministic: the clock only advances when the driver says
+//! so, and admission happens at exact virtual arrival instants. A
+//! wall-clock frontend thread would race the virtual clock and destroy
+//! replay determinism (the property `replay_is_deterministic_*` pins), so
+//! those drivers price requests through the *same* [`GroupView`] pricing
+//! path, just built synchronously from live state — the two gates cannot
+//! disagree on identical state (pinned by
+//! `prop_admission_view_matches_sync_gate`).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::compiler::ir::StreamId;
+use crate::compiler::jit::JitCompiler;
+use crate::serve::admission::{Admission, Admit};
+use crate::serve::server::{ModelBackend, ServeExecutor};
+use crate::util::stats::LatencyHist;
+
+/// A decision made on a snapshot older than this counts as stale
+/// (`ServeMetrics::stale_decisions`). The scheduler publishes at least
+/// once per ~500µs drain tick when healthy, so staleness past 2ms means
+/// the scheduler thread is wedged mid-iteration — exactly the condition
+/// the frontend exists to ride out.
+pub const STALE_VIEW_US: f64 = 2_000.0;
+
+/// One request at the frontend gate: the pricing inputs that vary per
+/// request (bundled so call sites cannot transpose adjacent scalars).
+#[derive(Debug, Clone, Copy)]
+pub struct GateRequest {
+    /// Interned (tenant, model) stream.
+    pub stream: StreamId,
+    /// Independence of the stream's earlier requests (stateless serving).
+    pub independent: bool,
+    /// Absolute deadline, µs.
+    pub deadline_us: f64,
+}
+
+/// The frontend's accepted-but-not-yet-drained corrections folded into a
+/// (possibly stale) view at decision time. All zero for the synchronous
+/// gate, which always prices live state.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GateExtras {
+    /// Group-level in-channel request count (accepted − drained).
+    pub queued: u32,
+    /// The requester's own stream's in-channel count.
+    pub own: u32,
+    /// Dependent-mode launch floor: max over the group's streams of
+    /// (view depth + that stream's in-channel count). Without this, a
+    /// burst accepted on *another* stream between publishes would be
+    /// invisible to the launch-count bound and a stale view could
+    /// under-price the drain — admitting what the sync gate sheds.
+    pub max_depth: u32,
+}
+
+/// One group's admission-relevant state inside a published snapshot.
+///
+/// Also the synchronous gate's pricing structure: `Server::admit_request`
+/// builds one of these from live JIT state and calls the same
+/// [`GroupView::decide`], so the frontend and the synchronous path share
+/// one pricing implementation by construction.
+#[derive(Debug, Clone, Default)]
+pub struct GroupView {
+    /// Un-issued ops of the group in the window.
+    pub pending: usize,
+    /// Issued-but-unfinished ops of the group.
+    pub inflight: usize,
+    /// Per-launch pack-size cap (how many queued ops one launch drains).
+    pub pack_cap: u32,
+    /// `est_by_n[k]`: estimated service time of a (k+1)-op launch, µs,
+    /// for k in `0..pack_cap` — the shared estimator sampled at publish.
+    pub est_by_n: Vec<f64>,
+    /// Undivided in-flight drain term at publish
+    /// ([`JitCompiler::inflight_group_est_us`]): summed per-launch
+    /// estimates with execution already elapsed subtracted from the
+    /// launches actually executing.
+    pub inflight_est_us: f64,
+    /// Speed-weighted replica parallelism of the group's serving workers
+    /// (1.0 for single-device drive modes) — the drain estimate's divisor.
+    pub parallelism: f64,
+    /// Measured backlog of the group's least-loaded serving worker, µs;
+    /// replaces the in-flight term when device queues are observable.
+    pub device_backlog_us: Option<f64>,
+    /// Pending depth per stream with ops in this group (dependent-mode
+    /// pricing: the max entry bounds the launch count, the requester's
+    /// own entry extends it).
+    pub stream_depths: Vec<(StreamId, usize)>,
+}
+
+impl GroupView {
+    fn est_at(&self, n: u32) -> f64 {
+        if self.est_by_n.is_empty() {
+            return 0.0;
+        }
+        let i = (n.max(1) as usize - 1).min(self.est_by_n.len() - 1);
+        self.est_by_n[i]
+    }
+
+    fn stream_depth(&self, stream: StreamId) -> usize {
+        self.stream_depths
+            .iter()
+            .find(|(s, _)| *s == stream)
+            .map(|(_, d)| *d)
+            .unwrap_or(0)
+    }
+
+    /// Estimated drain ahead of one more request, µs. Covers both the
+    /// un-issued queue and the group's in-flight launches, priced *per
+    /// launch*: independent streams drain in ceil(queued / pack_cap)
+    /// cap-wide launches; dependent streams expose one op per stream per
+    /// launch, so the longest pending stream bounds the launch count
+    /// (cross-stream coalescing still fills each launch). The whole drain
+    /// is divided by the group's speed-weighted replica parallelism; the
+    /// measured device backlog, when known, replaces the in-flight term.
+    /// `extras` carries the frontend's accepted-but-not-yet-drained
+    /// corrections (all zero for the synchronous gate).
+    pub fn drain_est_us(
+        &self,
+        stream: StreamId,
+        independent: bool,
+        extras: GateExtras,
+    ) -> f64 {
+        let cap = self.pack_cap.max(1);
+        let queued = self.pending as u32 + extras.queued + 1;
+        let mut est = if independent {
+            // cap-wide packs: full launches at the cap plus a remainder
+            let full = queued / cap;
+            let rem = queued % cap;
+            f64::from(full) * self.est_at(cap)
+                + if rem > 0 { self.est_at(rem) } else { 0.0 }
+        } else {
+            // program order binds: each launch takes at most one op per
+            // stream, so the longest pending stream — counting this
+            // request on its own stream — sets the launch count, while
+            // cross-stream coalescing still packs each launch up to `cap`
+            // wide across streams
+            let own = self.stream_depth(stream) as u32 + extras.own + 1;
+            let max_depth = self
+                .stream_depths
+                .iter()
+                .map(|(_, d)| *d as u32)
+                .max()
+                .unwrap_or(0)
+                .max(extras.max_depth);
+            let launches = max_depth.max(own).max(queued.div_ceil(cap));
+            let per_launch = queued.div_ceil(launches).min(cap).max(1);
+            f64::from(launches) * self.est_at(per_launch)
+        };
+        // replicated groups drain their queue on several workers at once
+        let parallelism = self.parallelism.max(1.0);
+        est /= parallelism;
+        est += match self.device_backlog_us {
+            // device timelines known: the least-loaded replica's queued
+            // work is the true wait (already per-worker, not divided)
+            Some(backlog) => backlog,
+            None => self.inflight_est_us / parallelism,
+        };
+        est
+    }
+
+    /// The gate decision on this state — the ONE implementation behind
+    /// both the synchronous gate and the frontend stage.
+    pub fn decide(
+        &self,
+        admission: &Admission,
+        req: &GateRequest,
+        extras: GateExtras,
+        now_us: f64,
+    ) -> Admit {
+        let est = self.drain_est_us(req.stream, req.independent, extras);
+        let slack = req.deadline_us - now_us - est;
+        admission.decide(self.pending + extras.queued as usize, self.inflight, slack)
+    }
+}
+
+/// Build one group's snapshot from live scheduler state. Used both to
+/// publish [`AdmissionView`]s (frontend path, `with_depths = true`) and,
+/// per request, by the synchronous gate — so the two paths price through
+/// identical inputs. Synchronous *independent-mode* callers pass
+/// `with_depths = false` to skip the per-stream window scan their
+/// pricing never reads; the estimate table is memoized per padded
+/// variant either way ([`ServeExecutor::estimate_group_table_us`]).
+pub fn snapshot_group<B: ModelBackend>(
+    jit: &JitCompiler<ServeExecutor<B>, Vec<f32>>,
+    group: u64,
+    parallelism: f64,
+    device_backlog_us: Option<f64>,
+    with_depths: bool,
+) -> GroupView {
+    let cap = jit.pack_cap(group).max(1) as u32;
+    GroupView {
+        pending: jit.window.pending_in_group(group),
+        inflight: jit.window.inflight_in_group(group),
+        pack_cap: cap,
+        est_by_n: jit.executor().estimate_group_table_us(group, cap),
+        inflight_est_us: jit
+            .inflight_group_est_us(group, parallelism.max(1.0).round() as u32),
+        parallelism,
+        device_backlog_us,
+        stream_depths: if with_depths {
+            jit.window.stream_depths_in_group(group)
+        } else {
+            Vec::new()
+        },
+    }
+}
+
+/// The scheduler-state snapshot the frontend prices against, published
+/// atomically once per scheduler iteration.
+#[derive(Debug, Clone)]
+pub struct AdmissionView {
+    /// Monotonic publication number.
+    pub seq: u64,
+    /// Scheduler clock at publish, µs — diagnostic only: the wall-clock
+    /// frontend prices with its own clock (`t0.elapsed()`), which can
+    /// only be *ahead* of this, so estimates err toward shedding.
+    pub now_us: f64,
+    /// Wall time of publication (staleness accounting).
+    pub published: Instant,
+    /// Per-group state, indexed by group id.
+    pub groups: Vec<GroupView>,
+    /// Cumulative accepted requests the scheduler has drained into the
+    /// window, per group. The frontend subtracts this from its own
+    /// cumulative accept count to price requests still in flight between
+    /// the two threads.
+    pub drained: Vec<u64>,
+    /// The same cumulative drain count per stream id (dependent-mode
+    /// own-stream pricing).
+    pub drained_by_stream: Vec<u64>,
+}
+
+/// Single-writer, multi-reader publication cell for [`AdmissionView`]s.
+///
+/// `Mutex<Arc<_>>` rather than a bespoke lock-free cell on purpose: the
+/// critical section on either side is one pointer clone/swap — no
+/// allocation, no I/O, no waiting on scheduler work — so the frontend can
+/// never block behind a scheduler iteration, which is the property the
+/// whole stage exists for. The scheduler allocates the new snapshot
+/// *outside* the lock and only swaps the `Arc` inside it.
+pub struct ViewCell {
+    view: Mutex<Arc<AdmissionView>>,
+}
+
+impl ViewCell {
+    /// New cell holding an initial snapshot.
+    pub fn new(initial: AdmissionView) -> Arc<Self> {
+        Arc::new(ViewCell {
+            view: Mutex::new(Arc::new(initial)),
+        })
+    }
+
+    /// Swap in a fresh snapshot (scheduler thread, once per iteration).
+    pub fn publish(&self, v: AdmissionView) {
+        *self.view.lock().expect("view cell poisoned") = Arc::new(v);
+    }
+
+    /// Load the latest snapshot (frontend thread, per decision).
+    pub fn load(&self) -> Arc<AdmissionView> {
+        Arc::clone(&self.view.lock().expect("view cell poisoned"))
+    }
+}
+
+/// The frontend thread's gate state: the bounded-queue policy, the stream
+/// interning table, and the cumulative accept counters that make stale
+/// snapshots safe (see the module docs).
+pub struct FrontendGate {
+    admission: Admission,
+    /// (tenant, group) → interned stream id, first-appearance dense order
+    /// — identical semantics to the synchronous drivers' interning.
+    streams: BTreeMap<(u32, u64), u32>,
+    /// Cumulative accepts per group.
+    accepted: Vec<u64>,
+    /// Cumulative accepts per stream id.
+    accepted_by_stream: Vec<u64>,
+    /// Each stream's (single, fixed) group, indexed by stream id — the
+    /// dependent-mode launch floor scans only the request's group.
+    stream_group: Vec<u64>,
+}
+
+impl FrontendGate {
+    /// New gate over `groups` model groups.
+    pub fn new(admission: Admission, groups: usize) -> Self {
+        FrontendGate {
+            admission,
+            streams: BTreeMap::new(),
+            accepted: vec![0; groups],
+            accepted_by_stream: Vec::new(),
+            stream_group: Vec::new(),
+        }
+    }
+
+    /// Intern the (tenant, group) pair as a stream, dense ids in
+    /// first-appearance order.
+    pub fn intern(&mut self, tenant: u32, group: u64) -> StreamId {
+        let next = self.streams.len() as u32;
+        let id = *self.streams.entry((tenant, group)).or_insert(next);
+        self.ensure_stream(id as usize, group);
+        StreamId(id)
+    }
+
+    fn ensure_stream(&mut self, s: usize, group: u64) {
+        if self.accepted_by_stream.len() <= s {
+            self.accepted_by_stream.resize(s + 1, 0);
+        }
+        if self.stream_group.len() <= s {
+            self.stream_group.resize(s + 1, group);
+        }
+        self.stream_group[s] = group;
+    }
+
+    /// Accepted-but-not-yet-drained request count for a group: the work
+    /// in the accepted channel the snapshot cannot see yet.
+    fn in_channel(&self, view: &AdmissionView, group: u64) -> u64 {
+        let a = self.accepted.get(group as usize).copied().unwrap_or(0);
+        let d = view.drained.get(group as usize).copied().unwrap_or(0);
+        a.saturating_sub(d)
+    }
+
+    /// A stream's accepted-but-not-yet-drained count against this view.
+    fn in_channel_of_stream(&self, view: &AdmissionView, s: usize) -> u32 {
+        let a = self.accepted_by_stream.get(s).copied().unwrap_or(0);
+        let d = view.drained_by_stream.get(s).copied().unwrap_or(0);
+        a.saturating_sub(d) as u32
+    }
+
+    /// Dependent-mode launch floor: max over the group's known streams of
+    /// (view depth + in-channel count). A burst accepted on another
+    /// stream between publishes deepens that stream's run even though the
+    /// stale view cannot see it yet — without this, the gate would
+    /// under-price the serial drain the sync gate charges.
+    fn dependent_max_depth(&self, view: &AdmissionView, gv: &GroupView, group: u64) -> u32 {
+        self.stream_group
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| **g == group)
+            .map(|(s, _)| {
+                gv.stream_depth(StreamId(s as u32)) as u32
+                    + self.in_channel_of_stream(view, s)
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Decide one request against the latest snapshot. On Accept the
+    /// gate's cumulative counters advance, so subsequent decisions on the
+    /// same (stale) view already price this request as queued.
+    pub fn decide(
+        &mut self,
+        view: &AdmissionView,
+        group: u64,
+        req: &GateRequest,
+        now_us: f64,
+    ) -> Admit {
+        let Some(gv) = view.groups.get(group as usize) else {
+            return Admit::Reject;
+        };
+        let s = req.stream.0 as usize;
+        let extras = GateExtras {
+            queued: self.in_channel(view, group) as u32,
+            own: self.in_channel_of_stream(view, s),
+            // only dependent pricing reads the floor; skip the scan for
+            // the (default) independent mode
+            max_depth: if req.independent {
+                0
+            } else {
+                self.dependent_max_depth(view, gv, group)
+            },
+        };
+        let d = gv.decide(&self.admission, req, extras, now_us);
+        if d == Admit::Accept {
+            if let Some(a) = self.accepted.get_mut(group as usize) {
+                *a += 1;
+            }
+            // grow on demand: callers may price streams interned elsewhere
+            self.ensure_stream(s, group);
+            self.accepted_by_stream[s] += 1;
+        }
+        d
+    }
+}
+
+/// What the frontend thread hands back at shutdown, merged into the run's
+/// `ServeMetrics` by the scheduler thread.
+#[derive(Debug, Default)]
+pub struct FrontendReport {
+    /// Rejected requests per tenant.
+    pub drops: BTreeMap<u32, u64>,
+    /// Arrival → gate-decision latency, µs.
+    pub admission_latency: LatencyHist,
+    /// Decisions made.
+    pub decisions: u64,
+    /// Decisions made on a snapshot older than [`STALE_VIEW_US`].
+    pub stale_decisions: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gview(pending: usize, inflight: usize) -> GroupView {
+        GroupView {
+            pending,
+            inflight,
+            pack_cap: 4,
+            est_by_n: vec![100.0, 150.0, 200.0, 250.0],
+            inflight_est_us: 0.0,
+            parallelism: 1.0,
+            device_backlog_us: None,
+            stream_depths: Vec::new(),
+        }
+    }
+
+    fn view(g: GroupView) -> AdmissionView {
+        AdmissionView {
+            seq: 1,
+            now_us: 0.0,
+            published: Instant::now(),
+            groups: vec![g],
+            drained: vec![0],
+            drained_by_stream: Vec::new(),
+        }
+    }
+
+    fn req(stream: u32, deadline_us: f64) -> GateRequest {
+        GateRequest {
+            stream: StreamId(stream),
+            independent: true,
+            deadline_us,
+        }
+    }
+
+    #[test]
+    fn independent_drain_prices_full_and_remainder_launches() {
+        let g = gview(5, 0);
+        // queued = 6: one cap-wide (4-op) launch + a 2-op remainder
+        let est = g.drain_est_us(StreamId(0), true, GateExtras::default());
+        assert!((est - (250.0 + 150.0)).abs() < 1e-9, "est {est}");
+    }
+
+    #[test]
+    fn dependent_drain_bounded_by_longest_stream() {
+        let mut g = gview(3, 0);
+        g.stream_depths = vec![(StreamId(7), 3)];
+        // all 3 pending on stream 7; a 4th on the same stream drains in 4
+        // serial launches of 1 op each
+        let est = g.drain_est_us(StreamId(7), false, GateExtras::default());
+        assert!((est - 4.0 * 100.0).abs() < 1e-9, "est {est}");
+        // a different stream still needs max-stream-depth launches, each
+        // wide enough to carry the cross-stream queue
+        let est2 = g.drain_est_us(StreamId(8), false, GateExtras::default());
+        assert!((est2 - 3.0 * 150.0).abs() < 1e-9, "est2 {est2}");
+    }
+
+    #[test]
+    fn device_backlog_replaces_inflight_term() {
+        let mut g = gview(0, 2);
+        g.inflight_est_us = 10_000.0;
+        g.device_backlog_us = Some(300.0);
+        let est = g.drain_est_us(StreamId(0), true, GateExtras::default());
+        assert!((est - (100.0 + 300.0)).abs() < 1e-9, "est {est}");
+    }
+
+    #[test]
+    fn stale_view_prices_other_streams_dependent_bursts() {
+        // dependent mode: a burst accepted on stream A between publishes
+        // is invisible in the frozen view's stream_depths, but the gate's
+        // own counters must still raise the launch floor for a later
+        // stream-B request — staleness may only shed extra, never admit
+        // what the sync gate would shed
+        let v = view(gview(0, 0));
+        let mut gate = FrontendGate::new(Admission::new(64), 1);
+        let a = gate.intern(0, 0);
+        let b = gate.intern(1, 0);
+        let dep = |stream: StreamId, deadline_us: f64| GateRequest {
+            stream,
+            independent: false,
+            deadline_us,
+        };
+        for _ in 0..6 {
+            assert_eq!(gate.decide(&v, 0, &dep(a, 1e9), 0.0), Admit::Accept);
+        }
+        // B's drain: A's accepted run of 6 binds 6 serial launches, each
+        // ~2 wide (7 queued / 6 launches) → 6·150 = 900µs. Without the
+        // floor the stale view would price ~2 launches (500µs) and admit.
+        assert_eq!(
+            gate.decide(&v, 0, &dep(b, 800.0), 0.0),
+            Admit::Reject,
+            "stale view must not under-price another stream's burst"
+        );
+        assert_eq!(gate.decide(&v, 0, &dep(b, 1_000.0), 0.0), Admit::Accept);
+    }
+
+    #[test]
+    fn gate_counts_in_channel_work_against_stale_views() {
+        let v = view(gview(0, 0));
+        let mut gate = FrontendGate::new(Admission::new(3), 1);
+        // the view never refreshes; the gate's own counters must bound
+        // outstanding work at max_queue
+        let mut accepts = 0;
+        for t in 0..10u32 {
+            let stream = gate.intern(t, 0);
+            if gate.decide(&v, 0, &req(stream.0, 1e9), 0.0) == Admit::Accept {
+                accepts += 1;
+            }
+        }
+        assert_eq!(accepts, 3, "stale view must not over-admit");
+    }
+
+    #[test]
+    fn gate_reconciles_drained_counts() {
+        let mut gate = FrontendGate::new(Admission::new(2), 1);
+        let v0 = view(gview(0, 0));
+        let s = gate.intern(0, 0);
+        assert_eq!(gate.decide(&v0, 0, &req(s.0, 1e9), 0.0), Admit::Accept);
+        assert_eq!(gate.decide(&v0, 0, &req(s.0, 1e9), 0.0), Admit::Accept);
+        assert_eq!(gate.decide(&v0, 0, &req(s.0, 1e9), 0.0), Admit::Reject);
+        // the scheduler drained both, completed them, and published: the
+        // in-channel count returns to zero and room opens up again
+        let mut v1 = view(gview(0, 0));
+        v1.drained = vec![2];
+        v1.drained_by_stream = vec![2];
+        assert_eq!(gate.decide(&v1, 0, &req(s.0, 1e9), 0.0), Admit::Accept);
+    }
+
+    #[test]
+    fn unknown_group_rejects() {
+        let v = view(gview(0, 0));
+        let mut gate = FrontendGate::new(Admission::default(), 1);
+        assert_eq!(gate.decide(&v, 9, &req(0, 1e9), 0.0), Admit::Reject);
+    }
+
+    #[test]
+    fn view_cell_publishes_latest() {
+        let mut v = view(gview(0, 0));
+        let cell = ViewCell::new(v.clone());
+        assert_eq!(cell.load().seq, 1);
+        v.seq = 2;
+        cell.publish(v);
+        assert_eq!(cell.load().seq, 2);
+    }
+
+    #[test]
+    fn intern_is_dense_first_appearance() {
+        let mut gate = FrontendGate::new(Admission::default(), 2);
+        assert_eq!(gate.intern(4, 1), StreamId(0));
+        assert_eq!(gate.intern(2, 0), StreamId(1));
+        assert_eq!(gate.intern(4, 1), StreamId(0));
+    }
+}

@@ -5,6 +5,7 @@
 use std::collections::BTreeMap;
 
 use crate::compiler::jit::{JitStats, LaunchRecord};
+use crate::serve::frontend::FrontendReport;
 use crate::util::stats::LatencyHist;
 
 /// Metrics for one tenant.
@@ -96,6 +97,25 @@ pub struct ServeMetrics {
     pub replications: u64,
     /// Cold-group migrations applied by the rebalancer.
     pub migrations: u64,
+    /// Admission-decision latency (client arrival → gate decision), µs.
+    /// With the frontend stage this stays bounded regardless of scheduler
+    /// stalls; the synchronous wall-clock gate includes the drain wait.
+    /// Empty for the virtual-time replays (no wall clock to measure).
+    pub admission_latency: LatencyHist,
+    /// Channel wait (client arrival → scheduler submit), µs — the time a
+    /// request sat between threads before being priced into the window,
+    /// previously invisible in SLO decompositions. Covers every request
+    /// that *reaches the scheduler thread*: all arrivals on the
+    /// synchronous path (the decision happens at drain), accepted
+    /// requests on the frontend path (rejects turn around at the
+    /// frontend and never cross). Empty for the virtual-time replays.
+    pub frontend_wait: LatencyHist,
+    /// Admission decisions recorded in `admission_latency`.
+    pub admission_decisions: u64,
+    /// Frontend decisions taken on a snapshot older than
+    /// [`crate::serve::frontend::STALE_VIEW_US`] (scheduler wedged
+    /// mid-iteration while the frontend kept answering).
+    pub stale_decisions: u64,
 }
 
 impl ServeMetrics {
@@ -148,6 +168,26 @@ impl ServeMetrics {
         let d = &mut self.devices[worker];
         d.launches += 1;
         d.busy_us += duration_us;
+    }
+
+    /// Fold the frontend stage's thread-local accounting into the run's
+    /// metrics (called once by the scheduler thread after joining the
+    /// frontend).
+    pub fn merge_frontend(&mut self, rep: &FrontendReport) {
+        for (tenant, n) in &rep.drops {
+            self.tenants.entry(*tenant).or_default().dropped += n;
+        }
+        self.admission_latency.merge(&rep.admission_latency);
+        self.admission_decisions += rep.decisions;
+        self.stale_decisions += rep.stale_decisions;
+    }
+
+    /// Record a synchronous-gate admission decision's latency (arrival →
+    /// decision; the decision and the submit coincide on that path).
+    pub fn sync_admission_decision(&mut self, wait_us: f64) {
+        self.admission_latency.record_us(wait_us);
+        self.frontend_wait.record_us(wait_us);
+        self.admission_decisions += 1;
     }
 
     /// Completed requests across tenants.
@@ -228,6 +268,15 @@ impl ServeMetrics {
                 self.jit.pack_efficiency(),
                 self.jit.evictions,
                 self.jit.slo_attainment(),
+            ));
+        }
+        if self.admission_decisions > 0 {
+            s.push_str(&format!(
+                "admission: decisions={} p99={:.2}ms stale={} frontend_wait_p99={:.2}ms\n",
+                self.admission_decisions,
+                self.admission_latency.quantile_us(0.99) / 1e3,
+                self.stale_decisions,
+                self.frontend_wait.quantile_us(0.99) / 1e3,
             ));
         }
         if !self.devices.is_empty() {
@@ -360,6 +409,30 @@ mod tests {
         let r = m.render();
         assert!(r.contains("tenant"));
         assert!(r.contains('7'));
+    }
+
+    #[test]
+    fn frontend_report_merges_and_renders() {
+        let mut m = ServeMetrics::default();
+        assert!(!m.render().contains("admission:"), "no line before decisions");
+        m.span_us = 1e6;
+        let mut rep = FrontendReport {
+            decisions: 5,
+            stale_decisions: 2,
+            ..Default::default()
+        };
+        rep.admission_latency.record_us(120.0);
+        rep.drops.insert(3, 2);
+        m.merge_frontend(&rep);
+        m.sync_admission_decision(80.0);
+        assert_eq!(m.admission_decisions, 6);
+        assert_eq!(m.stale_decisions, 2);
+        assert_eq!(m.tenants[&3].dropped, 2);
+        assert_eq!(m.admission_latency.count(), 2);
+        assert_eq!(m.frontend_wait.count(), 1);
+        let r = m.render();
+        assert!(r.contains("admission: decisions=6"), "{r}");
+        assert!(r.contains("stale=2"), "{r}");
     }
 
     #[test]

@@ -15,15 +15,23 @@
 //!   [`crate::placement`] table (least-loaded replica per launch,
 //!   rebalancer-driven replication of hot model groups);
 //! * [`metrics`] — per-tenant latency histograms, SLO attainment,
-//!   batch-occupancy accounting, JIT pack stats, per-device utilization;
+//!   batch-occupancy accounting, JIT pack stats, per-device utilization,
+//!   admission-decision latency and channel-wait histograms;
 //! * [`admission`] — bounded queues + drop policy (backpressure), sharing
 //!   the scheduler's service-time estimator (drain priced per launch,
-//!   elapsed execution subtracted, divided across a group's replicas).
+//!   elapsed execution subtracted, divided across a group's replicas);
+//! * [`frontend`] — the async admission stage: a dedicated thread owns
+//!   the gate and prices requests against the `AdmissionView` snapshot
+//!   the scheduler publishes each iteration, so tenant accept/reject
+//!   never waits on a scheduler iteration (wall-clock drivers only; the
+//!   deterministic replays keep the synchronous gate).
 
 pub mod admission;
+pub mod frontend;
 pub mod metrics;
 pub mod server;
 
+pub use frontend::{AdmissionView, FrontendGate, GroupView, ViewCell};
 pub use metrics::{DeviceMetrics, ServeMetrics};
 pub use server::{
     BatchPolicy, ModelBackend, ModelSlot, ServeExecutor, ServeReport, Server, SimBackend,

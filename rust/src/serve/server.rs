@@ -39,9 +39,24 @@
 //! Admission and the scheduler share one estimator
 //! ([`ServeExecutor::estimate_group_us`]), priced at the *padded* compiled
 //! variant that will actually run — they can no longer disagree.
+//!
+//! **Threading model of the wall-clock drivers** (`run_realtime*`; see
+//! [`crate::serve::frontend`] for the full contract): a generator thread
+//! paces client arrivals into an intake channel; with
+//! [`Server::frontend`] set (the default) a dedicated *frontend stage*
+//! thread owns that channel and the admission gate, pricing every request
+//! against the [`frontend::AdmissionView`] snapshot the scheduler thread
+//! publishes once per iteration — so a tenant's accept/reject never waits
+//! on an issue/launch/collect iteration. Accepted requests flow on to the
+//! scheduler thread, which owns the JIT window, the clock, the launch
+//! pool and the per-worker backlog accounting, and is the only snapshot
+//! writer. The virtual-time `replay*` drivers keep the synchronous gate
+//! for determinism, but price through the same `GroupView` path, so the
+//! two gates cannot disagree on identical state.
 
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::compiler::ir::{DispatchRequest, StreamId, TensorOp};
@@ -58,9 +73,13 @@ use crate::placement::{
 use crate::runtime::executor::{ModelExec, PjrtExecutor};
 use crate::runtime::golden;
 use crate::serve::admission::{Admission, Admit};
+use crate::serve::frontend::{
+    self, AdmissionView, FrontendGate, FrontendReport, GateExtras, GateRequest,
+    ViewCell, STALE_VIEW_US,
+};
 use crate::serve::metrics::ServeMetrics;
 use crate::util::stats::Ewma;
-use crate::util::threadpool::StatefulPool;
+use crate::util::threadpool::{Stage, StatefulPool};
 use crate::workload::trace::Trace;
 use crate::Result;
 
@@ -329,6 +348,27 @@ impl<B: ModelBackend> ServeExecutor<B> {
         }
     }
 
+    /// Estimates for launches of 1..=cap ops of a group — the admission
+    /// snapshot's table — memoized per padded compiled variant: pow2-ish
+    /// padding collapses the table to ~log(cap) distinct estimator
+    /// evaluations instead of cap. Entry k equals
+    /// `estimate_group_us(group, k + 1)` exactly (`cap` never exceeds the
+    /// group's largest compiled variant, so the padded batch determines
+    /// the estimate).
+    pub fn estimate_group_table_us(&self, group: u64, cap: u32) -> Vec<f64> {
+        let slot = &self.models[group as usize];
+        let class = self.class_of_group(group);
+        let mut cache: HashMap<u32, f64> = HashMap::new();
+        (1..=cap.max(1))
+            .map(|n| {
+                let padded = self.backend.padded_batch(&slot.name, n);
+                *cache
+                    .entry(padded)
+                    .or_insert_with(|| self.estimate_group_on_class_us(group, class, n))
+            })
+            .collect()
+    }
+
     fn observe_group(&mut self, class: u32, group: u64, padded: u32, us: f64) {
         self.est
             .entry((class, group, padded))
@@ -533,6 +573,82 @@ fn drain_parallelism(table: &PlacementTable, topo: &DeviceTopology, group: u64) 
     }
 }
 
+/// The wall-clock drivers' launch-stage configuration: the device
+/// topology, the group→replicas placement table, and the optional
+/// rebalancer. `None` on the inline (no pool) and legacy hash-routed
+/// paths.
+type PlacedState = Option<(DeviceTopology, PlacementTable, Option<Rebalancer>)>;
+
+/// Admission gate inputs for one group under the current launch-stage
+/// configuration: (drain parallelism, measured worker backlog).
+///
+/// * placed (placement table present): speed-weighted replica
+///   parallelism plus the least-loaded replica's booked backlog;
+/// * pooled but unplaced (legacy hash routing): the hash-routed worker's
+///   booked backlog — the worker every launch of the group lands on.
+///   This signal was maintained by the launch stage but never consulted,
+///   so the gate priced pooled-unplaced drains queue-blind;
+/// * inline (no pool): nothing measured; the JIT's in-flight term prices
+///   the drain.
+fn gate_inputs(
+    placed: &PlacedState,
+    pool_workers: usize,
+    worker_backlog: &[f64],
+    group: u64,
+) -> (f64, Option<f64>) {
+    match placed {
+        Some((topo, table, _)) => {
+            let b = table
+                .replicas_of(group)
+                .iter()
+                .map(|w| worker_backlog.get(*w).copied().unwrap_or(0.0))
+                .fold(f64::INFINITY, f64::min);
+            (
+                drain_parallelism(table, topo, group),
+                Some(if b.is_finite() { b } else { 0.0 }),
+            )
+        }
+        None if pool_workers > 0 => (
+            1.0,
+            Some(
+                worker_backlog
+                    .get(group as usize % pool_workers)
+                    .copied()
+                    .unwrap_or(0.0),
+            ),
+        ),
+        None => (1.0, None),
+    }
+}
+
+/// Build the full admission snapshot the frontend stage prices against
+/// (one [`frontend::GroupView`] per group via the shared
+/// [`frontend::snapshot_group`], plus the drain counters that net off the
+/// frontend's accept counts).
+fn build_view<B: ModelBackend>(
+    seq: u64,
+    jit: &JitCompiler<ServeExecutor<&mut B>, Vec<f32>>,
+    placed: &PlacedState,
+    pool_workers: usize,
+    worker_backlog: &[f64],
+    drained: (&[u64], &[u64]),
+) -> AdmissionView {
+    let groups = drained.0.len() as u64;
+    AdmissionView {
+        seq,
+        now_us: jit.now_us,
+        published: Instant::now(),
+        groups: (0..groups)
+            .map(|g| {
+                let (par, backlog) = gate_inputs(placed, pool_workers, worker_backlog, g);
+                frontend::snapshot_group(jit, g, par, backlog, true)
+            })
+            .collect(),
+        drained: drained.0.to_vec(),
+        drained_by_stream: drained.1.to_vec(),
+    }
+}
+
 /// Pin every group's primary estimation class to its current primary
 /// replica's device class (called at startup and after each rebalance).
 fn repin_group_classes<B: ModelBackend>(
@@ -579,6 +695,132 @@ struct AdmitReq {
     row: Vec<f32>,
 }
 
+/// One client request in flight from the generator (client side) to the
+/// admission gate — sync or frontend.
+struct Incoming {
+    tenant: u32,
+    group: u64,
+    slo_us: f64,
+    arrival: Instant,
+    row: Vec<f32>,
+}
+
+/// An accepted, pre-priced request in flight from the frontend stage to
+/// the scheduler thread. The gate decision is already made; the scheduler
+/// only timestamps it into the window (backpressure backstop aside).
+struct Admitted {
+    stream: StreamId,
+    group: u64,
+    tenant: u32,
+    slo_us: f64,
+    arrival: Instant,
+    row: Vec<f32>,
+}
+
+/// The post-accept tail shared by both gates (bundled so the two call
+/// sites cannot drift): what the scheduler needs to timestamp an accepted
+/// request into the window.
+struct Accepted {
+    stream: StreamId,
+    group: u64,
+    tenant: u32,
+    slo_us: f64,
+    arrival_us: f64,
+    independent: bool,
+    row: Vec<f32>,
+}
+
+/// Build the dispatch request for an accepted serving request and submit
+/// it at its true arrival; the window backstop sheds on overflow
+/// (recorded as a drop). The ONE request-construction path behind the
+/// synchronous gate and the frontend drain.
+fn submit_accepted<B: ModelBackend>(
+    jit: &mut JitCompiler<ServeExecutor<&mut B>, Vec<f32>>,
+    metrics: &mut ServeMetrics,
+    slots: &[ModelSlot],
+    a: Accepted,
+) {
+    let slot = &slots[a.group as usize];
+    let req = DispatchRequest::new(
+        a.stream,
+        KernelDesc::gemm(1, slot.d_in as u32, 1),
+        a.slo_us,
+    )
+    .with_group(a.group)
+    .with_tag(a.tenant as u64)
+    .with_independent(a.independent);
+    if jit.submit_at(req, a.arrival_us, a.row).is_none() {
+        // window full: the backpressure backstop sheds the request
+        metrics.drop_request(a.tenant);
+    }
+}
+
+/// The admission frontend stage's thread body: drain the intake channel,
+/// price each request against the latest published [`AdmissionView`],
+/// forward accepts to the scheduler, turn rejects around locally. Exits
+/// when the intake side disconnects; its thread-local accounting
+/// ([`FrontendReport`]) comes home through the stage's join.
+fn frontend_loop(
+    intake_rx: mpsc::Receiver<Incoming>,
+    acc_tx: mpsc::Sender<Admitted>,
+    cell: Arc<ViewCell>,
+    admission: Admission,
+    groups: usize,
+    independent: bool,
+    t0: Instant,
+) -> FrontendReport {
+    let mut gate = FrontendGate::new(admission, groups);
+    let mut report = FrontendReport::default();
+    loop {
+        let first = match intake_rx.recv_timeout(Duration::from_micros(500)) {
+            Ok(inc) => inc,
+            Err(mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        };
+        let mut batch = vec![first];
+        while let Ok(inc) = intake_rx.try_recv() {
+            batch.push(inc);
+        }
+        for inc in batch {
+            let view = cell.load();
+            let now_us = t0.elapsed().as_secs_f64() * 1e6;
+            let arrival_us =
+                inc.arrival.saturating_duration_since(t0).as_secs_f64() * 1e6;
+            let stream = gate.intern(inc.tenant, inc.group);
+            let greq = GateRequest {
+                stream,
+                independent,
+                deadline_us: arrival_us + inc.slo_us,
+            };
+            let decision = gate.decide(&view, inc.group, &greq, now_us);
+            report.decisions += 1;
+            report
+                .admission_latency
+                .record_us(inc.arrival.elapsed().as_secs_f64() * 1e6);
+            if view.published.elapsed().as_secs_f64() * 1e6 > STALE_VIEW_US {
+                report.stale_decisions += 1;
+            }
+            // a send can only fail at shutdown (scheduler gone): the
+            // request is shed, counted like any other reject
+            let accepted = decision == Admit::Accept
+                && acc_tx
+                    .send(Admitted {
+                        stream,
+                        group: inc.group,
+                        tenant: inc.tenant,
+                        slo_us: inc.slo_us,
+                        arrival: inc.arrival,
+                        row: inc.row,
+                    })
+                    .is_ok();
+            if !accepted {
+                *report.drops.entry(inc.tenant).or_insert(0) += 1;
+            }
+        }
+    }
+    report
+}
+
 /// The multi-tenant server.
 pub struct Server<B: ModelBackend> {
     backend: B,
@@ -596,6 +838,15 @@ pub struct Server<B: ModelBackend> {
     /// state — program order then binds and at most one request per stream
     /// rides each launch.
     pub independent_streams: bool,
+    /// Run admission on a dedicated frontend stage thread (the default)
+    /// in the wall-clock drivers, so tenant accept/reject decisions never
+    /// wait on a scheduler iteration — see [`crate::serve::frontend`].
+    /// With the flag off the gate runs synchronously on the scheduler
+    /// thread between channel drains (the pre-frontend behavior, kept for
+    /// comparison benches). The virtual-time `replay*` drivers always use
+    /// the synchronous gate: a wall-clock frontend would race the virtual
+    /// clock and break replay determinism.
+    pub frontend: bool,
 }
 
 impl<B: ModelBackend> Server<B> {
@@ -607,6 +858,7 @@ impl<B: ModelBackend> Server<B> {
             admission: Admission::default(),
             window_capacity: 1024,
             independent_streams: true,
+            frontend: true,
         }
     }
 
@@ -623,21 +875,14 @@ impl<B: ModelBackend> Server<B> {
     /// Admission decision for one request; on Accept, submits it into the
     /// JIT (window backpressure sheds as a backstop). Records drops.
     ///
-    /// Drain pricing covers BOTH the un-issued queue and the group's
-    /// in-flight launches: under the pooled/async drive mode a new request
-    /// waits behind work already on the device, and ignoring it
-    /// systematically under-estimated drain and admitted doomed requests.
-    /// Both terms are priced *per launch*. Independent streams drain in
-    /// ceil(queued / pack_cap) cap-wide launches; dependent streams expose
-    /// one op per stream per launch, so the longest pending stream bounds
-    /// the launch count (cross-stream coalescing still fills each launch).
-    /// The in-flight term sums the scheduler's own estimate of every
-    /// pending launch (N singleton launches keep N fixed overheads),
-    /// minus the execution time already elapsed on each (a launch halfway
-    /// through its estimate owes half). The whole drain is then divided
-    /// by the number of pool workers serving the group — the placement
-    /// table's replica count — since replicated groups drain their
-    /// backlog concurrently.
+    /// Pricing goes through the same [`frontend::GroupView`] the async
+    /// frontend stage consumes, built synchronously from live JIT state —
+    /// see [`frontend::GroupView::drain_est_us`] for the drain model
+    /// (per-launch queue and in-flight pricing, speed-weighted replica
+    /// parallelism, the measured device backlog replacing the in-flight
+    /// term when known) and [`Admission::decide`] for the separate
+    /// queued/in-flight contracts. One pricing implementation behind both
+    /// gates means they cannot disagree on identical state.
     fn admit_request(
         jit: &mut JitCompiler<ServeExecutor<&mut B>, Vec<f32>>,
         streams: &mut BTreeMap<(u32, u64), u32>,
@@ -657,68 +902,40 @@ impl<B: ModelBackend> Server<B> {
             row,
         } = r;
         let stream = intern_stream(streams, tenant, group);
-        let depth = jit.window.pending_in_group(group);
-        let inflight = jit.window.inflight_in_group(group);
-        let cap = (jit.pack_cap(group) as u32).max(1);
-        let queued = depth as u32 + 1;
-        let mut est = if independent {
-            // cap-wide packs: full launches at the cap plus a remainder
-            let full = queued / cap;
-            let rem = queued % cap;
-            f64::from(full) * jit.executor().estimate_group_us(group, cap)
-                + if rem > 0 {
-                    jit.executor().estimate_group_us(group, rem)
-                } else {
-                    0.0
-                }
-        } else {
-            // program order binds: each launch takes at most one op per
-            // stream, so the longest pending stream — counting this
-            // request on its own stream — sets the launch count (a
-            // single-stream backlog is NOT one padded batch), while
-            // cross-stream coalescing still packs each launch up to `cap`
-            // wide across streams
-            let own = jit.window.stream_depth_in_group(stream, group) as u32 + 1;
-            let launches = (jit.window.max_stream_depth_in_group(group) as u32)
-                .max(own)
-                .max(queued.div_ceil(cap));
-            let per_launch = queued.div_ceil(launches).min(cap).max(1);
-            f64::from(launches) * jit.executor().estimate_group_us(group, per_launch)
+        // independent-mode pricing never reads the per-stream depth list,
+        // so the synchronous gate skips that window scan
+        let gview = frontend::snapshot_group(
+            jit,
+            group,
+            parallelism,
+            device_backlog_us,
+            !independent,
+        );
+        let greq = GateRequest {
+            stream,
+            independent,
+            deadline_us,
         };
-        // replicated groups drain their queue on several workers at once
-        // (speed-weighted: a slow replica adds less than one worker)
-        let parallelism = parallelism.max(1.0);
-        est /= parallelism;
-        est += match device_backlog_us {
-            // device timelines known: the least-loaded replica's queued
-            // work is the true wait (already per-worker, not divided)
-            Some(backlog) => backlog,
-            // otherwise the JIT's in-flight term (elapsed execution
-            // subtracted from the launches actually running — at most one
-            // per serving worker), spread across the workers like the queue
-            None => {
-                jit.inflight_group_est_us(group, parallelism.round() as u32)
-                    / parallelism
-            }
-        };
-        let slack_after = deadline_us - jit.now_us - est;
-        if admission.decide(depth + inflight, slack_after) == Admit::Reject {
+        if gview.decide(admission, &greq, GateExtras::default(), jit.now_us)
+            == Admit::Reject
+        {
             metrics.drop_request(tenant);
             return;
         }
-        let slot = &slots[group as usize];
-        let req = DispatchRequest::new(
-            stream,
-            KernelDesc::gemm(1, slot.d_in as u32, 1),
-            deadline_us - arrival_us,
-        )
-        .with_group(group)
-        .with_tag(tenant as u64)
-        .with_independent(independent);
-        if jit.submit_at(req, arrival_us, row).is_none() {
-            // window full: the backpressure backstop sheds the request
-            metrics.drop_request(tenant);
-        }
+        submit_accepted(
+            jit,
+            metrics,
+            slots,
+            Accepted {
+                stream,
+                group,
+                tenant,
+                slo_us: deadline_us - arrival_us,
+                arrival_us,
+                independent,
+                row,
+            },
+        );
     }
 
     /// Replay a trace in virtual time with real service executions,
@@ -1036,19 +1253,12 @@ impl<B: ModelBackend> Server<B> {
     where
         B: 'static,
     {
-        struct Incoming {
-            tenant: u32,
-            group: u64,
-            slo_us: f64,
-            arrival: Instant,
-            row: Vec<f32>,
-        }
         let (slots, index) = model_slots(&self.backend, trace);
         // placement for the pooled launch stage: LPT over each group's
         // total estimated work; each launch then routes to the
         // least-loaded replica of its group's table entry
         let groups = slots.len() as u64;
-        let mut placed: Option<(DeviceTopology, PlacementTable, Option<Rebalancer>)> =
+        let mut placed: PlacedState =
             match topo {
                 Some(topo) if pool.is_some() => {
                     let table =
@@ -1097,6 +1307,7 @@ impl<B: ModelBackend> Server<B> {
         let policy_name = self.policy.name();
         let admission = self.admission.clone();
         let independent = self.independent_streams;
+        let use_frontend = self.frontend;
         let mut metrics = ServeMetrics::default();
         let (res_tx, res_rx) =
             mpsc::channel::<(u64, std::result::Result<ModelExec, String>)>();
@@ -1122,66 +1333,162 @@ impl<B: ModelBackend> Server<B> {
         // estimated un-finished work per pool worker, µs — admission's
         // device-backlog signal (conservative: head-job progress is not
         // subtracted; a wall-clock driver cannot observe it)
-        let mut worker_backlog: Vec<f64> =
-            vec![0.0; pool.map(|p| p.workers()).unwrap_or(0)];
+        let pool_workers = pool.map(|p| p.workers()).unwrap_or(0);
+        let mut worker_backlog: Vec<f64> = vec![0.0; pool_workers];
+        // cumulative per-group / per-stream requests drained from the
+        // frontend's accepted channel into the window — published in every
+        // snapshot so the frontend nets them off its own accept counters
+        let mut drained: Vec<u64> = vec![0; groups as usize];
+        let mut drained_by_stream: Vec<u64> = Vec::new();
+        let mut view_seq: u64 = 0;
+        // the admission frontend stage: it takes the intake receiver and
+        // hands back accepted requests; `None` = synchronous gate
+        let mut sync_rx: Option<mpsc::Receiver<Incoming>> = Some(rx);
+        let fe =
+            if use_frontend {
+                let intake_rx = sync_rx.take().expect("intake receiver");
+                let (acc_tx, acc_rx) = mpsc::channel::<Admitted>();
+                let cell = ViewCell::new(build_view(
+                    0,
+                    &jit,
+                    &placed,
+                    pool_workers,
+                    &worker_backlog,
+                    (&drained, &drained_by_stream),
+                ));
+                let fe_cell = Arc::clone(&cell);
+                let fe_admission = admission.clone();
+                let n_groups = groups as usize;
+                let stage = Stage::spawn("vliw-frontend", move || {
+                    frontend_loop(
+                        intake_rx,
+                        acc_tx,
+                        fe_cell,
+                        fe_admission,
+                        n_groups,
+                        independent,
+                        t0,
+                    )
+                });
+                Some((acc_rx, cell, stage))
+            } else {
+                None
+            };
         let mut disconnected = false;
+        // snapshot publication control: republish when scheduler state
+        // changed this iteration, or on a heartbeat at half the staleness
+        // threshold (so idle ticks skip the rebuild without inflating the
+        // frontend's stale-decision counter)
+        let mut view_dirty = false;
+        let mut last_publish = Instant::now();
         loop {
-            // 1. drain arrivals (bounded wait when idle); once the
-            // generator is gone the channel stays empty — pace the loop
-            // with a short sleep instead of spinning on it
-            let mut arrivals: Vec<Incoming> = Vec::new();
+            // 1. drain this iteration's input — client arrivals on the
+            // synchronous path, frontend-accepted requests otherwise
+            // (bounded wait when idle); once the upstream side is gone
+            // the channel stays empty — pace the loop with a short sleep
+            // instead of spinning on it
             if disconnected {
                 std::thread::sleep(Duration::from_micros(200));
-            } else {
-                match rx.recv_timeout(Duration::from_micros(500)) {
-                    Ok(inc) => {
-                        arrivals.push(inc);
-                        while let Ok(inc) = rx.try_recv() {
+            }
+            if let Some(rx) = &sync_rx {
+                let mut arrivals: Vec<Incoming> = Vec::new();
+                if !disconnected {
+                    match rx.recv_timeout(Duration::from_micros(500)) {
+                        Ok(inc) => {
                             arrivals.push(inc);
+                            while let Ok(inc) = rx.try_recv() {
+                                arrivals.push(inc);
+                            }
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => {}
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            disconnected = true
                         }
                     }
-                    Err(mpsc::RecvTimeoutError::Timeout) => {}
-                    Err(mpsc::RecvTimeoutError::Disconnected) => disconnected = true,
                 }
-            }
-            jit.advance_to(wall_us(t0));
-            for inc in arrivals {
-                let arrival_us =
-                    inc.arrival.saturating_duration_since(t0).as_secs_f64() * 1e6;
-                let (parallelism, backlog) = match &placed {
-                    Some((topo, table, _)) => {
-                        let b = table
-                            .replicas_of(inc.group)
-                            .iter()
-                            .map(|w| worker_backlog.get(*w).copied().unwrap_or(0.0))
-                            .fold(f64::INFINITY, f64::min);
-                        (
-                            drain_parallelism(table, topo, inc.group),
-                            Some(if b.is_finite() { b } else { 0.0 }),
-                        )
+                jit.advance_to(wall_us(t0));
+                for inc in arrivals {
+                    // the synchronous gate decides at drain time: the
+                    // arrival→decision latency IS the channel wait
+                    metrics.sync_admission_decision(
+                        inc.arrival.elapsed().as_secs_f64() * 1e6,
+                    );
+                    let arrival_us =
+                        inc.arrival.saturating_duration_since(t0).as_secs_f64() * 1e6;
+                    let (parallelism, backlog) =
+                        gate_inputs(&placed, pool_workers, &worker_backlog, inc.group);
+                    Self::admit_request(
+                        &mut jit,
+                        &mut streams,
+                        &admission,
+                        &mut metrics,
+                        &slots,
+                        AdmitReq {
+                            group: inc.group,
+                            tenant: inc.tenant,
+                            arrival_us,
+                            deadline_us: arrival_us + inc.slo_us,
+                            independent,
+                            parallelism,
+                            device_backlog_us: backlog,
+                            row: inc.row,
+                        },
+                    );
+                }
+            } else if let Some((acc_rx, _, _)) = &fe {
+                let mut accepted: Vec<Admitted> = Vec::new();
+                if !disconnected {
+                    match acc_rx.recv_timeout(Duration::from_micros(500)) {
+                        Ok(a) => {
+                            accepted.push(a);
+                            while let Ok(a) = acc_rx.try_recv() {
+                                accepted.push(a);
+                            }
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => {}
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            disconnected = true
+                        }
                     }
-                    None => (1.0, None),
-                };
-                Self::admit_request(
-                    &mut jit,
-                    &mut streams,
-                    &admission,
-                    &mut metrics,
-                    &slots,
-                    AdmitReq {
-                        group: inc.group,
-                        tenant: inc.tenant,
-                        arrival_us,
-                        deadline_us: arrival_us + inc.slo_us,
-                        independent,
-                        parallelism,
-                        device_backlog_us: backlog,
-                        row: inc.row,
-                    },
-                );
+                }
+                jit.advance_to(wall_us(t0));
+                view_dirty |= !accepted.is_empty();
+                for adm in accepted {
+                    // how long the accepted request sat between threads
+                    // before being priced into the window
+                    metrics
+                        .frontend_wait
+                        .record_us(adm.arrival.elapsed().as_secs_f64() * 1e6);
+                    // drain accounting advances whether or not the window
+                    // backstop sheds — the frontend nets these counters
+                    // off its cumulative accepts either way
+                    drained[adm.group as usize] += 1;
+                    let s = adm.stream.0 as usize;
+                    if drained_by_stream.len() <= s {
+                        drained_by_stream.resize(s + 1, 0);
+                    }
+                    drained_by_stream[s] += 1;
+                    let arrival_us =
+                        adm.arrival.saturating_duration_since(t0).as_secs_f64() * 1e6;
+                    submit_accepted(
+                        &mut jit,
+                        &mut metrics,
+                        &slots,
+                        Accepted {
+                            stream: adm.stream,
+                            group: adm.group,
+                            tenant: adm.tenant,
+                            slo_us: adm.slo_us,
+                            arrival_us,
+                            independent,
+                            row: adm.row,
+                        },
+                    );
+                }
             }
             // 2. issue every launch the policy allows right now
             let (launches, _wake) = jit.issue_ready();
+            view_dirty |= !launches.is_empty();
             match pool {
                 Some(pool) => {
                     // concurrent launch stage: route each launch through
@@ -1259,6 +1566,7 @@ impl<B: ModelBackend> Server<B> {
             while let Ok(r) = res_rx.try_recv() {
                 results.push(r);
             }
+            view_dirty |= !results.is_empty();
             for (ticket, result) in results {
                 let (worker, group, booked_est) =
                     ticket_route.remove(&ticket).unwrap_or((0, 0, 0.0));
@@ -1320,9 +1628,35 @@ impl<B: ModelBackend> Server<B> {
                     let actions = rb.maybe_rebalance(wall_us(t0), table, topo);
                     if !actions.is_empty() {
                         repin_group_classes(jit.executor_mut(), table, topo, groups);
+                        // replicas/classes moved: estimates and routing
+                        // inputs changed under the last snapshot
+                        view_dirty = true;
                     }
                     metrics.replications = rb.stats.replications;
                     metrics.migrations = rb.stats.migrations;
+                }
+            }
+            // publish a fresh admission snapshot for the frontend stage —
+            // after this iteration's submits, launches and completions,
+            // so the view only ever lags reality, never leads it. Skipped
+            // on idle ticks (state unchanged => the last view is still
+            // exact; the in-flight term only ages conservatively), with a
+            // heartbeat re-publish so healthy-idle never reads as stale.
+            if let Some((_, cell, _)) = &fe {
+                let heartbeat =
+                    last_publish.elapsed().as_secs_f64() * 1e6 > STALE_VIEW_US / 2.0;
+                if view_dirty || heartbeat {
+                    view_seq += 1;
+                    cell.publish(build_view(
+                        view_seq,
+                        &jit,
+                        &placed,
+                        pool_workers,
+                        &worker_backlog,
+                        (&drained, &drained_by_stream),
+                    ));
+                    view_dirty = false;
+                    last_publish = Instant::now();
                 }
             }
             if disconnected && jit.window.is_empty() && jit.inflight_launches() == 0 {
@@ -1330,6 +1664,12 @@ impl<B: ModelBackend> Server<B> {
             }
         }
         gen.join().expect("generator thread");
+        if let Some((acc_rx, _, stage)) = fe {
+            // the frontend exits once the generator's intake disconnects
+            // and it has drained; fold its thread-local accounting in
+            drop(acc_rx);
+            metrics.merge_frontend(&stage.join());
+        }
         metrics.span_us = wall_us(t0);
         metrics.jit = jit.stats.clone();
         ServeReport {
@@ -1712,10 +2052,35 @@ mod tests {
         assert!(!launches.is_empty());
         assert_eq!(jit.window.inflight_in_group(0), 4, "work is on the device");
         assert_eq!(jit.window.pending_in_group(0), 0);
-        // queue-only estimate for a fresh singleton is 550µs (fixed 500 +
-        // 50/row); the in-flight drain adds the pending batch-4 launch's
-        // own scheduler estimate, 700µs. A 600µs deadline survives the old
-        // (queue-only) pricing but is doomed in reality.
+        // a doomed request into an EMPTY queue still runs, in-flight work
+        // notwithstanding (the documented escape hatch: launches already
+        // on the device cannot be delayed by a late newcomer, so the
+        // client gets a late answer rather than none) — this is the
+        // contract `decide`'s old `depth + inflight` argument broke
+        Server::<SimBackend>::admit_request(
+            &mut jit,
+            &mut streams,
+            &admission,
+            &mut metrics,
+            &slots,
+            AdmitReq {
+                group: 0,
+                tenant: 8,
+                arrival_us: 0.0,
+                deadline_us: 600.0,
+                independent: true,
+                parallelism: 1.0,
+                device_backlog_us: None,
+                row: vec![0.0; 4],
+            },
+        );
+        let drops: u64 = metrics.tenants.values().map(|t| t.dropped).sum();
+        assert_eq!(drops, 0, "empty-queue escape hatch fires despite in-flight");
+        assert_eq!(jit.window.pending_in_group(0), 1);
+        // now real work is queued: a doomed request is shed, and its doom
+        // comes from the in-flight term — queue-only pricing is 600µs
+        // (fixed 500 + 2·50/row) but the pending batch-4 launch's own
+        // scheduler estimate adds 700µs, so a 1000µs deadline is hopeless
         Server::<SimBackend>::admit_request(
             &mut jit,
             &mut streams,
@@ -1726,7 +2091,7 @@ mod tests {
                 group: 0,
                 tenant: 9,
                 arrival_us: 0.0,
-                deadline_us: 600.0,
+                deadline_us: 1_000.0,
                 independent: true,
                 parallelism: 1.0,
                 device_backlog_us: None,
@@ -1735,8 +2100,9 @@ mod tests {
         );
         let drops: u64 = metrics.tenants.values().map(|t| t.dropped).sum();
         assert_eq!(drops, 1, "doomed request behind in-flight work is shed");
-        assert_eq!(jit.window.pending_in_group(0), 0, "it was never submitted");
-        // enough slack to survive the full (queue + in-flight) drain: admitted
+        assert_eq!(jit.window.pending_in_group(0), 1, "it was never submitted");
+        // enough slack to survive the full (queue + in-flight) drain
+        // (600µs queue + 700µs in flight = 1300µs): admitted
         Server::<SimBackend>::admit_request(
             &mut jit,
             &mut streams,
@@ -1747,14 +2113,14 @@ mod tests {
                 group: 0,
                 tenant: 10,
                 arrival_us: 0.0,
-                deadline_us: 1_500.0,
+                deadline_us: 2_000.0,
                 independent: true,
                 parallelism: 1.0,
                 device_backlog_us: None,
                 row: vec![0.0; 4],
             },
         );
-        assert_eq!(jit.window.pending_in_group(0), 1);
+        assert_eq!(jit.window.pending_in_group(0), 2);
         let drops: u64 = metrics.tenants.values().map(|t| t.dropped).sum();
         assert_eq!(drops, 1, "no new drop");
     }
@@ -1802,8 +2168,29 @@ mod tests {
         let (launches, _) = jit.issue_ready();
         assert_eq!(launches.len(), 4, "NoBatching issues singletons");
         assert!((jit.inflight_group_est_us(0, 1) - 2_200.0).abs() < 1e-9);
-        // deadline 1500µs would survive one-batch pricing (700 + 550) but
-        // not the true per-launch drain (2200 + 550)
+        // queue one request with slack to spare (2200 in flight + 550 own
+        // launch < 1e9) so the doomed-shed hatch applies to what follows
+        Server::<SimBackend>::admit_request(
+            &mut jit,
+            &mut streams,
+            &admission,
+            &mut metrics,
+            &slots,
+            AdmitReq {
+                group: 0,
+                tenant: 8,
+                arrival_us: 0.0,
+                deadline_us: 1e9,
+                independent: true,
+                parallelism: 1.0,
+                device_backlog_us: None,
+                row: vec![0.0; 4],
+            },
+        );
+        assert_eq!(jit.window.pending_in_group(0), 1);
+        // deadline 2500µs would survive one-batch in-flight pricing (700
+        // + 1100 queue) but not the true per-launch drain (2200 + 1100):
+        // 4 singleton launches each pay their fixed overhead
         Server::<SimBackend>::admit_request(
             &mut jit,
             &mut streams,
@@ -1814,7 +2201,7 @@ mod tests {
                 group: 0,
                 tenant: 9,
                 arrival_us: 0.0,
-                deadline_us: 1_500.0,
+                deadline_us: 2_500.0,
                 independent: true,
                 parallelism: 1.0,
                 device_backlog_us: None,
@@ -1834,14 +2221,14 @@ mod tests {
                 group: 0,
                 tenant: 10,
                 arrival_us: 0.0,
-                deadline_us: 3_000.0,
+                deadline_us: 4_000.0,
                 independent: true,
                 parallelism: 1.0,
                 device_backlog_us: None,
                 row: vec![0.0; 4],
             },
         );
-        assert_eq!(jit.window.pending_in_group(0), 1);
+        assert_eq!(jit.window.pending_in_group(0), 2);
     }
 
     #[test]
@@ -2207,6 +2594,175 @@ mod tests {
     }
 
     #[test]
+    fn pooled_paths_agree_on_admission_inputs() {
+        // regression: on a single-worker fleet the placement-routed and
+        // legacy hash-routed launch stages must feed the gate identical
+        // (parallelism, backlog) inputs — so the two paths admit
+        // identically on the same trace
+        let topo = DeviceTopology::homogeneous(1, DeviceSpec::v100());
+        let costs: Vec<(u64, f64)> = (0..3).map(|g| (g, 1.0)).collect();
+        let table = Placer::place(&costs, &topo);
+        let placed: PlacedState = Some((topo, table, None));
+        let backlog = vec![1_234.0];
+        for g in 0..3u64 {
+            assert_eq!(
+                gate_inputs(&placed, 1, &backlog, g),
+                gate_inputs(&None, 1, &backlog, g),
+                "group {g}"
+            );
+        }
+    }
+
+    #[test]
+    fn unplaced_pooled_backlog_feeds_the_gate() {
+        // satellite bugfix: the legacy hash-routed pool books est_routed
+        // into worker_backlog at launch, so admission must consult the
+        // hash-routed worker's entry instead of flying queue-blind.
+        // NOTE: every public pooled driver builds a placement table, so
+        // this configuration (pool without placement) is reachable only
+        // through `realtime_loop`'s internal signature — the test pins
+        // the internal contract so the legacy fallback arms in
+        // `gate_inputs` and the launch router cannot drift apart.
+        let backlog = vec![5_000.0, 0.0];
+        assert_eq!(gate_inputs(&None, 2, &backlog, 0), (1.0, Some(5_000.0)));
+        assert_eq!(gate_inputs(&None, 2, &backlog, 1), (1.0, Some(0.0)));
+        assert_eq!(gate_inputs(&None, 2, &backlog, 2), (1.0, Some(5_000.0)));
+        // no pool at all: nothing measured, the JIT in-flight term prices
+        assert_eq!(gate_inputs(&None, 0, &backlog, 0), (1.0, None));
+
+        // and the booked backlog actually reaches the shed decision: 5ms
+        // on the routed worker dooms a 2ms deadline that the same gate
+        // admits when the worker is free
+        let slots = vec![ModelSlot {
+            name: "m".to_string(),
+            d_in: 4,
+            max_batch: 16,
+        }];
+        let mut backend = sim();
+        let cfg = BatchPolicy::coalescing().jit_config(&slots, 64);
+        let mut jit: JitCompiler<ServeExecutor<&mut SimBackend>, Vec<f32>> =
+            JitCompiler::with_payloads(
+                cfg,
+                ServeExecutor::new(&mut backend, slots.clone()),
+            );
+        let admission = Admission::default();
+        let mut metrics = ServeMetrics::default();
+        let mut streams: BTreeMap<(u32, u64), u32> = BTreeMap::new();
+        // one queued request so the doomed-shed hatch applies
+        for (tenant, deadline, booked) in
+            [(0u32, 1e9, 0.0), (1, 2_000.0, 5_000.0), (2, 2_000.0, 0.0)]
+        {
+            let (parallelism, backlog) =
+                gate_inputs(&None, 2, &[booked, 0.0], 0);
+            Server::<SimBackend>::admit_request(
+                &mut jit,
+                &mut streams,
+                &admission,
+                &mut metrics,
+                &slots,
+                AdmitReq {
+                    group: 0,
+                    tenant,
+                    arrival_us: 0.0,
+                    deadline_us: deadline,
+                    independent: true,
+                    parallelism,
+                    device_backlog_us: backlog,
+                    row: vec![0.0; 4],
+                },
+            );
+        }
+        assert_eq!(
+            metrics.tenants.get(&1).map(|t| t.dropped),
+            Some(1),
+            "booked backlog must shed the doomed request"
+        );
+        assert_eq!(jit.window.pending_in_group(0), 2, "tenants 0 and 2 admitted");
+    }
+
+    /// Backend that wedges the calling thread for a fixed stall per
+    /// execute — simulates the scheduler thread being stuck mid-iteration
+    /// (inline launch mode executes on the scheduler thread).
+    struct StallingBackend {
+        inner: SimBackend,
+        stall: Duration,
+    }
+
+    impl ModelBackend for StallingBackend {
+        fn execute(&mut self, model: &str, rows: &[Vec<f32>]) -> Result<ModelExec> {
+            std::thread::sleep(self.stall);
+            self.inner.execute(model, rows)
+        }
+
+        fn estimate_us(&self, model: &str, n: u32) -> f64 {
+            self.inner.estimate_us(model, n)
+        }
+
+        fn max_batch(&self, model: &str) -> u32 {
+            self.inner.max_batch(model)
+        }
+
+        fn d_in(&self, model: &str) -> usize {
+            self.inner.d_in(model)
+        }
+
+        fn padded_batch(&self, model: &str, n: u32) -> u32 {
+            self.inner.padded_batch(model, n)
+        }
+    }
+
+    #[test]
+    fn frontend_admission_latency_bounded_under_scheduler_stall() {
+        // the tentpole acceptance: with the scheduler thread stalled 10ms
+        // mid-iteration (every inline execute sleeps), frontend admission
+        // p99 stays under 1ms — decisions ride the published snapshot,
+        // never the scheduler thread. 120 samples so the p99 tolerates a
+        // single OS-scheduling outlier on loaded CI machines.
+        let trace = burst_trace(120, 300.0, 1_000_000); // 1s SLO: none doomed
+        let mut s = Server::new(
+            StallingBackend {
+                inner: sim(),
+                stall: Duration::from_millis(10),
+            },
+            BatchPolicy::coalescing(),
+        );
+        let r = s.run_realtime(&trace, 1.0);
+        assert_eq!(
+            r.metrics.admission_decisions, 120,
+            "every request gets a frontend decision"
+        );
+        let p99 = r.metrics.admission_latency.quantile_us(0.99);
+        assert!(
+            p99 < 1_000.0,
+            "frontend admission p99 {p99}µs must not wait on the scheduler"
+        );
+        assert!(
+            r.metrics.stale_decisions > 0,
+            "stalled iterations must surface as stale-view decisions"
+        );
+        // conservation through the frontend path
+        let drops: u64 = r.metrics.tenants.values().map(|t| t.dropped).sum();
+        assert_eq!(r.metrics.total_completed() + drops, 120);
+
+        // contrast: the synchronous gate decides between channel drains,
+        // so its admission latency eats the stalls
+        let mut s2 = Server::new(
+            StallingBackend {
+                inner: sim(),
+                stall: Duration::from_millis(10),
+            },
+            BatchPolicy::coalescing(),
+        );
+        s2.frontend = false;
+        let r2 = s2.run_realtime(&trace, 1.0);
+        let sync_p99 = r2.metrics.admission_latency.quantile_us(0.99);
+        assert!(
+            sync_p99 > p99,
+            "sync gate p99 {sync_p99}µs must show the stall the frontend {p99}µs hides"
+        );
+    }
+
+    #[test]
     fn realtime_mode_serves_everything() {
         let trace = Trace::generate(&tenants(3, 300.0, 200_000), 10, 11);
         let mut s = Server::new(sim(), BatchPolicy::coalescing());
@@ -2215,6 +2771,28 @@ mod tests {
         assert_eq!(r.metrics.total_completed() + drops, 30);
         assert!(r.metrics.span_us > 0.0);
         assert!(r.metrics.jit.launches > 0, "served through the JIT core");
+        // the frontend stage (default-on) decided every request
+        assert_eq!(r.metrics.admission_decisions, 30);
+        assert!(r.metrics.frontend_wait.count() > 0, "channel wait recorded");
+    }
+
+    #[test]
+    fn realtime_sync_gate_still_serves() {
+        // the pre-frontend path stays available (and measured): decisions
+        // happen at drain time, so latency == channel wait
+        let trace = Trace::generate(&tenants(2, 200.0, 200_000), 8, 31);
+        let mut s = Server::new(sim(), BatchPolicy::coalescing());
+        s.frontend = false;
+        let r = s.run_realtime(&trace, 50.0);
+        let drops: u64 = r.metrics.tenants.values().map(|t| t.dropped).sum();
+        assert_eq!(r.metrics.total_completed() + drops, 16);
+        assert_eq!(r.metrics.admission_decisions, 16);
+        assert_eq!(
+            r.metrics.admission_latency.count(),
+            r.metrics.frontend_wait.count(),
+            "sync gate records decision latency and channel wait together"
+        );
+        assert_eq!(r.metrics.stale_decisions, 0, "no snapshots on the sync path");
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Fixed-size worker pools over std threads + channels (no tokio offline).
 //!
-//! Two pools:
+//! Two pools and a stage:
 //!
 //! * [`ThreadPool`] — stateless FIFO pool: submit closures, optionally
 //!   collect results through `map`, shut down cleanly on drop.
@@ -8,6 +8,9 @@
 //!   serving layer's multi-worker launch stage, where each worker owns a
 //!   full model backend (PJRT client, compile caches, weights) built on
 //!   its own thread, so the state type needs neither `Send` nor `Sync`.
+//! * [`Stage`] — one dedicated, named, long-running pipeline-stage thread
+//!   that hands a value back at shutdown: the serving layer's admission
+//!   frontend worker (its thread-local metrics come home through `join`).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -231,6 +234,35 @@ impl<S> Drop for StatefulPool<S> {
     }
 }
 
+/// A dedicated, named pipeline-stage thread that returns a value when it
+/// finishes. Unlike the pools there is no job channel: the stage runs one
+/// long-lived loop (the closure owns its receivers) and exits when its
+/// input side disconnects. [`Stage::join`] blocks until then and hands
+/// back whatever the closure accumulated (e.g. the admission frontend's
+/// thread-local drop counts and latency histogram).
+pub struct Stage<T> {
+    handle: JoinHandle<T>,
+}
+
+impl<T: Send + 'static> Stage<T> {
+    /// Spawn the stage thread under `name`.
+    pub fn spawn<F>(name: &str, f: F) -> Self
+    where
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let handle = std::thread::Builder::new()
+            .name(name.to_string())
+            .spawn(f)
+            .expect("spawn stage");
+        Stage { handle }
+    }
+
+    /// Wait for the stage to finish and take its result.
+    pub fn join(self) -> T {
+        self.handle.join().expect("stage panicked")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -333,6 +365,23 @@ mod tests {
         drop(held);
         pool.wait_idle();
         assert_eq!(pool.in_flight_of(1), 0);
+    }
+
+    #[test]
+    fn stage_returns_its_accumulated_value() {
+        let (tx, rx) = mpsc::channel::<u64>();
+        let stage = Stage::spawn("test-stage", move || {
+            let mut sum = 0u64;
+            while let Ok(x) = rx.recv() {
+                sum += x;
+            }
+            sum // input disconnected: hand the accumulation back
+        });
+        for i in 1..=4 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        assert_eq!(stage.join(), 10);
     }
 
     #[test]

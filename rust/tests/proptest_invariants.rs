@@ -464,3 +464,269 @@ fn prop_time_mux_latency_monotone_in_position() {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// Admission frontend properties
+// ---------------------------------------------------------------------------
+
+use std::time::Instant;
+
+use vliw_jit::compiler::scheduler::Policy;
+use vliw_jit::serve::admission::{Admission, Admit};
+use vliw_jit::serve::frontend::{
+    snapshot_group, AdmissionView, FrontendGate, GateExtras, GateRequest, GroupView,
+};
+use vliw_jit::serve::{ModelSlot, ServeExecutor, SimBackend};
+
+type ServeJit<'a> = JitCompiler<ServeExecutor<&'a mut SimBackend>, Vec<f32>>;
+
+fn serve_jit(backend: &mut SimBackend, pack_cap: usize) -> ServeJit<'_> {
+    let slots = vec![ModelSlot {
+        name: "m".to_string(),
+        d_in: 4,
+        max_batch: 16,
+    }];
+    let mut coalescer = Coalescer::new(pack_cap, 1.0);
+    coalescer.group_caps.insert(0, pack_cap);
+    let cfg = JitConfig {
+        policy: Policy {
+            coalesce_window_us: 0.0,
+            target_pack: 1,
+            safety_margin_us: 0.0,
+            ..Policy::default()
+        },
+        coalescer,
+        window_capacity: 256,
+        packing_overhead_us: 0.0,
+    };
+    JitCompiler::with_payloads(cfg, ServeExecutor::new(backend, slots))
+}
+
+/// The documented drain-pricing formula, written out independently of the
+/// `GroupView` implementation (the synchronous gate's pre-refactor
+/// arithmetic) — the oracle both gates must match.
+fn reference_drain_est(
+    jit: &ServeJit<'_>,
+    stream: StreamId,
+    independent: bool,
+    parallelism: f64,
+    device_backlog_us: Option<f64>,
+) -> f64 {
+    let group = 0u64;
+    let depth = jit.window.pending_in_group(group);
+    let cap = (jit.pack_cap(group) as u32).max(1);
+    let queued = depth as u32 + 1;
+    let mut est = if independent {
+        let full = queued / cap;
+        let rem = queued % cap;
+        f64::from(full) * jit.executor().estimate_group_us(group, cap)
+            + if rem > 0 {
+                jit.executor().estimate_group_us(group, rem)
+            } else {
+                0.0
+            }
+    } else {
+        let own = jit.window.stream_depth_in_group(stream, group) as u32 + 1;
+        let launches = (jit.window.max_stream_depth_in_group(group) as u32)
+            .max(own)
+            .max(queued.div_ceil(cap));
+        let per_launch = queued.div_ceil(launches).min(cap).max(1);
+        f64::from(launches) * jit.executor().estimate_group_us(group, per_launch)
+    };
+    let parallelism = parallelism.max(1.0);
+    est /= parallelism;
+    est += match device_backlog_us {
+        Some(backlog) => backlog,
+        None => jit.inflight_group_est_us(group, parallelism.round() as u32) / parallelism,
+    };
+    est
+}
+
+fn wrap_view(gv: GroupView) -> AdmissionView {
+    AdmissionView {
+        seq: 1,
+        now_us: 0.0,
+        published: Instant::now(),
+        groups: vec![gv],
+        drained: vec![0],
+        drained_by_stream: Vec::new(),
+    }
+}
+
+#[test]
+fn prop_admission_view_matches_sync_gate_on_identical_state() {
+    // a snapshot published from some scheduler state must make the exact
+    // decision the synchronous gate makes on that same state (no
+    // in-channel backlog): same drain estimate, same accept/reject
+    let mut rng = Rng::new(0xF30A7);
+    for case in 0..150 {
+        let mut backend = SimBackend::default();
+        let pack_cap = 1 + rng.below(16) as usize;
+        let mut jit = serve_jit(&mut backend, pack_cap);
+        // random window state: pending ops across up to 4 streams, some
+        // randomly issued into in-flight launches
+        let n = rng.below(12) as usize;
+        for _ in 0..n {
+            let stream = StreamId(rng.below(4) as u32);
+            let req = DispatchRequest::new(stream, KernelDesc::gemm(1, 4, 1), 1e9)
+                .with_group(0)
+                .with_independent(rng.below(2) == 0);
+            let _ = jit.submit_with(req, vec![0.0; 4]);
+        }
+        if rng.below(2) == 0 {
+            let _ = jit.issue_ready();
+        }
+        let parallelism = 1.0 + rng.below(3) as f64;
+        let backlog = if rng.below(2) == 0 {
+            Some(rng.below(3_000) as f64)
+        } else {
+            None
+        };
+        let admission = Admission::new(1 + rng.below(16) as usize);
+        let gview = snapshot_group(&jit, 0, parallelism, backlog, true);
+        let view = wrap_view(gview.clone());
+        for probe in 0..6 {
+            let stream = StreamId(rng.below(4) as u32);
+            let independent = rng.below(2) == 0;
+            let deadline_us = rng.below(6_000) as f64;
+            // the synchronous gate's decision, via the independently
+            // written reference arithmetic
+            let ref_est =
+                reference_drain_est(&jit, stream, independent, parallelism, backlog);
+            let sync = admission.decide(
+                jit.window.pending_in_group(0),
+                jit.window.inflight_in_group(0),
+                deadline_us - jit.now_us - ref_est,
+            );
+            // the view-based estimate must agree to float precision
+            let view_est = gview.drain_est_us(stream, independent, GateExtras::default());
+            assert!(
+                (view_est - ref_est).abs() < 1e-6,
+                "case {case}.{probe}: view est {view_est} != reference {ref_est}"
+            );
+            // and a fresh frontend gate on the published view decides
+            // identically (fresh = no accepted-in-channel backlog)
+            let mut gate = FrontendGate::new(admission.clone(), 1);
+            let greq = GateRequest {
+                stream,
+                independent,
+                deadline_us,
+            };
+            let frontend = gate.decide(&view, 0, &greq, jit.now_us);
+            assert_eq!(
+                frontend, sync,
+                "case {case}.{probe}: frontend {frontend:?} != sync {sync:?} \
+                 (est {ref_est}, deadline {deadline_us})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_stale_view_never_over_admits() {
+    // however stale the published snapshot, the frontend's own accept
+    // counters bound outstanding work at max_queue — staleness may only
+    // shed extra, never over-admit
+    let mut rng = Rng::new(0xBEE51);
+    for case in 0..120 {
+        let max_queue = 1 + rng.below(12) as usize;
+        let pending = rng.below(max_queue as u64 + 2) as usize;
+        let inflight = rng.below(4) as usize;
+        let gv = GroupView {
+            pending,
+            inflight,
+            pack_cap: 4,
+            est_by_n: vec![100.0, 150.0, 200.0, 250.0],
+            inflight_est_us: rng.below(500) as f64,
+            parallelism: 1.0,
+            device_backlog_us: None,
+            stream_depths: Vec::new(),
+        };
+        let view = wrap_view(gv);
+        let mut gate = FrontendGate::new(Admission::new(max_queue), 1);
+        let mut accepts = 0usize;
+        // the view never refreshes while 3×max_queue requests arrive
+        for i in 0..(max_queue * 3) {
+            let stream = gate.intern(i as u32, 0);
+            let greq = GateRequest {
+                stream,
+                independent: rng.below(2) == 0,
+                deadline_us: 1e9,
+            };
+            if gate.decide(&view, 0, &greq, 0.0) == Admit::Accept {
+                accepts += 1;
+            }
+        }
+        assert!(
+            pending + inflight + accepts <= max_queue,
+            "case {case}: {pending} pending + {inflight} inflight + {accepts} \
+             accepted breaches max_queue {max_queue}"
+        );
+        // with room below the bound, generous deadlines are not shed
+        if pending + inflight < max_queue {
+            assert_eq!(
+                accepts,
+                max_queue - pending - inflight,
+                "case {case}: staleness shed more than the bound requires"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_gate_reconciliation_tracks_scheduler_drains() {
+    // accepted requests temporarily inflate the gate's effective depth;
+    // once the scheduler reports them drained (and the window drained
+    // them onward), capacity returns — over many random publish cycles
+    // the gate's accepted-minus-drained bookkeeping never goes negative
+    // and never lets outstanding exceed max_queue
+    let mut rng = Rng::new(0xD2A1);
+    for _case in 0..100 {
+        let max_queue = 2 + rng.below(10) as usize;
+        let mut gate = FrontendGate::new(Admission::new(max_queue), 1);
+        let mut accepted_total = 0u64;
+        let mut drained_total = 0u64;
+        let mut completed_total = 0u64;
+        for round in 0..20 {
+            // scheduler publishes: everything drained so far that hasn't
+            // completed is pending in the window
+            let pending = (drained_total - completed_total) as usize;
+            let gv = GroupView {
+                pending,
+                inflight: 0,
+                pack_cap: 4,
+                est_by_n: vec![100.0, 150.0, 200.0, 250.0],
+                inflight_est_us: 0.0,
+                parallelism: 1.0,
+                device_backlog_us: None,
+                stream_depths: Vec::new(),
+            };
+            let mut view = wrap_view(gv);
+            view.seq = round;
+            view.drained = vec![drained_total];
+            // a burst of arrivals against this one view
+            for i in 0..rng.below(8) {
+                let stream = gate.intern((round * 100 + i) as u32, 0);
+                let greq = GateRequest {
+                    stream,
+                    independent: true,
+                    deadline_us: 1e9,
+                };
+                if gate.decide(&view, 0, &greq, 0.0) == Admit::Accept {
+                    accepted_total += 1;
+                }
+            }
+            let outstanding = pending as u64 + (accepted_total - drained_total);
+            assert!(
+                outstanding <= max_queue as u64,
+                "round {round}: outstanding {outstanding} > max_queue {max_queue}"
+            );
+            // the scheduler drains some accepted requests and completes
+            // some window work before the next publish
+            let in_channel = accepted_total - drained_total;
+            drained_total += rng.below(in_channel + 1);
+            let queued = drained_total - completed_total;
+            completed_total += rng.below(queued + 1);
+        }
+    }
+}
