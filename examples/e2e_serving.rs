@@ -177,6 +177,37 @@ fn main() -> Result<()> {
         "concurrent path must serve through the JIT core"
     );
 
+    // --- one engine, many modes: replay == replay_placed on one v100 ---
+    // Every drive mode is the same Clock × LaunchStage loop since the
+    // unified-engine refactor: the single-device virtual replay is
+    // literally the placed replay on a one-v100 topology (minus the
+    // per-device metrics), so their schedules agree bit for bit.
+    println!("\n== unified engine (replay == replay_placed on one v100) ==");
+    let eq_tenants = vec![
+        TenantSpec::new(0, "a", 50_000, 300.0, ArrivalKind::Poisson),
+        TenantSpec::new(1, "b", 50_000, 300.0, ArrivalKind::Bursty),
+    ];
+    let eq_trace = Trace::generate(&eq_tenants, 60, 11);
+    let mut eq_plain = Server::new(SimBackend::default(), BatchPolicy::coalescing());
+    let eq_r1 = eq_plain.replay(&eq_trace);
+    let one_v100 = DeviceTopology::from_names(&["v100".to_string()])
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut eq_placed = Server::new(SimBackend::default(), BatchPolicy::coalescing());
+    let (eq_r2, _) = eq_placed.replay_placed(&eq_trace, &one_v100, None);
+    println!(
+        "replay: {} done, span {:.1} ms | replay_placed(1x v100): {} done, span {:.1} ms",
+        eq_r1.metrics.total_completed(),
+        eq_r1.metrics.span_us / 1e3,
+        eq_r2.metrics.total_completed(),
+        eq_r2.metrics.span_us / 1e3,
+    );
+    assert_eq!(
+        eq_r1.metrics.span_us.to_bits(),
+        eq_r2.metrics.span_us.to_bits(),
+        "one engine: the two modes must produce the same schedule"
+    );
+    assert_eq!(eq_r1.metrics.total_completed(), eq_r2.metrics.total_completed());
+
     // --- device placement: a hot model replicates onto a second device ---
     // A heterogeneous v100+t4 fleet serves a skewed two-model workload on
     // the deterministic simulator backend: `hot` overloads the v100 it was

@@ -1,15 +1,17 @@
 //! The JIT issue loop: window + scheduler + coalescer + executor.
 //!
-//! `JitCompiler` is the core shared by every deployment mode:
+//! `JitCompiler` is the core shared by every deployment mode, driven
+//! through exactly two surfaces:
 //!
-//! * **virtual time** (benches, simulator executor): `run_trace` replays a
-//!   timed op trace, advancing a virtual clock through scheduler decisions;
-//! * **real time, synchronous** (`serve::Server::replay`): the driver calls
-//!   `submit_at`/`pump` and real measured executions advance the clock;
-//! * **real time, concurrent** (`serve::Server::run_realtime`): the driver
-//!   calls `issue_ready` to obtain launch tickets, executes them on worker
-//!   threads, and reports back through `finish_launch` — several
-//!   superkernels (for different models) run in parallel.
+//! * **synchronous** (`run_trace`/`pump`, kernel-level benches and the
+//!   simulator executor): replay a timed op trace, executing each launch
+//!   inline and advancing a virtual clock through scheduler decisions;
+//! * **ticketed** (`issue_ready` → `run_issued`/external execution →
+//!   `finish_launch`): the serving engine's drive surface
+//!   ([`crate::serve::engine::Engine`] is the ONE caller) — packs issue
+//!   as tickets, execute on a device timeline, inline on the driver
+//!   thread, or on pool workers, and report back with their outcome;
+//!   several superkernels (for different models) run in parallel.
 //!
 //! The executor is abstract: [`KernelExecutor`] is the payload-free
 //! kernel-level backend (V100 cost model, PJRT superkernels);
@@ -22,18 +24,21 @@
 //!
 //! The two drive modes charge stragglers differently, **on purpose**:
 //!
-//! * **Synchronous** (`launch_sync`, virtual time): eviction happens
-//!   *inside* the simulated launch. The pack is charged the straggler time
-//!   up to the eviction trigger ([`crate::compiler::scheduler::Scheduler::eviction_charge_us`],
+//! * **Synchronous** (`launch_sync`, the kernel-level `run_trace`/`pump`
+//!   mode): eviction happens *inside* the simulated launch. The pack is
+//!   charged the straggler time up to the eviction trigger
+//!   ([`crate::compiler::scheduler::Scheduler::eviction_charge_us`],
 //!   identical to the `should_evict` threshold) **plus a clean re-run at
 //!   estimate** — in a simulated world the killed work really must be
 //!   redone before the ops can complete.
-//! * **Asynchronous** (`finish_launch`, real time): the measured wall
-//!   duration is what it is. By the time the driver reports back, the work
-//!   has already happened, so an over-threshold launch is *counted* as an
-//!   eviction (stats + completion flags, feeding the same §5.2 telemetry)
-//!   but is charged only its measured time — charging a retry would
-//!   double-bill work that was never re-executed.
+//! * **Ticketed** (`finish_launch` — every serving mode, wall or virtual,
+//!   since the unified engine): the reported duration is what it is. By
+//!   the time the driver reports back, the work has already happened (or,
+//!   on a virtual device timeline, has already been modeled end to end),
+//!   so an over-threshold launch is *counted* as an eviction (stats +
+//!   completion flags, feeding the same §5.2 telemetry) but is charged
+//!   only its reported time — charging a retry would double-bill work
+//!   that was never re-executed.
 //!
 //! Both paths are pinned by tests (`sync_eviction_charges_straggler_plus_retry`,
 //! `async_eviction_counts_but_never_recharges`).

@@ -11,7 +11,9 @@
 //!                     topology, machine-readable JSON out with per-device
 //!                     utilization + rebalance counts (the CI smoke);
 //!                     `--frontend` runs the wall-clock async-admission
-//!                     comparison instead (BENCH_4.json)
+//!                     comparison instead (BENCH_4.json); `--engine-matrix`
+//!                     runs one trace through three cells of the unified
+//!                     engine's Clock × LaunchStage matrix (BENCH_5.json)
 //! * `autotune`      — Table-1 style greedy-vs-collaborative search
 //! * `cluster`       — Fig-7 style GEMM shape clustering of the model zoo
 //!
@@ -27,7 +29,7 @@ use vliw_jit::gpu::timeline::SharingModel;
 use vliw_jit::model::zoo;
 use vliw_jit::placement::{DeviceTopology, RebalanceConfig};
 use vliw_jit::runtime::{Manifest, PjrtExecutor};
-use vliw_jit::serve::{BatchPolicy, Server, SimBackend};
+use vliw_jit::serve::{BatchPolicy, ServeMetrics, ServeReport, Server, SimBackend};
 use vliw_jit::util::cli::Args;
 use vliw_jit::util::json::Json;
 use vliw_jit::util::logging;
@@ -245,6 +247,23 @@ fn serve() -> Result<()> {
     Ok(())
 }
 
+/// The serving-report core every bench JSON carries (tenant latencies
+/// merged for the p99): requests, attainment, throughput_rps, p99_us,
+/// mean_pack, launches. One emitter behind BENCH_2..BENCH_5 so the CI
+/// asserts that parse these files cannot be broken by one bench drifting.
+fn report_core_json(m: &ServeMetrics, o: &mut std::collections::BTreeMap<String, Json>) {
+    let mut merged = LatencyHist::new();
+    for t in m.tenants.values() {
+        merged.merge(&t.latency);
+    }
+    o.insert("requests".to_string(), Json::Num(m.total_completed() as f64));
+    o.insert("throughput_rps".to_string(), Json::Num(m.throughput()));
+    o.insert("attainment".to_string(), Json::Num(m.overall_attainment()));
+    o.insert("p99_us".to_string(), Json::Num(merged.quantile_us(0.99)));
+    o.insert("mean_pack".to_string(), Json::Num(m.jit.mean_pack()));
+    o.insert("launches".to_string(), Json::Num(m.jit.launches as f64));
+}
+
 /// Skewed two-model tenant set for the placement bench: 3 of 4 tenants
 /// hammer the `hot` model at full rate, the rest trickle onto `cold` —
 /// the per-device load imbalance the rebalancer exists to fix.
@@ -289,6 +308,10 @@ fn cmd_bench() -> Result<()> {
             "frontend",
             "wall-clock async-admission comparison: the same trace through the synchronous gate and the frontend stage, emitted as BENCH_4.json",
         )
+        .switch(
+            "engine-matrix",
+            "run the trace through three cells of the unified engine's Clock x LaunchStage matrix — (virtual x inline), (virtual x placed), (wall x pooled + frontend) — and emit BENCH_5.json",
+        )
         .switch("static", "pin the initial placement (disable rebalancing)");
     let p = parse(args)?;
     let n = p.get_u64("tenants").map_err(|e| anyhow::anyhow!("{e}"))? as u32;
@@ -296,8 +319,13 @@ fn cmd_bench() -> Result<()> {
     let per = p.get_usize("requests").map_err(|e| anyhow::anyhow!("{e}"))?;
     let seed = p.get_u64("seed").map_err(|e| anyhow::anyhow!("{e}"))?;
     let frontend = p.get_bool("frontend");
+    let engine_matrix = p.get_bool("engine-matrix");
+    if frontend && engine_matrix {
+        bail!("--frontend and --engine-matrix are separate bench steps; pick one");
+    }
     let out = match p.get("out") {
         "" if frontend => "BENCH_4.json".to_string(),
+        "" if engine_matrix => "BENCH_5.json".to_string(),
         "" => "BENCH_3.json".to_string(),
         o => o.to_string(),
     };
@@ -322,6 +350,10 @@ fn cmd_bench() -> Result<()> {
         other => bail!("unknown --workload '{other}' (valid: skewed, mixed)"),
     };
     let trace = Trace::generate(&tenants, per, seed);
+    if engine_matrix {
+        let speedup = p.get_f64("speedup").map_err(|e| anyhow::anyhow!("{e}"))?;
+        return bench_engine_matrix(&trace, &topo, rebalance, speedup, &out);
+    }
     if frontend {
         // the admission comparison runs the inline realtime driver — a
         // placed topology does not apply, so reject a NON-DEFAULT
@@ -351,27 +383,18 @@ fn cmd_bench() -> Result<()> {
     println!("placement: max replicas per group = {max_replicas}");
 
     let m = &report.metrics;
-    let mut merged = LatencyHist::new();
-    for t in m.tenants.values() {
-        merged.merge(&t.latency);
-    }
     let mut o = std::collections::BTreeMap::new();
     o.insert("bench".to_string(), Json::Str("serve_sim".to_string()));
     o.insert("policy".to_string(), Json::Str(report.policy.to_string()));
-    o.insert("requests".to_string(), Json::Num(m.total_completed() as f64));
-    o.insert("throughput_rps".to_string(), Json::Num(m.throughput()));
-    o.insert("mean_pack".to_string(), Json::Num(m.jit.mean_pack()));
+    report_core_json(m, &mut o);
     o.insert(
         "pack_efficiency".to_string(),
         Json::Num(m.jit.pack_efficiency()),
     );
-    o.insert("p99_us".to_string(), Json::Num(merged.quantile_us(0.99)));
-    o.insert("attainment".to_string(), Json::Num(m.overall_attainment()));
     o.insert(
         "same_stream_rows".to_string(),
         Json::Num(m.same_stream_rows as f64),
     );
-    o.insert("launches".to_string(), Json::Num(m.jit.launches as f64));
     o.insert("evictions".to_string(), Json::Num(m.jit.evictions as f64));
     let devices_json: Vec<Json> = m
         .devices
@@ -422,19 +445,10 @@ fn bench_frontend(trace: &Trace, speedup: f64, out: &str) -> Result<()> {
 
     let m = &fe_report.metrics;
     let sm = &sync_report.metrics;
-    let mut merged = LatencyHist::new();
-    for t in m.tenants.values() {
-        merged.merge(&t.latency);
-    }
     let mut o = std::collections::BTreeMap::new();
     o.insert("bench".to_string(), Json::Str("serve_frontend".to_string()));
     o.insert("policy".to_string(), Json::Str(fe_report.policy.to_string()));
-    o.insert("requests".to_string(), Json::Num(m.total_completed() as f64));
-    o.insert("throughput_rps".to_string(), Json::Num(m.throughput()));
-    o.insert("attainment".to_string(), Json::Num(m.overall_attainment()));
-    o.insert("p99_us".to_string(), Json::Num(merged.quantile_us(0.99)));
-    o.insert("mean_pack".to_string(), Json::Num(m.jit.mean_pack()));
-    o.insert("launches".to_string(), Json::Num(m.jit.launches as f64));
+    report_core_json(m, &mut o);
     o.insert(
         "admission_p99_us".to_string(),
         Json::Num(m.admission_latency.quantile_us(0.99)),
@@ -463,6 +477,59 @@ fn bench_frontend(trace: &Trace, speedup: f64, out: &str) -> Result<()> {
         "sync_throughput_rps".to_string(),
         Json::Num(sm.throughput()),
     );
+    std::fs::write(out, Json::Obj(o).to_string_compact())
+        .with_context(|| format!("write {out}"))?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// The `bench --engine-matrix` step (BENCH_5): one trace through three
+/// cells of the unified engine's Clock × LaunchStage mode matrix —
+/// (virtual × inline), (virtual × placed), (wall × pooled + frontend).
+/// Before the engine refactor these were three hand-written loops; now
+/// each cell is a thin constructor over the same pipeline, so CI asserts
+/// that no cell's attainment falls behind the earlier BENCH_2/3/4 steps.
+fn bench_engine_matrix(
+    trace: &Trace,
+    topo: &DeviceTopology,
+    rebalance: Option<RebalanceConfig>,
+    speedup: f64,
+    out: &str,
+) -> Result<()> {
+    // virtual × inline: the single-worker timeline cell (Server::replay)
+    let mut s1 = Server::new(SimBackend::default(), BatchPolicy::coalescing());
+    let r1 = s1.replay(trace);
+    // virtual × placed: fleet device timelines (+ rebalance unless --static)
+    let mut s2 = Server::new(SimBackend::default(), BatchPolicy::coalescing());
+    let (r2, _) = s2.replay_placed(trace, topo, rebalance);
+    // wall × pooled + frontend: concurrent launch stage, async admission
+    let mut s3 = Server::new(SimBackend::default(), BatchPolicy::coalescing());
+    s3.frontend = true;
+    let r3 = s3.run_realtime_pooled(trace, speedup, 2, |_| SimBackend::default());
+
+    let cells: [(&str, &ServeReport); 3] = [
+        ("virtual_inline", &r1),
+        ("virtual_placed", &r2),
+        ("wall_pooled_frontend", &r3),
+    ];
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("bench".to_string(), Json::Str("engine_matrix".to_string()));
+    let mut arr = Vec::new();
+    for (name, r) in cells {
+        println!("--- {name} ---\n{}", r.render());
+        let m = &r.metrics;
+        let mut c = std::collections::BTreeMap::new();
+        c.insert("cell".to_string(), Json::Str(name.to_string()));
+        report_core_json(m, &mut c);
+        c.insert(
+            "admission_decisions".to_string(),
+            Json::Num(m.admission_decisions as f64),
+        );
+        arr.push(Json::Obj(c));
+        // flat per-cell attainment keys for simple CI asserts
+        o.insert(format!("{name}_attainment"), Json::Num(m.overall_attainment()));
+    }
+    o.insert("cells".to_string(), Json::Arr(arr));
     std::fs::write(out, Json::Obj(o).to_string_compact())
         .with_context(|| format!("write {out}"))?;
     println!("wrote {out}");

@@ -1,0 +1,1883 @@
+//! The one serving event loop: a Clock × LaunchStage pipeline.
+//!
+//! Every drive mode in this repo is the SAME loop — admit → issue →
+//! launch → complete → rebalance — parameterized over two small traits
+//! instead of five hand-written copies:
+//!
+//! * a [`Clock`] decides how time advances between events:
+//!   [`VirtualClock`] jumps deterministically to the next event (trace
+//!   replays, benches); [`WallClock`] wraps `Instant` — real time flows on
+//!   its own and the loop paces on bounded channel waits;
+//! * a [`LaunchStage`] decides where an issued pack executes:
+//!   [`TimelineStage`] models per-worker busy-until device timelines
+//!   (virtual time; completions ordered by a `BinaryHeap` keyed on
+//!   `(done_us, ticket)`); [`InlineStage`] executes on the driver thread
+//!   (wall clock, the single-device realtime mode); [`PoolStage`] routes
+//!   to [`StatefulPool`] workers, one backend each (wall clock,
+//!   concurrent launches).
+//!
+//! Placement and the admission frontend are *orthogonal options*, not
+//! modes: an optional [`Placement`] (topology + group→replicas table +
+//! optional rebalancer) makes any stage route launches to the
+//! least-loaded replica of the launch's group, and the wall-clock runs
+//! may put admission on a dedicated frontend thread (see
+//! [`crate::serve::frontend`]); the virtual runs keep the synchronous
+//! gate so replays stay deterministic.
+//!
+//! # The mode matrix
+//!
+//! | cell                          | constructor                      | `vliwd` flags                        |
+//! |-------------------------------|----------------------------------|--------------------------------------|
+//! | virtual × timeline(1)         | [`crate::serve::Server::replay`] | `bench` (BENCH_2 mixed workload)     |
+//! | virtual × timeline(fleet)     | [`crate::serve::Server::replay_placed`] | `bench --devices v100,t4 [--static]` |
+//! | wall × inline [× frontend]    | [`crate::serve::Server::run_realtime`] | `serve` / `bench --frontend` (`--frontend on|off`) |
+//! | wall × pool [× frontend]      | [`crate::serve::Server::run_realtime_pooled`] | `serve --workers N`           |
+//! | wall × pool × placed [× fe]   | [`crate::serve::Server::run_realtime_placed`] | `serve --devices v100,t4`     |
+//!
+//! `vliwd bench --engine-matrix` smokes three cells of this table through
+//! one trace and emits `BENCH_5.json` (asserted in CI).
+//!
+//! Two cells are *defined* rather than special-cased:
+//!
+//! * **virtual × inline** is realized as a single-worker
+//!   [`TimelineStage`]: a virtual clock cannot block on an inline
+//!   execution, so "one device executing serially" IS a one-entry
+//!   busy-until timeline. This makes `replay` and `replay_placed` on a
+//!   single homogeneous v100 *the same computation* (pinned by
+//!   `prop_replay_and_replay_placed_agree_on_single_v100`).
+//! * **virtual × frontend** stays unreachable on purpose: a wall-clock
+//!   frontend thread would race the virtual clock and destroy replay
+//!   determinism. Virtual runs price through the same
+//!   [`frontend::GroupView`] pricing path synchronously, so the two gates
+//!   cannot disagree on identical state.
+//!
+//! # Threading model (wall clock)
+//!
+//! A generator thread paces client arrivals into an intake channel. With
+//! the frontend on (the default), a dedicated frontend-stage thread owns
+//! that channel, the admission gate and the stream-interning table,
+//! pricing every request against the [`frontend::AdmissionView`] snapshot
+//! this loop publishes once per iteration — accept/reject never waits on
+//! an issue/launch/collect iteration. Accepted requests flow here as
+//! pre-priced [`FromFrontend::Admitted`] records; the loop owns the JIT
+//! window, the clock, the launch stage, the per-worker backlog accounting
+//! and the drain counters, and is the only snapshot writer. With the
+//! frontend off, the gate runs synchronously between channel drains.
+//!
+//! The frontend's per-(tenant, model) accept counters and this loop's
+//! mirrored drain counters are compacted epoch-wise: a stream idle for a
+//! full [`frontend::FRONTEND_EPOCH_US`] whose accepts the scheduler has
+//! fully drained is retired on the gate ([`FrontendGate::advance_epoch`])
+//! and a [`FromFrontend::Retire`] record tells this loop to drop its
+//! mirror — bookkeeping stays bounded by the *live* stream set under
+//! tenant churn, not by every pair ever served. Retired pairs that return
+//! are interned as fresh stream ids (ids are never reused), which matches
+//! the window's own fully-drained-stream-restarts-clean semantics.
+//!
+//! # Straggler accounting
+//!
+//! The engine drives the JIT exclusively through
+//! [`JitCompiler::issue_ready`] / [`JitCompiler::finish_launch`], so all
+//! serving modes share the *asynchronous* eviction contract (measured or
+//! modeled time stands; evictions are counted, never re-charged). The
+//! synchronous retry-charging contract lives on in the kernel-level
+//! [`JitCompiler::run_trace`]/`pump` drive mode — see the module docs in
+//! [`crate::compiler::jit`].
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::compiler::ir::{DispatchRequest, StreamId};
+use crate::compiler::jit::{JitCompiler, OpCompletion, PackRun, PendingLaunch};
+use crate::gpu::kernel::KernelDesc;
+use crate::placement::{
+    DeviceTopology, Placer, PlacementTable, Rebalancer,
+};
+use crate::runtime::executor::ModelExec;
+use crate::runtime::golden;
+use crate::serve::admission::{Admission, Admit};
+use crate::serve::frontend::{
+    self, AdmissionView, FrontendGate, FrontendReport, GateExtras, GateRequest,
+    ViewCell, FRONTEND_EPOCH_US, STALE_VIEW_US,
+};
+use crate::serve::metrics::ServeMetrics;
+use crate::serve::server::{ModelBackend, ModelSlot, ServeExecutor, ServeReport};
+use crate::util::threadpool::{Stage, StatefulPool};
+use crate::workload::trace::Trace;
+
+/// The serving JIT instance every stage drives: executor = the serving
+/// adapter, payload = the request row.
+pub type ServeJit<X> = JitCompiler<ServeExecutor<X>, Vec<f32>>;
+
+// ---------------------------------------------------------------------------
+// Clock
+// ---------------------------------------------------------------------------
+
+/// How time advances between engine events.
+pub trait Clock {
+    /// True for deterministic virtual time (sync admission gate, event
+    /// jumps); false for the wall clock (channel-paced, frontend allowed).
+    fn is_virtual(&self) -> bool;
+    /// The driver's current time, µs since the run's origin.
+    fn now_us(&self) -> f64;
+    /// Advance toward `t_us`. Virtual time jumps exactly; wall time is a
+    /// no-op (real time flows on its own; pacing happens in the engine's
+    /// bounded channel waits).
+    fn advance_to(&mut self, t_us: f64);
+    /// The wall instant that maps to `now_us() == 0` — the origin every
+    /// arrival/completion stamp is measured against. Only meaningful for
+    /// wall clocks; virtual clocks have no wall origin.
+    fn origin(&self) -> Instant;
+}
+
+/// Deterministic virtual time: the engine jumps it to the next event
+/// (arrival, device completion, or scheduler wake) — nothing ever waits.
+pub struct VirtualClock {
+    now_us: f64,
+    created: Instant,
+}
+
+impl VirtualClock {
+    /// A virtual clock at t = 0.
+    pub fn new() -> Self {
+        VirtualClock {
+            now_us: 0.0,
+            created: Instant::now(),
+        }
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn is_virtual(&self) -> bool {
+        true
+    }
+
+    fn now_us(&self) -> f64 {
+        self.now_us
+    }
+
+    fn advance_to(&mut self, t_us: f64) {
+        self.now_us = self.now_us.max(t_us);
+    }
+
+    fn origin(&self) -> Instant {
+        self.created
+    }
+}
+
+/// Real time: `now_us` is the elapsed wall clock since construction; the
+/// engine paces its loop on bounded channel waits instead of jumping.
+pub struct WallClock {
+    t0: Instant,
+}
+
+impl WallClock {
+    /// A wall clock whose origin is *now*.
+    pub fn new() -> Self {
+        WallClock { t0: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn is_virtual(&self) -> bool {
+        false
+    }
+
+    fn now_us(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64() * 1e6
+    }
+
+    fn advance_to(&mut self, _t_us: f64) {}
+
+    fn origin(&self) -> Instant {
+        self.t0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Placement (orthogonal engine option)
+// ---------------------------------------------------------------------------
+
+/// The launch-routing option: which worker runs a launch, how the gate
+/// prices a group's drain parallelism, and (optionally) how the table
+/// evolves between observation windows.
+pub struct Placement {
+    /// The fleet: workers backed by device specs, dedup'd into classes.
+    pub topo: DeviceTopology,
+    /// group → replicas; launches route to the least-loaded replica.
+    pub table: PlacementTable,
+    /// Hot-group replication / cold-group migration between windows.
+    pub rebal: Option<Rebalancer>,
+    /// Register and account per-device metrics (`ServeMetrics::devices`).
+    /// Off for the anonymous homogeneous pools (`replay`,
+    /// `run_realtime_pooled`), whose real hardware the topology does not
+    /// describe — `metrics.devices` staying empty is their documented
+    /// contract.
+    pub report_devices: bool,
+}
+
+/// Seed the placement table: LPT over each group's total estimated work
+/// in the trace (batch-1 estimates × request count). Shared by every
+/// placed constructor so initial placements cannot diverge.
+pub fn seed_placement<B: ModelBackend>(
+    backend: &B,
+    trace: &Trace,
+    index: &BTreeMap<String, u64>,
+    groups: u64,
+    topo: &DeviceTopology,
+) -> PlacementTable {
+    // a single worker hosts every group no matter the weights: skip the
+    // O(trace) estimate pass (`replay` seeds a 1-v100 table on every call)
+    let costs: Vec<(u64, f64)> = if topo.len() <= 1 {
+        (0..groups).map(|g| (g, 1.0)).collect()
+    } else {
+        let mut work: BTreeMap<u64, f64> = (0..groups).map(|g| (g, 0.0)).collect();
+        for r in &trace.requests {
+            *work.entry(index[&r.model]).or_insert(0.0) +=
+                backend.estimate_us(&r.model, 1);
+        }
+        work.into_iter().collect()
+    };
+    Placer::place(&costs, topo)
+}
+
+/// Effective drain parallelism of a group's replica set: how many
+/// primary-class-equivalents serve it (Σ replica speed ÷ primary-replica
+/// speed, so the units match the estimate, which is priced on the primary
+/// class). Two equal replicas = 2.0; a v100 primary with a k80 replica =
+/// ~1.25 — dividing the drain by the raw replica count would underprice
+/// it on mixed fleets and re-admit doomed requests.
+pub fn drain_parallelism(table: &PlacementTable, topo: &DeviceTopology, group: u64) -> f64 {
+    let reps = table.replicas_of(group);
+    match reps.first() {
+        None => 1.0,
+        Some(p) => {
+            let primary = topo.speed_of_worker(*p).max(1e-9);
+            (reps.iter().map(|w| topo.speed_of_worker(*w)).sum::<f64>() / primary)
+                .max(1.0)
+        }
+    }
+}
+
+/// Pin every group's primary estimation class to its current primary
+/// replica's device class (at startup and after each rebalance).
+fn repin_group_classes<B: ModelBackend>(
+    exec: &mut ServeExecutor<B>,
+    table: &PlacementTable,
+    topo: &DeviceTopology,
+    groups: u64,
+) {
+    for g in 0..groups {
+        if let Some(w) = table.primary_of(g) {
+            exec.set_group_class(g, topo.class_of(w));
+        }
+    }
+}
+
+/// Admission gate inputs for a placed group: speed-weighted replica
+/// parallelism plus the least-loaded replica's measured backlog (per
+/// `backlog_of`, the stage's own signal — booked pool estimates or
+/// device-timeline queues). The ONE implementation behind every placed
+/// stage, so two stages can never disagree on how a replica set is
+/// priced.
+fn placed_gate_inputs(
+    p: &Placement,
+    group: u64,
+    backlog_of: impl Fn(usize) -> f64,
+) -> (f64, Option<f64>) {
+    let b = p
+        .table
+        .replicas_of(group)
+        .iter()
+        .map(|w| backlog_of(*w))
+        .fold(f64::INFINITY, f64::min);
+    (
+        drain_parallelism(&p.table, &p.topo, group),
+        Some(if b.is_finite() { b } else { 0.0 }),
+    )
+}
+
+/// Admission gate inputs for a *pool-backed* stage: (drain parallelism,
+/// measured booked backlog of the worker the launch would land on).
+/// Placed pools price the least-loaded replica's booked backlog; the
+/// legacy hash-routed pool prices the hash-routed worker's entry; with no
+/// workers nothing is measured and the JIT's in-flight term prices the
+/// drain. Kept as a free function so the legacy arm and the launch router
+/// cannot drift apart (pinned by `pooled_paths_agree_on_admission_inputs`).
+pub(crate) fn pool_gate_inputs(
+    placement: Option<&Placement>,
+    pool_workers: usize,
+    worker_backlog: &[f64],
+    group: u64,
+) -> (f64, Option<f64>) {
+    match placement {
+        Some(p) => placed_gate_inputs(p, group, |w| {
+            worker_backlog.get(w).copied().unwrap_or(0.0)
+        }),
+        None if pool_workers > 0 => (
+            1.0,
+            Some(
+                worker_backlog
+                    .get(group as usize % pool_workers)
+                    .copied()
+                    .unwrap_or(0.0),
+            ),
+        ),
+        None => (1.0, None),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LaunchStage
+// ---------------------------------------------------------------------------
+
+/// One finished launch handed back by a stage, ready to fold into the JIT.
+pub struct StageDone {
+    /// The launch ticket ([`JitCompiler::finish_launch`] handle).
+    pub ticket: u64,
+    /// Completion stamp on the run's clock, µs.
+    pub done_us: f64,
+    /// Worker that executed it (0 for inline).
+    pub worker: usize,
+    /// Coalescing group of the launch (rebalancer observation key).
+    pub group: u64,
+    /// Execution outcome.
+    pub run: PackRun,
+}
+
+/// Where issued packs execute. A stage owns the routing decision, the
+/// per-worker load signals the gate prices, and the completion events the
+/// engine folds back into the JIT.
+pub trait LaunchStage<X: ModelBackend> {
+    /// Route and begin one issued launch at `now_us`.
+    fn launch(
+        &mut self,
+        jit: &mut ServeJit<X>,
+        slots: &[ModelSlot],
+        placement: Option<&Placement>,
+        group: u64,
+        l: PendingLaunch,
+        now_us: f64,
+    );
+    /// Launches finished by `now_us`, in a deterministic order where the
+    /// stage is deterministic. `block` permits one bounded wait (wall
+    /// drain phase: arrivals are gone, only results remain).
+    fn poll(
+        &mut self,
+        placement: Option<&Placement>,
+        now_us: f64,
+        block: bool,
+    ) -> Vec<StageDone>;
+    /// The next completion instant (virtual clocks advance to it).
+    fn next_done_us(&self) -> Option<f64> {
+        None
+    }
+    /// (drain parallelism, measured backlog) the admission gate prices
+    /// for one more request of `group` under this stage's routing.
+    fn gate_inputs(
+        &self,
+        placement: Option<&Placement>,
+        group: u64,
+        now_us: f64,
+    ) -> (f64, Option<f64>);
+}
+
+/// One issued-but-unfinished launch on a device timeline, ordered by
+/// (done_us, ticket) so the pop order — hence the whole virtual replay —
+/// is deterministic.
+struct TimelineEntry {
+    done_us: f64,
+    ticket: u64,
+    worker: usize,
+    group: u64,
+    run: PackRun,
+}
+
+impl PartialEq for TimelineEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.done_us.total_cmp(&other.done_us) == std::cmp::Ordering::Equal
+            && self.ticket == other.ticket
+    }
+}
+
+impl Eq for TimelineEntry {}
+
+impl PartialOrd for TimelineEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for TimelineEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.done_us
+            .total_cmp(&other.done_us)
+            .then(self.ticket.cmp(&other.ticket))
+    }
+}
+
+/// Virtual-time device timelines: each worker is a busy-until scalar, a
+/// launch queues at `max(free_at, now)` and completes `duration / speed`
+/// later. In-flight completions live in a min-heap keyed on `(done_us,
+/// ticket)` — popping due entries is O(log n) per launch, replacing the
+/// old linear min-scan + `swap_remove` that made deep device queues
+/// quadratic to replay.
+pub struct TimelineStage {
+    free_at: Vec<f64>,
+    inflight: BinaryHeap<Reverse<TimelineEntry>>,
+}
+
+impl TimelineStage {
+    /// Timelines for `workers` devices (≥ 1). A single worker is the
+    /// virtual single-device "inline" cell of the mode matrix.
+    pub fn new(workers: usize) -> Self {
+        TimelineStage {
+            free_at: vec![0.0; workers.max(1)],
+            inflight: BinaryHeap::new(),
+        }
+    }
+}
+
+impl<X: ModelBackend> LaunchStage<X> for TimelineStage {
+    fn launch(
+        &mut self,
+        jit: &mut ServeJit<X>,
+        _slots: &[ModelSlot],
+        placement: Option<&Placement>,
+        group: u64,
+        l: PendingLaunch,
+        now_us: f64,
+    ) {
+        let worker = match placement {
+            Some(p) => p.table.route(group, &self.free_at),
+            None => 0,
+        };
+        let (class, speed) = match placement {
+            Some(p) => (p.topo.class_of(worker), p.topo.speed_of_worker(worker)),
+            None => (0, 1.0),
+        };
+        // re-price on the routed class: a slow replica running at its own
+        // speed is not a straggler
+        let est_routed = jit.executor().estimate_group_on_class_us(
+            group,
+            class,
+            l.pack.ops.len() as u32,
+        );
+        jit.reprice_pending(l.ticket, est_routed);
+        let mut run = jit.run_issued(l.ticket);
+        run.duration_us /= speed.max(1e-9);
+        run.device_class = class;
+        let start = self.free_at[worker].max(now_us);
+        let done_us = start + run.duration_us;
+        self.free_at[worker] = done_us;
+        self.inflight.push(Reverse(TimelineEntry {
+            done_us,
+            ticket: l.ticket,
+            worker,
+            group,
+            run,
+        }));
+    }
+
+    fn poll(
+        &mut self,
+        _placement: Option<&Placement>,
+        now_us: f64,
+        _block: bool,
+    ) -> Vec<StageDone> {
+        let mut out = Vec::new();
+        while self
+            .inflight
+            .peek()
+            .is_some_and(|r| r.0.done_us <= now_us + 1e-9)
+        {
+            let Reverse(e) = self.inflight.pop().expect("peeked entry");
+            out.push(StageDone {
+                ticket: e.ticket,
+                done_us: e.done_us,
+                worker: e.worker,
+                group: e.group,
+                run: e.run,
+            });
+        }
+        out
+    }
+
+    fn next_done_us(&self) -> Option<f64> {
+        self.inflight.peek().map(|r| r.0.done_us)
+    }
+
+    fn gate_inputs(
+        &self,
+        placement: Option<&Placement>,
+        group: u64,
+        now_us: f64,
+    ) -> (f64, Option<f64>) {
+        match placement {
+            // the true wait: queued device time on the least-loaded replica
+            Some(p) => placed_gate_inputs(p, group, |w| {
+                (self.free_at[w] - now_us).max(0.0)
+            }),
+            None => (1.0, Some((self.free_at[0] - now_us).max(0.0))),
+        }
+    }
+}
+
+/// Wall-clock inline execution on the driver thread: the launch runs to
+/// completion inside `launch` and is handed back at the next poll with
+/// the post-execution wall stamp.
+pub struct InlineStage {
+    ready: Vec<(u64, u64, PackRun)>,
+}
+
+impl InlineStage {
+    /// A fresh inline stage.
+    pub fn new() -> Self {
+        InlineStage { ready: Vec::new() }
+    }
+}
+
+impl Default for InlineStage {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<X: ModelBackend> LaunchStage<X> for InlineStage {
+    fn launch(
+        &mut self,
+        jit: &mut ServeJit<X>,
+        _slots: &[ModelSlot],
+        _placement: Option<&Placement>,
+        group: u64,
+        l: PendingLaunch,
+        _now_us: f64,
+    ) {
+        let run = jit.run_issued(l.ticket);
+        self.ready.push((l.ticket, group, run));
+    }
+
+    fn poll(
+        &mut self,
+        _placement: Option<&Placement>,
+        now_us: f64,
+        _block: bool,
+    ) -> Vec<StageDone> {
+        self.ready
+            .drain(..)
+            .map(|(ticket, group, run)| StageDone {
+                ticket,
+                done_us: now_us,
+                worker: 0,
+                group,
+                run,
+            })
+            .collect()
+    }
+
+    fn gate_inputs(
+        &self,
+        _placement: Option<&Placement>,
+        _group: u64,
+        _now_us: f64,
+    ) -> (f64, Option<f64>) {
+        (1.0, None)
+    }
+}
+
+/// Wall-clock concurrent launches on a [`StatefulPool`]: each worker owns
+/// its own backend; results come home on a channel. The stage books an
+/// estimated backlog per worker at launch (conservative: head-job
+/// progress is not subtracted — a wall-clock driver cannot observe it)
+/// and releases it at completion; that booked backlog is the gate's
+/// device signal.
+pub struct PoolStage<'p, W> {
+    pool: &'p StatefulPool<W>,
+    res_tx: mpsc::Sender<(u64, Result<ModelExec, String>)>,
+    res_rx: mpsc::Receiver<(u64, Result<ModelExec, String>)>,
+    /// launch ticket → (worker, group, booked estimate µs)
+    ticket_route: BTreeMap<u64, (usize, u64, f64)>,
+    worker_backlog: Vec<f64>,
+}
+
+impl<'p, W> PoolStage<'p, W> {
+    /// A stage over an existing pool.
+    pub fn new(pool: &'p StatefulPool<W>) -> Self {
+        let (res_tx, res_rx) = mpsc::channel();
+        let workers = pool.workers();
+        PoolStage {
+            pool,
+            res_tx,
+            res_rx,
+            ticket_route: BTreeMap::new(),
+            worker_backlog: vec![0.0; workers],
+        }
+    }
+
+    fn convert(
+        &mut self,
+        placement: Option<&Placement>,
+        now_us: f64,
+        (ticket, result): (u64, Result<ModelExec, String>),
+    ) -> StageDone {
+        let (worker, group, booked) =
+            self.ticket_route.remove(&ticket).unwrap_or((0, 0, 0.0));
+        if let Some(b) = self.worker_backlog.get_mut(worker) {
+            *b = (*b - booked).max(0.0);
+        }
+        let mut run = match result {
+            Ok(exec) => PackRun {
+                duration_us: exec.duration_us,
+                executed: exec.batch,
+                ok: true,
+                device_class: 0,
+            },
+            Err(e) => {
+                crate::util::logging::emit(
+                    crate::util::logging::Level::Error,
+                    format_args!("pooled execute failed: {e}"),
+                );
+                PackRun {
+                    duration_us: 0.0,
+                    executed: 0,
+                    ok: false,
+                    device_class: 0,
+                }
+            }
+        };
+        if let Some(p) = placement {
+            run.device_class = p.topo.class_of(worker);
+        }
+        StageDone {
+            ticket,
+            done_us: now_us,
+            worker,
+            group,
+            run,
+        }
+    }
+}
+
+impl<W: ModelBackend + 'static, X: ModelBackend> LaunchStage<X> for PoolStage<'_, W> {
+    fn launch(
+        &mut self,
+        jit: &mut ServeJit<X>,
+        slots: &[ModelSlot],
+        placement: Option<&Placement>,
+        group: u64,
+        l: PendingLaunch,
+        _now_us: f64,
+    ) {
+        // route through the placement table to the least-loaded replica
+        // of the launch's group (legacy group-hash when unplaced)
+        let worker = match placement {
+            Some(p) => {
+                let loads: Vec<f64> = (0..self.pool.workers())
+                    .map(|w| self.pool.in_flight_of(w) as f64)
+                    .collect();
+                p.table.route(group, &loads)
+            }
+            None => group as usize % self.pool.workers(),
+        };
+        let est_routed = match placement {
+            Some(p) => jit.executor().estimate_group_on_class_us(
+                group,
+                p.topo.class_of(worker),
+                l.pack.ops.len() as u32,
+            ),
+            None => l.est_us,
+        };
+        jit.reprice_pending(l.ticket, est_routed);
+        if let Some(b) = self.worker_backlog.get_mut(worker) {
+            *b += est_routed;
+        }
+        self.ticket_route.insert(l.ticket, (worker, group, est_routed));
+        let model = slots[group as usize].name.clone();
+        let rows: Vec<Vec<f32>> = jit
+            .payloads_of(&l.pack.ops)
+            .into_iter()
+            .cloned()
+            .collect();
+        let res_tx = self.res_tx.clone();
+        let ticket = l.ticket;
+        self.pool.submit_to(worker, move |backend: &mut W| {
+            let r = backend.execute(&model, &rows).map_err(|e| e.to_string());
+            let _ = res_tx.send((ticket, r));
+        });
+    }
+
+    fn poll(
+        &mut self,
+        placement: Option<&Placement>,
+        now_us: f64,
+        block: bool,
+    ) -> Vec<StageDone> {
+        let mut out = Vec::new();
+        // block briefly when only results remain (arrival channel gone) —
+        // avoids a busy spin on the disconnected intake
+        if block && !self.ticket_route.is_empty() {
+            if let Ok(r) = self.res_rx.recv_timeout(Duration::from_micros(500)) {
+                out.push(self.convert(placement, now_us, r));
+            }
+        }
+        while let Ok(r) = self.res_rx.try_recv() {
+            out.push(self.convert(placement, now_us, r));
+        }
+        out
+    }
+
+    fn gate_inputs(
+        &self,
+        placement: Option<&Placement>,
+        group: u64,
+        _now_us: f64,
+    ) -> (f64, Option<f64>) {
+        pool_gate_inputs(placement, self.pool.workers(), &self.worker_backlog, group)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Requests in flight between threads / layers
+// ---------------------------------------------------------------------------
+
+/// One trace request lowered to engine terms.
+#[derive(Debug, Clone, Copy)]
+pub struct Arrival {
+    /// True arrival instant on the trace clock, µs.
+    pub at_us: f64,
+    /// Tenant id.
+    pub tenant: u32,
+    /// Coalescing group (model index).
+    pub group: u64,
+    /// Absolute deadline on the trace clock, µs.
+    pub deadline_us: f64,
+    /// Request id (row-payload seed).
+    pub id: u64,
+}
+
+/// Lower a trace onto the run's group table, in arrival order.
+pub fn trace_arrivals(trace: &Trace, index: &BTreeMap<String, u64>) -> Vec<Arrival> {
+    trace
+        .requests
+        .iter()
+        .map(|r| Arrival {
+            at_us: r.arrival_us,
+            tenant: r.tenant,
+            group: index[&r.model],
+            deadline_us: r.deadline_us,
+            id: r.id,
+        })
+        .collect()
+}
+
+/// One client request in flight from the generator (client side) to the
+/// admission gate — sync or frontend.
+pub(crate) struct Incoming {
+    pub tenant: u32,
+    pub group: u64,
+    pub slo_us: f64,
+    pub arrival: Instant,
+    pub row: Vec<f32>,
+}
+
+/// An accepted, pre-priced request in flight from the frontend stage to
+/// the engine. The gate decision is already made; the engine only
+/// timestamps it into the window (backpressure backstop aside).
+pub(crate) struct Admitted {
+    pub stream: StreamId,
+    pub group: u64,
+    pub tenant: u32,
+    pub slo_us: f64,
+    pub arrival: Instant,
+    pub row: Vec<f32>,
+}
+
+/// What the frontend stage sends the engine.
+pub(crate) enum FromFrontend {
+    /// An accepted request, to be drained into the window.
+    Admitted(Admitted),
+    /// Stream ids the gate retired at an epoch boundary (idle a full
+    /// epoch, accepts fully drained): the engine drops its mirrored
+    /// per-stream drain counters. Ids are never reused, so a late Retire
+    /// can never collide with live accounting.
+    Retire(Vec<u32>),
+}
+
+/// The post-accept tail shared by both gates (bundled so the two call
+/// sites cannot drift): what the engine needs to timestamp an accepted
+/// request into the window.
+struct Accepted {
+    stream: StreamId,
+    group: u64,
+    tenant: u32,
+    slo_us: f64,
+    arrival_us: f64,
+    independent: bool,
+    row: Vec<f32>,
+}
+
+/// One request at the synchronous admission gate (bundled so call sites
+/// cannot transpose the adjacent time/flag fields).
+pub(crate) struct AdmitReq {
+    pub group: u64,
+    pub tenant: u32,
+    pub arrival_us: f64,
+    pub deadline_us: f64,
+    pub independent: bool,
+    /// Effective drain parallelism of the group's serving workers (speed-
+    /// weighted replica count from [`drain_parallelism`]; 1.0 for the
+    /// single-device drive modes) — the drain estimate's divisor.
+    pub parallelism: f64,
+    /// Measured backlog on the group's least-loaded replica, µs (device
+    /// timelines or booked pool estimates). `Some` replaces the JIT's
+    /// in-flight estimate term, which cannot see device queueing; `None`
+    /// for drive modes without a measured signal.
+    pub device_backlog_us: Option<f64>,
+    pub row: Vec<f32>,
+}
+
+/// A (tenant, model-group) pair is one stream of execution. Stream ids
+/// are interned per run in first-appearance order (no bit packing —
+/// arbitrary tenant ids can never collide).
+fn intern_stream(
+    streams: &mut BTreeMap<(u32, u64), u32>,
+    tenant: u32,
+    group: u64,
+) -> StreamId {
+    let next = streams.len() as u32;
+    StreamId(*streams.entry((tenant, group)).or_insert(next))
+}
+
+fn record_completion(metrics: &mut ServeMetrics, c: &OpCompletion) {
+    let tenant = c.op.tag as u32;
+    if c.failed {
+        metrics.drop_request(tenant);
+    } else {
+        metrics.complete(tenant, c.latency_us(), c.met_deadline);
+    }
+}
+
+/// Build the dispatch request for an accepted serving request and submit
+/// it at its true arrival; the window backstop sheds on overflow
+/// (recorded as a drop). The ONE request-construction path behind the
+/// synchronous gate and the frontend drain.
+fn submit_accepted<X: ModelBackend>(
+    jit: &mut ServeJit<X>,
+    metrics: &mut ServeMetrics,
+    slots: &[ModelSlot],
+    a: Accepted,
+) {
+    let slot = &slots[a.group as usize];
+    let req = DispatchRequest::new(
+        a.stream,
+        KernelDesc::gemm(1, slot.d_in as u32, 1),
+        a.slo_us,
+    )
+    .with_group(a.group)
+    .with_tag(a.tenant as u64)
+    .with_independent(a.independent);
+    if jit.submit_at(req, a.arrival_us, a.row).is_none() {
+        // window full: the backpressure backstop sheds the request
+        metrics.drop_request(a.tenant);
+    }
+}
+
+/// Synchronous admission for one request; on Accept, submits it into the
+/// JIT (window backpressure sheds as a backstop). Records drops.
+///
+/// Pricing goes through the same [`frontend::GroupView`] the async
+/// frontend stage consumes, built synchronously from live JIT state — see
+/// [`frontend::GroupView::drain_est_us`] for the drain model and
+/// [`Admission::decide`] for the separate queued/in-flight contracts. One
+/// pricing implementation behind both gates means they cannot disagree on
+/// identical state.
+pub(crate) fn admit_request<X: ModelBackend>(
+    jit: &mut ServeJit<X>,
+    streams: &mut BTreeMap<(u32, u64), u32>,
+    admission: &Admission,
+    metrics: &mut ServeMetrics,
+    slots: &[ModelSlot],
+    r: AdmitReq,
+) {
+    let AdmitReq {
+        group,
+        tenant,
+        arrival_us,
+        deadline_us,
+        independent,
+        parallelism,
+        device_backlog_us,
+        row,
+    } = r;
+    let stream = intern_stream(streams, tenant, group);
+    // independent-mode pricing never reads the per-stream depth list, so
+    // the synchronous gate skips that window scan
+    let gview = frontend::snapshot_group(
+        jit,
+        group,
+        parallelism,
+        device_backlog_us,
+        !independent,
+    );
+    let greq = GateRequest {
+        stream,
+        independent,
+        deadline_us,
+    };
+    if gview.decide(admission, &greq, GateExtras::default(), jit.now_us) == Admit::Reject
+    {
+        metrics.drop_request(tenant);
+        return;
+    }
+    submit_accepted(
+        jit,
+        metrics,
+        slots,
+        Accepted {
+            stream,
+            group,
+            tenant,
+            slo_us: deadline_us - arrival_us,
+            arrival_us,
+            independent,
+            row,
+        },
+    );
+}
+
+/// The admission frontend stage's thread body: drain the intake channel,
+/// price each request against the latest published [`AdmissionView`],
+/// forward accepts to the engine, turn rejects around locally, and retire
+/// idle fully-drained streams at epoch boundaries. Exits when the intake
+/// side disconnects; its thread-local accounting ([`FrontendReport`])
+/// comes home through the stage's join.
+fn frontend_loop(
+    intake_rx: mpsc::Receiver<Incoming>,
+    acc_tx: mpsc::Sender<FromFrontend>,
+    cell: Arc<ViewCell>,
+    admission: Admission,
+    groups: usize,
+    independent: bool,
+    t0: Instant,
+) -> FrontendReport {
+    let mut gate = FrontendGate::new(admission, groups);
+    let mut report = FrontendReport::default();
+    let mut last_epoch = Instant::now();
+    loop {
+        let first = match intake_rx.recv_timeout(Duration::from_micros(500)) {
+            Ok(inc) => Some(inc),
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        };
+        if let Some(first) = first {
+            let mut batch = vec![first];
+            while let Ok(inc) = intake_rx.try_recv() {
+                batch.push(inc);
+            }
+            for inc in batch {
+                let view = cell.load();
+                let now_us = t0.elapsed().as_secs_f64() * 1e6;
+                let arrival_us =
+                    inc.arrival.saturating_duration_since(t0).as_secs_f64() * 1e6;
+                let stream = gate.intern(inc.tenant, inc.group);
+                let greq = GateRequest {
+                    stream,
+                    independent,
+                    deadline_us: arrival_us + inc.slo_us,
+                };
+                let decision = gate.decide(&view, inc.group, &greq, now_us);
+                report.decisions += 1;
+                report
+                    .admission_latency
+                    .record_us(inc.arrival.elapsed().as_secs_f64() * 1e6);
+                if view.published.elapsed().as_secs_f64() * 1e6 > STALE_VIEW_US {
+                    report.stale_decisions += 1;
+                }
+                // a send can only fail at shutdown (engine gone): the
+                // request is shed, counted like any other reject
+                let accepted = decision == Admit::Accept
+                    && acc_tx
+                        .send(FromFrontend::Admitted(Admitted {
+                            stream,
+                            group: inc.group,
+                            tenant: inc.tenant,
+                            slo_us: inc.slo_us,
+                            arrival: inc.arrival,
+                            row: inc.row,
+                        }))
+                        .is_ok();
+                if !accepted {
+                    *report.drops.entry(inc.tenant).or_insert(0) += 1;
+                }
+            }
+        }
+        // epoch boundary: retire (tenant, model) streams idle for a full
+        // epoch whose accepts the engine has fully drained, and tell the
+        // engine to drop its mirrored drain counters
+        if last_epoch.elapsed().as_secs_f64() * 1e6 >= FRONTEND_EPOCH_US {
+            last_epoch = Instant::now();
+            let retired = gate.advance_epoch(&cell.load());
+            if !retired.is_empty() {
+                let _ = acc_tx.send(FromFrontend::Retire(retired));
+            }
+        }
+    }
+    report
+}
+
+// ---------------------------------------------------------------------------
+// Engine
+// ---------------------------------------------------------------------------
+
+/// Engine options that are plain values (the trait-shaped options — clock,
+/// stage, placement — are separate constructor arguments).
+pub struct EngineConfig {
+    /// Admission policy (both gates).
+    pub admission: Admission,
+    /// Mark requests independent within their stream (stateless serving).
+    pub independent_streams: bool,
+    /// Run admission on the dedicated frontend thread (wall clock only;
+    /// ignored — and asserted off — under a virtual clock).
+    pub frontend: bool,
+    /// Policy name for the report.
+    pub policy: &'static str,
+}
+
+/// The serving engine: ONE admit → issue → launch → complete → rebalance
+/// loop, parameterized by a [`Clock`] and a [`LaunchStage`], with
+/// [`Placement`] and the admission frontend as orthogonal options. Every
+/// `Server::replay*` / `Server::run_realtime*` drive mode is a thin
+/// constructor over this.
+pub struct Engine<X: ModelBackend, C: Clock, S: LaunchStage<X>> {
+    jit: ServeJit<X>,
+    clock: C,
+    stage: S,
+    placement: Option<Placement>,
+    slots: Vec<ModelSlot>,
+    admission: Admission,
+    independent: bool,
+    frontend: bool,
+    policy_name: &'static str,
+    metrics: ServeMetrics,
+    /// Sync-gate stream interning (virtual + wall-sync paths).
+    streams: BTreeMap<(u32, u64), u32>,
+    /// Cumulative frontend-accepted requests drained into the window, per
+    /// group — published in every snapshot so the frontend nets them off
+    /// its own accept counters.
+    drained: Vec<u64>,
+    /// The same cumulative drain count per stream id; compacted when the
+    /// gate retires a stream ([`FromFrontend::Retire`]).
+    drained_by_stream: BTreeMap<u32, u64>,
+    view_seq: u64,
+    view_dirty: bool,
+}
+
+/// The wall-clock intake state: either the raw client channel (sync gate)
+/// or the frontend link.
+struct WallIntake {
+    t0: Instant,
+    sync_rx: Option<mpsc::Receiver<Incoming>>,
+    fe: Option<FrontendLink>,
+    disconnected: bool,
+}
+
+struct FrontendLink {
+    acc_rx: mpsc::Receiver<FromFrontend>,
+    cell: Arc<ViewCell>,
+    stage: Stage<FrontendReport>,
+    last_publish: Instant,
+}
+
+impl<X, C, S> Engine<X, C, S>
+where
+    X: ModelBackend,
+    C: Clock,
+    S: LaunchStage<X>,
+{
+    /// A new engine over a configured JIT, clock, stage, and options.
+    pub fn new(
+        jit: ServeJit<X>,
+        clock: C,
+        stage: S,
+        placement: Option<Placement>,
+        slots: Vec<ModelSlot>,
+        cfg: EngineConfig,
+    ) -> Self {
+        let groups = slots.len();
+        let mut engine = Engine {
+            jit,
+            clock,
+            stage,
+            placement,
+            slots,
+            admission: cfg.admission,
+            independent: cfg.independent_streams,
+            frontend: cfg.frontend,
+            policy_name: cfg.policy,
+            metrics: ServeMetrics::default(),
+            streams: BTreeMap::new(),
+            drained: vec![0; groups],
+            drained_by_stream: BTreeMap::new(),
+            view_seq: 0,
+            view_dirty: false,
+        };
+        if let Some(p) = &engine.placement {
+            engine
+                .jit
+                .executor_mut()
+                .set_class_speeds(p.topo.class_speeds());
+            repin_group_classes(
+                engine.jit.executor_mut(),
+                &p.table,
+                &p.topo,
+                engine.slots.len() as u64,
+            );
+            if p.report_devices {
+                for w in p.topo.workers() {
+                    engine.metrics.ensure_device(w.worker, w.spec.name);
+                }
+            }
+        }
+        engine
+    }
+
+    /// Replay `arrivals` on the virtual clock: deterministic given a
+    /// deterministic backend, stage, and placement. Returns the report
+    /// and the final placement table (None for unplaced runs).
+    pub fn run_virtual(mut self, arrivals: &[Arrival]) -> (ServeReport, Option<PlacementTable>) {
+        debug_assert!(self.clock.is_virtual(), "virtual run needs a virtual clock");
+        debug_assert!(!self.frontend, "virtual runs keep the synchronous gate");
+        let mut next = 0usize;
+        loop {
+            // 1. admit everything that has arrived (true arrival times)
+            self.drain_virtual(arrivals, &mut next);
+            // 2. issue every launch the policy allows; the stage routes
+            // and queues (or executes) each one
+            let wake = self.issue_and_launch();
+            // 3. advance the virtual clock to the next event and fold it in
+            let next_arrival = arrivals.get(next).map(|a| a.at_us);
+            let next_done = self.stage.next_done_us();
+            let t = [next_done, next_arrival, wake]
+                .iter()
+                .flatten()
+                .fold(f64::INFINITY, |m, v| m.min(*v));
+            if !t.is_finite() {
+                debug_assert!(self.jit.window.is_empty(), "deadlocked window");
+                break;
+            }
+            self.clock.advance_to(t);
+            self.jit.advance_to(t);
+            // 4. fold completions now due (deterministic (done, ticket)
+            // order), then rebalance between observation windows
+            self.settle(false);
+        }
+        self.metrics.span_us = self.jit.now_us;
+        self.metrics.jit = self.jit.stats.clone();
+        let report = ServeReport {
+            metrics: self.metrics,
+            policy: self.policy_name,
+        };
+        (report, self.placement.map(|p| p.table))
+    }
+
+    /// Serve `arrivals` on the wall clock, paced by a generator thread
+    /// (trace time compressed by `speedup`), admission on the frontend
+    /// stage thread or synchronously per [`EngineConfig::frontend`].
+    pub fn run_wall(mut self, arrivals: Vec<Arrival>, speedup: f64) -> ServeReport {
+        debug_assert!(!self.clock.is_virtual(), "wall run needs the wall clock");
+        let t0 = self.clock.origin();
+        let d_ins: Vec<usize> = self.slots.iter().map(|s| s.d_in).collect();
+        let gen_reqs: Vec<(f64, u32, u64, f64, u64)> = arrivals
+            .iter()
+            .map(|a| {
+                (
+                    a.at_us / speedup,
+                    a.tenant,
+                    a.group,
+                    a.deadline_us - a.at_us,
+                    a.id,
+                )
+            })
+            .collect();
+        let (tx, rx) = mpsc::channel::<Incoming>();
+        let gen = std::thread::spawn(move || {
+            let g0 = Instant::now();
+            for (at_us, tenant, group, slo, id) in gen_reqs {
+                let target = Duration::from_micros(at_us as u64);
+                let elapsed = g0.elapsed();
+                if target > elapsed {
+                    std::thread::sleep(target - elapsed);
+                }
+                let d_in = d_ins[group as usize];
+                let _ = tx.send(Incoming {
+                    tenant,
+                    group,
+                    slo_us: slo,
+                    arrival: Instant::now(),
+                    row: golden::gen_hash01(d_in, id.wrapping_mul(7919)),
+                });
+            }
+        });
+
+        let mut intake = if self.frontend {
+            let (acc_tx, acc_rx) = mpsc::channel::<FromFrontend>();
+            let cell = ViewCell::new(self.build_view(0));
+            let fe_cell = Arc::clone(&cell);
+            let fe_admission = self.admission.clone();
+            let n_groups = self.slots.len();
+            let independent = self.independent;
+            let stage = Stage::spawn("vliw-frontend", move || {
+                frontend_loop(
+                    rx,
+                    acc_tx,
+                    fe_cell,
+                    fe_admission,
+                    n_groups,
+                    independent,
+                    t0,
+                )
+            });
+            WallIntake {
+                t0,
+                sync_rx: None,
+                fe: Some(FrontendLink {
+                    acc_rx,
+                    cell,
+                    stage,
+                    last_publish: Instant::now(),
+                }),
+                disconnected: false,
+            }
+        } else {
+            WallIntake {
+                t0,
+                sync_rx: Some(rx),
+                fe: None,
+                disconnected: false,
+            }
+        };
+
+        loop {
+            // 1. pace on the intake channel; admit (sync gate) or drain
+            // frontend-accepted requests into the window
+            self.drain_wall(&mut intake);
+            // 2. issue + launch (inline stages execute and fold here)
+            let _wake = self.issue_and_launch();
+            // 3. fold finished pool launches; log; rebalance
+            let block = intake.disconnected && self.jit.inflight_launches() > 0;
+            self.settle(block);
+            // 4. publish a fresh admission snapshot — after this
+            // iteration's submits, launches and completions, so the view
+            // only ever lags reality, never leads it. Skipped on idle
+            // ticks (state unchanged ⇒ the last view is still exact),
+            // with a heartbeat so healthy-idle never reads as stale.
+            if let Some(fe) = intake.fe.as_mut() {
+                let heartbeat =
+                    fe.last_publish.elapsed().as_secs_f64() * 1e6 > STALE_VIEW_US / 2.0;
+                if self.view_dirty || heartbeat {
+                    self.view_seq += 1;
+                    let view_seq = self.view_seq;
+                    let v = self.build_view(view_seq);
+                    fe.cell.publish(v);
+                    self.view_dirty = false;
+                    fe.last_publish = Instant::now();
+                }
+            }
+            if intake.disconnected
+                && self.jit.window.is_empty()
+                && self.jit.inflight_launches() == 0
+            {
+                break;
+            }
+        }
+        gen.join().expect("generator thread");
+        if let Some(fe) = intake.fe {
+            // the frontend exits once the generator's intake disconnects
+            // and it has drained; fold its thread-local accounting in
+            drop(fe.acc_rx);
+            self.metrics.merge_frontend(&fe.stage.join());
+        }
+        self.metrics.span_us = self.clock.now_us();
+        self.metrics.jit = self.jit.stats.clone();
+        ServeReport {
+            metrics: self.metrics,
+            policy: self.policy_name,
+        }
+    }
+
+    // -- loop body helpers ---------------------------------------------------
+
+    fn drain_virtual(&mut self, arrivals: &[Arrival], next: &mut usize) {
+        while *next < arrivals.len() && arrivals[*next].at_us <= self.jit.now_us + 1e-9 {
+            let a = arrivals[*next];
+            *next += 1;
+            let row =
+                golden::gen_hash01(self.slots[a.group as usize].d_in, a.id.wrapping_mul(7919));
+            self.admit_sync(a.group, a.tenant, a.at_us, a.deadline_us, row);
+        }
+    }
+
+    fn drain_wall(&mut self, intake: &mut WallIntake) {
+        // once the upstream side is gone the channel stays empty — pace
+        // the loop with a short sleep instead of spinning on it
+        if intake.disconnected {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        if let Some(rx) = &intake.sync_rx {
+            let mut arrivals: Vec<Incoming> = Vec::new();
+            if !intake.disconnected {
+                match rx.recv_timeout(Duration::from_micros(500)) {
+                    Ok(inc) => {
+                        arrivals.push(inc);
+                        while let Ok(inc) = rx.try_recv() {
+                            arrivals.push(inc);
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        intake.disconnected = true;
+                    }
+                }
+            }
+            self.jit.advance_to(self.clock.now_us());
+            for inc in arrivals {
+                // the synchronous gate decides at drain time: the
+                // arrival→decision latency IS the channel wait
+                self.metrics
+                    .sync_admission_decision(inc.arrival.elapsed().as_secs_f64() * 1e6);
+                let arrival_us =
+                    inc.arrival.saturating_duration_since(intake.t0).as_secs_f64() * 1e6;
+                self.admit_sync(
+                    inc.group,
+                    inc.tenant,
+                    arrival_us,
+                    arrival_us + inc.slo_us,
+                    inc.row,
+                );
+            }
+        } else if let Some(fe) = &intake.fe {
+            let mut msgs: Vec<FromFrontend> = Vec::new();
+            if !intake.disconnected {
+                match fe.acc_rx.recv_timeout(Duration::from_micros(500)) {
+                    Ok(m) => {
+                        msgs.push(m);
+                        while let Ok(m) = fe.acc_rx.try_recv() {
+                            msgs.push(m);
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        intake.disconnected = true;
+                    }
+                }
+            }
+            self.jit.advance_to(self.clock.now_us());
+            for m in msgs {
+                match m {
+                    FromFrontend::Admitted(adm) => {
+                        self.view_dirty = true;
+                        // how long the accepted request sat between
+                        // threads before being priced into the window
+                        self.metrics
+                            .frontend_wait
+                            .record_us(adm.arrival.elapsed().as_secs_f64() * 1e6);
+                        // drain accounting advances whether or not the
+                        // window backstop sheds — the frontend nets these
+                        // counters off its cumulative accepts either way
+                        self.drained[adm.group as usize] += 1;
+                        *self.drained_by_stream.entry(adm.stream.0).or_insert(0) += 1;
+                        let arrival_us = adm
+                            .arrival
+                            .saturating_duration_since(intake.t0)
+                            .as_secs_f64()
+                            * 1e6;
+                        submit_accepted(
+                            &mut self.jit,
+                            &mut self.metrics,
+                            &self.slots,
+                            Accepted {
+                                stream: adm.stream,
+                                group: adm.group,
+                                tenant: adm.tenant,
+                                slo_us: adm.slo_us,
+                                arrival_us,
+                                independent: self.independent,
+                                row: adm.row,
+                            },
+                        );
+                    }
+                    FromFrontend::Retire(ids) => {
+                        for id in ids {
+                            self.drained_by_stream.remove(&id);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn admit_sync(
+        &mut self,
+        group: u64,
+        tenant: u32,
+        arrival_us: f64,
+        deadline_us: f64,
+        row: Vec<f32>,
+    ) {
+        let (parallelism, device_backlog_us) =
+            self.stage
+                .gate_inputs(self.placement.as_ref(), group, self.clock.now_us());
+        admit_request(
+            &mut self.jit,
+            &mut self.streams,
+            &self.admission,
+            &mut self.metrics,
+            &self.slots,
+            AdmitReq {
+                group,
+                tenant,
+                arrival_us,
+                deadline_us,
+                independent: self.independent,
+                parallelism,
+                device_backlog_us,
+                row,
+            },
+        );
+    }
+
+    fn issue_and_launch(&mut self) -> Option<f64> {
+        let (launches, wake) = self.jit.issue_ready();
+        self.view_dirty |= !launches.is_empty();
+        for l in launches {
+            let group = self
+                .jit
+                .window
+                .get(l.pack.ops[0])
+                .map(|op| op.group)
+                .unwrap_or(0);
+            let now = self.clock.now_us();
+            self.stage
+                .launch(&mut self.jit, &self.slots, self.placement.as_ref(), group, l, now);
+            // inline stages execute in `launch`: fold immediately at the
+            // post-execution wall instant (no-op for queued stages —
+            // nothing is due at the instant it was launched)
+            let done = self
+                .stage
+                .poll(self.placement.as_ref(), self.clock.now_us(), false);
+            self.view_dirty |= !done.is_empty();
+            for d in done {
+                self.fold(d);
+            }
+        }
+        wake
+    }
+
+    /// Fold finished launches, drain the per-launch log, and rebalance.
+    fn settle(&mut self, block: bool) {
+        let now = self.clock.now_us();
+        let done = self.stage.poll(self.placement.as_ref(), now, block);
+        self.view_dirty |= !done.is_empty();
+        for d in done {
+            self.fold(d);
+        }
+        for l in self.jit.take_launches() {
+            if l.ok {
+                self.metrics.launch(&l);
+            }
+        }
+        // rebalance between observation windows; keep the estimator's
+        // primary device class in step with the table's primaries
+        if let Some(p) = self.placement.as_mut() {
+            if let Some(rb) = p.rebal.as_mut() {
+                let actions = rb.maybe_rebalance(now, &mut p.table, &p.topo);
+                if !actions.is_empty() {
+                    repin_group_classes(
+                        self.jit.executor_mut(),
+                        &p.table,
+                        &p.topo,
+                        self.slots.len() as u64,
+                    );
+                    // replicas/classes moved: estimates and routing
+                    // inputs changed under the last snapshot
+                    self.view_dirty = true;
+                }
+                self.metrics.replications = rb.stats.replications;
+                self.metrics.migrations = rb.stats.migrations;
+            }
+        }
+    }
+
+    fn fold(&mut self, d: StageDone) {
+        let (ok, dur) = (d.run.ok, d.run.duration_us);
+        let completions = self.jit.finish_launch(d.ticket, d.done_us, d.run);
+        for c in &completions {
+            record_completion(&mut self.metrics, c);
+        }
+        if ok {
+            if let Some(p) = self.placement.as_mut() {
+                if p.report_devices {
+                    self.metrics
+                        .device_launch(d.worker, p.topo.spec_of(d.worker).name, dur);
+                }
+                if let Some(rb) = p.rebal.as_mut() {
+                    rb.observe_launch(d.group, d.worker, dur);
+                }
+            }
+        }
+    }
+
+    /// Build the full admission snapshot the frontend stage prices
+    /// against (one [`frontend::GroupView`] per group, plus the drain
+    /// counters that net off the frontend's accept counts).
+    fn build_view(&self, seq: u64) -> AdmissionView {
+        let now = self.clock.now_us();
+        AdmissionView {
+            seq,
+            now_us: self.jit.now_us,
+            published: Instant::now(),
+            groups: (0..self.drained.len() as u64)
+                .map(|g| {
+                    let (par, backlog) =
+                        self.stage.gate_inputs(self.placement.as_ref(), g, now);
+                    frontend::snapshot_group(&self.jit, g, par, backlog, true)
+                })
+                .collect(),
+            drained: self.drained.clone(),
+            drained_by_stream: self.drained_by_stream.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::device::DeviceSpec;
+    use crate::serve::server::{BatchPolicy, SimBackend};
+
+    fn slots() -> Vec<ModelSlot> {
+        vec![ModelSlot {
+            name: "m".to_string(),
+            d_in: 4,
+            max_batch: 16,
+        }]
+    }
+
+    /// Sync-gate test rig: the JIT plus the gate state `admit_request`
+    /// threads through it.
+    struct Gate<'b> {
+        jit: ServeJit<&'b mut SimBackend>,
+        streams: BTreeMap<(u32, u64), u32>,
+        admission: Admission,
+        metrics: ServeMetrics,
+    }
+
+    impl<'b> Gate<'b> {
+        fn new(backend: &'b mut SimBackend, policy: &BatchPolicy) -> Self {
+            let slots = slots();
+            let cfg = policy.jit_config(&slots, 64);
+            Gate {
+                jit: JitCompiler::with_payloads(cfg, ServeExecutor::new(backend, slots)),
+                streams: BTreeMap::new(),
+                admission: Admission::default(),
+                metrics: ServeMetrics::default(),
+            }
+        }
+
+        fn admit(&mut self, tenant: u32, deadline_us: f64, independent: bool) {
+            self.admit_with(tenant, deadline_us, independent, 1.0, None);
+        }
+
+        fn admit_with(
+            &mut self,
+            tenant: u32,
+            deadline_us: f64,
+            independent: bool,
+            parallelism: f64,
+            device_backlog_us: Option<f64>,
+        ) {
+            admit_request(
+                &mut self.jit,
+                &mut self.streams,
+                &self.admission,
+                &mut self.metrics,
+                &slots(),
+                AdmitReq {
+                    group: 0,
+                    tenant,
+                    arrival_us: 0.0,
+                    deadline_us,
+                    independent,
+                    parallelism,
+                    device_backlog_us,
+                    row: vec![0.0; 4],
+                },
+            );
+        }
+
+        fn drops(&self) -> u64 {
+            self.metrics.tenants.values().map(|t| t.dropped).sum()
+        }
+    }
+
+    #[test]
+    fn dependent_stream_admission_prices_per_op_drain() {
+        // with program order binding a queued stream drains one op per
+        // launch — pricing it at the pack cap (one padded batch) would
+        // re-open the doomed-admission hole for stateful streams
+        let mut backend = SimBackend::default();
+        let mut g = Gate::new(&mut backend, &BatchPolicy::coalescing()); // cap 16
+        for _ in 0..4 {
+            g.admit(0, 1e9, false);
+        }
+        assert_eq!(g.jit.window.pending_in_group(0), 4);
+        // true drain is 5 singleton launches (2750µs), not one padded
+        // batch (900µs): a 1500µs deadline must be shed
+        g.admit(0, 1_500.0, false);
+        assert_eq!(g.drops(), 1, "doomed dependent request is shed");
+    }
+
+    #[test]
+    fn dependent_multi_stream_queue_prices_cross_stream_packing() {
+        // 8 DISTINCT dependent streams with one op each drain in about one
+        // cap-wide launch — admission must not price them as 8 serial
+        // launches and shed an easily-servable 9th request
+        let mut backend = SimBackend::default();
+        let mut g = Gate::new(&mut backend, &BatchPolicy::coalescing()); // cap 16
+        for t in 0..8 {
+            g.admit(t, 1e9, false);
+        }
+        assert_eq!(g.jit.window.pending_in_group(0), 8);
+        // all 9 ops are stream heads, so the drain is ONE 9-wide launch
+        // (padded 16) ≈ 1300µs — well inside a 2.5ms deadline (a naive
+        // one-launch-per-op price of 9·550µs = 4950µs would shed it)
+        g.admit(9, 2_500.0, false);
+        assert_eq!(g.drops(), 0, "servable multi-stream dependent load admitted");
+        assert_eq!(g.jit.window.pending_in_group(0), 9);
+    }
+
+    #[test]
+    fn admission_prices_inflight_drain() {
+        // a request that survives queue-only pricing but is doomed behind
+        // the group's in-flight launches must be shed
+        let mut backend = SimBackend::default();
+        let policy = BatchPolicy::Coalescing {
+            window_us: 0.0,
+            target_batch: 1,
+            safety_margin_us: 0.0,
+        };
+        let mut g = Gate::new(&mut backend, &policy);
+        for t in 0..4 {
+            g.admit(t, 1e9, true);
+        }
+        let (launches, _) = g.jit.issue_ready();
+        assert!(!launches.is_empty());
+        assert_eq!(g.jit.window.inflight_in_group(0), 4, "work is on the device");
+        assert_eq!(g.jit.window.pending_in_group(0), 0);
+        // a doomed request into an EMPTY queue still runs, in-flight work
+        // notwithstanding (the documented escape hatch)
+        g.admit(8, 600.0, true);
+        assert_eq!(g.drops(), 0, "empty-queue escape hatch fires despite in-flight");
+        assert_eq!(g.jit.window.pending_in_group(0), 1);
+        // now real work is queued: a doomed request is shed — queue-only
+        // pricing is 600µs but the pending batch-4 launch's scheduler
+        // estimate adds 700µs, so a 1000µs deadline is hopeless
+        g.admit(9, 1_000.0, true);
+        assert_eq!(g.drops(), 1, "doomed request behind in-flight work is shed");
+        assert_eq!(g.jit.window.pending_in_group(0), 1, "it was never submitted");
+        // enough slack to survive the full (queue + in-flight) drain
+        g.admit(10, 2_000.0, true);
+        assert_eq!(g.jit.window.pending_in_group(0), 2);
+        assert_eq!(g.drops(), 1, "no new drop");
+    }
+
+    #[test]
+    fn admission_prices_each_inflight_launch_separately() {
+        // 4 singleton launches drain in 4·550µs = 2200µs, NOT the 700µs
+        // one batch-4 launch would take
+        let mut backend = SimBackend::default();
+        let mut g = Gate::new(&mut backend, &BatchPolicy::NoBatching);
+        for t in 0..4 {
+            g.admit(t, 1e9, true);
+        }
+        let (launches, _) = g.jit.issue_ready();
+        assert_eq!(launches.len(), 4, "NoBatching issues singletons");
+        assert!((g.jit.inflight_group_est_us(0, 1) - 2_200.0).abs() < 1e-9);
+        // queue one request with slack to spare so the doomed-shed hatch
+        // applies to what follows
+        g.admit(8, 1e9, true);
+        assert_eq!(g.jit.window.pending_in_group(0), 1);
+        // deadline 2500µs would survive one-batch in-flight pricing (700
+        // + 1100 queue) but not the true per-launch drain (2200 + 1100)
+        g.admit(9, 2_500.0, true);
+        assert_eq!(g.drops(), 1, "doomed behind four singleton launches");
+        // a deadline past the full per-launch drain is still admitted
+        g.admit(10, 4_000.0, true);
+        assert_eq!(g.jit.window.pending_in_group(0), 2);
+    }
+
+    #[test]
+    fn admission_prices_queue_deeper_than_one_pack_per_launch() {
+        // under NoBatching (pack cap 1), 4 queued singletons + this
+        // request cost 5·550µs = 2750µs, not one padded batch's 900µs
+        let mut backend = SimBackend::default();
+        let mut g = Gate::new(&mut backend, &BatchPolicy::NoBatching);
+        for t in 0..4 {
+            g.admit(t, 1e9, true);
+        }
+        assert_eq!(g.jit.window.pending_in_group(0), 4);
+        assert_eq!(g.jit.window.inflight_in_group(0), 0);
+        g.admit(9, 1_500.0, true);
+        assert_eq!(g.drops(), 1, "doomed behind a deep singleton queue");
+        g.admit(10, 3_000.0, true);
+        assert_eq!(g.jit.window.pending_in_group(0), 5);
+    }
+
+    #[test]
+    fn admission_divides_drain_across_replicas() {
+        // 4 queued singletons at NoBatching drain in 5 launches = 2750µs
+        // on one worker; on two replicas the same queue is priced at half
+        let mut backend = SimBackend::default();
+        let mut g = Gate::new(&mut backend, &BatchPolicy::NoBatching);
+        for t in 0..4 {
+            g.admit(t, 1e9, true);
+        }
+        assert_eq!(g.jit.window.pending_in_group(0), 4);
+        // two replicas: drain 2750/2 = 1375µs < 1500µs deadline → admit
+        g.admit_with(9, 1_500.0, true, 2.0, None);
+        assert_eq!(g.drops(), 0, "two-replica drain fits the deadline");
+        assert_eq!(g.jit.window.pending_in_group(0), 5);
+        // heterogeneous replicas are speed-weighted, not counted: a v100
+        // primary plus a k80 replica is ~1.25 workers — the queue of 6
+        // drains in 6·550/1.25 = 2640µs, so the same 1500µs deadline must
+        // be shed
+        g.admit_with(10, 1_500.0, true, 1.25, None);
+        assert_eq!(g.drops(), 1, "slow replica must not count as a full worker");
+        assert_eq!(g.jit.window.pending_in_group(0), 5);
+    }
+
+    fn placement_on(topo: DeviceTopology, groups: u64) -> Placement {
+        let costs: Vec<(u64, f64)> = (0..groups).map(|g| (g, 1.0)).collect();
+        let table = Placer::place(&costs, &topo);
+        Placement {
+            topo,
+            table,
+            rebal: None,
+            report_devices: false,
+        }
+    }
+
+    #[test]
+    fn pooled_paths_agree_on_admission_inputs() {
+        // on a single-worker fleet the placement-routed and legacy
+        // hash-routed launch stages must feed the gate identical
+        // (parallelism, backlog) inputs — so the two paths admit
+        // identically on the same trace
+        let placed = placement_on(DeviceTopology::homogeneous(1, DeviceSpec::v100()), 3);
+        let backlog = vec![1_234.0];
+        for g in 0..3u64 {
+            assert_eq!(
+                pool_gate_inputs(Some(&placed), 1, &backlog, g),
+                pool_gate_inputs(None, 1, &backlog, g),
+                "group {g}"
+            );
+        }
+    }
+
+    #[test]
+    fn unplaced_pooled_backlog_feeds_the_gate() {
+        // the legacy hash-routed pool books est_routed into
+        // worker_backlog at launch, so admission must consult the
+        // hash-routed worker's entry instead of flying queue-blind
+        let backlog = vec![5_000.0, 0.0];
+        assert_eq!(pool_gate_inputs(None, 2, &backlog, 0), (1.0, Some(5_000.0)));
+        assert_eq!(pool_gate_inputs(None, 2, &backlog, 1), (1.0, Some(0.0)));
+        assert_eq!(pool_gate_inputs(None, 2, &backlog, 2), (1.0, Some(5_000.0)));
+        // no pool at all: nothing measured, the JIT in-flight term prices
+        assert_eq!(pool_gate_inputs(None, 0, &backlog, 0), (1.0, None));
+
+        // and the booked backlog actually reaches the shed decision: 5ms
+        // on the routed worker dooms a 2ms deadline that the same gate
+        // admits when the worker is free
+        let mut backend = SimBackend::default();
+        let mut g = Gate::new(&mut backend, &BatchPolicy::coalescing());
+        for (tenant, deadline, booked) in
+            [(0u32, 1e9, 0.0), (1, 2_000.0, 5_000.0), (2, 2_000.0, 0.0)]
+        {
+            let (parallelism, backlog) = pool_gate_inputs(None, 2, &[booked, 0.0], 0);
+            g.admit_with(tenant, deadline, true, parallelism, backlog);
+        }
+        assert_eq!(
+            g.metrics.tenants.get(&1).map(|t| t.dropped),
+            Some(1),
+            "booked backlog must shed the doomed request"
+        );
+        assert_eq!(g.jit.window.pending_in_group(0), 2, "tenants 0 and 2 admitted");
+    }
+
+    #[test]
+    fn timeline_pops_completions_in_done_then_ticket_order() {
+        // the BinaryHeap must reproduce the old sort-by-(done, ticket)
+        // fold order exactly — virtual-replay determinism hangs on it
+        let mut stage = TimelineStage::new(2);
+        let mk = |done_us: f64, ticket: u64| {
+            Reverse(TimelineEntry {
+                done_us,
+                ticket,
+                worker: 0,
+                group: 0,
+                run: PackRun {
+                    duration_us: 1.0,
+                    executed: 1,
+                    ok: true,
+                    device_class: 0,
+                },
+            })
+        };
+        for (d, t) in [(30.0, 4), (10.0, 2), (10.0, 1), (20.0, 3), (5.0, 0)] {
+            stage.inflight.push(mk(d, t));
+        }
+        assert_eq!(
+            <TimelineStage as LaunchStage<SimBackend>>::next_done_us(&stage),
+            Some(5.0)
+        );
+        let due =
+            <TimelineStage as LaunchStage<SimBackend>>::poll(&mut stage, None, 10.0, false);
+        let order: Vec<(f64, u64)> = due.iter().map(|d| (d.done_us, d.ticket)).collect();
+        assert_eq!(order, vec![(5.0, 0), (10.0, 1), (10.0, 2)]);
+        // the rest stay queued for the next advance
+        assert_eq!(
+            <TimelineStage as LaunchStage<SimBackend>>::next_done_us(&stage),
+            Some(20.0)
+        );
+    }
+
+    #[test]
+    fn timeline_gate_inputs_price_the_device_queue() {
+        let mut stage = TimelineStage::new(1);
+        stage.free_at[0] = 4_000.0;
+        let (par, backlog) =
+            <TimelineStage as LaunchStage<SimBackend>>::gate_inputs(&stage, None, 0, 1_000.0);
+        assert_eq!(par, 1.0);
+        assert_eq!(backlog, Some(3_000.0), "queued device time ahead of now");
+        // a free device owes nothing (clamped at zero)
+        let (_, b2) =
+            <TimelineStage as LaunchStage<SimBackend>>::gate_inputs(&stage, None, 0, 9_000.0);
+        assert_eq!(b2, Some(0.0));
+    }
+}

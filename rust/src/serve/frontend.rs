@@ -57,13 +57,23 @@
 //! hot (`ServeMetrics::admission_latency` is the histogram to watch).
 //!
 //! **Bookkeeping bound.** The gate's interning table and cumulative
-//! counters (and the scheduler's mirrored drain counters, copied into
-//! each snapshot) grow with the number of *distinct (tenant, model)
-//! pairs ever served* in a run — unlike the window, whose per-stream
-//! state drops on drain. That is fine for trace-driven runs (streams ≈
-//! tenants × models); a long-lived server with unbounded tenant churn
-//! needs epoch-based counter compaction, recorded alongside frontend
-//! sharding as the next scale step in ROADMAP.md.
+//! per-stream accept counters (and the scheduler's mirrored drain
+//! counters, copied into each snapshot) are compacted *epoch-wise*:
+//! every [`FRONTEND_EPOCH_US`] the frontend thread calls
+//! [`FrontendGate::advance_epoch`], which retires every stream that (a)
+//! saw no gate activity for the full elapsed epoch and (b) whose accepts
+//! the scheduler has fully drained (`accepted == drained` against the
+//! latest snapshot — nothing of the stream's is still in the accepted
+//! channel). Retired ids go to the scheduler as a `Retire` record on the
+//! accepted channel (ordered after any prior accepts, so it can never
+//! overtake one), and the scheduler drops its mirrored drain counter.
+//! Stream ids are **never reused**: a retired (tenant, model) pair that
+//! returns is interned as a fresh id, which matches the window's own
+//! fully-drained-stream-restarts-clean semantics. Bookkeeping is thus
+//! bounded by the *live* stream set under tenant churn, not by every
+//! pair ever served (pinned by
+//! `frontend_bookkeeping_bounded_under_tenant_churn`, the gate-side
+//! mirror of the window's churn regression).
 //!
 //! **Why the `replay*` modes keep the synchronous gate.** The virtual-time
 //! replays are deterministic: the clock only advances when the driver says
@@ -75,7 +85,7 @@
 //! disagree on identical state (pinned by
 //! `prop_admission_view_matches_sync_gate`).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -91,6 +101,16 @@ use crate::util::stats::LatencyHist;
 /// the scheduler thread is wedged mid-iteration — exactly the condition
 /// the frontend exists to ride out.
 pub const STALE_VIEW_US: f64 = 2_000.0;
+
+/// Counter-compaction epoch, µs of wall time. Once per epoch the frontend
+/// thread retires every (tenant, model) stream that was idle for the full
+/// elapsed epoch AND whose accepts the scheduler has fully drained (see
+/// [`FrontendGate::advance_epoch`]); the scheduler then drops its
+/// mirrored drain counter. Long enough that any launch in flight when the
+/// stream went idle has long since completed; short enough that a
+/// long-lived server under tenant churn stays bounded by its *live*
+/// stream set.
+pub const FRONTEND_EPOCH_US: f64 = 200_000.0;
 
 /// One request at the frontend gate: the pricing inputs that vary per
 /// request (bundled so call sites cannot transpose adjacent scalars).
@@ -293,8 +313,10 @@ pub struct AdmissionView {
     /// the two threads.
     pub drained: Vec<u64>,
     /// The same cumulative drain count per stream id (dependent-mode
-    /// own-stream pricing).
-    pub drained_by_stream: Vec<u64>,
+    /// own-stream pricing). Sparse: entries for retired streams are
+    /// dropped when the gate compacts them (ids are never reused, so a
+    /// missing entry always means zero-or-retired, never a collision).
+    pub drained_by_stream: BTreeMap<u32, u64>,
 }
 
 /// Single-writer, multi-reader publication cell for [`AdmissionView`]s.
@@ -333,16 +355,22 @@ impl ViewCell {
 /// snapshots safe (see the module docs).
 pub struct FrontendGate {
     admission: Admission,
-    /// (tenant, group) → interned stream id, first-appearance dense order
-    /// — identical semantics to the synchronous drivers' interning.
+    /// (tenant, group) → interned stream id, first-appearance order.
+    /// Retired entries are removed; their ids are never reused
+    /// (`next_stream` only grows), so a returning pair gets a fresh id.
     streams: BTreeMap<(u32, u64), u32>,
-    /// Cumulative accepts per group.
+    /// Next stream id to hand out (monotonic — survives retirement).
+    next_stream: u32,
+    /// Cumulative accepts per group (bounded by the model table; never
+    /// compacted).
     accepted: Vec<u64>,
-    /// Cumulative accepts per stream id.
-    accepted_by_stream: Vec<u64>,
-    /// Each stream's (single, fixed) group, indexed by stream id — the
-    /// dependent-mode launch floor scans only the request's group.
-    stream_group: Vec<u64>,
+    /// Cumulative accepts per live stream id (sparse; compacted).
+    accepted_by_stream: BTreeMap<u32, u64>,
+    /// Each live stream's (single, fixed) group — the dependent-mode
+    /// launch floor scans only the request's group.
+    stream_group: BTreeMap<u32, u64>,
+    /// Streams touched (interned or decided) since the last epoch sweep.
+    active: BTreeSet<u32>,
 }
 
 impl FrontendGate {
@@ -351,29 +379,39 @@ impl FrontendGate {
         FrontendGate {
             admission,
             streams: BTreeMap::new(),
+            next_stream: 0,
             accepted: vec![0; groups],
-            accepted_by_stream: Vec::new(),
-            stream_group: Vec::new(),
+            accepted_by_stream: BTreeMap::new(),
+            stream_group: BTreeMap::new(),
+            active: BTreeSet::new(),
         }
     }
 
-    /// Intern the (tenant, group) pair as a stream, dense ids in
-    /// first-appearance order.
+    /// Intern the (tenant, group) pair as a stream, ids in
+    /// first-appearance order (monotonic across retirements).
     pub fn intern(&mut self, tenant: u32, group: u64) -> StreamId {
-        let next = self.streams.len() as u32;
-        let id = *self.streams.entry((tenant, group)).or_insert(next);
-        self.ensure_stream(id as usize, group);
+        let id = match self.streams.get(&(tenant, group)) {
+            Some(id) => *id,
+            None => {
+                let id = self.next_stream;
+                self.next_stream += 1;
+                self.streams.insert((tenant, group), id);
+                id
+            }
+        };
+        self.ensure_stream(id, group);
+        self.active.insert(id);
         StreamId(id)
     }
 
-    fn ensure_stream(&mut self, s: usize, group: u64) {
-        if self.accepted_by_stream.len() <= s {
-            self.accepted_by_stream.resize(s + 1, 0);
-        }
-        if self.stream_group.len() <= s {
-            self.stream_group.resize(s + 1, group);
-        }
-        self.stream_group[s] = group;
+    fn ensure_stream(&mut self, s: u32, group: u64) {
+        self.accepted_by_stream.entry(s).or_insert(0);
+        self.stream_group.insert(s, group);
+    }
+
+    /// Live (tenant, model) streams currently tracked — the churn bound.
+    pub fn tracked_streams(&self) -> usize {
+        self.streams.len()
     }
 
     /// Accepted-but-not-yet-drained request count for a group: the work
@@ -385,9 +423,9 @@ impl FrontendGate {
     }
 
     /// A stream's accepted-but-not-yet-drained count against this view.
-    fn in_channel_of_stream(&self, view: &AdmissionView, s: usize) -> u32 {
-        let a = self.accepted_by_stream.get(s).copied().unwrap_or(0);
-        let d = view.drained_by_stream.get(s).copied().unwrap_or(0);
+    fn in_channel_of_stream(&self, view: &AdmissionView, s: u32) -> u32 {
+        let a = self.accepted_by_stream.get(&s).copied().unwrap_or(0);
+        let d = view.drained_by_stream.get(&s).copied().unwrap_or(0);
         a.saturating_sub(d) as u32
     }
 
@@ -399,14 +437,45 @@ impl FrontendGate {
     fn dependent_max_depth(&self, view: &AdmissionView, gv: &GroupView, group: u64) -> u32 {
         self.stream_group
             .iter()
-            .enumerate()
             .filter(|(_, g)| **g == group)
             .map(|(s, _)| {
-                gv.stream_depth(StreamId(s as u32)) as u32
-                    + self.in_channel_of_stream(view, s)
+                gv.stream_depth(StreamId(*s)) as u32
+                    + self.in_channel_of_stream(view, *s)
             })
             .max()
             .unwrap_or(0)
+    }
+
+    /// Epoch boundary: retire every stream that was idle (no intern/
+    /// decide) for the whole elapsed epoch AND whose accepts the
+    /// scheduler has fully drained against `view` — its interning entry
+    /// and accept counter are dropped, and the returned ids tell the
+    /// scheduler to drop its mirrored drain counters. In-channel work
+    /// blocks retirement, so a `Retire` record can never overtake a
+    /// still-queued accept of the same stream. Ids are never reused; a
+    /// retired pair that returns is interned fresh, mirroring the
+    /// window's fully-drained-stream-restarts-clean semantics.
+    pub fn advance_epoch(&mut self, view: &AdmissionView) -> Vec<u32> {
+        // candidate set = every tracked per-stream entry, NOT just the
+        // interned ids: decide()'s grow-on-demand path can create counter
+        // entries for stream ids interned elsewhere, and those must be
+        // subject to the same retirement or the bookkeeping bound leaks
+        let retired: Vec<u32> = self
+            .accepted_by_stream
+            .keys()
+            .copied()
+            .filter(|s| !self.active.contains(s) && self.in_channel_of_stream(view, *s) == 0)
+            .collect();
+        if !retired.is_empty() {
+            let dead: BTreeSet<u32> = retired.iter().copied().collect();
+            self.streams.retain(|_, s| !dead.contains(s));
+            for s in &dead {
+                self.accepted_by_stream.remove(s);
+                self.stream_group.remove(s);
+            }
+        }
+        self.active.clear();
+        retired
     }
 
     /// Decide one request against the latest snapshot. On Accept the
@@ -422,7 +491,8 @@ impl FrontendGate {
         let Some(gv) = view.groups.get(group as usize) else {
             return Admit::Reject;
         };
-        let s = req.stream.0 as usize;
+        let s = req.stream.0;
+        self.active.insert(s);
         let extras = GateExtras {
             queued: self.in_channel(view, group) as u32,
             own: self.in_channel_of_stream(view, s),
@@ -441,7 +511,7 @@ impl FrontendGate {
             }
             // grow on demand: callers may price streams interned elsewhere
             self.ensure_stream(s, group);
-            self.accepted_by_stream[s] += 1;
+            *self.accepted_by_stream.entry(s).or_insert(0) += 1;
         }
         d
     }
@@ -485,7 +555,7 @@ mod tests {
             published: Instant::now(),
             groups: vec![g],
             drained: vec![0],
-            drained_by_stream: Vec::new(),
+            drained_by_stream: BTreeMap::new(),
         }
     }
 
@@ -586,7 +656,7 @@ mod tests {
         // in-channel count returns to zero and room opens up again
         let mut v1 = view(gview(0, 0));
         v1.drained = vec![2];
-        v1.drained_by_stream = vec![2];
+        v1.drained_by_stream = BTreeMap::from([(s.0, 2)]);
         assert_eq!(gate.decide(&v1, 0, &req(s.0, 1e9), 0.0), Admit::Accept);
     }
 
@@ -613,5 +683,93 @@ mod tests {
         assert_eq!(gate.intern(4, 1), StreamId(0));
         assert_eq!(gate.intern(2, 0), StreamId(1));
         assert_eq!(gate.intern(4, 1), StreamId(0));
+    }
+
+    #[test]
+    fn epoch_retires_idle_drained_streams_only() {
+        let mut gate = FrontendGate::new(Admission::new(64), 1);
+        let a = gate.intern(0, 0);
+        let b = gate.intern(1, 0);
+        assert_eq!(gate.decide(&view(gview(0, 0)), 0, &req(a.0, 1e9), 0.0), Admit::Accept);
+        assert_eq!(gate.decide(&view(gview(0, 0)), 0, &req(b.0, 1e9), 0.0), Admit::Accept);
+        // a's accept was drained; b's is still in the channel
+        let mut v = view(gview(0, 0));
+        v.drained = vec![1];
+        v.drained_by_stream = BTreeMap::from([(a.0, 1)]);
+        // first boundary: both streams were active this epoch — no retire
+        assert!(gate.advance_epoch(&v).is_empty(), "active streams survive");
+        // second boundary: both idle, but only a is fully drained
+        let retired = gate.advance_epoch(&v);
+        assert_eq!(retired, vec![a.0], "in-channel work blocks retirement");
+        assert_eq!(gate.tracked_streams(), 1);
+        // a returns: interned as a FRESH id — never a reused one
+        let a2 = gate.intern(0, 0);
+        assert_ne!(a2, a, "retired ids are never reused");
+        assert_eq!(a2, StreamId(2));
+        assert_eq!(gate.tracked_streams(), 2);
+    }
+
+    #[test]
+    fn frontend_bookkeeping_bounded_under_tenant_churn() {
+        // the gate-side mirror of the window's churn regression
+        // (`bookkeeping_bounded_under_tenant_churn`): N tenants each
+        // accept and drain a request, then go idle; after each tenant's
+        // epoch pair the gate must be back to a handful of live streams,
+        // not N — and the scheduler's mirrored drain counters (compacted
+        // via the returned Retire ids) stay bounded too
+        let mut gate = FrontendGate::new(Admission::new(64), 1);
+        let mut drained_total = 0u64;
+        let mut sched_drained: BTreeMap<u32, u64> = BTreeMap::new();
+        for t in 0..200u32 {
+            let s = gate.intern(t, 0);
+            let mut v = view(gview(0, 0));
+            v.drained = vec![drained_total];
+            v.drained_by_stream = sched_drained.clone();
+            assert_eq!(gate.decide(&v, 0, &req(s.0, 1e9), 0.0), Admit::Accept);
+            // the scheduler drains the accept and publishes
+            drained_total += 1;
+            sched_drained.insert(s.0, 1);
+            let mut v2 = view(gview(0, 0));
+            v2.drained = vec![drained_total];
+            v2.drained_by_stream = sched_drained.clone();
+            // one epoch of activity, one epoch of idleness → retired
+            gate.advance_epoch(&v2);
+            for id in gate.advance_epoch(&v2) {
+                sched_drained.remove(&id);
+            }
+            assert!(
+                gate.tracked_streams() <= 1,
+                "gate leaks streams after tenant {t}: {}",
+                gate.tracked_streams()
+            );
+            assert!(
+                sched_drained.len() <= 1,
+                "scheduler drain mirror leaks after tenant {t}: {}",
+                sched_drained.len()
+            );
+        }
+    }
+
+    #[test]
+    fn retired_stream_counters_restart_clean() {
+        // after retirement, a returning pair's fresh id starts with a
+        // zero accept counter — a stale drained entry for the OLD id must
+        // not bleed into the new stream's in-channel arithmetic
+        let mut gate = FrontendGate::new(Admission::new(2), 1);
+        let s = gate.intern(0, 0);
+        assert_eq!(gate.decide(&view(gview(0, 0)), 0, &req(s.0, 1e9), 0.0), Admit::Accept);
+        let mut v = view(gview(0, 0));
+        v.drained = vec![1];
+        v.drained_by_stream = BTreeMap::from([(s.0, 1)]);
+        gate.advance_epoch(&v);
+        assert_eq!(gate.advance_epoch(&v), vec![s.0]);
+        let s2 = gate.intern(0, 0);
+        // the view still carries the old id's drain count (the engine
+        // compacts asynchronously) — irrelevant to the fresh id
+        assert_eq!(
+            gate.decide(&v, 0, &req(s2.0, 1e9), 0.0),
+            Admit::Accept,
+            "fresh stream prices from zero"
+        );
     }
 }

@@ -98,14 +98,14 @@ pub struct ServeMetrics {
     /// Cold-group migrations applied by the rebalancer.
     pub migrations: u64,
     /// Admission-decision latency (client arrival → gate decision), µs.
-    /// With the frontend stage this stays bounded regardless of scheduler
+    /// With the frontend stage this stays bounded regardless of engine
     /// stalls; the synchronous wall-clock gate includes the drain wait.
     /// Empty for the virtual-time replays (no wall clock to measure).
     pub admission_latency: LatencyHist,
-    /// Channel wait (client arrival → scheduler submit), µs — the time a
+    /// Channel wait (client arrival → engine submit), µs — the time a
     /// request sat between threads before being priced into the window,
     /// previously invisible in SLO decompositions. Covers every request
-    /// that *reaches the scheduler thread*: all arrivals on the
+    /// that *reaches the engine thread*: all arrivals on the
     /// synchronous path (the decision happens at drain), accepted
     /// requests on the frontend path (rejects turn around at the
     /// frontend and never cross). Empty for the virtual-time replays.

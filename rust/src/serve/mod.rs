@@ -1,19 +1,21 @@
 //! Multi-tenant model serving over the OoO JIT runtime.
 //!
-//! The serving layer is a *thin driver* over the one scheduler in this
-//! repo (`compiler::{window, scheduler, jit}`): requests become
-//! `DispatchRequest`s with attached row payloads, each (tenant, model)
-//! pair is a stream, each model a coalescing group, and every hold/launch
-//! decision is the JIT core's. Packs execute as padded compiled batch
-//! variants through the [`server::ServeExecutor`] adapter. Python never
-//! runs here.
+//! The serving layer is ONE event loop ([`engine::Engine`]) over the one
+//! scheduler in this repo (`compiler::{window, scheduler, jit}`):
+//! requests become `DispatchRequest`s with attached row payloads, each
+//! (tenant, model) pair is a stream, each model a coalescing group, and
+//! every hold/launch decision is the JIT core's. Packs execute as padded
+//! compiled batch variants through the [`server::ServeExecutor`] adapter.
+//! Python never runs here.
 //!
-//! * [`server`] — the serving drivers: virtual-paced trace replay
-//!   (benches, reproducible), the placement-aware multi-device replay
-//!   (`replay_placed`), an inline real-time mode, and the concurrent
-//!   real-time modes whose launch stage routes through the
-//!   [`crate::placement`] table (least-loaded replica per launch,
-//!   rebalancer-driven replication of hot model groups);
+//! * [`engine`] — the unified serving loop: a [`engine::Clock`] ×
+//!   [`engine::LaunchStage`] pipeline (virtual or wall time × device
+//!   timelines, inline execution, or a stateful worker pool), with
+//!   placement/rebalance and the admission frontend as orthogonal
+//!   options. See its module docs for the full mode matrix;
+//! * [`server`] — policies, backends, and the thin per-mode constructors
+//!   (`replay`, `replay_placed`, `run_realtime`, `run_realtime_pooled`,
+//!   `run_realtime_placed`) over the engine;
 //! * [`metrics`] — per-tenant latency histograms, SLO attainment,
 //!   batch-occupancy accounting, JIT pack stats, per-device utilization,
 //!   admission-decision latency and channel-wait histograms;
@@ -22,15 +24,21 @@
 //!   elapsed execution subtracted, divided across a group's replicas);
 //! * [`frontend`] — the async admission stage: a dedicated thread owns
 //!   the gate and prices requests against the `AdmissionView` snapshot
-//!   the scheduler publishes each iteration, so tenant accept/reject
-//!   never waits on a scheduler iteration (wall-clock drivers only; the
-//!   deterministic replays keep the synchronous gate).
+//!   the engine publishes each iteration, so tenant accept/reject never
+//!   waits on an engine iteration (wall-clock runs only; the
+//!   deterministic replays keep the synchronous gate). Gate counters are
+//!   compacted epoch-wise under tenant churn.
 
 pub mod admission;
+pub mod engine;
 pub mod frontend;
 pub mod metrics;
 pub mod server;
 
+pub use engine::{
+    Clock, Engine, EngineConfig, InlineStage, LaunchStage, Placement, PoolStage,
+    StageDone, TimelineStage, VirtualClock, WallClock,
+};
 pub use frontend::{AdmissionView, FrontendGate, GroupView, ViewCell};
 pub use metrics::{DeviceMetrics, ServeMetrics};
 pub use server::{

@@ -1,85 +1,60 @@
-//! The serving loop — a thin driver over the OoO JIT core.
+//! The serving surface: policies, backends, and thin drive-mode
+//! constructors over the ONE serving event loop in
+//! [`crate::serve::engine`].
 //!
-//! There is exactly ONE scheduler in this repo: `compiler::{window,
-//! scheduler, jit}`. The serving layer no longer re-implements EDF/hold
-//! logic; it maps requests onto the JIT's declarative dispatch IR and lets
-//! the shared core make every decision:
+//! There is exactly ONE scheduler in this repo (`compiler::{window,
+//! scheduler, jit}`) and, since the Clock × LaunchStage refactor, exactly
+//! ONE serving loop driving it ([`crate::serve::engine::Engine`]). This
+//! module maps requests onto the JIT's declarative dispatch IR:
 //!
-//! * each **(tenant, model)** pair is a [`StreamId`] (a stream of
-//!   execution in the paper's sense);
+//! * each **(tenant, model)** pair is a stream of execution in the
+//!   paper's sense;
 //! * each **model** is a coalescing *group*: requests for one model pack
 //!   into one launch (up to the model's largest compiled batch variant),
 //!   requests for different models never share a launch;
-//! * each **request** is a [`DispatchRequest`] carrying its SLO and its
-//!   input row as the attached payload — marked *independent* of its
-//!   stream's earlier requests (stateless inference), so a hot tenant's
-//!   burst rides one superkernel launch instead of serializing into
-//!   singleton packs (see [`Server::independent_streams`]);
+//! * each **request** carries its SLO and its input row as the attached
+//!   payload — marked *independent* of its stream's earlier requests
+//!   (stateless inference) so a hot tenant's burst rides one superkernel
+//!   launch (see [`Server::independent_streams`]);
 //! * a pack launch executes as one padded model batch through
 //!   [`ModelBackend::execute`] (the [`ServeExecutor`] adapter).
 //!
-//! Four drive modes, one core:
+//! Every public drive mode is a thin constructor choosing a cell of the
+//! engine's mode matrix (see the [`crate::serve::engine`] module docs for
+//! the full table, the threading model of the wall-clock runs, and why
+//! virtual time keeps the synchronous admission gate):
 //!
-//! * [`Server::replay`] — virtual-paced arrivals, real measured service
-//!   times, synchronous `pump`. Deterministic given a trace and a
-//!   deterministic backend.
-//! * [`Server::replay_placed`] — the multi-device virtual-time replay:
-//!   launches route through a [`crate::placement`] table onto per-worker
-//!   device timelines (heterogeneous speeds, per-class learned
-//!   estimates), with optional hot-group rebalancing. Deterministic.
-//! * [`Server::run_realtime`] — wall-clock arrivals from a generator
-//!   thread, launches executed inline (`issue_ready` → `run_issued` →
-//!   `finish_launch`).
-//! * [`Server::run_realtime_pooled`] / [`Server::run_realtime_placed`] —
-//!   the concurrent launch stage: launches fan out to a [`StatefulPool`]
-//!   where each worker owns its own backend, routed to the least-loaded
-//!   replica of the launch's group in the placement table; window
-//!   capacity is the admission backstop.
+//! * [`Server::replay`] — virtual × single-worker timeline;
+//! * [`Server::replay_placed`] — virtual × fleet timelines (+ optional
+//!   rebalance);
+//! * [`Server::run_realtime`] — wall × inline (± frontend);
+//! * [`Server::run_realtime_pooled`] — wall × pool over an anonymous
+//!   homogeneous fleet (± frontend);
+//! * [`Server::run_realtime_placed`] — wall × pool over a device
+//!   topology (+ optional rebalance, ± frontend).
 //!
 //! Admission and the scheduler share one estimator
 //! ([`ServeExecutor::estimate_group_us`]), priced at the *padded* compiled
 //! variant that will actually run — they can no longer disagree.
-//!
-//! **Threading model of the wall-clock drivers** (`run_realtime*`; see
-//! [`crate::serve::frontend`] for the full contract): a generator thread
-//! paces client arrivals into an intake channel; with
-//! [`Server::frontend`] set (the default) a dedicated *frontend stage*
-//! thread owns that channel and the admission gate, pricing every request
-//! against the [`frontend::AdmissionView`] snapshot the scheduler thread
-//! publishes once per iteration — so a tenant's accept/reject never waits
-//! on an issue/launch/collect iteration. Accepted requests flow on to the
-//! scheduler thread, which owns the JIT window, the clock, the launch
-//! pool and the per-worker backlog accounting, and is the only snapshot
-//! writer. The virtual-time `replay*` drivers keep the synchronous gate
-//! for determinism, but price through the same `GroupView` path, so the
-//! two gates cannot disagree on identical state.
 
 use std::collections::{BTreeMap, BTreeSet, HashMap};
-use std::sync::mpsc;
-use std::sync::Arc;
-use std::time::{Duration, Instant};
 
-use crate::compiler::ir::{DispatchRequest, StreamId, TensorOp};
-use crate::compiler::jit::{
-    JitCompiler, JitConfig, OpCompletion, PackExecutor, PackMember, PackRun,
-};
 use crate::compiler::coalescer::{Coalescer, SuperKernel};
+use crate::compiler::ir::TensorOp;
+use crate::compiler::jit::{JitCompiler, JitConfig, PackExecutor, PackMember, PackRun};
 use crate::compiler::scheduler::Policy;
 use crate::gpu::device::DeviceSpec;
 use crate::gpu::kernel::KernelDesc;
-use crate::placement::{
-    DeviceTopology, Placer, PlacementTable, RebalanceConfig, Rebalancer,
-};
+use crate::placement::{DeviceTopology, PlacementTable, RebalanceConfig, Rebalancer};
 use crate::runtime::executor::{ModelExec, PjrtExecutor};
-use crate::runtime::golden;
-use crate::serve::admission::{Admission, Admit};
-use crate::serve::frontend::{
-    self, AdmissionView, FrontendGate, FrontendReport, GateExtras, GateRequest,
-    ViewCell, STALE_VIEW_US,
+use crate::serve::admission::Admission;
+use crate::serve::engine::{
+    seed_placement, trace_arrivals, Arrival, Engine, EngineConfig, InlineStage,
+    Placement, PoolStage, ServeJit, TimelineStage, VirtualClock, WallClock,
 };
 use crate::serve::metrics::ServeMetrics;
 use crate::util::stats::Ewma;
-use crate::util::threadpool::{Stage, StatefulPool};
+use crate::util::threadpool::StatefulPool;
 use crate::workload::trace::Trace;
 use crate::Result;
 
@@ -119,7 +94,7 @@ impl BatchPolicy {
 
     /// Lower the serving policy onto the JIT core's knobs: per-model pack
     /// caps (largest compiled variant) and the shared scheduler policy.
-    fn jit_config(&self, models: &[ModelSlot], window_capacity: usize) -> JitConfig {
+    pub(crate) fn jit_config(&self, models: &[ModelSlot], window_capacity: usize) -> JitConfig {
         let max_b = models
             .iter()
             .map(|m| m.max_batch as usize)
@@ -301,15 +276,15 @@ impl<B: ModelBackend> ServeExecutor<B> {
     }
 
     /// Install the fleet's device-class speed table (relative throughput,
-    /// index = class id). The placed drivers call this once at startup.
+    /// index = class id). The placed drive modes call this once at startup.
     pub fn set_class_speeds(&mut self, speeds: Vec<f64>) {
         if !speeds.is_empty() {
             self.class_speeds = speeds;
         }
     }
 
-    /// Pin a group's primary device class (follows the placement table's
-    /// primary replica; updated again after every rebalance).
+    /// Pin a group's primary estimation class (follows the placement
+    /// table's primary replica; updated again after every rebalance).
     pub fn set_group_class(&mut self, group: u64, class: u32) {
         self.group_class.insert(group, class);
     }
@@ -497,19 +472,6 @@ impl ServeReport {
     }
 }
 
-/// A (tenant, model-group) pair is one stream of execution: per-tenant
-/// program order within a model, full independence across pairs. Stream
-/// ids are interned per run in first-appearance order (no bit packing —
-/// arbitrary tenant ids can never collide).
-fn intern_stream(
-    streams: &mut BTreeMap<(u32, u64), u32>,
-    tenant: u32,
-    group: u64,
-) -> StreamId {
-    let next = streams.len() as u32;
-    StreamId(*streams.entry((tenant, group)).or_insert(next))
-}
-
 /// Build the run's model table (group id = sorted-name index) from the
 /// trace and the backend's manifest knowledge.
 fn model_slots<B: ModelBackend>(
@@ -537,288 +499,18 @@ fn model_slots<B: ModelBackend>(
     (slots, index)
 }
 
-/// Seed the placement table: LPT over each group's total estimated work
-/// in the trace (batch-1 estimates x request count). Shared by the placed
-/// replay and realtime drivers so their initial placements cannot diverge.
-fn seed_placement<B: ModelBackend>(
-    backend: &B,
-    trace: &Trace,
-    index: &BTreeMap<String, u64>,
-    groups: u64,
-    topo: &DeviceTopology,
-) -> PlacementTable {
-    let mut work: BTreeMap<u64, f64> = (0..groups).map(|g| (g, 0.0)).collect();
-    for r in &trace.requests {
-        *work.entry(index[&r.model]).or_insert(0.0) += backend.estimate_us(&r.model, 1);
-    }
-    let costs: Vec<(u64, f64)> = work.into_iter().collect();
-    Placer::place(&costs, topo)
-}
-
-/// Effective drain parallelism of a group's replica set: how many
-/// primary-class-equivalents serve it (Σ replica speed ÷ primary-replica
-/// speed, so the units match the estimate, which is priced on the primary
-/// class). Two equal replicas = 2.0; a v100 primary with a k80 replica =
-/// ~1.25 — dividing the drain by the raw replica count would underprice
-/// it on mixed fleets and re-admit doomed requests.
-fn drain_parallelism(table: &PlacementTable, topo: &DeviceTopology, group: u64) -> f64 {
-    let reps = table.replicas_of(group);
-    match reps.first() {
-        None => 1.0,
-        Some(p) => {
-            let primary = topo.speed_of_worker(*p).max(1e-9);
-            (reps.iter().map(|w| topo.speed_of_worker(*w)).sum::<f64>() / primary)
-                .max(1.0)
-        }
-    }
-}
-
-/// The wall-clock drivers' launch-stage configuration: the device
-/// topology, the group→replicas placement table, and the optional
-/// rebalancer. `None` on the inline (no pool) and legacy hash-routed
-/// paths.
-type PlacedState = Option<(DeviceTopology, PlacementTable, Option<Rebalancer>)>;
-
-/// Admission gate inputs for one group under the current launch-stage
-/// configuration: (drain parallelism, measured worker backlog).
-///
-/// * placed (placement table present): speed-weighted replica
-///   parallelism plus the least-loaded replica's booked backlog;
-/// * pooled but unplaced (legacy hash routing): the hash-routed worker's
-///   booked backlog — the worker every launch of the group lands on.
-///   This signal was maintained by the launch stage but never consulted,
-///   so the gate priced pooled-unplaced drains queue-blind;
-/// * inline (no pool): nothing measured; the JIT's in-flight term prices
-///   the drain.
-fn gate_inputs(
-    placed: &PlacedState,
-    pool_workers: usize,
-    worker_backlog: &[f64],
-    group: u64,
-) -> (f64, Option<f64>) {
-    match placed {
-        Some((topo, table, _)) => {
-            let b = table
-                .replicas_of(group)
-                .iter()
-                .map(|w| worker_backlog.get(*w).copied().unwrap_or(0.0))
-                .fold(f64::INFINITY, f64::min);
-            (
-                drain_parallelism(table, topo, group),
-                Some(if b.is_finite() { b } else { 0.0 }),
-            )
-        }
-        None if pool_workers > 0 => (
-            1.0,
-            Some(
-                worker_backlog
-                    .get(group as usize % pool_workers)
-                    .copied()
-                    .unwrap_or(0.0),
-            ),
-        ),
-        None => (1.0, None),
-    }
-}
-
-/// Build the full admission snapshot the frontend stage prices against
-/// (one [`frontend::GroupView`] per group via the shared
-/// [`frontend::snapshot_group`], plus the drain counters that net off the
-/// frontend's accept counts).
-fn build_view<B: ModelBackend>(
-    seq: u64,
-    jit: &JitCompiler<ServeExecutor<&mut B>, Vec<f32>>,
-    placed: &PlacedState,
-    pool_workers: usize,
-    worker_backlog: &[f64],
-    drained: (&[u64], &[u64]),
-) -> AdmissionView {
-    let groups = drained.0.len() as u64;
-    AdmissionView {
-        seq,
-        now_us: jit.now_us,
-        published: Instant::now(),
-        groups: (0..groups)
-            .map(|g| {
-                let (par, backlog) = gate_inputs(placed, pool_workers, worker_backlog, g);
-                frontend::snapshot_group(jit, g, par, backlog, true)
-            })
-            .collect(),
-        drained: drained.0.to_vec(),
-        drained_by_stream: drained.1.to_vec(),
-    }
-}
-
-/// Pin every group's primary estimation class to its current primary
-/// replica's device class (called at startup and after each rebalance).
-fn repin_group_classes<B: ModelBackend>(
-    exec: &mut ServeExecutor<B>,
-    table: &PlacementTable,
-    topo: &DeviceTopology,
-    groups: u64,
-) {
-    for g in 0..groups {
-        if let Some(w) = table.primary_of(g) {
-            exec.set_group_class(g, topo.class_of(w));
-        }
-    }
-}
-
-fn record_completion(metrics: &mut ServeMetrics, c: &OpCompletion) {
-    let tenant = c.op.tag as u32;
-    if c.failed {
-        metrics.drop_request(tenant);
-    } else {
-        metrics.complete(tenant, c.latency_us(), c.met_deadline);
-    }
-}
-
-/// One request at the admission gate (bundled so the drivers cannot
-/// transpose the adjacent time/flag fields at a call site).
-struct AdmitReq {
-    group: u64,
-    tenant: u32,
-    arrival_us: f64,
-    deadline_us: f64,
-    independent: bool,
-    /// Effective drain parallelism of the group's serving workers (speed-
-    /// weighted replica count from [`drain_parallelism`]; 1.0 for the
-    /// single-device drive modes) — the drain estimate's divisor.
-    parallelism: f64,
-    /// Measured backlog on the group's least-loaded replica timeline, µs
-    /// (the placed virtual-time driver's device queues, which already
-    /// include every issued launch — other groups' included). `Some`
-    /// replaces the JIT's in-flight estimate term, which cannot see
-    /// device queueing and would underprice launches waiting for a busy
-    /// device. `None` for drive modes without device timelines.
-    device_backlog_us: Option<f64>,
-    row: Vec<f32>,
-}
-
-/// One client request in flight from the generator (client side) to the
-/// admission gate — sync or frontend.
-struct Incoming {
-    tenant: u32,
-    group: u64,
-    slo_us: f64,
-    arrival: Instant,
-    row: Vec<f32>,
-}
-
-/// An accepted, pre-priced request in flight from the frontend stage to
-/// the scheduler thread. The gate decision is already made; the scheduler
-/// only timestamps it into the window (backpressure backstop aside).
-struct Admitted {
-    stream: StreamId,
-    group: u64,
-    tenant: u32,
-    slo_us: f64,
-    arrival: Instant,
-    row: Vec<f32>,
-}
-
-/// The post-accept tail shared by both gates (bundled so the two call
-/// sites cannot drift): what the scheduler needs to timestamp an accepted
-/// request into the window.
-struct Accepted {
-    stream: StreamId,
-    group: u64,
-    tenant: u32,
-    slo_us: f64,
-    arrival_us: f64,
-    independent: bool,
-    row: Vec<f32>,
-}
-
-/// Build the dispatch request for an accepted serving request and submit
-/// it at its true arrival; the window backstop sheds on overflow
-/// (recorded as a drop). The ONE request-construction path behind the
-/// synchronous gate and the frontend drain.
-fn submit_accepted<B: ModelBackend>(
-    jit: &mut JitCompiler<ServeExecutor<&mut B>, Vec<f32>>,
-    metrics: &mut ServeMetrics,
-    slots: &[ModelSlot],
-    a: Accepted,
-) {
-    let slot = &slots[a.group as usize];
-    let req = DispatchRequest::new(
-        a.stream,
-        KernelDesc::gemm(1, slot.d_in as u32, 1),
-        a.slo_us,
-    )
-    .with_group(a.group)
-    .with_tag(a.tenant as u64)
-    .with_independent(a.independent);
-    if jit.submit_at(req, a.arrival_us, a.row).is_none() {
-        // window full: the backpressure backstop sheds the request
-        metrics.drop_request(a.tenant);
-    }
-}
-
-/// The admission frontend stage's thread body: drain the intake channel,
-/// price each request against the latest published [`AdmissionView`],
-/// forward accepts to the scheduler, turn rejects around locally. Exits
-/// when the intake side disconnects; its thread-local accounting
-/// ([`FrontendReport`]) comes home through the stage's join.
-fn frontend_loop(
-    intake_rx: mpsc::Receiver<Incoming>,
-    acc_tx: mpsc::Sender<Admitted>,
-    cell: Arc<ViewCell>,
-    admission: Admission,
-    groups: usize,
-    independent: bool,
-    t0: Instant,
-) -> FrontendReport {
-    let mut gate = FrontendGate::new(admission, groups);
-    let mut report = FrontendReport::default();
-    loop {
-        let first = match intake_rx.recv_timeout(Duration::from_micros(500)) {
-            Ok(inc) => inc,
-            Err(mpsc::RecvTimeoutError::Timeout) => continue,
-            Err(mpsc::RecvTimeoutError::Disconnected) => break,
-        };
-        let mut batch = vec![first];
-        while let Ok(inc) = intake_rx.try_recv() {
-            batch.push(inc);
-        }
-        for inc in batch {
-            let view = cell.load();
-            let now_us = t0.elapsed().as_secs_f64() * 1e6;
-            let arrival_us =
-                inc.arrival.saturating_duration_since(t0).as_secs_f64() * 1e6;
-            let stream = gate.intern(inc.tenant, inc.group);
-            let greq = GateRequest {
-                stream,
-                independent,
-                deadline_us: arrival_us + inc.slo_us,
-            };
-            let decision = gate.decide(&view, inc.group, &greq, now_us);
-            report.decisions += 1;
-            report
-                .admission_latency
-                .record_us(inc.arrival.elapsed().as_secs_f64() * 1e6);
-            if view.published.elapsed().as_secs_f64() * 1e6 > STALE_VIEW_US {
-                report.stale_decisions += 1;
-            }
-            // a send can only fail at shutdown (scheduler gone): the
-            // request is shed, counted like any other reject
-            let accepted = decision == Admit::Accept
-                && acc_tx
-                    .send(Admitted {
-                        stream,
-                        group: inc.group,
-                        tenant: inc.tenant,
-                        slo_us: inc.slo_us,
-                        arrival: inc.arrival,
-                        row: inc.row,
-                    })
-                    .is_ok();
-            if !accepted {
-                *report.drops.entry(inc.tenant).or_insert(0) += 1;
-            }
-        }
-    }
-    report
+/// The common per-run wiring every drive-mode constructor needs: built
+/// ONCE by [`Server::engine_parts`] so the five thin constructors cannot
+/// drift in how they derive the model table, seed placement, lower the
+/// trace, or configure the JIT.
+struct EngineParts<'a, B: ModelBackend> {
+    slots: Vec<ModelSlot>,
+    arrivals: Vec<Arrival>,
+    /// LPT-seeded placement table over the given topology (None when the
+    /// mode runs unplaced).
+    table: Option<PlacementTable>,
+    jit: ServeJit<&'a mut B>,
+    config: EngineConfig,
 }
 
 /// The multi-tenant server.
@@ -839,13 +531,12 @@ pub struct Server<B: ModelBackend> {
     /// rides each launch.
     pub independent_streams: bool,
     /// Run admission on a dedicated frontend stage thread (the default)
-    /// in the wall-clock drivers, so tenant accept/reject decisions never
-    /// wait on a scheduler iteration — see [`crate::serve::frontend`].
-    /// With the flag off the gate runs synchronously on the scheduler
-    /// thread between channel drains (the pre-frontend behavior, kept for
-    /// comparison benches). The virtual-time `replay*` drivers always use
-    /// the synchronous gate: a wall-clock frontend would race the virtual
-    /// clock and break replay determinism.
+    /// in the wall-clock drive modes, so tenant accept/reject decisions
+    /// never wait on an engine iteration — see [`crate::serve::frontend`].
+    /// With the flag off the gate runs synchronously between channel
+    /// drains (kept for comparison benches). The virtual-time `replay*`
+    /// modes always use the synchronous gate: a wall-clock frontend would
+    /// race the virtual clock and break replay determinism.
     pub frontend: bool,
 }
 
@@ -872,332 +563,134 @@ impl<B: ModelBackend> Server<B> {
         &mut self.backend
     }
 
-    /// Admission decision for one request; on Accept, submits it into the
-    /// JIT (window backpressure sheds as a backstop). Records drops.
-    ///
-    /// Pricing goes through the same [`frontend::GroupView`] the async
-    /// frontend stage consumes, built synchronously from live JIT state —
-    /// see [`frontend::GroupView::drain_est_us`] for the drain model
-    /// (per-launch queue and in-flight pricing, speed-weighted replica
-    /// parallelism, the measured device backlog replacing the in-flight
-    /// term when known) and [`Admission::decide`] for the separate
-    /// queued/in-flight contracts. One pricing implementation behind both
-    /// gates means they cannot disagree on identical state.
-    fn admit_request(
-        jit: &mut JitCompiler<ServeExecutor<&mut B>, Vec<f32>>,
-        streams: &mut BTreeMap<(u32, u64), u32>,
-        admission: &Admission,
-        metrics: &mut ServeMetrics,
-        slots: &[ModelSlot],
-        r: AdmitReq,
-    ) {
-        let AdmitReq {
-            group,
-            tenant,
-            arrival_us,
-            deadline_us,
-            independent,
-            parallelism,
-            device_backlog_us,
-            row,
-        } = r;
-        let stream = intern_stream(streams, tenant, group);
-        // independent-mode pricing never reads the per-stream depth list,
-        // so the synchronous gate skips that window scan
-        let gview = frontend::snapshot_group(
-            jit,
-            group,
-            parallelism,
-            device_backlog_us,
-            !independent,
-        );
-        let greq = GateRequest {
-            stream,
-            independent,
-            deadline_us,
+    /// Build the per-run wiring shared by EVERY drive-mode constructor:
+    /// the model/group table, the trace lowered to engine arrivals, the
+    /// LPT-seeded placement table (when a topology applies), the
+    /// configured JIT over this server's backend, and the engine options.
+    /// One implementation so the five thin constructors cannot drift.
+    fn engine_parts(
+        &mut self,
+        trace: &Trace,
+        topo: Option<&DeviceTopology>,
+        use_frontend: bool,
+    ) -> EngineParts<'_, B> {
+        let (slots, index) = model_slots(&self.backend, trace);
+        let table = topo.map(|t| {
+            seed_placement(&self.backend, trace, &index, slots.len() as u64, t)
+        });
+        let arrivals = trace_arrivals(trace, &index);
+        let cfg = self.policy.jit_config(&slots, self.window_capacity);
+        let config = EngineConfig {
+            admission: self.admission.clone(),
+            independent_streams: self.independent_streams,
+            frontend: use_frontend,
+            policy: self.policy.name(),
         };
-        if gview.decide(admission, &greq, GateExtras::default(), jit.now_us)
-            == Admit::Reject
-        {
-            metrics.drop_request(tenant);
-            return;
-        }
-        submit_accepted(
-            jit,
-            metrics,
-            slots,
-            Accepted {
-                stream,
-                group,
-                tenant,
-                slo_us: deadline_us - arrival_us,
-                arrival_us,
-                independent,
-                row,
-            },
+        let jit = JitCompiler::with_payloads(
+            cfg,
+            ServeExecutor::new(&mut self.backend, slots.clone()),
         );
+        EngineParts {
+            slots,
+            arrivals,
+            table,
+            jit,
+            config,
+        }
     }
 
     /// Replay a trace in virtual time with real service executions,
-    /// entirely through the JIT core. Request payloads are deterministic
-    /// hash01 rows.
+    /// entirely through the unified engine: the **virtual × single-worker
+    /// timeline** cell of the mode matrix, i.e. exactly
+    /// [`Server::replay_placed`] on a one-v100 topology minus the
+    /// per-device metrics (pinned by
+    /// `prop_replay_and_replay_placed_agree_on_single_v100`).
+    /// Deterministic given a trace and a deterministic backend. Request
+    /// payloads are deterministic hash01 rows.
     pub fn replay(&mut self, trace: &Trace) -> ServeReport {
-        let mut metrics = ServeMetrics::default();
-        let (slots, index) = model_slots(&self.backend, trace);
-        let cfg = self.policy.jit_config(&slots, self.window_capacity);
-        let policy_name = self.policy.name();
-        let admission = self.admission.clone();
-        let independent = self.independent_streams;
-        let mut jit: JitCompiler<ServeExecutor<&mut B>, Vec<f32>> =
-            JitCompiler::with_payloads(
-                cfg,
-                ServeExecutor::new(&mut self.backend, slots.clone()),
-            );
-        let mut streams: BTreeMap<(u32, u64), u32> = BTreeMap::new();
-        let reqs = &trace.requests;
-        let mut next = 0usize;
-        loop {
-            // 1. admit everything that has arrived (true arrival times)
-            while next < reqs.len() && reqs[next].arrival_us <= jit.now_us + 1e-9 {
-                let r = &reqs[next];
-                next += 1;
-                let group = index[&r.model];
-                let row =
-                    golden::gen_hash01(slots[group as usize].d_in, r.id.wrapping_mul(7919));
-                Self::admit_request(
-                    &mut jit,
-                    &mut streams,
-                    &admission,
-                    &mut metrics,
-                    &slots,
-                    AdmitReq {
-                        group,
-                        tenant: r.tenant,
-                        arrival_us: r.arrival_us,
-                        deadline_us: r.deadline_us,
-                        independent,
-                        parallelism: 1.0,
-                        device_backlog_us: None,
-                        row,
-                    },
-                );
-            }
-            // 2. let the core launch everything the policy allows
-            let (done, wake) = jit.pump();
-            for c in &done {
-                record_completion(&mut metrics, c);
-            }
-            for l in jit.take_launches() {
-                if l.ok {
-                    metrics.launch(&l);
-                }
-            }
-            // 3. advance the virtual clock to the next event
-            let next_arrival = reqs.get(next).map(|r| r.arrival_us);
-            match (wake, next_arrival) {
-                (None, None) => {
-                    debug_assert!(jit.window.is_empty(), "deadlocked window");
-                    break;
-                }
-                (None, Some(t)) => jit.advance_to(t),
-                (Some(w), None) => jit.advance_to(w),
-                (Some(w), Some(t)) => jit.advance_to(w.min(t)),
-            }
-        }
-        metrics.span_us = jit.now_us;
-        metrics.jit = jit.stats.clone();
-        ServeReport {
-            metrics,
-            policy: policy_name,
-        }
+        let topo = DeviceTopology::homogeneous(1, DeviceSpec::v100());
+        let parts = self.engine_parts(trace, Some(&topo), false);
+        let table = parts.table.expect("seeded table");
+        let engine = Engine::new(
+            parts.jit,
+            VirtualClock::new(),
+            TimelineStage::new(1),
+            Some(Placement {
+                topo,
+                table,
+                rebal: None,
+                report_devices: false,
+            }),
+            parts.slots,
+            parts.config,
+        );
+        engine.run_virtual(&parts.arrivals).0
     }
 
-    /// Multi-device virtual-time replay: the placement-aware sibling of
-    /// [`Server::replay`]. Launches issue through the one JIT core, then
-    /// route to topology workers via a placement table (least-busy
-    /// replica); each worker keeps its own busy-until timeline, so a
-    /// replicated group drains on several devices in parallel. Execution
-    /// durations come from the shared backend scaled by each device's
-    /// relative speed; learned estimates are keyed per device class.
-    /// With `rebalance` set, hot groups replicate onto cooler devices and
-    /// cold groups migrate off hot ones between observation windows.
-    ///
-    /// Deterministic given a trace, a deterministic backend, and a fixed
-    /// topology. Returns the report plus the final placement table.
+    /// Multi-device virtual-time replay: launches route through a
+    /// placement table onto per-worker device timelines (heterogeneous
+    /// speeds, per-class learned estimates), with optional hot-group
+    /// rebalancing — the **virtual × fleet-timeline** cells of the mode
+    /// matrix. Deterministic given a trace, a deterministic backend, and
+    /// a fixed topology. Returns the report plus the final placement
+    /// table.
     pub fn replay_placed(
         &mut self,
         trace: &Trace,
         topo: &DeviceTopology,
         rebalance: Option<RebalanceConfig>,
     ) -> (ServeReport, PlacementTable) {
-        let mut metrics = ServeMetrics::default();
-        let (slots, index) = model_slots(&self.backend, trace);
-        let groups = slots.len() as u64;
-        let mut table = seed_placement(&self.backend, trace, &index, groups, topo);
-        let mut rebal = rebalance.map(|c| Rebalancer::new(c, topo.len()));
-
-        let cfg = self.policy.jit_config(&slots, self.window_capacity);
-        let policy_name = self.policy.name();
-        let admission = self.admission.clone();
-        let independent = self.independent_streams;
-        let mut exec = ServeExecutor::new(&mut self.backend, slots.clone());
-        exec.set_class_speeds(topo.class_speeds());
-        repin_group_classes(&mut exec, &table, topo, groups);
-        let mut jit: JitCompiler<ServeExecutor<&mut B>, Vec<f32>> =
-            JitCompiler::with_payloads(cfg, exec);
-        for w in topo.workers() {
-            metrics.ensure_device(w.worker, w.spec.name);
-        }
-
-        let mut streams: BTreeMap<(u32, u64), u32> = BTreeMap::new();
-        // per-worker busy-until time: the device timelines
-        let mut free_at: Vec<f64> = vec![0.0; topo.len()];
-        // issued-but-unfinished launches: (done_us, ticket, worker, group, run)
-        let mut inflight: Vec<(f64, u64, usize, u64, PackRun)> = Vec::new();
-        let reqs = &trace.requests;
-        let mut next = 0usize;
-        loop {
-            // 1. admit everything that has arrived (true arrival times)
-            while next < reqs.len() && reqs[next].arrival_us <= jit.now_us + 1e-9 {
-                let r = &reqs[next];
-                next += 1;
-                let group = index[&r.model];
-                let parallelism = drain_parallelism(&table, topo, group);
-                // the true wait: queued work on the least-loaded replica
-                let backlog = table
-                    .replicas_of(group)
-                    .iter()
-                    .map(|w| (free_at[*w] - jit.now_us).max(0.0))
-                    .fold(f64::INFINITY, f64::min);
-                let backlog = if backlog.is_finite() { backlog } else { 0.0 };
-                let row =
-                    golden::gen_hash01(slots[group as usize].d_in, r.id.wrapping_mul(7919));
-                Self::admit_request(
-                    &mut jit,
-                    &mut streams,
-                    &admission,
-                    &mut metrics,
-                    &slots,
-                    AdmitReq {
-                        group,
-                        tenant: r.tenant,
-                        arrival_us: r.arrival_us,
-                        deadline_us: r.deadline_us,
-                        independent,
-                        parallelism,
-                        device_backlog_us: Some(backlog),
-                        row,
-                    },
-                );
-            }
-            // 2. issue every launch the policy allows; route each to the
-            // least-busy replica and queue it on that device's timeline
-            let (launches, wake) = jit.issue_ready();
-            for l in launches {
-                let group = jit
-                    .window
-                    .get(l.pack.ops[0])
-                    .map(|op| op.group)
-                    .unwrap_or(0);
-                let worker = table.route(group, &free_at);
-                // re-price on the routed class: a slow replica running at
-                // its own speed is not a straggler
-                let est_routed = jit.executor().estimate_group_on_class_us(
-                    group,
-                    topo.class_of(worker),
-                    l.pack.ops.len() as u32,
-                );
-                jit.reprice_pending(l.ticket, est_routed);
-                let mut run = jit.run_issued(l.ticket);
-                run.duration_us /= topo.speed_of_worker(worker).max(1e-9);
-                run.device_class = topo.class_of(worker);
-                let start = free_at[worker].max(jit.now_us);
-                let done = start + run.duration_us;
-                free_at[worker] = done;
-                inflight.push((done, l.ticket, worker, group, run));
-            }
-            // 3. advance the virtual clock to the next event
-            let next_done = inflight.iter().map(|e| e.0).fold(f64::INFINITY, f64::min);
-            let next_arrival = reqs
-                .get(next)
-                .map(|r| r.arrival_us)
-                .unwrap_or(f64::INFINITY);
-            let t = next_done.min(next_arrival).min(wake.unwrap_or(f64::INFINITY));
-            if !t.is_finite() {
-                debug_assert!(jit.window.is_empty(), "deadlocked placed window");
-                break;
-            }
-            jit.advance_to(t);
-            // 4. fold in completions now due, in deterministic time order
-            let mut due: Vec<(f64, u64, usize, u64, PackRun)> = Vec::new();
-            let mut i = 0;
-            while i < inflight.len() {
-                if inflight[i].0 <= jit.now_us + 1e-9 {
-                    due.push(inflight.swap_remove(i));
-                } else {
-                    i += 1;
-                }
-            }
-            due.sort_by(|a, b| {
-                a.0.partial_cmp(&b.0).expect("NaN done time").then(a.1.cmp(&b.1))
-            });
-            for (done_us, ticket, worker, group, run) in due {
-                let (ok, dur) = (run.ok, run.duration_us);
-                let completions = jit.finish_launch(ticket, done_us, run);
-                for c in &completions {
-                    record_completion(&mut metrics, c);
-                }
-                if ok {
-                    metrics.device_launch(worker, topo.spec_of(worker).name, dur);
-                    if let Some(rb) = rebal.as_mut() {
-                        rb.observe_launch(group, worker, dur);
-                    }
-                }
-            }
-            for l in jit.take_launches() {
-                if l.ok {
-                    metrics.launch(&l);
-                }
-            }
-            // 5. rebalance between observation windows; re-pin each
-            // group's primary estimation class to its new primary replica
-            if let Some(rb) = rebal.as_mut() {
-                let actions = rb.maybe_rebalance(jit.now_us, &mut table, topo);
-                if !actions.is_empty() {
-                    repin_group_classes(jit.executor_mut(), &table, topo, groups);
-                }
-                metrics.replications = rb.stats.replications;
-                metrics.migrations = rb.stats.migrations;
-            }
-        }
-        metrics.span_us = jit.now_us;
-        metrics.jit = jit.stats.clone();
-        (
-            ServeReport {
-                metrics,
-                policy: policy_name,
-            },
-            table,
-        )
+        let rebal = rebalance.map(|c| Rebalancer::new(c, topo.len()));
+        let parts = self.engine_parts(trace, Some(topo), false);
+        let table = parts.table.expect("seeded table");
+        let engine = Engine::new(
+            parts.jit,
+            VirtualClock::new(),
+            TimelineStage::new(topo.len()),
+            Some(Placement {
+                topo: topo.clone(),
+                table,
+                rebal,
+                report_devices: true,
+            }),
+            parts.slots,
+            parts.config,
+        );
+        let (report, table) = engine.run_virtual(&parts.arrivals);
+        (report, table.expect("placed run returns its table"))
     }
 
     /// Threaded real-time mode: a generator thread paces the trace on the
-    /// wall clock (compressed by `speedup`); the current thread drives the
-    /// JIT core and executes launches inline. Returns wall-clock metrics.
+    /// wall clock (compressed by `speedup`); the engine drives the JIT
+    /// and executes launches inline — the **wall × inline** cell, with
+    /// admission on the frontend stage per [`Server::frontend`]. Returns
+    /// wall-clock metrics.
     pub fn run_realtime(&mut self, trace: &Trace, speedup: f64) -> ServeReport
     where
         B: 'static,
     {
-        self.realtime_loop(trace, speedup, None, None, None, false)
+        let parts = self.engine_parts(trace, None, self.frontend);
+        Engine::new(
+            parts.jit,
+            WallClock::new(),
+            InlineStage::new(),
+            None,
+            parts.slots,
+            parts.config,
+        )
+        .run_wall(parts.arrivals, speedup)
     }
 
     /// Concurrent real-time mode: launches fan out to `workers` pool
     /// workers, each owning its own backend built by `factory` on its own
-    /// thread (the backend type need not be `Send`). The launch stage
-    /// routes through a placement table over a homogeneous fleet (one
-    /// device class), so superkernels for different models execute in
-    /// parallel while one model's launches stay serialized (and
-    /// cache-warm) on their placed worker.
+    /// thread (the backend type need not be `Send`) — the **wall × pool**
+    /// cell. The stage routes through a placement table over an anonymous
+    /// homogeneous fleet (one device class), so superkernels for
+    /// different models execute in parallel while one model's launches
+    /// stay serialized (and cache-warm) on their placed worker. Device
+    /// names are NOT reported — this mode runs on whatever hardware the
+    /// caller's backends really use, and `metrics.devices` staying empty
+    /// is the documented single-device-modes contract.
     pub fn run_realtime_pooled<F>(
         &mut self,
         trace: &Trace,
@@ -1210,20 +703,31 @@ impl<B: ModelBackend> Server<B> {
         F: Fn(usize) -> B + Send + Sync + 'static,
     {
         let pool = StatefulPool::new(workers, factory);
-        // placement routing over an anonymous homogeneous fleet; device
-        // names are NOT reported — this mode runs on whatever hardware
-        // the caller's backends really use, and metrics.devices staying
-        // empty is the documented single-device-modes contract
         let topo = DeviceTopology::homogeneous(workers, DeviceSpec::v100());
-        self.realtime_loop(trace, speedup, Some(&pool), Some(topo), None, false)
+        let parts = self.engine_parts(trace, Some(&topo), self.frontend);
+        let table = parts.table.expect("seeded table");
+        Engine::new(
+            parts.jit,
+            WallClock::new(),
+            PoolStage::new(&pool),
+            Some(Placement {
+                topo,
+                table,
+                rebal: None,
+                report_devices: false,
+            }),
+            parts.slots,
+            parts.config,
+        )
+        .run_wall(parts.arrivals, speedup)
     }
 
     /// Device-placed real-time mode: one pool worker per topology device,
     /// each owning the backend `factory(worker, spec)` builds on its own
-    /// thread. Launches route to the least-loaded replica of their
-    /// group's placement-table entry; when `rebalance` is set, hot groups
-    /// replicate onto cooler devices (and cold ones migrate off hot
-    /// devices) as per-device load skews.
+    /// thread — the **wall × pool × placed** cells. Launches route to the
+    /// least-loaded replica of their group's placement-table entry; when
+    /// `rebalance` is set, hot groups replicate onto cooler devices (and
+    /// cold ones migrate off hot devices) as per-device load skews.
     pub fn run_realtime_placed<F>(
         &mut self,
         trace: &Trace,
@@ -1238,453 +742,34 @@ impl<B: ModelBackend> Server<B> {
     {
         let specs = topo.clone();
         let pool = StatefulPool::new(topo.len(), move |i| factory(i, specs.spec_of(i)));
-        self.realtime_loop(trace, speedup, Some(&pool), Some(topo), rebalance, true)
-    }
-
-    fn realtime_loop(
-        &mut self,
-        trace: &Trace,
-        speedup: f64,
-        pool: Option<&StatefulPool<B>>,
-        topo: Option<DeviceTopology>,
-        rebalance: Option<RebalanceConfig>,
-        report_devices: bool,
-    ) -> ServeReport
-    where
-        B: 'static,
-    {
-        let (slots, index) = model_slots(&self.backend, trace);
-        // placement for the pooled launch stage: LPT over each group's
-        // total estimated work; each launch then routes to the
-        // least-loaded replica of its group's table entry
-        let groups = slots.len() as u64;
-        let mut placed: PlacedState =
-            match topo {
-                Some(topo) if pool.is_some() => {
-                    let table =
-                        seed_placement(&self.backend, trace, &index, groups, &topo);
-                    let rebal = rebalance.map(|c| Rebalancer::new(c, topo.len()));
-                    Some((topo, table, rebal))
-                }
-                _ => None,
-            };
-        let gen_reqs: Vec<(f64, u32, u64, f64, u64)> = trace
-            .requests
-            .iter()
-            .map(|r| {
-                (
-                    r.arrival_us / speedup,
-                    r.tenant,
-                    index[&r.model],
-                    r.deadline_us - r.arrival_us,
-                    r.id,
-                )
-            })
-            .collect();
-        let d_ins: Vec<usize> = slots.iter().map(|s| s.d_in).collect();
-        let t0 = Instant::now();
-        let (tx, rx) = mpsc::channel::<Incoming>();
-        let gen = std::thread::spawn(move || {
-            let g0 = Instant::now();
-            for (at_us, tenant, group, slo, id) in gen_reqs {
-                let target = Duration::from_micros(at_us as u64);
-                let elapsed = g0.elapsed();
-                if target > elapsed {
-                    std::thread::sleep(target - elapsed);
-                }
-                let d_in = d_ins[group as usize];
-                let _ = tx.send(Incoming {
-                    tenant,
-                    group,
-                    slo_us: slo,
-                    arrival: Instant::now(),
-                    row: golden::gen_hash01(d_in, id.wrapping_mul(7919)),
-                });
-            }
-        });
-
-        let cfg = self.policy.jit_config(&slots, self.window_capacity);
-        let policy_name = self.policy.name();
-        let admission = self.admission.clone();
-        let independent = self.independent_streams;
-        let use_frontend = self.frontend;
-        let mut metrics = ServeMetrics::default();
-        let (res_tx, res_rx) =
-            mpsc::channel::<(u64, std::result::Result<ModelExec, String>)>();
-        let mut jit: JitCompiler<ServeExecutor<&mut B>, Vec<f32>> =
-            JitCompiler::with_payloads(
-                cfg,
-                ServeExecutor::new(&mut self.backend, slots.clone()),
-            );
-        if let Some((topo, table, _)) = &placed {
-            jit.executor_mut().set_class_speeds(topo.class_speeds());
-            repin_group_classes(jit.executor_mut(), table, topo, groups);
-            if report_devices {
-                for w in topo.workers() {
-                    metrics.ensure_device(w.worker, w.spec.name);
-                }
-            }
-        }
-        let wall_us = |t0: Instant| t0.elapsed().as_secs_f64() * 1e6;
-        let mut streams: BTreeMap<(u32, u64), u32> = BTreeMap::new();
-        // pooled-launch routing decisions, keyed by launch ticket:
-        // (worker, group, routed-class estimate)
-        let mut ticket_route: HashMap<u64, (usize, u64, f64)> = HashMap::new();
-        // estimated un-finished work per pool worker, µs — admission's
-        // device-backlog signal (conservative: head-job progress is not
-        // subtracted; a wall-clock driver cannot observe it)
-        let pool_workers = pool.map(|p| p.workers()).unwrap_or(0);
-        let mut worker_backlog: Vec<f64> = vec![0.0; pool_workers];
-        // cumulative per-group / per-stream requests drained from the
-        // frontend's accepted channel into the window — published in every
-        // snapshot so the frontend nets them off its own accept counters
-        let mut drained: Vec<u64> = vec![0; groups as usize];
-        let mut drained_by_stream: Vec<u64> = Vec::new();
-        let mut view_seq: u64 = 0;
-        // the admission frontend stage: it takes the intake receiver and
-        // hands back accepted requests; `None` = synchronous gate
-        let mut sync_rx: Option<mpsc::Receiver<Incoming>> = Some(rx);
-        let fe =
-            if use_frontend {
-                let intake_rx = sync_rx.take().expect("intake receiver");
-                let (acc_tx, acc_rx) = mpsc::channel::<Admitted>();
-                let cell = ViewCell::new(build_view(
-                    0,
-                    &jit,
-                    &placed,
-                    pool_workers,
-                    &worker_backlog,
-                    (&drained, &drained_by_stream),
-                ));
-                let fe_cell = Arc::clone(&cell);
-                let fe_admission = admission.clone();
-                let n_groups = groups as usize;
-                let stage = Stage::spawn("vliw-frontend", move || {
-                    frontend_loop(
-                        intake_rx,
-                        acc_tx,
-                        fe_cell,
-                        fe_admission,
-                        n_groups,
-                        independent,
-                        t0,
-                    )
-                });
-                Some((acc_rx, cell, stage))
-            } else {
-                None
-            };
-        let mut disconnected = false;
-        // snapshot publication control: republish when scheduler state
-        // changed this iteration, or on a heartbeat at half the staleness
-        // threshold (so idle ticks skip the rebuild without inflating the
-        // frontend's stale-decision counter)
-        let mut view_dirty = false;
-        let mut last_publish = Instant::now();
-        loop {
-            // 1. drain this iteration's input — client arrivals on the
-            // synchronous path, frontend-accepted requests otherwise
-            // (bounded wait when idle); once the upstream side is gone
-            // the channel stays empty — pace the loop with a short sleep
-            // instead of spinning on it
-            if disconnected {
-                std::thread::sleep(Duration::from_micros(200));
-            }
-            if let Some(rx) = &sync_rx {
-                let mut arrivals: Vec<Incoming> = Vec::new();
-                if !disconnected {
-                    match rx.recv_timeout(Duration::from_micros(500)) {
-                        Ok(inc) => {
-                            arrivals.push(inc);
-                            while let Ok(inc) = rx.try_recv() {
-                                arrivals.push(inc);
-                            }
-                        }
-                        Err(mpsc::RecvTimeoutError::Timeout) => {}
-                        Err(mpsc::RecvTimeoutError::Disconnected) => {
-                            disconnected = true
-                        }
-                    }
-                }
-                jit.advance_to(wall_us(t0));
-                for inc in arrivals {
-                    // the synchronous gate decides at drain time: the
-                    // arrival→decision latency IS the channel wait
-                    metrics.sync_admission_decision(
-                        inc.arrival.elapsed().as_secs_f64() * 1e6,
-                    );
-                    let arrival_us =
-                        inc.arrival.saturating_duration_since(t0).as_secs_f64() * 1e6;
-                    let (parallelism, backlog) =
-                        gate_inputs(&placed, pool_workers, &worker_backlog, inc.group);
-                    Self::admit_request(
-                        &mut jit,
-                        &mut streams,
-                        &admission,
-                        &mut metrics,
-                        &slots,
-                        AdmitReq {
-                            group: inc.group,
-                            tenant: inc.tenant,
-                            arrival_us,
-                            deadline_us: arrival_us + inc.slo_us,
-                            independent,
-                            parallelism,
-                            device_backlog_us: backlog,
-                            row: inc.row,
-                        },
-                    );
-                }
-            } else if let Some((acc_rx, _, _)) = &fe {
-                let mut accepted: Vec<Admitted> = Vec::new();
-                if !disconnected {
-                    match acc_rx.recv_timeout(Duration::from_micros(500)) {
-                        Ok(a) => {
-                            accepted.push(a);
-                            while let Ok(a) = acc_rx.try_recv() {
-                                accepted.push(a);
-                            }
-                        }
-                        Err(mpsc::RecvTimeoutError::Timeout) => {}
-                        Err(mpsc::RecvTimeoutError::Disconnected) => {
-                            disconnected = true
-                        }
-                    }
-                }
-                jit.advance_to(wall_us(t0));
-                view_dirty |= !accepted.is_empty();
-                for adm in accepted {
-                    // how long the accepted request sat between threads
-                    // before being priced into the window
-                    metrics
-                        .frontend_wait
-                        .record_us(adm.arrival.elapsed().as_secs_f64() * 1e6);
-                    // drain accounting advances whether or not the window
-                    // backstop sheds — the frontend nets these counters
-                    // off its cumulative accepts either way
-                    drained[adm.group as usize] += 1;
-                    let s = adm.stream.0 as usize;
-                    if drained_by_stream.len() <= s {
-                        drained_by_stream.resize(s + 1, 0);
-                    }
-                    drained_by_stream[s] += 1;
-                    let arrival_us =
-                        adm.arrival.saturating_duration_since(t0).as_secs_f64() * 1e6;
-                    submit_accepted(
-                        &mut jit,
-                        &mut metrics,
-                        &slots,
-                        Accepted {
-                            stream: adm.stream,
-                            group: adm.group,
-                            tenant: adm.tenant,
-                            slo_us: adm.slo_us,
-                            arrival_us,
-                            independent,
-                            row: adm.row,
-                        },
-                    );
-                }
-            }
-            // 2. issue every launch the policy allows right now
-            let (launches, _wake) = jit.issue_ready();
-            view_dirty |= !launches.is_empty();
-            match pool {
-                Some(pool) => {
-                    // concurrent launch stage: route each launch through
-                    // the placement table to the least-loaded replica of
-                    // its group (legacy group-hash when unplaced)
-                    for l in launches {
-                        let group = jit
-                            .window
-                            .get(l.pack.ops[0])
-                            .map(|op| op.group)
-                            .unwrap_or(0);
-                        let worker = match &placed {
-                            Some((_, table, _)) => {
-                                let loads: Vec<f64> = (0..pool.workers())
-                                    .map(|w| pool.in_flight_of(w) as f64)
-                                    .collect();
-                                table.route(group, &loads)
-                            }
-                            None => group as usize % pool.workers(),
-                        };
-                        // re-price on the routed class (a slow replica is
-                        // not a straggler) and book the worker's backlog
-                        let est_routed = match &placed {
-                            Some((topo, _, _)) => {
-                                jit.executor().estimate_group_on_class_us(
-                                    group,
-                                    topo.class_of(worker),
-                                    l.pack.ops.len() as u32,
-                                )
-                            }
-                            None => l.est_us,
-                        };
-                        jit.reprice_pending(l.ticket, est_routed);
-                        if let Some(b) = worker_backlog.get_mut(worker) {
-                            *b += est_routed;
-                        }
-                        ticket_route.insert(l.ticket, (worker, group, est_routed));
-                        let model = slots[group as usize].name.clone();
-                        let rows: Vec<Vec<f32>> = jit
-                            .payloads_of(&l.pack.ops)
-                            .into_iter()
-                            .cloned()
-                            .collect();
-                        let res_tx = res_tx.clone();
-                        let ticket = l.ticket;
-                        pool.submit_to(worker, move |backend: &mut B| {
-                            let r = backend
-                                .execute(&model, &rows)
-                                .map_err(|e| e.to_string());
-                            let _ = res_tx.send((ticket, r));
-                        });
-                    }
-                }
-                None => {
-                    // inline execution on the driver thread
-                    for l in launches {
-                        let run = jit.run_issued(l.ticket);
-                        let done = jit.finish_launch(l.ticket, wall_us(t0), run);
-                        for c in &done {
-                            record_completion(&mut metrics, c);
-                        }
-                    }
-                }
-            }
-            // 3. fold in finished pool launches (block briefly when the
-            // arrival channel is gone and only results remain — avoids a
-            // busy spin on the disconnected arrival channel)
-            let mut results: Vec<(u64, std::result::Result<ModelExec, String>)> =
-                Vec::new();
-            if disconnected && jit.inflight_launches() > 0 {
-                if let Ok(r) = res_rx.recv_timeout(Duration::from_micros(500)) {
-                    results.push(r);
-                }
-            }
-            while let Ok(r) = res_rx.try_recv() {
-                results.push(r);
-            }
-            view_dirty |= !results.is_empty();
-            for (ticket, result) in results {
-                let (worker, group, booked_est) =
-                    ticket_route.remove(&ticket).unwrap_or((0, 0, 0.0));
-                if let Some(b) = worker_backlog.get_mut(worker) {
-                    *b = (*b - booked_est).max(0.0);
-                }
-                let mut run = match result {
-                    Ok(exec) => PackRun {
-                        duration_us: exec.duration_us,
-                        executed: exec.batch,
-                        ok: true,
-                        device_class: 0,
-                    },
-                    Err(e) => {
-                        crate::util::logging::emit(
-                            crate::util::logging::Level::Error,
-                            format_args!("pooled execute failed: {e}"),
-                        );
-                        PackRun {
-                            duration_us: 0.0,
-                            executed: 0,
-                            ok: false,
-                            device_class: 0,
-                        }
-                    }
-                };
-                if let Some((topo, _, _)) = &placed {
-                    run.device_class = topo.class_of(worker);
-                }
-                let (ok, dur) = (run.ok, run.duration_us);
-                let done = jit.finish_launch(ticket, wall_us(t0), run);
-                for c in &done {
-                    record_completion(&mut metrics, c);
-                }
-                if ok {
-                    if let Some((topo, _, rebal)) = placed.as_mut() {
-                        if report_devices {
-                            metrics.device_launch(
-                                worker,
-                                topo.spec_of(worker).name,
-                                dur,
-                            );
-                        }
-                        if let Some(rb) = rebal.as_mut() {
-                            rb.observe_launch(group, worker, dur);
-                        }
-                    }
-                }
-            }
-            for l in jit.take_launches() {
-                if l.ok {
-                    metrics.launch(&l);
-                }
-            }
-            // rebalance between windows (wall clock); keep the estimator's
-            // primary device class in step with the table's primaries
-            if let Some((topo, table, rebal)) = placed.as_mut() {
-                if let Some(rb) = rebal.as_mut() {
-                    let actions = rb.maybe_rebalance(wall_us(t0), table, topo);
-                    if !actions.is_empty() {
-                        repin_group_classes(jit.executor_mut(), table, topo, groups);
-                        // replicas/classes moved: estimates and routing
-                        // inputs changed under the last snapshot
-                        view_dirty = true;
-                    }
-                    metrics.replications = rb.stats.replications;
-                    metrics.migrations = rb.stats.migrations;
-                }
-            }
-            // publish a fresh admission snapshot for the frontend stage —
-            // after this iteration's submits, launches and completions,
-            // so the view only ever lags reality, never leads it. Skipped
-            // on idle ticks (state unchanged => the last view is still
-            // exact; the in-flight term only ages conservatively), with a
-            // heartbeat re-publish so healthy-idle never reads as stale.
-            if let Some((_, cell, _)) = &fe {
-                let heartbeat =
-                    last_publish.elapsed().as_secs_f64() * 1e6 > STALE_VIEW_US / 2.0;
-                if view_dirty || heartbeat {
-                    view_seq += 1;
-                    cell.publish(build_view(
-                        view_seq,
-                        &jit,
-                        &placed,
-                        pool_workers,
-                        &worker_backlog,
-                        (&drained, &drained_by_stream),
-                    ));
-                    view_dirty = false;
-                    last_publish = Instant::now();
-                }
-            }
-            if disconnected && jit.window.is_empty() && jit.inflight_launches() == 0 {
-                break;
-            }
-        }
-        gen.join().expect("generator thread");
-        if let Some((acc_rx, _, stage)) = fe {
-            // the frontend exits once the generator's intake disconnects
-            // and it has drained; fold its thread-local accounting in
-            drop(acc_rx);
-            metrics.merge_frontend(&stage.join());
-        }
-        metrics.span_us = wall_us(t0);
-        metrics.jit = jit.stats.clone();
-        ServeReport {
-            metrics,
-            policy: policy_name,
-        }
+        let rebal = rebalance.map(|c| Rebalancer::new(c, topo.len()));
+        let parts = self.engine_parts(trace, Some(&topo), self.frontend);
+        let table = parts.table.expect("seeded table");
+        Engine::new(
+            parts.jit,
+            WallClock::new(),
+            PoolStage::new(&pool),
+            Some(Placement {
+                topo,
+                table,
+                rebal,
+                report_devices: true,
+            }),
+            parts.slots,
+            parts.config,
+        )
+        .run_wall(parts.arrivals, speedup)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
+
     use crate::workload::trace::{ArrivalKind, Request, TenantSpec, Trace};
 
-    /// The deterministic simulator backend (now public as [`SimBackend`]):
+    /// The deterministic simulator backend (public as [`SimBackend`]):
     /// fixed per-launch overhead + per-row cost, pow2 padded variants.
     fn sim() -> SimBackend {
         SimBackend::default()
@@ -1780,7 +865,7 @@ mod tests {
 
     #[test]
     fn replay_is_deterministic_through_unified_core() {
-        // two identical traces through the unified core must produce
+        // two identical traces through the unified engine must produce
         // identical metrics (deterministic backend => deterministic
         // schedule, bit-for-bit)
         let trace = Trace::generate(&tenants(4, 150.0, 50_000), 40, 13);
@@ -1840,11 +925,10 @@ mod tests {
 
     #[test]
     fn single_tenant_burst_coalesces_at_no_attainment_cost() {
-        // the tentpole acceptance: 8 requests from ONE (tenant, model)
-        // stream, 50µs apart. Under the independence contract the burst
-        // rides multi-problem packs; with program order binding (the
-        // pre-change behavior, still available via `independent_streams`)
-        // the same burst serializes into singleton launches and loses SLOs.
+        // 8 requests from ONE (tenant, model) stream, 50µs apart. Under
+        // the independence contract the burst rides multi-problem packs;
+        // with program order binding the same burst serializes into
+        // singleton launches and loses SLOs.
         let trace = burst_trace(8, 50.0, 3_000);
         let mut s = Server::new(sim(), BatchPolicy::coalescing());
         let r_ind = s.replay(&trace);
@@ -1874,446 +958,6 @@ mod tests {
         // shed by the per-op drain pricing — they were doomed anyway)
         let dep_drops: u64 = r_dep.metrics.tenants.values().map(|t| t.dropped).sum();
         assert_eq!(r_dep.metrics.total_completed() + dep_drops, 8);
-    }
-
-    #[test]
-    fn dependent_stream_admission_prices_per_op_drain() {
-        // with program order binding a queued stream drains one op per
-        // launch — pricing it at the pack cap (one padded batch) would
-        // re-open the doomed-admission hole for stateful streams
-        let slots = vec![ModelSlot {
-            name: "m".to_string(),
-            d_in: 4,
-            max_batch: 16,
-        }];
-        let mut backend = sim();
-        let cfg = BatchPolicy::coalescing().jit_config(&slots, 64); // cap 16
-        let mut jit: JitCompiler<ServeExecutor<&mut SimBackend>, Vec<f32>> =
-            JitCompiler::with_payloads(
-                cfg,
-                ServeExecutor::new(&mut backend, slots.clone()),
-            );
-        let admission = Admission::default();
-        let mut metrics = ServeMetrics::default();
-        let mut streams: BTreeMap<(u32, u64), u32> = BTreeMap::new();
-        for _ in 0..4 {
-            Server::<SimBackend>::admit_request(
-                &mut jit,
-                &mut streams,
-                &admission,
-                &mut metrics,
-                &slots,
-                AdmitReq {
-                    group: 0,
-                    tenant: 0, // ONE dependent stream
-                    arrival_us: 0.0,
-                    deadline_us: 1e9,
-                    independent: false,
-                    parallelism: 1.0,
-                    device_backlog_us: None,
-                    row: vec![0.0; 4],
-                },
-            );
-        }
-        assert_eq!(jit.window.pending_in_group(0), 4);
-        // true drain is 5 singleton launches (2750µs), not one padded
-        // batch (900µs): a 1500µs deadline must be shed
-        Server::<SimBackend>::admit_request(
-            &mut jit,
-            &mut streams,
-            &admission,
-            &mut metrics,
-            &slots,
-            AdmitReq {
-                group: 0,
-                tenant: 0,
-                arrival_us: 0.0,
-                deadline_us: 1_500.0,
-                independent: false,
-                parallelism: 1.0,
-                device_backlog_us: None,
-                row: vec![0.0; 4],
-            },
-        );
-        let drops: u64 = metrics.tenants.values().map(|t| t.dropped).sum();
-        assert_eq!(drops, 1, "doomed dependent request is shed");
-    }
-
-    #[test]
-    fn dependent_multi_stream_queue_prices_cross_stream_packing() {
-        // 8 DISTINCT dependent streams with one op each drain in about one
-        // cap-wide launch — admission must not price them as 8 serial
-        // launches and shed an easily-servable 9th request
-        let slots = vec![ModelSlot {
-            name: "m".to_string(),
-            d_in: 4,
-            max_batch: 16,
-        }];
-        let mut backend = sim();
-        let cfg = BatchPolicy::coalescing().jit_config(&slots, 64); // cap 16
-        let mut jit: JitCompiler<ServeExecutor<&mut SimBackend>, Vec<f32>> =
-            JitCompiler::with_payloads(
-                cfg,
-                ServeExecutor::new(&mut backend, slots.clone()),
-            );
-        let admission = Admission::default();
-        let mut metrics = ServeMetrics::default();
-        let mut streams: BTreeMap<(u32, u64), u32> = BTreeMap::new();
-        for t in 0..8 {
-            Server::<SimBackend>::admit_request(
-                &mut jit,
-                &mut streams,
-                &admission,
-                &mut metrics,
-                &slots,
-                AdmitReq {
-                    group: 0,
-                    tenant: t, // eight different streams
-                    arrival_us: 0.0,
-                    deadline_us: 1e9,
-                    independent: false,
-                    parallelism: 1.0,
-                    device_backlog_us: None,
-                    row: vec![0.0; 4],
-                },
-            );
-        }
-        assert_eq!(jit.window.pending_in_group(0), 8);
-        // all 9 ops are stream heads, so the drain is ONE 9-wide launch
-        // (padded 16) ≈ 1300µs — well inside a 2.5ms deadline (a naive
-        // one-launch-per-op price of 9·550µs = 4950µs would shed it)
-        Server::<SimBackend>::admit_request(
-            &mut jit,
-            &mut streams,
-            &admission,
-            &mut metrics,
-            &slots,
-            AdmitReq {
-                group: 0,
-                tenant: 9,
-                arrival_us: 0.0,
-                deadline_us: 2_500.0,
-                independent: false,
-                parallelism: 1.0,
-                device_backlog_us: None,
-                row: vec![0.0; 4],
-            },
-        );
-        let drops: u64 = metrics.tenants.values().map(|t| t.dropped).sum();
-        assert_eq!(drops, 0, "servable multi-stream dependent load admitted");
-        assert_eq!(jit.window.pending_in_group(0), 9);
-    }
-
-    #[test]
-    fn admission_prices_inflight_drain() {
-        // satellite bugfix: a request that survives queue-only pricing but
-        // is doomed behind the group's in-flight launches must be shed
-        // (the pooled/async drive mode's systematic under-estimate)
-        let slots = vec![ModelSlot {
-            name: "m".to_string(),
-            d_in: 4,
-            max_batch: 16,
-        }];
-        let mut backend = sim();
-        let policy = BatchPolicy::Coalescing {
-            window_us: 0.0,
-            target_batch: 1,
-            safety_margin_us: 0.0,
-        };
-        let cfg = policy.jit_config(&slots, 64);
-        let mut jit: JitCompiler<ServeExecutor<&mut SimBackend>, Vec<f32>> =
-            JitCompiler::with_payloads(
-                cfg,
-                ServeExecutor::new(&mut backend, slots.clone()),
-            );
-        let admission = Admission::default();
-        let mut metrics = ServeMetrics::default();
-        let mut streams: BTreeMap<(u32, u64), u32> = BTreeMap::new();
-        for t in 0..4 {
-            Server::<SimBackend>::admit_request(
-                &mut jit,
-                &mut streams,
-                &admission,
-                &mut metrics,
-                &slots,
-                AdmitReq {
-                    group: 0,
-                    tenant: t,
-                    arrival_us: 0.0,
-                    deadline_us: 1e9,
-                    independent: true,
-                    parallelism: 1.0,
-                    device_backlog_us: None,
-                    row: vec![0.0; 4],
-                },
-            );
-        }
-        let (launches, _) = jit.issue_ready();
-        assert!(!launches.is_empty());
-        assert_eq!(jit.window.inflight_in_group(0), 4, "work is on the device");
-        assert_eq!(jit.window.pending_in_group(0), 0);
-        // a doomed request into an EMPTY queue still runs, in-flight work
-        // notwithstanding (the documented escape hatch: launches already
-        // on the device cannot be delayed by a late newcomer, so the
-        // client gets a late answer rather than none) — this is the
-        // contract `decide`'s old `depth + inflight` argument broke
-        Server::<SimBackend>::admit_request(
-            &mut jit,
-            &mut streams,
-            &admission,
-            &mut metrics,
-            &slots,
-            AdmitReq {
-                group: 0,
-                tenant: 8,
-                arrival_us: 0.0,
-                deadline_us: 600.0,
-                independent: true,
-                parallelism: 1.0,
-                device_backlog_us: None,
-                row: vec![0.0; 4],
-            },
-        );
-        let drops: u64 = metrics.tenants.values().map(|t| t.dropped).sum();
-        assert_eq!(drops, 0, "empty-queue escape hatch fires despite in-flight");
-        assert_eq!(jit.window.pending_in_group(0), 1);
-        // now real work is queued: a doomed request is shed, and its doom
-        // comes from the in-flight term — queue-only pricing is 600µs
-        // (fixed 500 + 2·50/row) but the pending batch-4 launch's own
-        // scheduler estimate adds 700µs, so a 1000µs deadline is hopeless
-        Server::<SimBackend>::admit_request(
-            &mut jit,
-            &mut streams,
-            &admission,
-            &mut metrics,
-            &slots,
-            AdmitReq {
-                group: 0,
-                tenant: 9,
-                arrival_us: 0.0,
-                deadline_us: 1_000.0,
-                independent: true,
-                parallelism: 1.0,
-                device_backlog_us: None,
-                row: vec![0.0; 4],
-            },
-        );
-        let drops: u64 = metrics.tenants.values().map(|t| t.dropped).sum();
-        assert_eq!(drops, 1, "doomed request behind in-flight work is shed");
-        assert_eq!(jit.window.pending_in_group(0), 1, "it was never submitted");
-        // enough slack to survive the full (queue + in-flight) drain
-        // (600µs queue + 700µs in flight = 1300µs): admitted
-        Server::<SimBackend>::admit_request(
-            &mut jit,
-            &mut streams,
-            &admission,
-            &mut metrics,
-            &slots,
-            AdmitReq {
-                group: 0,
-                tenant: 10,
-                arrival_us: 0.0,
-                deadline_us: 2_000.0,
-                independent: true,
-                parallelism: 1.0,
-                device_backlog_us: None,
-                row: vec![0.0; 4],
-            },
-        );
-        assert_eq!(jit.window.pending_in_group(0), 2);
-        let drops: u64 = metrics.tenants.values().map(|t| t.dropped).sum();
-        assert_eq!(drops, 1, "no new drop");
-    }
-
-    #[test]
-    fn admission_prices_each_inflight_launch_separately() {
-        // several small in-flight launches each pay their fixed per-launch
-        // overhead: 4 singleton launches drain in 4·550µs = 2200µs, NOT the
-        // 700µs one batch-4 launch would take — pricing them as one batch
-        // (the naive estimate) would re-open the doomed-admission hole
-        let slots = vec![ModelSlot {
-            name: "m".to_string(),
-            d_in: 4,
-            max_batch: 16,
-        }];
-        let mut backend = sim();
-        let cfg = BatchPolicy::NoBatching.jit_config(&slots, 64); // singleton packs
-        let mut jit: JitCompiler<ServeExecutor<&mut SimBackend>, Vec<f32>> =
-            JitCompiler::with_payloads(
-                cfg,
-                ServeExecutor::new(&mut backend, slots.clone()),
-            );
-        let admission = Admission::default();
-        let mut metrics = ServeMetrics::default();
-        let mut streams: BTreeMap<(u32, u64), u32> = BTreeMap::new();
-        for t in 0..4 {
-            Server::<SimBackend>::admit_request(
-                &mut jit,
-                &mut streams,
-                &admission,
-                &mut metrics,
-                &slots,
-                AdmitReq {
-                    group: 0,
-                    tenant: t,
-                    arrival_us: 0.0,
-                    deadline_us: 1e9,
-                    independent: true,
-                    parallelism: 1.0,
-                    device_backlog_us: None,
-                    row: vec![0.0; 4],
-                },
-            );
-        }
-        let (launches, _) = jit.issue_ready();
-        assert_eq!(launches.len(), 4, "NoBatching issues singletons");
-        assert!((jit.inflight_group_est_us(0, 1) - 2_200.0).abs() < 1e-9);
-        // queue one request with slack to spare (2200 in flight + 550 own
-        // launch < 1e9) so the doomed-shed hatch applies to what follows
-        Server::<SimBackend>::admit_request(
-            &mut jit,
-            &mut streams,
-            &admission,
-            &mut metrics,
-            &slots,
-            AdmitReq {
-                group: 0,
-                tenant: 8,
-                arrival_us: 0.0,
-                deadline_us: 1e9,
-                independent: true,
-                parallelism: 1.0,
-                device_backlog_us: None,
-                row: vec![0.0; 4],
-            },
-        );
-        assert_eq!(jit.window.pending_in_group(0), 1);
-        // deadline 2500µs would survive one-batch in-flight pricing (700
-        // + 1100 queue) but not the true per-launch drain (2200 + 1100):
-        // 4 singleton launches each pay their fixed overhead
-        Server::<SimBackend>::admit_request(
-            &mut jit,
-            &mut streams,
-            &admission,
-            &mut metrics,
-            &slots,
-            AdmitReq {
-                group: 0,
-                tenant: 9,
-                arrival_us: 0.0,
-                deadline_us: 2_500.0,
-                independent: true,
-                parallelism: 1.0,
-                device_backlog_us: None,
-                row: vec![0.0; 4],
-            },
-        );
-        let drops: u64 = metrics.tenants.values().map(|t| t.dropped).sum();
-        assert_eq!(drops, 1, "doomed behind four singleton launches");
-        // a deadline past the full per-launch drain is still admitted
-        Server::<SimBackend>::admit_request(
-            &mut jit,
-            &mut streams,
-            &admission,
-            &mut metrics,
-            &slots,
-            AdmitReq {
-                group: 0,
-                tenant: 10,
-                arrival_us: 0.0,
-                deadline_us: 4_000.0,
-                independent: true,
-                parallelism: 1.0,
-                device_backlog_us: None,
-                row: vec![0.0; 4],
-            },
-        );
-        assert_eq!(jit.window.pending_in_group(0), 2);
-    }
-
-    #[test]
-    fn admission_prices_queue_deeper_than_one_pack_per_launch() {
-        // the un-issued queue drains in ceil(queued/pack_cap) launches, not
-        // one padded batch: under NoBatching (pack cap 1), 4 queued
-        // singletons + this request cost 5·550µs = 2750µs, not the 900µs a
-        // single padded batch-8 estimate would claim
-        let slots = vec![ModelSlot {
-            name: "m".to_string(),
-            d_in: 4,
-            max_batch: 16,
-        }];
-        let mut backend = sim();
-        let cfg = BatchPolicy::NoBatching.jit_config(&slots, 64);
-        let mut jit: JitCompiler<ServeExecutor<&mut SimBackend>, Vec<f32>> =
-            JitCompiler::with_payloads(
-                cfg,
-                ServeExecutor::new(&mut backend, slots.clone()),
-            );
-        let admission = Admission::default();
-        let mut metrics = ServeMetrics::default();
-        let mut streams: BTreeMap<(u32, u64), u32> = BTreeMap::new();
-        for t in 0..4 {
-            Server::<SimBackend>::admit_request(
-                &mut jit,
-                &mut streams,
-                &admission,
-                &mut metrics,
-                &slots,
-                AdmitReq {
-                    group: 0,
-                    tenant: t,
-                    arrival_us: 0.0,
-                    deadline_us: 1e9,
-                    independent: true,
-                    parallelism: 1.0,
-                    device_backlog_us: None,
-                    row: vec![0.0; 4],
-                },
-            );
-        }
-        // nothing issued: all four wait in the un-issued queue
-        assert_eq!(jit.window.pending_in_group(0), 4);
-        assert_eq!(jit.window.inflight_in_group(0), 0);
-        // deadline 1500µs survives one-padded-batch pricing (900µs) but
-        // not the true per-launch queue drain (2750µs)
-        Server::<SimBackend>::admit_request(
-            &mut jit,
-            &mut streams,
-            &admission,
-            &mut metrics,
-            &slots,
-            AdmitReq {
-                group: 0,
-                tenant: 9,
-                arrival_us: 0.0,
-                deadline_us: 1_500.0,
-                independent: true,
-                parallelism: 1.0,
-                device_backlog_us: None,
-                row: vec![0.0; 4],
-            },
-        );
-        let drops: u64 = metrics.tenants.values().map(|t| t.dropped).sum();
-        assert_eq!(drops, 1, "doomed behind a deep singleton queue");
-        // past the full drain it is admitted
-        Server::<SimBackend>::admit_request(
-            &mut jit,
-            &mut streams,
-            &admission,
-            &mut metrics,
-            &slots,
-            AdmitReq {
-                group: 0,
-                tenant: 10,
-                arrival_us: 0.0,
-                deadline_us: 3_000.0,
-                independent: true,
-                parallelism: 1.0,
-                device_backlog_us: None,
-                row: vec![0.0; 4],
-            },
-        );
-        assert_eq!(jit.window.pending_in_group(0), 5);
     }
 
     #[test]
@@ -2506,183 +1150,9 @@ mod tests {
         }
     }
 
-    #[test]
-    fn admission_divides_drain_across_replicas() {
-        // 4 queued singletons at NoBatching drain in 5 launches = 2750µs
-        // on one worker; on two replicas the same queue is priced at half,
-        // so a 1500µs deadline that a single worker must shed is admitted
-        let slots = vec![ModelSlot {
-            name: "m".to_string(),
-            d_in: 4,
-            max_batch: 16,
-        }];
-        let mut backend = sim();
-        let cfg = BatchPolicy::NoBatching.jit_config(&slots, 64);
-        let mut jit: JitCompiler<ServeExecutor<&mut SimBackend>, Vec<f32>> =
-            JitCompiler::with_payloads(
-                cfg,
-                ServeExecutor::new(&mut backend, slots.clone()),
-            );
-        let admission = Admission::default();
-        let mut metrics = ServeMetrics::default();
-        let mut streams: BTreeMap<(u32, u64), u32> = BTreeMap::new();
-        for t in 0..4 {
-            Server::<SimBackend>::admit_request(
-                &mut jit,
-                &mut streams,
-                &admission,
-                &mut metrics,
-                &slots,
-                AdmitReq {
-                    group: 0,
-                    tenant: t,
-                    arrival_us: 0.0,
-                    deadline_us: 1e9,
-                    independent: true,
-                    parallelism: 1.0,
-                    device_backlog_us: None,
-                    row: vec![0.0; 4],
-                },
-            );
-        }
-        assert_eq!(jit.window.pending_in_group(0), 4);
-        // two replicas: drain 2750/2 = 1375µs < 1500µs deadline -> admit
-        Server::<SimBackend>::admit_request(
-            &mut jit,
-            &mut streams,
-            &admission,
-            &mut metrics,
-            &slots,
-            AdmitReq {
-                group: 0,
-                tenant: 9,
-                arrival_us: 0.0,
-                deadline_us: 1_500.0,
-                independent: true,
-                parallelism: 2.0,
-                device_backlog_us: None,
-                row: vec![0.0; 4],
-            },
-        );
-        let drops: u64 = metrics.tenants.values().map(|t| t.dropped).sum();
-        assert_eq!(drops, 0, "two-replica drain fits the deadline");
-        assert_eq!(jit.window.pending_in_group(0), 5);
-        // heterogeneous replicas are speed-weighted, not counted: a v100
-        // primary plus a k80 replica is ~1.25 workers — the queue of 6
-        // drains in 6·550/1.25 = 2640µs, so the same 1500µs deadline that
-        // two FULL replicas could serve must be shed
-        Server::<SimBackend>::admit_request(
-            &mut jit,
-            &mut streams,
-            &admission,
-            &mut metrics,
-            &slots,
-            AdmitReq {
-                group: 0,
-                tenant: 10,
-                arrival_us: 0.0,
-                deadline_us: 1_500.0,
-                independent: true,
-                parallelism: 1.25,
-                device_backlog_us: None,
-                row: vec![0.0; 4],
-            },
-        );
-        let drops: u64 = metrics.tenants.values().map(|t| t.dropped).sum();
-        assert_eq!(drops, 1, "slow replica must not count as a full worker");
-        assert_eq!(jit.window.pending_in_group(0), 5);
-    }
-
-    #[test]
-    fn pooled_paths_agree_on_admission_inputs() {
-        // regression: on a single-worker fleet the placement-routed and
-        // legacy hash-routed launch stages must feed the gate identical
-        // (parallelism, backlog) inputs — so the two paths admit
-        // identically on the same trace
-        let topo = DeviceTopology::homogeneous(1, DeviceSpec::v100());
-        let costs: Vec<(u64, f64)> = (0..3).map(|g| (g, 1.0)).collect();
-        let table = Placer::place(&costs, &topo);
-        let placed: PlacedState = Some((topo, table, None));
-        let backlog = vec![1_234.0];
-        for g in 0..3u64 {
-            assert_eq!(
-                gate_inputs(&placed, 1, &backlog, g),
-                gate_inputs(&None, 1, &backlog, g),
-                "group {g}"
-            );
-        }
-    }
-
-    #[test]
-    fn unplaced_pooled_backlog_feeds_the_gate() {
-        // satellite bugfix: the legacy hash-routed pool books est_routed
-        // into worker_backlog at launch, so admission must consult the
-        // hash-routed worker's entry instead of flying queue-blind.
-        // NOTE: every public pooled driver builds a placement table, so
-        // this configuration (pool without placement) is reachable only
-        // through `realtime_loop`'s internal signature — the test pins
-        // the internal contract so the legacy fallback arms in
-        // `gate_inputs` and the launch router cannot drift apart.
-        let backlog = vec![5_000.0, 0.0];
-        assert_eq!(gate_inputs(&None, 2, &backlog, 0), (1.0, Some(5_000.0)));
-        assert_eq!(gate_inputs(&None, 2, &backlog, 1), (1.0, Some(0.0)));
-        assert_eq!(gate_inputs(&None, 2, &backlog, 2), (1.0, Some(5_000.0)));
-        // no pool at all: nothing measured, the JIT in-flight term prices
-        assert_eq!(gate_inputs(&None, 0, &backlog, 0), (1.0, None));
-
-        // and the booked backlog actually reaches the shed decision: 5ms
-        // on the routed worker dooms a 2ms deadline that the same gate
-        // admits when the worker is free
-        let slots = vec![ModelSlot {
-            name: "m".to_string(),
-            d_in: 4,
-            max_batch: 16,
-        }];
-        let mut backend = sim();
-        let cfg = BatchPolicy::coalescing().jit_config(&slots, 64);
-        let mut jit: JitCompiler<ServeExecutor<&mut SimBackend>, Vec<f32>> =
-            JitCompiler::with_payloads(
-                cfg,
-                ServeExecutor::new(&mut backend, slots.clone()),
-            );
-        let admission = Admission::default();
-        let mut metrics = ServeMetrics::default();
-        let mut streams: BTreeMap<(u32, u64), u32> = BTreeMap::new();
-        // one queued request so the doomed-shed hatch applies
-        for (tenant, deadline, booked) in
-            [(0u32, 1e9, 0.0), (1, 2_000.0, 5_000.0), (2, 2_000.0, 0.0)]
-        {
-            let (parallelism, backlog) =
-                gate_inputs(&None, 2, &[booked, 0.0], 0);
-            Server::<SimBackend>::admit_request(
-                &mut jit,
-                &mut streams,
-                &admission,
-                &mut metrics,
-                &slots,
-                AdmitReq {
-                    group: 0,
-                    tenant,
-                    arrival_us: 0.0,
-                    deadline_us: deadline,
-                    independent: true,
-                    parallelism,
-                    device_backlog_us: backlog,
-                    row: vec![0.0; 4],
-                },
-            );
-        }
-        assert_eq!(
-            metrics.tenants.get(&1).map(|t| t.dropped),
-            Some(1),
-            "booked backlog must shed the doomed request"
-        );
-        assert_eq!(jit.window.pending_in_group(0), 2, "tenants 0 and 2 admitted");
-    }
-
     /// Backend that wedges the calling thread for a fixed stall per
-    /// execute — simulates the scheduler thread being stuck mid-iteration
-    /// (inline launch mode executes on the scheduler thread).
+    /// execute — simulates the engine thread being stuck mid-iteration
+    /// (inline launch mode executes on the engine thread).
     struct StallingBackend {
         inner: SimBackend,
         stall: Duration,
@@ -2713,11 +1183,11 @@ mod tests {
 
     #[test]
     fn frontend_admission_latency_bounded_under_scheduler_stall() {
-        // the tentpole acceptance: with the scheduler thread stalled 10ms
-        // mid-iteration (every inline execute sleeps), frontend admission
-        // p99 stays under 1ms — decisions ride the published snapshot,
-        // never the scheduler thread. 120 samples so the p99 tolerates a
-        // single OS-scheduling outlier on loaded CI machines.
+        // with the engine thread stalled 10ms mid-iteration (every inline
+        // execute sleeps), frontend admission p99 stays under 1ms —
+        // decisions ride the published snapshot, never the engine thread.
+        // 120 samples so the p99 tolerates a single OS-scheduling outlier
+        // on loaded CI machines.
         let trace = burst_trace(120, 300.0, 1_000_000); // 1s SLO: none doomed
         let mut s = Server::new(
             StallingBackend {
@@ -2811,5 +1281,35 @@ mod tests {
         assert_eq!(r.metrics.total_completed() + drops, 30);
         assert!(r.metrics.jit.launches > 0);
         assert!(r.metrics.batches > 0);
+    }
+
+    #[test]
+    fn realtime_placed_with_frontend_spans_the_mode_cell() {
+        // wall × placed-pool × frontend: before the unified engine this
+        // combination had no test (the frontend was only exercised
+        // inline, the placed stage only with the sync gate) — now it is
+        // one constructor call over the same loop as everything else
+        let tenants = vec![
+            TenantSpec::new(0, "alpha", 200_000, 300.0, ArrivalKind::Poisson),
+            TenantSpec::new(1, "beta", 200_000, 300.0, ArrivalKind::Poisson),
+        ];
+        let trace = Trace::generate(&tenants, 10, 37);
+        let topo = DeviceTopology::from_names(&["v100".into(), "t4".into()]).unwrap();
+        let mut s = Server::new(sim(), BatchPolicy::coalescing()); // frontend default on
+        let r = s.run_realtime_placed(
+            &trace,
+            50.0,
+            topo,
+            Some(RebalanceConfig::default()),
+            |_, _| sim(),
+        );
+        let drops: u64 = r.metrics.tenants.values().map(|t| t.dropped).sum();
+        assert_eq!(r.metrics.total_completed() + drops, 20, "conservation");
+        assert_eq!(
+            r.metrics.admission_decisions, 20,
+            "the frontend decided every request"
+        );
+        assert_eq!(r.metrics.devices.len(), 2, "placed run reports both devices");
+        assert!(r.metrics.jit.launches > 0);
     }
 }

@@ -549,7 +549,7 @@ fn wrap_view(gv: GroupView) -> AdmissionView {
         published: Instant::now(),
         groups: vec![gv],
         drained: vec![0],
-        drained_by_stream: Vec::new(),
+        drained_by_stream: std::collections::BTreeMap::new(),
     }
 }
 
@@ -728,5 +728,86 @@ fn prop_gate_reconciliation_tracks_scheduler_drains() {
             let queued = drained_total - completed_total;
             completed_total += rng.below(queued + 1);
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Unified-engine properties
+// ---------------------------------------------------------------------------
+
+use vliw_jit::serve::{BatchPolicy, Server};
+use vliw_jit::workload::trace::{ArrivalKind, TenantSpec, Trace};
+
+#[test]
+fn prop_replay_and_replay_placed_agree_on_single_v100() {
+    // the cross-mode equivalence pin: `replay` (the virtual ×
+    // single-worker cell) and `replay_placed` on a one-v100 homogeneous
+    // topology with no rebalance are THE SAME computation through the
+    // unified engine — identical completions, drops, attainment, and
+    // bit-identical spans, for randomized workload shapes. Only the
+    // per-device metrics differ (replay reports none by contract).
+    let mut rng = Rng::new(0x0E9A17);
+    let topo = DeviceTopology::homogeneous(1, DeviceSpec::v100());
+    for case in 0..10u64 {
+        let n_tenants = 1 + rng.below(6) as u32;
+        let models = ["a", "b"];
+        let tenants: Vec<TenantSpec> = (0..n_tenants)
+            .map(|i| {
+                TenantSpec::new(
+                    i,
+                    models[i as usize % models.len()],
+                    5_000 + rng.below(200_000),
+                    50.0 + rng.f64() * 400.0,
+                    if rng.below(2) == 0 {
+                        ArrivalKind::Poisson
+                    } else {
+                        ArrivalKind::Bursty
+                    },
+                )
+            })
+            .collect();
+        let per = 15 + rng.below(40) as usize;
+        let trace = Trace::generate(&tenants, per, 1_000 + case);
+
+        let mut plain = Server::new(SimBackend::default(), BatchPolicy::coalescing());
+        let r1 = plain.replay(&trace);
+        let mut placed = Server::new(SimBackend::default(), BatchPolicy::coalescing());
+        let (r2, table) = placed.replay_placed(&trace, &topo, None);
+
+        assert_eq!(
+            r1.metrics.total_completed(),
+            r2.metrics.total_completed(),
+            "case {case}: completions diverge"
+        );
+        assert_eq!(r1.metrics.batches, r2.metrics.batches, "case {case}");
+        assert_eq!(r1.metrics.useful_rows, r2.metrics.useful_rows, "case {case}");
+        assert_eq!(
+            r1.metrics.span_us.to_bits(),
+            r2.metrics.span_us.to_bits(),
+            "case {case}: spans diverge"
+        );
+        assert_eq!(
+            r1.metrics.overall_attainment().to_bits(),
+            r2.metrics.overall_attainment().to_bits(),
+            "case {case}: attainment diverges"
+        );
+        assert_eq!(r1.metrics.jit.launches, r2.metrics.jit.launches, "case {case}");
+        for ((ta_id, ta), (tb_id, tb)) in
+            r1.metrics.tenants.iter().zip(r2.metrics.tenants.iter())
+        {
+            assert_eq!(ta_id, tb_id, "case {case}");
+            assert_eq!(ta.slo_hits, tb.slo_hits, "case {case} tenant {ta_id}");
+            assert_eq!(ta.slo_misses, tb.slo_misses, "case {case} tenant {ta_id}");
+            assert_eq!(ta.dropped, tb.dropped, "case {case} tenant {ta_id}");
+            assert_eq!(
+                ta.latency.quantile_us(0.99).to_bits(),
+                tb.latency.quantile_us(0.99).to_bits(),
+                "case {case} tenant {ta_id}: latency distributions diverge"
+            );
+        }
+        // the contract's asymmetry: only the placed mode reports devices
+        assert!(r1.metrics.devices.is_empty(), "case {case}");
+        assert_eq!(r2.metrics.devices.len(), 1, "case {case}");
+        assert!(table.is_total(models.len() as u64, 1), "case {case}");
     }
 }
