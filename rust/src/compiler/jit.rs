@@ -20,6 +20,15 @@
 //! pack as one padded model batch). Every `KernelExecutor` is a
 //! `PackExecutor<()>` for free.
 //!
+//! Every `estimate_*` number the scheduler consumes here (hold/evict
+//! decisions, in-flight backlog pricing) comes from the executor's cost
+//! model, which since the [`crate::estimate`] refactor is the tiered
+//! Measured/Tuned/Prior estimator for serving
+//! ([`crate::serve::server::ServeExecutor`]) and the analytic Prior tier
+//! ([`crate::estimate::prior`]) for the kernel-level simulator backend —
+//! the JIT itself never constructs an EWMA or queries the GPU cost model
+//! directly for pricing.
+//!
 //! # Straggler-eviction accounting contract (§5.2)
 //!
 //! The two drive modes charge stragglers differently, **on purpose**:
@@ -79,8 +88,9 @@ pub struct PackRun {
     /// False when the backend failed; member ops complete as dropped.
     pub ok: bool,
     /// Device class that executed the launch (0 = the fleet reference /
-    /// single-device drive modes). Keys the executor's learned estimates
-    /// so heterogeneous workers never pollute each other's EWMAs.
+    /// single-device drive modes). Keys the Measured tier of the tiered
+    /// estimator ([`crate::estimate`]) so heterogeneous workers never
+    /// pollute each other's learned durations.
     pub device_class: u32,
 }
 
@@ -730,7 +740,11 @@ impl SimExecutor {
 
 impl KernelExecutor for SimExecutor {
     fn estimate_us(&self, k: &KernelDesc) -> f64 {
-        self.cm.profile(k, &self.cfg).duration_us
+        // pricing goes through the estimate subsystem's Prior tier — the
+        // one sanctioned analytic-cost path for launch estimates; the
+        // `execute` below keeps using the cost model directly because it
+        // *simulates* the hardware, it doesn't price it
+        crate::estimate::prior::analytic_us(&self.cm, &self.cfg, k)
     }
 
     fn execute(&mut self, sk: &SuperKernel) -> f64 {

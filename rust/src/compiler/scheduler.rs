@@ -31,6 +31,13 @@ pub struct Policy {
     /// eviction charge in the JIT uses the same slop, so the time billed
     /// to an evicted straggler equals the trigger threshold.
     pub eviction_slop_us: f64,
+    /// EWMA smoothing factor for the Measured estimate tier
+    /// (`crate::estimate`), in (0, 1]. Higher = more reactive to the
+    /// latest launch duration, lower = smoother under co-tenancy noise.
+    /// Was a hard-coded `Ewma::new(0.3)` scattered across the executors;
+    /// hoisted here so estimate reactivity is tunable and documented in
+    /// one place.
+    pub ewma_alpha: f64,
 }
 
 impl Default for Policy {
@@ -41,6 +48,7 @@ impl Default for Policy {
             safety_margin_us: 500.0,
             eviction_factor: 3.0,
             eviction_slop_us: 50.0,
+            ewma_alpha: 0.3,
         }
     }
 }
@@ -186,7 +194,15 @@ mod tests {
     use crate::gpu::cost::CostModel;
 
     fn est(cm: &CostModel) -> impl Fn(&KernelDesc, &[&TensorOp]) -> f64 + '_ {
-        move |k, _ops| cm.profile_default(k).duration_us
+        // priced through the estimate subsystem's Prior tier, like every
+        // real consumer of the scheduler
+        move |k, _ops| {
+            crate::estimate::prior::analytic_us(
+                cm,
+                &crate::gpu::kernel::LaunchConfig::greedy(),
+                k,
+            )
+        }
     }
 
     fn sched() -> Scheduler {
@@ -282,8 +298,13 @@ mod tests {
             other => panic!("expected Wait, got {other:?}"),
         };
         // estimator drops to one tenth of the cost-model time
-        let drifted =
-            |k: &KernelDesc, _ops: &[&TensorOp]| cm.profile_default(k).duration_us / 10.0;
+        let drifted = |k: &KernelDesc, _ops: &[&TensorOp]| {
+            crate::estimate::prior::analytic_us(
+                &cm,
+                &crate::gpu::kernel::LaunchConfig::greedy(),
+                k,
+            ) / 10.0
+        };
         match s.decide(&w, until, drifted) {
             Decision::Launch(_) => {}
             Decision::Wait { until_us } => {

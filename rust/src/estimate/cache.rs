@@ -1,0 +1,246 @@
+//! The Tuned tier's persistence: the autotune artifact cache.
+//!
+//! A [`TunedCache`] is the on-disk form of the Tuned tier — tuned
+//! duration estimates keyed by (model, device class, padded batch), with
+//! the power-of-two shape class recorded as provenance. See the module
+//! doc of [`crate::estimate`] for the file format contract.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::compiler::coalescer::ShapeClass;
+use crate::gpu::kernel::KernelDesc;
+use crate::util::json::{obj, Json};
+use crate::{Error, Result};
+
+/// Power-of-two shape-class provenance string (`MxKxN`) for a kernel,
+/// via [`ShapeClass::of`] — the Fig. 7 clustering quantization.
+pub fn shape_class_label(k: &KernelDesc) -> String {
+    let c = ShapeClass::of(k);
+    format!("{}x{}x{}", c.m, c.k, c.n)
+}
+
+/// One cached tuned estimate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunedEntry {
+    /// Shape-class provenance (`MxKxN`, pow2-quantized). Informational:
+    /// lookup keys on the exact padded batch, not the class.
+    pub class: String,
+    /// Tuned duration estimate, µs.
+    pub est_us: f64,
+}
+
+/// Persistent tuned-estimate cache: (model, device, batch) → entry.
+///
+/// `BTreeMap` keys give deterministic serialization order, so saving the
+/// same logical cache always produces byte-identical files.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TunedCache {
+    entries: BTreeMap<(String, String, u32), TunedEntry>,
+}
+
+impl TunedCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert/overwrite the entry for (model, device, batch).
+    pub fn insert(&mut self, model: &str, device: &str, batch: u32, entry: TunedEntry) {
+        self.entries
+            .insert((model.to_string(), device.to_string(), batch), entry);
+    }
+
+    /// Tuned estimate for (model, device, batch), if cached.
+    pub fn get(&self, model: &str, device: &str, batch: u32) -> Option<f64> {
+        self.entries
+            .get(&(model.to_string(), device.to_string(), batch))
+            .map(|e| e.est_us)
+    }
+
+    /// Number of cached entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Iterate ((model, device, batch), entry) in deterministic key order.
+    pub fn iter(&self) -> impl Iterator<Item = (&(String, String, u32), &TunedEntry)> {
+        self.entries.iter()
+    }
+
+    /// Merge `other` into `self` (other's entries win on key collision).
+    pub fn merge(&mut self, other: &TunedCache) {
+        for (k, v) in &other.entries {
+            self.entries.insert(k.clone(), v.clone());
+        }
+    }
+
+    /// Serialize to the versioned JSON document.
+    pub fn to_json(&self) -> Json {
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|((model, device, batch), e)| {
+                obj(vec![
+                    ("model", Json::Str(model.clone())),
+                    ("class", Json::Str(e.class.clone())),
+                    ("device", Json::Str(device.clone())),
+                    ("batch", Json::Num(*batch as f64)),
+                    ("est_us", Json::Num(e.est_us)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("version", Json::Num(1.0)),
+            ("entries", Json::Arr(entries)),
+        ])
+    }
+
+    /// Parse from the versioned JSON document.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let version = j.req_u64("version")?;
+        if version != 1 {
+            return Err(Error::Json(format!(
+                "tuned cache version {version} unsupported (want 1)"
+            )));
+        }
+        let mut cache = TunedCache::new();
+        let entries = j
+            .req("entries")?
+            .as_arr()
+            .ok_or_else(|| Error::Json("field 'entries' not an array".into()))?;
+        for e in entries {
+            let model = e.req_str("model")?;
+            let device = e.req_str("device")?;
+            let batch = e.req_u64("batch")? as u32;
+            let entry = TunedEntry {
+                class: e.req_str("class")?,
+                est_us: e.req_f64("est_us")?,
+            };
+            cache.insert(&model, &device, batch, entry);
+        }
+        Ok(cache)
+    }
+
+    /// Write the cache to `path` (creating parent directories).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string_compact())?;
+        Ok(())
+    }
+
+    /// Load a cache from `path`.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TunedCache {
+        let mut c = TunedCache::new();
+        c.insert(
+            "mlp_small",
+            "v100",
+            8,
+            TunedEntry {
+                class: "8x64x64".into(),
+                est_us: 812.5,
+            },
+        );
+        c.insert(
+            "mlp_small",
+            "t4",
+            8,
+            TunedEntry {
+                class: "8x64x64".into(),
+                est_us: 1625.0,
+            },
+        );
+        c.insert(
+            "gemmnet6",
+            "v100",
+            4,
+            TunedEntry {
+                class: "4x512x64".into(),
+                est_us: 90.0,
+            },
+        );
+        c
+    }
+
+    #[test]
+    fn lookup_keys_on_model_device_batch() {
+        let c = sample();
+        assert_eq!(c.get("mlp_small", "v100", 8), Some(812.5));
+        assert_eq!(c.get("mlp_small", "t4", 8), Some(1625.0));
+        assert_eq!(c.get("mlp_small", "v100", 4), None, "batch is exact");
+        assert_eq!(c.get("mlp_small", "k80", 8), None, "device is exact");
+        assert_eq!(c.get("absent", "v100", 8), None);
+    }
+
+    #[test]
+    fn json_round_trip_is_lossless_and_deterministic() {
+        let c = sample();
+        let text = c.to_json().to_string_compact();
+        let back = TunedCache::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, c);
+        // deterministic serialization: same cache, same bytes
+        assert_eq!(back.to_json().to_string_compact(), text);
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(doc.req_u64("version").unwrap(), 1);
+        assert_eq!(doc.req("entries").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let c = sample();
+        let path = std::env::temp_dir().join("vliw_tuned_cache_test.json");
+        c.save(&path).unwrap();
+        let back = TunedCache::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn version_mismatch_is_an_error() {
+        let j = Json::parse(r#"{"version": 2, "entries": []}"#).unwrap();
+        assert!(TunedCache::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn merge_overwrites_on_collision() {
+        let mut a = sample();
+        let mut b = TunedCache::new();
+        b.insert(
+            "mlp_small",
+            "v100",
+            8,
+            TunedEntry {
+                class: "8x64x64".into(),
+                est_us: 700.0,
+            },
+        );
+        a.merge(&b);
+        assert_eq!(a.get("mlp_small", "v100", 8), Some(700.0));
+        assert_eq!(a.len(), 3);
+    }
+
+    #[test]
+    fn shape_class_label_is_pow2() {
+        let k = KernelDesc::gemm(6, 48, 64);
+        assert_eq!(shape_class_label(&k), "8x64x64");
+    }
+}

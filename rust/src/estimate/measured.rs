@@ -1,0 +1,118 @@
+//! The Measured tier: a keyed bank of per-variant EWMAs.
+//!
+//! Generic over the key so the same learning substrate serves both the
+//! serving estimator ([`super::VariantKey`]) and the artifact-level
+//! runtime executor (keyed by compiled-artifact file). This is the only
+//! place outside `util/stats.rs` that constructs an [`Ewma`]; every
+//! consumer goes through [`super::TieredEstimator`] or this bank.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+use crate::util::stats::Ewma;
+
+/// A bank of EWMAs keyed by variant identity. Unobserved keys answer
+/// `None`; callers fall back to their next tier.
+#[derive(Debug, Clone)]
+pub struct Measured<K> {
+    alpha: f64,
+    ewmas: HashMap<K, Ewma>,
+}
+
+impl<K: Eq + Hash + Clone> Measured<K> {
+    /// Empty bank with smoothing factor `alpha` in (0, 1] (see
+    /// `Policy::ewma_alpha` for the serving default and rationale).
+    pub fn new(alpha: f64) -> Self {
+        Measured {
+            alpha,
+            ewmas: HashMap::new(),
+        }
+    }
+
+    /// The smoothing factor new keys are created with.
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    /// Change the smoothing factor for keys observed *from now on*
+    /// (existing EWMAs keep the alpha they were created with).
+    pub fn set_alpha(&mut self, alpha: f64) {
+        self.alpha = alpha;
+    }
+
+    /// Fold one observation into `key`'s EWMA (creating it on first use).
+    pub fn observe(&mut self, key: K, us: f64) {
+        self.ewmas
+            .entry(key)
+            .or_insert_with(|| Ewma::new(self.alpha))
+            .observe(us);
+    }
+
+    /// Current estimate for `key`, or `None` if never observed.
+    pub fn get(&self, key: &K) -> Option<f64> {
+        self.ewmas.get(key).and_then(|e| e.value())
+    }
+
+    /// Observations folded into `key` so far (0 if never observed).
+    pub fn count(&self, key: &K) -> u64 {
+        self.ewmas.get(key).map(|e| e.count()).unwrap_or(0)
+    }
+
+    /// Number of distinct observed keys.
+    pub fn len(&self) -> usize {
+        self.ewmas.len()
+    }
+
+    /// True when no key has been observed.
+    pub fn is_empty(&self) -> bool {
+        self.ewmas.is_empty()
+    }
+
+    /// Iterate (key, estimate, observation count) over observed keys.
+    /// Iteration order is unspecified (HashMap) — callers that need
+    /// determinism must sort (see `TieredEstimator::hottest`).
+    pub fn iter(&self) -> impl Iterator<Item = (&K, f64, u64)> {
+        self.ewmas
+            .iter()
+            .filter_map(|(k, e)| e.value().map(|v| (k, v, e.count())))
+    }
+
+    /// Measured estimate for `key`, or the caller's fallback.
+    pub fn estimate_or(&self, key: &K, fallback: impl FnOnce() -> f64) -> f64 {
+        self.get(key).unwrap_or_else(fallback)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unobserved_key_falls_back() {
+        let m: Measured<&str> = Measured::new(0.3);
+        assert_eq!(m.get(&"a"), None);
+        assert_eq!(m.count(&"a"), 0);
+        assert_eq!(m.estimate_or(&"a", || 42.0), 42.0);
+    }
+
+    #[test]
+    fn keys_are_isolated() {
+        let mut m: Measured<u32> = Measured::new(0.5);
+        m.observe(1, 100.0);
+        m.observe(2, 900.0);
+        assert_eq!(m.get(&1), Some(100.0));
+        assert_eq!(m.get(&2), Some(900.0));
+        m.observe(1, 200.0);
+        assert_eq!(m.get(&1), Some(150.0));
+        assert_eq!(m.get(&2), Some(900.0), "key 2 untouched by key 1");
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn zero_observation_is_a_real_estimate() {
+        let mut m: Measured<u32> = Measured::new(0.3);
+        m.observe(7, 0.0);
+        assert_eq!(m.get(&7), Some(0.0));
+        assert_eq!(m.estimate_or(&7, || 999.0), 0.0);
+    }
+}

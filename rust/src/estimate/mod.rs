@@ -1,0 +1,148 @@
+//! One cost model — the tiered duration estimator.
+//!
+//! Every decision the OoO JIT makes (coalesce, hold, dispatch, evict,
+//! admit, place) is priced against a latency estimate. Before this module
+//! those estimates lived in disconnected layers: analytic roofline numbers
+//! in [`crate::gpu::cost`], per-variant EWMAs inside the serving executor,
+//! and fallback chains re-derived at each call site. Now "what does this
+//! launch cost on this device" has exactly one answer: a
+//! [`TieredEstimator`] query, resolved through three tiers with explicit
+//! provenance.
+//!
+//! ## The tier contract
+//!
+//! A *variant* is a [`VariantKey`] — (device class, coalescing group,
+//! padded batch). Queries resolve strictly top-down:
+//!
+//! 1. **[`Tier::Measured`]** — a live EWMA fed by completed launches on
+//!    that exact variant (same (class, group, padded-batch) isolation the
+//!    serving layer has always had: a t4 observation never updates a v100
+//!    estimate). Once a variant has *one* measured observation this tier
+//!    answers **forever** — Tuned and Prior are never consulted for it
+//!    again (pinned by the tier-monotonicity property test in
+//!    [`tiered`]).
+//! 2. **[`Tier::Tuned`]** — a warm-start value from the persistent
+//!    autotune artifact cache ([`TunedCache`]), loaded at server start so
+//!    serving prices realistically *before any observation lands*. A
+//!    background refinement hook writes the hottest measured variants
+//!    back into this tier (and thus into the cache file on save), so the
+//!    next cold start inherits this run's learning.
+//! 3. **[`Tier::Prior`]** — the caller-supplied analytic fallback
+//!    (backend FLOPs / device GFLOP/s, or the [`crate::gpu::cost`]
+//!    roofline via [`prior::analytic_us`]), divided by device-class
+//!    speed. Always available, never trusted once anything better exists.
+//!
+//! The estimator is the *only* place allowed to construct an
+//! [`crate::util::stats::Ewma`] for launch pricing or to consult the
+//! analytic model for a serving-path duration (grep-enforceable: no
+//! `Ewma::new` and no `cost.rs` timing calls for pricing outside
+//! `rust/src/estimate/`).
+//!
+//! Every query also bumps a per-tier hit counter and every observation
+//! records |predicted − actual| into an estimate-error histogram — both
+//! surface through [`EstimatorStats`] into `ServeMetrics` and the bench
+//! JSON, so estimator fidelity is tracked across PRs.
+//!
+//! ## Cache file format (`artifacts/tuned.json`)
+//!
+//! Written by `vliwd autotune --save` and by serving on exit; loaded by
+//! `vliwd serve` / `vliwd bench --warm-start` at startup:
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "entries": [
+//!     {"model": "mlp_small", "class": "8x64x64",
+//!      "device": "v100", "batch": 8, "est_us": 812.5}
+//!   ]
+//! }
+//! ```
+//!
+//! * `model` — model/group name (the coalescing group identity).
+//! * `class` — power-of-two shape-class provenance string `MxKxN` from
+//!   [`crate::compiler::coalescer::ShapeClass`] (the Fig. 7 clustering
+//!   quantization); informational — lookup keys on the exact padded
+//!   batch so two batches sharing a pow2 class never collide.
+//! * `device` — device-class name from [`crate::gpu::device::DeviceSpec`]
+//!   (`v100`, `t4`, …); an entry only warm-starts fleets that actually
+//!   contain that class.
+//! * `batch` — the padded batch size of the compiled variant.
+//! * `est_us` — the tuned duration estimate in microseconds.
+//!
+//! Entries are keyed (model, device, batch); re-saving a cache after a
+//! serve run overwrites stale entries with refined ones and keeps
+//! entries for devices the run never saw.
+
+pub mod cache;
+pub mod measured;
+pub mod prior;
+pub mod tiered;
+
+pub use cache::{shape_class_label, TunedCache, TunedEntry};
+pub use measured::Measured;
+pub use tiered::TieredEstimator;
+
+use crate::util::stats::LatencyHist;
+
+/// Which tier answered (or would answer) a duration query.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// Live EWMA over completed launches of this exact variant.
+    Measured,
+    /// Warm-start value from the persistent autotune artifact cache.
+    Tuned,
+    /// Analytic fallback (backend prior ÷ device-class speed).
+    Prior,
+}
+
+/// Identity of one priced variant: the (device class, coalescing group,
+/// padded batch) triple every estimate and observation is keyed by.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VariantKey {
+    /// Device-class index within the fleet topology.
+    pub class: u32,
+    /// Coalescing-group id (one model = one group).
+    pub group: u64,
+    /// Padded batch size of the compiled variant.
+    pub padded: u32,
+}
+
+/// The one duration-pricing interface every consumer goes through.
+///
+/// `estimate_us` takes the Prior tier as a *lazy* closure so callers only
+/// pay the analytic model when both learned tiers miss; `observe` takes
+/// the prior eagerly (it is needed to score prediction error even when a
+/// learned tier exists, and an eager `f64` keeps the mutable-borrow
+/// surface trivial for callers that compute the prior from `&self`).
+pub trait Estimator {
+    /// Price a variant: Measured, else Tuned, else `prior()`.
+    fn estimate_us(&self, key: VariantKey, prior: &dyn Fn() -> f64) -> f64;
+
+    /// Which tier would answer `estimate_us` right now (no counter bump).
+    fn tier_of(&self, key: VariantKey) -> Tier;
+
+    /// Fold in one completed-launch duration. `prior_us` is the Prior-tier
+    /// value for this variant, used to score prediction error when no
+    /// learned tier existed yet.
+    fn observe(&mut self, key: VariantKey, us: f64, prior_us: f64);
+}
+
+/// Estimator fidelity counters, copied into `ServeMetrics` at end of run.
+#[derive(Debug, Clone, Default)]
+pub struct EstimatorStats {
+    /// Queries answered by the Measured tier.
+    pub measured_hits: u64,
+    /// Queries answered by the Tuned (warm-start cache) tier.
+    pub tuned_hits: u64,
+    /// Queries that fell through to the analytic Prior.
+    pub prior_hits: u64,
+    /// |predicted − actual| µs per completed launch.
+    pub est_err: LatencyHist,
+}
+
+impl EstimatorStats {
+    /// Total queries across all tiers.
+    pub fn total_hits(&self) -> u64 {
+        self.measured_hits + self.tuned_hits + self.prior_hits
+    }
+}

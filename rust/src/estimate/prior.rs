@@ -1,0 +1,44 @@
+//! The Prior tier: analytic fallback pricing.
+//!
+//! The one sanctioned path from the serving/scheduling layers to the
+//! [`crate::gpu::cost`] roofline model for *duration pricing*. Keeping
+//! the call here (instead of at each consumer) makes the acceptance
+//! criterion grep-enforceable: nothing outside `rust/src/estimate/`
+//! prices a launch against `cost.rs` directly.
+
+use crate::gpu::cost::CostModel;
+use crate::gpu::kernel::{KernelDesc, LaunchConfig};
+
+/// Analytic isolated duration (µs) of `k` under `cfg` on `cm`'s device —
+/// the roofline + wave-quantization model's `duration_us`.
+pub fn analytic_us(cm: &CostModel, cfg: &LaunchConfig, k: &KernelDesc) -> f64 {
+    cm.profile(k, cfg).duration_us
+}
+
+/// Analytic duration scaled onto a device class running at
+/// `class_speed` × the modeled device (the Prior-tier contract:
+/// analytic model divided by device-class speed).
+pub fn analytic_on_class_us(
+    cm: &CostModel,
+    cfg: &LaunchConfig,
+    k: &KernelDesc,
+    class_speed: f64,
+) -> f64 {
+    analytic_us(cm, cfg, k) / class_speed.max(1e-9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prior_matches_cost_model_and_scales_by_speed() {
+        let cm = CostModel::v100();
+        let cfg = LaunchConfig::greedy();
+        let k = KernelDesc::gemm(64, 512, 64);
+        let base = analytic_us(&cm, &cfg, &k);
+        assert_eq!(base, cm.profile(&k, &cfg).duration_us);
+        let half = analytic_on_class_us(&cm, &cfg, &k, 0.5);
+        assert!((half - 2.0 * base).abs() < 1e-9, "half-speed doubles");
+    }
+}

@@ -1,0 +1,422 @@
+//! The [`TieredEstimator`]: Measured → Tuned → Prior resolution with
+//! per-tier hit accounting, a prediction-error histogram, a tier-change
+//! generation counter (so published admission views know when to
+//! refresh), and the background refinement hook that writes the hottest
+//! measured variants back into the Tuned tier.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::measured::Measured;
+use super::{Estimator, EstimatorStats, Tier, VariantKey};
+use crate::util::stats::LatencyHist;
+
+/// Default observation interval between refinement passes.
+pub const REFINE_PERIOD: u64 = 64;
+/// Default number of hottest variants promoted per refinement pass.
+pub const REFINE_TOP: usize = 8;
+
+/// The three-tier duration estimator. See the [`crate::estimate`] module
+/// doc for the tier contract.
+///
+/// Hit counters are atomics because pricing (`estimate_us`) runs behind
+/// `&self` from every consumer; `Relaxed` is enough — they are
+/// monotonically-increasing telemetry, never synchronization.
+#[derive(Debug)]
+pub struct TieredEstimator {
+    measured: Measured<VariantKey>,
+    tuned: HashMap<VariantKey, f64>,
+    measured_hits: AtomicU64,
+    tuned_hits: AtomicU64,
+    prior_hits: AtomicU64,
+    /// Bumped whenever the answer to some `estimate_us` query changes for
+    /// a reason other than an EWMA update on an already-Measured variant:
+    /// a variant's *first* measurement (Tuned/Prior → Measured) or a warm
+    /// start landing on an unmeasured variant. Consumers that memoize
+    /// estimates (the published `AdmissionView` tables) re-derive when
+    /// this moves.
+    generation: AtomicU64,
+    err_hist: LatencyHist,
+    refine_period: u64,
+    refine_top: usize,
+    obs_since_refine: u64,
+}
+
+impl Clone for TieredEstimator {
+    fn clone(&self) -> Self {
+        TieredEstimator {
+            measured: self.measured.clone(),
+            tuned: self.tuned.clone(),
+            measured_hits: AtomicU64::new(self.measured_hits.load(Ordering::Relaxed)),
+            tuned_hits: AtomicU64::new(self.tuned_hits.load(Ordering::Relaxed)),
+            prior_hits: AtomicU64::new(self.prior_hits.load(Ordering::Relaxed)),
+            generation: AtomicU64::new(self.generation.load(Ordering::Relaxed)),
+            err_hist: self.err_hist.clone(),
+            refine_period: self.refine_period,
+            refine_top: self.refine_top,
+            obs_since_refine: self.obs_since_refine,
+        }
+    }
+}
+
+impl TieredEstimator {
+    /// Empty estimator; `alpha` is the Measured-tier EWMA smoothing
+    /// factor (`Policy::ewma_alpha`).
+    pub fn new(alpha: f64) -> Self {
+        TieredEstimator {
+            measured: Measured::new(alpha),
+            tuned: HashMap::new(),
+            measured_hits: AtomicU64::new(0),
+            tuned_hits: AtomicU64::new(0),
+            prior_hits: AtomicU64::new(0),
+            generation: AtomicU64::new(0),
+            err_hist: LatencyHist::new(),
+            refine_period: REFINE_PERIOD,
+            refine_top: REFINE_TOP,
+            obs_since_refine: 0,
+        }
+    }
+
+    /// Measured-tier smoothing factor for keys observed from now on.
+    pub fn set_alpha(&mut self, alpha: f64) {
+        self.measured.set_alpha(alpha);
+    }
+
+    /// Configure the background refinement cadence (observations between
+    /// passes, variants promoted per pass). `period = 0` disables it.
+    pub fn set_refine(&mut self, period: u64, top: usize) {
+        self.refine_period = period;
+        self.refine_top = top;
+    }
+
+    /// Warm-start the Tuned tier for one variant (from a loaded
+    /// [`super::TunedCache`]). Bumps the generation only when this
+    /// actually changes some query's answer — i.e. the variant is not
+    /// already Measured and the value is new.
+    pub fn warm(&mut self, key: VariantKey, est_us: f64) {
+        let prev = self.tuned.insert(key, est_us);
+        if self.measured.count(&key) == 0 && prev != Some(est_us) {
+            self.generation.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Current Measured-tier value, if any.
+    pub fn measured_value(&self, key: VariantKey) -> Option<f64> {
+        self.measured.get(&key)
+    }
+
+    /// Current Tuned-tier value, if any.
+    pub fn tuned_value(&self, key: VariantKey) -> Option<f64> {
+        self.tuned.get(&key).copied()
+    }
+
+    /// Hottest measured variants: (key, estimate, observations), sorted
+    /// by observation count descending, key ascending (deterministic).
+    pub fn hottest(&self, k: usize) -> Vec<(VariantKey, f64, u64)> {
+        let mut v: Vec<(VariantKey, f64, u64)> = self
+            .measured
+            .iter()
+            .map(|(key, val, n)| (*key, val, n))
+            .collect();
+        v.sort_by(|a, b| b.2.cmp(&a.2).then(a.0.cmp(&b.0)));
+        v.truncate(k);
+        v
+    }
+
+    /// The background refinement hook: promote the `k` hottest measured
+    /// variants' current estimates into the Tuned tier, so a subsequent
+    /// cache export (and the next cold start) inherits them. Never
+    /// changes a live answer (Measured still wins for those variants)
+    /// and never bumps the generation. Returns how many entries changed.
+    pub fn refine_hottest(&mut self, k: usize) -> usize {
+        let mut changed = 0;
+        for (key, val, _) in self.hottest(k) {
+            if self.tuned.get(&key) != Some(&val) {
+                self.tuned.insert(key, val);
+                changed += 1;
+            }
+        }
+        changed
+    }
+
+    /// Deterministic export of everything the learned tiers know:
+    /// (key, value, tier) sorted by key, Measured values shadowing Tuned
+    /// ones for the same variant.
+    pub fn export(&self) -> Vec<(VariantKey, f64, Tier)> {
+        let mut out: BTreeMap<VariantKey, (f64, Tier)> = BTreeMap::new();
+        for (key, val) in &self.tuned {
+            out.insert(*key, (*val, Tier::Tuned));
+        }
+        for (key, val, _) in self.measured.iter() {
+            out.insert(*key, (val, Tier::Measured));
+        }
+        out.into_iter().map(|(k, (v, t))| (k, v, t)).collect()
+    }
+
+    /// Snapshot of the fidelity counters + error histogram.
+    pub fn stats(&self) -> EstimatorStats {
+        EstimatorStats {
+            measured_hits: self.measured_hits.load(Ordering::Relaxed),
+            tuned_hits: self.tuned_hits.load(Ordering::Relaxed),
+            prior_hits: self.prior_hits.load(Ordering::Relaxed),
+            est_err: self.err_hist.clone(),
+        }
+    }
+
+    /// Tier-change generation (see the field doc).
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Relaxed)
+    }
+}
+
+impl Estimator for TieredEstimator {
+    fn estimate_us(&self, key: VariantKey, prior: &dyn Fn() -> f64) -> f64 {
+        if let Some(v) = self.measured.get(&key) {
+            self.measured_hits.fetch_add(1, Ordering::Relaxed);
+            return v;
+        }
+        if let Some(&v) = self.tuned.get(&key) {
+            self.tuned_hits.fetch_add(1, Ordering::Relaxed);
+            return v;
+        }
+        self.prior_hits.fetch_add(1, Ordering::Relaxed);
+        prior()
+    }
+
+    fn tier_of(&self, key: VariantKey) -> Tier {
+        if self.measured.get(&key).is_some() {
+            Tier::Measured
+        } else if self.tuned.contains_key(&key) {
+            Tier::Tuned
+        } else {
+            Tier::Prior
+        }
+    }
+
+    fn observe(&mut self, key: VariantKey, us: f64, prior_us: f64) {
+        let predicted = self
+            .measured
+            .get(&key)
+            .or_else(|| self.tuned.get(&key).copied())
+            .unwrap_or(prior_us);
+        self.err_hist.record_us((predicted - us).abs());
+        let first = self.measured.count(&key) == 0;
+        self.measured.observe(key, us);
+        if first {
+            self.generation.fetch_add(1, Ordering::Relaxed);
+        }
+        if self.refine_period > 0 {
+            self.obs_since_refine += 1;
+            if self.obs_since_refine >= self.refine_period {
+                self.obs_since_refine = 0;
+                self.refine_hottest(self.refine_top);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(class: u32, group: u64, padded: u32) -> VariantKey {
+        VariantKey {
+            class,
+            group,
+            padded,
+        }
+    }
+
+    #[test]
+    fn tiers_resolve_top_down_with_hit_counters() {
+        let mut e = TieredEstimator::new(0.3);
+        let k = key(0, 0, 8);
+        let prior = || 1000.0;
+
+        assert_eq!(e.tier_of(k), Tier::Prior);
+        assert_eq!(e.estimate_us(k, &prior), 1000.0);
+
+        e.warm(k, 800.0);
+        assert_eq!(e.tier_of(k), Tier::Tuned);
+        assert_eq!(e.estimate_us(k, &prior), 800.0);
+
+        e.observe(k, 600.0, prior());
+        assert_eq!(e.tier_of(k), Tier::Measured);
+        assert_eq!(e.estimate_us(k, &prior), 600.0);
+
+        let s = e.stats();
+        assert_eq!(
+            (s.measured_hits, s.tuned_hits, s.prior_hits),
+            (1, 1, 1),
+            "one hit per tier in query order"
+        );
+        assert_eq!(s.total_hits(), 3);
+    }
+
+    #[test]
+    fn measured_tier_never_consults_prior_closure() {
+        let mut e = TieredEstimator::new(0.3);
+        let k = key(1, 2, 4);
+        e.observe(k, 500.0, 100.0);
+        let v = e.estimate_us(k, &|| panic!("prior consulted for a measured variant"));
+        assert_eq!(v, 500.0);
+    }
+
+    /// Property: once a variant is Measured, Tuned/Prior are never
+    /// consulted for it again — under any interleaving of observations,
+    /// warm starts, and queries across a small key space.
+    #[test]
+    fn prop_tier_is_monotone_once_measured() {
+        let mut e = TieredEstimator::new(0.3);
+        let mut rng: u64 = 0x5eed_cafe;
+        let mut next = move || {
+            rng = rng
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            rng >> 33
+        };
+        let keys: Vec<VariantKey> = (0..2u32)
+            .flat_map(|c| (0..3u64).flat_map(move |g| [key(c, g, 4), key(c, g, 8)]))
+            .collect();
+        let mut measured_keys: Vec<VariantKey> = Vec::new();
+
+        for _ in 0..2000 {
+            let k = keys[(next() as usize) % keys.len()];
+            match next() % 3 {
+                0 => {
+                    let us = 100.0 + (next() % 1000) as f64;
+                    e.observe(k, us, 50.0);
+                    if !measured_keys.contains(&k) {
+                        measured_keys.push(k);
+                    }
+                }
+                1 => e.warm(k, 10.0 + (next() % 500) as f64),
+                _ => {
+                    let _ = e.estimate_us(k, &|| 77.0);
+                }
+            }
+            // the invariant: every measured key answers from Measured,
+            // without touching the lower tiers or the prior closure
+            for &mk in &measured_keys {
+                assert_eq!(e.tier_of(mk), Tier::Measured);
+                let before = e.stats();
+                let v = e.estimate_us(mk, &|| panic!("prior hit for measured key"));
+                let after = e.stats();
+                assert_eq!(v, e.measured_value(mk).unwrap());
+                assert_eq!(after.tuned_hits, before.tuned_hits);
+                assert_eq!(after.prior_hits, before.prior_hits);
+                assert_eq!(after.measured_hits, before.measured_hits + 1);
+            }
+        }
+        assert!(
+            !measured_keys.is_empty() && measured_keys.len() >= 6,
+            "the walk exercised several variants ({})",
+            measured_keys.len()
+        );
+    }
+
+    /// Warm-started and cold estimators converge to bit-identical
+    /// estimates after the same observations: the Tuned tier only fills
+    /// the gap before measurement, it never biases the learned value.
+    #[test]
+    fn warm_and_cold_converge_to_identical_estimates() {
+        let mut cold = TieredEstimator::new(0.3);
+        let mut warm = TieredEstimator::new(0.3);
+        let ka = key(0, 0, 8);
+        let kb = key(1, 1, 4);
+        warm.warm(ka, 750.0);
+        warm.warm(kb, 333.0);
+
+        // before any observation they disagree (that is the point of the
+        // warm start: realistic pricing at t=0)
+        let prior = || 9999.0;
+        assert_eq!(cold.estimate_us(ka, &prior), 9999.0);
+        assert_eq!(warm.estimate_us(ka, &prior), 750.0);
+
+        let obs = [
+            (ka, 600.0),
+            (kb, 200.0),
+            (ka, 640.0),
+            (ka, 610.0),
+            (kb, 260.0),
+            (ka, 655.0),
+        ];
+        for &(k, us) in &obs {
+            cold.observe(k, us, prior());
+            warm.observe(k, us, prior());
+            let c = cold.estimate_us(k, &prior);
+            let w = warm.estimate_us(k, &prior);
+            assert_eq!(
+                c.to_bits(),
+                w.to_bits(),
+                "measured estimates must be bit-identical"
+            );
+        }
+        assert_eq!(cold.tier_of(ka), Tier::Measured);
+        assert_eq!(warm.tier_of(ka), Tier::Measured);
+    }
+
+    #[test]
+    fn generation_moves_only_on_tier_changes() {
+        let mut e = TieredEstimator::new(0.3);
+        let k = key(0, 5, 8);
+        let g0 = e.generation();
+
+        e.warm(k, 100.0); // unmeasured + new value: bump
+        let g1 = e.generation();
+        assert_eq!(g1, g0 + 1);
+
+        e.warm(k, 100.0); // same value: no bump
+        assert_eq!(e.generation(), g1);
+
+        e.observe(k, 90.0, 50.0); // first measurement: bump
+        let g2 = e.generation();
+        assert_eq!(g2, g1 + 1);
+
+        e.observe(k, 95.0, 50.0); // EWMA update on measured variant: no bump
+        assert_eq!(e.generation(), g2);
+
+        e.warm(k, 42.0); // tuned write under a measured variant: invisible
+        assert_eq!(e.generation(), g2);
+    }
+
+    #[test]
+    fn refinement_promotes_hottest_without_changing_answers() {
+        let mut e = TieredEstimator::new(0.3);
+        e.set_refine(0, 0); // drive refinement manually
+        let hot = key(0, 0, 8);
+        let cool = key(0, 1, 8);
+        for _ in 0..10 {
+            e.observe(hot, 500.0, 100.0);
+        }
+        e.observe(cool, 900.0, 100.0);
+
+        let before_hot = e.estimate_us(hot, &|| 0.0);
+        let g = e.generation();
+        let changed = e.refine_hottest(1);
+        assert_eq!(changed, 1);
+        assert_eq!(e.tuned_value(hot), Some(500.0), "hottest promoted");
+        assert_eq!(e.tuned_value(cool), None, "cool variant not promoted");
+        assert_eq!(e.estimate_us(hot, &|| 0.0), before_hot, "answer unchanged");
+        assert_eq!(e.generation(), g, "refinement is generation-invisible");
+
+        // export shadows Tuned with Measured for the same key
+        let exp = e.export();
+        assert_eq!(exp.len(), 2);
+        assert!(exp
+            .iter()
+            .all(|&(_, _, t)| t == Tier::Measured), "both keys measured");
+    }
+
+    #[test]
+    fn observation_error_scored_against_the_answering_tier() {
+        let mut e = TieredEstimator::new(1.0); // alpha 1: EWMA = last obs
+        let k = key(0, 0, 4);
+        e.observe(k, 130.0, 100.0); // prior predicted 100 → err 30
+        e.observe(k, 130.0, 100.0); // measured predicted 130 → err 0
+        let s = e.stats();
+        assert_eq!(s.est_err.count(), 2);
+        // LatencyHist is log-bucketed (~4% error); mean of {30, 0} ≈ 15
+        assert!((s.est_err.mean_us() - 15.0).abs() < 2.0, "{}", s.est_err.mean_us());
+    }
+}

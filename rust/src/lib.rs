@@ -30,6 +30,7 @@
 //! | [`model`] | DNN model zoo: per-layer GEMM shape extraction (Fig. 2/7 source data) |
 //! | [`workload`] | arrival processes, tenant specs, trace generation/replay |
 //! | [`compiler`] | the OoO VLIW JIT: IR, issue window, coalescer, scheduler, autotuner, clustering |
+//! | [`estimate`] | the one cost model: tiered Measured/Tuned/Prior duration estimator + autotune artifact cache |
 //! | [`runtime`] | artifact manifest + PJRT executor + golden self-checks |
 //! | [`placement`] | device placement: fleet topology, group→device table, load rebalancer |
 //! | [`serve`] | multi-tenant serving loop, metrics, admission control |
@@ -37,6 +38,7 @@
 
 pub mod bench;
 pub mod compiler;
+pub mod estimate;
 pub mod gpu;
 pub mod model;
 pub mod placement;

@@ -13,8 +13,13 @@
 //!                     `--frontend` runs the wall-clock async-admission
 //!                     comparison instead (BENCH_4.json); `--engine-matrix`
 //!                     runs one trace through three cells of the unified
-//!                     engine's Clock × LaunchStage matrix (BENCH_5.json)
-//! * `autotune`      — Table-1 style greedy-vs-collaborative search
+//!                     engine's Clock × LaunchStage matrix (BENCH_5.json);
+//!                     `--warm-start` runs the same trace cold and
+//!                     warm-started from a freshly written
+//!                     `artifacts/tuned.json` (BENCH_6.json)
+//! * `autotune`      — Table-1 style greedy-vs-collaborative search;
+//!                     `--save` persists the tuned estimates as the
+//!                     `artifacts/tuned.json` warm-start cache
 //! * `cluster`       — Fig-7 style GEMM shape clustering of the model zoo
 //!
 //! Run `vliwd <cmd> --help` for flags.
@@ -22,14 +27,18 @@
 use anyhow::{bail, Context, Result};
 
 use vliw_jit::compiler::{autotune, cluster};
+use vliw_jit::estimate::{shape_class_label, TunedCache, TunedEntry};
 use vliw_jit::gpu::cost::CostModel;
 use vliw_jit::gpu::device::DeviceSpec;
 use vliw_jit::gpu::kernel::KernelDesc;
 use vliw_jit::gpu::timeline::SharingModel;
 use vliw_jit::model::zoo;
 use vliw_jit::placement::{DeviceTopology, RebalanceConfig};
+use vliw_jit::runtime::executor::ModelExec;
 use vliw_jit::runtime::{Manifest, PjrtExecutor};
-use vliw_jit::serve::{BatchPolicy, ServeMetrics, ServeReport, Server, SimBackend};
+use vliw_jit::serve::{
+    BatchPolicy, ModelBackend, ServeMetrics, ServeReport, Server, SimBackend,
+};
 use vliw_jit::util::cli::Args;
 use vliw_jit::util::json::Json;
 use vliw_jit::util::logging;
@@ -202,6 +211,18 @@ fn serve() -> Result<()> {
         "off" => server.frontend = false,
         other => bail!("unknown --frontend '{other}' (valid: on, off)"),
     }
+    // warm-start the estimator's Tuned tier from the persistent artifact
+    // cache, if a previous run (or `vliwd autotune --save`) left one
+    let tuned_path = std::path::Path::new("artifacts/tuned.json");
+    if tuned_path.exists() {
+        match TunedCache::load(tuned_path) {
+            Ok(c) => {
+                println!("warm-start: {} tuned estimates from {}", c.len(), tuned_path.display());
+                server.tuned = Some(c);
+            }
+            Err(e) => println!("ignoring unreadable {}: {e}", tuned_path.display()),
+        }
+    }
     let report = if !devices.is_empty() {
         // placed launch stage: one worker per device spec, routed through
         // the placement table with rebalancing enabled
@@ -244,6 +265,13 @@ fn serve() -> Result<()> {
         server.run_realtime(&trace, speedup)
     };
     println!("{}", report.render());
+    // persist what this run learned (measured values shadow stale warm
+    // entries) so the next start prices accurately from t = 0
+    report
+        .tuned
+        .save(tuned_path)
+        .map_err(|e| anyhow::anyhow!("save {}: {e}", tuned_path.display()))?;
+    println!("saved {} tuned estimates to {}", report.tuned.len(), tuned_path.display());
     Ok(())
 }
 
@@ -312,6 +340,10 @@ fn cmd_bench() -> Result<()> {
             "engine-matrix",
             "run the trace through three cells of the unified engine's Clock x LaunchStage matrix — (virtual x inline), (virtual x placed), (wall x pooled + frontend) — and emit BENCH_5.json",
         )
+        .switch(
+            "warm-start",
+            "run the same trace cold and warm-started from a freshly written artifacts/tuned.json, on a backend with a deliberately biased analytic prior, and emit BENCH_6.json (attainments + estimator tier hit rates + estimate-error quantiles)",
+        )
         .switch("static", "pin the initial placement (disable rebalancing)");
     let p = parse(args)?;
     let n = p.get_u64("tenants").map_err(|e| anyhow::anyhow!("{e}"))? as u32;
@@ -320,12 +352,14 @@ fn cmd_bench() -> Result<()> {
     let seed = p.get_u64("seed").map_err(|e| anyhow::anyhow!("{e}"))?;
     let frontend = p.get_bool("frontend");
     let engine_matrix = p.get_bool("engine-matrix");
-    if frontend && engine_matrix {
-        bail!("--frontend and --engine-matrix are separate bench steps; pick one");
+    let warm_start = p.get_bool("warm-start");
+    if (frontend as u8) + (engine_matrix as u8) + (warm_start as u8) > 1 {
+        bail!("--frontend, --engine-matrix and --warm-start are separate bench steps; pick one");
     }
     let out = match p.get("out") {
         "" if frontend => "BENCH_4.json".to_string(),
         "" if engine_matrix => "BENCH_5.json".to_string(),
+        "" if warm_start => "BENCH_6.json".to_string(),
         "" => "BENCH_3.json".to_string(),
         o => o.to_string(),
     };
@@ -350,6 +384,9 @@ fn cmd_bench() -> Result<()> {
         other => bail!("unknown --workload '{other}' (valid: skewed, mixed)"),
     };
     let trace = Trace::generate(&tenants, per, seed);
+    if warm_start {
+        return bench_warm_start(&trace, &out);
+    }
     if engine_matrix {
         let speedup = p.get_f64("speedup").map_err(|e| anyhow::anyhow!("{e}"))?;
         return bench_engine_matrix(&trace, &topo, rebalance, speedup, &out);
@@ -483,6 +520,98 @@ fn bench_frontend(trace: &Trace, speedup: f64, out: &str) -> Result<()> {
     Ok(())
 }
 
+/// Simulator backend whose *analytic prior* over-prices every launch by a
+/// constant factor while execution stays truthful — exactly the situation
+/// the estimator's Tuned tier exists for. A cold server mis-prices
+/// admission and hold decisions until the Measured tier learns each
+/// variant; a warm-started one answers from the artifact cache at t = 0.
+struct BiasedSim {
+    inner: SimBackend,
+    bias: f64,
+}
+
+impl ModelBackend for BiasedSim {
+    fn execute(&mut self, model: &str, rows: &[Vec<f32>]) -> vliw_jit::Result<ModelExec> {
+        self.inner.execute(model, rows)
+    }
+
+    fn estimate_us(&self, model: &str, n: u32) -> f64 {
+        self.inner.estimate_us(model, n) * self.bias
+    }
+
+    fn max_batch(&self, model: &str) -> u32 {
+        self.inner.max_batch(model)
+    }
+
+    fn d_in(&self, model: &str) -> usize {
+        self.inner.d_in(model)
+    }
+
+    fn padded_batch(&self, model: &str, n: u32) -> u32 {
+        self.inner.padded_batch(model, n)
+    }
+}
+
+/// The `bench --warm-start` step (BENCH_6): the same trace replayed twice
+/// on a backend whose analytic prior over-prices launches 3× — once cold
+/// (the estimator must learn every variant from observations) and once
+/// warm-started from the `artifacts/tuned.json` the cold run just saved.
+/// Both replays are deterministic virtual-time runs, so the warm run's
+/// only advantage is accurate pricing from t = 0: its attainment must be
+/// no worse than cold, and its Tuned-tier hit count must be nonzero
+/// (every pre-observation query of a warmed variant) — both asserted in
+/// CI.
+fn bench_warm_start(trace: &Trace, out: &str) -> Result<()> {
+    let backend = || BiasedSim {
+        inner: SimBackend::default(),
+        bias: 3.0,
+    };
+    // cold: every variant prices off the biased prior until measured
+    let mut cold_server = Server::new(backend(), BatchPolicy::coalescing());
+    let cold = cold_server.replay(trace);
+    println!("--- cold (biased prior) ---\n{}", cold.render());
+    // persist what the cold run learned, exactly as `vliwd serve` does
+    let path = std::path::Path::new("artifacts/tuned.json");
+    cold.tuned
+        .save(path)
+        .map_err(|e| anyhow::anyhow!("save {}: {e}", path.display()))?;
+    let cache = TunedCache::load(path)
+        .map_err(|e| anyhow::anyhow!("load {}: {e}", path.display()))?;
+    println!("wrote {} ({} entries)", path.display(), cache.len());
+    // warm: identical replay, Tuned tier answering before any observation
+    let mut warm_server = Server::new(backend(), BatchPolicy::coalescing());
+    warm_server.tuned = Some(cache);
+    let warm = warm_server.replay(trace);
+    println!("--- warm-started ---\n{}", warm.render());
+
+    let (cm, wm) = (&cold.metrics, &warm.metrics);
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("bench".to_string(), Json::Str("warm_start".to_string()));
+    o.insert("policy".to_string(), Json::Str(warm.policy.to_string()));
+    report_core_json(wm, &mut o);
+    o.insert("cold_attainment".to_string(), Json::Num(cm.overall_attainment()));
+    o.insert("warm_attainment".to_string(), Json::Num(wm.overall_attainment()));
+    o.insert("tuned_entries".to_string(), Json::Num(cold.tuned.len() as f64));
+    for (tag, m) in [("cold", cm), ("warm", wm)] {
+        let e = &m.estimator;
+        o.insert(format!("{tag}_measured_hits"), Json::Num(e.measured_hits as f64));
+        o.insert(format!("{tag}_tuned_hits"), Json::Num(e.tuned_hits as f64));
+        o.insert(format!("{tag}_prior_hits"), Json::Num(e.prior_hits as f64));
+        o.insert(
+            format!("{tag}_est_err_p50_us"),
+            Json::Num(e.est_err.quantile_us(0.5)),
+        );
+        o.insert(
+            format!("{tag}_est_err_p99_us"),
+            Json::Num(e.est_err.quantile_us(0.99)),
+        );
+    }
+    std::fs::write(out, Json::Obj(o).to_string_compact())
+        .with_context(|| format!("write {out}"))?;
+    println!("wrote {out}");
+    Ok(())
+}
+
 /// The `bench --engine-matrix` step (BENCH_5): one trace through three
 /// cells of the unified engine's Clock × LaunchStage mode matrix —
 /// (virtual × inline), (virtual × placed), (wall × pooled + frontend).
@@ -542,7 +671,11 @@ fn cmd_autotune() -> Result<()> {
         .flag("m", "3136", "GEMM rows")
         .flag("k", "576", "GEMM depth")
         .flag("n", "64", "GEMM cols")
-        .flag("device", "v100", "device model");
+        .flag("device", "v100", "device model")
+        .switch(
+            "save",
+            "persist the collaborative-tuned per-batch duration estimates to artifacts/tuned.json (the serving estimator's Tuned-tier warm-start cache)",
+        );
     let p = parse(args)?;
     // parse (not by_name): a typo'd device errors with the valid list
     // instead of silently falling back
@@ -580,6 +713,41 @@ fn cmd_autotune() -> Result<()> {
         res.multiplexed_speedup(),
         res.isolated_degradation() * 100.0
     );
+    if p.get_bool("save") {
+        // per-batch durations under the collaborative config, persisted in
+        // the serving estimator's artifact-cache format: entries for a
+        // model named after the tuned GEMM, one per power-of-two batch
+        // (the padded variants serving actually launches)
+        let path = std::path::Path::new("artifacts/tuned.json");
+        let mut cache = if path.exists() {
+            TunedCache::load(path).unwrap_or_default()
+        } else {
+            TunedCache::default()
+        };
+        let model = format!("gemm_{}x{}x{}", k.m, k.k, k.n);
+        let mut batch = 1u32;
+        while batch <= 64 {
+            let kb = KernelDesc::batched(batch, k.m, k.k, k.n);
+            cache.insert(
+                &model,
+                dev.name,
+                batch,
+                TunedEntry {
+                    class: shape_class_label(&kb),
+                    est_us: vliw_jit::estimate::prior::analytic_us(
+                        &cm,
+                        &res.collaborative.config,
+                        &kb,
+                    ),
+                },
+            );
+            batch *= 2;
+        }
+        cache
+            .save(path)
+            .map_err(|e| anyhow::anyhow!("save {}: {e}", path.display()))?;
+        println!("saved {} tuned estimates to {}", cache.len(), path.display());
+    }
     Ok(())
 }
 

@@ -8,19 +8,26 @@
 //!   the serving layer: requests padded into the smallest compiled batch
 //!   variant, weights resident (loaded once, passed per call).
 //!
-//! Latency estimates are *learned online* (EWMA per artifact) — the §5.2
-//! "monitoring inference latencies per-kernel" loop — seeded by a
-//! FLOPS-proportional prior before the first observation.
+//! Latency estimates are *learned online* — the §5.2 "monitoring
+//! inference latencies per-kernel" loop — through the crate-wide
+//! estimation substrate in [`crate::estimate`]: a per-artifact
+//! [`Measured`] EWMA bank (smoothing factor from
+//! `compiler::scheduler::Policy::ewma_alpha`), falling back to a
+//! FLOPS-proportional prior before the first observation. The serving
+//! layer's full three-tier (Measured/Tuned/Prior) resolution lives in
+//! [`crate::estimate::TieredEstimator`]; this executor is the
+//! artifact-level Measured tier that feeds it.
 
 use std::collections::HashMap;
 
 use crate::compiler::coalescer::SuperKernel;
 use crate::compiler::jit::KernelExecutor;
+use crate::compiler::scheduler::Policy;
+use crate::estimate::Measured;
 use crate::gpu::kernel::KernelDesc;
 use crate::runtime::artifact::{Manifest, SuperArtifact};
 use crate::runtime::golden;
 use crate::runtime::pjrt::{HostTensor, PjrtRuntime};
-use crate::util::stats::Ewma;
 use crate::{Error, Result};
 
 /// Result of a batched model execution.
@@ -40,8 +47,8 @@ pub struct PjrtExecutor {
     manifest: Manifest,
     /// weights per model, converted to HostTensors once
     weights: HashMap<String, Vec<HostTensor>>,
-    /// learned per-artifact latency (file -> EWMA µs)
-    est: HashMap<String, Ewma>,
+    /// learned per-artifact latency (file -> EWMA µs), the Measured tier
+    est: Measured<String>,
     /// FLOPS prior for unseen artifacts (CPU-PJRT effective GEMM rate).
     pub prior_gflops: f64,
     /// total executions (diagnostics)
@@ -55,7 +62,7 @@ impl PjrtExecutor {
             rt: PjrtRuntime::cpu()?,
             manifest,
             weights: HashMap::new(),
-            est: HashMap::new(),
+            est: Measured::new(Policy::default().ewma_alpha),
             prior_gflops: 5.0,
             executions: 0,
         })
@@ -219,10 +226,7 @@ impl PjrtExecutor {
     }
 
     fn observe(&mut self, file: &str, us: f64) {
-        self.est
-            .entry(file.to_string())
-            .or_insert_with(|| Ewma::new(0.3))
-            .observe(us);
+        self.est.observe(file.to_string(), us);
     }
 
     /// Learned per-artifact estimate, falling back to the FLOPS prior only
@@ -230,10 +234,8 @@ impl PjrtExecutor {
     /// observation count — not a 0-value sentinel — decides; a genuine
     /// ~0 µs measurement is a valid estimate).
     pub(crate) fn estimate_file(&self, file: &str, flops: f64) -> f64 {
-        match self.est.get(file).and_then(|e| e.value()) {
-            Some(v) => v,
-            None => flops / (self.prior_gflops * 1e3), // µs
-        }
+        self.est
+            .estimate_or(&file.to_string(), || flops / (self.prior_gflops * 1e3)) // µs
     }
 
     /// Find the superkernel artifact a batched kernel maps to.

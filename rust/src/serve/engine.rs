@@ -232,10 +232,13 @@ pub struct Placement {
 }
 
 /// Seed the placement table: LPT over each group's total estimated work
-/// in the trace (batch-1 estimates × request count). Shared by every
-/// placed constructor so initial placements cannot diverge.
+/// in the trace (batch-1 estimates × request count), priced through the
+/// tiered estimator so a warm-started Tuned entry shapes the initial
+/// placement too (cold it resolves to the same backend prior as before).
+/// Shared by every placed constructor so initial placements cannot
+/// diverge.
 pub fn seed_placement<B: ModelBackend>(
-    backend: &B,
+    exec: &ServeExecutor<B>,
     trace: &Trace,
     index: &BTreeMap<String, u64>,
     groups: u64,
@@ -249,7 +252,7 @@ pub fn seed_placement<B: ModelBackend>(
         let mut work: BTreeMap<u64, f64> = (0..groups).map(|g| (g, 0.0)).collect();
         for r in &trace.requests {
             *work.entry(index[&r.model]).or_insert(0.0) +=
-                backend.estimate_us(&r.model, 1);
+                exec.estimate_group_us(index[&r.model], 1);
         }
         work.into_iter().collect()
     };
@@ -1085,6 +1088,12 @@ pub struct Engine<X: ModelBackend, C: Clock, S: LaunchStage<X>> {
     drained_by_stream: BTreeMap<u32, u64>,
     view_seq: u64,
     view_dirty: bool,
+    /// The estimator generation the last published snapshot was built
+    /// against: when a variant changes answering tier (e.g. a warm-started
+    /// Tuned entry overtaken by the first real Measurement) *without* a
+    /// completion in the same iteration, this is what forces the next
+    /// snapshot so the frontend's memoized `est_by_n` tables refresh.
+    last_gen: u64,
 }
 
 /// The wall-clock intake state: either the raw client channel (sync gate)
@@ -1119,6 +1128,7 @@ where
         cfg: EngineConfig,
     ) -> Self {
         let groups = slots.len();
+        let last_gen = jit.executor().estimator_generation();
         let mut engine = Engine {
             jit,
             clock,
@@ -1135,6 +1145,7 @@ where
             drained_by_stream: BTreeMap::new(),
             view_seq: 0,
             view_dirty: false,
+            last_gen,
         };
         if let Some(p) = &engine.placement {
             engine
@@ -1188,9 +1199,11 @@ where
         }
         self.metrics.span_us = self.jit.now_us;
         self.metrics.jit = self.jit.stats.clone();
+        self.metrics.estimator = self.jit.executor().estimator_stats();
         let report = ServeReport {
             metrics: self.metrics,
             policy: self.policy_name,
+            tuned: self.jit.executor().export_tuned(),
         };
         (report, self.placement.map(|p| p.table))
     }
@@ -1314,9 +1327,11 @@ where
         }
         self.metrics.span_us = self.clock.now_us();
         self.metrics.jit = self.jit.stats.clone();
+        self.metrics.estimator = self.jit.executor().estimator_stats();
         ServeReport {
             metrics: self.metrics,
             policy: self.policy_name,
+            tuned: self.jit.executor().export_tuned(),
         }
     }
 
@@ -1500,6 +1515,15 @@ where
             if l.ok {
                 self.metrics.launch(&l);
             }
+        }
+        // a variant changed answering tier (first measurement of a
+        // warm-started entry, etc.): the memoized per-group estimate
+        // tables in the published view are stale even if no completion
+        // landed this iteration — force the next snapshot
+        let gen = self.jit.executor().estimator_generation();
+        if gen != self.last_gen {
+            self.last_gen = gen;
+            self.view_dirty = true;
         }
         // rebalance between observation windows; keep the estimator's
         // primary device class in step with the table's primaries

@@ -49,6 +49,19 @@
 //! publish time, before some execution elapsed, so a stale view
 //! *over*-prices the drain and sheds extra rather than over-admitting.
 //!
+//! **Where the prices come from.** Every `est_by_n` table in a snapshot
+//! is sampled from the ONE tiered cost model ([`crate::estimate`]) via
+//! [`ServeExecutor::estimate_group_table_us`]: a Measured EWMA when the
+//! (class, group, padded-batch) variant has real observations, a
+//! warm-started Tuned artifact-cache entry before the first observation
+//! lands, and the analytic Prior otherwise. The frontend itself never
+//! re-estimates — it prices against whatever tier answered at publish
+//! time. When a variant *changes answering tier* (a Tuned warm-start
+//! overtaken by its first real Measurement) without a completion in the
+//! same engine iteration, the estimator's generation counter forces the
+//! next snapshot publication, so a memoized `est_by_n` table can go stale
+//! for at most one publish interval (see `Engine::settle`).
+//!
 //! **One frontend thread, not a pool.** Per-stream program order is the
 //! order requests enter the window, which is the order the frontend
 //! forwards them. A pool would need to shard the intake by stream hash to

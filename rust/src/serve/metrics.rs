@@ -5,6 +5,7 @@
 use std::collections::BTreeMap;
 
 use crate::compiler::jit::{JitStats, LaunchRecord};
+use crate::estimate::EstimatorStats;
 use crate::serve::frontend::FrontendReport;
 use crate::util::stats::LatencyHist;
 
@@ -116,6 +117,10 @@ pub struct ServeMetrics {
     /// [`crate::serve::frontend::STALE_VIEW_US`] (scheduler wedged
     /// mid-iteration while the frontend kept answering).
     pub stale_decisions: u64,
+    /// The run's estimator accounting: which tier (Measured / Tuned /
+    /// Prior) answered each duration query, and the |predicted − actual|
+    /// launch-duration error histogram — see [`crate::estimate`].
+    pub estimator: EstimatorStats,
 }
 
 impl ServeMetrics {
@@ -268,6 +273,16 @@ impl ServeMetrics {
                 self.jit.pack_efficiency(),
                 self.jit.evictions,
                 self.jit.slo_attainment(),
+            ));
+        }
+        if self.estimator.total_hits() > 0 {
+            s.push_str(&format!(
+                "estimator: measured={} tuned={} prior={} err_p50={:.1}us err_p99={:.1}us\n",
+                self.estimator.measured_hits,
+                self.estimator.tuned_hits,
+                self.estimator.prior_hits,
+                self.estimator.est_err.quantile_us(0.5),
+                self.estimator.est_err.quantile_us(0.99),
             ));
         }
         if self.admission_decisions > 0 {
@@ -433,6 +448,20 @@ mod tests {
         let r = m.render();
         assert!(r.contains("admission: decisions=6"), "{r}");
         assert!(r.contains("stale=2"), "{r}");
+    }
+
+    #[test]
+    fn render_shows_estimator_tier_hits_when_present() {
+        let mut m = ServeMetrics::default();
+        m.complete(0, 1_000.0, true);
+        m.span_us = 1e6;
+        assert!(!m.render().contains("estimator:"), "no line before hits");
+        m.estimator.measured_hits = 5;
+        m.estimator.tuned_hits = 2;
+        m.estimator.prior_hits = 1;
+        m.estimator.est_err.record_us(40.0);
+        let r = m.render();
+        assert!(r.contains("estimator: measured=5 tuned=2 prior=1"), "{r}");
     }
 
     #[test]

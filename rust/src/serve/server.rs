@@ -34,8 +34,11 @@
 //!   topology (+ optional rebalance, ± frontend).
 //!
 //! Admission and the scheduler share one estimator
-//! ([`ServeExecutor::estimate_group_us`]), priced at the *padded* compiled
-//! variant that will actually run — they can no longer disagree.
+//! ([`ServeExecutor::estimate_group_us`]), resolved through the tiered
+//! Measured/Tuned/Prior cost model in [`crate::estimate`] and priced at
+//! the *padded* compiled variant that will actually run — they can no
+//! longer disagree. A [`crate::estimate::TunedCache`] loaded into
+//! [`Server::tuned`] warm-starts pricing before any observation lands.
 
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 
@@ -43,6 +46,10 @@ use crate::compiler::coalescer::{Coalescer, SuperKernel};
 use crate::compiler::ir::TensorOp;
 use crate::compiler::jit::{JitCompiler, JitConfig, PackExecutor, PackMember, PackRun};
 use crate::compiler::scheduler::Policy;
+use crate::estimate::{
+    shape_class_label, Estimator, EstimatorStats, TieredEstimator, TunedCache,
+    TunedEntry, VariantKey,
+};
 use crate::gpu::device::DeviceSpec;
 use crate::gpu::kernel::KernelDesc;
 use crate::placement::{DeviceTopology, PlacementTable, RebalanceConfig, Rebalancer};
@@ -53,7 +60,6 @@ use crate::serve::engine::{
     Placement, PoolStage, ServeJit, TimelineStage, VirtualClock, WallClock,
 };
 use crate::serve::metrics::ServeMetrics;
-use crate::util::stats::Ewma;
 use crate::util::threadpool::StatefulPool;
 use crate::workload::trace::Trace;
 use crate::Result;
@@ -242,12 +248,17 @@ pub struct ModelSlot {
 pub struct ServeExecutor<B: ModelBackend> {
     backend: B,
     models: Vec<ModelSlot>,
-    /// learned per-(device class, group, padded batch) service time, µs —
-    /// keyed per class so a t4 observation never updates a v100 estimate
-    est: HashMap<(u32, u64, u32), Ewma>,
+    /// the ONE cost model: per-(device class, group, padded batch)
+    /// variants resolved Measured → Tuned → Prior (see
+    /// [`crate::estimate`]); keyed per class so a t4 observation never
+    /// updates a v100 estimate
+    est: TieredEstimator,
     /// relative speed per device class (index = class id); a single 1.0
     /// entry for the legacy single-device drive modes
     class_speeds: Vec<f64>,
+    /// device-class names (index = class id) — the Tuned cache's device
+    /// key; defaults to the v100 reference class for unplaced modes
+    class_names: Vec<String>,
     /// primary device class per group (the estimation target for
     /// admission and the scheduler); groups default to class 0
     group_class: HashMap<u64, u32>,
@@ -259,8 +270,9 @@ impl<B: ModelBackend> ServeExecutor<B> {
         ServeExecutor {
             backend,
             models,
-            est: HashMap::new(),
+            est: TieredEstimator::new(Policy::default().ewma_alpha),
             class_speeds: vec![1.0],
+            class_names: vec!["v100".to_string()],
             group_class: HashMap::new(),
         }
     }
@@ -281,6 +293,85 @@ impl<B: ModelBackend> ServeExecutor<B> {
         if !speeds.is_empty() {
             self.class_speeds = speeds;
         }
+    }
+
+    /// Install the fleet's device-class names (index = class id) — the
+    /// key the Tuned tier's cache entries match against.
+    pub fn set_class_names(&mut self, names: Vec<String>) {
+        if !names.is_empty() {
+            self.class_names = names;
+        }
+    }
+
+    /// Measured-tier EWMA smoothing factor (`Policy::ewma_alpha`);
+    /// applied to variants observed from now on, so the engine sets it
+    /// once at startup before any launch completes.
+    pub fn set_ewma_alpha(&mut self, alpha: f64) {
+        self.est.set_alpha(alpha);
+    }
+
+    /// Warm-start the Tuned tier from a loaded artifact cache: every
+    /// (model, device class, padded variant) this run could price gets
+    /// its cached estimate, so admission and the scheduler see realistic
+    /// costs before the first launch completes.
+    pub fn warm_start(&mut self, cache: &TunedCache) {
+        for (gi, slot) in self.models.iter().enumerate() {
+            let mut padded_set: BTreeSet<u32> = BTreeSet::new();
+            for n in 1..=slot.max_batch.max(1) {
+                padded_set.insert(self.backend.padded_batch(&slot.name, n));
+            }
+            for (class, cname) in self.class_names.iter().enumerate() {
+                for &padded in &padded_set {
+                    if let Some(est_us) = cache.get(&slot.name, cname, padded) {
+                        self.est.warm(
+                            VariantKey {
+                                class: class as u32,
+                                group: gi as u64,
+                                padded,
+                            },
+                            est_us,
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Export everything the learned tiers know as a persistable
+    /// [`TunedCache`] — measured values shadow warm-started ones, so a
+    /// save-at-exit hands the next cold start this run's refined
+    /// estimates. Deterministic (sorted variant order).
+    pub fn export_tuned(&self) -> TunedCache {
+        let mut cache = TunedCache::new();
+        for (key, est_us, _tier) in self.est.export() {
+            let Some(slot) = self.models.get(key.group as usize) else {
+                continue;
+            };
+            let Some(device) = self.class_names.get(key.class as usize) else {
+                continue;
+            };
+            let class = shape_class_label(&KernelDesc::gemm(
+                key.padded,
+                slot.d_in.max(1) as u32,
+                1,
+            ));
+            cache.insert(&slot.name, device, key.padded, TunedEntry { class, est_us });
+        }
+        cache
+    }
+
+    /// Snapshot of the estimator's per-tier hit counters and
+    /// prediction-error histogram.
+    pub fn estimator_stats(&self) -> EstimatorStats {
+        self.est.stats()
+    }
+
+    /// Tier-change generation: moves when a variant's answer changes for
+    /// a non-EWMA reason (first measurement overtaking a warm-started
+    /// value, or a warm start landing). Consumers that memoize estimate
+    /// tables — the published `AdmissionView` — re-derive when it moves.
+    pub fn estimator_generation(&self) -> u64 {
+        self.est.generation()
     }
 
     /// Pin a group's primary estimation class (follows the placement
@@ -310,17 +401,23 @@ impl<B: ModelBackend> ServeExecutor<B> {
         self.estimate_group_on_class_us(group, self.class_of_group(group), n)
     }
 
-    /// Estimate for an explicit device class: the class's learned EWMA
-    /// when observed, else the backend prior scaled by the class's
-    /// relative speed (a t4 runs the same padded variant ~2× longer than
-    /// the v100 reference).
+    /// Estimate for an explicit device class, resolved through the tiers:
+    /// the class's Measured EWMA when observed, else the warm-started
+    /// Tuned value, else the backend Prior scaled by the class's relative
+    /// speed (a t4 runs the same padded variant ~2× longer than the v100
+    /// reference). The prior is a lazy closure — the backend's analytic
+    /// model only runs when both learned tiers miss.
     pub fn estimate_group_on_class_us(&self, group: u64, class: u32, n: u32) -> f64 {
         let slot = &self.models[group as usize];
         let padded = self.backend.padded_batch(&slot.name, n);
-        match self.est.get(&(class, group, padded)).and_then(|e| e.value()) {
-            Some(v) => v,
-            None => self.backend.estimate_us(&slot.name, n) / self.speed_of_class(class),
-        }
+        let key = VariantKey {
+            class,
+            group,
+            padded,
+        };
+        self.est.estimate_us(key, &|| {
+            self.backend.estimate_us(&slot.name, n) / self.speed_of_class(class)
+        })
     }
 
     /// Estimates for launches of 1..=cap ops of a group — the admission
@@ -345,10 +442,21 @@ impl<B: ModelBackend> ServeExecutor<B> {
     }
 
     fn observe_group(&mut self, class: u32, group: u64, padded: u32, us: f64) {
-        self.est
-            .entry((class, group, padded))
-            .or_insert_with(|| Ewma::new(0.3))
-            .observe(us);
+        // the prior is computed eagerly here (it scores prediction error
+        // in the estimator even when a learned tier already answers)
+        let prior_us = {
+            let slot = &self.models[group as usize];
+            self.backend.estimate_us(&slot.name, padded) / self.speed_of_class(class)
+        };
+        self.est.observe(
+            VariantKey {
+                class,
+                group,
+                padded,
+            },
+            us,
+            prior_us,
+        );
     }
 }
 
@@ -463,6 +571,10 @@ pub struct ServeReport {
     pub metrics: ServeMetrics,
     /// Policy used.
     pub policy: &'static str,
+    /// Everything the estimator learned this run, exported as a
+    /// persistable artifact cache (measured values shadowing warm-started
+    /// ones) — save it to warm-start the next run.
+    pub tuned: TunedCache,
 }
 
 impl ServeReport {
@@ -538,6 +650,11 @@ pub struct Server<B: ModelBackend> {
     /// modes always use the synchronous gate: a wall-clock frontend would
     /// race the virtual clock and break replay determinism.
     pub frontend: bool,
+    /// Warm-start cache for the estimator's Tuned tier (loaded from
+    /// `artifacts/tuned.json` by the CLI): every drive mode prices
+    /// matching (model, device class, padded batch) variants from it
+    /// until a real observation lands. `None` = cold start.
+    pub tuned: Option<TunedCache>,
 }
 
 impl<B: ModelBackend> Server<B> {
@@ -550,6 +667,7 @@ impl<B: ModelBackend> Server<B> {
             window_capacity: 1024,
             independent_streams: true,
             frontend: true,
+            tuned: None,
         }
     }
 
@@ -575,9 +693,6 @@ impl<B: ModelBackend> Server<B> {
         use_frontend: bool,
     ) -> EngineParts<'_, B> {
         let (slots, index) = model_slots(&self.backend, trace);
-        let table = topo.map(|t| {
-            seed_placement(&self.backend, trace, &index, slots.len() as u64, t)
-        });
         let arrivals = trace_arrivals(trace, &index);
         let cfg = self.policy.jit_config(&slots, self.window_capacity);
         let config = EngineConfig {
@@ -586,10 +701,24 @@ impl<B: ModelBackend> Server<B> {
             frontend: use_frontend,
             policy: self.policy.name(),
         };
-        let jit = JitCompiler::with_payloads(
-            cfg,
-            ServeExecutor::new(&mut self.backend, slots.clone()),
-        );
+        // The executor IS the run's one cost model: configure its Measured
+        // tier from policy, teach it the fleet's device-class names, and
+        // warm-start the Tuned tier from the loaded artifact cache BEFORE
+        // anything (placement seeding included) asks it for a price.
+        let mut exec = ServeExecutor::new(&mut self.backend, slots.clone());
+        exec.set_ewma_alpha(cfg.policy.ewma_alpha);
+        if let Some(t) = topo {
+            exec.set_class_names(
+                t.classes().iter().map(|c| c.name.clone()).collect(),
+            );
+        }
+        if let Some(cache) = &self.tuned {
+            exec.warm_start(cache);
+        }
+        let table = topo.map(|t| {
+            seed_placement(&exec, trace, &index, slots.len() as u64, t)
+        });
+        let jit = JitCompiler::with_payloads(cfg, exec);
         EngineParts {
             slots,
             arrivals,
@@ -993,6 +1122,93 @@ mod tests {
         assert_eq!(ex.estimate_group_us(0, 4), 123.0, "default class 0");
         ex.set_group_class(0, 1);
         assert_eq!(ex.estimate_group_us(0, 4), 9_999.0);
+    }
+
+    #[test]
+    fn warm_start_prices_before_first_observation() {
+        let slots = vec![ModelSlot {
+            name: "m".to_string(),
+            d_in: 4,
+            max_batch: 16,
+        }];
+        let mut backend = sim();
+        let prior = backend.estimate_us("m", 4);
+        let mut ex = ServeExecutor::new(&mut backend, slots);
+        let mut cache = TunedCache::new();
+        cache.insert(
+            "m",
+            "v100",
+            4,
+            TunedEntry {
+                class: "4x4x4".to_string(),
+                est_us: 777.0,
+            },
+        );
+        ex.warm_start(&cache);
+        // warmed variant answers from the Tuned tier before any launch
+        assert_eq!(ex.estimate_group_on_class_us(0, 0, 4), 777.0);
+        // un-warmed variants still fall back to the analytic prior
+        assert_eq!(ex.estimate_group_on_class_us(0, 0, 8), prior + 50.0 * 4.0);
+        let stats = ex.estimator_stats();
+        assert_eq!(stats.tuned_hits, 1);
+        assert_eq!(stats.prior_hits, 1);
+        // the first real observation overtakes the warm entry...
+        let gen = ex.estimator_generation();
+        ex.observe_group(0, 0, 4, 500.0);
+        assert_eq!(ex.estimate_group_on_class_us(0, 0, 4), 500.0);
+        // ...and bumps the generation so published views refresh
+        assert!(ex.estimator_generation() > gen, "tier change must be visible");
+    }
+
+    #[test]
+    fn export_tuned_round_trips_through_warm_start() {
+        let slots = vec![ModelSlot {
+            name: "m".to_string(),
+            d_in: 4,
+            max_batch: 16,
+        }];
+        let mut b1 = sim();
+        let mut learned = ServeExecutor::new(&mut b1, slots.clone());
+        learned.observe_group(0, 0, 4, 640.0);
+        learned.observe_group(0, 0, 8, 980.0);
+        let cache = learned.export_tuned();
+        assert_eq!(cache.len(), 2);
+        // a fresh executor warm-started from the export prices identically
+        let mut b2 = sim();
+        let mut warmed = ServeExecutor::new(&mut b2, slots);
+        warmed.warm_start(&cache);
+        assert_eq!(
+            warmed.estimate_group_on_class_us(0, 0, 4).to_bits(),
+            learned.estimate_group_on_class_us(0, 0, 4).to_bits()
+        );
+        assert_eq!(
+            warmed.estimate_group_on_class_us(0, 0, 8).to_bits(),
+            learned.estimate_group_on_class_us(0, 0, 8).to_bits()
+        );
+    }
+
+    #[test]
+    fn warm_started_replay_attainment_is_no_worse() {
+        // the BENCH_6 contract in miniature: replay cold, save what was
+        // learned, replay the same trace warm-started — attainment must
+        // not regress and the Tuned tier must actually answer
+        let trace = Trace::generate(&tenants(4, 400.0, 8_000), 60, 23);
+        let mut cold_s = Server::new(sim(), BatchPolicy::coalescing());
+        let cold = cold_s.replay(&trace);
+        let mut warm_s = Server::new(sim(), BatchPolicy::coalescing());
+        warm_s.tuned = Some(cold.tuned.clone());
+        let warm = warm_s.replay(&trace);
+        assert!(
+            warm.metrics.overall_attainment() >= cold.metrics.overall_attainment(),
+            "warm {} < cold {}",
+            warm.metrics.overall_attainment(),
+            cold.metrics.overall_attainment()
+        );
+        assert!(
+            warm.metrics.estimator.tuned_hits > 0,
+            "warm run must answer from the Tuned tier"
+        );
+        assert_eq!(cold.metrics.estimator.tuned_hits, 0, "cold run has no cache");
     }
 
     /// A fleet-saturating two-model workload: `hot` overloads one v100,
