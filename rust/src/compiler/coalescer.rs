@@ -10,7 +10,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::compiler::ir::{OpId, TensorOp};
+use crate::compiler::ir::{OpId, SloClass, TensorOp};
 use crate::gpu::kernel::KernelDesc;
 
 /// A quantized GEMM shape class: the grid the coalescer pads into.
@@ -136,17 +136,22 @@ impl Coalescer {
     /// Group ready ops into superkernels.
     ///
     /// Greedy class-bucket packing: quantize every op, bucket by
-    /// (coalescing group, class), split buckets into chunks of the group's
-    /// cap. Ops whose padding overhead exceeds `max_padding` go into
-    /// singleton packs at their own (tighter) quantization. Input order is
-    /// preserved inside a bucket so the scheduler's priority order (EDF)
-    /// survives packing.
+    /// (coalescing group, SLO class, shape class), split buckets into
+    /// chunks of the group's cap. SLO classes never share a launch — a
+    /// best-effort pack can then be staggered, yielded, or evicted without
+    /// dragging critical members along. Ops whose padding overhead exceeds
+    /// `max_padding` go into singleton packs at their own (tighter)
+    /// quantization. Input order is preserved inside a bucket so the
+    /// scheduler's priority order (EDF) survives packing.
     pub fn pack(&self, ops: &[&TensorOp]) -> Vec<SuperKernel> {
-        let mut buckets: BTreeMap<(u64, ShapeClass), Vec<&TensorOp>> = BTreeMap::new();
+        let mut buckets: BTreeMap<(u64, SloClass, ShapeClass), Vec<&TensorOp>> = BTreeMap::new();
         for op in ops {
             let class = ShapeClass::of(&op.kernel);
             if class.padding_overhead(&op.kernel) <= self.max_padding {
-                buckets.entry((op.group, class)).or_default().push(op);
+                buckets
+                    .entry((op.group, op.class, class))
+                    .or_default()
+                    .push(op);
             } else {
                 // out-of-band shape: exact singleton class
                 let exact = ShapeClass {
@@ -154,11 +159,14 @@ impl Coalescer {
                     k: op.kernel.k,
                     n: op.kernel.n,
                 };
-                buckets.entry((op.group, exact)).or_default().push(op);
+                buckets
+                    .entry((op.group, op.class, exact))
+                    .or_default()
+                    .push(op);
             }
         }
         let mut packs = Vec::new();
-        for ((group, class), members) in buckets {
+        for ((group, _slo, class), members) in buckets {
             for chunk in members.chunks(self.cap_of(group)) {
                 let useful: f64 = chunk.iter().map(|o| o.kernel.flops()).sum();
                 packs.push(SuperKernel {
@@ -215,6 +223,7 @@ mod tests {
             group: 0,
             tag: 0,
             independent: false,
+            class: SloClass::Standard,
         }
     }
 
@@ -305,6 +314,21 @@ mod tests {
         b.group = 2;
         let packs = Coalescer::default().pack(&[&a, &b]);
         assert_eq!(packs.len(), 2);
+        assert!(packs.iter().all(|p| p.problems() == 1));
+    }
+
+    #[test]
+    fn slo_classes_do_not_pack_together() {
+        // same group, same shape class, different SLO classes: a critical
+        // op must never ride a best-effort launch (or vice versa) — the
+        // eviction and yield rules act on whole packs
+        let mut a = op(0, 0, 128, 512, 64);
+        let mut b = op(1, 1, 128, 512, 64);
+        let c = op(2, 2, 128, 512, 64);
+        a.class = SloClass::Critical;
+        b.class = SloClass::BestEffort;
+        let packs = Coalescer::default().pack(&[&a, &b, &c]);
+        assert_eq!(packs.len(), 3);
         assert!(packs.iter().all(|p| p.problems() == 1));
     }
 

@@ -9,6 +9,72 @@
 
 use crate::gpu::kernel::KernelDesc;
 
+/// SLO class of a request — the one priority dimension threaded through
+/// every scheduling layer (frontend gate, admission, scheduler, coalescer,
+/// eviction, metrics). Classes never share a launch: the coalescer buckets
+/// by class, so a best-effort pack can be staggered or evicted without
+/// touching critical work.
+///
+/// Ordering is by urgency: `Critical < Standard < BestEffort`, so sorting
+/// ascending puts the most latency-sensitive class first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub enum SloClass {
+    /// Latency-critical traffic: keeps today's admission pricing, never
+    /// shed ahead of lower classes, highest fair-share weight.
+    Critical,
+    /// The default class — exactly the pre-class behaviour (weight 1.0).
+    #[default]
+    Standard,
+    /// Batch/background traffic: shed first under stale or loaded
+    /// admission views, packs yield to tight higher-class slack, evicted
+    /// on a tighter straggler threshold.
+    BestEffort,
+}
+
+impl SloClass {
+    /// All classes, in urgency order (index order).
+    pub const ALL: [SloClass; 3] = [SloClass::Critical, SloClass::Standard, SloClass::BestEffort];
+
+    /// Dense index (Critical = 0, Standard = 1, BestEffort = 2) — used to
+    /// key per-class arrays in `Policy` and `ServeMetrics`.
+    pub fn index(self) -> usize {
+        match self {
+            SloClass::Critical => 0,
+            SloClass::Standard => 1,
+            SloClass::BestEffort => 2,
+        }
+    }
+
+    /// Inverse of [`SloClass::index`]; out-of-range maps to Standard.
+    pub fn from_index(i: usize) -> SloClass {
+        match i {
+            0 => SloClass::Critical,
+            2 => SloClass::BestEffort,
+            _ => SloClass::Standard,
+        }
+    }
+
+    /// Human-readable name (bench JSON field prefix).
+    pub fn name(self) -> &'static str {
+        match self {
+            SloClass::Critical => "critical",
+            SloClass::Standard => "standard",
+            SloClass::BestEffort => "best_effort",
+        }
+    }
+
+    /// Parse a class name (CLI `--classes` spec). Accepts the JSON field
+    /// prefixes and common short forms.
+    pub fn parse(s: &str) -> Option<SloClass> {
+        match s {
+            "critical" | "crit" => Some(SloClass::Critical),
+            "standard" | "std" => Some(SloClass::Standard),
+            "best_effort" | "best-effort" | "be" | "batch" => Some(SloClass::BestEffort),
+            _ => None,
+        }
+    }
+}
+
 /// Identifier of a stream of execution (a tenant's command stream).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct StreamId(pub u32);
@@ -48,6 +114,10 @@ pub struct TensorOp {
     pub group: u64,
     /// Opaque request handle for completion fan-out (serving layer).
     pub tag: u64,
+    /// SLO class of the issuing tenant. Classes never coalesce together
+    /// and the scheduler weights deadlines by class (see
+    /// [`crate::compiler::scheduler::Policy::class_weights`]).
+    pub class: SloClass,
 }
 
 impl TensorOp {
@@ -78,6 +148,9 @@ pub struct DispatchRequest {
     /// Independence of earlier ops in the stream (see
     /// [`TensorOp::independent`]).
     pub independent: bool,
+    /// SLO class (see [`TensorOp::class`]); defaults to
+    /// [`SloClass::Standard`], which reproduces pre-class behaviour.
+    pub class: SloClass,
 }
 
 impl DispatchRequest {
@@ -90,6 +163,7 @@ impl DispatchRequest {
             group: 0,
             tag: 0,
             independent: false,
+            class: SloClass::Standard,
         }
     }
 
@@ -113,6 +187,12 @@ impl DispatchRequest {
         self.independent = independent;
         self
     }
+
+    /// Assign the request an SLO class (per-tenant in the serving layer).
+    pub fn with_class(mut self, class: SloClass) -> Self {
+        self.class = class;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -132,6 +212,7 @@ mod tests {
             group: 0,
             tag: 0,
             independent: false,
+            class: SloClass::Standard,
         };
         assert_eq!(op.slack_us(200.0, 300.0), 500.0);
         assert!(!op.is_critical(200.0, 300.0));
@@ -148,7 +229,24 @@ mod tests {
         assert_eq!(r.group, 4);
         assert_eq!(r.slo_us, 5_000.0);
         assert!(!r.independent, "program order binds by default");
-        let r = r.with_independent(true);
+        assert_eq!(r.class, SloClass::Standard, "Standard class by default");
+        let r = r.with_independent(true).with_class(SloClass::BestEffort);
         assert!(r.independent);
+        assert_eq!(r.class, SloClass::BestEffort);
+    }
+
+    #[test]
+    fn slo_class_index_roundtrip_and_names() {
+        for (i, c) in SloClass::ALL.iter().enumerate() {
+            assert_eq!(c.index(), i);
+            assert_eq!(SloClass::from_index(i), *c);
+            assert_eq!(SloClass::parse(c.name()), Some(*c));
+        }
+        assert_eq!(SloClass::default(), SloClass::Standard);
+        assert_eq!(SloClass::parse("be"), Some(SloClass::BestEffort));
+        assert_eq!(SloClass::parse("nope"), None);
+        // urgency order: sorting ascending puts Critical first
+        assert!(SloClass::Critical < SloClass::Standard);
+        assert!(SloClass::Standard < SloClass::BestEffort);
     }
 }

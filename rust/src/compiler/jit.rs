@@ -536,12 +536,17 @@ where
     ) -> Vec<OpCompletion> {
         let issued = self.pending.remove(&ticket).expect("unknown launch ticket");
         self.advance_to(done_us);
-        {
+        let pack_class = {
             let members = Self::members(&self.window, &issued.pack);
             self.executor.observe_pack(&issued.pack, &members, &run);
-        }
+            members.first().map(|op| op.class).unwrap_or_default()
+        };
+        // class-aware straggler threshold: best-effort launches trip on
+        // the tighter scaled factor (eviction-order leg of the class
+        // contract), so a degraded device sheds batch work first
         let evicted = run.ok
-            && self.scheduler.should_evict(
+            && self.scheduler.should_evict_class(
+                pack_class,
                 issued.issue_us,
                 issued.est_us,
                 issued.issue_us + run.duration_us,
@@ -561,9 +566,10 @@ where
     fn launch_sync(&mut self, pack: SuperKernel) -> Vec<OpCompletion> {
         self.window.issue(&pack.ops);
         let issue_us = self.now_us;
-        let (est, mut run) = {
+        let (est, pack_class, mut run) = {
             let members = Self::members(&self.window, &pack);
             let est = self.executor.estimate_pack_us(&pack.kernel, &members);
+            let pack_class = members.first().map(|op| op.class).unwrap_or_default();
             let pm: Vec<PackMember<'_, P>> = members
                 .iter()
                 .map(|op| PackMember {
@@ -574,19 +580,20 @@ where
             let run = self.executor.execute_pack(&pack, &pm);
             drop(pm);
             self.executor.observe_pack(&pack, &members, &run);
-            (est, run)
+            (est, pack_class, run)
         };
         let mut evicted = false;
         if run.ok
             && self
                 .scheduler
-                .should_evict(issue_us, est, issue_us + run.duration_us)
+                .should_evict_class(pack_class, issue_us, est, issue_us + run.duration_us)
         {
             // evict + retry once: pay the straggler time up to the eviction
-            // trigger, then a clean re-run at estimate
+            // trigger (the pack class's own threshold), then a clean re-run
+            // at estimate
             self.stats.evictions += 1;
             evicted = true;
-            run.duration_us = self.scheduler.eviction_charge_us(est) + est;
+            run.duration_us = self.scheduler.eviction_charge_us_class(pack_class, est) + est;
         }
         run.duration_us += self.cfg.packing_overhead_us;
         self.now_us += run.duration_us;

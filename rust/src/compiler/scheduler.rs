@@ -8,9 +8,42 @@
 //! slack beyond the safety margin, and (b) the oldest member has waited
 //! less than the window — "purposefully delays/staggers ill-fitting kernels
 //! for better coalescing at a (slightly) later time" (§5).
+//!
+//! # The SLO-class contract
+//!
+//! Every op carries an [`SloClass`]; the scheduler is the layer that turns
+//! the class into priority. The contract, shared with the frontend gate
+//! (`serve/frontend.rs`) and the JIT eviction path:
+//!
+//! - **Weight semantics** ([`Policy::class_weights`], indexed by
+//!   [`SloClass::index`]): ordering uses the *class-weighted virtual
+//!   deadline* — for time-to-deadline `ttd = deadline − now` and weight
+//!   `w`, the key is `now + ttd/w` while `ttd ≥ 0` and `now + ttd·w` once
+//!   overdue. Weight 1 (the Standard default) makes the key *exactly* the
+//!   raw deadline, so single-class workloads reproduce pure EDF
+//!   bit-for-bit. A weight > 1 (Critical) shrinks apparent slack — the op
+//!   sorts as if its deadline were closer and, once late, as *more*
+//!   overdue; a weight < 1 (BestEffort) stretches it. Weighted fair
+//!   sharing of pack capacity falls out: a saturating best-effort tenant's
+//!   ops sort behind any critical op whose scaled slack is tighter, and
+//!   classes never share a pack (the coalescer buckets by class).
+//! - **Yield rule**: a *full* best-effort pack — normally launched
+//!   immediately — defers while any ready higher-class op's slack is
+//!   within `safety_margin_us` of the time the pack would occupy the
+//!   device (`slack < pack_est + margin`). Best-effort still makes
+//!   progress whenever critical load leaves that much slack (bounded
+//!   starvation, pinned by test).
+//! - **Eviction order**: best-effort stragglers are evicted on a *tighter*
+//!   threshold — `eviction_factor × be_eviction_scale` (default ½) — so
+//!   when a device degrades, best-effort work is killed first and critical
+//!   work keeps the standard grace. The time charged to an evicted launch
+//!   always equals its class's trigger threshold
+//!   ([`Scheduler::eviction_charge_us_class`]).
+//! - **Rate-limit accounting** lives in the frontend gate (per-tenant
+//!   token buckets) — the scheduler never sees shed requests.
 
 use crate::compiler::coalescer::{Coalescer, SuperKernel};
-use crate::compiler::ir::TensorOp;
+use crate::compiler::ir::{SloClass, TensorOp};
 use crate::compiler::window::Window;
 use crate::gpu::kernel::KernelDesc;
 
@@ -38,6 +71,31 @@ pub struct Policy {
     /// hoisted here so estimate reactivity is tunable and documented in
     /// one place.
     pub ewma_alpha: f64,
+    /// Fair-share weight per [`SloClass`] (indexed by
+    /// [`SloClass::index`]). The scheduler orders by the class-weighted
+    /// virtual deadline (see the module doc); weight 1.0 reproduces pure
+    /// EDF for that class. Defaults: Critical 4×, Standard 1×,
+    /// BestEffort ¼×.
+    pub class_weights: [f64; 3],
+    /// Scale applied to `eviction_factor` for best-effort launches —
+    /// best-effort stragglers are killed on a tighter threshold so a
+    /// degraded device sheds batch work before critical work. 1.0
+    /// disables the preference.
+    pub be_eviction_scale: f64,
+    /// Base Tuned-tier refinement cadence for the tiered estimator: after
+    /// this many observations the hottest measured variants are promoted
+    /// back into the Tuned tier. 0 disables refinement. The *effective*
+    /// cadence adapts around this base (see
+    /// [`Policy::refine_err_threshold_us`]).
+    pub refine_period: u64,
+    /// How many of the hottest variants each refinement pass promotes.
+    pub refine_top: usize,
+    /// Estimate-error p99 threshold (µs) steering the adaptive cadence:
+    /// while the observed `err_p99` exceeds this the estimator re-tunes
+    /// on a quarter of `refine_period`; once the Measured tier dominates
+    /// the answer stream (and error is below threshold) it backs off to
+    /// 4× the base period.
+    pub refine_err_threshold_us: f64,
 }
 
 impl Default for Policy {
@@ -49,6 +107,39 @@ impl Default for Policy {
             eviction_factor: 3.0,
             eviction_slop_us: 50.0,
             ewma_alpha: 0.3,
+            class_weights: [4.0, 1.0, 0.25],
+            be_eviction_scale: 0.5,
+            refine_period: 64,
+            refine_top: 8,
+            refine_err_threshold_us: 500.0,
+        }
+    }
+}
+
+impl Policy {
+    /// Fair-share weight of a class, clamped positive.
+    pub fn weight_of(&self, class: SloClass) -> f64 {
+        self.class_weights[class.index()].max(1e-6)
+    }
+
+    /// Class-weighted virtual deadline of an op at `now` — the scheduler's
+    /// ordering key. Equals the raw deadline when the class weight is 1.
+    pub fn virtual_deadline_us(&self, op: &TensorOp, now: f64) -> f64 {
+        let w = self.weight_of(op.class);
+        let ttd = op.deadline_us - now;
+        if ttd >= 0.0 {
+            now + ttd / w
+        } else {
+            now + ttd * w
+        }
+    }
+
+    /// Eviction factor for a class (best-effort runs on the tighter,
+    /// scaled threshold).
+    pub fn eviction_factor_of(&self, class: SloClass) -> f64 {
+        match class {
+            SloClass::BestEffort => self.eviction_factor * self.be_eviction_scale,
+            _ => self.eviction_factor,
         }
     }
 }
@@ -104,25 +195,29 @@ impl Scheduler {
         if ready.is_empty() {
             return Decision::Idle;
         }
-        // EDF base order (the OoO reordering step); ties broken by op id so
-        // scheduling is fully deterministic (the window hands us ops in
-        // hash-map order)
+        // EDF base order on the class-weighted virtual deadline (the OoO
+        // reordering step); with all weights 1 this is the raw deadline.
+        // Ties broken by op id so scheduling is fully deterministic (the
+        // window hands us ops in hash-map order)
         ready.sort_by(|a, b| {
-            a.deadline_us
-                .partial_cmp(&b.deadline_us)
-                .unwrap()
-                .then(a.id.cmp(&b.id))
+            let va = self.policy.virtual_deadline_us(a, now);
+            let vb = self.policy.virtual_deadline_us(b, now);
+            va.partial_cmp(&vb).unwrap().then(a.id.cmp(&b.id))
         });
         let mut packs = self.coalescer.pack(&ready);
-        // EDF across packs: order by each pack's earliest member deadline
-        // (= its first member — buckets preserve the EDF input order),
+        // EDF across packs: order by each pack's most urgent member (= its
+        // first member — buckets preserve the weighted-EDF input order),
         // ties by first member id for determinism. The highest-priority
         // *launchable* pack launches; a staggering urgent pack never holds
         // a full pack for another group hostage.
         packs.sort_by(|a, b| {
-            let da = window.get(a.ops[0]).expect("pack member").deadline_us;
-            let db = window.get(b.ops[0]).expect("pack member").deadline_us;
-            da.partial_cmp(&db).unwrap().then(a.ops[0].cmp(&b.ops[0]))
+            let va = self
+                .policy
+                .virtual_deadline_us(window.get(a.ops[0]).expect("pack member"), now);
+            let vb = self
+                .policy
+                .virtual_deadline_us(window.get(b.ops[0]).expect("pack member"), now);
+            va.partial_cmp(&vb).unwrap().then(a.ops[0].cmp(&b.ops[0]))
         });
         let mut earliest_hold = f64::INFINITY;
         for pack in packs {
@@ -130,12 +225,34 @@ impl Scheduler {
             // group cap (a model's largest compiled batch variant) — a
             // pack at its cap can never grow, so holding it is pure
             // added latency.
-            let group = window.get(pack.ops[0]).expect("pack member").group;
-            if pack.problems() >= self.policy.target_pack
+            let head = window.get(pack.ops[0]).expect("pack member");
+            let (group, pack_class) = (head.group, head.class);
+            let full = pack.problems() >= self.policy.target_pack
                 || pack.problems() >= self.coalescer.max_problems
-                || pack.problems() >= self.coalescer.cap_of(group)
-            {
-                return Decision::Launch(pack);
+                || pack.problems() >= self.coalescer.cap_of(group);
+            if full {
+                // Yield rule (class contract, module doc): a full
+                // best-effort pack defers while occupying the device with
+                // it would eat into a ready higher-class op's safety
+                // margin. The higher-class op's own pack either launches
+                // this decide or contributes the wake-up time, so the
+                // yielding pack re-evaluates once that slack clears.
+                let yields = pack_class == SloClass::BestEffort && {
+                    let members: Vec<&TensorOp> = pack
+                        .ops
+                        .iter()
+                        .map(|id| window.get(*id).expect("pack member in window"))
+                        .collect();
+                    let est = est_exec(&pack.kernel, &members);
+                    ready.iter().any(|op| {
+                        op.class < SloClass::BestEffort
+                            && op.slack_us(now, est) < self.policy.safety_margin_us
+                    })
+                };
+                if !yields {
+                    return Decision::Launch(pack);
+                }
+                continue;
             }
             let members: Vec<&TensorOp> = pack
                 .ops
@@ -172,18 +289,39 @@ impl Scheduler {
     }
 
     /// Straggler test (§5.2): should an op issued at `issued_us` with
-    /// estimate `est_us` be evicted at `now`?
+    /// estimate `est_us` be evicted at `now`? Standard-class threshold;
+    /// class-aware callers use [`Scheduler::should_evict_class`].
     pub fn should_evict(&self, issued_us: f64, est_us: f64, now: f64) -> bool {
+        self.should_evict_class(SloClass::Standard, issued_us, est_us, now)
+    }
+
+    /// Class-aware straggler test: best-effort launches trip on the
+    /// tighter scaled threshold (eviction-order leg of the class
+    /// contract), critical and standard keep the full grace.
+    pub fn should_evict_class(
+        &self,
+        class: SloClass,
+        issued_us: f64,
+        est_us: f64,
+        now: f64,
+    ) -> bool {
         now - issued_us
-            > self.policy.eviction_factor * est_us + self.policy.eviction_slop_us
+            > self.policy.eviction_factor_of(class) * est_us + self.policy.eviction_slop_us
     }
 
     /// The straggler time charged to an evicted launch: it runs up to the
     /// eviction trigger, then is killed. Kept identical to the
     /// [`Scheduler::should_evict`] threshold so simulated accounting and
-    /// the trigger can never drift apart.
+    /// the trigger can never drift apart. Standard-class value; see
+    /// [`Scheduler::eviction_charge_us_class`].
     pub fn eviction_charge_us(&self, est_us: f64) -> f64 {
-        self.policy.eviction_factor * est_us + self.policy.eviction_slop_us
+        self.eviction_charge_us_class(SloClass::Standard, est_us)
+    }
+
+    /// Class-aware eviction charge — equals the
+    /// [`Scheduler::should_evict_class`] trigger for the same class.
+    pub fn eviction_charge_us_class(&self, class: SloClass, est_us: f64) -> f64 {
+        self.policy.eviction_factor_of(class) * est_us + self.policy.eviction_slop_us
     }
 }
 
@@ -467,6 +605,139 @@ mod tests {
     }
 
     #[test]
+    fn standard_weight_reproduces_raw_deadline() {
+        // the virtual deadline of a Standard-class op IS the raw deadline
+        // (weight 1), so pre-class EDF behaviour is reproduced exactly
+        let p = Policy::default();
+        let mut w = Window::new(8);
+        submit(&mut w, 0, 5_000.0, 0.0);
+        let op = w.ready()[0];
+        assert_eq!(p.virtual_deadline_us(op, 0.0), op.deadline_us);
+        assert_eq!(p.virtual_deadline_us(op, 7_000.0), op.deadline_us);
+    }
+
+    #[test]
+    fn class_weights_reorder_packs() {
+        use crate::compiler::ir::SloClass;
+        // best-effort op with a NOMINALLY earlier deadline vs a critical
+        // op: the 4×/¼× weights invert the order (weighted virtual
+        // deadline: critical 0 + 40_000/4 = 10_000 < be 0 + 30_000/0.25 =
+        // 120_000), so the critical pack launches first
+        let mut w = Window::new(8);
+        w.submit(
+            DispatchRequest::new(StreamId(0), KernelDesc::gemm(128, 512, 64), 30_000.0)
+                .with_class(SloClass::BestEffort),
+            0.0,
+        )
+        .unwrap();
+        w.submit(
+            DispatchRequest::new(StreamId(1), KernelDesc::gemm(128, 512, 64), 40_000.0)
+                .with_class(SloClass::Critical),
+            0.0,
+        )
+        .unwrap();
+        let s = Scheduler::new(
+            Policy {
+                coalesce_window_us: 0.0, // launch immediately: order is the test
+                ..Policy::default()
+            },
+            Coalescer::default(),
+        );
+        let cm = CostModel::v100();
+        match s.decide(&w, 0.0, est(&cm)) {
+            Decision::Launch(p) => {
+                let head = w.get(p.ops[0]).unwrap();
+                assert_eq!(head.class, SloClass::Critical, "critical pack first");
+            }
+            other => panic!("expected Launch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn full_best_effort_pack_yields_to_tight_critical_slack() {
+        use crate::compiler::ir::SloClass;
+        // a FULL best-effort pack normally launches immediately (the
+        // hostage scenario); with a ready critical op whose slack is
+        // inside (pack est + margin) it must yield instead — the decision
+        // is the critical launch or the critical pack's stagger, never
+        // the best-effort launch
+        let cm = CostModel::v100();
+        let pack_est = crate::estimate::prior::analytic_us(
+            &cm,
+            &crate::gpu::kernel::LaunchConfig::greedy(),
+            &KernelDesc::batched(4, 128, 512, 64),
+        );
+        let mut w = Window::new(16);
+        for s in 0..4 {
+            w.submit(
+                DispatchRequest::new(
+                    StreamId(s),
+                    KernelDesc::gemm(128, 512, 64),
+                    50_000.0,
+                )
+                .with_class(SloClass::BestEffort),
+                0.0,
+            )
+            .unwrap();
+        }
+        // critical op (tiny kernel, different shape class): slack after a
+        // BE pack launch would be 300µs < the 500µs safety margin
+        w.submit(
+            DispatchRequest::new(StreamId(9), KernelDesc::gemm(1, 4, 4), pack_est + 300.0)
+                .with_class(SloClass::Critical),
+            0.0,
+        )
+        .unwrap();
+        match sched().decide(&w, 0.0, est(&cm)) {
+            Decision::Launch(p) => {
+                let head = w.get(p.ops[0]).unwrap();
+                assert_eq!(head.class, SloClass::Critical, "BE pack yielded");
+            }
+            Decision::Wait { until_us } => {
+                // the critical pack staggers briefly; the yielded BE pack
+                // must not sneak in at the wake-up while slack stays tight
+                assert!(until_us.is_finite());
+            }
+            Decision::Idle => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn full_best_effort_pack_launches_when_critical_slack_is_generous() {
+        use crate::compiler::ir::SloClass;
+        // bounded starvation: with the critical op's slack comfortably
+        // beyond (pack est + margin) the full best-effort pack proceeds
+        let mut w = Window::new(16);
+        for s in 0..4 {
+            w.submit(
+                DispatchRequest::new(
+                    StreamId(s),
+                    KernelDesc::gemm(128, 512, 64),
+                    50_000.0,
+                )
+                .with_class(SloClass::BestEffort),
+                0.0,
+            )
+            .unwrap();
+        }
+        w.submit(
+            DispatchRequest::new(StreamId(9), KernelDesc::gemm(128, 512, 64), 80_000.0)
+                .with_class(SloClass::Critical),
+            0.0,
+        )
+        .unwrap();
+        let cm = CostModel::v100();
+        match sched().decide(&w, 0.0, est(&cm)) {
+            Decision::Launch(p) => {
+                let head = w.get(p.ops[0]).unwrap();
+                assert_eq!(head.class, SloClass::BestEffort);
+                assert_eq!(p.problems(), 4, "the full BE pack launches");
+            }
+            other => panic!("expected BE Launch, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn eviction_threshold() {
         let s = sched();
         assert!(!s.should_evict(0.0, 100.0, 200.0)); // 2x: fine
@@ -489,5 +760,23 @@ mod tests {
         // zero-estimate kernels are protected by the slop alone
         assert!(!s.should_evict(0.0, 0.0, 9.0));
         assert!(s.should_evict(0.0, 0.0, 11.0));
+    }
+
+    #[test]
+    fn best_effort_evicts_on_tighter_threshold_and_charge_matches() {
+        use crate::compiler::ir::SloClass;
+        let s = sched(); // factor 3, BE scale 0.5, slop 50
+        // standard threshold: 3×100 + 50 = 350; BE: 1.5×100 + 50 = 200
+        assert!(!s.should_evict_class(SloClass::Standard, 0.0, 100.0, 300.0));
+        assert!(s.should_evict_class(SloClass::BestEffort, 0.0, 100.0, 300.0));
+        assert!(!s.should_evict_class(SloClass::Critical, 0.0, 100.0, 300.0));
+        // per-class charge equals the per-class trigger
+        assert_eq!(s.eviction_charge_us_class(SloClass::BestEffort, 100.0), 200.0);
+        assert_eq!(s.eviction_charge_us_class(SloClass::Standard, 100.0), 350.0);
+        assert_eq!(
+            s.eviction_charge_us_class(SloClass::Standard, 100.0),
+            s.eviction_charge_us(100.0),
+            "legacy charge is the Standard-class charge"
+        );
     }
 }

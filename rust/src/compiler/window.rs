@@ -184,6 +184,7 @@ impl Window {
             group: req.group,
             tag: req.tag,
             independent: req.independent,
+            class: req.class,
         };
         let q = self.streams.entry(req.stream).or_default();
         // ready iff nothing earlier from this stream awaits issue, or the
@@ -414,6 +415,16 @@ mod tests {
 
     fn req(stream: u32) -> DispatchRequest {
         DispatchRequest::new(StreamId(stream), KernelDesc::gemm(32, 256, 64), 10_000.0)
+    }
+
+    #[test]
+    fn submit_carries_slo_class_onto_the_op() {
+        use crate::compiler::ir::SloClass;
+        let mut w = Window::new(16);
+        let a = w.submit(req(0).with_class(SloClass::Critical), 0.0).unwrap();
+        let b = w.submit(req(1), 0.0).unwrap();
+        assert_eq!(w.get(a).unwrap().class, SloClass::Critical);
+        assert_eq!(w.get(b).unwrap().class, SloClass::Standard, "default");
     }
 
     #[test]

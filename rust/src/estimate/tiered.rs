@@ -15,6 +15,14 @@ use crate::util::stats::LatencyHist;
 pub const REFINE_PERIOD: u64 = 64;
 /// Default number of hottest variants promoted per refinement pass.
 pub const REFINE_TOP: usize = 8;
+/// Default prediction-error p99 (µs) above which the refinement cadence
+/// tightens (see [`TieredEstimator::effective_refine_period`]).
+pub const REFINE_ERR_THRESHOLD_US: f64 = 500.0;
+
+/// Error samples required before the error-driven cadence change engages.
+const ADAPT_MIN_ERR_SAMPLES: u64 = 16;
+/// Tier hits required before the measured-dominance backoff engages.
+const ADAPT_MIN_HITS: u64 = 64;
 
 /// The three-tier duration estimator. See the [`crate::estimate`] module
 /// doc for the tier contract.
@@ -39,6 +47,7 @@ pub struct TieredEstimator {
     err_hist: LatencyHist,
     refine_period: u64,
     refine_top: usize,
+    refine_err_threshold_us: f64,
     obs_since_refine: u64,
 }
 
@@ -54,6 +63,7 @@ impl Clone for TieredEstimator {
             err_hist: self.err_hist.clone(),
             refine_period: self.refine_period,
             refine_top: self.refine_top,
+            refine_err_threshold_us: self.refine_err_threshold_us,
             obs_since_refine: self.obs_since_refine,
         }
     }
@@ -73,6 +83,7 @@ impl TieredEstimator {
             err_hist: LatencyHist::new(),
             refine_period: REFINE_PERIOD,
             refine_top: REFINE_TOP,
+            refine_err_threshold_us: REFINE_ERR_THRESHOLD_US,
             obs_since_refine: 0,
         }
     }
@@ -87,6 +98,41 @@ impl TieredEstimator {
     pub fn set_refine(&mut self, period: u64, top: usize) {
         self.refine_period = period;
         self.refine_top = top;
+    }
+
+    /// Prediction-error p99 (µs) above which refinement tightens
+    /// (`Policy::refine_err_threshold_us`).
+    pub fn set_refine_err_threshold_us(&mut self, threshold_us: f64) {
+        self.refine_err_threshold_us = threshold_us;
+    }
+
+    /// The refinement period actually in force, adapted to estimator
+    /// fidelity: while the prediction-error p99 exceeds the threshold the
+    /// base period quarters (mispriced variants reach the persistable
+    /// Tuned tier sooner); once the Measured tier answers the dominant
+    /// share (> 80%) of queries *and* the error p99 is back under the
+    /// threshold, the period stretches 4× — a converged estimator has
+    /// little left to promote. In between (or before enough samples
+    /// accumulate) the base period applies. Error wins over dominance:
+    /// a measured-dominated estimator that is still mispricing keeps the
+    /// tight cadence.
+    pub fn effective_refine_period(&self) -> u64 {
+        if self.refine_period == 0 {
+            return 0;
+        }
+        let err_high = self.err_hist.count() >= ADAPT_MIN_ERR_SAMPLES
+            && self.err_hist.quantile_us(0.99) > self.refine_err_threshold_us;
+        if err_high {
+            return (self.refine_period / 4).max(1);
+        }
+        let measured = self.measured_hits.load(Ordering::Relaxed);
+        let total = measured
+            + self.tuned_hits.load(Ordering::Relaxed)
+            + self.prior_hits.load(Ordering::Relaxed);
+        if total >= ADAPT_MIN_HITS && measured * 5 > total * 4 {
+            return self.refine_period.saturating_mul(4);
+        }
+        self.refine_period
     }
 
     /// Warm-start the Tuned tier for one variant (from a loaded
@@ -207,7 +253,7 @@ impl Estimator for TieredEstimator {
         }
         if self.refine_period > 0 {
             self.obs_since_refine += 1;
-            if self.obs_since_refine >= self.refine_period {
+            if self.obs_since_refine >= self.effective_refine_period() {
                 self.obs_since_refine = 0;
                 self.refine_hottest(self.refine_top);
             }
@@ -406,6 +452,40 @@ mod tests {
         assert!(exp
             .iter()
             .all(|&(_, _, t)| t == Tier::Measured), "both keys measured");
+    }
+
+    #[test]
+    fn refine_cadence_adapts_to_error_and_tier_mix() {
+        // fresh estimator: no samples, base cadence
+        let fresh = TieredEstimator::new(1.0);
+        assert_eq!(fresh.effective_refine_period(), REFINE_PERIOD);
+
+        // every observation misses its prediction by 10ms: err p99 blows
+        // the threshold, cadence quarters
+        let mut hot = TieredEstimator::new(1.0);
+        for g in 0..20 {
+            hot.observe(key(0, g, 4), 10_000.0, 0.0);
+        }
+        assert_eq!(hot.effective_refine_period(), REFINE_PERIOD / 4);
+        // a looser threshold relaxes it back to base
+        hot.set_refine_err_threshold_us(1e9);
+        assert_eq!(hot.effective_refine_period(), REFINE_PERIOD);
+
+        // accurate + measured-dominated: cadence backs off 4x
+        let mut calm = TieredEstimator::new(1.0);
+        let k = key(0, 0, 4);
+        for _ in 0..20 {
+            calm.observe(k, 500.0, 500.0); // predicted == observed, err 0
+        }
+        for _ in 0..100 {
+            let _ = calm.estimate_us(k, &|| 0.0);
+        }
+        assert_eq!(calm.effective_refine_period(), REFINE_PERIOD * 4);
+
+        // period 0 stays disabled regardless of fidelity
+        let mut off = calm.clone();
+        off.set_refine(0, 0);
+        assert_eq!(off.effective_refine_period(), 0);
     }
 
     #[test]

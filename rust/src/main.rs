@@ -16,7 +16,10 @@
 //!                     engine's Clock × LaunchStage matrix (BENCH_5.json);
 //!                     `--warm-start` runs the same trace cold and
 //!                     warm-started from a freshly written
-//!                     `artifacts/tuned.json` (BENCH_6.json)
+//!                     `artifacts/tuned.json` (BENCH_6.json);
+//!                     `--workload slo-mix` replays the class-skewed
+//!                     SLO-class trace and emits per-class attainment +
+//!                     weighted-share fairness error (BENCH_7.json)
 //! * `autotune`      — Table-1 style greedy-vs-collaborative search;
 //!                     `--save` persists the tuned estimates as the
 //!                     `artifacts/tuned.json` warm-start cache
@@ -26,6 +29,7 @@
 
 use anyhow::{bail, Context, Result};
 
+use vliw_jit::compiler::ir::SloClass;
 use vliw_jit::compiler::{autotune, cluster};
 use vliw_jit::estimate::{shape_class_label, TunedCache, TunedEntry};
 use vliw_jit::gpu::cost::CostModel;
@@ -43,7 +47,9 @@ use vliw_jit::util::cli::Args;
 use vliw_jit::util::json::Json;
 use vliw_jit::util::logging;
 use vliw_jit::util::stats::LatencyHist;
-use vliw_jit::workload::trace::{mixed_tenants, ArrivalKind, TenantSpec, Trace};
+use vliw_jit::workload::trace::{
+    mixed_tenants, slo_mix_tenants, ArrivalKind, TenantSpec, Trace,
+};
 
 fn main() -> Result<()> {
     let cmd = std::env::args().nth(1).unwrap_or_else(|| "help".into());
@@ -324,7 +330,7 @@ fn cmd_bench() -> Result<()> {
         .flag(
             "workload",
             "skewed",
-            "trace shape: 'skewed' (two-model hot/cold, exercises placement) or 'mixed' (bursty multi-SLO single model, the stream-prefix coalescing trajectory)",
+            "trace shape: 'skewed' (two-model hot/cold, exercises placement), 'mixed' (bursty multi-SLO single model, the stream-prefix coalescing trajectory) or 'slo-mix' (tenants cycling Critical/Standard/BestEffort with 4x load on the batch tier; emits per-class attainment + fairness as BENCH_7.json)",
         )
         .flag(
             "out",
@@ -353,13 +359,18 @@ fn cmd_bench() -> Result<()> {
     let frontend = p.get_bool("frontend");
     let engine_matrix = p.get_bool("engine-matrix");
     let warm_start = p.get_bool("warm-start");
+    let slo_mix = p.get("workload") == "slo-mix";
     if (frontend as u8) + (engine_matrix as u8) + (warm_start as u8) > 1 {
         bail!("--frontend, --engine-matrix and --warm-start are separate bench steps; pick one");
+    }
+    if slo_mix && (frontend || engine_matrix || warm_start) {
+        bail!("--workload slo-mix is its own bench step (BENCH_7); drop the other step flag");
     }
     let out = match p.get("out") {
         "" if frontend => "BENCH_4.json".to_string(),
         "" if engine_matrix => "BENCH_5.json".to_string(),
         "" if warm_start => "BENCH_6.json".to_string(),
+        "" if slo_mix => "BENCH_7.json".to_string(),
         "" => "BENCH_3.json".to_string(),
         o => o.to_string(),
     };
@@ -381,9 +392,15 @@ fn cmd_bench() -> Result<()> {
         // one bursty tenant per four: the PR-2 stream-prefix coalescing
         // signal (same_stream_rows / mean_pack trajectory)
         "mixed" => mixed_tenants(n, &["simnet"], rate),
-        other => bail!("unknown --workload '{other}' (valid: skewed, mixed)"),
+        // the SLO-class priority surface: classes cycle per tenant, the
+        // best-effort tier offers 4x the latency tiers' per-tenant rate
+        "slo-mix" => slo_mix_tenants(n, &["simnet"], rate),
+        other => bail!("unknown --workload '{other}' (valid: skewed, mixed, slo-mix)"),
     };
     let trace = Trace::generate(&tenants, per, seed);
+    if slo_mix {
+        return bench_slo_mix(&trace, &out);
+    }
     if warm_start {
         return bench_warm_start(&trace, &out);
     }
@@ -518,6 +535,96 @@ fn bench_frontend(trace: &Trace, speedup: f64, out: &str) -> Result<()> {
         .with_context(|| format!("write {out}"))?;
     println!("wrote {out}");
     Ok(())
+}
+
+/// The `bench --workload slo-mix` step (BENCH_7): the class-skewed trace
+/// (tenants cycling Critical/Standard/BestEffort, the batch tier offering
+/// 4× the latency tiers' per-tenant rate) replayed deterministically on
+/// the simulator backend, decomposed per SLO class. CI asserts the fields
+/// parse, critical attainment holds the BENCH_2 floor, and the
+/// best-effort tier still makes progress (bounded starvation).
+fn bench_slo_mix(trace: &Trace, out: &str) -> Result<()> {
+    let mut server = Server::new(SimBackend::default(), BatchPolicy::coalescing());
+    let report = server.replay(trace);
+    println!("{}", report.render());
+
+    let m = &report.metrics;
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("bench".to_string(), Json::Str("serve_slo_mix".to_string()));
+    o.insert("policy".to_string(), Json::Str(report.policy.to_string()));
+    report_core_json(m, &mut o);
+    for class in SloClass::ALL {
+        let c = m.class_metrics(class);
+        let name = class.name();
+        o.insert(
+            format!("{name}_attainment"),
+            Json::Num(m.class_attainment(class)),
+        );
+        o.insert(
+            format!("{name}_throughput_rps"),
+            Json::Num(m.class_throughput(class)),
+        );
+        o.insert(format!("{name}_completed"), Json::Num(c.completed() as f64));
+        o.insert(format!("{name}_dropped"), Json::Num(c.dropped as f64));
+        o.insert(
+            format!("{name}_p99_us"),
+            Json::Num(c.latency.quantile_us(0.99)),
+        );
+    }
+    o.insert(
+        "fairness_error".to_string(),
+        Json::Num(fairness_error(trace, m)),
+    );
+    std::fs::write(out, Json::Obj(o).to_string_compact())
+        .with_context(|| format!("write {out}"))?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// Weighted-share fairness error: within each SLO class, the
+/// total-variation distance between its tenants' *completed* shares and
+/// their *offered* shares (each tenant's weight is its offered load);
+/// the reported error is the worst class's. 0 means service inside every
+/// class divides exactly in proportion to offered load — no tenant can
+/// capture more than its weighted share of its class's service.
+fn fairness_error(trace: &Trace, m: &ServeMetrics) -> f64 {
+    let mut worst = 0.0f64;
+    for class in SloClass::ALL {
+        let tenants: Vec<&TenantSpec> = trace
+            .tenants
+            .iter()
+            .filter(|t| t.class == class)
+            .collect();
+        if tenants.len() < 2 {
+            continue;
+        }
+        let offered: Vec<f64> = tenants
+            .iter()
+            .map(|t| trace.of_tenant(t.id).count() as f64)
+            .collect();
+        let completed: Vec<f64> = tenants
+            .iter()
+            .map(|t| {
+                m.tenants
+                    .get(&t.id)
+                    .map(|tm| (tm.slo_hits + tm.slo_misses) as f64)
+                    .unwrap_or(0.0)
+            })
+            .collect();
+        let osum: f64 = offered.iter().sum();
+        let csum: f64 = completed.iter().sum();
+        if osum <= 0.0 || csum <= 0.0 {
+            continue;
+        }
+        let tv = offered
+            .iter()
+            .zip(&completed)
+            .map(|(of, c)| (of / osum - c / csum).abs())
+            .sum::<f64>()
+            / 2.0;
+        worst = worst.max(tv);
+    }
+    worst
 }
 
 /// Simulator backend whose *analytic prior* over-prices every launch by a

@@ -1,6 +1,14 @@
 //! Admission control: bounded per-model queues with a drop-oldest-deadline
 //! policy under overload (backpressure toward the client, §3's
 //! peak-provisioning discussion).
+//!
+//! Class-aware since the SLO-class refactor: critical and standard
+//! traffic keep the original pricing; best-effort requests are capped at
+//! a configurable share of the queue and are always shed once doomed
+//! (no empty-queue escape hatch — a best-effort client retries, it does
+//! not need a guaranteed late answer).
+
+use crate::compiler::ir::SloClass;
 
 /// Admission decision for an incoming request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -16,18 +24,29 @@ pub enum Admit {
 pub struct Admission {
     /// Max outstanding requests per model (queued + in flight).
     pub max_queue: usize,
+    /// Fraction of `max_queue` available to best-effort traffic: a
+    /// best-effort request is rejected once outstanding work reaches
+    /// `max_queue × be_queue_share`, reserving the rest of the queue for
+    /// critical/standard tenants under load.
+    pub be_queue_share: f64,
 }
 
 impl Default for Admission {
     fn default() -> Self {
-        Admission { max_queue: 256 }
+        Admission {
+            max_queue: 256,
+            be_queue_share: 0.5,
+        }
     }
 }
 
 impl Admission {
-    /// New controller.
+    /// New controller (default best-effort share).
     pub fn new(max_queue: usize) -> Self {
-        Admission { max_queue }
+        Admission {
+            max_queue,
+            ..Admission::default()
+        }
     }
 
     /// Decide for a group currently holding `queued` un-issued requests
@@ -58,6 +77,40 @@ impl Admission {
             return Admit::Reject;
         }
         Admit::Accept
+    }
+
+    /// Outstanding-work cap for a class: best-effort stops at its queue
+    /// share, everything else at `max_queue`.
+    pub fn cap_of(&self, class: SloClass) -> usize {
+        match class {
+            SloClass::BestEffort => {
+                ((self.max_queue as f64 * self.be_queue_share) as usize).max(1)
+            }
+            _ => self.max_queue,
+        }
+    }
+
+    /// Class-aware decision — the one both gates call. Critical and
+    /// standard reproduce [`Admission::decide`] exactly; best-effort is
+    /// capped at its queue share and doomed best-effort is always shed
+    /// (the empty-queue escape hatch is a latency-class courtesy).
+    pub fn decide_class(
+        &self,
+        class: SloClass,
+        queued: usize,
+        inflight: usize,
+        slack_after_drain_us: f64,
+    ) -> Admit {
+        if class == SloClass::BestEffort {
+            if queued + inflight >= self.cap_of(class) {
+                return Admit::Reject;
+            }
+            if slack_after_drain_us < 0.0 {
+                return Admit::Reject;
+            }
+            return Admit::Accept;
+        }
+        self.decide(queued, inflight, slack_after_drain_us)
     }
 }
 
@@ -92,5 +145,37 @@ mod tests {
         // ... and in-flight launches don't close the hatch: they are
         // already on the device, a doomed newcomer cannot delay them
         assert_eq!(a.decide(0, 3, -1.0), Admit::Accept);
+    }
+
+    #[test]
+    fn best_effort_capped_at_queue_share() {
+        let a = Admission::new(8); // BE cap = 8 × 0.5 = 4
+        assert_eq!(a.cap_of(SloClass::BestEffort), 4);
+        assert_eq!(a.cap_of(SloClass::Critical), 8);
+        // at 4 outstanding: BE sheds, critical/standard still accepted
+        assert_eq!(a.decide_class(SloClass::BestEffort, 3, 1, 1e9), Admit::Reject);
+        assert_eq!(a.decide_class(SloClass::Critical, 3, 1, 1e9), Admit::Accept);
+        assert_eq!(a.decide_class(SloClass::Standard, 3, 1, 1e9), Admit::Accept);
+        // under the share: BE accepted
+        assert_eq!(a.decide_class(SloClass::BestEffort, 2, 1, 1e9), Admit::Accept);
+    }
+
+    #[test]
+    fn doomed_best_effort_always_shed() {
+        let a = Admission::new(8);
+        // no empty-queue escape hatch for best-effort
+        assert_eq!(a.decide_class(SloClass::BestEffort, 0, 0, -1.0), Admit::Reject);
+        // the hatch survives for the latency classes
+        assert_eq!(a.decide_class(SloClass::Critical, 0, 0, -1.0), Admit::Accept);
+        assert_eq!(a.decide_class(SloClass::Standard, 0, 0, -1.0), Admit::Accept);
+    }
+
+    #[test]
+    fn standard_class_decision_is_the_legacy_decision() {
+        let a = Admission::new(4);
+        for (q, i, s) in [(0usize, 0usize, 10_000.0), (2, 2, 1e9), (2, 0, -1.0), (0, 3, -1.0)] {
+            assert_eq!(a.decide_class(SloClass::Standard, q, i, s), a.decide(q, i, s));
+            assert_eq!(a.decide_class(SloClass::Critical, q, i, s), a.decide(q, i, s));
+        }
     }
 }

@@ -90,7 +90,7 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::compiler::ir::{DispatchRequest, StreamId};
+use crate::compiler::ir::{DispatchRequest, SloClass, StreamId};
 use crate::compiler::jit::{JitCompiler, OpCompletion, PackRun, PendingLaunch};
 use crate::gpu::kernel::KernelDesc;
 use crate::placement::{
@@ -101,7 +101,7 @@ use crate::runtime::golden;
 use crate::serve::admission::{Admission, Admit};
 use crate::serve::frontend::{
     self, AdmissionView, FrontendGate, FrontendReport, GateExtras, GateRequest,
-    ViewCell, FRONTEND_EPOCH_US, STALE_VIEW_US,
+    TenantShaper, ViewCell, FRONTEND_EPOCH_US, STALE_VIEW_US,
 };
 use crate::serve::metrics::ServeMetrics;
 use crate::serve::server::{ModelBackend, ModelSlot, ServeExecutor, ServeReport};
@@ -771,6 +771,8 @@ pub struct Arrival {
     pub deadline_us: f64,
     /// Request id (row-payload seed).
     pub id: u64,
+    /// SLO class (from the issuing tenant's spec).
+    pub class: SloClass,
 }
 
 /// Lower a trace onto the run's group table, in arrival order.
@@ -784,6 +786,7 @@ pub fn trace_arrivals(trace: &Trace, index: &BTreeMap<String, u64>) -> Vec<Arriv
             group: index[&r.model],
             deadline_us: r.deadline_us,
             id: r.id,
+            class: r.class,
         })
         .collect()
 }
@@ -794,6 +797,7 @@ pub(crate) struct Incoming {
     pub tenant: u32,
     pub group: u64,
     pub slo_us: f64,
+    pub class: SloClass,
     pub arrival: Instant,
     pub row: Vec<f32>,
 }
@@ -806,6 +810,7 @@ pub(crate) struct Admitted {
     pub group: u64,
     pub tenant: u32,
     pub slo_us: f64,
+    pub class: SloClass,
     pub arrival: Instant,
     pub row: Vec<f32>,
 }
@@ -829,6 +834,7 @@ struct Accepted {
     group: u64,
     tenant: u32,
     slo_us: f64,
+    class: SloClass,
     arrival_us: f64,
     independent: bool,
     row: Vec<f32>,
@@ -841,6 +847,7 @@ pub(crate) struct AdmitReq {
     pub tenant: u32,
     pub arrival_us: f64,
     pub deadline_us: f64,
+    pub class: SloClass,
     pub independent: bool,
     /// Effective drain parallelism of the group's serving workers (speed-
     /// weighted replica count from [`drain_parallelism`]; 1.0 for the
@@ -869,9 +876,9 @@ fn intern_stream(
 fn record_completion(metrics: &mut ServeMetrics, c: &OpCompletion) {
     let tenant = c.op.tag as u32;
     if c.failed {
-        metrics.drop_request(tenant);
+        metrics.drop_request(tenant, c.op.class);
     } else {
-        metrics.complete(tenant, c.latency_us(), c.met_deadline);
+        metrics.complete(tenant, c.op.class, c.latency_us(), c.met_deadline);
     }
 }
 
@@ -893,10 +900,11 @@ fn submit_accepted<X: ModelBackend>(
     )
     .with_group(a.group)
     .with_tag(a.tenant as u64)
+    .with_class(a.class)
     .with_independent(a.independent);
     if jit.submit_at(req, a.arrival_us, a.row).is_none() {
         // window full: the backpressure backstop sheds the request
-        metrics.drop_request(a.tenant);
+        metrics.drop_request(a.tenant, a.class);
     }
 }
 
@@ -922,6 +930,7 @@ pub(crate) fn admit_request<X: ModelBackend>(
         tenant,
         arrival_us,
         deadline_us,
+        class,
         independent,
         parallelism,
         device_backlog_us,
@@ -941,12 +950,15 @@ pub(crate) fn admit_request<X: ModelBackend>(
         stream,
         independent,
         deadline_us,
+        class,
     };
     if gview.decide(admission, &greq, GateExtras::default(), jit.now_us) == Admit::Reject
     {
-        metrics.drop_request(tenant);
+        metrics.gate_decision(class, false);
+        metrics.drop_request(tenant, class);
         return;
     }
+    metrics.gate_decision(class, true);
     submit_accepted(
         jit,
         metrics,
@@ -956,6 +968,7 @@ pub(crate) fn admit_request<X: ModelBackend>(
             group,
             tenant,
             slo_us: deadline_us - arrival_us,
+            class,
             arrival_us,
             independent,
             row,
@@ -974,6 +987,7 @@ fn frontend_loop(
     acc_tx: mpsc::Sender<FromFrontend>,
     cell: Arc<ViewCell>,
     admission: Admission,
+    mut shaper: TenantShaper,
     groups: usize,
     independent: bool,
     t0: Instant,
@@ -998,12 +1012,21 @@ fn frontend_loop(
                 let arrival_us =
                     inc.arrival.saturating_duration_since(t0).as_secs_f64() * 1e6;
                 let stream = gate.intern(inc.tenant, inc.group);
+                // the token bucket is consulted before pricing: a shaped
+                // request never reaches the scheduler, so a saturating
+                // tenant is invisible to everyone else's admission prices
+                let shaped = !shaper.admit(inc.tenant, now_us);
                 let greq = GateRequest {
                     stream,
                     independent,
                     deadline_us: arrival_us + inc.slo_us,
+                    class: inc.class,
                 };
-                let decision = gate.decide(&view, inc.group, &greq, now_us);
+                let decision = if shaped {
+                    Admit::Reject
+                } else {
+                    gate.decide(&view, inc.group, &greq, now_us)
+                };
                 report.decisions += 1;
                 report
                     .admission_latency
@@ -1020,11 +1043,19 @@ fn frontend_loop(
                             group: inc.group,
                             tenant: inc.tenant,
                             slo_us: inc.slo_us,
+                            class: inc.class,
                             arrival: inc.arrival,
                             row: inc.row,
                         }))
                         .is_ok();
-                if !accepted {
+                let ci = inc.class.index();
+                if accepted {
+                    report.accepts_by_class[ci] += 1;
+                } else {
+                    report.rejects_by_class[ci] += 1;
+                    if shaped {
+                        report.shaped_by_class[ci] += 1;
+                    }
                     *report.drops.entry(inc.tenant).or_insert(0) += 1;
                 }
             }
@@ -1052,6 +1083,10 @@ fn frontend_loop(
 pub struct EngineConfig {
     /// Admission policy (both gates).
     pub admission: Admission,
+    /// Per-tenant rate limits: tenant → (rate req/s, burst). Applied by
+    /// whichever gate owns admission (frontend stage or sync gate) via a
+    /// [`TenantShaper`]; tenants without an entry pass unshaped.
+    pub tenant_rates: BTreeMap<u32, (f64, f64)>,
     /// Mark requests independent within their stream (stateless serving).
     pub independent_streams: bool,
     /// Run admission on the dedicated frontend thread (wall clock only;
@@ -1073,6 +1108,11 @@ pub struct Engine<X: ModelBackend, C: Clock, S: LaunchStage<X>> {
     placement: Option<Placement>,
     slots: Vec<ModelSlot>,
     admission: Admission,
+    /// Per-tenant rate limits (rebuilt into the frontend stage's own
+    /// shaper when admission moves to that thread).
+    tenant_rates: BTreeMap<u32, (f64, f64)>,
+    /// The sync gate's shaper (virtual + wall-sync paths).
+    shaper: TenantShaper,
     independent: bool,
     frontend: bool,
     policy_name: &'static str,
@@ -1136,6 +1176,8 @@ where
             placement,
             slots,
             admission: cfg.admission,
+            shaper: TenantShaper::from_rates(&cfg.tenant_rates),
+            tenant_rates: cfg.tenant_rates,
             independent: cfg.independent_streams,
             frontend: cfg.frontend,
             policy_name: cfg.policy,
@@ -1215,7 +1257,7 @@ where
         debug_assert!(!self.clock.is_virtual(), "wall run needs the wall clock");
         let t0 = self.clock.origin();
         let d_ins: Vec<usize> = self.slots.iter().map(|s| s.d_in).collect();
-        let gen_reqs: Vec<(f64, u32, u64, f64, u64)> = arrivals
+        let gen_reqs: Vec<(f64, u32, u64, f64, u64, SloClass)> = arrivals
             .iter()
             .map(|a| {
                 (
@@ -1224,13 +1266,14 @@ where
                     a.group,
                     a.deadline_us - a.at_us,
                     a.id,
+                    a.class,
                 )
             })
             .collect();
         let (tx, rx) = mpsc::channel::<Incoming>();
         let gen = std::thread::spawn(move || {
             let g0 = Instant::now();
-            for (at_us, tenant, group, slo, id) in gen_reqs {
+            for (at_us, tenant, group, slo, id, class) in gen_reqs {
                 let target = Duration::from_micros(at_us as u64);
                 let elapsed = g0.elapsed();
                 if target > elapsed {
@@ -1241,6 +1284,7 @@ where
                     tenant,
                     group,
                     slo_us: slo,
+                    class,
                     arrival: Instant::now(),
                     row: golden::gen_hash01(d_in, id.wrapping_mul(7919)),
                 });
@@ -1252,6 +1296,7 @@ where
             let cell = ViewCell::new(self.build_view(0));
             let fe_cell = Arc::clone(&cell);
             let fe_admission = self.admission.clone();
+            let fe_shaper = TenantShaper::from_rates(&self.tenant_rates);
             let n_groups = self.slots.len();
             let independent = self.independent;
             let stage = Stage::spawn("vliw-frontend", move || {
@@ -1260,6 +1305,7 @@ where
                     acc_tx,
                     fe_cell,
                     fe_admission,
+                    fe_shaper,
                     n_groups,
                     independent,
                     t0,
@@ -1343,7 +1389,7 @@ where
             *next += 1;
             let row =
                 golden::gen_hash01(self.slots[a.group as usize].d_in, a.id.wrapping_mul(7919));
-            self.admit_sync(a.group, a.tenant, a.at_us, a.deadline_us, row);
+            self.admit_sync(a.group, a.tenant, a.class, a.at_us, a.deadline_us, row);
         }
     }
 
@@ -1380,6 +1426,7 @@ where
                 self.admit_sync(
                     inc.group,
                     inc.tenant,
+                    inc.class,
                     arrival_us,
                     arrival_us + inc.slo_us,
                     inc.row,
@@ -1430,6 +1477,7 @@ where
                                 group: adm.group,
                                 tenant: adm.tenant,
                                 slo_us: adm.slo_us,
+                                class: adm.class,
                                 arrival_us,
                                 independent: self.independent,
                                 row: adm.row,
@@ -1450,10 +1498,19 @@ where
         &mut self,
         group: u64,
         tenant: u32,
+        class: SloClass,
         arrival_us: f64,
         deadline_us: f64,
         row: Vec<f32>,
     ) {
+        // the sync gate owns the shaper here — same contract as the
+        // frontend stage: a shaped request is rejected before pricing.
+        // Clocked on the JIT clock so the same bucket works under the
+        // virtual and wall clocks (both advance it before draining).
+        if !self.shaper.admit(tenant, self.jit.now_us) {
+            self.metrics.shaped_request(tenant, class);
+            return;
+        }
         let (parallelism, device_backlog_us) =
             self.stage
                 .gate_inputs(self.placement.as_ref(), group, self.clock.now_us());
@@ -1468,6 +1525,7 @@ where
                 tenant,
                 arrival_us,
                 deadline_us,
+                class,
                 independent: self.independent,
                 parallelism,
                 device_backlog_us,
@@ -1635,6 +1693,25 @@ mod tests {
             parallelism: f64,
             device_backlog_us: Option<f64>,
         ) {
+            self.admit_class(
+                tenant,
+                SloClass::Standard,
+                deadline_us,
+                independent,
+                parallelism,
+                device_backlog_us,
+            );
+        }
+
+        fn admit_class(
+            &mut self,
+            tenant: u32,
+            class: SloClass,
+            deadline_us: f64,
+            independent: bool,
+            parallelism: f64,
+            device_backlog_us: Option<f64>,
+        ) {
             admit_request(
                 &mut self.jit,
                 &mut self.streams,
@@ -1646,6 +1723,7 @@ mod tests {
                     tenant,
                     arrival_us: 0.0,
                     deadline_us,
+                    class,
                     independent,
                     parallelism,
                     device_backlog_us,
@@ -1793,6 +1871,35 @@ mod tests {
         g.admit_with(10, 1_500.0, true, 1.25, None);
         assert_eq!(g.drops(), 1, "slow replica must not count as a full worker");
         assert_eq!(g.jit.window.pending_in_group(0), 5);
+    }
+
+    #[test]
+    fn sync_gate_decides_per_class_and_counts_decisions() {
+        // the same doomed deadline (negative slack into an empty queue)
+        // is a best-effort shed but a latency-class accept — and both
+        // decisions land in the per-class decision counters
+        let mut backend = SimBackend::default();
+        let mut g = Gate::new(&mut backend, &BatchPolicy::coalescing());
+        g.admit_class(0, SloClass::BestEffort, 10.0, true, 1.0, None);
+        assert_eq!(g.drops(), 1, "doomed best-effort has no escape hatch");
+        assert_eq!(g.jit.window.pending_in_group(0), 0);
+        g.admit_class(1, SloClass::Critical, 10.0, true, 1.0, None);
+        assert_eq!(g.drops(), 1, "critical keeps the empty-queue hatch");
+        assert_eq!(g.jit.window.pending_in_group(0), 1);
+        let be = g.metrics.class_metrics(SloClass::BestEffort);
+        assert_eq!((be.accepts, be.rejects), (0, 1));
+        let crit = g.metrics.class_metrics(SloClass::Critical);
+        assert_eq!((crit.accepts, crit.rejects), (1, 0));
+    }
+
+    #[test]
+    fn submitted_request_carries_its_class_into_the_window() {
+        let mut backend = SimBackend::default();
+        let mut g = Gate::new(&mut backend, &BatchPolicy::coalescing());
+        g.admit_class(0, SloClass::Critical, 1e9, true, 1.0, None);
+        let ready = g.jit.window.ready();
+        let op = ready.first().expect("submitted op");
+        assert_eq!(op.class, SloClass::Critical);
     }
 
     fn placement_on(topo: DeviceTopology, groups: u64) -> Placement {

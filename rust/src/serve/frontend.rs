@@ -97,12 +97,35 @@
 //! path, just built synchronously from live state — the two gates cannot
 //! disagree on identical state (pinned by
 //! `prop_admission_view_matches_sync_gate`).
+//!
+//! # The SLO-class contract at the gate
+//!
+//! Each [`GateRequest`] carries its tenant's [`SloClass`]; the shared
+//! pricing path ([`GroupView::decide`] →
+//! [`Admission::decide_class`](crate::serve::admission::Admission::decide_class))
+//! is class-aware, so sync-gate/view equivalence holds *per class* (the
+//! PR 4 property, re-pinned per class):
+//!
+//! - **Critical / Standard** keep the original pricing bit-for-bit.
+//! - **Best-effort sheds first**: capped at a share of `max_queue`
+//!   (`Admission::be_queue_share`), always shed once doomed, and — on the
+//!   frontend path only — rejected outright while the published view is
+//!   older than [`STALE_VIEW_US`] (a wedged scheduler sheds batch traffic
+//!   before it prices anything optimistically; the sync gate never holds
+//!   a stale view, so equivalence on identical fresh state is intact).
+//! - **Rate-limit accounting**: per-tenant token buckets
+//!   ([`TenantShaper`]) refill continuously at `rate/s` up to `burst`,
+//!   clocked by the caller's `now_us` so the same shaper works under the
+//!   wall and virtual clocks. A request that finds no token is rejected
+//!   *before* pricing and counted as a per-tenant drop — shaped traffic
+//!   never reaches the scheduler, which is what makes a saturating tenant
+//!   invisible to everyone else's admission prices.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::compiler::ir::StreamId;
+use crate::compiler::ir::{SloClass, StreamId};
 use crate::compiler::jit::JitCompiler;
 use crate::serve::admission::{Admission, Admit};
 use crate::serve::server::{ModelBackend, ServeExecutor};
@@ -135,6 +158,8 @@ pub struct GateRequest {
     pub independent: bool,
     /// Absolute deadline, µs.
     pub deadline_us: f64,
+    /// The issuing tenant's SLO class (class-aware admission).
+    pub class: SloClass,
 }
 
 /// The frontend's accepted-but-not-yet-drained corrections folded into a
@@ -260,7 +285,10 @@ impl GroupView {
     }
 
     /// The gate decision on this state — the ONE implementation behind
-    /// both the synchronous gate and the frontend stage.
+    /// both the synchronous gate and the frontend stage. Class-aware:
+    /// the drain estimate is identical for every class (one queue, one
+    /// price), the *decision* on it is per class
+    /// ([`Admission::decide_class`]).
     pub fn decide(
         &self,
         admission: &Admission,
@@ -270,7 +298,12 @@ impl GroupView {
     ) -> Admit {
         let est = self.drain_est_us(req.stream, req.independent, extras);
         let slack = req.deadline_us - now_us - est;
-        admission.decide(self.pending + extras.queued as usize, self.inflight, slack)
+        admission.decide_class(
+            req.class,
+            self.pending + extras.queued as usize,
+            self.inflight,
+            slack,
+        )
     }
 }
 
@@ -506,6 +539,14 @@ impl FrontendGate {
         };
         let s = req.stream.0;
         self.active.insert(s);
+        // best-effort sheds first under a stale view: a wedged scheduler
+        // means every price in the snapshot is optimistic — batch traffic
+        // absorbs the uncertainty so latency classes keep today's pricing
+        if req.class == SloClass::BestEffort
+            && view.published.elapsed().as_secs_f64() * 1e6 > STALE_VIEW_US
+        {
+            return Admit::Reject;
+        }
         let extras = GateExtras {
             queued: self.in_channel(view, group) as u32,
             own: self.in_channel_of_stream(view, s),
@@ -530,6 +571,82 @@ impl FrontendGate {
     }
 }
 
+/// A continuously-refilling token bucket, clocked by the caller's `now_us`
+/// so the same shaper works under both the wall and virtual clocks.
+#[derive(Debug, Clone)]
+pub struct TokenBucket {
+    /// Refill rate, tokens (= requests) per second.
+    pub rate_per_s: f64,
+    /// Bucket capacity (burst allowance), tokens.
+    pub burst: f64,
+    tokens: f64,
+    last_us: f64,
+}
+
+impl TokenBucket {
+    /// New bucket, born full (a tenant's first burst is always admitted).
+    pub fn new(rate_per_s: f64, burst: f64) -> Self {
+        TokenBucket {
+            rate_per_s,
+            burst: burst.max(1.0),
+            tokens: burst.max(1.0),
+            last_us: 0.0,
+        }
+    }
+
+    /// Take one token at `now_us`; false = rate-limited. Time only ever
+    /// credits forward (a reordered timestamp never drains the bucket).
+    pub fn try_take(&mut self, now_us: f64) -> bool {
+        let dt = (now_us - self.last_us).max(0.0);
+        self.last_us = self.last_us.max(now_us);
+        self.tokens = (self.tokens + dt * self.rate_per_s / 1e6).min(self.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Per-tenant traffic shaping: one token bucket per configured tenant.
+/// Tenants without a limit pass unshaped. Shared by the synchronous gate
+/// and the frontend stage (whichever owns admission owns the shaper).
+#[derive(Debug, Clone, Default)]
+pub struct TenantShaper {
+    buckets: BTreeMap<u32, TokenBucket>,
+}
+
+impl TenantShaper {
+    /// A shaper over a tenant → (rate_per_s, burst) table — how the
+    /// engine hands the same limits to whichever gate owns admission.
+    pub fn from_rates(rates: &BTreeMap<u32, (f64, f64)>) -> Self {
+        let mut s = TenantShaper::default();
+        for (&tenant, &(rate_per_s, burst)) in rates {
+            s.set_limit(tenant, rate_per_s, burst);
+        }
+        s
+    }
+
+    /// Limit `tenant` to `rate_per_s` requests/s with a `burst` allowance.
+    pub fn set_limit(&mut self, tenant: u32, rate_per_s: f64, burst: f64) {
+        self.buckets.insert(tenant, TokenBucket::new(rate_per_s, burst));
+    }
+
+    /// True when no tenant is shaped (the common single-class setup).
+    pub fn is_empty(&self) -> bool {
+        self.buckets.is_empty()
+    }
+
+    /// Admit or rate-limit one request from `tenant` at `now_us`.
+    pub fn admit(&mut self, tenant: u32, now_us: f64) -> bool {
+        match self.buckets.get_mut(&tenant) {
+            Some(b) => b.try_take(now_us),
+            None => true,
+        }
+    }
+}
+
 /// What the frontend thread hands back at shutdown, merged into the run's
 /// `ServeMetrics` by the scheduler thread.
 #[derive(Debug, Default)]
@@ -542,6 +659,13 @@ pub struct FrontendReport {
     pub decisions: u64,
     /// Decisions made on a snapshot older than [`STALE_VIEW_US`].
     pub stale_decisions: u64,
+    /// Accepts per SLO class, indexed by [`SloClass::index`].
+    pub accepts_by_class: [u64; 3],
+    /// Rejects per SLO class (shaped requests included).
+    pub rejects_by_class: [u64; 3],
+    /// Requests the per-tenant token bucket turned away before pricing
+    /// (a subset of `rejects_by_class`).
+    pub shaped_by_class: [u64; 3],
 }
 
 #[cfg(test)]
@@ -577,6 +701,7 @@ mod tests {
             stream: StreamId(stream),
             independent: true,
             deadline_us,
+            class: SloClass::Standard,
         }
     }
 
@@ -626,6 +751,7 @@ mod tests {
             stream,
             independent: false,
             deadline_us,
+            class: SloClass::Standard,
         };
         for _ in 0..6 {
             assert_eq!(gate.decide(&v, 0, &dep(a, 1e9), 0.0), Admit::Accept);
@@ -761,6 +887,53 @@ mod tests {
                 sched_drained.len()
             );
         }
+    }
+
+    #[test]
+    fn best_effort_capped_below_latency_classes_at_the_gate() {
+        // one pricing path, per-class decisions: with the queue at the BE
+        // share, a best-effort request sheds while a standard one passes
+        let mut gate = FrontendGate::new(Admission::new(8), 1); // BE cap 4
+        let v = view(gview(4, 0));
+        let s = gate.intern(0, 0);
+        let be = GateRequest {
+            class: SloClass::BestEffort,
+            ..req(s.0, 1e9)
+        };
+        assert_eq!(gate.decide(&v, 0, &be, 0.0), Admit::Reject);
+        assert_eq!(gate.decide(&v, 0, &req(s.0, 1e9), 0.0), Admit::Accept);
+        let crit = GateRequest {
+            class: SloClass::Critical,
+            ..req(s.0, 1e9)
+        };
+        assert_eq!(gate.decide(&v, 0, &crit, 0.0), Admit::Accept);
+    }
+
+    #[test]
+    fn token_bucket_shapes_a_saturating_tenant() {
+        // 2 req/s with burst 2: the burst is admitted, the third request
+        // at t=0 is shaped; half a second later one token has refilled
+        let mut shaper = TenantShaper::default();
+        shaper.set_limit(7, 2.0, 2.0);
+        assert!(shaper.admit(7, 0.0));
+        assert!(shaper.admit(7, 0.0));
+        assert!(!shaper.admit(7, 0.0), "burst exhausted");
+        assert!(shaper.admit(7, 500_000.0), "refilled at rate");
+        assert!(!shaper.admit(7, 500_000.0));
+        // unshaped tenants always pass
+        for _ in 0..100 {
+            assert!(shaper.admit(8, 0.0));
+        }
+    }
+
+    #[test]
+    fn token_bucket_never_credits_backwards_time() {
+        let mut b = TokenBucket::new(1.0, 1.0);
+        assert!(b.try_take(1_000_000.0));
+        // an out-of-order earlier timestamp must not refill the bucket
+        assert!(!b.try_take(0.0));
+        assert!(!b.try_take(1_500_000.0), "half a token only");
+        assert!(b.try_take(2_000_000.0));
     }
 
     #[test]

@@ -1,9 +1,16 @@
 //! Serving metrics: per-tenant latency distributions, SLO attainment,
 //! batch occupancy, device-busy accounting, and the JIT core's per-launch
 //! pack statistics (mean pack, padding efficiency, evictions).
+//!
+//! Since the SLO-class refactor every attainment/admission/latency
+//! counter is also decomposed per [`SloClass`] ([`ServeMetrics::classes`],
+//! indexed by [`SloClass::index`]) — the per-class numbers are what the
+//! `slo-mix` bench asserts on (critical attainment must survive a
+//! saturating best-effort tenant).
 
 use std::collections::BTreeMap;
 
+use crate::compiler::ir::SloClass;
 use crate::compiler::jit::{JitStats, LaunchRecord};
 use crate::estimate::EstimatorStats;
 use crate::serve::frontend::FrontendReport;
@@ -39,6 +46,50 @@ impl TenantMetrics {
     }
 }
 
+/// Metrics for one SLO class — the same attainment contract as
+/// [`TenantMetrics`] plus the gate-decision counters the class contract
+/// hangs on (how much of a class was admitted, shed, or rate-shaped).
+#[derive(Debug, Clone, Default)]
+pub struct ClassMetrics {
+    /// Latency distribution of completed requests, µs.
+    pub latency: LatencyHist,
+    /// Requests meeting their deadline.
+    pub slo_hits: u64,
+    /// Requests missing their deadline.
+    pub slo_misses: u64,
+    /// Requests dropped (gate rejects, window sheds, failed executions).
+    pub dropped: u64,
+    /// Admission-gate accepts.
+    pub accepts: u64,
+    /// Admission-gate rejects (shaped requests included).
+    pub rejects: u64,
+    /// Requests rejected by the per-tenant token bucket *before* pricing
+    /// (a subset of `rejects`).
+    pub shaped: u64,
+}
+
+impl ClassMetrics {
+    /// SLO attainment in [0,1] (dropped requests count as misses).
+    pub fn attainment(&self) -> f64 {
+        let total = self.slo_hits + self.slo_misses + self.dropped;
+        if total == 0 {
+            1.0
+        } else {
+            self.slo_hits as f64 / total as f64
+        }
+    }
+
+    /// Completed request count.
+    pub fn completed(&self) -> u64 {
+        self.slo_hits + self.slo_misses
+    }
+
+    /// Gate decisions recorded against this class.
+    pub fn decisions(&self) -> u64 {
+        self.accepts + self.rejects
+    }
+}
+
 /// Per-device accounting for placed (multi-device) runs: which worker
 /// executed how much. Indexed by pool-worker id in
 /// [`ServeMetrics::devices`]; empty for single-device drive modes.
@@ -68,6 +119,8 @@ impl DeviceMetrics {
 pub struct ServeMetrics {
     /// Per-tenant metrics.
     pub tenants: BTreeMap<u32, TenantMetrics>,
+    /// Per-class metrics, indexed by [`SloClass::index`].
+    pub classes: [ClassMetrics; 3],
     /// Histogram of executed batch occupancy (real rows, not padding).
     pub batch_occupancy: BTreeMap<u32, u64>,
     /// Executed batches.
@@ -124,20 +177,63 @@ pub struct ServeMetrics {
 }
 
 impl ServeMetrics {
-    /// Record one completed request.
-    pub fn complete(&mut self, tenant: u32, latency_us: f64, met: bool) {
+    /// Record one completed request against its tenant and class.
+    pub fn complete(&mut self, tenant: u32, class: SloClass, latency_us: f64, met: bool) {
         let t = self.tenants.entry(tenant).or_default();
         t.latency.record_us(latency_us);
+        let c = &mut self.classes[class.index()];
+        c.latency.record_us(latency_us);
         if met {
             t.slo_hits += 1;
+            c.slo_hits += 1;
         } else {
             t.slo_misses += 1;
+            c.slo_misses += 1;
         }
     }
 
-    /// Record a dropped request.
-    pub fn drop_request(&mut self, tenant: u32) {
+    /// Record a dropped request against its tenant and class.
+    pub fn drop_request(&mut self, tenant: u32, class: SloClass) {
         self.tenants.entry(tenant).or_default().dropped += 1;
+        self.classes[class.index()].dropped += 1;
+    }
+
+    /// Record a request the per-tenant token bucket rejected before
+    /// pricing: a drop, a gate reject, and a shaped count all at once.
+    pub fn shaped_request(&mut self, tenant: u32, class: SloClass) {
+        self.drop_request(tenant, class);
+        let c = &mut self.classes[class.index()];
+        c.rejects += 1;
+        c.shaped += 1;
+    }
+
+    /// Record one admission-gate decision against its class.
+    pub fn gate_decision(&mut self, class: SloClass, accepted: bool) {
+        let c = &mut self.classes[class.index()];
+        if accepted {
+            c.accepts += 1;
+        } else {
+            c.rejects += 1;
+        }
+    }
+
+    /// One class's metrics.
+    pub fn class_metrics(&self, class: SloClass) -> &ClassMetrics {
+        &self.classes[class.index()]
+    }
+
+    /// One class's SLO attainment (1.0 when the class saw no traffic).
+    pub fn class_attainment(&self, class: SloClass) -> f64 {
+        self.classes[class.index()].attainment()
+    }
+
+    /// One class's goodput in requests/s over the span.
+    pub fn class_throughput(&self, class: SloClass) -> f64 {
+        if self.span_us <= 0.0 {
+            0.0
+        } else {
+            self.classes[class.index()].completed() as f64 / (self.span_us / 1e6)
+        }
     }
 
     /// Record one executed batch (useful rows, padded variant size, µs).
@@ -181,6 +277,16 @@ impl ServeMetrics {
     pub fn merge_frontend(&mut self, rep: &FrontendReport) {
         for (tenant, n) in &rep.drops {
             self.tenants.entry(*tenant).or_default().dropped += n;
+        }
+        for class in SloClass::ALL {
+            let i = class.index();
+            let c = &mut self.classes[i];
+            c.accepts += rep.accepts_by_class[i];
+            c.rejects += rep.rejects_by_class[i];
+            c.shaped += rep.shaped_by_class[i];
+            // a frontend reject never reaches the engine: it is this
+            // class's drop as well as its reject
+            c.dropped += rep.rejects_by_class[i];
         }
         self.admission_latency.merge(&rep.admission_latency);
         self.admission_decisions += rep.decisions;
@@ -309,6 +415,25 @@ impl ServeMetrics {
                 ));
             }
         }
+        if self.classes.iter().any(|c| c.completed() + c.dropped + c.decisions() > 0) {
+            s.push_str("class        n     p50(ms)  p99(ms)  attain  drops  shaped\n");
+            for class in SloClass::ALL {
+                let c = &self.classes[class.index()];
+                if c.completed() + c.dropped + c.decisions() == 0 {
+                    continue;
+                }
+                s.push_str(&format!(
+                    "{:<11} {:<6} {:<8.2} {:<8.2} {:<7.3} {:<6} {}\n",
+                    class.name(),
+                    c.completed(),
+                    c.latency.quantile_us(0.5) / 1e3,
+                    c.latency.quantile_us(0.99) / 1e3,
+                    c.attainment(),
+                    c.dropped,
+                    c.shaped,
+                ));
+            }
+        }
         s.push_str("tenant     n     p50(ms)  p99(ms)  max(ms)  attain  drops\n");
         for (id, t) in &self.tenants {
             s.push_str(&format!(
@@ -333,9 +458,9 @@ mod tests {
     #[test]
     fn attainment_counts_drops_as_misses() {
         let mut m = ServeMetrics::default();
-        m.complete(0, 1000.0, true);
-        m.complete(0, 1000.0, true);
-        m.drop_request(0);
+        m.complete(0, SloClass::Standard, 1000.0, true);
+        m.complete(0, SloClass::Standard, 1000.0, true);
+        m.drop_request(0, SloClass::Standard);
         let t = &m.tenants[&0];
         assert!((t.attainment() - 2.0 / 3.0).abs() < 1e-9);
         assert!((m.overall_attainment() - 2.0 / 3.0).abs() < 1e-9);
@@ -398,7 +523,7 @@ mod tests {
     #[test]
     fn render_omits_devices_for_single_device_runs() {
         let mut m = ServeMetrics::default();
-        m.complete(0, 1_000.0, true);
+        m.complete(0, SloClass::Standard, 1_000.0, true);
         m.span_us = 1e6;
         assert!(!m.render().contains("device 0"));
         assert!(!m.render().contains("placement:"));
@@ -408,7 +533,7 @@ mod tests {
     fn throughput_and_duty() {
         let mut m = ServeMetrics::default();
         for _ in 0..10 {
-            m.complete(1, 500.0, true);
+            m.complete(1, SloClass::Standard, 500.0, true);
         }
         m.busy_us = 400_000.0;
         m.span_us = 1_000_000.0;
@@ -419,7 +544,7 @@ mod tests {
     #[test]
     fn render_contains_tenants() {
         let mut m = ServeMetrics::default();
-        m.complete(7, 2_000.0, false);
+        m.complete(7, SloClass::Standard, 2_000.0, false);
         m.span_us = 1e6;
         let r = m.render();
         assert!(r.contains("tenant"));
@@ -451,9 +576,49 @@ mod tests {
     }
 
     #[test]
+    fn class_decomposition_tracks_complete_drop_and_shape() {
+        let mut m = ServeMetrics::default();
+        m.complete(0, SloClass::Critical, 1_000.0, true);
+        m.complete(1, SloClass::Critical, 2_000.0, false);
+        m.drop_request(2, SloClass::BestEffort);
+        m.shaped_request(2, SloClass::BestEffort);
+        m.gate_decision(SloClass::Critical, true);
+        m.span_us = 1e6;
+        let crit = m.class_metrics(SloClass::Critical);
+        assert_eq!(crit.completed(), 2);
+        assert_eq!(crit.accepts, 1);
+        assert!((m.class_attainment(SloClass::Critical) - 0.5).abs() < 1e-9);
+        let be = m.class_metrics(SloClass::BestEffort);
+        assert_eq!(be.dropped, 2, "shaped requests are drops too");
+        assert_eq!(be.shaped, 1);
+        assert_eq!(be.rejects, 1);
+        assert_eq!(m.class_attainment(SloClass::Standard), 1.0, "idle class");
+        assert!((m.class_throughput(SloClass::Critical) - 2.0).abs() < 1e-9);
+        let r = m.render();
+        assert!(r.contains("critical"), "{r}");
+        assert!(r.contains("best_effort"), "{r}");
+        assert!(!r.contains("standard"), "idle class stays out of the table: {r}");
+    }
+
+    #[test]
+    fn merge_frontend_folds_class_counters() {
+        let mut m = ServeMetrics::default();
+        let mut rep = FrontendReport::default();
+        rep.accepts_by_class[SloClass::Critical.index()] = 3;
+        rep.rejects_by_class[SloClass::BestEffort.index()] = 2;
+        rep.shaped_by_class[SloClass::BestEffort.index()] = 1;
+        m.merge_frontend(&rep);
+        assert_eq!(m.class_metrics(SloClass::Critical).accepts, 3);
+        let be = m.class_metrics(SloClass::BestEffort);
+        assert_eq!(be.rejects, 2);
+        assert_eq!(be.dropped, 2, "frontend rejects never reach the engine");
+        assert_eq!(be.shaped, 1);
+    }
+
+    #[test]
     fn render_shows_estimator_tier_hits_when_present() {
         let mut m = ServeMetrics::default();
-        m.complete(0, 1_000.0, true);
+        m.complete(0, SloClass::Standard, 1_000.0, true);
         m.span_us = 1e6;
         assert!(!m.render().contains("estimator:"), "no line before hits");
         m.estimator.measured_hits = 5;
@@ -467,7 +632,7 @@ mod tests {
     #[test]
     fn render_shows_jit_stats_when_present() {
         let mut m = ServeMetrics::default();
-        m.complete(0, 1_000.0, true);
+        m.complete(0, SloClass::Standard, 1_000.0, true);
         m.span_us = 1e6;
         assert!(!m.render().contains("jit:"), "no jit line before launches");
         m.jit.launches = 4;

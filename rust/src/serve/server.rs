@@ -52,7 +52,9 @@ use crate::estimate::{
 };
 use crate::gpu::device::DeviceSpec;
 use crate::gpu::kernel::KernelDesc;
-use crate::placement::{DeviceTopology, PlacementTable, RebalanceConfig, Rebalancer};
+use crate::placement::{
+    relative_speed, DeviceTopology, PlacementTable, RebalanceConfig, Rebalancer,
+};
 use crate::runtime::executor::{ModelExec, PjrtExecutor};
 use crate::serve::admission::Admission;
 use crate::serve::engine::{
@@ -310,10 +312,26 @@ impl<B: ModelBackend> ServeExecutor<B> {
         self.est.set_alpha(alpha);
     }
 
+    /// Configure the Tuned-tier refinement cadence from policy
+    /// (`Policy::{refine_period, refine_top, refine_err_threshold_us}`):
+    /// the estimator quarters the period while its error p99 exceeds the
+    /// threshold and backs off once the Measured tier dominates.
+    pub fn set_refine(&mut self, period: u64, top: usize, err_threshold_us: f64) {
+        self.est.set_refine(period, top);
+        self.est.set_refine_err_threshold_us(err_threshold_us);
+    }
+
     /// Warm-start the Tuned tier from a loaded artifact cache: every
     /// (model, device class, padded variant) this run could price gets
     /// its cached estimate, so admission and the scheduler see realistic
     /// costs before the first launch completes.
+    ///
+    /// When a variant has no entry for its own device class, a matching
+    /// entry tuned on *another* class seeds it instead, scaled by the two
+    /// classes' relative speeds (see [`cross_device_estimate`]) — a fleet
+    /// that already tuned its v100s prices a freshly added t4 from the
+    /// v100 numbers rather than falling all the way back to the analytic
+    /// prior.
     pub fn warm_start(&mut self, cache: &TunedCache) {
         for (gi, slot) in self.models.iter().enumerate() {
             let mut padded_set: BTreeSet<u32> = BTreeSet::new();
@@ -322,7 +340,10 @@ impl<B: ModelBackend> ServeExecutor<B> {
             }
             for (class, cname) in self.class_names.iter().enumerate() {
                 for &padded in &padded_set {
-                    if let Some(est_us) = cache.get(&slot.name, cname, padded) {
+                    let est_us = cache
+                        .get(&slot.name, cname, padded)
+                        .or_else(|| cross_device_estimate(cache, &slot.name, cname, padded));
+                    if let Some(est_us) = est_us {
                         self.est.warm(
                             VariantKey {
                                 class: class as u32,
@@ -584,6 +605,30 @@ impl ServeReport {
     }
 }
 
+/// Cross-device transfer for the Tuned tier: when `target` has no cached
+/// entry for (model, padded batch), borrow the first entry tuned for the
+/// same variant on a *different* device class (deterministic: the cache
+/// iterates in sorted key order) and rescale it by the two classes'
+/// relative throughput — duration scales inversely with speed, so a
+/// v100 entry seeds a t4 estimate at `est × speed(v100) / speed(t4)`.
+/// Unknown device names (either side) transfer nothing; the variant then
+/// falls back to the analytic prior as before.
+fn cross_device_estimate(
+    cache: &TunedCache,
+    model: &str,
+    target: &str,
+    padded: u32,
+) -> Option<f64> {
+    let target_speed = DeviceSpec::by_name(target).map(|s| relative_speed(&s))?;
+    cache.iter().find_map(|((m, device, batch), e)| {
+        if m != model || *batch != padded || device == target {
+            return None;
+        }
+        let source_speed = DeviceSpec::by_name(device).map(|s| relative_speed(&s))?;
+        Some(e.est_us * source_speed / target_speed)
+    })
+}
+
 /// Build the run's model table (group id = sorted-name index) from the
 /// trace and the backend's manifest knowledge.
 fn model_slots<B: ModelBackend>(
@@ -655,6 +700,11 @@ pub struct Server<B: ModelBackend> {
     /// matching (model, device class, padded batch) variants from it
     /// until a real observation lands. `None` = cold start.
     pub tuned: Option<TunedCache>,
+    /// Per-tenant token-bucket rate limits: tenant → (rate req/s, burst).
+    /// Shaped requests are rejected *before* pricing in both gates, so a
+    /// tenant saturating its bucket never moves the admission price other
+    /// tenants see. Tenants absent from the map are unshaped.
+    pub tenant_rates: BTreeMap<u32, (f64, f64)>,
 }
 
 impl<B: ModelBackend> Server<B> {
@@ -668,6 +718,7 @@ impl<B: ModelBackend> Server<B> {
             independent_streams: true,
             frontend: true,
             tuned: None,
+            tenant_rates: BTreeMap::new(),
         }
     }
 
@@ -700,6 +751,7 @@ impl<B: ModelBackend> Server<B> {
             independent_streams: self.independent_streams,
             frontend: use_frontend,
             policy: self.policy.name(),
+            tenant_rates: self.tenant_rates.clone(),
         };
         // The executor IS the run's one cost model: configure its Measured
         // tier from policy, teach it the fleet's device-class names, and
@@ -707,6 +759,11 @@ impl<B: ModelBackend> Server<B> {
         // anything (placement seeding included) asks it for a price.
         let mut exec = ServeExecutor::new(&mut self.backend, slots.clone());
         exec.set_ewma_alpha(cfg.policy.ewma_alpha);
+        exec.set_refine(
+            cfg.policy.refine_period,
+            cfg.policy.refine_top,
+            cfg.policy.refine_err_threshold_us,
+        );
         if let Some(t) = topo {
             exec.set_class_names(
                 t.classes().iter().map(|c| c.name.clone()).collect(),
@@ -896,6 +953,7 @@ mod tests {
     use super::*;
     use std::time::Duration;
 
+    use crate::compiler::ir::SloClass;
     use crate::workload::trace::{ArrivalKind, Request, TenantSpec, Trace};
 
     /// The deterministic simulator backend (public as [`SimBackend`]):
@@ -1044,6 +1102,7 @@ mod tests {
                 model: "m".to_string(),
                 arrival_us: i as f64 * gap_us,
                 deadline_us: i as f64 * gap_us + slo_us as f64,
+                class: SloClass::Standard,
             })
             .collect();
         Trace {
@@ -1185,6 +1244,75 @@ mod tests {
             warmed.estimate_group_on_class_us(0, 0, 8).to_bits(),
             learned.estimate_group_on_class_us(0, 0, 8).to_bits()
         );
+    }
+
+    #[test]
+    fn warm_start_seeds_absent_device_class_from_cross_device_entry() {
+        // a t4-only fleet warm-starting from a cache tuned entirely on
+        // v100s: the v100 entry transfers, rescaled by relative speed,
+        // instead of the variant falling back to the analytic prior
+        let slots = vec![ModelSlot {
+            name: "m".to_string(),
+            d_in: 4,
+            max_batch: 16,
+        }];
+        let mut backend = sim();
+        let mut ex = ServeExecutor::new(&mut backend, slots.clone());
+        ex.set_class_names(vec!["t4".to_string()]);
+        let mut cache = TunedCache::new();
+        cache.insert(
+            "m",
+            "v100",
+            4,
+            TunedEntry {
+                class: "4x4x4".to_string(),
+                est_us: 800.0,
+            },
+        );
+        ex.warm_start(&cache);
+        let v100 = relative_speed(&DeviceSpec::v100());
+        let t4 = relative_speed(&DeviceSpec::by_name("t4").unwrap());
+        let want = 800.0 * v100 / t4;
+        assert!(want > 800.0, "duration scales inversely with speed");
+        assert_eq!(ex.estimate_group_on_class_us(0, 0, 4), want);
+        assert_eq!(ex.estimator_stats().tuned_hits, 1, "Tuned tier answered");
+        // a same-device entry always wins over any cross-device transfer
+        let mut exact = cache.clone();
+        exact.insert(
+            "m",
+            "t4",
+            4,
+            TunedEntry {
+                class: "4x4x4".to_string(),
+                est_us: 1234.0,
+            },
+        );
+        let mut b2 = sim();
+        let mut ex2 = ServeExecutor::new(&mut b2, slots);
+        ex2.set_class_names(vec!["t4".to_string()]);
+        ex2.warm_start(&exact);
+        assert_eq!(ex2.estimate_group_on_class_us(0, 0, 4), 1234.0);
+        // unknown device names on either side transfer nothing
+        assert!(cross_device_estimate(&cache, "m", "not-a-device", 4).is_none());
+    }
+
+    #[test]
+    fn tenant_rate_limit_sheds_and_is_invisible_to_other_tenants() {
+        // tenant 0 offers ~400 req/s against a 50 req/s bucket; tenant 1
+        // is unshaped and must ride through untouched
+        let trace = Trace::generate(&tenants(2, 400.0, 100_000), 100, 77);
+        let mut s = Server::new(sim(), BatchPolicy::coalescing());
+        s.tenant_rates.insert(0, (50.0, 1.0));
+        let r = s.replay(&trace);
+        assert!(
+            r.metrics.classes[SloClass::Standard.index()].shaped > 0,
+            "the bucket must shed"
+        );
+        assert!(r.metrics.tenants[&0].dropped > 0, "shaped tenant drops");
+        assert_eq!(r.metrics.tenants[&1].dropped, 0, "unshaped tenant rides");
+        // conservation: completed + dropped == offered
+        let drops: u64 = r.metrics.tenants.values().map(|t| t.dropped).sum();
+        assert_eq!(r.metrics.total_completed() + drops, 200);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! tenants' requests into one time-ordered stream for replay against the
 //! JIT or the baselines.
 
+use crate::compiler::ir::SloClass;
 use crate::util::rng::Rng;
 use crate::workload::arrivals::{Arrivals, Mmpp, Poisson, Uniform};
 
@@ -32,10 +33,13 @@ pub struct TenantSpec {
     pub rate: f64,
     /// Arrival process.
     pub kind: ArrivalKind,
+    /// SLO class of every request this tenant issues (per-tenant class
+    /// configuration — the scheduler-facing priority surface).
+    pub class: SloClass,
 }
 
 impl TenantSpec {
-    /// Convenience constructor.
+    /// Convenience constructor (Standard class).
     pub fn new(id: u32, model: &str, slo_us: u64, rate: f64, kind: ArrivalKind) -> Self {
         Self {
             id,
@@ -43,7 +47,14 @@ impl TenantSpec {
             slo_us,
             rate,
             kind,
+            class: SloClass::Standard,
         }
+    }
+
+    /// Set the tenant's SLO class.
+    pub fn with_class(mut self, class: SloClass) -> Self {
+        self.class = class;
+        self
     }
 }
 
@@ -60,6 +71,8 @@ pub struct Request {
     pub arrival_us: f64,
     /// Absolute deadline, µs.
     pub deadline_us: f64,
+    /// SLO class (copied from the issuing tenant's spec).
+    pub class: SloClass,
 }
 
 impl Request {
@@ -99,6 +112,7 @@ impl Trace {
                     model: t.model.clone(),
                     arrival_us: at,
                     deadline_us: at + t.slo_us as f64,
+                    class: t.class,
                 });
                 id += 1;
             }
@@ -151,6 +165,33 @@ pub fn mixed_tenants(n: u32, models: &[&str], rate: f64) -> Vec<TenantSpec> {
                     ArrivalKind::Poisson
                 },
             )
+        })
+        .collect()
+}
+
+/// The `slo-mix` bench workload: tenants cycle through the three SLO
+/// classes with load skewed hard toward best-effort (4× the per-tenant
+/// rate of the latency classes), so the batch tier saturates the device
+/// while critical/standard tenants depend on class-weighted scheduling
+/// for their slack. Best-effort SLOs are loose on purpose — their
+/// attainment measures progress (bounded starvation), not latency.
+pub fn slo_mix_tenants(n: u32, models: &[&str], rate: f64) -> Vec<TenantSpec> {
+    (0..n)
+        .map(|i| {
+            let class = SloClass::from_index(i as usize % 3);
+            let (slo_us, r) = match class {
+                SloClass::Critical => (25_000u64, rate),
+                SloClass::Standard => (100_000, rate),
+                SloClass::BestEffort => (2_000_000, rate * 4.0),
+            };
+            TenantSpec::new(
+                i,
+                models[i as usize % models.len()],
+                slo_us,
+                r,
+                ArrivalKind::Poisson,
+            )
+            .with_class(class)
         })
         .collect()
 }
@@ -225,6 +266,33 @@ mod tests {
         assert_eq!(ts[0].slo_us, 25_000);
         assert_eq!(ts[1].slo_us, 100_000);
         assert_eq!(ts[3].kind, ArrivalKind::Bursty);
+    }
+
+    #[test]
+    fn requests_carry_the_tenant_class() {
+        let ts = vec![
+            TenantSpec::new(0, "m", 25_000, 100.0, ArrivalKind::Poisson)
+                .with_class(SloClass::Critical),
+            TenantSpec::new(1, "m", 500_000, 100.0, ArrivalKind::Poisson)
+                .with_class(SloClass::BestEffort),
+        ];
+        let t = Trace::generate(&ts, 20, 4);
+        assert!(t.of_tenant(0).all(|r| r.class == SloClass::Critical));
+        assert!(t.of_tenant(1).all(|r| r.class == SloClass::BestEffort));
+    }
+
+    #[test]
+    fn slo_mix_cycles_classes_and_skews_load_to_best_effort() {
+        let ts = slo_mix_tenants(6, &["a", "b"], 100.0);
+        assert_eq!(ts.len(), 6);
+        assert_eq!(ts[0].class, SloClass::Critical);
+        assert_eq!(ts[1].class, SloClass::Standard);
+        assert_eq!(ts[2].class, SloClass::BestEffort);
+        assert_eq!(ts[3].class, SloClass::Critical);
+        // the batch tier carries the bulk of the offered load
+        assert!(ts[2].rate > 3.0 * ts[0].rate);
+        // and its SLO is loose (it measures progress, not latency)
+        assert!(ts[2].slo_us > 10 * ts[1].slo_us);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! cases per property).
 
 use vliw_jit::compiler::coalescer::{Coalescer, ShapeClass};
-use vliw_jit::compiler::ir::{DispatchRequest, OpId, StreamId, TensorOp};
+use vliw_jit::compiler::ir::{DispatchRequest, OpId, SloClass, StreamId, TensorOp};
 use vliw_jit::compiler::jit::{JitCompiler, JitConfig, SimExecutor};
 use vliw_jit::compiler::window::{OpState, Window};
 use vliw_jit::gpu::cost::CostModel;
@@ -44,6 +44,7 @@ fn prop_pack_partitions_ops() {
                 group: 0,
                 tag: 0,
                 independent: false,
+                class: SloClass::Standard,
             })
             .collect();
         let refs: Vec<&TensorOp> = ops.iter().collect();
@@ -557,7 +558,10 @@ fn wrap_view(gv: GroupView) -> AdmissionView {
 fn prop_admission_view_matches_sync_gate_on_identical_state() {
     // a snapshot published from some scheduler state must make the exact
     // decision the synchronous gate makes on that same state (no
-    // in-channel backlog): same drain estimate, same accept/reject
+    // in-channel backlog): same drain estimate, same accept/reject —
+    // re-pinned PER SLO CLASS since the priority-surface refactor: each
+    // probe carries a random class and both gates must route it through
+    // the same class-aware decision (`Admission::decide_class`)
     let mut rng = Rng::new(0xF30A7);
     for case in 0..150 {
         let mut backend = SimBackend::default();
@@ -584,16 +588,21 @@ fn prop_admission_view_matches_sync_gate_on_identical_state() {
         };
         let admission = Admission::new(1 + rng.below(16) as usize);
         let gview = snapshot_group(&jit, 0, parallelism, backlog, true);
-        let view = wrap_view(gview.clone());
-        for probe in 0..6 {
+        for probe in 0..9 {
+            // re-stamp `published` per probe: the best-effort stale shed
+            // is wall-clock gated, and a runner preemption mid-case must
+            // not turn this equivalence check flaky
+            let view = wrap_view(gview.clone());
             let stream = StreamId(rng.below(4) as u32);
             let independent = rng.below(2) == 0;
             let deadline_us = rng.below(6_000) as f64;
+            let class = SloClass::from_index(rng.below(3) as usize);
             // the synchronous gate's decision, via the independently
             // written reference arithmetic
             let ref_est =
                 reference_drain_est(&jit, stream, independent, parallelism, backlog);
-            let sync = admission.decide(
+            let sync = admission.decide_class(
+                class,
                 jit.window.pending_in_group(0),
                 jit.window.inflight_in_group(0),
                 deadline_us - jit.now_us - ref_est,
@@ -605,18 +614,20 @@ fn prop_admission_view_matches_sync_gate_on_identical_state() {
                 "case {case}.{probe}: view est {view_est} != reference {ref_est}"
             );
             // and a fresh frontend gate on the published view decides
-            // identically (fresh = no accepted-in-channel backlog)
+            // identically (fresh = no accepted-in-channel backlog, view
+            // just published so the best-effort stale shed cannot fire)
             let mut gate = FrontendGate::new(admission.clone(), 1);
             let greq = GateRequest {
                 stream,
                 independent,
                 deadline_us,
+                class,
             };
             let frontend = gate.decide(&view, 0, &greq, jit.now_us);
             assert_eq!(
                 frontend, sync,
                 "case {case}.{probe}: frontend {frontend:?} != sync {sync:?} \
-                 (est {ref_est}, deadline {deadline_us})"
+                 (class {class:?}, est {ref_est}, deadline {deadline_us})"
             );
         }
     }
@@ -652,6 +663,7 @@ fn prop_stale_view_never_over_admits() {
                 stream,
                 independent: rng.below(2) == 0,
                 deadline_us: 1e9,
+                class: SloClass::Standard,
             };
             if gate.decide(&view, 0, &greq, 0.0) == Admit::Accept {
                 accepts += 1;
@@ -711,6 +723,7 @@ fn prop_gate_reconciliation_tracks_scheduler_drains() {
                     stream,
                     independent: true,
                     deadline_us: 1e9,
+                    class: SloClass::Standard,
                 };
                 if gate.decide(&view, 0, &greq, 0.0) == Admit::Accept {
                     accepted_total += 1;
@@ -809,5 +822,106 @@ fn prop_replay_and_replay_placed_agree_on_single_v100() {
         assert!(r1.metrics.devices.is_empty(), "case {case}");
         assert_eq!(r2.metrics.devices.len(), 1, "case {case}");
         assert!(table.is_total(models.len() as u64, 1), "case {case}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SLO-class properties
+// ---------------------------------------------------------------------------
+
+/// Replay `trace` through the virtual serving cell and return the metrics.
+fn replay_metrics(trace: &Trace) -> vliw_jit::serve::metrics::ServeMetrics {
+    let mut s = Server::new(SimBackend::default(), BatchPolicy::coalescing());
+    s.replay(trace).metrics
+}
+
+#[test]
+fn prop_critical_attainment_monotone_under_best_effort_load() {
+    // the tentpole's protection guarantee: piling best-effort load onto a
+    // non-saturated cell must not degrade critical attainment. Tenant
+    // arrival streams are derived from `seed ^ tenant_id`, so stacking
+    // extra best-effort tenants leaves the critical arrivals bit-identical
+    // — any attainment change is purely a scheduling effect.
+    let mut rng = Rng::new(0x510C1A);
+    for case in 0..6u64 {
+        let crit_rate = 100.0 + rng.f64() * 150.0;
+        let std_rate = 100.0 + rng.f64() * 100.0;
+        let base = vec![
+            TenantSpec::new(0, "m", 30_000, crit_rate, ArrivalKind::Poisson)
+                .with_class(SloClass::Critical),
+            TenantSpec::new(1, "m", 30_000, crit_rate, ArrivalKind::Poisson)
+                .with_class(SloClass::Critical),
+            TenantSpec::new(2, "m", 100_000, std_rate, ArrivalKind::Poisson)
+                .with_class(SloClass::Standard),
+        ];
+        let seed = 9_000 + case;
+        let run = |extra_be: u32| {
+            let mut tenants = base.clone();
+            for j in 0..extra_be {
+                tenants.push(
+                    TenantSpec::new(10 + j, "m", 2_000_000, 1_000.0, ArrivalKind::Poisson)
+                        .with_class(SloClass::BestEffort),
+                );
+            }
+            replay_metrics(&Trace::generate(&tenants, 60, seed))
+                .class_attainment(SloClass::Critical)
+        };
+        let quiet = run(0);
+        for extra in [2u32, 6] {
+            let loaded = run(extra);
+            assert!(
+                loaded >= quiet - 0.05,
+                "case {case}: critical attainment fell from {quiet} to {loaded} \
+                 under {extra} best-effort tenants (crit_rate {crit_rate:.0}/s)"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_best_effort_starvation_is_bounded() {
+    // the flip side of priority: class weighting is work-conserving, not a
+    // strict-priority starver. On a cell with capacity to spare after the
+    // critical load is served, best-effort traffic must still complete a
+    // substantial fraction of its offered work, and per-class accounting
+    // must conserve requests (completed + dropped == offered).
+    let mut rng = Rng::new(0xBE57A3);
+    for case in 0..6u64 {
+        let crit_rate = 800.0 + rng.f64() * 800.0;
+        let tenants = vec![
+            TenantSpec::new(0, "m", 50_000, crit_rate, ArrivalKind::Poisson)
+                .with_class(SloClass::Critical),
+            TenantSpec::new(1, "m", 50_000, crit_rate, ArrivalKind::Poisson)
+                .with_class(SloClass::Critical),
+            TenantSpec::new(2, "m", 2_000_000, 400.0, ArrivalKind::Poisson)
+                .with_class(SloClass::BestEffort),
+            TenantSpec::new(3, "m", 2_000_000, 400.0, ArrivalKind::Poisson)
+                .with_class(SloClass::BestEffort),
+        ];
+        let trace = Trace::generate(&tenants, 80, 4_200 + case);
+        let m = replay_metrics(&trace);
+
+        let offered_be: u64 = [2u32, 3]
+            .iter()
+            .map(|t| trace.of_tenant(*t).count() as u64)
+            .sum();
+        let be = m.class_metrics(SloClass::BestEffort);
+        assert_eq!(
+            be.completed() + be.dropped,
+            offered_be,
+            "case {case}: best-effort accounting leaks requests"
+        );
+        assert!(be.completed() > 0, "case {case}: best-effort fully starved");
+        assert!(
+            be.completed() as f64 >= 0.5 * offered_be as f64,
+            "case {case}: best-effort starved beyond bound: {} of {offered_be} \
+             completed (crit_rate {crit_rate:.0}/s)",
+            be.completed()
+        );
+        assert!(
+            m.class_attainment(SloClass::Critical) >= 0.9,
+            "case {case}: critical attainment collapsed to {}",
+            m.class_attainment(SloClass::Critical)
+        );
     }
 }
