@@ -6,7 +6,14 @@
 //! * `golden`        — end-to-end numeric self-check of every artifact
 //! * `serve`         — threaded multi-tenant serving demo on real artifacts
 //!                     (`--devices v100,t4` turns on the placed launch stage;
-//!                     `--frontend off` reverts to the synchronous gate)
+//!                     `--frontend off` reverts to the synchronous gate;
+//!                     `--listen ADDR` binds the network intake instead of
+//!                     replaying a local trace — `--intake-shards N` sizes
+//!                     the socket worker pool, `--serve-secs` bounds the run)
+//! * `loadgen`       — wire client: replays a generated workload trace over
+//!                     TCP against a `serve --listen` endpoint (configurable
+//!                     connection count and client-side batch size) and
+//!                     prints client-observed p50/p99 + attainment
 //! * `bench`         — simulator-backend serving benchmark over a device
 //!                     topology, machine-readable JSON out with per-device
 //!                     utilization + rebalance counts (the CI smoke);
@@ -19,7 +26,11 @@
 //!                     `artifacts/tuned.json` (BENCH_6.json);
 //!                     `--workload slo-mix` replays the class-skewed
 //!                     SLO-class trace and emits per-class attainment +
-//!                     weighted-share fairness error (BENCH_7.json)
+//!                     weighted-share fairness error (BENCH_7.json);
+//!                     `--wire` starts a loopback wire server and drives it
+//!                     with the load generator — mixed and slo-mix traces,
+//!                     client batches of 1 and 8 — and emits client-observed
+//!                     latency + intake metrics (BENCH_8.json)
 //! * `autotune`      — Table-1 style greedy-vs-collaborative search;
 //!                     `--save` persists the tuned estimates as the
 //!                     `artifacts/tuned.json` warm-start cache
@@ -40,6 +51,7 @@ use vliw_jit::model::zoo;
 use vliw_jit::placement::{DeviceTopology, RebalanceConfig};
 use vliw_jit::runtime::executor::ModelExec;
 use vliw_jit::runtime::{Manifest, PjrtExecutor};
+use vliw_jit::serve::intake::{loadgen::run_loadgen, serve_wire};
 use vliw_jit::serve::{
     BatchPolicy, ModelBackend, ServeMetrics, ServeReport, Server, SimBackend,
 };
@@ -50,6 +62,7 @@ use vliw_jit::util::stats::LatencyHist;
 use vliw_jit::workload::trace::{
     mixed_tenants, slo_mix_tenants, ArrivalKind, TenantSpec, Trace,
 };
+use vliw_jit::workload::wire::trace_to_wire;
 
 fn main() -> Result<()> {
     let cmd = std::env::args().nth(1).unwrap_or_else(|| "help".into());
@@ -58,13 +71,14 @@ fn main() -> Result<()> {
         "info" => info(),
         "golden" => golden(),
         "serve" => serve(),
+        "loadgen" => cmd_loadgen(),
         "bench" => cmd_bench(),
         "autotune" => cmd_autotune(),
         "cluster" => cmd_cluster(),
         "help" | "--help" | "-h" => {
             println!(
                 "vliwd — OoO VLIW JIT for accelerator inference\n\n\
-                 USAGE: vliwd <info|golden|serve|bench|autotune|cluster> [flags]\n\
+                 USAGE: vliwd <info|golden|serve|loadgen|bench|autotune|cluster> [flags]\n\
                  Run `vliwd <cmd> --help` for per-command flags."
             );
             Ok(())
@@ -173,6 +187,13 @@ fn serve() -> Result<()> {
             "on",
             "async admission frontend stage: on (default; tenant decisions never wait on the scheduler loop) or off (synchronous gate between channel drains)",
         )
+        .flag(
+            "listen",
+            "",
+            "bind the network intake at this address (e.g. 127.0.0.1:7411) and serve wire clients instead of replaying a local trace; --tenants/--rate still declare the served models and SLOs",
+        )
+        .flag("intake-shards", "2", "socket intake worker pool size (with --listen)")
+        .flag("serve-secs", "10", "how long to serve before draining (with --listen)")
         .flag("log", "info", "log level")
         .switch("no-batching", "serve batch-1 FIFO (baseline)");
     let p = parse(args)?;
@@ -194,6 +215,55 @@ fn serve() -> Result<()> {
     };
 
     let models = ["mlp_small", "gemmnet6", "mlp_large"];
+    let listen = p.get("listen").to_string();
+    if !listen.is_empty() {
+        // wire mode: the executor is built ON the engine thread (inside
+        // the serve_wire factory), so nothing heavy happens here
+        let shards = p.get_usize("intake-shards").map_err(|e| anyhow::anyhow!("{e}"))?;
+        let secs = p.get_f64("serve-secs").map_err(|e| anyhow::anyhow!("{e}"))?;
+        let frontend = match p.get("frontend") {
+            "on" => true,
+            "off" => false,
+            other => bail!("unknown --frontend '{other}' (valid: on, off)"),
+        };
+        let no_batching = p.get_bool("no-batching");
+        let tenants = mixed_tenants(n, &models, rate);
+        let ws = serve_wire(
+            move || {
+                let mut ex = PjrtExecutor::from_default_artifacts().expect("artifacts");
+                for m in models {
+                    let _ = ex.warmup_model(m);
+                }
+                let mut s = Server::new(
+                    ex,
+                    if no_batching {
+                        BatchPolicy::NoBatching
+                    } else {
+                        BatchPolicy::coalescing()
+                    },
+                );
+                s.frontend = frontend;
+                let tuned_path = std::path::Path::new("artifacts/tuned.json");
+                if tuned_path.exists() {
+                    s.tuned = TunedCache::load(tuned_path).ok();
+                }
+                s
+            },
+            tenants,
+            &listen,
+            shards,
+        )
+        .map_err(|e| anyhow::anyhow!("bind {listen}: {e}"))?;
+        println!(
+            "listening on {} ({} intake shard(s)); serving for {secs}s",
+            ws.addr(),
+            shards
+        );
+        std::thread::sleep(std::time::Duration::from_secs_f64(secs));
+        let report = ws.shutdown();
+        println!("{}", report.render());
+        return Ok(());
+    }
     let mut ex = PjrtExecutor::from_default_artifacts().context("artifacts")?;
     for m in models {
         let us = ex.warmup_model(m).map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -281,6 +351,65 @@ fn serve() -> Result<()> {
     Ok(())
 }
 
+fn cmd_loadgen() -> Result<()> {
+    let mut args = Args::new(
+        "vliwd loadgen",
+        "wire client: replay a generated workload trace against a serve --listen endpoint",
+    );
+    args.flag("addr", "127.0.0.1:7411", "server address")
+        .flag("tenants", "6", "number of tenants")
+        .flag("rate", "120", "per-tenant request rate (req/s)")
+        .flag("requests", "40", "requests per tenant")
+        .flag("seed", "42", "trace seed")
+        .flag("batch", "1", "client-side batch size (ops per wire request)")
+        .flag("conns", "4", "TCP connections (tenants pin to conns, preserving stream order)")
+        .flag("speedup", "1", "trace time compression factor")
+        .flag(
+            "models",
+            "mlp_small,gemmnet6,mlp_large",
+            "model names the tenants cycle over (must match the server's)",
+        );
+    let p = parse(args)?;
+    let n = p.get_u64("tenants").map_err(|e| anyhow::anyhow!("{e}"))? as u32;
+    let rate = p.get_f64("rate").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let per = p.get_usize("requests").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let seed = p.get_u64("seed").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let batch = p.get_usize("batch").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let conns = p.get_usize("conns").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let speedup = p.get_f64("speedup").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let models = p
+        .get_nonempty_list("models")
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let model_refs: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
+    let addr = std::net::ToSocketAddrs::to_socket_addrs(p.get("addr"))
+        .with_context(|| format!("resolve {}", p.get("addr")))?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("{} resolves to nothing", p.get("addr")))?;
+
+    let tenants = mixed_tenants(n, &model_refs, rate);
+    let trace = Trace::generate(&tenants, per, seed);
+    let reqs = trace_to_wire(&trace, batch, speedup);
+    println!(
+        "replaying {} requests as {} wire request(s) (client batch {batch}) over {conns} conn(s) to {addr}...",
+        trace.requests.len(),
+        reqs.len()
+    );
+    let rep = run_loadgen(addr, &reqs, conns).with_context(|| format!("loadgen vs {addr}"))?;
+    println!(
+        "sent {} batches / {} ops; {} replies ({} ok, {} rejected, {} failed, {} conn timeout(s))",
+        rep.sent_batches, rep.sent_ops, rep.replies, rep.ok_ops, rep.rejected_ops,
+        rep.failed_ops, rep.timeouts
+    );
+    println!(
+        "client-observed batch latency p50 {:.0} us  p99 {:.0} us  max {:.0} us",
+        rep.latency.quantile_us(0.5),
+        rep.latency.quantile_us(0.99),
+        rep.latency.max_us()
+    );
+    println!("client-side SLO attainment {:.1}%", rep.attainment() * 100.0);
+    Ok(())
+}
+
 /// The serving-report core every bench JSON carries (tenant latencies
 /// merged for the p99): requests, attainment, throughput_rps, p99_us,
 /// mean_pack, launches. One emitter behind BENCH_2..BENCH_5 so the CI
@@ -350,6 +479,10 @@ fn cmd_bench() -> Result<()> {
             "warm-start",
             "run the same trace cold and warm-started from a freshly written artifacts/tuned.json, on a backend with a deliberately biased analytic prior, and emit BENCH_6.json (attainments + estimator tier hit rates + estimate-error quantiles)",
         )
+        .switch(
+            "wire",
+            "serve over a loopback TCP wire and drive it with the load generator — mixed and slo-mix traces, client batches of 1 and 8 — and emit BENCH_8.json (client-observed p50/p99, server attainment, mean pack, intake decode p99)",
+        )
         .switch("static", "pin the initial placement (disable rebalancing)");
     let p = parse(args)?;
     let n = p.get_u64("tenants").map_err(|e| anyhow::anyhow!("{e}"))? as u32;
@@ -359,11 +492,12 @@ fn cmd_bench() -> Result<()> {
     let frontend = p.get_bool("frontend");
     let engine_matrix = p.get_bool("engine-matrix");
     let warm_start = p.get_bool("warm-start");
+    let wire = p.get_bool("wire");
     let slo_mix = p.get("workload") == "slo-mix";
-    if (frontend as u8) + (engine_matrix as u8) + (warm_start as u8) > 1 {
-        bail!("--frontend, --engine-matrix and --warm-start are separate bench steps; pick one");
+    if (frontend as u8) + (engine_matrix as u8) + (warm_start as u8) + (wire as u8) > 1 {
+        bail!("--frontend, --engine-matrix, --warm-start and --wire are separate bench steps; pick one");
     }
-    if slo_mix && (frontend || engine_matrix || warm_start) {
+    if slo_mix && (frontend || engine_matrix || warm_start || wire) {
         bail!("--workload slo-mix is its own bench step (BENCH_7); drop the other step flag");
     }
     let out = match p.get("out") {
@@ -371,9 +505,16 @@ fn cmd_bench() -> Result<()> {
         "" if engine_matrix => "BENCH_5.json".to_string(),
         "" if warm_start => "BENCH_6.json".to_string(),
         "" if slo_mix => "BENCH_7.json".to_string(),
+        "" if wire => "BENCH_8.json".to_string(),
         "" => "BENCH_3.json".to_string(),
         o => o.to_string(),
     };
+    if wire {
+        // the wire bench generates its own mixed + slo-mix traces (both
+        // workloads, client batches 1 and 8) — --workload does not apply
+        let speedup = p.get_f64("speedup").map_err(|e| anyhow::anyhow!("{e}"))?;
+        return bench_wire(n, rate, per, seed, speedup, &out);
+    }
     let devices = p
         .get_nonempty_list("devices")
         .map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -530,6 +671,76 @@ fn bench_frontend(trace: &Trace, speedup: f64, out: &str) -> Result<()> {
     o.insert(
         "sync_throughput_rps".to_string(),
         Json::Num(sm.throughput()),
+    );
+    std::fs::write(out, Json::Obj(o).to_string_compact())
+        .with_context(|| format!("write {out}"))?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// The `bench --wire` step (BENCH_8): a loopback wire server (simulator
+/// backend, frontend admission on, 2 intake shards) driven by the load
+/// generator — the mixed and slo-mix traces, each with client batches of
+/// 1 and 8 over 4 connections. The batched client proves the tentpole
+/// claim end to end: intake decomposes each 8-op wire request into
+/// independent engine requests, the JIT re-coalesces them into packs
+/// (CI asserts batched mean_pack stays high), and the client still gets
+/// exactly one reply per request. Client-observed latency comes from the
+/// generator; attainment, pack shape, and intake decode time from the
+/// server report.
+fn bench_wire(n: u32, rate: f64, per: usize, seed: u64, speedup: f64, out: &str) -> Result<()> {
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("bench".to_string(), Json::Str("serve_wire".to_string()));
+    let mut decode = LatencyHist::new();
+    let workloads = [
+        ("mixed", mixed_tenants(n, &["simnet"], rate)),
+        ("slomix", slo_mix_tenants(n, &["simnet"], rate)),
+    ];
+    for (wl, tenants) in workloads {
+        for batch in [1usize, 8] {
+            let trace = Trace::generate(&tenants, per, seed);
+            let reqs = trace_to_wire(&trace, batch, speedup);
+            let ws = serve_wire(
+                || {
+                    let mut s =
+                        Server::new(SimBackend::default(), BatchPolicy::coalescing());
+                    s.frontend = true;
+                    s
+                },
+                tenants.clone(),
+                "127.0.0.1:0",
+                2,
+            )
+            .map_err(|e| anyhow::anyhow!("bind loopback: {e}"))?;
+            let client = run_loadgen(ws.addr(), &reqs, 4)
+                .map_err(|e| anyhow::anyhow!("loadgen: {e}"))?;
+            let report = ws.shutdown();
+            println!("--- {wl} b{batch} ---\n{}", report.render());
+            let m = &report.metrics;
+            let pfx = format!("{wl}_b{batch}");
+            o.insert(
+                format!("{pfx}_client_p50_us"),
+                Json::Num(client.latency.quantile_us(0.5)),
+            );
+            o.insert(
+                format!("{pfx}_client_p99_us"),
+                Json::Num(client.latency.quantile_us(0.99)),
+            );
+            o.insert(format!("{pfx}_attainment"), Json::Num(client.attainment()));
+            o.insert(
+                format!("{pfx}_server_attainment"),
+                Json::Num(m.overall_attainment()),
+            );
+            o.insert(format!("{pfx}_mean_pack"), Json::Num(m.jit.mean_pack()));
+            o.insert(format!("{pfx}_launches"), Json::Num(m.jit.launches as f64));
+            o.insert(format!("{pfx}_sent_ops"), Json::Num(client.sent_ops as f64));
+            o.insert(format!("{pfx}_replies"), Json::Num(client.replies as f64));
+            decode.merge(&m.intake.decode);
+        }
+    }
+    o.insert(
+        "intake_decode_p99_us".to_string(),
+        Json::Num(decode.quantile_us(0.99)),
     );
     std::fs::write(out, Json::Obj(o).to_string_compact())
         .with_context(|| format!("write {out}"))?;

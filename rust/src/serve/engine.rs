@@ -85,12 +85,12 @@
 //! [`crate::compiler::jit`].
 
 use std::cmp::Reverse;
-use std::collections::{BTreeMap, BinaryHeap};
+use std::collections::{BTreeMap, BinaryHeap, HashMap};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::compiler::ir::{DispatchRequest, SloClass, StreamId};
+use crate::compiler::ir::{DispatchRequest, OpId, SloClass, StreamId};
 use crate::compiler::jit::{JitCompiler, OpCompletion, PackRun, PendingLaunch};
 use crate::gpu::kernel::KernelDesc;
 use crate::placement::{
@@ -101,7 +101,7 @@ use crate::runtime::golden;
 use crate::serve::admission::{Admission, Admit};
 use crate::serve::frontend::{
     self, AdmissionView, FrontendGate, FrontendReport, GateExtras, GateRequest,
-    TenantShaper, ViewCell, FRONTEND_EPOCH_US, STALE_VIEW_US,
+    RejectReason, TenantShaper, ViewCell, FRONTEND_EPOCH_US, STALE_VIEW_US,
 };
 use crate::serve::metrics::ServeMetrics;
 use crate::serve::server::{ModelBackend, ModelSlot, ServeExecutor, ServeReport};
@@ -791,8 +791,8 @@ pub fn trace_arrivals(trace: &Trace, index: &BTreeMap<String, u64>) -> Vec<Arriv
         .collect()
 }
 
-/// One client request in flight from the generator (client side) to the
-/// admission gate — sync or frontend.
+/// One client request in flight from the generator (client side) or the
+/// network intake to the admission gate — sync or frontend.
 pub(crate) struct Incoming {
     pub tenant: u32,
     pub group: u64,
@@ -800,6 +800,9 @@ pub(crate) struct Incoming {
     pub class: SloClass,
     pub arrival: Instant,
     pub row: Vec<f32>,
+    /// Intake reply token (`(batch << 16) | op index`); 0 for requests
+    /// born in-process (generator, tests) — never tracked or replied to.
+    pub token: u64,
 }
 
 /// An accepted, pre-priced request in flight from the frontend stage to
@@ -813,17 +816,67 @@ pub(crate) struct Admitted {
     pub class: SloClass,
     pub arrival: Instant,
     pub row: Vec<f32>,
+    pub token: u64,
 }
 
 /// What the frontend stage sends the engine.
 pub(crate) enum FromFrontend {
     /// An accepted request, to be drained into the window.
     Admitted(Admitted),
+    /// A rejected request, with the reason the gate shed it. The engine
+    /// folds the reason into [`ServeMetrics::rejects_by_reason`] and
+    /// routes the terminal outcome to the wire sink so a network caller
+    /// learns *why* instead of watching the request vanish. (Per-class
+    /// reject totals stay on [`FrontendReport`]; only the reason
+    /// decomposition rides this record.)
+    Rejected {
+        token: u64,
+        class: SloClass,
+        reason: RejectReason,
+    },
     /// Stream ids the gate retired at an epoch boundary (idle a full
     /// epoch, accepts fully drained): the engine drops its mirrored
     /// per-stream drain counters. Ids are never reused, so a late Retire
     /// can never collide with live accounting.
     Retire(Vec<u32>),
+}
+
+/// A terminal per-op outcome routed from the engine back to the intake
+/// reply router. `token` is the intake correlation token (never 0 here).
+pub(crate) struct OpEvent {
+    pub token: u64,
+    pub outcome: OpOutcome,
+}
+
+/// How a wire-born op ended.
+pub(crate) enum OpOutcome {
+    Done { latency_us: f64, met_deadline: bool },
+    Failed,
+    Rejected(RejectReason),
+}
+
+/// Correlates wire-born requests through the engine: `tokens` maps live
+/// window op ids back to intake reply tokens; `tx` routes terminal
+/// outcomes to the reply router. Default (empty map, no sink) for the
+/// in-process drive modes — token 0 marks a non-wire request and is
+/// never tracked or emitted.
+#[derive(Default)]
+pub(crate) struct WireSink {
+    tokens: HashMap<OpId, u64>,
+    tx: Option<mpsc::Sender<OpEvent>>,
+}
+
+impl WireSink {
+    fn emit(&self, token: u64, outcome: OpOutcome) {
+        if token == 0 {
+            return;
+        }
+        if let Some(tx) = &self.tx {
+            // a failed send means the reply router is gone (shutdown):
+            // the outcome is dropped with it, nothing to do
+            let _ = tx.send(OpEvent { token, outcome });
+        }
+    }
 }
 
 /// The post-accept tail shared by both gates (bundled so the two call
@@ -838,6 +891,7 @@ struct Accepted {
     arrival_us: f64,
     independent: bool,
     row: Vec<f32>,
+    token: u64,
 }
 
 /// One request at the synchronous admission gate (bundled so call sites
@@ -859,6 +913,8 @@ pub(crate) struct AdmitReq {
     /// for drive modes without a measured signal.
     pub device_backlog_us: Option<f64>,
     pub row: Vec<f32>,
+    /// Intake reply token; 0 for in-process requests.
+    pub token: u64,
 }
 
 /// A (tenant, model-group) pair is one stream of execution. Stream ids
@@ -890,6 +946,7 @@ fn submit_accepted<X: ModelBackend>(
     jit: &mut ServeJit<X>,
     metrics: &mut ServeMetrics,
     slots: &[ModelSlot],
+    wire: &mut WireSink,
     a: Accepted,
 ) {
     let slot = &slots[a.group as usize];
@@ -902,9 +959,18 @@ fn submit_accepted<X: ModelBackend>(
     .with_tag(a.tenant as u64)
     .with_class(a.class)
     .with_independent(a.independent);
-    if jit.submit_at(req, a.arrival_us, a.row).is_none() {
-        // window full: the backpressure backstop sheds the request
-        metrics.drop_request(a.tenant, a.class);
+    match jit.submit_at(req, a.arrival_us, a.row) {
+        Some(id) => {
+            if a.token != 0 {
+                wire.tokens.insert(id, a.token);
+            }
+        }
+        None => {
+            // window full: the backpressure backstop sheds the request
+            metrics.drop_request(a.tenant, a.class);
+            metrics.reject_reason(RejectReason::QueueFull, a.class);
+            wire.emit(a.token, OpOutcome::Rejected(RejectReason::QueueFull));
+        }
     }
 }
 
@@ -923,8 +989,9 @@ pub(crate) fn admit_request<X: ModelBackend>(
     admission: &Admission,
     metrics: &mut ServeMetrics,
     slots: &[ModelSlot],
+    wire: &mut WireSink,
     r: AdmitReq,
-) {
+) -> Option<RejectReason> {
     let AdmitReq {
         group,
         tenant,
@@ -935,6 +1002,7 @@ pub(crate) fn admit_request<X: ModelBackend>(
         parallelism,
         device_backlog_us,
         row,
+        token,
     } = r;
     let stream = intern_stream(streams, tenant, group);
     // independent-mode pricing never reads the per-stream depth list, so
@@ -956,13 +1024,16 @@ pub(crate) fn admit_request<X: ModelBackend>(
     {
         metrics.gate_decision(class, false);
         metrics.drop_request(tenant, class);
-        return;
+        metrics.reject_reason(RejectReason::QueueFull, class);
+        wire.emit(token, OpOutcome::Rejected(RejectReason::QueueFull));
+        return Some(RejectReason::QueueFull);
     }
     metrics.gate_decision(class, true);
     submit_accepted(
         jit,
         metrics,
         slots,
+        wire,
         Accepted {
             stream,
             group,
@@ -972,8 +1043,10 @@ pub(crate) fn admit_request<X: ModelBackend>(
             arrival_us,
             independent,
             row,
+            token,
         },
     );
+    None
 }
 
 /// The admission frontend stage's thread body: drain the intake channel,
@@ -1022,10 +1095,10 @@ fn frontend_loop(
                     deadline_us: arrival_us + inc.slo_us,
                     class: inc.class,
                 };
-                let decision = if shaped {
-                    Admit::Reject
+                let reason = if shaped {
+                    Some(RejectReason::RateLimited)
                 } else {
-                    gate.decide(&view, inc.group, &greq, now_us)
+                    gate.decide_reason(&view, inc.group, &greq, now_us)
                 };
                 report.decisions += 1;
                 report
@@ -1036,7 +1109,7 @@ fn frontend_loop(
                 }
                 // a send can only fail at shutdown (engine gone): the
                 // request is shed, counted like any other reject
-                let accepted = decision == Admit::Accept
+                let accepted = reason.is_none()
                     && acc_tx
                         .send(FromFrontend::Admitted(Admitted {
                             stream,
@@ -1046,6 +1119,7 @@ fn frontend_loop(
                             class: inc.class,
                             arrival: inc.arrival,
                             row: inc.row,
+                            token: inc.token,
                         }))
                         .is_ok();
                 let ci = inc.class.index();
@@ -1057,6 +1131,14 @@ fn frontend_loop(
                         report.shaped_by_class[ci] += 1;
                     }
                     *report.drops.entry(inc.tenant).or_insert(0) += 1;
+                    // the reason record rides to the engine so intake can
+                    // answer the wire caller and metrics can decompose
+                    // the shed; QueueFull covers the shutdown-send edge
+                    let _ = acc_tx.send(FromFrontend::Rejected {
+                        token: inc.token,
+                        class: inc.class,
+                        reason: reason.unwrap_or(RejectReason::QueueFull),
+                    });
                 }
             }
         }
@@ -1126,6 +1208,14 @@ pub struct Engine<X: ModelBackend, C: Clock, S: LaunchStage<X>> {
     /// The same cumulative drain count per stream id; compacted when the
     /// gate retires a stream ([`FromFrontend::Retire`]).
     drained_by_stream: BTreeMap<u32, u64>,
+    /// Wire-request correlation: reply tokens for live ops plus the
+    /// outcome sink intake's reply router listens on. Inert (empty,
+    /// no sink) for in-process drive modes.
+    wire: WireSink,
+    /// The scheduler's next wake from the last `issue_and_launch` —
+    /// bounds the wall loop's channel wait so a pending coalescing
+    /// window fires on time instead of on the next 500µs poll tick.
+    wake_hint_us: Option<f64>,
     view_seq: u64,
     view_dirty: bool,
     /// The estimator generation the last published snapshot was built
@@ -1185,6 +1275,8 @@ where
             streams: BTreeMap::new(),
             drained: vec![0; groups],
             drained_by_stream: BTreeMap::new(),
+            wire: WireSink::default(),
+            wake_hint_us: None,
             view_seq: 0,
             view_dirty: false,
             last_gen,
@@ -1207,6 +1299,14 @@ where
             }
         }
         engine
+    }
+
+    /// Route wire-born ops' terminal outcomes (done/failed/rejected,
+    /// keyed by intake token) to `tx` — the network intake's reply
+    /// router. Requests with token 0 are unaffected.
+    pub(crate) fn with_reply_sink(mut self, tx: mpsc::Sender<OpEvent>) -> Self {
+        self.wire.tx = Some(tx);
+        self
     }
 
     /// Replay `arrivals` on the virtual clock: deterministic given a
@@ -1253,9 +1353,8 @@ where
     /// Serve `arrivals` on the wall clock, paced by a generator thread
     /// (trace time compressed by `speedup`), admission on the frontend
     /// stage thread or synchronously per [`EngineConfig::frontend`].
-    pub fn run_wall(mut self, arrivals: Vec<Arrival>, speedup: f64) -> ServeReport {
+    pub fn run_wall(self, arrivals: Vec<Arrival>, speedup: f64) -> ServeReport {
         debug_assert!(!self.clock.is_virtual(), "wall run needs the wall clock");
-        let t0 = self.clock.origin();
         let d_ins: Vec<usize> = self.slots.iter().map(|s| s.d_in).collect();
         let gen_reqs: Vec<(f64, u32, u64, f64, u64, SloClass)> = arrivals
             .iter()
@@ -1287,10 +1386,24 @@ where
                     class,
                     arrival: Instant::now(),
                     row: golden::gen_hash01(d_in, id.wrapping_mul(7919)),
+                    token: 0,
                 });
             }
         });
+        let report = self.run_wall_rx(rx);
+        // the wall loop only exits once the intake side disconnects, so
+        // the generator has already sent its last request
+        gen.join().expect("generator thread");
+        report
+    }
 
+    /// The wall-clock engine body over an externally-owned intake
+    /// channel: `run_wall` feeds it from the trace generator; the network
+    /// intake ([`crate::serve::intake`]) feeds it from socket shards.
+    /// Runs until every sender of `rx` is dropped and the window drains.
+    pub(crate) fn run_wall_rx(mut self, rx: mpsc::Receiver<Incoming>) -> ServeReport {
+        debug_assert!(!self.clock.is_virtual(), "wall run needs the wall clock");
+        let t0 = self.clock.origin();
         let mut intake = if self.frontend {
             let (acc_tx, acc_rx) = mpsc::channel::<FromFrontend>();
             let cell = ViewCell::new(self.build_view(0));
@@ -1335,8 +1448,9 @@ where
             // 1. pace on the intake channel; admit (sync gate) or drain
             // frontend-accepted requests into the window
             self.drain_wall(&mut intake);
-            // 2. issue + launch (inline stages execute and fold here)
-            let _wake = self.issue_and_launch();
+            // 2. issue + launch (inline stages execute and fold here);
+            // the wake hint bounds the next iteration's channel wait
+            self.wake_hint_us = self.issue_and_launch();
             // 3. fold finished pool launches; log; rebalance
             let block = intake.disconnected && self.jit.inflight_launches() > 0;
             self.settle(block);
@@ -1364,12 +1478,19 @@ where
                 break;
             }
         }
-        gen.join().expect("generator thread");
         if let Some(fe) = intake.fe {
-            // the frontend exits once the generator's intake disconnects
+            // the frontend exits once the upstream intake disconnects
             // and it has drained; fold its thread-local accounting in
             drop(fe.acc_rx);
             self.metrics.merge_frontend(&fe.stage.join());
+        }
+        // ops that left the window without a terminal completion (e.g.
+        // evicted mid-flight at shutdown) must still answer their batch:
+        // flush the leftovers as failures so no wire client waits forever
+        let leftovers: Vec<u64> = self.wire.tokens.values().copied().collect();
+        self.wire.tokens.clear();
+        for token in leftovers {
+            self.wire.emit(token, OpOutcome::Failed);
         }
         self.metrics.span_us = self.clock.now_us();
         self.metrics.jit = self.jit.stats.clone();
@@ -1389,20 +1510,33 @@ where
             *next += 1;
             let row =
                 golden::gen_hash01(self.slots[a.group as usize].d_in, a.id.wrapping_mul(7919));
-            self.admit_sync(a.group, a.tenant, a.class, a.at_us, a.deadline_us, row);
+            self.admit_sync(a.group, a.tenant, a.class, a.at_us, a.deadline_us, 0, row);
         }
+    }
+
+    /// How long the wall loop may block on its intake channel this
+    /// iteration: the fixed 500µs poll, shortened when the scheduler's
+    /// wake hint (a pending coalescing window, typically) is due sooner.
+    /// A channel send still interrupts the wait immediately — this bound
+    /// only keeps *scheduler* deadlines from quantizing to the poll tick.
+    fn drain_wait(&self) -> Duration {
+        let us = match self.wake_hint_us {
+            Some(at) => (at - self.clock.now_us()).clamp(20.0, 500.0),
+            None => 500.0,
+        };
+        Duration::from_micros(us as u64)
     }
 
     fn drain_wall(&mut self, intake: &mut WallIntake) {
         // once the upstream side is gone the channel stays empty — pace
         // the loop with a short sleep instead of spinning on it
         if intake.disconnected {
-            std::thread::sleep(Duration::from_micros(200));
+            std::thread::sleep(self.drain_wait().min(Duration::from_micros(200)));
         }
         if let Some(rx) = &intake.sync_rx {
             let mut arrivals: Vec<Incoming> = Vec::new();
             if !intake.disconnected {
-                match rx.recv_timeout(Duration::from_micros(500)) {
+                match rx.recv_timeout(self.drain_wait()) {
                     Ok(inc) => {
                         arrivals.push(inc);
                         while let Ok(inc) = rx.try_recv() {
@@ -1429,13 +1563,14 @@ where
                     inc.class,
                     arrival_us,
                     arrival_us + inc.slo_us,
+                    inc.token,
                     inc.row,
                 );
             }
         } else if let Some(fe) = &intake.fe {
             let mut msgs: Vec<FromFrontend> = Vec::new();
             if !intake.disconnected {
-                match fe.acc_rx.recv_timeout(Duration::from_micros(500)) {
+                match fe.acc_rx.recv_timeout(self.drain_wait()) {
                     Ok(m) => {
                         msgs.push(m);
                         while let Ok(m) = fe.acc_rx.try_recv() {
@@ -1472,6 +1607,7 @@ where
                             &mut self.jit,
                             &mut self.metrics,
                             &self.slots,
+                            &mut self.wire,
                             Accepted {
                                 stream: adm.stream,
                                 group: adm.group,
@@ -1481,8 +1617,20 @@ where
                                 arrival_us,
                                 independent: self.independent,
                                 row: adm.row,
+                                token: adm.token,
                             },
                         );
+                    }
+                    FromFrontend::Rejected {
+                        token,
+                        class,
+                        reason,
+                    } => {
+                        // per-class reject totals already live on the
+                        // frontend's report; only the reason decomposition
+                        // and the wire reply land here
+                        self.metrics.reject_reason(reason, class);
+                        self.wire.emit(token, OpOutcome::Rejected(reason));
                     }
                     FromFrontend::Retire(ids) => {
                         for id in ids {
@@ -1501,6 +1649,7 @@ where
         class: SloClass,
         arrival_us: f64,
         deadline_us: f64,
+        token: u64,
         row: Vec<f32>,
     ) {
         // the sync gate owns the shaper here — same contract as the
@@ -1509,6 +1658,9 @@ where
         // virtual and wall clocks (both advance it before draining).
         if !self.shaper.admit(tenant, self.jit.now_us) {
             self.metrics.shaped_request(tenant, class);
+            self.metrics.reject_reason(RejectReason::RateLimited, class);
+            self.wire
+                .emit(token, OpOutcome::Rejected(RejectReason::RateLimited));
             return;
         }
         let (parallelism, device_backlog_us) =
@@ -1520,6 +1672,7 @@ where
             &self.admission,
             &mut self.metrics,
             &self.slots,
+            &mut self.wire,
             AdmitReq {
                 group,
                 tenant,
@@ -1530,6 +1683,7 @@ where
                 parallelism,
                 device_backlog_us,
                 row,
+                token,
             },
         );
     }
@@ -1610,6 +1764,17 @@ where
         let completions = self.jit.finish_launch(d.ticket, d.done_us, d.run);
         for c in &completions {
             record_completion(&mut self.metrics, c);
+            if let Some(token) = self.wire.tokens.remove(&c.op.id) {
+                let outcome = if c.failed {
+                    OpOutcome::Failed
+                } else {
+                    OpOutcome::Done {
+                        latency_us: c.latency_us(),
+                        met_deadline: c.met_deadline,
+                    }
+                };
+                self.wire.emit(token, outcome);
+            }
         }
         if ok {
             if let Some(p) = self.placement.as_mut() {
@@ -1667,6 +1832,7 @@ mod tests {
         streams: BTreeMap<(u32, u64), u32>,
         admission: Admission,
         metrics: ServeMetrics,
+        wire: WireSink,
     }
 
     impl<'b> Gate<'b> {
@@ -1678,6 +1844,7 @@ mod tests {
                 streams: BTreeMap::new(),
                 admission: Admission::default(),
                 metrics: ServeMetrics::default(),
+                wire: WireSink::default(),
             }
         }
 
@@ -1718,6 +1885,7 @@ mod tests {
                 &self.admission,
                 &mut self.metrics,
                 &slots(),
+                &mut self.wire,
                 AdmitReq {
                     group: 0,
                     tenant,
@@ -1728,6 +1896,7 @@ mod tests {
                     parallelism,
                     device_backlog_us,
                     row: vec![0.0; 4],
+                    token: 0,
                 },
             );
         }

@@ -148,6 +148,46 @@ pub const STALE_VIEW_US: f64 = 2_000.0;
 /// stream set.
 pub const FRONTEND_EPOCH_US: f64 = 200_000.0;
 
+/// Why a request was shed — the taxonomy carried on `FromFrontend`
+/// rejection records and folded per class into
+/// `ServeMetrics::rejects_by_reason`, so the wire intake can tell a
+/// client *why* its op never reached the window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The bounded-queue policy priced the request out (queue depth,
+    /// doomed slack, unknown group, or a full window downstream).
+    QueueFull,
+    /// The tenant's token bucket had no token — shed before pricing.
+    RateLimited,
+    /// Best-effort shed outright because the published view was older
+    /// than [`STALE_VIEW_US`] (frontend path only).
+    StaleShed,
+}
+
+impl RejectReason {
+    /// All reasons, in [`RejectReason::index`] order.
+    pub const ALL: [RejectReason; 3] =
+        [RejectReason::QueueFull, RejectReason::RateLimited, RejectReason::StaleShed];
+
+    /// Dense index for per-reason counter arrays.
+    pub fn index(self) -> usize {
+        match self {
+            RejectReason::QueueFull => 0,
+            RejectReason::RateLimited => 1,
+            RejectReason::StaleShed => 2,
+        }
+    }
+
+    /// Wire/render name.
+    pub fn name(self) -> &'static str {
+        match self {
+            RejectReason::QueueFull => "queue_full",
+            RejectReason::RateLimited => "rate_limited",
+            RejectReason::StaleShed => "stale_shed",
+        }
+    }
+}
+
 /// One request at the frontend gate: the pricing inputs that vary per
 /// request (bundled so call sites cannot transpose adjacent scalars).
 #[derive(Debug, Clone, Copy)]
@@ -534,8 +574,25 @@ impl FrontendGate {
         req: &GateRequest,
         now_us: f64,
     ) -> Admit {
+        match self.decide_reason(view, group, req, now_us) {
+            None => Admit::Accept,
+            Some(_) => Admit::Reject,
+        }
+    }
+
+    /// [`FrontendGate::decide`] with the shed taxonomy attached: `None`
+    /// is an accept, `Some(reason)` says why the request was turned away
+    /// — what the frontend stage stamps on its `FromFrontend` rejection
+    /// records so the wire intake can answer the client honestly.
+    pub fn decide_reason(
+        &mut self,
+        view: &AdmissionView,
+        group: u64,
+        req: &GateRequest,
+        now_us: f64,
+    ) -> Option<RejectReason> {
         let Some(gv) = view.groups.get(group as usize) else {
-            return Admit::Reject;
+            return Some(RejectReason::QueueFull);
         };
         let s = req.stream.0;
         self.active.insert(s);
@@ -545,7 +602,7 @@ impl FrontendGate {
         if req.class == SloClass::BestEffort
             && view.published.elapsed().as_secs_f64() * 1e6 > STALE_VIEW_US
         {
-            return Admit::Reject;
+            return Some(RejectReason::StaleShed);
         }
         let extras = GateExtras {
             queued: self.in_channel(view, group) as u32,
@@ -566,8 +623,10 @@ impl FrontendGate {
             // grow on demand: callers may price streams interned elsewhere
             self.ensure_stream(s, group);
             *self.accepted_by_stream.entry(s).or_insert(0) += 1;
+            None
+        } else {
+            Some(RejectReason::QueueFull)
         }
-        d
     }
 }
 
@@ -907,6 +966,42 @@ mod tests {
             ..req(s.0, 1e9)
         };
         assert_eq!(gate.decide(&v, 0, &crit, 0.0), Admit::Accept);
+    }
+
+    #[test]
+    fn decide_reason_matches_decide_and_names_the_shed() {
+        // unknown group → queue-full taxonomy
+        let v = view(gview(0, 0));
+        let mut gate = FrontendGate::new(Admission::default(), 1);
+        assert_eq!(
+            gate.decide_reason(&v, 9, &req(0, 1e9), 0.0),
+            Some(RejectReason::QueueFull)
+        );
+        // priced out by the bounded queue → queue-full
+        let mut gate = FrontendGate::new(Admission::new(1), 1);
+        let s = gate.intern(0, 0);
+        assert_eq!(gate.decide_reason(&v, 0, &req(s.0, 1e9), 0.0), None);
+        assert_eq!(
+            gate.decide_reason(&v, 0, &req(s.0, 1e9), 0.0),
+            Some(RejectReason::QueueFull)
+        );
+        // best-effort on a stale view → stale-shed, standard unaffected
+        let mut gate = FrontendGate::new(Admission::new(64), 1);
+        let s = gate.intern(0, 0);
+        let mut stale = view(gview(0, 0));
+        stale.published = Instant::now()
+            - std::time::Duration::from_micros(2 * STALE_VIEW_US as u64);
+        let be = GateRequest {
+            class: SloClass::BestEffort,
+            ..req(s.0, 1e9)
+        };
+        assert_eq!(
+            gate.decide_reason(&stale, 0, &be, 0.0),
+            Some(RejectReason::StaleShed)
+        );
+        assert_eq!(gate.decide_reason(&stale, 0, &req(s.0, 1e9), 0.0), None);
+        // the wrapper agrees with the taxonomy
+        assert_eq!(gate.decide(&stale, 0, &be, 0.0), Admit::Reject);
     }
 
     #[test]

@@ -1,0 +1,203 @@
+//! The wire load generator: replays a timed wire workload against a
+//! serve endpoint over real TCP connections and reports CLIENT-observed
+//! latency — the number the server's own histograms structurally cannot
+//! contain (it includes framing, kernel socket queues, and the reply
+//! path). Shared by `vliwd loadgen`, `vliwd bench --wire`, and the
+//! loopback e2e tests.
+//!
+//! Streams stick to connections (`tenant % conns`), so a dependent
+//! stream's requests ride one socket in program order — the server side
+//! guarantees per-connection order through its shards, which makes the
+//! pair an end-to-end ordering contract.
+
+use std::collections::HashMap;
+use std::io;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::serve::intake::wire::{
+    decode_reply, encode_request, read_frame, write_frame, FrameKind, WireOpStatus,
+};
+use crate::util::stats::LatencyHist;
+use crate::util::threadpool::Stage;
+use crate::workload::wire::TimedWireRequest;
+
+/// How long a reader waits on a quiet socket before giving up on
+/// outstanding replies.
+const REPLY_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// What the load generator observed, aggregated over all connections.
+#[derive(Default)]
+pub struct LoadgenReport {
+    /// Request frames written.
+    pub sent_batches: u64,
+    /// Ops inside those frames.
+    pub sent_ops: u64,
+    /// Reply frames received.
+    pub replies: u64,
+    /// Per-op statuses inside the replies.
+    pub ok_ops: u64,
+    pub rejected_ops: u64,
+    pub failed_ops: u64,
+    /// Ops that completed within their deadline (server-judged).
+    pub met_ops: u64,
+    /// Client-observed per-BATCH latency: frame write → reply read, µs.
+    pub latency: LatencyHist,
+    /// Connections that gave up waiting for outstanding replies.
+    pub timeouts: u64,
+}
+
+impl LoadgenReport {
+    /// Client-side attainment: ops confirmed on-deadline over ops sent.
+    /// Unanswered ops count against it — from the client's chair a lost
+    /// reply and a miss are the same thing.
+    pub fn attainment(&self) -> f64 {
+        if self.sent_ops == 0 {
+            1.0
+        } else {
+            self.met_ops as f64 / self.sent_ops as f64
+        }
+    }
+
+    fn merge(&mut self, o: &LoadgenReport) {
+        self.sent_batches += o.sent_batches;
+        self.sent_ops += o.sent_ops;
+        self.replies += o.replies;
+        self.ok_ops += o.ok_ops;
+        self.rejected_ops += o.rejected_ops;
+        self.failed_ops += o.failed_ops;
+        self.met_ops += o.met_ops;
+        self.latency.merge(&o.latency);
+        self.timeouts += o.timeouts;
+    }
+}
+
+/// One connection's paced send schedule.
+struct ConnWork {
+    /// (send at µs from run start, client id, encoded payload, op count)
+    items: Vec<(f64, u64, Vec<u8>, u64)>,
+}
+
+/// Replay `reqs` (already timed and sorted — see
+/// [`crate::workload::wire::trace_to_wire`]) over `conns` connections.
+/// Each connection runs a paced writer thread and a reader thread;
+/// returns when every connection has its replies or timed out.
+pub fn run_loadgen(
+    addr: SocketAddr,
+    reqs: &[TimedWireRequest],
+    conns: usize,
+) -> io::Result<LoadgenReport> {
+    let conns = conns.max(1);
+    let mut per_conn: Vec<ConnWork> = (0..conns).map(|_| ConnWork { items: vec![] }).collect();
+    for r in reqs {
+        per_conn[(r.tenant as usize) % conns].items.push((
+            r.at_us,
+            r.req.id,
+            encode_request(&r.req),
+            r.req.ops.len() as u64,
+        ));
+    }
+    let t0 = Instant::now();
+    let mut writers: Vec<Stage<LoadgenReport>> = Vec::new();
+    let mut readers: Vec<Stage<LoadgenReport>> = Vec::new();
+    for (c, work) in per_conn.into_iter().enumerate() {
+        if work.items.is_empty() {
+            continue;
+        }
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        let read_half = stream.try_clone()?;
+        let sent_times: Arc<Mutex<HashMap<u64, Instant>>> = Arc::default();
+        let sent = Arc::new(AtomicU64::new(0));
+        let done = Arc::new(AtomicBool::new(false));
+
+        let w_times = Arc::clone(&sent_times);
+        let w_sent = Arc::clone(&sent);
+        let w_done = Arc::clone(&done);
+        writers.push(Stage::spawn(&format!("loadgen-w{c}"), move || {
+            let mut stream = stream;
+            let mut rep = LoadgenReport::default();
+            for (at_us, id, payload, n_ops) in work.items {
+                let target = Duration::from_micros(at_us as u64);
+                let elapsed = t0.elapsed();
+                if target > elapsed {
+                    std::thread::sleep(target - elapsed);
+                }
+                // stamp BEFORE the write so the reply can never race
+                // the bookkeeping
+                w_times
+                    .lock()
+                    .expect("sent times poisoned")
+                    .insert(id, Instant::now());
+                if write_frame(&mut stream, FrameKind::Request, &payload).is_err() {
+                    w_times.lock().expect("sent times poisoned").remove(&id);
+                    break;
+                }
+                rep.sent_batches += 1;
+                rep.sent_ops += n_ops;
+                w_sent.fetch_add(1, Ordering::SeqCst);
+            }
+            w_done.store(true, Ordering::SeqCst);
+            rep
+        }));
+
+        readers.push(Stage::spawn(&format!("loadgen-r{c}"), move || {
+            let mut stream = read_half;
+            let _ = stream.set_read_timeout(Some(REPLY_TIMEOUT));
+            let mut rep = LoadgenReport::default();
+            loop {
+                if done.load(Ordering::SeqCst) && rep.replies >= sent.load(Ordering::SeqCst)
+                {
+                    break;
+                }
+                match read_frame(&mut stream) {
+                    Ok(f) if f.kind == FrameKind::Reply => {
+                        let Ok(reply) = decode_reply(&f.payload) else {
+                            break;
+                        };
+                        rep.replies += 1;
+                        if let Some(t) = sent_times
+                            .lock()
+                            .expect("sent times poisoned")
+                            .remove(&reply.id)
+                        {
+                            rep.latency.record_us(t.elapsed().as_secs_f64() * 1e6);
+                        }
+                        for op in reply.ops {
+                            match op {
+                                WireOpStatus::Ok { met_deadline, .. } => {
+                                    rep.ok_ops += 1;
+                                    if met_deadline {
+                                        rep.met_ops += 1;
+                                    }
+                                }
+                                WireOpStatus::Rejected { .. } => rep.rejected_ops += 1,
+                                WireOpStatus::Failed => rep.failed_ops += 1,
+                            }
+                        }
+                    }
+                    Ok(_) => break, // error frame: the server is hanging up
+                    Err(e)
+                        if e.kind() == io::ErrorKind::WouldBlock
+                            || e.kind() == io::ErrorKind::TimedOut =>
+                    {
+                        rep.timeouts += 1;
+                        break;
+                    }
+                    Err(_) => break,
+                }
+            }
+            rep
+        }));
+    }
+    let mut total = LoadgenReport::default();
+    for w in writers {
+        total.merge(&w.join());
+    }
+    for r in readers {
+        total.merge(&r.join());
+    }
+    Ok(total)
+}

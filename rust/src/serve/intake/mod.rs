@@ -1,0 +1,413 @@
+//! Network intake: the real wire in front of the serving engine.
+//!
+//! `vliwd serve --listen` binds a TCP listener and feeds the ONE serving
+//! event loop ([`crate::serve::engine`]) from sockets instead of an
+//! in-process trace generator. The design splits into four thread roles
+//! and one table; everything else is the existing engine, untouched.
+//!
+//! # Wire format
+//!
+//! Every message is one frame: a 6-byte header — `version: u8`,
+//! `kind: u8` (0 = request, 1 = reply, 2 = error), `len: u32`
+//! little-endian — followed by `len` bytes of JSON payload
+//! ([`wire::MAX_FRAME_LEN`] cap). **Version negotiation** is
+//! fail-closed: the server speaks exactly [`wire::WIRE_VERSION`]; a
+//! frame stamped with any other version is answered with an error frame
+//! (which names the server's version) and the connection is closed —
+//! the client downgrades and reconnects.
+//!
+//! A **request** payload is `{"id": u64, "ops": [{tenant, model,
+//! slo_us, class, seed}, …]}` — one op or a client-side batch of up to
+//! [`wire::MAX_BATCH_OPS`]. Input rows are expanded server-side from
+//! `seed` (deterministic hash01 rows, same as every other drive mode):
+//! the bench wire carries intent, not tensors. A **reply** payload is
+//! `{"id", "ops": [status, …]}`, index-aligned with the request.
+//!
+//! # Batch and reply semantics
+//!
+//! Intake decomposes a client batch into N independent engine requests
+//! stamped with one shared batch id — *re-coalescing them into
+//! superkernels is the JIT's job*, that is the whole point of the
+//! paper's OoO window. The batch gets exactly ONE reply, sent when the
+//! LAST member reaches a terminal state. The **partial-accept
+//! contract**: members succeed or die individually, and the reply
+//! carries a per-op status — `ok` (with server-side latency and
+//! deadline attainment), `rejected` (with the
+//! [`crate::serve::frontend::RejectReason`] name:
+//! `queue_full`, `rate_limited`, `stale_shed`, or `unknown_model`), or
+//! `failed`. A batch with some ops rejected at the gate and others
+//! completed is normal, not an error.
+//!
+//! # Threading model
+//!
+//! * **Acceptor** (`vliw-accept`, one thread) owns the listener. Each
+//!   accepted connection is handed to shard `conn_id % shards` and a
+//!   [`Notify`] pulse wakes the shard — so post-idle accept latency is
+//!   not floored by the shards' poll interval.
+//! * **Shard workers** (`vliw-intake-N`) own their connections' *read*
+//!   halves (non-blocking; a [`wire::FrameBuf`] per connection keeps
+//!   frame alignment across split reads). A connection lives on ONE
+//!   shard for its whole life, and a shard decodes and forwards frames
+//!   in arrival order over one mpsc sender — so per-stream program
+//!   order is preserved end to end for clients that keep a stream on
+//!   one connection. Shards register each batch in the [`ReplyTable`]
+//!   *before* forwarding its ops (no completion can race the
+//!   registration) and time decode + accept-to-forward latency into
+//!   [`crate::serve::metrics::IntakeMetrics`].
+//! * **Engine** (`vliw-engine`) runs `Server::run_wire`: the standard
+//!   wall-clock loop fed by the shards' channel, with every terminal
+//!   op outcome routed out through the engine's reply sink.
+//! * **Reply router** (`vliw-reply`, one thread) drains the sink,
+//!   resolves tokens against the [`ReplyTable`], and — when a batch's
+//!   last member lands — writes the single reply frame on the
+//!   connection's *write* half (a mutex-guarded clone of the socket;
+//!   the shard never writes, the router never reads).
+//!
+//! A client disconnect purges its pending batches from the table
+//! (bounded bookkeeping under churn); outcome events for already-purged
+//! batches count as `orphan_events` and are dropped.
+
+pub mod loadgen;
+pub mod shard;
+pub mod wire;
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use crate::serve::engine::{Incoming, OpEvent, OpOutcome};
+use crate::serve::metrics::IntakeShardMetrics;
+use crate::serve::server::{ModelBackend, Server, ServeReport};
+use crate::util::threadpool::{Notify, Stage};
+use crate::workload::trace::TenantSpec;
+
+use shard::IntakeShardReport;
+use wire::{encode_reply, write_frame, FrameKind, WireOpStatus, WireReply};
+
+/// One batch awaiting its last member.
+struct PendingBatch {
+    conn: u64,
+    client_id: u64,
+    remaining: usize,
+    ops: Vec<Option<WireOpStatus>>,
+    writer: Arc<Mutex<TcpStream>>,
+}
+
+#[derive(Default)]
+struct ReplyState {
+    /// batch id → pending batch.
+    pending: HashMap<u64, PendingBatch>,
+    replies: u64,
+    dropped_replies: u64,
+    orphan_events: u64,
+}
+
+/// Tracks per-batch completion across threads: shards register, the
+/// reply router resolves, disconnects purge. Tokens pack
+/// `(batch id << 16) | op index`; token 0 is reserved for non-wire
+/// requests and never reaches this table.
+#[derive(Default)]
+pub struct ReplyTable {
+    state: Mutex<ReplyState>,
+}
+
+impl ReplyTable {
+    /// Register a batch BEFORE its ops are forwarded to the engine, so
+    /// no completion can arrive for an unregistered batch.
+    fn register(
+        &self,
+        conn: u64,
+        batch: u64,
+        client_id: u64,
+        n: usize,
+        writer: Arc<Mutex<TcpStream>>,
+    ) {
+        let mut s = self.state.lock().expect("reply table poisoned");
+        s.pending.insert(
+            batch,
+            PendingBatch {
+                conn,
+                client_id,
+                remaining: n,
+                ops: vec![None; n],
+                writer,
+            },
+        );
+    }
+
+    /// Record one op's terminal status; when it is the batch's last,
+    /// write the single reply frame and retire the batch.
+    fn resolve(&self, token: u64, status: WireOpStatus) {
+        let batch = token >> 16;
+        let idx = (token & 0xffff) as usize;
+        // complete-batch extraction happens under the lock; the socket
+        // write happens OUTSIDE it, so a stalling client cannot block
+        // the shards' registrations
+        let done = {
+            let mut s = self.state.lock().expect("reply table poisoned");
+            if !s.pending.contains_key(&batch) {
+                // the client disconnected and the batch was purged —
+                // the engine's late outcome has nowhere to land
+                s.orphan_events += 1;
+                return;
+            }
+            let b = s.pending.get_mut(&batch).expect("checked above");
+            if idx < b.ops.len() && b.ops[idx].is_none() {
+                b.ops[idx] = Some(status);
+                b.remaining -= 1;
+            }
+            if b.remaining > 0 {
+                return;
+            }
+            s.pending.remove(&batch).expect("batch present")
+        };
+        let reply = WireReply {
+            id: done.client_id,
+            ops: done
+                .ops
+                .into_iter()
+                .map(|st| st.unwrap_or(WireOpStatus::Failed))
+                .collect(),
+        };
+        let sent = {
+            let mut w = done.writer.lock().expect("writer poisoned");
+            write_reply_retrying(&mut w, &reply).is_ok()
+        };
+        let mut s = self.state.lock().expect("reply table poisoned");
+        if sent {
+            s.replies += 1;
+        } else {
+            s.dropped_replies += 1;
+        }
+    }
+
+    /// Purge every pending batch of a closed connection — nothing will
+    /// read its replies, and the bookkeeping must not outlive it.
+    fn drop_conn(&self, conn: u64) {
+        let mut s = self.state.lock().expect("reply table poisoned");
+        s.pending.retain(|_, b| b.conn != conn);
+    }
+
+    /// Batches still awaiting members (test hook: leak detection).
+    pub fn pending_batches(&self) -> usize {
+        self.state.lock().expect("reply table poisoned").pending.len()
+    }
+
+    fn stats(&self) -> (u64, u64, u64) {
+        let s = self.state.lock().expect("reply table poisoned");
+        (s.replies, s.dropped_replies, s.orphan_events)
+    }
+}
+
+/// Write one reply frame on a socket whose clone may be in non-blocking
+/// mode (the read half set it): retry `WouldBlock` briefly instead of
+/// dropping the reply. Replies are small; a full send buffer clears in
+/// microseconds on loopback.
+fn write_reply_retrying(w: &mut TcpStream, reply: &WireReply) -> io::Result<()> {
+    let payload = encode_reply(reply);
+    for _ in 0..20_000 {
+        match write_frame(w, FrameKind::Reply, &payload) {
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_micros(100));
+            }
+            other => return other,
+        }
+    }
+    Err(io::Error::new(io::ErrorKind::TimedOut, "reply write stalled"))
+}
+
+/// Map an engine outcome to the wire status taxonomy.
+fn status_of(outcome: OpOutcome) -> WireOpStatus {
+    match outcome {
+        OpOutcome::Done {
+            latency_us,
+            met_deadline,
+        } => WireOpStatus::Ok {
+            latency_us,
+            met_deadline,
+        },
+        OpOutcome::Failed => WireOpStatus::Failed,
+        OpOutcome::Rejected(r) => WireOpStatus::Rejected {
+            reason: r.name().to_string(),
+        },
+    }
+}
+
+/// A running wire server: the listener is bound, the intake shards, the
+/// engine, and the reply router are live. [`WireServer::shutdown`]
+/// tears the pipeline down in dependency order and returns the engine's
+/// report with the folded intake metrics.
+pub struct WireServer {
+    addr: SocketAddr,
+    table: Arc<ReplyTable>,
+    stop: Arc<AtomicBool>,
+    notify: Arc<Notify>,
+    acceptor: Stage<u64>,
+    shards: Vec<Stage<IntakeShardReport>>,
+    engine: Stage<ServeReport>,
+    router: Stage<()>,
+}
+
+impl WireServer {
+    /// The bound listen address (resolves `:0` to the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Batches still awaiting their last member (test hook).
+    pub fn pending_batches(&self) -> usize {
+        self.table.pending_batches()
+    }
+
+    /// Stop accepting, drain the shards, let the engine finish its
+    /// in-flight window, and fold intake accounting into the report.
+    pub fn shutdown(self) -> ServeReport {
+        self.stop.store(true, Ordering::SeqCst);
+        self.notify.notify();
+        let _accepted = self.acceptor.join();
+        let shard_reports: Vec<IntakeShardReport> =
+            self.shards.into_iter().map(|s| s.join()).collect();
+        // the shards dropped their engine senders: the engine sees the
+        // intake disconnect, drains its window, and returns its report
+        let mut report = self.engine.join();
+        // the engine dropped the reply sink: the router drains and exits
+        self.router.join();
+        let intake = &mut report.metrics.intake;
+        for r in &shard_reports {
+            intake.decode.merge(&r.decode);
+            intake.accept_latency.merge(&r.accept_latency);
+            intake.connections += r.connections;
+            intake.disconnects += r.disconnects;
+            for (&size, &n) in &r.batch_sizes {
+                *intake.batch_sizes.entry(size).or_insert(0) += n;
+            }
+            intake.shards.push(IntakeShardMetrics {
+                forwarded: r.forwarded,
+                peak_conns: r.peak_conns,
+            });
+        }
+        let (replies, dropped, orphans) = self.table.stats();
+        intake.replies = replies;
+        intake.dropped_replies = dropped;
+        intake.orphan_events = orphans;
+        report
+    }
+}
+
+/// Bind `listen` and serve a backend over the wire: `make` builds the
+/// [`Server`] ON the engine thread (backends need not be `Send`),
+/// `tenants` declares the served models and their rate/SLO specs, and
+/// `shards` sizes the intake worker pool. Returns once the listener is
+/// bound and every stage is live.
+pub fn serve_wire<B, F>(
+    make: F,
+    tenants: Vec<TenantSpec>,
+    listen: &str,
+    shards: usize,
+) -> io::Result<WireServer>
+where
+    B: ModelBackend + 'static,
+    F: FnOnce() -> Server<B> + Send + 'static,
+{
+    let shards = shards.max(1);
+    let listener = TcpListener::bind(listen)?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+
+    let (in_tx, in_rx) = mpsc::channel::<Incoming>();
+    let (ev_tx, ev_rx) = mpsc::channel::<OpEvent>();
+    let (slot_tx, slot_rx) = mpsc::channel::<BTreeMap<String, (u64, usize)>>();
+
+    let engine_tenants = tenants;
+    let engine = Stage::spawn("vliw-engine", move || {
+        let mut server = make();
+        // group id = sorted-name index, the same ordering `model_slots`
+        // derives inside `run_wire` — the shards map model names to
+        // groups with exactly the table the engine will use
+        let names: BTreeSet<String> =
+            engine_tenants.iter().map(|t| t.model.clone()).collect();
+        let map: BTreeMap<String, (u64, usize)> = names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.clone(), (i as u64, server.backend().d_in(n))))
+            .collect();
+        let _ = slot_tx.send(map);
+        server.run_wire(&engine_tenants, in_rx, ev_tx)
+    });
+    let slot_map = slot_rx
+        .recv()
+        .map_err(|_| io::Error::other("engine thread died at startup"))?;
+
+    let table = Arc::new(ReplyTable::default());
+    let stop = Arc::new(AtomicBool::new(false));
+    let notify = Arc::new(Notify::new());
+    let batch_ids = Arc::new(AtomicU64::new(1));
+
+    let mut conn_txs = Vec::with_capacity(shards);
+    let mut shard_stages = Vec::with_capacity(shards);
+    for i in 0..shards {
+        let (conn_tx, conn_rx) = mpsc::channel::<(u64, TcpStream)>();
+        conn_txs.push(conn_tx);
+        let ctx = shard::ShardCtx {
+            conn_rx,
+            engine_tx: in_tx.clone(),
+            table: Arc::clone(&table),
+            slot_map: slot_map.clone(),
+            stop: Arc::clone(&stop),
+            notify: Arc::clone(&notify),
+            batch_ids: Arc::clone(&batch_ids),
+        };
+        shard_stages.push(Stage::spawn(&format!("vliw-intake-{i}"), move || {
+            shard::shard_loop(ctx)
+        }));
+    }
+    // the shards now hold the only engine senders: when they exit at
+    // shutdown the engine sees the disconnect and drains
+    drop(in_tx);
+
+    let acc_stop = Arc::clone(&stop);
+    let acc_notify = Arc::clone(&notify);
+    let acceptor = Stage::spawn("vliw-accept", move || {
+        let mut accepted = 0u64;
+        while !acc_stop.load(Ordering::SeqCst) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let id = accepted;
+                    accepted += 1;
+                    // connection → shard is a stable assignment for the
+                    // connection's lifetime: per-stream order holds as
+                    // long as a client keeps a stream on one connection
+                    let _ = conn_txs[(id % conn_txs.len() as u64) as usize]
+                        .send((id, stream));
+                    acc_notify.notify();
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(1)),
+            }
+        }
+        accepted
+    });
+
+    let router_table = Arc::clone(&table);
+    let router = Stage::spawn("vliw-reply", move || {
+        while let Ok(ev) = ev_rx.recv() {
+            router_table.resolve(ev.token, status_of(ev.outcome));
+        }
+    });
+
+    Ok(WireServer {
+        addr,
+        table,
+        stop,
+        notify,
+        acceptor,
+        shards: shard_stages,
+        engine,
+        router,
+    })
+}

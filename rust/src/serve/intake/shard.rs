@@ -1,0 +1,250 @@
+//! Intake shard workers: each owns a set of connections' read halves
+//! and pumps them non-blocking — decode, validate, register the batch,
+//! forward its ops to the engine. See the [`crate::serve::intake`]
+//! module docs for the threading model and ordering contract.
+
+use std::collections::BTreeMap;
+use std::io::{self, Read};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::runtime::golden;
+use crate::serve::engine::Incoming;
+use crate::serve::intake::wire::{
+    encode_error, write_frame, FrameBuf, FrameKind, WireOpStatus, MAX_BATCH_OPS,
+};
+use crate::serve::intake::ReplyTable;
+use crate::util::stats::LatencyHist;
+use crate::util::threadpool::Notify;
+
+/// Everything one shard worker needs, bundled for the spawn.
+pub(crate) struct ShardCtx {
+    /// New connections handed over by the acceptor.
+    pub conn_rx: mpsc::Receiver<(u64, TcpStream)>,
+    /// The engine's intake channel (per-sender FIFO: one shard's
+    /// forwards arrive in order).
+    pub engine_tx: mpsc::Sender<Incoming>,
+    pub table: Arc<ReplyTable>,
+    /// model name → (group id, d_in), in the engine's sorted-name order.
+    pub slot_map: BTreeMap<String, (u64, usize)>,
+    pub stop: Arc<AtomicBool>,
+    pub notify: Arc<Notify>,
+    /// Shared batch-id allocator (starts at 1; token 0 is reserved).
+    pub batch_ids: Arc<AtomicU64>,
+}
+
+/// One shard's thread-local accounting, folded into
+/// [`crate::serve::metrics::IntakeMetrics`] at shutdown.
+#[derive(Default)]
+pub(crate) struct IntakeShardReport {
+    /// Frame decode time (bytes → validated request), µs.
+    pub decode: LatencyHist,
+    /// Frame read → last op forwarded to the engine, µs.
+    pub accept_latency: LatencyHist,
+    /// Client batch size → request count.
+    pub batch_sizes: BTreeMap<u32, u64>,
+    /// Ops forwarded to the engine.
+    pub forwarded: u64,
+    /// Connections adopted.
+    pub connections: u64,
+    /// Connections that closed or errored.
+    pub disconnects: u64,
+    /// High-water mark of simultaneously open connections.
+    pub peak_conns: u64,
+    /// Connections dropped for protocol violations (bad version/kind/
+    /// length, malformed payload, oversized batch).
+    pub protocol_errors: u64,
+}
+
+struct Conn {
+    id: u64,
+    stream: TcpStream,
+    buf: FrameBuf,
+    /// The write half the reply router frames replies on.
+    writer: Arc<Mutex<TcpStream>>,
+}
+
+/// Why a connection left the shard.
+enum Close {
+    Eof,
+    Protocol(String),
+}
+
+/// The shard worker body: adopt connections, pump them, forward ops,
+/// sleep on the eventcount when idle. Exits on the stop flag; drops its
+/// engine sender so the engine can drain.
+pub(crate) fn shard_loop(ctx: ShardCtx) -> IntakeShardReport {
+    let mut report = IntakeShardReport::default();
+    let mut conns: Vec<Conn> = Vec::new();
+    loop {
+        // epoch BEFORE checking work sources: a pulse that lands while
+        // we pump is never lost across the idle wait below
+        let epoch = ctx.notify.epoch();
+        while let Ok((id, stream)) = ctx.conn_rx.try_recv() {
+            match adopt(id, stream) {
+                Some(conn) => {
+                    report.connections += 1;
+                    conns.push(conn);
+                }
+                None => report.disconnects += 1,
+            }
+        }
+        report.peak_conns = report.peak_conns.max(conns.len() as u64);
+        let mut progressed = false;
+        let mut closing: Vec<(usize, Close)> = Vec::new();
+        for (i, conn) in conns.iter_mut().enumerate() {
+            match pump(conn, &ctx, &mut report) {
+                Ok(moved) => progressed |= moved,
+                Err(close) => closing.push((i, close)),
+            }
+        }
+        for (i, close) in closing.into_iter().rev() {
+            let conn = conns.swap_remove(i);
+            if let Close::Protocol(msg) = close {
+                report.protocol_errors += 1;
+                // best effort: name the violation before hanging up
+                let mut w = conn.writer.lock().expect("writer poisoned");
+                let _ = write_frame(&mut *w, FrameKind::Error, &encode_error(&msg));
+            }
+            ctx.table.drop_conn(conn.id);
+            report.disconnects += 1;
+            progressed = true;
+        }
+        if ctx.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        if !progressed {
+            ctx.notify.wait_past(epoch, Duration::from_micros(500));
+        }
+    }
+    // shutdown: every live connection's pending batches are purged so
+    // the reply table never outlives its sockets
+    for conn in conns.drain(..) {
+        ctx.table.drop_conn(conn.id);
+        report.disconnects += 1;
+    }
+    report
+}
+
+/// Switch an adopted connection to non-blocking and split off its write
+/// half. `None` = the socket died during handover.
+fn adopt(id: u64, stream: TcpStream) -> Option<Conn> {
+    stream.set_nonblocking(true).ok()?;
+    stream.set_nodelay(true).ok();
+    let writer = Arc::new(Mutex::new(stream.try_clone().ok()?));
+    Some(Conn {
+        id,
+        stream,
+        buf: FrameBuf::new(),
+        writer,
+    })
+}
+
+/// Pump one connection: drain the socket into its frame buffer, then
+/// handle every complete frame. Returns whether anything moved; `Err`
+/// closes the connection.
+fn pump(
+    conn: &mut Conn,
+    ctx: &ShardCtx,
+    report: &mut IntakeShardReport,
+) -> Result<bool, Close> {
+    let mut moved = false;
+    let mut tmp = [0u8; 4096];
+    loop {
+        match conn.stream.read(&mut tmp) {
+            Ok(0) => {
+                // EOF: the peer closed. Frames already buffered are
+                // worthless — their replies have no reader.
+                return Err(Close::Eof);
+            }
+            Ok(n) => {
+                conn.buf.extend(&tmp[..n]);
+                moved = true;
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => return Err(Close::Eof),
+        }
+    }
+    loop {
+        match conn.buf.next_frame() {
+            Ok(Some(frame)) => {
+                if frame.kind != FrameKind::Request {
+                    return Err(Close::Protocol("only request frames accepted".into()));
+                }
+                handle_request(conn, &frame.payload, ctx, report)?;
+                moved = true;
+            }
+            Ok(None) => break,
+            Err(e) => return Err(Close::Protocol(e.to_string())),
+        }
+    }
+    Ok(moved)
+}
+
+/// Decode, validate, register, forward one request frame.
+fn handle_request(
+    conn: &Conn,
+    payload: &[u8],
+    ctx: &ShardCtx,
+    report: &mut IntakeShardReport,
+) -> Result<(), Close> {
+    let t_read = Instant::now();
+    let req = crate::serve::intake::wire::decode_request(payload)
+        .map_err(|e| Close::Protocol(e.to_string()))?;
+    report
+        .decode
+        .record_us(t_read.elapsed().as_secs_f64() * 1e6);
+    if req.ops.is_empty() {
+        return Err(Close::Protocol("empty batch".into()));
+    }
+    if req.ops.len() > MAX_BATCH_OPS {
+        return Err(Close::Protocol(format!(
+            "batch of {} over the {MAX_BATCH_OPS} cap",
+            req.ops.len()
+        )));
+    }
+    let batch = ctx.batch_ids.fetch_add(1, Ordering::Relaxed);
+    let n = req.ops.len();
+    // register FIRST: once ops are forwarded, completions may resolve
+    // on the router thread immediately
+    ctx.table
+        .register(conn.id, batch, req.id, n, Arc::clone(&conn.writer));
+    for (i, op) in req.ops.into_iter().enumerate() {
+        let token = (batch << 16) | i as u64;
+        let Some(&(group, d_in)) = ctx.slot_map.get(&op.model) else {
+            // an unknown model is a per-op reject, not a connection
+            // error — the partial-accept contract answers it in place
+            ctx.table.resolve(
+                token,
+                WireOpStatus::Rejected {
+                    reason: "unknown_model".to_string(),
+                },
+            );
+            continue;
+        };
+        let inc = Incoming {
+            tenant: op.tenant,
+            group,
+            slo_us: op.slo_us,
+            class: op.class,
+            arrival: Instant::now(),
+            row: golden::gen_hash01(d_in, op.seed),
+            token,
+        };
+        if ctx.engine_tx.send(inc).is_err() {
+            // engine gone (shutdown race): terminal-fail the op so the
+            // batch still answers
+            ctx.table.resolve(token, WireOpStatus::Failed);
+            continue;
+        }
+        report.forwarded += 1;
+    }
+    report
+        .accept_latency
+        .record_us(t_read.elapsed().as_secs_f64() * 1e6);
+    *report.batch_sizes.entry(n as u32).or_insert(0) += 1;
+    Ok(())
+}

@@ -1,0 +1,422 @@
+//! The framed wire protocol: a 6-byte header (`version`, `kind`,
+//! little-endian `u32` payload length) followed by a JSON payload. See
+//! the [`crate::serve::intake`] module docs for the full frame contract
+//! (version negotiation, batch/reply semantics, partial accept).
+//!
+//! Two decode paths on purpose: [`read_frame`] blocks on an owned socket
+//! (the loadgen client's reader thread), while [`FrameBuf`] accumulates
+//! whatever bytes a *non-blocking* shard socket produced and yields any
+//! complete frames — a shard worker multiplexes many connections and can
+//! never park inside one connection's half-read frame.
+
+use std::collections::BTreeMap;
+use std::io::{self, ErrorKind, Read, Write};
+
+use crate::compiler::ir::SloClass;
+use crate::util::json::{obj, Json};
+
+/// Protocol version this build speaks. A frame with any other version is
+/// answered with an [`FrameKind::Error`] frame and the connection closed
+/// (closing IS the negotiation: the client learns the server's version
+/// from the error payload).
+pub const WIRE_VERSION: u8 = 1;
+
+/// Frame header size: version (1) + kind (1) + payload length (4, LE).
+pub const HEADER_LEN: usize = 6;
+
+/// Hard payload cap — a length field past this is a protocol error, not
+/// an allocation request.
+pub const MAX_FRAME_LEN: usize = 1 << 20;
+
+/// Largest client batch one request frame may carry (tokens pack the op
+/// index into 16 bits).
+pub const MAX_BATCH_OPS: usize = 4096;
+
+/// What a frame carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Client → server: a [`WireRequest`].
+    Request,
+    /// Server → client: a [`WireReply`].
+    Reply,
+    /// Server → client: a connection-fatal protocol error (string
+    /// payload); the server closes after sending it.
+    Error,
+}
+
+impl FrameKind {
+    fn from_byte(b: u8) -> io::Result<FrameKind> {
+        match b {
+            0 => Ok(FrameKind::Request),
+            1 => Ok(FrameKind::Reply),
+            2 => Ok(FrameKind::Error),
+            other => Err(bad(format!("unknown frame kind {other}"))),
+        }
+    }
+
+    fn byte(self) -> u8 {
+        match self {
+            FrameKind::Request => 0,
+            FrameKind::Reply => 1,
+            FrameKind::Error => 2,
+        }
+    }
+}
+
+/// One decoded frame (payload still raw bytes).
+pub struct Frame {
+    pub kind: FrameKind,
+    pub payload: Vec<u8>,
+}
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(ErrorKind::InvalidData, msg)
+}
+
+/// Write one frame (header + payload) to `w`.
+pub fn write_frame(w: &mut impl Write, kind: FrameKind, payload: &[u8]) -> io::Result<()> {
+    if payload.len() > MAX_FRAME_LEN {
+        return Err(bad(format!("payload {} over cap", payload.len())));
+    }
+    let mut header = [0u8; HEADER_LEN];
+    header[0] = WIRE_VERSION;
+    header[1] = kind.byte();
+    header[2..6].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Blocking read of one complete frame — the loadgen client's reader
+/// path (the socket is owned by one thread, so parking mid-frame is
+/// fine there).
+pub fn read_frame(r: &mut impl Read) -> io::Result<Frame> {
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header)?;
+    let (kind, len) = parse_header(&header)?;
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(Frame { kind, payload })
+}
+
+fn parse_header(h: &[u8; HEADER_LEN]) -> io::Result<(FrameKind, usize)> {
+    if h[0] != WIRE_VERSION {
+        return Err(bad(format!(
+            "wire version {} (server speaks {WIRE_VERSION})",
+            h[0]
+        )));
+    }
+    let kind = FrameKind::from_byte(h[1])?;
+    let len = u32::from_le_bytes([h[2], h[3], h[4], h[5]]) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(bad(format!("frame length {len} over cap")));
+    }
+    Ok((kind, len))
+}
+
+/// Incremental frame decoder for non-blocking sockets: feed whatever
+/// bytes arrived with [`FrameBuf::extend`], pull complete frames with
+/// [`FrameBuf::next_frame`]. Frame alignment survives arbitrarily split
+/// reads because undecoded bytes simply wait in the buffer.
+#[derive(Default)]
+pub struct FrameBuf {
+    buf: Vec<u8>,
+}
+
+impl FrameBuf {
+    /// An empty buffer.
+    pub fn new() -> Self {
+        FrameBuf::default()
+    }
+
+    /// Append freshly read bytes.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Pop the next complete frame, if a whole one has arrived. An error
+    /// is connection-fatal (bad version/kind/length): the caller answers
+    /// with an error frame and drops the connection.
+    pub fn next_frame(&mut self) -> io::Result<Option<Frame>> {
+        if self.buf.len() < HEADER_LEN {
+            return Ok(None);
+        }
+        let mut header = [0u8; HEADER_LEN];
+        header.copy_from_slice(&self.buf[..HEADER_LEN]);
+        let (kind, len) = parse_header(&header)?;
+        if self.buf.len() < HEADER_LEN + len {
+            return Ok(None);
+        }
+        let payload = self.buf[HEADER_LEN..HEADER_LEN + len].to_vec();
+        self.buf.drain(..HEADER_LEN + len);
+        Ok(Some(Frame { kind, payload }))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Payloads
+// ---------------------------------------------------------------------------
+
+/// One operation inside a client request: which tenant/model it runs,
+/// its SLO, and the seed the server expands into the input row (rows are
+/// generated server-side — the bench wire carries intent, not tensors).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireOp {
+    pub tenant: u32,
+    pub model: String,
+    /// Latency SLO, µs from server-side arrival.
+    pub slo_us: f64,
+    pub class: SloClass,
+    /// Input-row seed (`golden::gen_hash01(d_in, seed)` server-side).
+    pub seed: u64,
+}
+
+/// A client request frame: one op or a client-side batch of many. The
+/// server decomposes the batch at intake and answers with exactly ONE
+/// [`WireReply`] once every member reached a terminal state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireRequest {
+    /// Client-chosen correlation id, echoed verbatim in the reply.
+    pub id: u64,
+    pub ops: Vec<WireOp>,
+}
+
+/// Terminal status of one op in a reply — the partial-accept contract:
+/// some members of a batch may complete while others are rejected or
+/// fail, and each reports its own outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireOpStatus {
+    Ok { latency_us: f64, met_deadline: bool },
+    Rejected { reason: String },
+    Failed,
+}
+
+/// The single reply to a [`WireRequest`], `ops` aligned index-for-index
+/// with the request's ops.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireReply {
+    pub id: u64,
+    pub ops: Vec<WireOpStatus>,
+}
+
+/// Encode a request payload (JSON bytes; frame it with
+/// [`write_frame`]`(…, FrameKind::Request, …)`).
+pub fn encode_request(req: &WireRequest) -> Vec<u8> {
+    let ops: Vec<Json> = req
+        .ops
+        .iter()
+        .map(|op| {
+            obj(vec![
+                ("tenant", Json::Num(op.tenant as f64)),
+                ("model", Json::Str(op.model.clone())),
+                ("slo_us", Json::Num(op.slo_us)),
+                ("class", Json::Str(op.class.name().to_string())),
+                ("seed", Json::Num(op.seed as f64)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("id", Json::Num(req.id as f64)),
+        ("ops", Json::Arr(ops)),
+    ])
+    .to_string_compact()
+    .into_bytes()
+}
+
+/// Decode a request payload.
+pub fn decode_request(payload: &[u8]) -> io::Result<WireRequest> {
+    let text = std::str::from_utf8(payload).map_err(|_| bad("non-utf8 payload".into()))?;
+    let j = Json::parse(text).map_err(|e| bad(format!("{e}")))?;
+    let id = j.req_u64("id").map_err(|e| bad(format!("{e}")))?;
+    let ops_json = j
+        .get("ops")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| bad("missing 'ops' array".into()))?;
+    let mut ops = Vec::with_capacity(ops_json.len());
+    for op in ops_json {
+        let class_name = op.req_str("class").map_err(|e| bad(format!("{e}")))?;
+        let class = SloClass::parse(&class_name)
+            .ok_or_else(|| bad(format!("unknown class '{class_name}'")))?;
+        ops.push(WireOp {
+            tenant: op.req_u64("tenant").map_err(|e| bad(format!("{e}")))? as u32,
+            model: op.req_str("model").map_err(|e| bad(format!("{e}")))?,
+            slo_us: op.req_f64("slo_us").map_err(|e| bad(format!("{e}")))?,
+            class,
+            seed: op.req_u64("seed").map_err(|e| bad(format!("{e}")))?,
+        });
+    }
+    Ok(WireRequest { id, ops })
+}
+
+/// Encode a reply payload.
+pub fn encode_reply(reply: &WireReply) -> Vec<u8> {
+    let ops: Vec<Json> = reply
+        .ops
+        .iter()
+        .map(|s| match s {
+            WireOpStatus::Ok {
+                latency_us,
+                met_deadline,
+            } => obj(vec![
+                ("status", Json::Str("ok".into())),
+                ("latency_us", Json::Num(*latency_us)),
+                ("met_deadline", Json::Bool(*met_deadline)),
+            ]),
+            WireOpStatus::Rejected { reason } => obj(vec![
+                ("status", Json::Str("rejected".into())),
+                ("reason", Json::Str(reason.clone())),
+            ]),
+            WireOpStatus::Failed => obj(vec![("status", Json::Str("failed".into()))]),
+        })
+        .collect();
+    obj(vec![
+        ("id", Json::Num(reply.id as f64)),
+        ("ops", Json::Arr(ops)),
+    ])
+    .to_string_compact()
+    .into_bytes()
+}
+
+/// Decode a reply payload.
+pub fn decode_reply(payload: &[u8]) -> io::Result<WireReply> {
+    let text = std::str::from_utf8(payload).map_err(|_| bad("non-utf8 payload".into()))?;
+    let j = Json::parse(text).map_err(|e| bad(format!("{e}")))?;
+    let id = j.req_u64("id").map_err(|e| bad(format!("{e}")))?;
+    let ops_json = j
+        .get("ops")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| bad("missing 'ops' array".into()))?;
+    let mut ops = Vec::with_capacity(ops_json.len());
+    for op in ops_json {
+        let status = op.req_str("status").map_err(|e| bad(format!("{e}")))?;
+        ops.push(match status.as_str() {
+            "ok" => WireOpStatus::Ok {
+                latency_us: op.req_f64("latency_us").map_err(|e| bad(format!("{e}")))?,
+                met_deadline: matches!(op.get("met_deadline"), Some(Json::Bool(true))),
+            },
+            "rejected" => WireOpStatus::Rejected {
+                reason: op.req_str("reason").map_err(|e| bad(format!("{e}")))?,
+            },
+            "failed" => WireOpStatus::Failed,
+            other => return Err(bad(format!("unknown status '{other}'"))),
+        });
+    }
+    Ok(WireReply { id, ops })
+}
+
+/// Frame an error message (sent before the server closes a broken
+/// connection; the payload is the bare message string as JSON).
+pub fn encode_error(msg: &str) -> Vec<u8> {
+    let mut m = BTreeMap::new();
+    m.insert("error".to_string(), Json::Str(msg.to_string()));
+    Json::Obj(m).to_string_compact().into_bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_request() -> WireRequest {
+        WireRequest {
+            id: 42,
+            ops: vec![
+                WireOp {
+                    tenant: 0,
+                    model: "mlp_small".into(),
+                    slo_us: 25_000.0,
+                    class: SloClass::Critical,
+                    seed: 7,
+                },
+                WireOp {
+                    tenant: 3,
+                    model: "gemmnet6".into(),
+                    slo_us: 60_000.0,
+                    class: SloClass::BestEffort,
+                    seed: 8,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn request_round_trips_through_a_frame() {
+        let req = sample_request();
+        let mut wire: Vec<u8> = Vec::new();
+        write_frame(&mut wire, FrameKind::Request, &encode_request(&req)).unwrap();
+        let frame = read_frame(&mut wire.as_slice()).unwrap();
+        assert_eq!(frame.kind, FrameKind::Request);
+        assert_eq!(decode_request(&frame.payload).unwrap(), req);
+    }
+
+    #[test]
+    fn reply_round_trips_with_partial_accept_statuses() {
+        let reply = WireReply {
+            id: 42,
+            ops: vec![
+                WireOpStatus::Ok {
+                    latency_us: 1_234.5,
+                    met_deadline: true,
+                },
+                WireOpStatus::Rejected {
+                    reason: "queue_full".into(),
+                },
+                WireOpStatus::Failed,
+            ],
+        };
+        let decoded = decode_reply(&encode_reply(&reply)).unwrap();
+        assert_eq!(decoded, reply);
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let mut wire: Vec<u8> = Vec::new();
+        write_frame(&mut wire, FrameKind::Request, b"{}").unwrap();
+        wire[0] = 2; // future version
+        let err = read_frame(&mut wire.as_slice()).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidData);
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
+    fn oversized_length_is_rejected_without_allocating() {
+        let mut header = [0u8; HEADER_LEN];
+        header[0] = WIRE_VERSION;
+        header[1] = FrameKind::Request.byte();
+        header[2..6].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_frame(&mut header.as_slice()).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn frame_buf_reassembles_split_and_coalesced_frames() {
+        let req = sample_request();
+        let mut wire: Vec<u8> = Vec::new();
+        // two frames back to back, then fed one byte at a time
+        write_frame(&mut wire, FrameKind::Request, &encode_request(&req)).unwrap();
+        write_frame(&mut wire, FrameKind::Reply, b"{\"id\":1,\"ops\":[]}").unwrap();
+        let mut buf = FrameBuf::new();
+        let mut frames = Vec::new();
+        for b in &wire {
+            buf.extend(std::slice::from_ref(b));
+            while let Some(f) = buf.next_frame().unwrap() {
+                frames.push(f);
+            }
+        }
+        assert_eq!(frames.len(), 2);
+        assert_eq!(decode_request(&frames[0].payload).unwrap(), req);
+        assert_eq!(frames[1].kind, FrameKind::Reply);
+        // and in one gulp
+        let mut buf = FrameBuf::new();
+        buf.extend(&wire);
+        assert!(buf.next_frame().unwrap().is_some());
+        assert!(buf.next_frame().unwrap().is_some());
+        assert!(buf.next_frame().unwrap().is_none());
+    }
+
+    #[test]
+    fn frame_buf_surfaces_bad_header_as_fatal() {
+        let mut buf = FrameBuf::new();
+        buf.extend(&[9, 0, 0, 0, 0, 0]); // bad version
+        assert!(buf.next_frame().is_err());
+    }
+}

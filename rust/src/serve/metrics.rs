@@ -13,8 +13,65 @@ use std::collections::BTreeMap;
 use crate::compiler::ir::SloClass;
 use crate::compiler::jit::{JitStats, LaunchRecord};
 use crate::estimate::EstimatorStats;
-use crate::serve::frontend::FrontendReport;
+use crate::serve::frontend::{FrontendReport, RejectReason};
 use crate::util::stats::LatencyHist;
+
+/// Per-shard accounting of the socket intake pool — how much wire work
+/// one shard worker forwarded and how many connections it owned at peak
+/// (the per-shard depth signal for deciding when to grow the pool).
+#[derive(Debug, Clone, Default)]
+pub struct IntakeShardMetrics {
+    /// Wire ops this shard forwarded into the engine's intake channel.
+    pub forwarded: u64,
+    /// Peak simultaneous connections owned by this shard.
+    pub peak_conns: u64,
+}
+
+/// The socket intake subsystem's accounting, rendered with the serve
+/// report and emitted in the wire bench JSON. Populated only by wire
+/// runs (`vliwd serve --listen`, `vliwd bench --wire`); all-zero — and
+/// unrendered — for trace-driven runs.
+#[derive(Debug, Clone, Default)]
+pub struct IntakeMetrics {
+    /// Frame decode time (header + JSON payload → request), µs.
+    pub decode: LatencyHist,
+    /// Wire accept latency: frame fully read → every op of the request
+    /// forwarded into the engine's intake channel, µs.
+    pub accept_latency: LatencyHist,
+    /// Connections accepted over the run.
+    pub connections: u64,
+    /// Connections that closed (client EOF, protocol error, shutdown).
+    pub disconnects: u64,
+    /// Histogram of client batch sizes (ops per wire request).
+    pub batch_sizes: BTreeMap<u32, u64>,
+    /// Per-shard depth/forwarding accounting, indexed by shard id.
+    pub shards: Vec<IntakeShardMetrics>,
+    /// Replies written back to clients.
+    pub replies: u64,
+    /// Replies dropped because the client was gone at write time.
+    pub dropped_replies: u64,
+    /// Completion events whose batch was already purged (client
+    /// disconnected mid-flight) — bounded bookkeeping, not a leak.
+    pub orphan_events: u64,
+}
+
+impl IntakeMetrics {
+    /// Wire requests decoded (one per client batch).
+    pub fn requests(&self) -> u64 {
+        self.batch_sizes.values().sum()
+    }
+
+    /// Mean client batch size (ops per wire request).
+    pub fn mean_batch(&self) -> f64 {
+        let reqs = self.requests();
+        if reqs == 0 {
+            0.0
+        } else {
+            let ops: u64 = self.batch_sizes.iter().map(|(b, n)| *b as u64 * n).sum();
+            ops as f64 / reqs as f64
+        }
+    }
+}
 
 /// Metrics for one tenant.
 #[derive(Debug, Clone, Default)]
@@ -174,6 +231,14 @@ pub struct ServeMetrics {
     /// Prior) answered each duration query, and the |predicted − actual|
     /// launch-duration error histogram — see [`crate::estimate`].
     pub estimator: EstimatorStats,
+    /// Sheds decomposed by *why*, per class:
+    /// `rejects_by_reason[reason.index()][class.index()]`. Counted at
+    /// the engine when it receives a `FromFrontend::Rejected` record (or
+    /// sheds synchronously itself), so a wire client's "rejected" reply
+    /// and these counters tell the same story.
+    pub rejects_by_reason: [[u64; 3]; 3],
+    /// The socket intake subsystem's accounting (wire runs only).
+    pub intake: IntakeMetrics,
 }
 
 impl ServeMetrics {
@@ -205,6 +270,18 @@ impl ServeMetrics {
         let c = &mut self.classes[class.index()];
         c.rejects += 1;
         c.shaped += 1;
+    }
+
+    /// Record *why* a request was shed, against its class. Orthogonal to
+    /// the drop/reject counters (those say *how many*, this says *why*),
+    /// so callers record both.
+    pub fn reject_reason(&mut self, reason: RejectReason, class: SloClass) {
+        self.rejects_by_reason[reason.index()][class.index()] += 1;
+    }
+
+    /// Total sheds recorded with a reason.
+    pub fn reason_total(&self) -> u64 {
+        self.rejects_by_reason.iter().flatten().sum()
     }
 
     /// Record one admission-gate decision against its class.
@@ -399,6 +476,46 @@ impl ServeMetrics {
                 self.stale_decisions,
                 self.frontend_wait.quantile_us(0.99) / 1e3,
             ));
+        }
+        if self.reason_total() > 0 {
+            s.push_str("shed:");
+            for reason in RejectReason::ALL {
+                let by_class = &self.rejects_by_reason[reason.index()];
+                let total: u64 = by_class.iter().sum();
+                if total == 0 {
+                    continue;
+                }
+                s.push_str(&format!(
+                    " {}={} (crit={} std={} be={})",
+                    reason.name(),
+                    total,
+                    by_class[SloClass::Critical.index()],
+                    by_class[SloClass::Standard.index()],
+                    by_class[SloClass::BestEffort.index()],
+                ));
+            }
+            s.push('\n');
+        }
+        if self.intake.connections > 0 {
+            let i = &self.intake;
+            s.push_str(&format!(
+                "intake: conns={} disconnects={} requests={} mean_batch={:.2} decode_p99={:.1}us accept_p99={:.2}ms replies={} dropped={} orphans={}\n",
+                i.connections,
+                i.disconnects,
+                i.requests(),
+                i.mean_batch(),
+                i.decode.quantile_us(0.99),
+                i.accept_latency.quantile_us(0.99) / 1e3,
+                i.replies,
+                i.dropped_replies,
+                i.orphan_events,
+            ));
+            for (n, sh) in i.shards.iter().enumerate() {
+                s.push_str(&format!(
+                    "intake shard {n}: forwarded={} peak_conns={}\n",
+                    sh.forwarded, sh.peak_conns
+                ));
+            }
         }
         if !self.devices.is_empty() {
             s.push_str(&format!(
@@ -613,6 +730,52 @@ mod tests {
         assert_eq!(be.rejects, 2);
         assert_eq!(be.dropped, 2, "frontend rejects never reach the engine");
         assert_eq!(be.shaped, 1);
+    }
+
+    #[test]
+    fn reject_reasons_decompose_per_class_and_render() {
+        let mut m = ServeMetrics::default();
+        m.span_us = 1e6;
+        assert!(!m.render().contains("shed:"), "no line before sheds");
+        m.reject_reason(RejectReason::QueueFull, SloClass::Standard);
+        m.reject_reason(RejectReason::QueueFull, SloClass::Standard);
+        m.reject_reason(RejectReason::RateLimited, SloClass::Critical);
+        m.reject_reason(RejectReason::StaleShed, SloClass::BestEffort);
+        assert_eq!(m.reason_total(), 4);
+        assert_eq!(
+            m.rejects_by_reason[RejectReason::QueueFull.index()]
+                [SloClass::Standard.index()],
+            2
+        );
+        let r = m.render();
+        assert!(r.contains("queue_full=2"), "{r}");
+        assert!(r.contains("rate_limited=1 (crit=1 std=0 be=0)"), "{r}");
+        assert!(r.contains("stale_shed=1"), "{r}");
+    }
+
+    #[test]
+    fn intake_metrics_aggregate_and_render() {
+        let mut m = ServeMetrics::default();
+        m.span_us = 1e6;
+        assert!(!m.render().contains("intake:"), "no line before wire traffic");
+        m.intake.connections = 3;
+        m.intake.disconnects = 1;
+        *m.intake.batch_sizes.entry(8).or_default() += 2;
+        *m.intake.batch_sizes.entry(1).or_default() += 2;
+        m.intake.decode.record_us(12.0);
+        m.intake.accept_latency.record_us(90.0);
+        m.intake.replies = 4;
+        m.intake.shards = vec![
+            IntakeShardMetrics { forwarded: 10, peak_conns: 2 },
+            IntakeShardMetrics { forwarded: 8, peak_conns: 1 },
+        ];
+        assert_eq!(m.intake.requests(), 4);
+        assert!((m.intake.mean_batch() - 4.5).abs() < 1e-9);
+        let r = m.render();
+        assert!(r.contains("intake: conns=3"), "{r}");
+        assert!(r.contains("mean_batch=4.50"), "{r}");
+        assert!(r.contains("intake shard 0: forwarded=10 peak_conns=2"), "{r}");
+        assert!(r.contains("intake shard 1: forwarded=8"), "{r}");
     }
 
     #[test]

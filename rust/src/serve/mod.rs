@@ -27,11 +27,15 @@
 //!   the engine publishes each iteration, so tenant accept/reject never
 //!   waits on an engine iteration (wall-clock runs only; the
 //!   deterministic replays keep the synchronous gate). Gate counters are
-//!   compacted epoch-wise under tenant churn.
+//!   compacted epoch-wise under tenant churn;
+//! * [`intake`] — the network front door: a framed TCP protocol with
+//!   client-side batching, a sharded pool of socket workers feeding the
+//!   frontend, per-batch reply tracking, and the wire load generator.
 
 pub mod admission;
 pub mod engine;
 pub mod frontend;
+pub mod intake;
 pub mod metrics;
 pub mod server;
 

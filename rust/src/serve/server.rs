@@ -41,6 +41,7 @@
 //! [`Server::tuned`] warm-starts pricing before any observation lands.
 
 use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::mpsc;
 
 use crate::compiler::coalescer::{Coalescer, SuperKernel};
 use crate::compiler::ir::TensorOp;
@@ -58,12 +59,13 @@ use crate::placement::{
 use crate::runtime::executor::{ModelExec, PjrtExecutor};
 use crate::serve::admission::Admission;
 use crate::serve::engine::{
-    seed_placement, trace_arrivals, Arrival, Engine, EngineConfig, InlineStage,
-    Placement, PoolStage, ServeJit, TimelineStage, VirtualClock, WallClock,
+    seed_placement, trace_arrivals, Arrival, Engine, EngineConfig, Incoming,
+    InlineStage, OpEvent, Placement, PoolStage, ServeJit, TimelineStage,
+    VirtualClock, WallClock,
 };
 use crate::serve::metrics::ServeMetrics;
 use crate::util::threadpool::StatefulPool;
-use crate::workload::trace::Trace;
+use crate::workload::trace::{TenantSpec, Trace};
 use crate::Result;
 
 /// Batching policy.
@@ -865,6 +867,40 @@ impl<B: ModelBackend> Server<B> {
             parts.config,
         )
         .run_wall(parts.arrivals, speedup)
+    }
+
+    /// Wire-driven real-time mode: the engine's intake channel is fed by
+    /// the network intake shards ([`crate::serve::intake`]) instead of a
+    /// trace generator, and terminal per-op outcomes flow back out on
+    /// `reply` for the intake reply router — the **wall × inline** cell
+    /// with an external request source. `tenants` declares the served
+    /// models (they size the model/group table); no requests are
+    /// synthesized. Runs until every sender of `rx` is dropped and the
+    /// window drains.
+    pub(crate) fn run_wire(
+        &mut self,
+        tenants: &[TenantSpec],
+        rx: mpsc::Receiver<Incoming>,
+        reply: mpsc::Sender<OpEvent>,
+    ) -> ServeReport
+    where
+        B: 'static,
+    {
+        let trace = Trace {
+            requests: vec![],
+            tenants: tenants.to_vec(),
+        };
+        let parts = self.engine_parts(&trace, None, self.frontend);
+        Engine::new(
+            parts.jit,
+            WallClock::new(),
+            InlineStage::new(),
+            None,
+            parts.slots,
+            parts.config,
+        )
+        .with_reply_sink(reply)
+        .run_wall_rx(rx)
     }
 
     /// Concurrent real-time mode: launches fan out to `workers` pool

@@ -10,12 +10,17 @@
 //!   its own thread, so the state type needs neither `Send` nor `Sync`.
 //! * [`Stage`] — one dedicated, named, long-running pipeline-stage thread
 //!   that hands a value back at shutdown: the serving layer's admission
-//!   frontend worker (its thread-local metrics come home through `join`).
+//!   frontend worker (its thread-local metrics come home through `join`),
+//!   and the socket intake's shard workers (per-shard intake counters).
+//! * [`Notify`] — a monotonic eventcount over Mutex + Condvar: bounded
+//!   waits that end *immediately* when a producer pulses, so an idle
+//!   stage wakes on the first arrival instead of at its next poll tick.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -263,6 +268,62 @@ impl<T: Send + 'static> Stage<T> {
     }
 }
 
+/// A monotonic eventcount: producers `notify()`, consumers snapshot
+/// `epoch()` before checking their work source and then `wait_past(seen)`
+/// a bounded time. A pulse that lands between the snapshot and the wait is
+/// never lost — the epoch has already advanced past `seen`, so the wait
+/// returns immediately. This is the wake path between the socket intake
+/// shards and anything polling them (new-connection handoff, stop
+/// signals): the idle side sleeps a bounded interval but wakes the moment
+/// a producer has something, so first-arrival latency after an idle
+/// period is not floored by the poll interval.
+#[derive(Default)]
+pub struct Notify {
+    seq: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl Notify {
+    /// New eventcount at epoch 0.
+    pub fn new() -> Self {
+        Notify::default()
+    }
+
+    /// Current epoch. Snapshot this *before* checking the work source.
+    pub fn epoch(&self) -> u64 {
+        *self.seq.lock().expect("notify poisoned")
+    }
+
+    /// Advance the epoch and wake every waiter.
+    pub fn notify(&self) {
+        let mut seq = self.seq.lock().expect("notify poisoned");
+        *seq += 1;
+        self.cv.notify_all();
+    }
+
+    /// Block until the epoch moves past `seen` or `timeout` elapses.
+    /// Returns true if woken by a pulse, false on timeout.
+    pub fn wait_past(&self, seen: u64, timeout: Duration) -> bool {
+        let mut seq = self.seq.lock().expect("notify poisoned");
+        let deadline = std::time::Instant::now() + timeout;
+        while *seq <= seen {
+            let left = deadline.saturating_duration_since(std::time::Instant::now());
+            if left.is_zero() {
+                return false;
+            }
+            let (guard, res) = self
+                .cv
+                .wait_timeout(seq, left)
+                .expect("notify poisoned");
+            seq = guard;
+            if res.timed_out() && *seq <= seen {
+                return false;
+            }
+        }
+        true
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -382,6 +443,39 @@ mod tests {
         }
         drop(tx);
         assert_eq!(stage.join(), 10);
+    }
+
+    #[test]
+    fn notify_wakes_bounded_waiter_promptly() {
+        let n = Arc::new(Notify::new());
+        let n2 = Arc::clone(&n);
+        let seen = n.epoch();
+        let waiter = std::thread::spawn(move || {
+            let t0 = std::time::Instant::now();
+            let woken = n2.wait_past(seen, Duration::from_millis(500));
+            (woken, t0.elapsed())
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        n.notify();
+        let (woken, waited) = waiter.join().unwrap();
+        assert!(woken);
+        // woke on the pulse, not at the 500ms poll ceiling
+        assert!(waited < Duration::from_millis(400), "{waited:?}");
+    }
+
+    #[test]
+    fn notify_pulse_before_wait_is_not_lost() {
+        let n = Notify::new();
+        let seen = n.epoch();
+        n.notify(); // pulse lands before the wait starts
+        assert!(n.wait_past(seen, Duration::from_millis(1)));
+    }
+
+    #[test]
+    fn notify_times_out_without_pulse() {
+        let n = Notify::new();
+        let seen = n.epoch();
+        assert!(!n.wait_past(seen, Duration::from_millis(5)));
     }
 
     #[test]

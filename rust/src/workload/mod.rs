@@ -4,6 +4,8 @@
 
 pub mod arrivals;
 pub mod trace;
+pub mod wire;
 
 pub use arrivals::{Arrivals, Mmpp, Poisson};
 pub use trace::{Request, TenantSpec, Trace};
+pub use wire::{trace_to_wire, TimedWireRequest};

@@ -1,0 +1,119 @@
+//! Trace → wire-request encoding: turns a generated [`Trace`] into the
+//! timed, client-batched frame schedule the load generator replays.
+//! Shared by `vliwd loadgen`, `vliwd bench --wire`, and the loopback
+//! e2e tests so they all speak the exact same workload.
+//!
+//! Client batching here models an application that amortises the wire:
+//! each tenant's consecutive requests are chunked into groups of `batch`
+//! and shipped as ONE wire request once the last member has "arrived"
+//! (you cannot send a batch you have not finished composing). Intake
+//! decomposes the batch again — re-coalescing across tenants is the
+//! JIT's job, not the client's.
+
+use crate::serve::intake::wire::{WireOp, WireRequest};
+use crate::workload::trace::Trace;
+
+/// One wire request with its send time on the replay clock.
+#[derive(Debug, Clone)]
+pub struct TimedWireRequest {
+    /// Send time, µs from replay start (already compressed by the
+    /// replay `speedup`).
+    pub at_us: f64,
+    /// Issuing tenant — the load generator pins tenants to connections
+    /// with `tenant % conns`, preserving per-stream order.
+    pub tenant: u32,
+    pub req: WireRequest,
+}
+
+/// Chunk each tenant's ordered requests into client batches of `batch`
+/// and time them: a batch ships at its LAST member's (compressed)
+/// arrival. SLOs stay uncompressed, matching the trace replay in
+/// `Engine::run_wall`. The result is merged and sorted by send time.
+pub fn trace_to_wire(trace: &Trace, batch: usize, speedup: f64) -> Vec<TimedWireRequest> {
+    let batch = batch.max(1);
+    let mut out: Vec<TimedWireRequest> = Vec::with_capacity(trace.requests.len() / batch + 1);
+    for t in &trace.tenants {
+        let reqs: Vec<_> = trace.of_tenant(t.id).collect();
+        for chunk in reqs.chunks(batch) {
+            let ops = chunk
+                .iter()
+                .map(|r| WireOp {
+                    tenant: r.tenant,
+                    model: r.model.clone(),
+                    slo_us: r.deadline_us - r.arrival_us,
+                    class: r.class,
+                    seed: r.id.wrapping_mul(7919),
+                })
+                .collect();
+            out.push(TimedWireRequest {
+                at_us: chunk.last().expect("non-empty chunk").arrival_us / speedup,
+                tenant: t.id,
+                req: WireRequest {
+                    id: chunk[0].id,
+                    ops,
+                },
+            });
+        }
+    }
+    out.sort_by(|a, b| a.at_us.partial_cmp(&b.at_us).expect("finite send times"));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::trace::{ArrivalKind, TenantSpec};
+
+    fn trace() -> Trace {
+        let tenants = vec![
+            TenantSpec::new(0, "mlp_small", 25_000, 200.0, ArrivalKind::Poisson),
+            TenantSpec::new(1, "gemmnet6", 100_000, 200.0, ArrivalKind::Uniform),
+        ];
+        Trace::generate(&tenants, 10, 7)
+    }
+
+    #[test]
+    fn batch_one_is_request_per_op() {
+        let t = trace();
+        let wire = trace_to_wire(&t, 1, 1.0);
+        assert_eq!(wire.len(), t.requests.len());
+        assert!(wire.iter().all(|w| w.req.ops.len() == 1));
+        assert!(wire.windows(2).all(|w| w[0].at_us <= w[1].at_us));
+    }
+
+    #[test]
+    fn batches_chunk_per_tenant_and_ship_at_last_arrival() {
+        let t = trace();
+        let wire = trace_to_wire(&t, 4, 1.0);
+        // 10 requests per tenant in chunks of 4 -> 3 wire requests each
+        assert_eq!(wire.len(), 6);
+        for w in &wire {
+            assert!(w.req.ops.len() <= 4);
+            // a batch never mixes tenants
+            assert!(w.req.ops.iter().all(|o| o.tenant == w.tenant));
+            // ships once the last member exists
+            let arrivals: Vec<f64> = t
+                .of_tenant(w.tenant)
+                .filter(|r| w.req.ops.iter().any(|o| o.seed == r.id.wrapping_mul(7919)))
+                .map(|r| r.arrival_us)
+                .collect();
+            assert_eq!(arrivals.len(), w.req.ops.len());
+            let last = arrivals.iter().cloned().fold(0.0f64, f64::max);
+            assert!((w.at_us - last).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn speedup_compresses_send_times_not_slos() {
+        let t = trace();
+        let w1 = trace_to_wire(&t, 2, 1.0);
+        let w4 = trace_to_wire(&t, 2, 4.0);
+        assert_eq!(w1.len(), w4.len());
+        for (a, b) in w1.iter().zip(&w4) {
+            assert!((a.at_us / 4.0 - b.at_us).abs() < 1e-9);
+            for (x, y) in a.req.ops.iter().zip(&b.req.ops) {
+                assert_eq!(x.slo_us, y.slo_us);
+            }
+        }
+    }
+}
