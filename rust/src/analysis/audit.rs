@@ -1,0 +1,617 @@
+//! The launch-log auditor: offline replay of a serve/bench run's
+//! structured event log against the system's *global* invariants.
+//!
+//! The plan verifier ([`crate::analysis::plan`]) checks one launch at a
+//! time; the invariants that span launches — per-stream launch order
+//! across requeues, admission bounds, placement totality across
+//! rebalance epochs, wire reply exactness, attainment arithmetic — need
+//! the whole timeline. [`AuditLog`] is the writer side: the engine and
+//! admission gates emit one JSON object per line
+//! (`vliwd serve/bench --launch-log out.jsonl`), cheap enough to leave
+//! on in CI smoke runs. [`audit_lines`] is the reader side
+//! (`vliwd audit <log>`): a single pass over the log that re-derives
+//! rules AUDIT001–AUDIT005 (catalog in [`crate::analysis`]) from the
+//! events alone — no access to in-process state, so a regression cannot
+//! hide behind the bookkeeping that caused it.
+//!
+//! # Event schema (one object per line)
+//!
+//! * `admit` — `stream, group, class, queued, inflight, bound`: a
+//!   request passed an admission gate; `queued`/`inflight` are the
+//!   group's post-admit window counts, `bound` the per-class cap it was
+//!   priced under.
+//! * `reject` — `class, reason`: a gate refused a request.
+//! * `launch` — `ticket, group, class, cap, ops[{stream, seq,
+//!   independent}]`: one superkernel issued to the launch stage.
+//! * `complete` — `stream, seq, group, done_us, deadline_us, met,
+//!   failed, token`: one op reached a terminal state (`token` 0 =
+//!   non-wire request).
+//! * `rebalance` — `epoch, replicas[{group, replicas}]`: the placement
+//!   rebalancer committed actions; the full table is snapshotted.
+//! * `reply` — `token`: the engine routed a terminal outcome for a wire
+//!   op to the reply sink.
+//! * `purge` — `conn, batches[]`: a disconnect purged a connection's
+//!   pending batches from the reply table.
+
+use std::collections::{BTreeSet, HashMap, HashSet};
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::analysis::Violation;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Thread-safe append-only jsonl writer for launch/admission events.
+/// One line per event, flushed per event so a crashed run still leaves
+/// an auditable prefix. Shared as `Arc<AuditLog>` by the engine thread,
+/// the intake reply table, and the frontend's reject path.
+pub struct AuditLog {
+    w: Mutex<BufWriter<File>>,
+}
+
+impl AuditLog {
+    /// Create (truncate) the log file.
+    pub fn create(path: impl AsRef<Path>) -> Result<AuditLog> {
+        let f = File::create(path)?;
+        Ok(AuditLog {
+            w: Mutex::new(BufWriter::new(f)),
+        })
+    }
+
+    fn line(&self, j: Json) {
+        let mut w = self.w.lock().unwrap_or_else(|p| p.into_inner());
+        let _ = writeln!(w, "{}", j.to_string_compact());
+        let _ = w.flush();
+    }
+
+    /// A request passed an admission gate.
+    pub fn admit(
+        &self,
+        stream: u32,
+        group: u64,
+        class: &str,
+        queued: usize,
+        inflight: usize,
+        bound: usize,
+    ) {
+        self.line(events::admit(stream, group, class, queued, inflight, bound));
+    }
+
+    /// A gate refused a request.
+    pub fn reject(&self, class: &str, reason: &str) {
+        self.line(events::reject(class, reason));
+    }
+
+    /// One superkernel issued; `ops` is `(stream, seq, independent)`.
+    pub fn launch(
+        &self,
+        ticket: u64,
+        group: u64,
+        class: &str,
+        cap: usize,
+        ops: &[(u32, u64, bool)],
+    ) {
+        self.line(events::launch(ticket, group, class, cap, ops));
+    }
+
+    /// One op reached a terminal state (`token` 0 = non-wire).
+    #[allow(clippy::too_many_arguments)] // lint: LINT005 flat event row mirrors the jsonl schema
+    pub fn complete(
+        &self,
+        stream: u32,
+        seq: u64,
+        group: u64,
+        done_us: f64,
+        deadline_us: f64,
+        met: bool,
+        failed: bool,
+        token: u64,
+    ) {
+        self.line(events::complete(stream, seq, group, done_us, deadline_us, met, failed, token));
+    }
+
+    /// The rebalancer committed actions; `replicas` is `(group, count)`
+    /// for the whole table.
+    pub fn rebalance(&self, epoch: u64, replicas: &[(u64, usize)]) {
+        self.line(events::rebalance(epoch, replicas));
+    }
+
+    /// A wire op's terminal outcome was routed to the reply sink.
+    pub fn reply(&self, token: u64) {
+        self.line(events::reply(token));
+    }
+
+    /// A disconnect purged a connection's pending batches.
+    pub fn purge(&self, conn: u64, batches: &[u64]) {
+        self.line(events::purge(conn, batches));
+    }
+}
+
+/// Event constructors, public so the mutation tests can seed synthetic
+/// timelines without touching the filesystem.
+pub mod events {
+    use crate::util::json::{obj, Json};
+
+    fn n(v: u64) -> Json {
+        Json::Num(v as f64)
+    }
+
+    /// `admit` event (see module doc).
+    pub fn admit(
+        stream: u32,
+        group: u64,
+        class: &str,
+        queued: usize,
+        inflight: usize,
+        bound: usize,
+    ) -> Json {
+        obj(vec![
+            ("ev", Json::Str("admit".into())),
+            ("stream", n(stream as u64)),
+            ("group", n(group)),
+            ("class", Json::Str(class.into())),
+            ("queued", n(queued as u64)),
+            ("inflight", n(inflight as u64)),
+            ("bound", n(bound as u64)),
+        ])
+    }
+
+    /// `reject` event.
+    pub fn reject(class: &str, reason: &str) -> Json {
+        obj(vec![
+            ("ev", Json::Str("reject".into())),
+            ("class", Json::Str(class.into())),
+            ("reason", Json::Str(reason.into())),
+        ])
+    }
+
+    /// `launch` event; `ops` is `(stream, seq, independent)`.
+    pub fn launch(
+        ticket: u64,
+        group: u64,
+        class: &str,
+        cap: usize,
+        ops: &[(u32, u64, bool)],
+    ) -> Json {
+        let rows = ops
+            .iter()
+            .map(|&(stream, seq, independent)| {
+                obj(vec![
+                    ("stream", n(stream as u64)),
+                    ("seq", n(seq)),
+                    ("independent", Json::Bool(independent)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("ev", Json::Str("launch".into())),
+            ("ticket", n(ticket)),
+            ("group", n(group)),
+            ("class", Json::Str(class.into())),
+            ("cap", n(cap as u64)),
+            ("ops", Json::Arr(rows)),
+        ])
+    }
+
+    /// `complete` event.
+    #[allow(clippy::too_many_arguments)] // lint: LINT005 flat event row mirrors the jsonl schema
+    pub fn complete(
+        stream: u32,
+        seq: u64,
+        group: u64,
+        done_us: f64,
+        deadline_us: f64,
+        met: bool,
+        failed: bool,
+        token: u64,
+    ) -> Json {
+        obj(vec![
+            ("ev", Json::Str("complete".into())),
+            ("stream", n(stream as u64)),
+            ("seq", n(seq)),
+            ("group", n(group)),
+            ("done_us", Json::Num(done_us)),
+            ("deadline_us", Json::Num(deadline_us)),
+            ("met", Json::Bool(met)),
+            ("failed", Json::Bool(failed)),
+            ("token", n(token)),
+        ])
+    }
+
+    /// `rebalance` event; `replicas` is `(group, count)`.
+    pub fn rebalance(epoch: u64, replicas: &[(u64, usize)]) -> Json {
+        let rows = replicas
+            .iter()
+            .map(|&(group, count)| obj(vec![("group", n(group)), ("replicas", n(count as u64))]))
+            .collect();
+        obj(vec![
+            ("ev", Json::Str("rebalance".into())),
+            ("epoch", n(epoch)),
+            ("replicas", Json::Arr(rows)),
+        ])
+    }
+
+    /// `reply` event.
+    pub fn reply(token: u64) -> Json {
+        obj(vec![("ev", Json::Str("reply".into())), ("token", n(token))])
+    }
+
+    /// `purge` event.
+    pub fn purge(conn: u64, batches: &[u64]) -> Json {
+        obj(vec![
+            ("ev", Json::Str("purge".into())),
+            ("conn", n(conn)),
+            ("batches", Json::Arr(batches.iter().map(|&b| n(b)).collect())),
+        ])
+    }
+}
+
+/// What [`audit_lines`] found: event counts plus every violation.
+#[derive(Debug, Default)]
+pub struct AuditReport {
+    /// Events scanned.
+    pub events: usize,
+    /// `launch` events seen.
+    pub launches: u64,
+    /// `complete` events seen.
+    pub completions: u64,
+    /// Admission (`admit` + `reject`) events seen.
+    pub admissions: u64,
+    /// Every rule breach, in log order.
+    pub violations: Vec<Violation>,
+}
+
+fn req_bool(j: &Json, key: &str) -> Result<bool> {
+    match j.req(key)? {
+        Json::Bool(b) => Ok(*b),
+        _ => Err(Error::Json(format!("field '{key}' not a bool"))),
+    }
+}
+
+/// One stream's current *life*: the window drops a fully-drained
+/// stream's bookkeeping and a returning stream restarts at seq 0, so
+/// the auditor tracks launches per life and resets on a seq-0 relaunch
+/// of a drained stream.
+#[derive(Default)]
+struct StreamLife {
+    /// Seqs launched in this life (a requeued straggler relaunches the
+    /// same seq — contiguity, not uniqueness, is the invariant).
+    launched: HashSet<u64>,
+    /// Launches minus completions; 0 means possibly drained.
+    outstanding: i64,
+}
+
+/// Audit a launch log already read into memory; one pass, log order.
+pub fn audit_lines(text: &str) -> Result<AuditReport> {
+    let mut report = AuditReport::default();
+    let mut streams: HashMap<u32, StreamLife> = HashMap::new();
+    // AUDIT003 baseline: the group set of the first rebalance snapshot.
+    let mut placed_groups: Option<BTreeSet<u64>> = None;
+    // AUDIT004 bookkeeping.
+    let mut replies: HashMap<u64, u64> = HashMap::new();
+    let mut completed_tokens: HashSet<u64> = HashSet::new();
+    let mut purged_batches: HashSet<u64> = HashSet::new();
+
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .map_err(|e| Error::Json(format!("launch log line {}: {e}", lineno + 1)))?;
+        report.events += 1;
+        let at = |ev: &str| format!("event {} ({ev})", lineno + 1);
+        match j.req_str("ev")?.as_str() {
+            "admit" => {
+                report.admissions += 1;
+                let queued = j.req_u64("queued")?;
+                let inflight = j.req_u64("inflight")?;
+                let bound = j.req_u64("bound")?;
+                if queued + inflight > bound {
+                    report.violations.push(Violation::error(
+                        "AUDIT002",
+                        at("admit"),
+                        format!(
+                            "group {} class {} admitted to queued {queued} + inflight \
+                             {inflight} > bound {bound} it was priced under",
+                            j.req_u64("group")?,
+                            j.req_str("class")?
+                        ),
+                    ));
+                }
+            }
+            "reject" => {
+                report.admissions += 1;
+            }
+            "launch" => {
+                report.launches += 1;
+                let ops = j.req("ops")?.as_arr().ok_or_else(|| {
+                    Error::Json(format!("launch log line {}: ops not an array", lineno + 1))
+                })?;
+                for op in ops {
+                    let stream = op.req_u64("stream")? as u32;
+                    let seq = op.req_u64("seq")?;
+                    let independent = req_bool(op, "independent")?;
+                    let life = streams.entry(stream).or_default();
+                    if seq == 0 && life.outstanding == 0 && life.launched.contains(&0) {
+                        // drained stream restarting at seq 0: new life
+                        life.launched.clear();
+                    }
+                    if !independent {
+                        if let Some(missing) = (0..seq).find(|s| !life.launched.contains(s)) {
+                            report.violations.push(Violation::error(
+                                "AUDIT001",
+                                at("launch"),
+                                format!(
+                                    "dependent op stream {stream} seq {seq} launched before \
+                                     seq {missing} of its stream"
+                                ),
+                            ));
+                        }
+                    }
+                    life.launched.insert(seq);
+                    life.outstanding += 1;
+                }
+            }
+            "complete" => {
+                report.completions += 1;
+                let stream = j.req_u64("stream")? as u32;
+                if let Some(life) = streams.get_mut(&stream) {
+                    life.outstanding -= 1;
+                }
+                let done_us = j.req_f64("done_us")?;
+                let deadline_us = j.req_f64("deadline_us")?;
+                let met = req_bool(&j, "met")?;
+                let failed = req_bool(&j, "failed")?;
+                let consistent = met == (!failed && done_us <= deadline_us);
+                if !consistent {
+                    report.violations.push(Violation::error(
+                        "AUDIT005",
+                        at("complete"),
+                        format!(
+                            "stream {stream} seq {}: met={met} inconsistent with \
+                             failed={failed}, done_us={done_us}, deadline_us={deadline_us}",
+                            j.req_u64("seq")?
+                        ),
+                    ));
+                }
+                let token = j.req_u64("token")?;
+                if token != 0 {
+                    completed_tokens.insert(token);
+                }
+            }
+            "rebalance" => {
+                let epoch = j.req_u64("epoch")?;
+                let rows = j.req("replicas")?.as_arr().ok_or_else(|| {
+                    Error::Json(format!("launch log line {}: replicas not an array", lineno + 1))
+                })?;
+                let mut groups = BTreeSet::new();
+                for row in rows {
+                    let group = row.req_u64("group")?;
+                    let count = row.req_u64("replicas")?;
+                    groups.insert(group);
+                    if count == 0 {
+                        report.violations.push(Violation::error(
+                            "AUDIT003",
+                            at("rebalance"),
+                            format!("group {group} has 0 replicas at rebalance epoch {epoch}"),
+                        ));
+                    }
+                }
+                match &placed_groups {
+                    None => placed_groups = Some(groups),
+                    Some(base) if *base != groups => {
+                        report.violations.push(Violation::error(
+                            "AUDIT003",
+                            at("rebalance"),
+                            format!(
+                                "group set changed at rebalance epoch {epoch}: \
+                                 {base:?} -> {groups:?}"
+                            ),
+                        ));
+                    }
+                    Some(_) => {}
+                }
+            }
+            "reply" => {
+                let token = j.req_u64("token")?;
+                let count = replies.entry(token).or_insert(0);
+                *count += 1;
+                if *count == 2 {
+                    report.violations.push(Violation::error(
+                        "AUDIT004",
+                        at("reply"),
+                        format!("token {token} replied more than once"),
+                    ));
+                }
+            }
+            "purge" => {
+                let batches = j.req("batches")?.as_arr().ok_or_else(|| {
+                    Error::Json(format!("launch log line {}: batches not an array", lineno + 1))
+                })?;
+                for b in batches {
+                    purged_batches.insert(b.as_u64().ok_or_else(|| {
+                        Error::Json(format!("launch log line {}: batch not a u64", lineno + 1))
+                    })?);
+                }
+            }
+            other => {
+                return Err(Error::Json(format!(
+                    "launch log line {}: unknown event '{other}'",
+                    lineno + 1
+                )));
+            }
+        }
+    }
+
+    // AUDIT004 end-state: every completed wire op was replied or purged.
+    for &token in &completed_tokens {
+        if !replies.contains_key(&token) && !purged_batches.contains(&(token >> 16)) {
+            report.violations.push(Violation::error(
+                "AUDIT004",
+                format!("token {token}"),
+                "completed wire op was never replied to and its batch was never purged",
+            ));
+        }
+    }
+
+    Ok(report)
+}
+
+/// Audit a launch log on disk (`vliwd audit <log>`).
+pub fn audit_path(path: impl AsRef<Path>) -> Result<AuditReport> {
+    let text = std::fs::read_to_string(path)?;
+    audit_lines(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn text_of(events: Vec<Json>) -> String {
+        events
+            .iter()
+            .map(|e| e.to_string_compact())
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    fn clean_timeline() -> Vec<Json> {
+        vec![
+            events::admit(0, 0, "standard", 1, 0, 256),
+            events::launch(1, 0, "standard", 8, &[(0, 0, false)]),
+            events::complete(0, 0, 0, 900.0, 1_000.0, true, false, 0),
+            events::launch(2, 0, "standard", 8, &[(0, 1, false)]),
+            events::complete(0, 1, 0, 1_500.0, 1_000.0, false, false, 0),
+            events::rebalance(1, &[(0, 1), (1, 2)]),
+            events::rebalance(2, &[(0, 2), (1, 1)]),
+        ]
+    }
+
+    #[test]
+    fn clean_log_audits_clean() {
+        let r = audit_lines(&text_of(clean_timeline())).unwrap();
+        assert_eq!(r.events, 7);
+        assert_eq!(r.launches, 2);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn requeue_relaunch_and_drain_restart_are_legal() {
+        // seq 1 is evicted and relaunched (same seq twice), then the
+        // stream drains fully and a NEW life restarts at seq 0 — both
+        // are legitimate timelines AUDIT001 must not flag.
+        let events = vec![
+            events::launch(1, 0, "standard", 8, &[(7, 0, false)]),
+            events::complete(7, 0, 0, 10.0, 100.0, true, false, 0),
+            events::launch(2, 0, "standard", 8, &[(7, 1, false)]),
+            events::launch(3, 0, "standard", 8, &[(7, 1, false)]),
+            events::complete(7, 1, 0, 80.0, 100.0, true, false, 0),
+            events::launch(4, 0, "standard", 8, &[(7, 0, false)]),
+            events::launch(5, 0, "standard", 8, &[(7, 1, false)]),
+        ];
+        // outstanding after line 5: 2 launches of seq 1, 1 completion —
+        // the relaunch drifts the count, so the life never "drains" and
+        // the seq-0 relaunch is judged against the old life's seqs; the
+        // contiguity rule still accepts it (weaker, never false-positive)
+        let r = audit_lines(&text_of(events)).unwrap();
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn seq_swap_is_audit001() {
+        let events = vec![
+            events::launch(1, 0, "standard", 8, &[(3, 1, false)]),
+            events::launch(2, 0, "standard", 8, &[(3, 0, false)]),
+        ];
+        let r = audit_lines(&text_of(events)).unwrap();
+        assert_eq!(r.violations.len(), 1, "{:?}", r.violations);
+        assert_eq!(r.violations[0].rule, "AUDIT001");
+    }
+
+    #[test]
+    fn independent_out_of_order_is_legal() {
+        let events = vec![
+            events::launch(1, 0, "standard", 8, &[(3, 1, true)]),
+            events::launch(2, 0, "standard", 8, &[(3, 0, false)]),
+        ];
+        let r = audit_lines(&text_of(events)).unwrap();
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn over_admission_is_audit002() {
+        let events = vec![events::admit(0, 2, "best_effort", 100, 29, 128)];
+        let r = audit_lines(&text_of(events)).unwrap();
+        assert_eq!(r.violations.len(), 1, "{:?}", r.violations);
+        assert_eq!(r.violations[0].rule, "AUDIT002");
+    }
+
+    #[test]
+    fn totality_break_is_audit003() {
+        let events = vec![
+            events::rebalance(1, &[(0, 1), (1, 1)]),
+            events::rebalance(2, &[(0, 0), (1, 2)]),
+        ];
+        let r = audit_lines(&text_of(events)).unwrap();
+        assert_eq!(r.violations.len(), 1, "{:?}", r.violations);
+        assert_eq!(r.violations[0].rule, "AUDIT003");
+    }
+
+    #[test]
+    fn duplicate_reply_is_audit004() {
+        let token = (5 << 16) | 1;
+        let events = vec![
+            events::complete(0, 0, 0, 10.0, 100.0, true, false, token),
+            events::reply(token),
+            events::reply(token),
+        ];
+        let r = audit_lines(&text_of(events)).unwrap();
+        assert_eq!(r.violations.len(), 1, "{:?}", r.violations);
+        assert_eq!(r.violations[0].rule, "AUDIT004");
+    }
+
+    #[test]
+    fn purged_completion_without_reply_is_legal() {
+        let token = (5 << 16) | 1;
+        let events = vec![
+            events::complete(0, 0, 0, 10.0, 100.0, true, false, token),
+            events::purge(3, &[5]),
+        ];
+        let r = audit_lines(&text_of(events)).unwrap();
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn unreplied_completion_is_audit004() {
+        let token = (5 << 16) | 1;
+        let events = vec![events::complete(0, 0, 0, 10.0, 100.0, true, false, token)];
+        let r = audit_lines(&text_of(events)).unwrap();
+        assert_eq!(r.violations.len(), 1, "{:?}", r.violations);
+        assert_eq!(r.violations[0].rule, "AUDIT004");
+    }
+
+    #[test]
+    fn met_mismatch_is_audit005() {
+        let events = vec![events::complete(0, 0, 0, 2_000.0, 1_000.0, true, false, 0)];
+        let r = audit_lines(&text_of(events)).unwrap();
+        assert_eq!(r.violations.len(), 1, "{:?}", r.violations);
+        assert_eq!(r.violations[0].rule, "AUDIT005");
+    }
+
+    #[test]
+    fn failed_op_reported_met_is_audit005() {
+        let events = vec![events::complete(0, 0, 0, 500.0, 1_000.0, true, true, 0)];
+        let r = audit_lines(&text_of(events)).unwrap();
+        assert_eq!(r.violations.len(), 1, "{:?}", r.violations);
+        assert_eq!(r.violations[0].rule, "AUDIT005");
+    }
+
+    #[test]
+    fn garbage_line_is_an_error_not_a_pass() {
+        assert!(audit_lines("{not json").is_err());
+        assert!(audit_lines("{\"ev\":\"mystery\"}").is_err());
+    }
+}

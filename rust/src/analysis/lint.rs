@@ -1,0 +1,340 @@
+//! The architecture linter: layering rules as CI-failing diagnostics.
+//!
+//! Several of the repo's contracts are about *where* code may live, not
+//! what it computes — all pricing state in `estimate/`, no wall clock in
+//! the virtual-time layers, no panicking lock/socket handling on the
+//! intake path, no silent unbounded queues. Until now those were grep
+//! discipline; `vliwd lint` walks `rust/src/` with a small token-level
+//! scanner (comments, strings, and `#[cfg(test)]` tails are stripped
+//! before matching, so prose and test rigs never false-positive) and
+//! reports rules LINT001–LINT005 (catalog in [`crate::analysis`]).
+//!
+//! # Suppression grammar
+//!
+//! A diagnostic on line *n* is suppressed by `// lint: <RULEID> <why>`
+//! on line *n* or *n − 1*. For LINT004 (unbounded channels) and LINT005
+//! (`#[allow]`) the justification comment is not an escape hatch but
+//! the rule itself: every hit must say why it is sound.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::analysis::Violation;
+use crate::Result;
+
+/// Layers that run on virtual time and must never read the wall clock.
+const PURE_LAYERS: [&str; 6] = [
+    "compiler/",
+    "estimate/",
+    "gpu/",
+    "model/",
+    "placement/",
+    "workload/",
+];
+
+/// Call sites whose `Result`/`LockResult` must not be unwrapped on the
+/// intake path (LINT003): a poisoned lock or a peer reset must degrade,
+/// not kill the shard.
+const INTAKE_FALLIBLE: [&str; 7] = [
+    "lock(",
+    "accept(",
+    "connect(",
+    "set_nonblocking(",
+    "local_addr(",
+    "read_frame(",
+    "write_frame(",
+];
+
+/// What [`lint_tree`] found.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    /// `.rs` files scanned.
+    pub files: usize,
+    /// Every diagnostic, in path order.
+    pub violations: Vec<Violation>,
+}
+
+/// Blank out comments, string literals, and char literals, preserving
+/// byte positions and newlines so line numbers survive. Lifetimes are
+/// kept (a `'` not closing within two bytes is not a char literal).
+fn strip(src: &str) -> String {
+    let b = src.as_bytes();
+    let mut out = vec![b' '; b.len()];
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'\n' => {
+                out[i] = b'\n';
+                i += 1;
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'*' => {
+                let mut depth = 1;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        if b[i] == b'\n' {
+                            out[i] = b'\n';
+                        }
+                        i += 1;
+                    }
+                }
+            }
+            b'"' => {
+                // raw string? look back over #s for an `r` prefix
+                let mut j = i;
+                let mut hashes = 0usize;
+                while j > 0 && b[j - 1] == b'#' {
+                    j -= 1;
+                    hashes += 1;
+                }
+                let raw = j > 0 && b[j - 1] == b'r';
+                i += 1;
+                if raw {
+                    while i < b.len() {
+                        if b[i] == b'"'
+                            && b.len() - i > hashes
+                            && (1..=hashes).all(|h| b[i + h] == b'#')
+                        {
+                            i += 1 + hashes;
+                            break;
+                        }
+                        if b[i] == b'\n' {
+                            out[i] = b'\n';
+                        }
+                        i += 1;
+                    }
+                } else {
+                    while i < b.len() && b[i] != b'"' {
+                        if b[i] == b'\\' {
+                            i += 1; // escape marker; the escaped char follows
+                        }
+                        if i < b.len() {
+                            if b[i] == b'\n' {
+                                out[i] = b'\n';
+                            }
+                            i += 1;
+                        }
+                    }
+                    i += 1; // closing quote
+                }
+            }
+            b'\'' => {
+                if i + 1 < b.len() && b[i + 1] == b'\\' {
+                    // escaped char literal: '\n', '\'', '\u{..}'
+                    i += 2;
+                    while i < b.len() && b[i] != b'\'' {
+                        i += 1;
+                    }
+                    i += 1;
+                } else if i + 2 < b.len() && b[i + 2] == b'\'' && b[i + 1] != b'\'' {
+                    i += 3; // plain char literal 'c'
+                } else {
+                    out[i] = b'\''; // lifetime
+                    i += 1;
+                }
+            }
+            c => {
+                out[i] = c;
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8(out).unwrap_or_default()
+}
+
+/// Is the diagnostic on 0-based line `i` justified/suppressed by a
+/// `// lint: <rule>` comment on the same or preceding line?
+fn justified(orig: &[&str], i: usize, rule: &str) -> bool {
+    let hit = |l: &str| l.contains("// lint:") && l.contains(rule);
+    hit(orig[i]) || (i > 0 && hit(orig[i - 1]))
+}
+
+/// Lint one file's source. `rel` is the path relative to the scan root
+/// (e.g. `serve/intake/mod.rs`), used for the layer rules.
+pub fn lint_source(rel: &str, source: &str) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let stripped = strip(source);
+    let code_lines: Vec<&str> = stripped.lines().collect();
+    let orig_lines: Vec<&str> = source.lines().collect();
+    let pure_layer = PURE_LAYERS.iter().any(|p| rel.starts_with(p));
+    let pricing_ok = rel.starts_with("estimate/") || rel == "util/stats.rs";
+    let intake = rel.starts_with("serve/intake/");
+
+    for (i, code) in code_lines.iter().enumerate() {
+        // test rigs may do what production code may not
+        if code.contains("#[cfg(test)]") {
+            break;
+        }
+        let subject = || format!("{rel}:{}", i + 1);
+        if code.contains("Ewma::new") && !pricing_ok && !justified(&orig_lines, i, "LINT001") {
+            out.push(Violation::error(
+                "LINT001",
+                subject(),
+                "Ewma pricing state outside estimate/ and util/stats.rs — all \
+                 cost-model pricing flows through the tiered estimator",
+            ));
+        }
+        if code.contains("Instant::now") && pure_layer && !justified(&orig_lines, i, "LINT002") {
+            out.push(Violation::error(
+                "LINT002",
+                subject(),
+                "wall clock read in a virtual-time layer — real time enters only \
+                 via WallClock and the wire",
+            ));
+        }
+        if intake
+            && (code.contains(".unwrap()") || code.contains(".expect("))
+            && INTAKE_FALLIBLE.iter().any(|p| code.contains(p))
+            && !justified(&orig_lines, i, "LINT003")
+        {
+            out.push(Violation::error(
+                "LINT003",
+                subject(),
+                "unwrap/expect on a lock or socket result on the intake path — \
+                 recover (into_inner) or degrade instead of killing the shard",
+            ));
+        }
+        if code.contains("mpsc::channel") && !justified(&orig_lines, i, "LINT004") {
+            out.push(Violation::error(
+                "LINT004",
+                subject(),
+                "unbounded channel without a `// lint: LINT004 <why>` \
+                 justification — backpressure decisions must be explicit",
+            ));
+        }
+        if code.contains("#[allow") && !justified(&orig_lines, i, "LINT005") {
+            out.push(Violation::error(
+                "LINT005",
+                subject(),
+                "#[allow] without a `// lint: LINT005 <why>` justification \
+                 naming why the exemption is sound",
+            ));
+        }
+    }
+    out
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries = Vec::new();
+    for e in fs::read_dir(dir)? {
+        entries.push(e?.path());
+    }
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root` (`vliwd lint [root]`, default
+/// `rust/src`).
+pub fn lint_tree(root: impl AsRef<Path>) -> Result<LintReport> {
+    let root = root.as_ref();
+    let mut files = Vec::new();
+    walk(root, &mut files)?;
+    let mut report = LintReport::default();
+    for path in files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let source = fs::read_to_string(&path)?;
+        report.files += 1;
+        report.violations.extend(lint_source(&rel, &source));
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strip_blanks_comments_and_strings() {
+        let s = strip("let a = \"Ewma::new\"; // Instant::now\nlet b = 1;");
+        assert!(!s.contains("Ewma::new"));
+        assert!(!s.contains("Instant::now"));
+        assert!(s.contains("let a ="));
+        assert!(s.contains("let b = 1;"));
+        assert_eq!(s.lines().count(), 2);
+    }
+
+    #[test]
+    fn strip_handles_char_literals_and_lifetimes() {
+        let s = strip("fn f<'a>(x: &'a str) -> char { '\"' }");
+        assert!(s.contains("fn f<'a>(x: &'a str)"));
+        assert!(!s.contains('"'));
+    }
+
+    #[test]
+    fn flags_ewma_outside_estimate() {
+        let vs = lint_source("serve/engine.rs", "let e = Ewma::new(0.3);\n");
+        assert_eq!(vs.len(), 1, "{vs:?}");
+        assert_eq!(vs[0].rule, "LINT001");
+        assert!(lint_source("estimate/measured.rs", "let e = Ewma::new(0.3);\n").is_empty());
+        assert!(lint_source("util/stats.rs", "let e = Ewma::new(0.3);\n").is_empty());
+    }
+
+    #[test]
+    fn flags_instant_in_pure_layer() {
+        let vs = lint_source("compiler/jit.rs", "let t = Instant::now();\n");
+        assert_eq!(vs.len(), 1, "{vs:?}");
+        assert_eq!(vs[0].rule, "LINT002");
+        assert!(lint_source("serve/engine.rs", "let t = Instant::now();\n").is_empty());
+    }
+
+    #[test]
+    fn flags_lock_unwrap_in_intake() {
+        let vs = lint_source("serve/intake/mod.rs", "let g = m.lock().unwrap();\n");
+        assert_eq!(vs.len(), 1, "{vs:?}");
+        assert_eq!(vs[0].rule, "LINT003");
+        let vs = lint_source("serve/intake/shard.rs", "let g = m.lock().expect(\"x\");\n");
+        assert_eq!(vs.len(), 1, "{vs:?}");
+        assert_eq!(vs[0].rule, "LINT003");
+        // recovery is the sanctioned idiom
+        let ok = "let g = m.lock().unwrap_or_else(|p| p.into_inner());\n";
+        assert!(lint_source("serve/intake/mod.rs", ok).is_empty());
+        // outside the intake path the rule does not apply
+        assert!(lint_source("serve/engine.rs", "let g = m.lock().unwrap();\n").is_empty());
+    }
+
+    #[test]
+    fn flags_unjustified_unbounded_channel() {
+        let vs = lint_source("serve/engine.rs", "let (tx, rx) = mpsc::channel::<u64>();\n");
+        assert_eq!(vs.len(), 1, "{vs:?}");
+        assert_eq!(vs[0].rule, "LINT004");
+        let ok = "// lint: LINT004 test\nlet (tx, rx) = mpsc::channel::<u64>();\n";
+        assert!(lint_source("serve/engine.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn flags_bare_allow() {
+        let vs = lint_source("serve/engine.rs", "#[allow(dead_code)]\nfn f() {}\n");
+        assert_eq!(vs.len(), 1, "{vs:?}");
+        assert_eq!(vs[0].rule, "LINT005");
+        let justified = "#[allow(dead_code)] // lint: LINT005 scaffolding for PR 10\nfn f() {}\n";
+        assert!(lint_source("serve/engine.rs", justified).is_empty());
+    }
+
+    #[test]
+    fn test_modules_are_exempt() {
+        let src = "fn prod() {}\n#[cfg(test)]\nmod tests {\n    fn t() { Ewma::new(0.3); }\n}\n";
+        assert!(lint_source("serve/engine.rs", src).is_empty());
+    }
+}

@@ -1,0 +1,125 @@
+//! The schedule verifier: machine-checked invariants for plans, launch
+//! logs, and the source tree.
+//!
+//! Eight PRs of scheduler growth left the system's load-bearing
+//! contracts in prose, asserts, and grep discipline. This module is the
+//! LLVM-machine-verifier analogue for the OoO VLIW JIT: three analysis
+//! passes that share one [`Violation`] catalog, so every hazard a
+//! classical VLIW compiler would reject statically is rejected here too
+//! — at issue time ([`plan`]), offline over a launch log ([`audit`]),
+//! and over the source tree itself ([`lint`]).
+//!
+//! # Invariant catalog
+//!
+//! Every rule id, the layer it guards, the PR that introduced the
+//! contract, and the test that pins it. The mutation tests live in
+//! `rust/tests/proptest_invariants.rs`; pass-local unit tests live next
+//! to each pass.
+//!
+//! ## Plan rules ([`plan::verify_pack`], issue-time, behind [`Policy::verify_plans`])
+//!
+//! | rule | invariant | layer | since | pinned by |
+//! |------|-----------|-------|-------|-----------|
+//! | `PLAN001` | a dependent op never issues while a lower-seq op of its stream is still pending — program order within a stream is a VLIW bundle's "no backwards slot" rule | `compiler/window.rs` | PR 2 (stream-prefix coalescing) | `mutation_plan_catches_requeue_order_bug` |
+//! | `PLAN002` | a superkernel never mixes model groups — group is the unit of placement and pricing | `compiler/coalescer.rs` | PR 3 (placement) | `mutation_plan_flags_cross_group_pack` |
+//! | `PLAN003` | a superkernel never mixes SLO classes — class-weighted deadlines assume class-pure packs | `compiler/scheduler.rs` | PR 7 (one priority surface) | `mutation_plan_flags_merged_classes` |
+//! | `PLAN004` | every member matches the pack's shape class (exact-dims singletons excepted) — padding math is per-class | `compiler/coalescer.rs` | seed + PR 2 | `mutation_plan_flags_shape_mix` |
+//! | `PLAN005` | pack size never exceeds the group's coalescer cap it was priced under | `compiler/coalescer.rs` | PR 2 | `mutation_plan_flags_cap_overflow` |
+//! | `PLAN006` | ops issue only from the window's ready prefix | `compiler/window.rs` | PR 1 (one JIT core) | `mutation_plan_flags_unready_issue` |
+//! | `PLAN007` | no op appears in two live (issued, unfinished) tickets — double-issue corrupts inflight accounting | `compiler/jit.rs` | PR 1 | `mutation_plan_flags_double_issue` |
+//!
+//! ## Audit rules ([`audit::audit_lines`], offline, `vliwd audit <log>`)
+//!
+//! | rule | invariant | layer | since | pinned by |
+//! |------|-----------|-------|-------|-----------|
+//! | `AUDIT001` | per-stream launch order for dependent streams: a dependent op launches only after every lower seq of its stream launched (requeue relaunches and drained-stream seq restarts excepted) | `serve/engine.rs` + `compiler/jit.rs` | PR 2 | `mutation_audit_flags_seq_swap` |
+//! | `AUDIT002` | an admitted request's post-admit queued+inflight never exceeds the admission bound it was priced under — stale views may shed extra, never over-admit | `serve/engine.rs` gates + `serve/frontend.rs` | PR 4, per-class PR 7 | `mutation_audit_catches_stale_view_overadmit` |
+//! | `AUDIT003` | placement-table totality at every rebalance epoch: every group keeps ≥ 1 replica and the group set never changes | `placement/` | PR 3 | `mutation_audit_flags_totality_break` |
+//! | `AUDIT004` | exactly one reply per wire token — duplicates double-complete a client batch slot; completions must be replied or purged | `serve/intake/` | PR 8 | `mutation_audit_flags_duplicate_reply` |
+//! | `AUDIT005` | attainment arithmetic: `met ⇔ !failed ∧ done_us ≤ deadline_us` for every completion | `compiler/jit.rs` + `serve/metrics.rs` | PR 2 (histogram fix) | `mutation_audit_flags_met_mismatch` |
+//!
+//! ## Lint rules ([`lint::lint_tree`], `vliwd lint`, CI-failing)
+//!
+//! | rule | invariant | layer | since | pinned by |
+//! |------|-----------|-------|-------|-----------|
+//! | `LINT001` | `Ewma::new` (cost-model pricing state) only under `estimate/` and `util/stats.rs` — ALL pricing flows through the tiered estimator | whole tree | PR 6 (one cost model) | `lint::tests::flags_ewma_outside_estimate` |
+//! | `LINT002` | `Instant::now` never in the pure virtual-time layers (`compiler/`, `estimate/`, `gpu/`, `model/`, `placement/`, `workload/`) — wall time enters only via `WallClock` and the wire | whole tree | PR 5 (one engine) | `lint::tests::flags_instant_in_pure_layer` |
+//! | `LINT003` | no `unwrap()`/`expect(` on lock or socket results in `serve/intake/` — a poisoned lock or peer reset must not kill an intake shard | `serve/intake/` | PR 8 | `lint::tests::flags_lock_unwrap_in_intake` |
+//! | `LINT004` | unbounded `mpsc::channel` only with a `// lint: LINT004 <why>` justification — backpressure decisions are explicit | whole tree | PR 8 | `lint::tests::flags_unjustified_unbounded_channel` |
+//! | `LINT005` | `#[allow(...)]` only with a `// lint: LINT005 <why>` justification naming why the exemption is sound | whole tree | PR 9 | `lint::tests::flags_bare_allow` |
+//!
+//! # Severity
+//!
+//! Every rule above is [`Severity::Error`]: each one guards an invariant
+//! whose violation silently corrupts benchmarks built on top of it.
+//! [`Severity::Warning`] exists for future advisory rules so the catalog
+//! doesn't need a schema change to grow them.
+//!
+//! [`Policy::verify_plans`]: crate::compiler::scheduler::Policy::verify_plans
+
+pub mod audit;
+pub mod lint;
+pub mod plan;
+
+use std::fmt;
+
+/// How bad a violation is. Every current rule is an error (CI-failing);
+/// the variant space leaves room for advisory rules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// Invariant breach: the pass's caller must fail (panic at issue
+    /// time under debug, non-zero exit from `vliwd audit`/`lint`).
+    Error,
+    /// Advisory: reported but never fails a run.
+    Warning,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Severity::Error => write!(f, "error"),
+            Severity::Warning => write!(f, "warning"),
+        }
+    }
+}
+
+/// One rule breach, shared by all three passes: the plan verifier's
+/// subject is a launch/op, the auditor's a log event, the linter's a
+/// `file:line`.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Stable rule id from the catalog above (`PLAN…`/`AUDIT…`/`LINT…`).
+    pub rule: &'static str,
+    pub severity: Severity,
+    /// What the rule fired on — an op/launch (`stream 3 seq 2`), a log
+    /// event (`event 41`), or a source location (`serve/intake/mod.rs:128`).
+    pub subject: String,
+    /// Human explanation of the breach, with the offending values.
+    pub detail: String,
+}
+
+impl Violation {
+    /// An error-severity violation (every catalog rule today).
+    pub fn error(
+        rule: &'static str,
+        subject: impl Into<String>,
+        detail: impl Into<String>,
+    ) -> Self {
+        Violation {
+            rule,
+            severity: Severity::Error,
+            subject: subject.into(),
+            detail: detail.into(),
+        }
+    }
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} [{}] {}: {}",
+            self.severity, self.rule, self.subject, self.detail
+        )
+    }
+}

@@ -1,0 +1,259 @@
+//! The plan verifier: static hazard checks on one coalesced superkernel
+//! against the issue-window state it is about to be issued from.
+//!
+//! This is the machine-verifier half of the VLIW analogy: the scheduler
+//! and coalescer *construct* plans, and — like LLVM's MachineVerifier
+//! after each pass — [`verify_pack`] re-derives every bundle-legality
+//! rule from first principles and rejects the plan if any fails. It is
+//! a pure function over `(&Window, &Coalescer, plan, live plans)`; the
+//! JIT calls it at issue time behind
+//! [`Policy::verify_plans`](crate::compiler::scheduler::Policy::verify_plans)
+//! (fail-stop under `debug_assertions`, count-and-continue in release).
+//!
+//! Rules PLAN001–PLAN007 — see the catalog in [`crate::analysis`].
+
+use crate::analysis::Violation;
+use crate::compiler::coalescer::{Coalescer, ShapeClass, SuperKernel};
+use crate::compiler::ir::{SloClass, TensorOp};
+use crate::compiler::window::{OpState, Window};
+
+fn subject(op: &TensorOp) -> String {
+    format!("op {} (stream {} seq {})", op.id.0, op.stream.0, op.seq)
+}
+
+/// True when `op` legally belongs to a pack of class `class`: either the
+/// op quantizes into the class (the normal power-of-two bucket) or the
+/// class IS the op's exact dims (the coalescer's out-of-band bucket for
+/// shapes whose padding overhead exceeds `max_padding`).
+fn shape_matches(class: &ShapeClass, op: &TensorOp) -> bool {
+    ShapeClass::of(&op.kernel) == *class
+        || (op.kernel.m, op.kernel.k, op.kernel.n) == (class.m, class.k, class.n)
+}
+
+/// Verify one plan against the window it will issue from. `live` is the
+/// set of already-issued, not-yet-finished plans (the JIT's pending
+/// ticket table) — double-issue is checked against it and against the
+/// plan itself. Returns every violation found (empty = plan is legal).
+pub fn verify_pack(
+    window: &Window,
+    coalescer: &Coalescer,
+    pack: &SuperKernel,
+    live: &[&SuperKernel],
+) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let mut group: Option<(u64, String)> = None;
+    let mut class: Option<(SloClass, String)> = None;
+
+    for (idx, &id) in pack.ops.iter().enumerate() {
+        let Some(op) = window.get(id) else {
+            out.push(Violation::error(
+                "PLAN006",
+                format!("op {}", id.0),
+                "plan member is not in the window at issue time",
+            ));
+            continue;
+        };
+        let subj = subject(op);
+
+        // PLAN006: only the ready prefix may issue.
+        let state = window.state(id);
+        if state != Some(OpState::Ready) {
+            out.push(Violation::error(
+                "PLAN006",
+                subj.clone(),
+                format!("issued while {state:?}, not in the window's ready prefix"),
+            ));
+        }
+
+        // PLAN001: per-stream program order for dependent ops. With
+        // correct window bookkeeping a dependent op with pending
+        // predecessors is never Ready, so a PLAN001 hit specifically
+        // means the ready-prefix state machine regressed (the PR 2
+        // requeue-order bug class).
+        if !op.independent {
+            let preds = window.pending_predecessors(id);
+            if !preds.is_empty() {
+                out.push(Violation::error(
+                    "PLAN001",
+                    subj.clone(),
+                    format!(
+                        "dependent op issued with {} lower-seq predecessor(s) of its \
+                         stream still pending (first: op {})",
+                        preds.len(),
+                        preds[0].0
+                    ),
+                ));
+            }
+        }
+
+        // PLAN002: one placement/pricing group per launch.
+        match &group {
+            None => group = Some((op.group, subj.clone())),
+            Some((g, first)) if *g != op.group => {
+                out.push(Violation::error(
+                    "PLAN002",
+                    subj.clone(),
+                    format!(
+                        "group {} mixed into a pack of group {g} (first member {first})",
+                        op.group
+                    ),
+                ));
+            }
+            _ => {}
+        }
+
+        // PLAN003: SLO classes never share a launch.
+        match &class {
+            None => class = Some((op.class, subj.clone())),
+            Some((c, first)) if *c != op.class => {
+                out.push(Violation::error(
+                    "PLAN003",
+                    subj.clone(),
+                    format!(
+                        "class {} mixed into a {} pack (first member {first})",
+                        op.class.name(),
+                        c.name()
+                    ),
+                ));
+            }
+            _ => {}
+        }
+
+        // PLAN004: every member fits the pack's shape class.
+        if !shape_matches(&pack.class, op) {
+            out.push(Violation::error(
+                "PLAN004",
+                subj.clone(),
+                format!(
+                    "kernel {}x{}x{} does not belong to pack class {}x{}x{}",
+                    op.kernel.m, op.kernel.k, op.kernel.n, pack.class.m, pack.class.k, pack.class.n
+                ),
+            ));
+        }
+
+        // PLAN007: no op rides two live launches (or one launch twice).
+        let dup_in_pack = pack.ops[..idx].contains(&id);
+        let in_live = live.iter().any(|l| l.ops.contains(&id));
+        if dup_in_pack || in_live {
+            let detail = if dup_in_pack {
+                "op appears twice in one plan"
+            } else {
+                "op is already a member of a live (issued, unfinished) launch"
+            };
+            out.push(Violation::error("PLAN007", subj.clone(), detail));
+        }
+    }
+
+    // PLAN005: the pack never exceeds the cap its group was priced under.
+    if let Some((g, _)) = &group {
+        let cap = coalescer.cap_of(*g);
+        if pack.ops.len() > cap {
+            out.push(Violation::error(
+                "PLAN005",
+                format!("pack of {} ops in group {g}", pack.ops.len()),
+                format!("exceeds the group's coalescer cap of {cap}"),
+            ));
+        }
+    }
+
+    out
+}
+
+/// Ids of the rules a slice of violations tripped, deduplicated and
+/// sorted — the mutation tests assert on exactly this.
+pub fn rule_ids(violations: &[Violation]) -> Vec<&'static str> {
+    let mut ids: Vec<&'static str> = Vec::new();
+    for v in violations {
+        if !ids.contains(&v.rule) {
+            ids.push(v.rule);
+        }
+    }
+    ids.sort_unstable();
+    ids
+}
+
+/// Convenience for tests: did exactly this one rule fire (possibly more
+/// than once), and nothing else?
+pub fn only_rule(violations: &[Violation], rule: &str) -> bool {
+    !violations.is_empty() && violations.iter().all(|v| v.rule == rule)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::ir::{DispatchRequest, StreamId};
+    use crate::gpu::kernel::KernelDesc;
+
+    fn window_with(reqs: Vec<DispatchRequest>) -> Window {
+        let mut w = Window::new(64);
+        for r in reqs {
+            w.submit(r, 0.0).expect("window has capacity");
+        }
+        w
+    }
+
+    fn req(stream: u32, m: u32, k: u32, n: u32) -> DispatchRequest {
+        DispatchRequest::new(StreamId(stream), KernelDesc::gemm(m, k, n), 10_000.0)
+    }
+
+    #[test]
+    fn clean_coalesced_plans_verify_clean() {
+        let w = window_with(vec![req(0, 1, 256, 256), req(1, 1, 256, 256)]);
+        let c = Coalescer::default();
+        let ready = w.ready();
+        let packs = c.pack(&ready);
+        assert!(!packs.is_empty());
+        for p in &packs {
+            let vs = verify_pack(&w, &c, p, &[]);
+            assert!(vs.is_empty(), "clean plan flagged: {vs:?}");
+        }
+    }
+
+    #[test]
+    fn out_of_band_exact_singleton_is_legal() {
+        // padding overhead of 3x513x5 into its power-of-two class
+        // (4x1024x8) is ~0.77 > max_padding, so the coalescer gives the
+        // op an exact out-of-band class; PLAN004 must accept that class
+        // even though ShapeClass::of disagrees with it.
+        let w = window_with(vec![req(0, 3, 513, 5)]);
+        let c = Coalescer::default();
+        let ready = w.ready();
+        let packs = c.pack(&ready);
+        assert_eq!(packs.len(), 1);
+        assert!(verify_pack(&w, &c, &packs[0], &[]).is_empty());
+    }
+
+    #[test]
+    fn double_issue_against_live_ticket_is_plan007() {
+        let mut w = window_with(vec![req(0, 1, 256, 256), req(1, 1, 256, 256)]);
+        let c = Coalescer::default();
+        let packs = c.pack(&w.ready());
+        assert_eq!(packs.len(), 1);
+        let live = packs[0].clone();
+        w.issue(&live.ops);
+        // replaying the same plan while its ticket is live must trip
+        // PLAN007 (and PLAN006: the members are InFlight, not Ready)
+        let vs = verify_pack(&w, &c, &live, &[&live]);
+        let hit = rule_ids(&vs);
+        assert!(hit.contains(&"PLAN007"), "{vs:?}");
+        assert!(hit.contains(&"PLAN006"), "{vs:?}");
+    }
+
+    #[test]
+    fn cap_overflow_is_plan005() {
+        let reqs: Vec<_> = (0..4).map(|s| req(s, 1, 256, 256)).collect();
+        let w = window_with(reqs);
+        let c = Coalescer::new(2, 1.0); // cap 2
+        let ready = w.ready();
+        // hand-build the oversized pack the real coalescer would split
+        let class = ShapeClass::of(&KernelDesc::gemm(1, 256, 256));
+        let pack = SuperKernel {
+            class,
+            ops: ready.iter().map(|o| o.id).collect(),
+            useful_flops: 1.0,
+            kernel: class.kernel(4),
+        };
+        let vs = verify_pack(&w, &c, &pack, &[]);
+        assert!(only_rule(&vs, "PLAN005"), "{vs:?}");
+    }
+}

@@ -200,6 +200,15 @@ pub struct JitStats {
     /// Pack rows that shared a launch with an earlier row of the same
     /// stream — the stream-prefix coalescing the independence flag buys.
     pub same_stream_rows: u64,
+    /// Plans checked by the machine verifier ([`crate::analysis::plan`])
+    /// — non-zero whenever [`Policy::verify_plans`] is on.
+    ///
+    /// [`Policy::verify_plans`]: crate::compiler::scheduler::Policy::verify_plans
+    pub plan_checks: u64,
+    /// Violations the verifier found. Under `debug_assertions` a
+    /// violation panics instead (fail-stop in tests); in release runs
+    /// this counter is the fail-open record BENCH_9 asserts is zero.
+    pub plan_violations: u64,
 }
 
 impl JitStats {
@@ -477,6 +486,9 @@ where
                 Decision::Idle => return (out, None),
                 Decision::Wait { until_us } => return (out, Some(until_us)),
                 Decision::Launch(pack) => {
+                    if self.cfg.policy.verify_plans {
+                        self.verify_plan(&pack);
+                    }
                     self.window.issue(&pack.ops);
                     let est = {
                         let members = Self::members(&self.window, &pack);
@@ -564,6 +576,9 @@ where
     /// is charged the straggler time up to the trigger plus a clean re-run
     /// at estimate (counted in stats).
     fn launch_sync(&mut self, pack: SuperKernel) -> Vec<OpCompletion> {
+        if self.cfg.policy.verify_plans {
+            self.verify_plan(&pack);
+        }
         self.window.issue(&pack.ops);
         let issue_us = self.now_us;
         let (est, pack_class, mut run) = {
@@ -600,6 +615,24 @@ where
         self.record_launch(&pack, &run);
         let done_us = self.now_us;
         self.complete_pack(&pack, issue_us, done_us, &run, evicted)
+    }
+
+    /// Machine-verify a plan before issue (PLAN001–PLAN007, see
+    /// [`crate::analysis::plan`]). Fail-stop under `debug_assertions` —
+    /// the test suites must never issue a hazardous superkernel —
+    /// fail-open but counted in release, so a production run keeps
+    /// serving while `plan_violations` records the regression.
+    fn verify_plan(&mut self, pack: &SuperKernel) {
+        self.stats.plan_checks += 1;
+        let live: Vec<&SuperKernel> = self.pending.values().map(|p| &p.pack).collect();
+        let vs = crate::analysis::plan::verify_pack(&self.window, &self.cfg.coalescer, pack, &live);
+        if !vs.is_empty() {
+            self.stats.plan_violations += vs.len() as u64;
+            if cfg!(debug_assertions) {
+                let lines: Vec<String> = vs.iter().map(|v| v.to_string()).collect();
+                panic!("plan verifier rejected superkernel:\n{}", lines.join("\n"));
+            }
+        }
     }
 
     fn members<'a>(window: &'a Window, pack: &SuperKernel) -> Vec<&'a TensorOp> {

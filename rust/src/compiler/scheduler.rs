@@ -96,6 +96,12 @@ pub struct Policy {
     /// the answer stream (and error is below threshold) it backs off to
     /// 4× the base period.
     pub refine_err_threshold_us: f64,
+    /// Run the machine plan verifier ([`crate::analysis::plan`]) over
+    /// every coalesced plan at issue time. Default on under
+    /// `debug_assertions` (tests fail-stop on a hazardous superkernel),
+    /// off in release hot paths; `vliwd bench --verify` and
+    /// `--verify-plans` force it on to measure the overhead.
+    pub verify_plans: bool,
 }
 
 impl Default for Policy {
@@ -112,6 +118,7 @@ impl Default for Policy {
             refine_period: 64,
             refine_top: 8,
             refine_err_threshold_us: 500.0,
+            verify_plans: cfg!(debug_assertions),
         }
     }
 }

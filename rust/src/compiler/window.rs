@@ -233,6 +233,28 @@ impl Window {
         self.ops.get(&id).map(|(_, s)| *s)
     }
 
+    /// Pending (un-issued) same-stream ops with a lower sequence number
+    /// than `id` — the predecessors program order requires to issue
+    /// first. Empty for an unknown op. The plan verifier
+    /// ([`crate::analysis::plan`]) checks this is empty for every
+    /// dependent op in a pack (PLAN001); correct window bookkeeping
+    /// guarantees it, so a non-empty answer for a Ready dependent op
+    /// means the ready-prefix state machine regressed.
+    pub fn pending_predecessors(&self, id: OpId) -> Vec<OpId> {
+        let Some((op, _)) = self.ops.get(&id) else {
+            return Vec::new();
+        };
+        self.streams
+            .get(&op.stream)
+            .map(|q| {
+                q.iter()
+                    .filter(|x| **x != id && self.ops[*x].0.seq < op.seq)
+                    .copied()
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
     /// Mark ops as issued (Ready → InFlight), unblocking each stream's
     /// successor prefix. Panics if any op is not ready — the scheduler must
     /// never issue blocked ops. Dependent ops leave from the queue front

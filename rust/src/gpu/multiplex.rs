@@ -13,7 +13,9 @@
 
 use crate::gpu::cost::CostModel;
 use crate::gpu::kernel::{KernelDesc, LaunchConfig};
-use crate::gpu::timeline::{run_time_mux, Completion, SharingModel, SharingSim, SimKernel, SimResult};
+use crate::gpu::timeline::{
+    run_time_mux, Completion, SharingModel, SharingSim, SimKernel, SimResult,
+};
 
 /// A per-stream inference: an ordered chain of layer kernels.
 #[derive(Debug, Clone)]

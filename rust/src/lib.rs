@@ -26,6 +26,7 @@
 //! | module | role |
 //! |---|---|
 //! | [`util`] | substrates built in-repo: PRNG, stats, JSON, CLI, threadpool, logging |
+//! | [`analysis`] | the schedule verifier: plan verifier, launch-log auditor, architecture linter |
 //! | [`gpu`] | V100-calibrated space-time GPU simulator (device, cost model, timeline, multiplexing) |
 //! | [`model`] | DNN model zoo: per-layer GEMM shape extraction (Fig. 2/7 source data) |
 //! | [`workload`] | arrival processes, tenant specs, trace generation/replay |
@@ -36,6 +37,7 @@
 //! | [`serve`] | multi-tenant serving loop, metrics, admission control |
 //! | [`bench`] | micro-benchmark harness (criterion replacement) |
 
+pub mod analysis;
 pub mod bench;
 pub mod compiler;
 pub mod estimate;

@@ -30,7 +30,18 @@
 //!                     `--wire` starts a loopback wire server and drives it
 //!                     with the load generator — mixed and slo-mix traces,
 //!                     client batches of 1 and 8 — and emits client-observed
-//!                     latency + intake metrics (BENCH_8.json)
+//!                     latency + intake metrics (BENCH_8.json);
+//!                     `--verify` replays the same trace with the issue-time
+//!                     plan verifier off and on and emits the overhead ratio
+//!                     + violation count (BENCH_9.json);
+//!                     `--launch-log out.jsonl` captures the replay's
+//!                     admission/launch/completion events for `vliwd audit`
+//! * `audit`         — offline launch-log auditor: replays a `--launch-log`
+//!                     JSONL capture against the global scheduling
+//!                     invariants (AUDIT001..AUDIT005); exit 1 on violation
+//! * `lint`          — architecture linter: token-level scan of the source
+//!                     tree for layering/clock/panic-hygiene violations
+//!                     (LINT001..LINT005); exit 1 on violation
 //! * `autotune`      — Table-1 style greedy-vs-collaborative search;
 //!                     `--save` persists the tuned estimates as the
 //!                     `artifacts/tuned.json` warm-start cache
@@ -38,8 +49,11 @@
 //!
 //! Run `vliwd <cmd> --help` for flags.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Context, Result};
 
+use vliw_jit::analysis::{audit, lint};
 use vliw_jit::compiler::ir::SloClass;
 use vliw_jit::compiler::{autotune, cluster};
 use vliw_jit::estimate::{shape_class_label, TunedCache, TunedEntry};
@@ -75,10 +89,12 @@ fn main() -> Result<()> {
         "bench" => cmd_bench(),
         "autotune" => cmd_autotune(),
         "cluster" => cmd_cluster(),
+        "audit" => cmd_audit(),
+        "lint" => cmd_lint(),
         "help" | "--help" | "-h" => {
             println!(
                 "vliwd — OoO VLIW JIT for accelerator inference\n\n\
-                 USAGE: vliwd <info|golden|serve|loadgen|bench|autotune|cluster> [flags]\n\
+                 USAGE: vliwd <info|golden|serve|loadgen|bench|autotune|cluster|audit|lint> [flags]\n\
                  Run `vliwd <cmd> --help` for per-command flags."
             );
             Ok(())
@@ -176,7 +192,11 @@ fn serve() -> Result<()> {
         .flag("requests", "40", "requests per tenant")
         .flag("speedup", "1", "trace time compression factor")
         .flag("seed", "42", "trace seed")
-        .flag("workers", "1", "launch-stage workers (>1: one backend per worker, models execute concurrently)")
+        .flag(
+            "workers",
+            "1",
+            "launch-stage workers (>1: one backend per worker, models execute concurrently)",
+        )
         .flag(
             "devices",
             "",
@@ -194,6 +214,11 @@ fn serve() -> Result<()> {
         )
         .flag("intake-shards", "2", "socket intake worker pool size (with --listen)")
         .flag("serve-secs", "10", "how long to serve before draining (with --listen)")
+        .flag(
+            "launch-log",
+            "",
+            "write admission/launch/completion events as JSONL to this path for offline `vliwd audit`",
+        )
         .flag("log", "info", "log level")
         .switch("no-batching", "serve batch-1 FIFO (baseline)");
     let p = parse(args)?;
@@ -213,6 +238,13 @@ fn serve() -> Result<()> {
         p.get_nonempty_list("devices")
             .map_err(|e| anyhow::anyhow!("{e}"))?
     };
+    let launch_log = match p.get("launch-log") {
+        "" => None,
+        path => Some(Arc::new(
+            audit::AuditLog::create(path)
+                .map_err(|e| anyhow::anyhow!("create {path}: {e}"))?,
+        )),
+    };
 
     let models = ["mlp_small", "gemmnet6", "mlp_large"];
     let listen = p.get("listen").to_string();
@@ -228,6 +260,7 @@ fn serve() -> Result<()> {
         };
         let no_batching = p.get_bool("no-batching");
         let tenants = mixed_tenants(n, &models, rate);
+        let engine_log = launch_log.clone();
         let ws = serve_wire(
             move || {
                 let mut ex = PjrtExecutor::from_default_artifacts().expect("artifacts");
@@ -243,6 +276,7 @@ fn serve() -> Result<()> {
                     },
                 );
                 s.frontend = frontend;
+                s.launch_log = engine_log;
                 let tuned_path = std::path::Path::new("artifacts/tuned.json");
                 if tuned_path.exists() {
                     s.tuned = TunedCache::load(tuned_path).ok();
@@ -252,6 +286,7 @@ fn serve() -> Result<()> {
             tenants,
             &listen,
             shards,
+            launch_log,
         )
         .map_err(|e| anyhow::anyhow!("bind {listen}: {e}"))?;
         println!(
@@ -282,6 +317,7 @@ fn serve() -> Result<()> {
         trace.offered_load()
     );
     let mut server = Server::new(ex, policy);
+    server.launch_log = launch_log;
     match p.get("frontend") {
         "on" => server.frontend = true,
         "off" => server.frontend = false,
@@ -483,6 +519,15 @@ fn cmd_bench() -> Result<()> {
             "wire",
             "serve over a loopback TCP wire and drive it with the load generator — mixed and slo-mix traces, client batches of 1 and 8 — and emit BENCH_8.json (client-observed p50/p99, server attainment, mean pack, intake decode p99)",
         )
+        .switch(
+            "verify",
+            "replay the trace twice — issue-time plan verifier off, then on — and emit BENCH_9.json (throughput ratio, plan checks, violation count)",
+        )
+        .flag(
+            "launch-log",
+            "",
+            "write the replay's admission/launch/completion events as JSONL to this path for offline `vliwd audit` (default deterministic replay step only)",
+        )
         .switch("static", "pin the initial placement (disable rebalancing)");
     let p = parse(args)?;
     let n = p.get_u64("tenants").map_err(|e| anyhow::anyhow!("{e}"))? as u32;
@@ -493,12 +538,21 @@ fn cmd_bench() -> Result<()> {
     let engine_matrix = p.get_bool("engine-matrix");
     let warm_start = p.get_bool("warm-start");
     let wire = p.get_bool("wire");
+    let verify = p.get_bool("verify");
     let slo_mix = p.get("workload") == "slo-mix";
-    if (frontend as u8) + (engine_matrix as u8) + (warm_start as u8) + (wire as u8) > 1 {
-        bail!("--frontend, --engine-matrix, --warm-start and --wire are separate bench steps; pick one");
+    if (frontend as u8) + (engine_matrix as u8) + (warm_start as u8) + (wire as u8) + (verify as u8)
+        > 1
+    {
+        bail!("--frontend, --engine-matrix, --warm-start, --wire and --verify are separate bench steps; pick one");
     }
-    if slo_mix && (frontend || engine_matrix || warm_start || wire) {
+    if slo_mix && (frontend || engine_matrix || warm_start || wire || verify) {
         bail!("--workload slo-mix is its own bench step (BENCH_7); drop the other step flag");
+    }
+    let launch_log_path = p.get("launch-log").to_string();
+    if !launch_log_path.is_empty()
+        && (frontend || engine_matrix || warm_start || wire || verify || slo_mix)
+    {
+        bail!("--launch-log applies to the default deterministic replay step only");
     }
     let out = match p.get("out") {
         "" if frontend => "BENCH_4.json".to_string(),
@@ -506,6 +560,7 @@ fn cmd_bench() -> Result<()> {
         "" if warm_start => "BENCH_6.json".to_string(),
         "" if slo_mix => "BENCH_7.json".to_string(),
         "" if wire => "BENCH_8.json".to_string(),
+        "" if verify => "BENCH_9.json".to_string(),
         "" => "BENCH_3.json".to_string(),
         o => o.to_string(),
     };
@@ -539,6 +594,9 @@ fn cmd_bench() -> Result<()> {
         other => bail!("unknown --workload '{other}' (valid: skewed, mixed, slo-mix)"),
     };
     let trace = Trace::generate(&tenants, per, seed);
+    if verify {
+        return bench_verify(&trace, &out);
+    }
     if slo_mix {
         return bench_slo_mix(&trace, &out);
     }
@@ -565,6 +623,12 @@ fn cmd_bench() -> Result<()> {
         return bench_frontend(&trace, speedup, &out);
     }
     let mut server = Server::new(SimBackend::default(), BatchPolicy::coalescing());
+    if !launch_log_path.is_empty() {
+        server.launch_log = Some(Arc::new(
+            audit::AuditLog::create(&launch_log_path)
+                .map_err(|e| anyhow::anyhow!("create {launch_log_path}: {e}"))?,
+        ));
+    }
     let wall = std::time::Instant::now();
     let (report, table) = server.replay_placed(&trace, &topo, rebalance);
     let wall_ms = wall.elapsed().as_secs_f64() * 1e3;
@@ -678,6 +742,70 @@ fn bench_frontend(trace: &Trace, speedup: f64, out: &str) -> Result<()> {
     Ok(())
 }
 
+/// The `bench --verify` step (BENCH_9): the same deterministic trace
+/// replayed with the issue-time plan verifier off, then on. The verifier
+/// is a pure function over the window and each coalesced plan, so the
+/// on-run must complete the identical schedule with zero violations; the
+/// only thing it may cost is CPU time per issue. Each configuration runs
+/// three times and reports its best wall-clock throughput (virtual-time
+/// replay rps says nothing about verifier overhead), and CI asserts
+/// violations == 0, plan_checks > 0, the on/off ratio ≥ 0.95, and the
+/// BENCH_2 attainment floor.
+fn bench_verify(trace: &Trace, out: &str) -> Result<()> {
+    const REPS: usize = 3;
+    let run = |verify: bool| {
+        let mut best_secs = f64::INFINITY;
+        let mut last = None;
+        for _ in 0..REPS {
+            let mut s = Server::new(SimBackend::default(), BatchPolicy::coalescing());
+            s.verify_plans = Some(verify);
+            let wall = std::time::Instant::now();
+            let report = s.replay(trace);
+            best_secs = best_secs.min(wall.elapsed().as_secs_f64());
+            last = Some(report);
+        }
+        (last.expect("REPS > 0"), best_secs)
+    };
+    let (off, off_secs) = run(false);
+    let (on, on_secs) = run(true);
+    println!("--- verifier off ---\n{}", off.render());
+    println!("--- verifier on ---\n{}", on.render());
+    println!(
+        "verifier overhead: {:.1} ms -> {:.1} ms best-of-{REPS} ({} checks, {} violations)",
+        off_secs * 1e3,
+        on_secs * 1e3,
+        on.metrics.jit.plan_checks,
+        on.metrics.jit.plan_violations
+    );
+
+    let m = &on.metrics;
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("bench".to_string(), Json::Str("plan_verify".to_string()));
+    o.insert("policy".to_string(), Json::Str(on.policy.to_string()));
+    report_core_json(m, &mut o);
+    o.insert("plan_checks".to_string(), Json::Num(m.jit.plan_checks as f64));
+    o.insert(
+        "violations".to_string(),
+        Json::Num(m.jit.plan_violations as f64),
+    );
+    o.insert(
+        "verify_off_rps".to_string(),
+        Json::Num(off.metrics.total_completed() as f64 / off_secs.max(1e-9)),
+    );
+    o.insert(
+        "verify_on_rps".to_string(),
+        Json::Num(m.total_completed() as f64 / on_secs.max(1e-9)),
+    );
+    o.insert(
+        "off_attainment".to_string(),
+        Json::Num(off.metrics.overall_attainment()),
+    );
+    std::fs::write(out, Json::Obj(o).to_string_compact())
+        .with_context(|| format!("write {out}"))?;
+    println!("wrote {out}");
+    Ok(())
+}
+
 /// The `bench --wire` step (BENCH_8): a loopback wire server (simulator
 /// backend, frontend admission on, 2 intake shards) driven by the load
 /// generator — the mixed and slo-mix traces, each with client batches of
@@ -710,6 +838,7 @@ fn bench_wire(n: u32, rate: f64, per: usize, seed: u64, speedup: f64, out: &str)
                 tenants.clone(),
                 "127.0.0.1:0",
                 2,
+                None,
             )
             .map_err(|e| anyhow::anyhow!("bind loopback: {e}"))?;
             let client = run_loadgen(ws.addr(), &reqs, 4)
@@ -1066,6 +1195,64 @@ fn cmd_autotune() -> Result<()> {
             .map_err(|e| anyhow::anyhow!("save {}: {e}", path.display()))?;
         println!("saved {} tuned estimates to {}", cache.len(), path.display());
     }
+    Ok(())
+}
+
+fn cmd_audit() -> Result<()> {
+    let mut args = Args::new(
+        "vliwd audit",
+        "offline launch-log auditor: replay a --launch-log JSONL capture against the global scheduling invariants",
+    );
+    args.flag(
+        "log",
+        "LAUNCH_LOG.jsonl",
+        "launch log to audit (positional arg also accepted)",
+    );
+    // `vliwd audit foo.jsonl` reads as naturally as `--log foo.jsonl`
+    let positional = std::env::args().nth(2).filter(|a| !a.starts_with('-'));
+    let path = match &positional {
+        Some(p) => p.clone(),
+        None => parse(args)?.get("log").to_string(),
+    };
+    let report = audit::audit_path(&path).map_err(|e| anyhow::anyhow!("audit {path}: {e}"))?;
+    println!(
+        "{path}: {} events ({} admissions, {} launches, {} completions)",
+        report.events, report.admissions, report.launches, report.completions
+    );
+    for v in &report.violations {
+        println!("{v}");
+    }
+    if !report.violations.is_empty() {
+        bail!("{} audit violation(s)", report.violations.len());
+    }
+    println!("audit clean");
+    Ok(())
+}
+
+fn cmd_lint() -> Result<()> {
+    let mut args = Args::new(
+        "vliwd lint",
+        "architecture linter: token-level scan of the source tree for layering/clock/panic-hygiene violations",
+    );
+    args.flag(
+        "root",
+        "rust/src",
+        "source tree to scan (positional arg also accepted)",
+    );
+    let positional = std::env::args().nth(2).filter(|a| !a.starts_with('-'));
+    let root = match &positional {
+        Some(p) => p.clone(),
+        None => parse(args)?.get("root").to_string(),
+    };
+    let report = lint::lint_tree(&root).map_err(|e| anyhow::anyhow!("lint {root}: {e}"))?;
+    println!("{root}: {} file(s) scanned", report.files);
+    for v in &report.violations {
+        println!("{v}");
+    }
+    if !report.violations.is_empty() {
+        bail!("{} lint violation(s)", report.violations.len());
+    }
+    println!("lint clean");
     Ok(())
 }
 

@@ -90,6 +90,7 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::analysis::audit::AuditLog;
 use crate::compiler::ir::{DispatchRequest, OpId, SloClass, StreamId};
 use crate::compiler::jit::{JitCompiler, OpCompletion, PackRun, PendingLaunch};
 use crate::gpu::kernel::KernelDesc;
@@ -621,6 +622,7 @@ pub struct PoolStage<'p, W> {
 impl<'p, W> PoolStage<'p, W> {
     /// A stage over an existing pool.
     pub fn new(pool: &'p StatefulPool<W>) -> Self {
+        // lint: LINT004 result channel; at most one message per booked launch
         let (res_tx, res_rx) = mpsc::channel();
         let workers = pool.workers();
         PoolStage {
@@ -864,12 +866,19 @@ pub(crate) enum OpOutcome {
 pub(crate) struct WireSink {
     tokens: HashMap<OpId, u64>,
     tx: Option<mpsc::Sender<OpEvent>>,
+    /// Launch-log auditor, if attached: every terminal outcome routed
+    /// through here also lands as a `reply` event, and the admission
+    /// paths that already carry the sink stamp admit/reject events.
+    audit: Option<Arc<AuditLog>>,
 }
 
 impl WireSink {
     fn emit(&self, token: u64, outcome: OpOutcome) {
         if token == 0 {
             return;
+        }
+        if let Some(log) = &self.audit {
+            log.reply(token);
         }
         if let Some(tx) = &self.tx {
             // a failed send means the reply router is gone (shutdown):
@@ -944,6 +953,7 @@ fn record_completion(metrics: &mut ServeMetrics, c: &OpCompletion) {
 /// synchronous gate and the frontend drain.
 fn submit_accepted<X: ModelBackend>(
     jit: &mut ServeJit<X>,
+    admission: &Admission,
     metrics: &mut ServeMetrics,
     slots: &[ModelSlot],
     wire: &mut WireSink,
@@ -964,12 +974,28 @@ fn submit_accepted<X: ModelBackend>(
             if a.token != 0 {
                 wire.tokens.insert(id, a.token);
             }
+            if let Some(log) = &wire.audit {
+                // post-submit window counts are the auditor's ground
+                // truth: a gate that over-admitted shows up here even if
+                // its own (possibly stale) pricing view looked legal
+                log.admit(
+                    a.stream.0,
+                    a.group,
+                    a.class.name(),
+                    jit.window.pending_in_group(a.group),
+                    jit.window.inflight_in_group(a.group),
+                    admission.cap_of(a.class),
+                );
+            }
         }
         None => {
             // window full: the backpressure backstop sheds the request
             metrics.drop_request(a.tenant, a.class);
             metrics.reject_reason(RejectReason::QueueFull, a.class);
             wire.emit(a.token, OpOutcome::Rejected(RejectReason::QueueFull));
+            if let Some(log) = &wire.audit {
+                log.reject(a.class.name(), RejectReason::QueueFull.name());
+            }
         }
     }
 }
@@ -1026,11 +1052,15 @@ pub(crate) fn admit_request<X: ModelBackend>(
         metrics.drop_request(tenant, class);
         metrics.reject_reason(RejectReason::QueueFull, class);
         wire.emit(token, OpOutcome::Rejected(RejectReason::QueueFull));
+        if let Some(log) = &wire.audit {
+            log.reject(class.name(), RejectReason::QueueFull.name());
+        }
         return Some(RejectReason::QueueFull);
     }
     metrics.gate_decision(class, true);
     submit_accepted(
         jit,
+        admission,
         metrics,
         slots,
         wire,
@@ -1212,6 +1242,12 @@ pub struct Engine<X: ModelBackend, C: Clock, S: LaunchStage<X>> {
     /// outcome sink intake's reply router listens on. Inert (empty,
     /// no sink) for in-process drive modes.
     wire: WireSink,
+    /// Launch-log auditor ([`crate::analysis::audit`]), if attached:
+    /// the loop stamps launch/complete/rebalance events, the wire sink
+    /// mirrors replies, and the gates stamp admit/reject events.
+    audit: Option<Arc<AuditLog>>,
+    /// Rebalance epochs stamped into the launch log (monotonic per run).
+    audit_epoch: u64,
     /// The scheduler's next wake from the last `issue_and_launch` —
     /// bounds the wall loop's channel wait so a pending coalescing
     /// window fires on time instead of on the next 500µs poll tick.
@@ -1276,6 +1312,8 @@ where
             drained: vec![0; groups],
             drained_by_stream: BTreeMap::new(),
             wire: WireSink::default(),
+            audit: None,
+            audit_epoch: 0,
             wake_hint_us: None,
             view_seq: 0,
             view_dirty: false,
@@ -1306,6 +1344,15 @@ where
     /// router. Requests with token 0 are unaffected.
     pub(crate) fn with_reply_sink(mut self, tx: mpsc::Sender<OpEvent>) -> Self {
         self.wire.tx = Some(tx);
+        self
+    }
+
+    /// Stream structured launch/admission events to `log` as JSONL for
+    /// offline replay by `vliwd audit` (see [`crate::analysis::audit`]).
+    /// `None` keeps every emission off the hot path.
+    pub(crate) fn with_audit(mut self, log: Option<Arc<AuditLog>>) -> Self {
+        self.wire.audit = log.clone();
+        self.audit = log;
         self
     }
 
@@ -1369,6 +1416,7 @@ where
                 )
             })
             .collect();
+        // lint: LINT004 trace generator paces sends; depth bounded by the trace
         let (tx, rx) = mpsc::channel::<Incoming>();
         let gen = std::thread::spawn(move || {
             let g0 = Instant::now();
@@ -1405,6 +1453,7 @@ where
         debug_assert!(!self.clock.is_virtual(), "wall run needs the wall clock");
         let t0 = self.clock.origin();
         let mut intake = if self.frontend {
+            // lint: LINT004 frontend accepts; bounded by the admission gate itself
             let (acc_tx, acc_rx) = mpsc::channel::<FromFrontend>();
             let cell = ViewCell::new(self.build_view(0));
             let fe_cell = Arc::clone(&cell);
@@ -1605,6 +1654,7 @@ where
                             * 1e6;
                         submit_accepted(
                             &mut self.jit,
+                            &self.admission,
                             &mut self.metrics,
                             &self.slots,
                             &mut self.wire,
@@ -1631,6 +1681,9 @@ where
                         // and the wire reply land here
                         self.metrics.reject_reason(reason, class);
                         self.wire.emit(token, OpOutcome::Rejected(reason));
+                        if let Some(log) = &self.wire.audit {
+                            log.reject(class.name(), reason.name());
+                        }
                     }
                     FromFrontend::Retire(ids) => {
                         for id in ids {
@@ -1661,6 +1714,9 @@ where
             self.metrics.reject_reason(RejectReason::RateLimited, class);
             self.wire
                 .emit(token, OpOutcome::Rejected(RejectReason::RateLimited));
+            if let Some(log) = &self.wire.audit {
+                log.reject(class.name(), RejectReason::RateLimited.name());
+            }
             return;
         }
         let (parallelism, device_backlog_us) =
@@ -1698,6 +1754,24 @@ where
                 .get(l.pack.ops[0])
                 .map(|op| op.group)
                 .unwrap_or(0);
+            if let Some(log) = &self.audit {
+                // stamp the launch before the stage runs it: an inline
+                // stage folds (and retires) the members immediately
+                let rows: Vec<(u32, u64, bool)> = l
+                    .pack
+                    .ops
+                    .iter()
+                    .filter_map(|id| self.jit.window.get(*id))
+                    .map(|op| (op.stream.0, op.seq, op.independent))
+                    .collect();
+                let class = self
+                    .jit
+                    .window
+                    .get(l.pack.ops[0])
+                    .map(|op| op.class.name())
+                    .unwrap_or("standard");
+                log.launch(l.ticket, group, class, self.jit.pack_cap(group), &rows);
+            }
             let now = self.clock.now_us();
             self.stage
                 .launch(&mut self.jit, &self.slots, self.placement.as_ref(), group, l, now);
@@ -1743,6 +1817,13 @@ where
             if let Some(rb) = p.rebal.as_mut() {
                 let actions = rb.maybe_rebalance(now, &mut p.table, &p.topo);
                 if !actions.is_empty() {
+                    if let Some(log) = &self.audit {
+                        self.audit_epoch += 1;
+                        let replicas: Vec<(u64, usize)> = (0..self.slots.len() as u64)
+                            .map(|g| (g, p.table.replicas_of(g).len()))
+                            .collect();
+                        log.rebalance(self.audit_epoch, &replicas);
+                    }
                     repin_group_classes(
                         self.jit.executor_mut(),
                         &p.table,
@@ -1764,7 +1845,20 @@ where
         let completions = self.jit.finish_launch(d.ticket, d.done_us, d.run);
         for c in &completions {
             record_completion(&mut self.metrics, c);
-            if let Some(token) = self.wire.tokens.remove(&c.op.id) {
+            let token = self.wire.tokens.remove(&c.op.id);
+            if let Some(log) = &self.audit {
+                log.complete(
+                    c.op.stream.0,
+                    c.op.seq,
+                    c.op.group,
+                    c.done_us,
+                    c.op.deadline_us,
+                    c.met_deadline,
+                    c.failed,
+                    token.unwrap_or(0),
+                );
+            }
+            if let Some(token) = token {
                 let outcome = if c.failed {
                     OpOutcome::Failed
                 } else {

@@ -129,10 +129,10 @@ pub fn run_loadgen(
                 // the bookkeeping
                 w_times
                     .lock()
-                    .expect("sent times poisoned")
+                    .unwrap_or_else(|p| p.into_inner())
                     .insert(id, Instant::now());
                 if write_frame(&mut stream, FrameKind::Request, &payload).is_err() {
-                    w_times.lock().expect("sent times poisoned").remove(&id);
+                    w_times.lock().unwrap_or_else(|p| p.into_inner()).remove(&id);
                     break;
                 }
                 rep.sent_batches += 1;
@@ -160,7 +160,7 @@ pub fn run_loadgen(
                         rep.replies += 1;
                         if let Some(t) = sent_times
                             .lock()
-                            .expect("sent times poisoned")
+                            .unwrap_or_else(|p| p.into_inner())
                             .remove(&reply.id)
                         {
                             rep.latency.record_us(t.elapsed().as_secs_f64() * 1e6);

@@ -78,6 +78,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
+use crate::analysis::audit::AuditLog;
 use crate::serve::engine::{Incoming, OpEvent, OpOutcome};
 use crate::serve::metrics::IntakeShardMetrics;
 use crate::serve::server::{ModelBackend, Server, ServeReport};
@@ -112,9 +113,21 @@ struct ReplyState {
 #[derive(Default)]
 pub struct ReplyTable {
     state: Mutex<ReplyState>,
+    /// Launch-log auditor, if attached: disconnect purges land as
+    /// `purge` events so `vliwd audit` can tell a churned connection's
+    /// never-replied completions from a genuine lost reply.
+    audit: Option<Arc<AuditLog>>,
 }
 
 impl ReplyTable {
+    /// A table that mirrors disconnect purges into `log`.
+    fn with_audit(log: Option<Arc<AuditLog>>) -> Self {
+        ReplyTable {
+            audit: log,
+            ..ReplyTable::default()
+        }
+    }
+
     /// Register a batch BEFORE its ops are forwarded to the engine, so
     /// no completion can arrive for an unregistered batch.
     fn register(
@@ -125,7 +138,7 @@ impl ReplyTable {
         n: usize,
         writer: Arc<Mutex<TcpStream>>,
     ) {
-        let mut s = self.state.lock().expect("reply table poisoned");
+        let mut s = self.state.lock().unwrap_or_else(|p| p.into_inner());
         s.pending.insert(
             batch,
             PendingBatch {
@@ -147,7 +160,7 @@ impl ReplyTable {
         // write happens OUTSIDE it, so a stalling client cannot block
         // the shards' registrations
         let done = {
-            let mut s = self.state.lock().expect("reply table poisoned");
+            let mut s = self.state.lock().unwrap_or_else(|p| p.into_inner());
             if !s.pending.contains_key(&batch) {
                 // the client disconnected and the batch was purged —
                 // the engine's late outcome has nowhere to land
@@ -173,10 +186,10 @@ impl ReplyTable {
                 .collect(),
         };
         let sent = {
-            let mut w = done.writer.lock().expect("writer poisoned");
+            let mut w = done.writer.lock().unwrap_or_else(|p| p.into_inner());
             write_reply_retrying(&mut w, &reply).is_ok()
         };
-        let mut s = self.state.lock().expect("reply table poisoned");
+        let mut s = self.state.lock().unwrap_or_else(|p| p.into_inner());
         if sent {
             s.replies += 1;
         } else {
@@ -187,17 +200,30 @@ impl ReplyTable {
     /// Purge every pending batch of a closed connection — nothing will
     /// read its replies, and the bookkeeping must not outlive it.
     fn drop_conn(&self, conn: u64) {
-        let mut s = self.state.lock().expect("reply table poisoned");
+        let mut s = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        let purged: Vec<u64> = s
+            .pending
+            .iter()
+            .filter(|(_, b)| b.conn == conn)
+            .map(|(&id, _)| id)
+            .collect();
         s.pending.retain(|_, b| b.conn != conn);
+        drop(s);
+        if !purged.is_empty() {
+            if let Some(log) = &self.audit {
+                log.purge(conn, &purged);
+            }
+        }
     }
 
     /// Batches still awaiting members (test hook: leak detection).
     pub fn pending_batches(&self) -> usize {
-        self.state.lock().expect("reply table poisoned").pending.len()
+        let s = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        s.pending.len()
     }
 
     fn stats(&self) -> (u64, u64, u64) {
-        let s = self.state.lock().expect("reply table poisoned");
+        let s = self.state.lock().unwrap_or_else(|p| p.into_inner());
         (s.replies, s.dropped_replies, s.orphan_events)
     }
 }
@@ -300,13 +326,16 @@ impl WireServer {
 /// Bind `listen` and serve a backend over the wire: `make` builds the
 /// [`Server`] ON the engine thread (backends need not be `Send`),
 /// `tenants` declares the served models and their rate/SLO specs, and
-/// `shards` sizes the intake worker pool. Returns once the listener is
-/// bound and every stage is live.
+/// `shards` sizes the intake worker pool. `launch_log` mirrors the
+/// reply table's disconnect purges into the audit log (the engine's own
+/// events are wired through the `Server` the `make` closure builds).
+/// Returns once the listener is bound and every stage is live.
 pub fn serve_wire<B, F>(
     make: F,
     tenants: Vec<TenantSpec>,
     listen: &str,
     shards: usize,
+    launch_log: Option<Arc<AuditLog>>,
 ) -> io::Result<WireServer>
 where
     B: ModelBackend + 'static,
@@ -317,8 +346,11 @@ where
     let addr = listener.local_addr()?;
     listener.set_nonblocking(true)?;
 
+    // lint: LINT004 shard→engine intake; bounded by per-connection framing
     let (in_tx, in_rx) = mpsc::channel::<Incoming>();
+    // lint: LINT004 reply events; at most one per admitted wire op
     let (ev_tx, ev_rx) = mpsc::channel::<OpEvent>();
+    // lint: LINT004 startup handshake; exactly one message ever sent
     let (slot_tx, slot_rx) = mpsc::channel::<BTreeMap<String, (u64, usize)>>();
 
     let engine_tenants = tenants;
@@ -341,7 +373,7 @@ where
         .recv()
         .map_err(|_| io::Error::other("engine thread died at startup"))?;
 
-    let table = Arc::new(ReplyTable::default());
+    let table = Arc::new(ReplyTable::with_audit(launch_log));
     let stop = Arc::new(AtomicBool::new(false));
     let notify = Arc::new(Notify::new());
     let batch_ids = Arc::new(AtomicU64::new(1));
@@ -349,6 +381,7 @@ where
     let mut conn_txs = Vec::with_capacity(shards);
     let mut shard_stages = Vec::with_capacity(shards);
     for i in 0..shards {
+        // lint: LINT004 acceptor→shard handoff; bounded by accept rate
         let (conn_tx, conn_rx) = mpsc::channel::<(u64, TcpStream)>();
         conn_txs.push(conn_tx);
         let ctx = shard::ShardCtx {

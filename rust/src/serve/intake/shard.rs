@@ -105,7 +105,7 @@ pub(crate) fn shard_loop(ctx: ShardCtx) -> IntakeShardReport {
             if let Close::Protocol(msg) = close {
                 report.protocol_errors += 1;
                 // best effort: name the violation before hanging up
-                let mut w = conn.writer.lock().expect("writer poisoned");
+                let mut w = conn.writer.lock().unwrap_or_else(|p| p.into_inner());
                 let _ = write_frame(&mut *w, FrameKind::Error, &encode_error(&msg));
             }
             ctx.table.drop_conn(conn.id);

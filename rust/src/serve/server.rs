@@ -41,8 +41,9 @@
 //! [`Server::tuned`] warm-starts pricing before any observation lands.
 
 use std::collections::{BTreeMap, BTreeSet, HashMap};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 
+use crate::analysis::audit::AuditLog;
 use crate::compiler::coalescer::{Coalescer, SuperKernel};
 use crate::compiler::ir::TensorOp;
 use crate::compiler::jit::{JitCompiler, JitConfig, PackExecutor, PackMember, PackRun};
@@ -707,6 +708,16 @@ pub struct Server<B: ModelBackend> {
     /// tenant saturating its bucket never moves the admission price other
     /// tenants see. Tenants absent from the map are unshaped.
     pub tenant_rates: BTreeMap<u32, (f64, f64)>,
+    /// Launch-log auditor ([`crate::analysis::audit`]): when set, every
+    /// drive mode streams admission/launch/completion/rebalance/reply
+    /// events to it as JSONL for offline `vliwd audit` replay
+    /// (`serve`/`bench --launch-log`). `None` = no event logging.
+    pub launch_log: Option<Arc<AuditLog>>,
+    /// Override for the issue-time machine verifier
+    /// ([`Policy::verify_plans`](crate::compiler::scheduler::Policy::verify_plans)):
+    /// `Some(v)` forces it on/off; `None` keeps the build default
+    /// (on under `debug_assertions`, off in release).
+    pub verify_plans: Option<bool>,
 }
 
 impl<B: ModelBackend> Server<B> {
@@ -721,6 +732,8 @@ impl<B: ModelBackend> Server<B> {
             frontend: true,
             tuned: None,
             tenant_rates: BTreeMap::new(),
+            launch_log: None,
+            verify_plans: None,
         }
     }
 
@@ -747,7 +760,10 @@ impl<B: ModelBackend> Server<B> {
     ) -> EngineParts<'_, B> {
         let (slots, index) = model_slots(&self.backend, trace);
         let arrivals = trace_arrivals(trace, &index);
-        let cfg = self.policy.jit_config(&slots, self.window_capacity);
+        let mut cfg = self.policy.jit_config(&slots, self.window_capacity);
+        if let Some(v) = self.verify_plans {
+            cfg.policy.verify_plans = v;
+        }
         let config = EngineConfig {
             admission: self.admission.clone(),
             independent_streams: self.independent_streams,
@@ -797,6 +813,7 @@ impl<B: ModelBackend> Server<B> {
     /// payloads are deterministic hash01 rows.
     pub fn replay(&mut self, trace: &Trace) -> ServeReport {
         let topo = DeviceTopology::homogeneous(1, DeviceSpec::v100());
+        let audit = self.launch_log.clone();
         let parts = self.engine_parts(trace, Some(&topo), false);
         let table = parts.table.expect("seeded table");
         let engine = Engine::new(
@@ -811,7 +828,8 @@ impl<B: ModelBackend> Server<B> {
             }),
             parts.slots,
             parts.config,
-        );
+        )
+        .with_audit(audit);
         engine.run_virtual(&parts.arrivals).0
     }
 
@@ -829,6 +847,7 @@ impl<B: ModelBackend> Server<B> {
         rebalance: Option<RebalanceConfig>,
     ) -> (ServeReport, PlacementTable) {
         let rebal = rebalance.map(|c| Rebalancer::new(c, topo.len()));
+        let audit = self.launch_log.clone();
         let parts = self.engine_parts(trace, Some(topo), false);
         let table = parts.table.expect("seeded table");
         let engine = Engine::new(
@@ -843,7 +862,8 @@ impl<B: ModelBackend> Server<B> {
             }),
             parts.slots,
             parts.config,
-        );
+        )
+        .with_audit(audit);
         let (report, table) = engine.run_virtual(&parts.arrivals);
         (report, table.expect("placed run returns its table"))
     }
@@ -857,6 +877,7 @@ impl<B: ModelBackend> Server<B> {
     where
         B: 'static,
     {
+        let audit = self.launch_log.clone();
         let parts = self.engine_parts(trace, None, self.frontend);
         Engine::new(
             parts.jit,
@@ -866,6 +887,7 @@ impl<B: ModelBackend> Server<B> {
             parts.slots,
             parts.config,
         )
+        .with_audit(audit)
         .run_wall(parts.arrivals, speedup)
     }
 
@@ -890,6 +912,7 @@ impl<B: ModelBackend> Server<B> {
             requests: vec![],
             tenants: tenants.to_vec(),
         };
+        let audit = self.launch_log.clone();
         let parts = self.engine_parts(&trace, None, self.frontend);
         Engine::new(
             parts.jit,
@@ -899,6 +922,7 @@ impl<B: ModelBackend> Server<B> {
             parts.slots,
             parts.config,
         )
+        .with_audit(audit)
         .with_reply_sink(reply)
         .run_wall_rx(rx)
     }
@@ -926,6 +950,7 @@ impl<B: ModelBackend> Server<B> {
     {
         let pool = StatefulPool::new(workers, factory);
         let topo = DeviceTopology::homogeneous(workers, DeviceSpec::v100());
+        let audit = self.launch_log.clone();
         let parts = self.engine_parts(trace, Some(&topo), self.frontend);
         let table = parts.table.expect("seeded table");
         Engine::new(
@@ -941,6 +966,7 @@ impl<B: ModelBackend> Server<B> {
             parts.slots,
             parts.config,
         )
+        .with_audit(audit)
         .run_wall(parts.arrivals, speedup)
     }
 
@@ -965,6 +991,7 @@ impl<B: ModelBackend> Server<B> {
         let specs = topo.clone();
         let pool = StatefulPool::new(topo.len(), move |i| factory(i, specs.spec_of(i)));
         let rebal = rebalance.map(|c| Rebalancer::new(c, topo.len()));
+        let audit = self.launch_log.clone();
         let parts = self.engine_parts(trace, Some(&topo), self.frontend);
         let table = parts.table.expect("seeded table");
         Engine::new(
@@ -980,6 +1007,7 @@ impl<B: ModelBackend> Server<B> {
             parts.slots,
             parts.config,
         )
+        .with_audit(audit)
         .run_wall(parts.arrivals, speedup)
     }
 }

@@ -169,9 +169,9 @@ impl Parsed {
 
     /// f64 flag value.
     pub fn get_f64(&self, name: &str) -> Result<f64> {
-        self.get(name)
-            .parse()
-            .map_err(|_| Error::config(format!("--{name} must be a number, got '{}'", self.get(name))))
+        self.get(name).parse().map_err(|_| {
+            Error::config(format!("--{name} must be a number, got '{}'", self.get(name)))
+        })
     }
 
     /// Switch state.

@@ -35,6 +35,7 @@ impl ThreadPool {
     /// Spawn `n` workers (n >= 1).
     pub fn new(n: usize) -> Self {
         let n = n.max(1);
+        // lint: LINT004 pool job queue; depth bounded by callers' wait_idle
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let in_flight = Arc::new(AtomicUsize::new(0));
@@ -100,6 +101,7 @@ impl ThreadPool {
         let n = items.len();
         let results: Arc<Mutex<Vec<Option<R>>>> =
             Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        // lint: LINT004 completion pulses; exactly one unit per item
         let (done_tx, done_rx) = mpsc::channel::<()>();
         for (i, item) in items.into_iter().enumerate() {
             let f = Arc::clone(&f);
@@ -168,6 +170,7 @@ impl<S: 'static> StatefulPool<S> {
         let mut per_worker = Vec::with_capacity(n);
         let workers = (0..n)
             .map(|i| {
+                // lint: LINT004 per-worker job queue; bounded by wait_idle
                 let (tx, rx) = mpsc::channel::<StateJob<S>>();
                 txs.push(tx);
                 let mine = Arc::new(AtomicUsize::new(0));

@@ -925,3 +925,272 @@ fn prop_best_effort_starvation_is_bounded() {
         );
     }
 }
+
+// ---------------------------------------------------------------------------
+// Analysis-pass mutation properties: each seeded mutation (a hazard the
+// scheduler/coalescer must never construct, or a log a correct run can
+// never emit) must be flagged with exactly its catalog rule id — see the
+// rule tables in the `vliw_jit::analysis` module docs
+// ---------------------------------------------------------------------------
+
+use std::sync::Arc;
+
+use vliw_jit::analysis::audit::{audit_lines, audit_path, events, AuditLog};
+use vliw_jit::analysis::lint::lint_tree;
+use vliw_jit::analysis::plan::{only_rule, rule_ids, verify_pack};
+use vliw_jit::compiler::coalescer::SuperKernel;
+use vliw_jit::util::json::Json;
+use vliw_jit::workload::trace::mixed_tenants;
+
+fn plan_req(stream: u32) -> DispatchRequest {
+    DispatchRequest::new(StreamId(stream), KernelDesc::gemm(1, 256, 256), 10_000.0)
+}
+
+/// Hand-build the pack a mutated coalescer would emit: `shape` names the
+/// pack's class, `ids` its members (legality deliberately unchecked).
+fn pack_of(ids: Vec<OpId>, shape: &KernelDesc) -> SuperKernel {
+    let class = ShapeClass::of(shape);
+    let problems = ids.len() as u32;
+    SuperKernel {
+        class,
+        ops: ids,
+        useful_flops: 1.0,
+        kernel: class.kernel(problems),
+    }
+}
+
+#[test]
+fn mutation_plan_catches_requeue_order_bug() {
+    // replay the PR 2 straggler-eviction state: seq 0 of a dependent
+    // stream issues, seq 1 becomes ready, then seq 0 is evicted back to
+    // pending. A mutated scheduler that still issues seq 1 (the old
+    // requeue-order bug: the requeued op re-entered at the BACK of the
+    // stream queue) must trip PLAN001.
+    let mut w = Window::new(64);
+    let a = w.submit(plan_req(0), 0.0).expect("capacity");
+    let b = w.submit(plan_req(0), 0.0).expect("capacity");
+    w.issue(&[a]);
+    assert!(w.ready().iter().any(|o| o.id == b), "seq 1 ready after seq 0 issues");
+    w.requeue(a);
+    let vs = verify_pack(
+        &w,
+        &Coalescer::default(),
+        &pack_of(vec![b], &KernelDesc::gemm(1, 256, 256)),
+        &[],
+    );
+    assert!(
+        rule_ids(&vs).contains(&"PLAN001"),
+        "requeue-order mutation not flagged as PLAN001: {vs:?}"
+    );
+}
+
+#[test]
+fn mutation_plan_flags_cross_group_pack() {
+    let mut w = Window::new(64);
+    let a = w.submit(plan_req(0).with_group(0), 0.0).expect("capacity");
+    let b = w.submit(plan_req(1).with_group(1), 0.0).expect("capacity");
+    let vs = verify_pack(
+        &w,
+        &Coalescer::default(),
+        &pack_of(vec![a, b], &KernelDesc::gemm(1, 256, 256)),
+        &[],
+    );
+    assert!(only_rule(&vs, "PLAN002"), "{vs:?}");
+}
+
+#[test]
+fn mutation_plan_flags_merged_classes() {
+    let mut w = Window::new(64);
+    let a = w
+        .submit(plan_req(0).with_class(SloClass::Critical), 0.0)
+        .expect("capacity");
+    let b = w
+        .submit(plan_req(1).with_class(SloClass::BestEffort), 0.0)
+        .expect("capacity");
+    let vs = verify_pack(
+        &w,
+        &Coalescer::default(),
+        &pack_of(vec![a, b], &KernelDesc::gemm(1, 256, 256)),
+        &[],
+    );
+    assert!(only_rule(&vs, "PLAN003"), "{vs:?}");
+}
+
+#[test]
+fn mutation_plan_flags_shape_mix() {
+    // 100x256x256 quantizes to a different power-of-two class than
+    // 1x256x256 and is not the pack class's exact dims either
+    let mut w = Window::new(64);
+    let a = w.submit(plan_req(0), 0.0).expect("capacity");
+    let b = w
+        .submit(
+            DispatchRequest::new(StreamId(1), KernelDesc::gemm(100, 256, 256), 10_000.0),
+            0.0,
+        )
+        .expect("capacity");
+    let vs = verify_pack(
+        &w,
+        &Coalescer::default(),
+        &pack_of(vec![a, b], &KernelDesc::gemm(1, 256, 256)),
+        &[],
+    );
+    assert!(only_rule(&vs, "PLAN004"), "{vs:?}");
+}
+
+#[test]
+fn mutation_plan_flags_cap_overflow() {
+    let mut w = Window::new(64);
+    let ids: Vec<OpId> = (0..3)
+        .map(|s| w.submit(plan_req(s), 0.0).expect("capacity"))
+        .collect();
+    let vs = verify_pack(
+        &w,
+        &Coalescer::new(2, 1.0),
+        &pack_of(ids, &KernelDesc::gemm(1, 256, 256)),
+        &[],
+    );
+    assert!(only_rule(&vs, "PLAN005"), "{vs:?}");
+}
+
+#[test]
+fn mutation_plan_flags_unready_issue() {
+    let mut w = Window::new(64);
+    let a = w.submit(plan_req(0), 0.0).expect("capacity");
+    w.issue(&[a]); // InFlight, not Ready
+    let vs = verify_pack(
+        &w,
+        &Coalescer::default(),
+        &pack_of(vec![a], &KernelDesc::gemm(1, 256, 256)),
+        &[],
+    );
+    assert!(only_rule(&vs, "PLAN006"), "{vs:?}");
+}
+
+#[test]
+fn mutation_plan_flags_double_issue() {
+    let mut w = Window::new(64);
+    let a = w.submit(plan_req(0), 0.0).expect("capacity");
+    let b = w.submit(plan_req(1), 0.0).expect("capacity");
+    let live = pack_of(vec![a, b], &KernelDesc::gemm(1, 256, 256));
+    w.issue(&live.ops);
+    // replaying a live ticket's plan: every member trips PLAN007
+    // (already live) and PLAN006 (InFlight, not Ready), nothing else
+    let vs = verify_pack(&w, &Coalescer::default(), &live, &[&live]);
+    assert_eq!(rule_ids(&vs), vec!["PLAN006", "PLAN007"], "{vs:?}");
+}
+
+fn log_text(events: Vec<Json>) -> String {
+    events
+        .iter()
+        .map(|e| e.to_string_compact())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+fn audit_rules(text: &str) -> Vec<&'static str> {
+    rule_ids(&audit_lines(text).expect("well-formed log").violations)
+}
+
+#[test]
+fn mutation_audit_flags_seq_swap() {
+    // a dependent op's launch precedes its predecessor's: the ordering
+    // hazard the window exists to prevent, visible in the log alone
+    let text = log_text(vec![events::launch(1, 0, "standard", 8, &[(0, 1, false)])]);
+    assert_eq!(audit_rules(&text), vec!["AUDIT001"]);
+    // the same launch order is legal for an independent op
+    let ok = log_text(vec![events::launch(1, 0, "standard", 8, &[(0, 1, true)])]);
+    assert_eq!(audit_rules(&ok), Vec::<&str>::new());
+}
+
+#[test]
+fn mutation_audit_catches_stale_view_overadmit() {
+    // the PR 6 stale-view bug class: an admission gate deciding on a
+    // stale snapshot books queued + inflight past the bound it priced
+    // under — exactly what a correct gate's own accept counters prevent
+    // (prop_stale_view_never_over_admits) and what the auditor must
+    // flag if a regression ever re-introduces it
+    let text = log_text(vec![events::admit(0, 0, "standard", 5, 2, 6)]);
+    assert_eq!(audit_rules(&text), vec!["AUDIT002"]);
+    let ok = log_text(vec![events::admit(0, 0, "standard", 4, 2, 6)]);
+    assert_eq!(audit_rules(&ok), Vec::<&str>::new());
+}
+
+#[test]
+fn mutation_audit_flags_totality_break() {
+    // a rebalance snapshot with a 0-replica group (routing black hole),
+    // then one whose group set changed (groups are workload identity,
+    // not placement state)
+    let text = log_text(vec![events::rebalance(1, &[(0, 1), (1, 0)])]);
+    assert_eq!(audit_rules(&text), vec!["AUDIT003"]);
+    let drift = log_text(vec![
+        events::rebalance(1, &[(0, 1), (1, 1)]),
+        events::rebalance(2, &[(0, 2)]),
+    ]);
+    assert_eq!(audit_rules(&drift), vec!["AUDIT003"]);
+}
+
+#[test]
+fn mutation_audit_flags_duplicate_reply() {
+    let token = (5u64 << 16) | 1;
+    let twice = log_text(vec![
+        events::complete(0, 0, 0, 100.0, 200.0, true, false, token),
+        events::reply(token),
+        events::reply(token),
+    ]);
+    assert_eq!(audit_rules(&twice), vec!["AUDIT004"]);
+    // ...and a completed wire op whose reply never happened and whose
+    // batch was never purged is the other half of the totality rule
+    let never = log_text(vec![events::complete(0, 0, 0, 100.0, 200.0, true, false, token)]);
+    assert_eq!(audit_rules(&never), vec!["AUDIT004"]);
+    // a disconnect purge legitimately absorbs the missing reply
+    let purged = log_text(vec![
+        events::complete(0, 0, 0, 100.0, 200.0, true, false, token),
+        events::purge(3, &[5]),
+    ]);
+    assert_eq!(audit_rules(&purged), Vec::<&str>::new());
+}
+
+#[test]
+fn mutation_audit_flags_met_mismatch() {
+    // met=true past the deadline: the accounting lie SLO attainment
+    // would silently inherit
+    let text = log_text(vec![events::complete(0, 0, 0, 300.0, 200.0, true, false, 0)]);
+    assert_eq!(audit_rules(&text), vec!["AUDIT005"]);
+    // failed runs may never count as met either
+    let failed = log_text(vec![events::complete(0, 0, 0, 100.0, 200.0, true, true, 0)]);
+    assert_eq!(audit_rules(&failed), vec!["AUDIT005"]);
+}
+
+#[test]
+fn audit_clean_on_real_replay_log() {
+    // end to end: a deterministic virtual-time replay with the launch
+    // log attached (and, in debug builds, the plan verifier live at
+    // every issue) must produce a log the auditor passes untouched
+    let path = std::env::temp_dir().join(format!("vliw_audit_{}.jsonl", std::process::id()));
+    {
+        let mut server = Server::new(SimBackend::default(), BatchPolicy::coalescing());
+        server.launch_log = Some(Arc::new(AuditLog::create(&path).expect("create log")));
+        let tenants = mixed_tenants(4, &["simnet"], 300.0);
+        let trace = Trace::generate(&tenants, 40, 42);
+        let report = server.replay(&trace);
+        assert!(report.metrics.total_completed() > 0);
+        assert_eq!(report.metrics.jit.plan_violations, 0);
+    }
+    let report = audit_path(&path).expect("readable log");
+    let _ = std::fs::remove_file(&path);
+    assert!(report.events > 0 && report.launches > 0 && report.admissions > 0);
+    assert!(
+        report.violations.is_empty(),
+        "clean replay flagged: {:?}",
+        report.violations
+    );
+}
+
+#[test]
+fn lint_tree_is_clean_on_this_source() {
+    // integration tests run from the crate root, so `rust/src` is the
+    // tree `vliwd lint` defends in CI — it must hold its own rules
+    let report = lint_tree("rust/src").expect("scan rust/src");
+    assert!(report.files > 20, "scanned only {} files", report.files);
+    assert!(report.violations.is_empty(), "{:?}", report.violations);
+}

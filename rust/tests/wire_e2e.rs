@@ -40,6 +40,7 @@ fn client_batch_gets_exactly_one_reply_after_all_members_complete() {
         vec![tenant(0)],
         "127.0.0.1:0",
         2,
+        None,
     )
     .expect("bind loopback");
     // one wire request carrying a client batch of 8 independent ops,
@@ -87,6 +88,7 @@ fn per_stream_order_holds_across_intake_shards_for_dependent_streams() {
         vec![tenant(0), tenant(1)],
         "127.0.0.1:0",
         2,
+        None,
     )
     .expect("bind loopback");
     let addr = ws.addr();
@@ -137,6 +139,7 @@ fn mid_flight_disconnect_drops_pending_replies_without_leaking() {
         vec![tenant(0)],
         "127.0.0.1:0",
         2,
+        None,
     )
     .expect("bind loopback");
     let addr = ws.addr();
