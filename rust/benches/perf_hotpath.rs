@@ -39,7 +39,7 @@ fn main() {
     let cm = CostModel::v100();
     for &n in &[16usize, 64, 256] {
         let mut rng = Rng::new(7);
-        let sched = Scheduler::new(Policy::default(), Coalescer::default());
+        let mut sched = Scheduler::new(Policy::default(), Coalescer::default());
         let timing = time_it(3, 20, || {
             let mut w = Window::new(n + 1);
             for s in 0..n {
@@ -56,7 +56,7 @@ fn main() {
             // drain via decide+issue until empty (full scheduling work)
             let mut now = 0.0;
             loop {
-                match sched.decide(&w, now, |k, _ops| cm.profile_default(k).duration_us) {
+                match sched.decide(&mut w, now, 0, |k, _ops| cm.profile_default(k).duration_us) {
                     Decision::Launch(p) => {
                         w.issue(&p.ops);
                         for id in p.ops {

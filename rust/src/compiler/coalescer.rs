@@ -133,37 +133,56 @@ impl Coalescer {
             .max(1)
     }
 
+    /// The `(group, SLO class, shape class)` bucket an op coalesces under.
+    /// This is the ONE bucketing rule: [`Coalescer::pack`] and the
+    /// incremental scheduler's persistent bucket mirror
+    /// (`compiler/scheduler.rs`) both key on it, so batch packing and
+    /// delta-maintained membership can never disagree. Ops whose padding
+    /// overhead exceeds `max_padding` key under their *exact* shape (no
+    /// quantization) — they only ever share a launch with identically
+    /// shaped peers.
+    pub fn bucket_key_of(&self, op: &TensorOp) -> (u64, SloClass, ShapeClass) {
+        let class = ShapeClass::of(&op.kernel);
+        if class.padding_overhead(&op.kernel) <= self.max_padding {
+            (op.group, op.class, class)
+        } else {
+            // out-of-band shape: exact singleton class
+            let exact = ShapeClass {
+                m: op.kernel.m,
+                k: op.kernel.k,
+                n: op.kernel.n,
+            };
+            (op.group, op.class, exact)
+        }
+    }
+
     /// Group ready ops into superkernels.
     ///
     /// Greedy class-bucket packing: quantize every op, bucket by
-    /// (coalescing group, SLO class, shape class), split buckets into
-    /// chunks of the group's cap. SLO classes never share a launch — a
-    /// best-effort pack can then be staggered, yielded, or evicted without
-    /// dragging critical members along. Ops whose padding overhead exceeds
-    /// `max_padding` go into singleton packs at their own (tighter)
-    /// quantization. Input order is preserved inside a bucket so the
-    /// scheduler's priority order (EDF) survives packing.
+    /// [`Coalescer::bucket_key_of`] — (coalescing group, SLO class, shape
+    /// class) — and split buckets into chunks of the group's cap. SLO
+    /// classes never share a launch — a best-effort pack can then be
+    /// staggered, yielded, or evicted without dragging critical members
+    /// along. Ops whose padding overhead exceeds `max_padding` go into
+    /// singleton packs at their own (tighter) quantization. Input order is
+    /// preserved inside a bucket so the scheduler's priority order (EDF)
+    /// survives packing.
+    ///
+    /// # Determinism contract
+    ///
+    /// `pack` is a *pure function* of the input slice (order included):
+    /// buckets live in a `BTreeMap`, so iteration order is a total order
+    /// over keys, never hash- or allocation-dependent, and members keep
+    /// their input order inside each bucket. Same window state ⇒ same
+    /// packs ⇒ same scheduling decision — the property the incremental
+    /// decide path's cached packs rely on (a cache keyed on anything
+    /// nondeterministic would replay a *different* decision than a fresh
+    /// repack), pinned by `pack_is_deterministic_across_calls` below and
+    /// by the scheduler's naive-oracle property test.
     pub fn pack(&self, ops: &[&TensorOp]) -> Vec<SuperKernel> {
         let mut buckets: BTreeMap<(u64, SloClass, ShapeClass), Vec<&TensorOp>> = BTreeMap::new();
         for op in ops {
-            let class = ShapeClass::of(&op.kernel);
-            if class.padding_overhead(&op.kernel) <= self.max_padding {
-                buckets
-                    .entry((op.group, op.class, class))
-                    .or_default()
-                    .push(op);
-            } else {
-                // out-of-band shape: exact singleton class
-                let exact = ShapeClass {
-                    m: op.kernel.m,
-                    k: op.kernel.k,
-                    n: op.kernel.n,
-                };
-                buckets
-                    .entry((op.group, op.class, exact))
-                    .or_default()
-                    .push(op);
-            }
+            buckets.entry(self.bucket_key_of(op)).or_default().push(op);
         }
         let mut packs = Vec::new();
         for ((group, _slo, class), members) in buckets {
@@ -381,6 +400,41 @@ mod tests {
         assert_eq!(same_stream_rows(&[&a, &b, &d]), 0, "all distinct streams");
         assert_eq!(same_stream_rows(&[&a, &b, &c, &d]), 1, "c repeats stream 0");
         assert_eq!(same_stream_rows(&[]), 0);
+    }
+
+    #[test]
+    fn pack_is_deterministic_across_calls() {
+        // determinism contract (see `pack` doc): identical input slices
+        // must yield structurally identical pack lists, call after call —
+        // no hash-order or allocation-address leakage into bucket order.
+        // Mix of groups, SLO classes, shared shapes and an out-of-band
+        // shape (padding overhead > max_padding keys under exact dims).
+        let mut ops: Vec<TensorOp> = Vec::new();
+        for i in 0..12u64 {
+            let mut o = op(i, i as u32, 100 + (i as u32 % 3) * 9, 500, 60);
+            o.group = i % 3;
+            o.class = match i % 3 {
+                0 => SloClass::Critical,
+                1 => SloClass::Standard,
+                _ => SloClass::BestEffort,
+            };
+            ops.push(o);
+        }
+        ops.push(op(99, 99, 1025, 1025, 1025)); // out of band: ~87% padding
+        let refs: Vec<&TensorOp> = ops.iter().collect();
+        let c = Coalescer::default();
+        let a = c.pack(&refs);
+        let b = c.pack(&refs);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"), "pack is not a pure function");
+        // every member agrees with the shared bucketing rule the
+        // incremental scheduler mirrors
+        for p in &a {
+            for id in &p.ops {
+                let m = ops.iter().find(|o| o.id == *id).unwrap();
+                let key = c.bucket_key_of(m);
+                assert_eq!(key.2, p.class, "bucket_key_of disagrees with pack");
+            }
+        }
     }
 
     #[test]

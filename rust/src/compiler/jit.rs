@@ -59,6 +59,7 @@ use crate::compiler::ir::{DispatchRequest, OpId, TensorOp};
 use crate::compiler::scheduler::{Decision, Policy, Scheduler};
 use crate::compiler::window::Window;
 use crate::gpu::kernel::KernelDesc;
+use crate::util::stats::LatencyHist;
 
 /// Backend abstraction: estimate and execute batched kernels.
 pub trait KernelExecutor {
@@ -106,6 +107,15 @@ pub trait PackExecutor<P> {
     /// Fold a finished launch back into learned estimates. Called once per
     /// launch by the JIT (both drive modes), never by `execute_pack`.
     fn observe_pack(&mut self, _sk: &SuperKernel, _ops: &[&TensorOp], _run: &PackRun) {}
+    /// Generation counter of the estimates behind
+    /// [`PackExecutor::estimate_pack_us`] — the incremental scheduler
+    /// reuses a cached pack estimate until this changes (the tiered
+    /// estimator bumps it on tier transitions; see
+    /// `crate::estimate::TieredEstimator::generation`). Estimators whose
+    /// answers never change generation keep the default constant.
+    fn estimate_generation(&self) -> u64 {
+        0
+    }
 }
 
 impl<E: KernelExecutor> PackExecutor<()> for E {
@@ -209,6 +219,17 @@ pub struct JitStats {
     /// violation panics instead (fail-stop in tests); in release runs
     /// this counter is the fail-open record BENCH_9 asserts is zero.
     pub plan_violations: u64,
+    /// Per-decide latency histogram, **nanoseconds**. Populated only when
+    /// [`JitCompiler::decide_clock`] is set (the serve layer injects a
+    /// monotonic clock; virtual-time deployments leave it `None` so the
+    /// pure compiler layer never reads wall time itself).
+    pub decide_ns: LatencyHist,
+    /// Buckets whose cached packs were reused as-is across decides
+    /// (clean buckets under the incremental scheduler's delta contract).
+    pub buckets_reused: u64,
+    /// Buckets re-packed and re-priced because a window delta or an
+    /// estimator generation bump dirtied them.
+    pub buckets_repacked: u64,
 }
 
 impl JitStats {
@@ -292,6 +313,11 @@ pub struct JitCompiler<E, P = ()> {
     pub now_us: f64,
     /// Aggregate stats.
     pub stats: JitStats,
+    /// Optional monotonic clock (nanoseconds) used to time each `decide`
+    /// into [`JitStats::decide_ns`]. A plain fn pointer keeps the compiler
+    /// layer pure — the serve layer injects one backed by `Instant`;
+    /// virtual-time tests and benches leave it `None` (no timing cost).
+    pub decide_clock: Option<fn() -> u64>,
 }
 
 impl<E, P> JitCompiler<E, P> {
@@ -308,6 +334,7 @@ impl<E, P> JitCompiler<E, P> {
             launch_log: Vec::new(),
             now_us: 0.0,
             stats: JitStats::default(),
+            decide_clock: None,
         }
     }
 
@@ -452,10 +479,20 @@ where
         Some(id)
     }
 
-    fn decide(&self) -> Decision {
-        let ex = &self.executor;
-        self.scheduler
-            .decide(&self.window, self.now_us, |k, ops| ex.estimate_pack_us(k, ops))
+    fn decide(&mut self) -> Decision {
+        let t0 = self.decide_clock.map(|clock| clock());
+        let d = {
+            let Self { window, scheduler, executor, now_us, .. } = self;
+            let gen = executor.estimate_generation();
+            let ex: &E = executor;
+            scheduler.decide(window, *now_us, gen, |k, ops| ex.estimate_pack_us(k, ops))
+        };
+        self.stats.buckets_reused = self.scheduler.buckets_reused();
+        self.stats.buckets_repacked = self.scheduler.buckets_repacked();
+        if let (Some(clock), Some(t0)) = (self.decide_clock, t0) {
+            self.stats.decide_ns.record_us(clock().saturating_sub(t0) as f64);
+        }
+        d
     }
 
     /// Drive the loop at the current instant: launch everything the policy

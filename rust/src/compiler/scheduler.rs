@@ -41,10 +41,63 @@
 //!   ([`Scheduler::eviction_charge_us_class`]).
 //! - **Rate-limit accounting** lives in the frontend gate (per-tenant
 //!   token buckets) — the scheduler never sees shed requests.
+//!
+//! # The incremental decide contract
+//!
+//! [`Scheduler::decide`] is incremental: the scheduler keeps a persistent
+//! mirror of the window's ready set, bucketed by the coalescer's ONE
+//! bucketing rule ([`Coalescer::bucket_key_of`]: `(group, SLO class,
+//! shape class)`), and maintained from the window's ready-set delta log
+//! ([`crate::compiler::window::ReadyDelta`], drained via
+//! [`crate::compiler::window::Window::take_ready_deltas`]) instead of a
+//! per-call rescan. [`Scheduler::decide_naive`] is the from-scratch
+//! reference implementation; the two are pinned bit-identical by a
+//! property-test oracle over randomized admit/issue/requeue/complete
+//! interleavings.
+//!
+//! **What marks a bucket dirty.** Any membership change: an op entering
+//! the ready set (admitted ready, unblocked by an issue, promoted after a
+//! requeue) or leaving it (issued, demoted behind a requeued dependent
+//! op) dirties exactly its own `(group, class, shape)` bucket. A decide
+//! re-chunks and re-prices *dirty* buckets only; clean buckets reuse
+//! their cached packs verbatim — including each pack's kernel estimate
+//! and its `hold_until` launch deadline, both of which are
+//! `now`-independent (`hold_until = min(member deadlines) − est − margin,
+//! capped at oldest arrival + coalesce window`).
+//!
+//! **What the caches key on.** Bucket-internal member order is
+//! `(deadline, op id)` — for a fixed class the class-weighted virtual
+//! deadline is strictly monotone in the raw deadline at every `now`
+//! (both the `ttd ≥ 0` and overdue branches scale a monotone function of
+//! `ttd`), so weighted-EDF order inside a bucket is time-invariant and
+//! cacheable. (Edge: two *distinct* deadlines whose virtual deadlines
+//! collide after rounding would tie-break by id in the naive sort but by
+//! deadline here; sub-ulp deadline spacing is the only way to hit it.)
+//! Only two things are computed fresh per decide, both O(buckets +
+//! packs): the cross-bucket pack order (virtual deadline of each pack's
+//! cached head, sorted into a reusable scratch array — no per-comparison
+//! recomputation, no window lookups) and the best-effort yield check
+//! (the minimum non-best-effort head deadline stands in for the naive
+//! scan over every ready op — the slack test is monotone in the
+//! deadline, so only the minimum can decide it). Cached kernel estimates
+//! are additionally invalidated by the estimator *generation counter*
+//! (`est_gen`, the tiered estimator's tier-change signal): a bumped
+//! generation dirties every bucket, an unchanged generation reuses
+//! cached estimates even if the estimator's EWMA drifted — estimate
+//! reuse between generation bumps is part of this contract (and makes
+//! `Wait` monotonicity strictly stronger than the naive path's).
+//!
+//! **Resync.** The mirror is keyed to one window identity
+//! ([`crate::compiler::window::Window::stamp`]); a stamp mismatch or a
+//! delta-log overflow abandons the cache and rebuilds from
+//! `window.ready()`. Cloning a scheduler resets the cache (a clone will
+//! drain a different window's deltas — or compete for this one's).
 
-use crate::compiler::coalescer::{Coalescer, SuperKernel};
-use crate::compiler::ir::{SloClass, TensorOp};
-use crate::compiler::window::Window;
+use std::collections::{BTreeMap, HashMap};
+
+use crate::compiler::coalescer::{Coalescer, ShapeClass, SuperKernel};
+use crate::compiler::ir::{OpId, SloClass, TensorOp};
+use crate::compiler::window::{ReadyDelta, Window};
 use crate::gpu::kernel::KernelDesc;
 
 /// Scheduling policy knobs.
@@ -132,8 +185,16 @@ impl Policy {
     /// Class-weighted virtual deadline of an op at `now` — the scheduler's
     /// ordering key. Equals the raw deadline when the class weight is 1.
     pub fn virtual_deadline_us(&self, op: &TensorOp, now: f64) -> f64 {
-        let w = self.weight_of(op.class);
-        let ttd = op.deadline_us - now;
+        self.virtual_deadline_key(op.deadline_us, op.class, now)
+    }
+
+    /// The virtual-deadline key from its raw parts — the incremental
+    /// decide path computes it from cached `(head deadline, class)`
+    /// scalars without touching the window. Bit-identical to
+    /// [`Policy::virtual_deadline_us`].
+    pub fn virtual_deadline_key(&self, deadline_us: f64, class: SloClass, now: f64) -> f64 {
+        let w = self.weight_of(class);
+        let ttd = deadline_us - now;
         if ttd >= 0.0 {
             now + ttd / w
         } else {
@@ -165,26 +226,324 @@ pub enum Decision {
     Idle,
 }
 
-/// The OoO scheduler.
+/// A bucket's identity: the coalescer's one bucketing rule
+/// ([`Coalescer::bucket_key_of`]).
+type BucketKey = (u64, SloClass, ShapeClass);
+
+/// A cached pack of one bucket chunk, with everything the decision loop
+/// needs as `now`-independent scalars (see the module doc's incremental
+/// contract): the built superkernel, its kernel estimate at the cache's
+/// estimator generation, its hold deadline, and its head's raw ordering
+/// key parts.
+#[derive(Debug, Clone)]
+struct CachedPack {
+    sk: SuperKernel,
+    est_us: f64,
+    hold_until_us: f64,
+    head_deadline_us: f64,
+    head_id: OpId,
+}
+
+/// One bucket of the persistent ready-set mirror.
 #[derive(Debug, Clone, Default)]
+struct Bucket {
+    /// `(deadline_us, id)` ascending — the weighted-EDF order of a fixed
+    /// class at ANY `now` (virtual deadline is strictly monotone in the
+    /// raw deadline), so membership order is time-invariant.
+    members: Vec<(f64, OpId)>,
+    /// Cached chunking of `members`, valid while `dirty` is false.
+    packs: Vec<CachedPack>,
+    dirty: bool,
+}
+
+/// Persistent incremental-decide state (see the module doc).
+#[derive(Debug, Default)]
+struct DecideCache {
+    buckets: BTreeMap<BucketKey, Bucket>,
+    /// id → (bucket, deadline): locates a leaving op without the window
+    /// (it may already have completed by drain time).
+    op_index: HashMap<OpId, (BucketKey, f64)>,
+    /// The window identity this mirror tracks; a mismatch forces resync.
+    synced_stamp: Option<u64>,
+    /// Estimator generation the cached `est_us` values were priced at.
+    est_gen: u64,
+    /// Scratch: drained window deltas (allocation reused across decides).
+    delta_scratch: Vec<ReadyDelta>,
+    /// Scratch: cross-bucket pack order `(vd, head id, bucket, pack idx)`
+    /// — keys computed ONCE per pack per decide, then sorted; no
+    /// per-comparison recomputation or window lookups.
+    order_scratch: Vec<(f64, OpId, BucketKey, u32)>,
+    /// Cumulative clean-bucket reuses across decides (observability).
+    buckets_reused: u64,
+    /// Cumulative dirty-bucket repacks across decides (observability).
+    buckets_repacked: u64,
+}
+
+impl DecideCache {
+    fn insert(&mut self, key: BucketKey, deadline_us: f64, id: OpId) {
+        let b = self.buckets.entry(key).or_default();
+        let pos = b
+            .members
+            .partition_point(|&(d, i)| d < deadline_us || (d == deadline_us && i < id));
+        b.members.insert(pos, (deadline_us, id));
+        b.dirty = true;
+        let prev = self.op_index.insert(id, (key, deadline_us));
+        debug_assert!(prev.is_none(), "op {id:?} entered the mirror twice");
+    }
+
+    fn remove(&mut self, id: OpId) {
+        let Some((key, deadline_us)) = self.op_index.remove(&id) else {
+            // an Enter skipped because the op had already left the window
+            // (completed between decides) pairs with this no-op Leave
+            return;
+        };
+        let b = self.buckets.get_mut(&key).expect("indexed bucket exists");
+        let pos = b
+            .members
+            .partition_point(|&(d, i)| d < deadline_us || (d == deadline_us && i < id));
+        debug_assert_eq!(b.members.get(pos), Some(&(deadline_us, id)));
+        b.members.remove(pos);
+        b.dirty = true;
+    }
+}
+
+/// The OoO scheduler.
+#[derive(Debug, Default)]
 pub struct Scheduler {
     /// Policy knobs.
     pub policy: Policy,
     /// Packing rules.
     pub coalescer: Coalescer,
+    /// Persistent incremental-decide state. Never consulted by
+    /// [`Scheduler::decide_naive`].
+    cache: DecideCache,
+}
+
+impl Clone for Scheduler {
+    /// Clones policy and packing rules but resets the decide cache: the
+    /// mirror tracks ONE window's delta stream, and a clone would either
+    /// drain a different window or compete with the original for this
+    /// one's deltas — cold-starting the clone is the only safe option.
+    fn clone(&self) -> Self {
+        Scheduler {
+            policy: self.policy.clone(),
+            coalescer: self.coalescer.clone(),
+            cache: DecideCache::default(),
+        }
+    }
 }
 
 impl Scheduler {
     /// New scheduler.
     pub fn new(policy: Policy, coalescer: Coalescer) -> Self {
-        Scheduler { policy, coalescer }
+        Scheduler {
+            policy,
+            coalescer,
+            cache: DecideCache::default(),
+        }
     }
 
-    /// Decide what to do at time `now`. `est_exec` estimates a batched
-    /// kernel's execution time (µs) given the pack's member ops — supplied
-    /// by the executor's cost model so the scheduler stays backend-agnostic
-    /// (the serving executor uses the members' group and count to estimate
-    /// the padded compiled variant that will actually run).
+    /// Clean-bucket reuses across this scheduler's lifetime (each decide
+    /// counts every bucket it kept without repacking).
+    pub fn buckets_reused(&self) -> u64 {
+        self.cache.buckets_reused
+    }
+
+    /// Dirty-bucket repacks across this scheduler's lifetime.
+    pub fn buckets_repacked(&self) -> u64 {
+        self.cache.buckets_repacked
+    }
+
+    /// Decide what to do at time `now` — the incremental path (see the
+    /// module doc's contract): drains the window's ready-set deltas,
+    /// repacks and re-prices only the dirty `(group, class, shape)`
+    /// buckets, and reuses every clean bucket's cached packs, hold
+    /// deadlines, and kernel estimates. `est_gen` is the estimator's
+    /// generation counter ([`crate::estimate::TieredEstimator::generation`]
+    /// for the serving stack; any constant for generation-free
+    /// estimators): a change invalidates every cached estimate.
+    ///
+    /// Decisions are bit-identical to [`Scheduler::decide_naive`] at the
+    /// same `(window state, now, estimates)` — pinned by the naive-oracle
+    /// property test. `est_exec` must be a pure function of its inputs
+    /// between generation bumps; within one generation the cached value
+    /// is reused without re-asking.
+    ///
+    /// `Wait { until_us }` is monotone for a fixed window — and with the
+    /// cache it is monotone even across estimator drift within one
+    /// generation, since the promised wake-up was computed from the very
+    /// estimate the cache replays.
+    pub fn decide<F>(
+        &mut self,
+        window: &mut Window,
+        now: f64,
+        est_gen: u64,
+        est_exec: F,
+    ) -> Decision
+    where
+        F: Fn(&KernelDesc, &[&TensorOp]) -> f64,
+    {
+        let Scheduler {
+            policy,
+            coalescer,
+            cache,
+        } = self;
+        // 1. sync the mirror: drain deltas, or resync from scratch on a
+        // window-identity change / delta-log overflow
+        let overflow = window.take_ready_deltas(&mut cache.delta_scratch);
+        let win: &Window = window;
+        if overflow || cache.synced_stamp != Some(win.stamp()) {
+            cache.buckets.clear();
+            cache.op_index.clear();
+            for op in win.ready() {
+                cache.insert(coalescer.bucket_key_of(op), op.deadline_us, op.id);
+            }
+            cache.synced_stamp = Some(win.stamp());
+        } else {
+            for i in 0..cache.delta_scratch.len() {
+                let delta = cache.delta_scratch[i];
+                match delta {
+                    ReadyDelta::Enter(id) => {
+                        // an op that entered and left the window again
+                        // before this drain resolves to nothing here; its
+                        // Leave below is a no-op too
+                        if let Some(op) = win.get(id) {
+                            cache.insert(coalescer.bucket_key_of(op), op.deadline_us, op.id);
+                        }
+                    }
+                    ReadyDelta::Leave(id) => cache.remove(id),
+                }
+            }
+        }
+        // the mirror IS the ready set — the invariant every cached
+        // decision rests on (stale-cache hazard guard, debug builds)
+        debug_assert_eq!(
+            cache.op_index.len(),
+            win.ready_count(),
+            "bucket mirror diverged from the window's ready set"
+        );
+        // 2. estimator generation bump: every cached estimate is stale
+        if est_gen != cache.est_gen {
+            cache.est_gen = est_gen;
+            for b in cache.buckets.values_mut() {
+                b.dirty = true;
+            }
+        }
+        cache.buckets.retain(|_, b| !b.members.is_empty());
+        if cache.buckets.is_empty() {
+            return Decision::Idle;
+        }
+        // 3. repack + re-price dirty buckets only
+        let DecideCache {
+            buckets,
+            order_scratch,
+            buckets_reused,
+            buckets_repacked,
+            ..
+        } = cache;
+        let mut member_refs: Vec<&TensorOp> = Vec::new();
+        for (key, bucket) in buckets.iter_mut() {
+            if !bucket.dirty {
+                *buckets_reused += 1;
+                continue;
+            }
+            *buckets_repacked += 1;
+            bucket.packs.clear();
+            let cap = coalescer.cap_of(key.0);
+            for chunk in bucket.members.chunks(cap) {
+                member_refs.clear();
+                member_refs.extend(
+                    chunk
+                        .iter()
+                        .map(|&(_, id)| win.get(id).expect("mirrored op in window")),
+                );
+                // useful FLOPs summed in pack order: bit-identical to the
+                // naive path's construction
+                let useful: f64 = member_refs.iter().map(|o| o.kernel.flops()).sum();
+                let kernel = key.2.kernel(chunk.len() as u32);
+                let est = est_exec(&kernel, &member_refs);
+                let min_deadline = member_refs
+                    .iter()
+                    .map(|op| op.deadline_us)
+                    .fold(f64::INFINITY, f64::min);
+                let oldest_arrival = member_refs
+                    .iter()
+                    .map(|op| op.arrival_us)
+                    .fold(f64::INFINITY, f64::min);
+                let critical_us = min_deadline - est - policy.safety_margin_us;
+                let window_closes = oldest_arrival + policy.coalesce_window_us;
+                bucket.packs.push(CachedPack {
+                    sk: SuperKernel {
+                        class: key.2,
+                        ops: chunk.iter().map(|&(_, id)| id).collect(),
+                        useful_flops: useful,
+                        kernel: kernel.clone(),
+                    },
+                    est_us: est,
+                    hold_until_us: critical_us.min(window_closes),
+                    head_deadline_us: chunk[0].0,
+                    head_id: chunk[0].1,
+                });
+            }
+            bucket.dirty = false;
+        }
+        // 4. best-effort yield pivot: the earliest non-best-effort head
+        // deadline — `slack(now, est) < margin` is monotone in the
+        // deadline, so the minimum alone decides the naive any-scan
+        let mut d_min_nonbe = f64::INFINITY;
+        for (key, bucket) in buckets.iter() {
+            if key.1 < SloClass::BestEffort {
+                if let Some(&(d, _)) = bucket.members.first() {
+                    d_min_nonbe = d_min_nonbe.min(d);
+                }
+            }
+        }
+        // 5. cross-bucket EDF: virtual deadline of each pack's cached
+        // head, computed once into the scratch order array
+        order_scratch.clear();
+        for (key, bucket) in buckets.iter() {
+            for (pi, p) in bucket.packs.iter().enumerate() {
+                let vd = policy.virtual_deadline_key(p.head_deadline_us, key.1, now);
+                order_scratch.push((vd, p.head_id, *key, pi as u32));
+            }
+        }
+        order_scratch
+            .sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        // 6. the decision loop — cached scalars only, no allocation
+        let mut earliest_hold = f64::INFINITY;
+        for &(_, _, key, pi) in order_scratch.iter() {
+            let pack = &buckets[&key].packs[pi as usize];
+            let problems = pack.sk.problems();
+            let full = problems >= policy.target_pack
+                || problems >= coalescer.max_problems
+                || problems >= coalescer.cap_of(key.0);
+            if full {
+                let yields = key.1 == SloClass::BestEffort
+                    && d_min_nonbe - now - pack.est_us < policy.safety_margin_us;
+                if !yields {
+                    return Decision::Launch(pack.sk.clone());
+                }
+                continue;
+            }
+            if now + 1e-9 >= pack.hold_until_us {
+                return Decision::Launch(pack.sk.clone());
+            }
+            earliest_hold = earliest_hold.min(pack.hold_until_us);
+        }
+        Decision::Wait {
+            until_us: earliest_hold,
+        }
+    }
+
+    /// Decide what to do at time `now`, from scratch — the reference
+    /// implementation the incremental [`Scheduler::decide`] is pinned
+    /// bit-identical against (property-test oracle), and the baseline
+    /// `vliwd bench --sched` measures the cache against. `est_exec`
+    /// estimates a batched kernel's execution time (µs) given the pack's
+    /// member ops — supplied by the executor's cost model so the
+    /// scheduler stays backend-agnostic (the serving executor uses the
+    /// members' group and count to estimate the padded compiled variant
+    /// that will actually run).
     ///
     /// `Wait { until_us }` is monotone for a fixed window: a `decide` at
     /// (or after) `until_us` launches, it never returns a later wait.
@@ -194,7 +553,7 @@ impl Scheduler {
     /// pack — and hit the target/cap launch triggers — by itself. The
     /// cap/hold logic is per-pack, never per-stream: a pack at its group
     /// cap launches immediately regardless of how many streams filled it.
-    pub fn decide<F>(&self, window: &Window, now: f64, est_exec: F) -> Decision
+    pub fn decide_naive<F>(&self, window: &Window, now: f64, est_exec: F) -> Decision
     where
         F: Fn(&KernelDesc, &[&TensorOp]) -> f64,
     {
@@ -368,9 +727,9 @@ mod tests {
 
     #[test]
     fn idle_on_empty_window() {
-        let w = Window::new(8);
+        let mut w = Window::new(8);
         let cm = CostModel::v100();
-        assert!(matches!(sched().decide(&w, 0.0, est(&cm)), Decision::Idle));
+        assert!(matches!(sched().decide(&mut w, 0.0, 0, est(&cm)), Decision::Idle));
     }
 
     #[test]
@@ -378,7 +737,7 @@ mod tests {
         let mut w = Window::new(8);
         submit(&mut w, 0, 50_000.0, 0.0); // huge slack
         let cm = CostModel::v100();
-        match sched().decide(&w, 0.0, est(&cm)) {
+        match sched().decide(&mut w, 0.0, 0, est(&cm)) {
             Decision::Wait { until_us } => {
                 assert!(until_us > 0.0 && until_us <= 2_000.0, "until={until_us}");
             }
@@ -391,7 +750,7 @@ mod tests {
         let mut w = Window::new(8);
         submit(&mut w, 0, 600.0, 0.0); // slack ≈ safety margin
         let cm = CostModel::v100();
-        match sched().decide(&w, 0.0, est(&cm)) {
+        match sched().decide(&mut w, 0.0, 0, est(&cm)) {
             Decision::Launch(p) => assert_eq!(p.problems(), 1),
             other => panic!("expected Launch, got {other:?}"),
         }
@@ -404,7 +763,7 @@ mod tests {
             submit(&mut w, s, 50_000.0, 0.0);
         }
         let cm = CostModel::v100();
-        match sched().decide(&w, 0.0, est(&cm)) {
+        match sched().decide(&mut w, 0.0, 0, est(&cm)) {
             Decision::Launch(p) => assert_eq!(p.problems(), 4),
             other => panic!("expected Launch, got {other:?}"),
         }
@@ -415,14 +774,14 @@ mod tests {
         let mut w = Window::new(8);
         submit(&mut w, 0, 100_000.0, 0.0);
         let cm = CostModel::v100();
-        let s = sched();
+        let mut s = sched();
         // before window close: wait
-        let until = match s.decide(&w, 100.0, est(&cm)) {
+        let until = match s.decide(&mut w, 100.0, 0, est(&cm)) {
             Decision::Wait { until_us } => until_us,
             other => panic!("expected Wait, got {other:?}"),
         };
         // at/after the wait point: launch
-        match s.decide(&w, until, est(&cm)) {
+        match s.decide(&mut w, until, 0, est(&cm)) {
             Decision::Launch(p) => assert_eq!(p.problems(), 1),
             other => panic!("expected Launch, got {other:?}"),
         }
@@ -437,8 +796,8 @@ mod tests {
         let mut w = Window::new(8);
         submit(&mut w, 0, 100_000.0, 0.0);
         let cm = CostModel::v100();
-        let s = sched();
-        let until = match s.decide(&w, 0.0, est(&cm)) {
+        let mut s = sched();
+        let until = match s.decide(&mut w, 0.0, 0, est(&cm)) {
             Decision::Wait { until_us } => until_us,
             other => panic!("expected Wait, got {other:?}"),
         };
@@ -450,7 +809,7 @@ mod tests {
                 k,
             ) / 10.0
         };
-        match s.decide(&w, until, drifted) {
+        match s.decide(&mut w, until, 0, drifted) {
             Decision::Launch(_) => {}
             Decision::Wait { until_us } => {
                 panic!("wait at {until} re-postponed to {until_us}")
@@ -475,7 +834,7 @@ mod tests {
         .unwrap();
         let cm = CostModel::v100();
         // the urgent (big) op's pack must be chosen, not the relaxed one's
-        match sched().decide(&w, 0.0, est(&cm)) {
+        match sched().decide(&mut w, 0.0, 0, est(&cm)) {
             Decision::Launch(p) => {
                 assert_eq!(p.kernel.m, 2048);
             }
@@ -502,12 +861,12 @@ mod tests {
             )
             .unwrap();
         }
-        let s = Scheduler::new(
+        let mut s = Scheduler::new(
             Policy::default(), // target_pack 4
             Coalescer::new(8, 0.75).with_group_cap(3, 2),
         );
         let cm = CostModel::v100();
-        match s.decide(&w, 0.0, est(&cm)) {
+        match s.decide(&mut w, 0.0, 0, est(&cm)) {
             Decision::Launch(p) => assert_eq!(p.problems(), 2),
             other => panic!("capped pack must launch, got {other:?}"),
         }
@@ -532,7 +891,7 @@ mod tests {
             .unwrap();
         }
         let cm = CostModel::v100();
-        match sched().decide(&w, 0.0, est(&cm)) {
+        match sched().decide(&mut w, 0.0, 0, est(&cm)) {
             Decision::Launch(p) => assert_eq!(p.problems(), 8),
             other => panic!("expected Launch, got {other:?}"),
         }
@@ -556,12 +915,12 @@ mod tests {
             )
             .unwrap();
         }
-        let s = Scheduler::new(
+        let mut s = Scheduler::new(
             Policy::default(), // target_pack 4
             Coalescer::new(8, 0.75).with_group_cap(3, 2),
         );
         let cm = CostModel::v100();
-        match s.decide(&w, 0.0, est(&cm)) {
+        match s.decide(&mut w, 0.0, 0, est(&cm)) {
             Decision::Launch(p) => assert_eq!(p.problems(), 2),
             other => panic!("capped single-stream pack must launch, got {other:?}"),
         }
@@ -576,7 +935,7 @@ mod tests {
             submit(&mut w, 0, 600.0, 0.0); // tight: forces launch now
         }
         let cm = CostModel::v100();
-        match sched().decide(&w, 0.0, est(&cm)) {
+        match sched().decide(&mut w, 0.0, 0, est(&cm)) {
             Decision::Launch(p) => assert_eq!(p.problems(), 1),
             other => panic!("expected singleton Launch, got {other:?}"),
         }
@@ -602,7 +961,7 @@ mod tests {
             .unwrap();
         }
         let cm = CostModel::v100();
-        match sched().decide(&w, 0.0, est(&cm)) {
+        match sched().decide(&mut w, 0.0, 0, est(&cm)) {
             Decision::Launch(p) => {
                 assert_eq!(p.problems(), 4, "the full pack launches");
                 assert_eq!(p.kernel.m, 2048);
@@ -643,7 +1002,7 @@ mod tests {
             0.0,
         )
         .unwrap();
-        let s = Scheduler::new(
+        let mut s = Scheduler::new(
             Policy {
                 coalesce_window_us: 0.0, // launch immediately: order is the test
                 ..Policy::default()
@@ -651,7 +1010,7 @@ mod tests {
             Coalescer::default(),
         );
         let cm = CostModel::v100();
-        match s.decide(&w, 0.0, est(&cm)) {
+        match s.decide(&mut w, 0.0, 0, est(&cm)) {
             Decision::Launch(p) => {
                 let head = w.get(p.ops[0]).unwrap();
                 assert_eq!(head.class, SloClass::Critical, "critical pack first");
@@ -695,7 +1054,7 @@ mod tests {
             0.0,
         )
         .unwrap();
-        match sched().decide(&w, 0.0, est(&cm)) {
+        match sched().decide(&mut w, 0.0, 0, est(&cm)) {
             Decision::Launch(p) => {
                 let head = w.get(p.ops[0]).unwrap();
                 assert_eq!(head.class, SloClass::Critical, "BE pack yielded");
@@ -734,7 +1093,7 @@ mod tests {
         )
         .unwrap();
         let cm = CostModel::v100();
-        match sched().decide(&w, 0.0, est(&cm)) {
+        match sched().decide(&mut w, 0.0, 0, est(&cm)) {
             Decision::Launch(p) => {
                 let head = w.get(p.ops[0]).unwrap();
                 assert_eq!(head.class, SloClass::BestEffort);
@@ -742,6 +1101,203 @@ mod tests {
             }
             other => panic!("expected BE Launch, got {other:?}"),
         }
+    }
+
+    /// Bit-identical Decision comparison for the oracle tests: `Wait`
+    /// times compare by bits, launches by member ids, class, kernel, and
+    /// the bit pattern of the chunk-order FLOP sum.
+    fn assert_decisions_identical(expect: &Decision, got: &Decision, ctx: &str) {
+        match (expect, got) {
+            (Decision::Idle, Decision::Idle) => {}
+            (Decision::Wait { until_us: a }, Decision::Wait { until_us: b }) => {
+                assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: wait {a} vs {b}");
+            }
+            (Decision::Launch(p), Decision::Launch(q)) => {
+                assert_eq!(p.ops, q.ops, "{ctx}: pack members");
+                assert_eq!(p.class, q.class, "{ctx}: shape class");
+                assert_eq!(p.kernel, q.kernel, "{ctx}: batched kernel");
+                assert_eq!(
+                    p.useful_flops.to_bits(),
+                    q.useful_flops.to_bits(),
+                    "{ctx}: useful flops"
+                );
+            }
+            _ => panic!("{ctx}: decisions diverge: {expect:?} vs {got:?}"),
+        }
+    }
+
+    #[test]
+    fn prop_incremental_decide_matches_naive_oracle() {
+        use crate::util::rng::Rng;
+        // randomized submit/issue/requeue/complete/time-advance
+        // interleavings: after every mutation the incremental decision
+        // must be bit-identical to the from-scratch naive one, and every
+        // incremental Launch must pass the machine plan verifier
+        let cm = CostModel::v100();
+        let shapes = [(32u32, 256u32, 256u32), (128, 512, 64), (1, 1536, 4096)];
+        let mut total_reused = 0u64;
+        for seed in 0..20u64 {
+            let mut rng = Rng::new(0xDEC1DE ^ seed);
+            let mut w = Window::new(64);
+            let mut inc = sched();
+            let naive = sched();
+            let mut now = 0.0f64;
+            let mut inflight: Vec<OpId> = Vec::new();
+            for step in 0..200 {
+                match rng.below(100) {
+                    0..=39 => {
+                        let (m, k, n) = shapes[rng.below(3) as usize];
+                        let class = match rng.below(3) {
+                            0 => SloClass::Critical,
+                            1 => SloClass::Standard,
+                            _ => SloClass::BestEffort,
+                        };
+                        let req = crate::compiler::ir::DispatchRequest::new(
+                            StreamId(rng.below(6) as u32),
+                            KernelDesc::gemm(m, k, n),
+                            rng.range(500.0, 60_000.0),
+                        )
+                        .with_class(class)
+                        .with_group(rng.below(2))
+                        .with_independent(rng.below(2) == 0);
+                        let _ = w.submit(req, now);
+                    }
+                    40..=64 => {
+                        if let Decision::Launch(p) = inc.decide(&mut w, now, 0, est(&cm))
+                        {
+                            let v = crate::analysis::plan::verify_pack(
+                                &w,
+                                &inc.coalescer,
+                                &p,
+                                &[],
+                            );
+                            assert!(v.is_empty(), "seed {seed} step {step}: {v:?}");
+                            w.issue(&p.ops);
+                            inflight.extend(p.ops.iter().copied());
+                        }
+                    }
+                    65..=79 => {
+                        if !inflight.is_empty() {
+                            let i = rng.below(inflight.len() as u64) as usize;
+                            let id = inflight.swap_remove(i);
+                            w.complete(id);
+                        }
+                    }
+                    80..=89 => {
+                        if !inflight.is_empty() {
+                            let i = rng.below(inflight.len() as u64) as usize;
+                            let id = inflight.swap_remove(i);
+                            w.requeue(id);
+                        }
+                    }
+                    _ => now += rng.range(0.0, 1_500.0),
+                }
+                let expect = naive.decide_naive(&w, now, est(&cm));
+                let got = inc.decide(&mut w, now, 0, est(&cm));
+                assert_decisions_identical(
+                    &expect,
+                    &got,
+                    &format!("seed {seed} step {step}"),
+                );
+            }
+            total_reused += inc.buckets_reused();
+        }
+        assert!(total_reused > 0, "the cache never reused a clean bucket");
+    }
+
+    #[test]
+    fn estimator_generation_bump_invalidates_cached_estimates() {
+        use std::cell::Cell;
+        // contract: within one generation a cached estimate is replayed
+        // even if the estimator's answer drifts; a generation bump
+        // re-prices every bucket
+        let mut w = Window::new(8);
+        submit(&mut w, 0, 3_000.0, 0.0); // deadline 3000: critical term binds
+        let mut s = sched();
+        let scale = Cell::new(1_000.0);
+        let est_fn = |_k: &KernelDesc, _ops: &[&TensorOp]| scale.get();
+        // gen 0, priced at 1000: hold = 3000 − 1000 − 500(margin) = 1500
+        match s.decide(&mut w, 0.0, 0, est_fn) {
+            Decision::Wait { until_us } => assert_eq!(until_us, 1_500.0),
+            other => panic!("expected Wait, got {other:?}"),
+        }
+        assert_eq!((s.buckets_repacked(), s.buckets_reused()), (1, 0));
+        // estimator drifts WITHOUT a generation bump: cached estimate
+        // replayed, bucket not repacked
+        scale.set(2_000.0);
+        match s.decide(&mut w, 0.0, 0, est_fn) {
+            Decision::Wait { until_us } => assert_eq!(until_us, 1_500.0, "cached"),
+            other => panic!("expected Wait, got {other:?}"),
+        }
+        assert_eq!((s.buckets_repacked(), s.buckets_reused()), (1, 1));
+        // the bump invalidates: repriced at 2000 → hold = 500
+        match s.decide(&mut w, 0.0, 1, est_fn) {
+            Decision::Wait { until_us } => assert_eq!(until_us, 500.0, "repriced"),
+            other => panic!("expected Wait, got {other:?}"),
+        }
+        assert_eq!(s.buckets_repacked(), 2);
+    }
+
+    #[test]
+    fn incremental_cache_order_survives_interleaving_round_trip() {
+        // determinism-contract regression over the incremental path: an
+        // issue + scrambled-requeue round trip returns the window to the
+        // same ready state — the mirror's bucket order, and therefore the
+        // decision, must be identical to before, not an artifact of the
+        // delta application history (the stale-cache-order hazard)
+        let mut w = Window::new(16);
+        for s in 0..4 {
+            submit(&mut w, s, 50_000.0, 0.0);
+        }
+        let cm = CostModel::v100();
+        let mut s1 = sched();
+        let before = match s1.decide(&mut w, 0.0, 0, est(&cm)) {
+            Decision::Launch(p) => p,
+            other => panic!("full pack must launch, got {other:?}"),
+        };
+        w.issue(&before.ops);
+        assert!(matches!(s1.decide(&mut w, 0.0, 0, est(&cm)), Decision::Idle));
+        for id in before.ops.iter().rev() {
+            w.requeue(*id); // reverse order: scrambled delta history
+        }
+        let after = match s1.decide(&mut w, 0.0, 0, est(&cm)) {
+            Decision::Launch(p) => p,
+            other => panic!("restored pack must launch, got {other:?}"),
+        };
+        assert_eq!(format!("{before:?}"), format!("{after:?}"));
+        // and the round-tripped incremental decision still matches naive
+        let naive = sched().decide_naive(&w, 0.0, est(&cm));
+        assert_decisions_identical(
+            &naive,
+            &Decision::Launch(after),
+            "round trip vs naive",
+        );
+    }
+
+    #[test]
+    fn mutation_stale_cached_pack_is_caught_by_verify_pack() {
+        use crate::analysis::plan::{only_rule, rule_ids, verify_pack};
+        // seeded stale-bucket hazard: a cached pack replayed after its
+        // members issued must be rejected by the machine verifier with
+        // the exact ready-prefix rule, not silently double-issued
+        let mut w = Window::new(16);
+        for s in 0..4 {
+            submit(&mut w, s, 50_000.0, 0.0);
+        }
+        let cm = CostModel::v100();
+        let mut s1 = sched();
+        let stale = match s1.decide(&mut w, 0.0, 0, est(&cm)) {
+            Decision::Launch(p) => p,
+            other => panic!("full pack must launch, got {other:?}"),
+        };
+        w.issue(&stale.ops); // members are now InFlight: the plan is stale
+        let v = verify_pack(&w, &s1.coalescer, &stale, &[]);
+        assert!(only_rule(&v, "PLAN006"), "stale plan must trip PLAN006: {v:?}");
+        assert_eq!(v.len(), stale.ops.len(), "every member flagged");
+        // against the live-launch table it is also a double issue
+        let v = verify_pack(&w, &s1.coalescer, &stale, &[&stale]);
+        let ids = rule_ids(&v);
+        assert_eq!(ids, vec!["PLAN006", "PLAN007"], "{v:?}");
     }
 
     #[test]

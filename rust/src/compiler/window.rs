@@ -27,6 +27,7 @@
 //! across packs); dependent ops keep strict per-stream issue order.
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::compiler::ir::{DispatchRequest, OpId, StreamId, TensorOp};
 
@@ -42,8 +43,35 @@ pub enum OpState {
     InFlight,
 }
 
+/// A ready-set membership change, recorded by every mutation that flips an
+/// op into or out of `Ready`. The incremental scheduler drains these
+/// through [`Window::take_ready_deltas`] to keep its bucket mirror in sync
+/// without rescanning the window. Deltas carry only the op id: ids are
+/// never reused and an op's bucket-relevant fields (group, class, shape,
+/// deadline) are immutable, so the scheduler resolves an `Enter` against
+/// the live window at drain time (an op that already left again resolves
+/// to a later `Leave` in the same log).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReadyDelta {
+    /// The op became Ready (admitted ready, unblocked by an issue, or
+    /// promoted after a requeue).
+    Enter(OpId),
+    /// The op stopped being Ready (issued, or demoted behind a requeued
+    /// dependent op).
+    Leave(OpId),
+}
+
+/// Bound on the un-drained delta log. A window whose consumer never drains
+/// (naive decide paths, admission-only use) stops recording at this depth
+/// and flags overflow; the next drain then reports "resync required"
+/// instead of handing out a truncated log.
+const DELTA_LOG_CAP: usize = 8192;
+
+/// Process-global window identity counter — see [`Window::stamp`].
+static WINDOW_STAMP: AtomicU64 = AtomicU64::new(1);
+
 /// The out-of-order issue window.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Window {
     ops: HashMap<OpId, (TensorOp, OpState)>,
     /// per-stream queue of pending (un-issued) op ids in program order
@@ -61,6 +89,30 @@ pub struct Window {
     group_inflight: HashMap<u64, usize>,
     next_id: u64,
     capacity: usize,
+    /// unique per-window identity (see [`Window::stamp`])
+    stamp: u64,
+    /// ready-set changes since the last [`Window::take_ready_deltas`]
+    deltas: Vec<ReadyDelta>,
+    /// true once `deltas` hit [`DELTA_LOG_CAP`] and stopped recording
+    delta_overflow: bool,
+}
+
+impl Default for Window {
+    fn default() -> Self {
+        Window {
+            ops: HashMap::new(),
+            streams: BTreeMap::new(),
+            next_seq: HashMap::new(),
+            inflight: HashMap::new(),
+            group_pending: HashMap::new(),
+            group_inflight: HashMap::new(),
+            next_id: 0,
+            capacity: 0,
+            stamp: WINDOW_STAMP.fetch_add(1, Ordering::Relaxed),
+            deltas: Vec::new(),
+            delta_overflow: false,
+        }
+    }
 }
 
 impl Window {
@@ -163,6 +215,28 @@ impl Window {
         self.group_pending.len().max(self.group_inflight.len())
     }
 
+    /// Unique identity of this window instance (process-global counter,
+    /// assigned at construction). The incremental scheduler keys its
+    /// persistent bucket mirror on this: a scheduler pointed at a window
+    /// it has never drained (or a different window than last time) must
+    /// resync from scratch rather than trust its cache.
+    pub fn stamp(&self) -> u64 {
+        self.stamp
+    }
+
+    /// Drain the ready-set delta log into `out` (cleared first; the
+    /// allocation is swapped, not copied, so a reused `out` makes the
+    /// steady state allocation-free). Returns `true` when the log
+    /// overflowed since the last drain — the content of `out` is then
+    /// incomplete and the caller must resync from [`Window::ready`].
+    pub fn take_ready_deltas(&mut self, out: &mut Vec<ReadyDelta>) -> bool {
+        out.clear();
+        std::mem::swap(&mut self.deltas, out);
+        let overflow = self.delta_overflow;
+        self.delta_overflow = false;
+        overflow
+    }
+
     /// Submit a dispatch request at time `now`. Returns the assigned op id,
     /// or `None` when the window is full (caller applies backpressure).
     pub fn submit(&mut self, req: DispatchRequest, now: f64) -> Option<OpId> {
@@ -203,6 +277,13 @@ impl Window {
         q.push_back(id);
         *self.group_pending.entry(req.group).or_insert(0) += 1;
         self.ops.insert(id, (op, state));
+        if state == OpState::Ready {
+            if self.deltas.len() < DELTA_LOG_CAP {
+                self.deltas.push(ReadyDelta::Enter(id));
+            } else {
+                self.delta_overflow = true;
+            }
+        }
         Some(id)
     }
 
@@ -276,6 +357,11 @@ impl Window {
             );
             *state = OpState::InFlight;
             let (stream, group, independent) = (op.stream, op.group, op.independent);
+            if self.deltas.len() < DELTA_LOG_CAP {
+                self.deltas.push(ReadyDelta::Leave(*id));
+            } else {
+                self.delta_overflow = true;
+            }
             *self.inflight.entry(stream).or_insert(0) += 1;
             *self.group_inflight.entry(group).or_insert(0) += 1;
             let pending = self
@@ -332,14 +418,30 @@ impl Window {
             debug_assert_ne!(*state, OpState::InFlight, "queued op cannot be in flight");
             ready = ready && (i == 0 || op.independent);
             if ready {
-                *state = OpState::Ready;
+                if *state != OpState::Ready {
+                    *state = OpState::Ready;
+                    if self.deltas.len() < DELTA_LOG_CAP {
+                        self.deltas.push(ReadyDelta::Enter(*id));
+                    } else {
+                        self.delta_overflow = true;
+                    }
+                }
                 prev_already_blocked = false;
             } else {
                 let already_blocked = *state == OpState::Blocked;
                 if already_blocked && prev_already_blocked {
                     break; // settled Blocked suffix (see above)
                 }
-                *state = OpState::Blocked;
+                if !already_blocked {
+                    // demotion of a (necessarily Ready) op — the InFlight
+                    // case is excluded by the debug_assert above
+                    *state = OpState::Blocked;
+                    if self.deltas.len() < DELTA_LOG_CAP {
+                        self.deltas.push(ReadyDelta::Leave(*id));
+                    } else {
+                        self.delta_overflow = true;
+                    }
+                }
                 prev_already_blocked = already_blocked;
             }
         }
@@ -838,6 +940,39 @@ mod tests {
         assert_eq!(w.get(c).unwrap().seq, 1);
         assert_eq!(w.state(b), Some(OpState::Ready));
         assert_eq!(w.state(c), Some(OpState::Blocked));
+    }
+
+    #[test]
+    fn ready_delta_log_mirrors_state_transitions() {
+        let mut w = Window::new(16);
+        let mut log = Vec::new();
+        let a = w.submit(req(0), 0.0).unwrap();
+        let b = w.submit(req(0), 0.0).unwrap(); // blocked: no delta
+        assert!(!w.take_ready_deltas(&mut log), "no overflow");
+        assert_eq!(log, vec![ReadyDelta::Enter(a)]);
+        w.issue(&[a]); // a leaves the ready set, b becomes the front
+        assert!(!w.take_ready_deltas(&mut log));
+        assert_eq!(log, vec![ReadyDelta::Leave(a), ReadyDelta::Enter(b)]);
+        w.requeue(a); // straggler returns ahead of b; b demotes behind it
+        assert!(!w.take_ready_deltas(&mut log));
+        assert_eq!(log, vec![ReadyDelta::Enter(a), ReadyDelta::Leave(b)]);
+        // a drained log stays drained
+        assert!(!w.take_ready_deltas(&mut log));
+        assert!(log.is_empty());
+    }
+
+    #[test]
+    fn ready_delta_log_overflow_reports_resync() {
+        let mut w = Window::new(10_000);
+        for _ in 0..(super::DELTA_LOG_CAP + 5) {
+            w.submit(ind(0), 0.0).unwrap();
+        }
+        let mut log = Vec::new();
+        assert!(w.take_ready_deltas(&mut log), "overflowed log must say so");
+        assert_eq!(log.len(), super::DELTA_LOG_CAP, "recording stopped at cap");
+        // the overflow flag clears with the drain that reported it
+        assert!(!w.take_ready_deltas(&mut log));
+        assert!(log.is_empty());
     }
 
     #[test]

@@ -34,6 +34,10 @@
 //!                     `--verify` replays the same trace with the issue-time
 //!                     plan verifier off and on and emits the overhead ratio
 //!                     + violation count (BENCH_9.json);
+//!                     `--sched` microbenches the incremental decide against
+//!                     the from-scratch naive oracle at held window depths
+//!                     64/256/1024 and replays the trace on the incremental
+//!                     path (BENCH_10.json);
 //!                     `--launch-log out.jsonl` captures the replay's
 //!                     admission/launch/completion events for `vliwd audit`
 //! * `audit`         — offline launch-log auditor: replays a `--launch-log`
@@ -523,6 +527,10 @@ fn cmd_bench() -> Result<()> {
             "verify",
             "replay the trace twice — issue-time plan verifier off, then on — and emit BENCH_9.json (throughput ratio, plan checks, violation count)",
         )
+        .switch(
+            "sched",
+            "scheduler microbench: incremental decide vs the from-scratch naive oracle at held window depths 64/256/1024, plus the BENCH_2-floor replay on the incremental path — emits BENCH_10.json (decides/s, decide p50/p99 ns, verifier violations, bucket reuse counters)",
+        )
         .flag(
             "launch-log",
             "",
@@ -539,18 +547,24 @@ fn cmd_bench() -> Result<()> {
     let warm_start = p.get_bool("warm-start");
     let wire = p.get_bool("wire");
     let verify = p.get_bool("verify");
+    let sched = p.get_bool("sched");
     let slo_mix = p.get("workload") == "slo-mix";
-    if (frontend as u8) + (engine_matrix as u8) + (warm_start as u8) + (wire as u8) + (verify as u8)
+    if (frontend as u8)
+        + (engine_matrix as u8)
+        + (warm_start as u8)
+        + (wire as u8)
+        + (verify as u8)
+        + (sched as u8)
         > 1
     {
-        bail!("--frontend, --engine-matrix, --warm-start, --wire and --verify are separate bench steps; pick one");
+        bail!("--frontend, --engine-matrix, --warm-start, --wire, --verify and --sched are separate bench steps; pick one");
     }
-    if slo_mix && (frontend || engine_matrix || warm_start || wire || verify) {
+    if slo_mix && (frontend || engine_matrix || warm_start || wire || verify || sched) {
         bail!("--workload slo-mix is its own bench step (BENCH_7); drop the other step flag");
     }
     let launch_log_path = p.get("launch-log").to_string();
     if !launch_log_path.is_empty()
-        && (frontend || engine_matrix || warm_start || wire || verify || slo_mix)
+        && (frontend || engine_matrix || warm_start || wire || verify || sched || slo_mix)
     {
         bail!("--launch-log applies to the default deterministic replay step only");
     }
@@ -561,6 +575,7 @@ fn cmd_bench() -> Result<()> {
         "" if slo_mix => "BENCH_7.json".to_string(),
         "" if wire => "BENCH_8.json".to_string(),
         "" if verify => "BENCH_9.json".to_string(),
+        "" if sched => "BENCH_10.json".to_string(),
         "" => "BENCH_3.json".to_string(),
         o => o.to_string(),
     };
@@ -594,6 +609,9 @@ fn cmd_bench() -> Result<()> {
         other => bail!("unknown --workload '{other}' (valid: skewed, mixed, slo-mix)"),
     };
     let trace = Trace::generate(&tenants, per, seed);
+    if sched {
+        return bench_sched(&trace, &out);
+    }
     if verify {
         return bench_verify(&trace, &out);
     }
@@ -799,6 +817,157 @@ fn bench_verify(trace: &Trace, out: &str) -> Result<()> {
     o.insert(
         "off_attainment".to_string(),
         Json::Num(off.metrics.overall_attainment()),
+    );
+    std::fs::write(out, Json::Obj(o).to_string_compact())
+        .with_context(|| format!("write {out}"))?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// One held-depth cycle of the scheduler microbench: a steady window of
+/// `depth` ready ops spread over 16 `(shape, class)` buckets, driven for
+/// `iters` decide cycles. Every Launch is drained (issue + complete) and
+/// the window refilled into one randomly chosen bucket, so the depth
+/// holds while only one or two buckets dirty per cycle — the shape the
+/// incremental path is built for. Only the decide call itself is timed;
+/// the verifier re-check on incremental launches runs off the clock.
+/// Returns `(decides/sec, p50 ns, p99 ns, verifier violations)`.
+fn sched_depth_run(depth: usize, iters: usize, incremental: bool) -> (f64, f64, f64, u64) {
+    use vliw_jit::analysis::plan::verify_pack;
+    use vliw_jit::compiler::coalescer::Coalescer;
+    use vliw_jit::compiler::ir::{DispatchRequest, StreamId, TensorOp};
+    use vliw_jit::compiler::scheduler::{Decision, Policy, Scheduler};
+    use vliw_jit::compiler::window::Window;
+    use vliw_jit::estimate::prior::analytic_us;
+    use vliw_jit::gpu::kernel::LaunchConfig;
+    use vliw_jit::util::rng::Rng;
+
+    let cm = CostModel::v100();
+    let est =
+        |k: &KernelDesc, _ops: &[&TensorOp]| analytic_us(&cm, &LaunchConfig::greedy(), k);
+    // 16 buckets: 8 power-of-two GEMM heights x 2 latency classes, all
+    // with multi-second slack so packs launch when full and the
+    // best-effort yield rule never enters the picture
+    let combos: Vec<(u32, SloClass)> = [1u32, 2, 4, 8, 16, 32, 64, 128]
+        .into_iter()
+        .flat_map(|m| [(m, SloClass::Critical), (m, SloClass::Standard)])
+        .collect();
+    let mut rng = Rng::new(0xB10 + depth as u64);
+    let mut now = 0.0f64;
+    let mut w = Window::new(depth * 2);
+    let submit_one = |w: &mut Window, rng: &mut Rng, now: f64, ci: usize| {
+        let (m, class) = combos[ci % combos.len()];
+        let req = DispatchRequest::new(
+            StreamId(rng.below(32) as u32),
+            KernelDesc::gemm(m, 256, 256),
+            rng.range(1.0e6, 2.0e6),
+        )
+        .with_class(class)
+        .with_independent(true);
+        w.submit(req, now).expect("bench window has headroom");
+    };
+    for i in 0..depth {
+        submit_one(&mut w, &mut rng, now, i);
+    }
+
+    let mut sched = Scheduler::new(Policy::default(), Coalescer::default());
+    let mut hist = LatencyHist::new();
+    let mut busy = std::time::Duration::ZERO;
+    let mut violations = 0u64;
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        let d = if incremental {
+            sched.decide(&mut w, now, 0, est)
+        } else {
+            sched.decide_naive(&w, now, est)
+        };
+        let dt = t0.elapsed();
+        busy += dt;
+        hist.record_us(dt.as_nanos() as f64);
+        match d {
+            Decision::Launch(p) => {
+                if incremental {
+                    violations += verify_pack(&w, &sched.coalescer, &p, &[]).len() as u64;
+                }
+                w.issue(&p.ops);
+                for id in &p.ops {
+                    w.complete(*id);
+                }
+                let ci = rng.below(combos.len() as u64) as usize;
+                for _ in 0..p.ops.len() {
+                    submit_one(&mut w, &mut rng, now, ci);
+                }
+            }
+            Decision::Wait { until_us } => now = until_us.max(now + 1.0),
+            Decision::Idle => now += 100.0,
+        }
+    }
+    let rps = iters as f64 / busy.as_secs_f64().max(1e-9);
+    (rps, hist.quantile_us(0.5), hist.quantile_us(0.99), violations)
+}
+
+/// The `bench --sched` step (BENCH_10): the incremental-decide
+/// microbench plus the BENCH_2-floor replay. Each held window depth runs
+/// the same deterministic refill loop twice — once through the
+/// incremental `decide` (the production path) and once through the
+/// from-scratch `decide_naive` oracle — and only the decide calls are
+/// timed. CI asserts zero verifier violations across every incremental
+/// launch, incremental >= naive throughput at depth 64, >= 3x at depth
+/// 1024, and that the replay (scheduled by the incremental path) holds
+/// the BENCH_2 attainment floor.
+fn bench_sched(trace: &Trace, out: &str) -> Result<()> {
+    const DEPTHS: [usize; 3] = [64, 256, 1024];
+    const ITERS: usize = 2000;
+    let mut o = std::collections::BTreeMap::new();
+    o.insert(
+        "bench".to_string(),
+        Json::Str("sched_incremental".to_string()),
+    );
+    let mut violations = 0u64;
+    for depth in DEPTHS {
+        let (inc_rps, inc_p50, inc_p99, v) = sched_depth_run(depth, ITERS, true);
+        violations += v;
+        let (naive_rps, naive_p50, naive_p99, _) = sched_depth_run(depth, ITERS, false);
+        println!(
+            "depth {depth:>4}: inc {inc_rps:>9.0}/s p99 {inc_p99:>7.0} ns | \
+             naive {naive_rps:>9.0}/s p99 {naive_p99:>7.0} ns | {:.1}x",
+            inc_rps / naive_rps.max(1e-9)
+        );
+        o.insert(format!("sched_inc_rps_d{depth}"), Json::Num(inc_rps));
+        o.insert(format!("sched_naive_rps_d{depth}"), Json::Num(naive_rps));
+        o.insert(format!("sched_inc_p50_ns_d{depth}"), Json::Num(inc_p50));
+        o.insert(format!("sched_inc_p99_ns_d{depth}"), Json::Num(inc_p99));
+        o.insert(format!("sched_naive_p50_ns_d{depth}"), Json::Num(naive_p50));
+        o.insert(format!("sched_naive_p99_ns_d{depth}"), Json::Num(naive_p99));
+    }
+    o.insert("verify_violations".to_string(), Json::Num(violations as f64));
+
+    // the floor replay: the same deterministic trace shape as the
+    // BENCH_2 step, scheduled end to end by the incremental path
+    let mut s = Server::new(SimBackend::default(), BatchPolicy::coalescing());
+    let report = s.replay(trace);
+    println!("{}", report.render());
+    let m = &report.metrics;
+    report_core_json(m, &mut o);
+    o.insert(
+        "decides".to_string(),
+        Json::Num(m.jit.decide_ns.count() as f64),
+    );
+    o.insert(
+        "decide_p50_ns".to_string(),
+        Json::Num(m.jit.decide_ns.quantile_us(0.5)),
+    );
+    o.insert(
+        "decide_p99_ns".to_string(),
+        Json::Num(m.jit.decide_ns.quantile_us(0.99)),
+    );
+    o.insert(
+        "buckets_reused".to_string(),
+        Json::Num(m.jit.buckets_reused as f64),
+    );
+    o.insert(
+        "buckets_repacked".to_string(),
+        Json::Num(m.jit.buckets_repacked as f64),
     );
     std::fs::write(out, Json::Obj(o).to_string_compact())
         .with_context(|| format!("write {out}"))?;

@@ -210,6 +210,16 @@ impl Clock for WallClock {
     }
 }
 
+/// Monotonic nanosecond clock injected into the JIT's decide timer
+/// ([`crate::compiler::jit::JitCompiler::decide_clock`]). A plain fn (not a
+/// closure) so the pure compiler layer carries no `Instant` of its own —
+/// the serve layer owns the anchor, initialized at first call.
+fn decide_clock_ns() -> u64 {
+    use std::sync::OnceLock;
+    static T0: OnceLock<Instant> = OnceLock::new();
+    T0.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
 // ---------------------------------------------------------------------------
 // Placement (orthogonal engine option)
 // ---------------------------------------------------------------------------
@@ -1286,13 +1296,17 @@ where
 {
     /// A new engine over a configured JIT, clock, stage, and options.
     pub fn new(
-        jit: ServeJit<X>,
+        mut jit: ServeJit<X>,
         clock: C,
         stage: S,
         placement: Option<Placement>,
         slots: Vec<ModelSlot>,
         cfg: EngineConfig,
     ) -> Self {
+        // decide latency is measured in wall time even on virtual-clock
+        // engines: the histogram tracks scheduler overhead, not the
+        // simulated timeline
+        jit.decide_clock = Some(decide_clock_ns);
         let groups = slots.len();
         let last_gen = jit.executor().estimator_generation();
         let mut engine = Engine {

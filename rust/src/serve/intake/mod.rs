@@ -59,15 +59,23 @@
 //!   op outcome routed out through the engine's reply sink.
 //! * **Reply router** (`vliw-reply`, one thread) drains the sink,
 //!   resolves tokens against the [`ReplyTable`], and — when a batch's
-//!   last member lands — writes the single reply frame on the
-//!   connection's *write* half (a mutex-guarded clone of the socket;
-//!   the shard never writes, the router never reads).
+//!   last member lands — *enqueues* the single reply frame on the
+//!   connection's outbound queue and moves on. The router never touches
+//!   a socket, so a stalled client cannot park it.
+//! * **Reply writer** (`vliw-writer`, one thread) owns every
+//!   connection's *write* half through the outbound table: it sweeps
+//!   the per-connection frame queues with non-blocking writes and a
+//!   per-socket exponential backoff. One client that stops reading
+//!   costs exactly its own (capped) queue; every other connection's
+//!   replies keep flowing. The shard never writes, the writer never
+//!   reads.
 //!
 //! A client disconnect purges its pending batches from the table
 //! (bounded bookkeeping under churn); outcome events for already-purged
 //! batches count as `orphan_events` and are dropped.
 
 pub mod loadgen;
+mod outbound;
 pub mod shard;
 pub mod wire;
 
@@ -85,8 +93,9 @@ use crate::serve::server::{ModelBackend, Server, ServeReport};
 use crate::util::threadpool::{Notify, Stage};
 use crate::workload::trace::TenantSpec;
 
+use outbound::Outbound;
 use shard::IntakeShardReport;
-use wire::{encode_reply, write_frame, FrameKind, WireOpStatus, WireReply};
+use wire::{encode_reply, FrameKind, WireOpStatus, WireReply};
 
 /// One batch awaiting its last member.
 struct PendingBatch {
@@ -94,25 +103,24 @@ struct PendingBatch {
     client_id: u64,
     remaining: usize,
     ops: Vec<Option<WireOpStatus>>,
-    writer: Arc<Mutex<TcpStream>>,
 }
 
 #[derive(Default)]
 struct ReplyState {
     /// batch id → pending batch.
     pending: HashMap<u64, PendingBatch>,
-    replies: u64,
-    dropped_replies: u64,
     orphan_events: u64,
 }
 
 /// Tracks per-batch completion across threads: shards register, the
 /// reply router resolves, disconnects purge. Tokens pack
 /// `(batch id << 16) | op index`; token 0 is reserved for non-wire
-/// requests and never reaches this table.
-#[derive(Default)]
+/// requests and never reaches this table. Finished replies leave
+/// through the connection's [`Outbound`] queue — resolving never
+/// touches a socket.
 pub struct ReplyTable {
     state: Mutex<ReplyState>,
+    outbound: Arc<Outbound>,
     /// Launch-log auditor, if attached: disconnect purges land as
     /// `purge` events so `vliwd audit` can tell a churned connection's
     /// never-replied completions from a genuine lost reply.
@@ -120,24 +128,19 @@ pub struct ReplyTable {
 }
 
 impl ReplyTable {
-    /// A table that mirrors disconnect purges into `log`.
-    fn with_audit(log: Option<Arc<AuditLog>>) -> Self {
+    /// A table whose replies drain through `outbound` and whose
+    /// disconnect purges mirror into `log`.
+    fn new(outbound: Arc<Outbound>, log: Option<Arc<AuditLog>>) -> Self {
         ReplyTable {
+            state: Mutex::default(),
+            outbound,
             audit: log,
-            ..ReplyTable::default()
         }
     }
 
     /// Register a batch BEFORE its ops are forwarded to the engine, so
     /// no completion can arrive for an unregistered batch.
-    fn register(
-        &self,
-        conn: u64,
-        batch: u64,
-        client_id: u64,
-        n: usize,
-        writer: Arc<Mutex<TcpStream>>,
-    ) {
+    fn register(&self, conn: u64, batch: u64, client_id: u64, n: usize) {
         let mut s = self.state.lock().unwrap_or_else(|p| p.into_inner());
         s.pending.insert(
             batch,
@@ -146,19 +149,18 @@ impl ReplyTable {
                 client_id,
                 remaining: n,
                 ops: vec![None; n],
-                writer,
             },
         );
     }
 
     /// Record one op's terminal status; when it is the batch's last,
-    /// write the single reply frame and retire the batch.
+    /// enqueue the single reply frame and retire the batch.
     fn resolve(&self, token: u64, status: WireOpStatus) {
         let batch = token >> 16;
         let idx = (token & 0xffff) as usize;
-        // complete-batch extraction happens under the lock; the socket
-        // write happens OUTSIDE it, so a stalling client cannot block
-        // the shards' registrations
+        // complete-batch extraction happens under the lock; the frame
+        // enqueue happens OUTSIDE it (and is itself non-blocking), so
+        // nothing here can ever stall the shards' registrations
         let done = {
             let mut s = self.state.lock().unwrap_or_else(|p| p.into_inner());
             if !s.pending.contains_key(&batch) {
@@ -185,16 +187,9 @@ impl ReplyTable {
                 .map(|st| st.unwrap_or(WireOpStatus::Failed))
                 .collect(),
         };
-        let sent = {
-            let mut w = done.writer.lock().unwrap_or_else(|p| p.into_inner());
-            write_reply_retrying(&mut w, &reply).is_ok()
-        };
-        let mut s = self.state.lock().unwrap_or_else(|p| p.into_inner());
-        if sent {
-            s.replies += 1;
-        } else {
-            s.dropped_replies += 1;
-        }
+        // accepted-or-dropped accounting lives in the outbound table
+        self.outbound
+            .enqueue(done.conn, FrameKind::Reply, &encode_reply(&reply));
     }
 
     /// Purge every pending batch of a closed connection — nothing will
@@ -222,27 +217,10 @@ impl ReplyTable {
         s.pending.len()
     }
 
-    fn stats(&self) -> (u64, u64, u64) {
+    fn orphan_events(&self) -> u64 {
         let s = self.state.lock().unwrap_or_else(|p| p.into_inner());
-        (s.replies, s.dropped_replies, s.orphan_events)
+        s.orphan_events
     }
-}
-
-/// Write one reply frame on a socket whose clone may be in non-blocking
-/// mode (the read half set it): retry `WouldBlock` briefly instead of
-/// dropping the reply. Replies are small; a full send buffer clears in
-/// microseconds on loopback.
-fn write_reply_retrying(w: &mut TcpStream, reply: &WireReply) -> io::Result<()> {
-    let payload = encode_reply(reply);
-    for _ in 0..20_000 {
-        match write_frame(w, FrameKind::Reply, &payload) {
-            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
-                std::thread::sleep(Duration::from_micros(100));
-            }
-            other => return other,
-        }
-    }
-    Err(io::Error::new(io::ErrorKind::TimedOut, "reply write stalled"))
 }
 
 /// Map an engine outcome to the wire status taxonomy.
@@ -269,12 +247,14 @@ fn status_of(outcome: OpOutcome) -> WireOpStatus {
 pub struct WireServer {
     addr: SocketAddr,
     table: Arc<ReplyTable>,
+    outbound: Arc<Outbound>,
     stop: Arc<AtomicBool>,
     notify: Arc<Notify>,
     acceptor: Stage<u64>,
     shards: Vec<Stage<IntakeShardReport>>,
     engine: Stage<ServeReport>,
     router: Stage<()>,
+    writer: Stage<()>,
 }
 
 impl WireServer {
@@ -301,6 +281,10 @@ impl WireServer {
         let mut report = self.engine.join();
         // the engine dropped the reply sink: the router drains and exits
         self.router.join();
+        // the router enqueued its last frames — bounded-drain the
+        // writer, then its written/dropped counts are final
+        self.outbound.stop();
+        self.writer.join();
         let intake = &mut report.metrics.intake;
         for r in &shard_reports {
             intake.decode.merge(&r.decode);
@@ -315,10 +299,10 @@ impl WireServer {
                 peak_conns: r.peak_conns,
             });
         }
-        let (replies, dropped, orphans) = self.table.stats();
+        let (replies, dropped) = self.outbound.stats();
         intake.replies = replies;
         intake.dropped_replies = dropped;
-        intake.orphan_events = orphans;
+        intake.orphan_events = self.table.orphan_events();
         report
     }
 }
@@ -373,7 +357,8 @@ where
         .recv()
         .map_err(|_| io::Error::other("engine thread died at startup"))?;
 
-    let table = Arc::new(ReplyTable::with_audit(launch_log));
+    let outbound = Arc::new(Outbound::default());
+    let table = Arc::new(ReplyTable::new(Arc::clone(&outbound), launch_log));
     let stop = Arc::new(AtomicBool::new(false));
     let notify = Arc::new(Notify::new());
     let batch_ids = Arc::new(AtomicU64::new(1));
@@ -388,6 +373,7 @@ where
             conn_rx,
             engine_tx: in_tx.clone(),
             table: Arc::clone(&table),
+            outbound: Arc::clone(&outbound),
             slot_map: slot_map.clone(),
             stop: Arc::clone(&stop),
             notify: Arc::clone(&notify),
@@ -433,14 +419,19 @@ where
         }
     });
 
+    let writer_outbound = Arc::clone(&outbound);
+    let writer = Stage::spawn("vliw-writer", move || writer_outbound.writer_loop());
+
     Ok(WireServer {
         addr,
         table,
+        outbound,
         stop,
         notify,
         acceptor,
         shards: shard_stages,
         engine,
         router,
+        writer,
     })
 }

@@ -1,0 +1,281 @@
+//! Per-connection outbound reply queues and the single writer stage.
+//!
+//! The reply router used to write frames directly into a mutex-guarded
+//! clone of each connection's socket, retrying `WouldBlock` in place —
+//! so one client that stopped reading could park the router (and every
+//! other connection's replies) behind its full send buffer. This module
+//! breaks that coupling: producers (the reply router resolving batches,
+//! the shards naming protocol errors) only *enqueue* fully framed bytes
+//! onto the target connection's FIFO and return immediately; the
+//! `vliw-writer` stage sweeps the queues with non-blocking writes and a
+//! per-socket exponential backoff, so a stalled socket costs exactly its
+//! own queue and nothing else.
+//!
+//! Bounded by construction: a connection may hold at most
+//! [`CONN_QUEUE_CAP`] frames — overflowing marks it dead (a client that
+//! is 4096 replies behind is not coming back) and its frames drop, with
+//! every dropped reply counted. Shutdown drains best-effort for a short
+//! grace period, then counts whatever is still queued as dropped.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::serve::intake::wire::{write_frame, FrameKind};
+use crate::util::threadpool::Notify;
+
+/// Hard cap on frames queued per connection; overflow kills the
+/// connection's queue rather than growing without bound.
+pub(crate) const CONN_QUEUE_CAP: usize = 4096;
+
+/// First backoff after a `WouldBlock`; doubles per consecutive strike.
+const BACKOFF_BASE: Duration = Duration::from_micros(200);
+/// Ceiling of the per-socket exponential backoff.
+const BACKOFF_MAX: Duration = Duration::from_millis(5);
+/// How long the writer keeps draining queued frames after stop.
+const SHUTDOWN_GRACE: Duration = Duration::from_millis(250);
+/// Idle poll interval when no queue has work and no backoff is armed.
+const IDLE_WAIT: Duration = Duration::from_micros(500);
+
+/// One connection's write half and its pending frames.
+struct ConnOut {
+    stream: TcpStream,
+    /// Fully framed messages, FIFO; the flag marks reply frames (the
+    /// only kind the drop accounting tracks).
+    queue: VecDeque<(Vec<u8>, bool)>,
+    /// Bytes of `queue.front()` already on the wire (partial write).
+    sent: usize,
+    /// The sweep skips this socket until then (armed by `WouldBlock`).
+    backoff_until: Option<Instant>,
+    /// Consecutive `WouldBlock` strikes, drives the backoff doubling.
+    strikes: u32,
+    /// Write error or queue overflow: frames drop, entry is removed.
+    dead: bool,
+    /// Connection closed by its shard: remove once the queue drains.
+    retired: bool,
+}
+
+#[derive(Default)]
+struct OutboundState {
+    conns: HashMap<u64, ConnOut>,
+    /// Reply frames fully written to their socket.
+    replies_written: u64,
+    /// Reply frames dropped: unknown/dead connection at enqueue, queue
+    /// overflow, write error, or still queued when shutdown gave up.
+    replies_dropped: u64,
+}
+
+/// The shared outbound table: producers enqueue, the writer stage
+/// drains. See the module docs for the isolation contract.
+#[derive(Default)]
+pub(crate) struct Outbound {
+    state: Mutex<OutboundState>,
+    notify: Notify,
+    stop: AtomicBool,
+}
+
+impl Outbound {
+    fn lock(&self) -> std::sync::MutexGuard<'_, OutboundState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Adopt a connection's write half (called by its shard before any
+    /// frame for it can be produced).
+    pub(crate) fn register(&self, conn: u64, stream: TcpStream) {
+        self.lock().conns.insert(
+            conn,
+            ConnOut {
+                stream,
+                queue: VecDeque::new(),
+                sent: 0,
+                backoff_until: None,
+                strikes: 0,
+                dead: false,
+                retired: false,
+            },
+        );
+    }
+
+    /// Mark a connection closed: the writer removes it once its queue
+    /// drains (the shard's parting error frame still gets its chance).
+    pub(crate) fn retire(&self, conn: u64) {
+        let mut s = self.lock();
+        if let Some(c) = s.conns.get_mut(&conn) {
+            c.retired = true;
+        }
+        drop(s);
+        self.notify.notify();
+    }
+
+    /// Queue one frame for a connection. Returns whether the frame was
+    /// accepted; a rejected reply frame is counted as dropped.
+    pub(crate) fn enqueue(&self, conn: u64, kind: FrameKind, payload: &[u8]) -> bool {
+        let mut frame = Vec::with_capacity(payload.len() + 8);
+        if write_frame(&mut frame, kind, payload).is_err() {
+            // oversized payload; replies never get here
+            return false;
+        }
+        let is_reply = kind == FrameKind::Reply;
+        let mut s = self.lock();
+        let mut dropped_now = 0u64;
+        let accepted = match s.conns.get_mut(&conn) {
+            None => {
+                dropped_now += is_reply as u64;
+                false
+            }
+            Some(c) if c.dead => {
+                dropped_now += is_reply as u64;
+                false
+            }
+            Some(c) if c.queue.len() >= CONN_QUEUE_CAP => {
+                // thousands of unread frames: the peer is not consuming.
+                // Kill the queue instead of growing it without bound.
+                c.dead = true;
+                dropped_now += is_reply as u64;
+                for (_, r) in c.queue.drain(..) {
+                    dropped_now += r as u64;
+                }
+                false
+            }
+            Some(c) => {
+                c.queue.push_back((frame, is_reply));
+                true
+            }
+        };
+        s.replies_dropped += dropped_now;
+        drop(s);
+        if accepted {
+            self.notify.notify();
+        }
+        accepted
+    }
+
+    /// `(written, dropped)` reply-frame totals. Final only after the
+    /// writer stage has joined.
+    pub(crate) fn stats(&self) -> (u64, u64) {
+        let s = self.lock();
+        (s.replies_written, s.replies_dropped)
+    }
+
+    /// Begin shutdown: the writer drains what it can within the grace
+    /// period, counts the rest dropped, and exits.
+    pub(crate) fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.notify.notify();
+    }
+
+    /// One pass over every connection: write as much as each socket
+    /// takes without blocking. Returns whether any bytes moved and the
+    /// nearest armed backoff deadline.
+    fn sweep(&self) -> (bool, Option<Duration>) {
+        let now = Instant::now();
+        let mut s = self.lock();
+        let mut progressed = false;
+        let mut next_backoff: Option<Duration> = None;
+        let mut written_now = 0u64;
+        let mut dropped_now = 0u64;
+        let mut remove: Vec<u64> = Vec::new();
+        for (&id, c) in s.conns.iter_mut() {
+            if c.queue.is_empty() {
+                if c.retired || c.dead {
+                    remove.push(id);
+                }
+                continue;
+            }
+            if let Some(t) = c.backoff_until {
+                if t > now {
+                    let wait = t - now;
+                    next_backoff = Some(next_backoff.map_or(wait, |n| n.min(wait)));
+                    continue;
+                }
+            }
+            loop {
+                let Some(front) = c.queue.front() else { break };
+                let is_reply = front.1;
+                let len = front.0.len();
+                let res = c.stream.write(&front.0[c.sent..]);
+                match res {
+                    Ok(0) => {
+                        c.dead = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        progressed = true;
+                        c.sent += n;
+                        c.strikes = 0;
+                        c.backoff_until = None;
+                        if c.sent == len {
+                            written_now += is_reply as u64;
+                            c.queue.pop_front();
+                            c.sent = 0;
+                        }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        c.strikes = c.strikes.saturating_add(1);
+                        let backoff = BACKOFF_BASE
+                            .saturating_mul(1u32 << c.strikes.min(5))
+                            .min(BACKOFF_MAX);
+                        c.backoff_until = Some(now + backoff);
+                        next_backoff =
+                            Some(next_backoff.map_or(backoff, |n| n.min(backoff)));
+                        break;
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        c.dead = true;
+                        break;
+                    }
+                }
+            }
+            if c.dead {
+                for (_, r) in c.queue.drain(..) {
+                    dropped_now += r as u64;
+                }
+                remove.push(id);
+            } else if c.queue.is_empty() && c.retired {
+                remove.push(id);
+            }
+        }
+        for id in remove {
+            s.conns.remove(&id);
+        }
+        s.replies_written += written_now;
+        s.replies_dropped += dropped_now;
+        (progressed, next_backoff)
+    }
+
+    /// The `vliw-writer` stage body: sweep, sleep on the eventcount (or
+    /// until the nearest backoff expires), repeat. After `stop`, drain
+    /// within the grace period, then count the leftovers dropped.
+    pub(crate) fn writer_loop(&self) {
+        let mut stop_at: Option<Instant> = None;
+        loop {
+            let epoch = self.notify.epoch();
+            let (progressed, next_backoff) = self.sweep();
+            if self.stop.load(Ordering::SeqCst) {
+                let deadline =
+                    *stop_at.get_or_insert_with(|| Instant::now() + SHUTDOWN_GRACE);
+                let drained = self.lock().conns.values().all(|c| c.queue.is_empty());
+                if drained || Instant::now() >= deadline {
+                    break;
+                }
+            }
+            if !progressed {
+                self.notify
+                    .wait_past(epoch, next_backoff.unwrap_or(IDLE_WAIT));
+            }
+        }
+        // whatever is still queued has no writer anymore
+        let mut s = self.lock();
+        let mut dropped_now = 0u64;
+        for c in s.conns.values_mut() {
+            for (_, r) in c.queue.drain(..) {
+                dropped_now += r as u64;
+            }
+        }
+        s.replies_dropped += dropped_now;
+    }
+}

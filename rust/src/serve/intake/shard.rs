@@ -7,13 +7,14 @@ use std::collections::BTreeMap;
 use std::io::{self, Read};
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use crate::runtime::golden;
 use crate::serve::engine::Incoming;
+use crate::serve::intake::outbound::Outbound;
 use crate::serve::intake::wire::{
-    encode_error, write_frame, FrameBuf, FrameKind, WireOpStatus, MAX_BATCH_OPS,
+    encode_error, FrameBuf, FrameKind, WireOpStatus, MAX_BATCH_OPS,
 };
 use crate::serve::intake::ReplyTable;
 use crate::util::stats::LatencyHist;
@@ -27,6 +28,10 @@ pub(crate) struct ShardCtx {
     /// forwards arrive in order).
     pub engine_tx: mpsc::Sender<Incoming>,
     pub table: Arc<ReplyTable>,
+    /// Per-connection outbound frame queues (replies + error frames);
+    /// the shard enqueues, the writer stage owns the sockets' write
+    /// halves.
+    pub outbound: Arc<Outbound>,
     /// model name → (group id, d_in), in the engine's sorted-name order.
     pub slot_map: BTreeMap<String, (u64, usize)>,
     pub stop: Arc<AtomicBool>,
@@ -62,8 +67,6 @@ struct Conn {
     id: u64,
     stream: TcpStream,
     buf: FrameBuf,
-    /// The write half the reply router frames replies on.
-    writer: Arc<Mutex<TcpStream>>,
 }
 
 /// Why a connection left the shard.
@@ -83,7 +86,7 @@ pub(crate) fn shard_loop(ctx: ShardCtx) -> IntakeShardReport {
         // we pump is never lost across the idle wait below
         let epoch = ctx.notify.epoch();
         while let Ok((id, stream)) = ctx.conn_rx.try_recv() {
-            match adopt(id, stream) {
+            match adopt(id, stream, &ctx.outbound) {
                 Some(conn) => {
                     report.connections += 1;
                     conns.push(conn);
@@ -105,10 +108,13 @@ pub(crate) fn shard_loop(ctx: ShardCtx) -> IntakeShardReport {
             if let Close::Protocol(msg) = close {
                 report.protocol_errors += 1;
                 // best effort: name the violation before hanging up
-                let mut w = conn.writer.lock().unwrap_or_else(|p| p.into_inner());
-                let _ = write_frame(&mut *w, FrameKind::Error, &encode_error(&msg));
+                ctx.outbound
+                    .enqueue(conn.id, FrameKind::Error, &encode_error(&msg));
             }
             ctx.table.drop_conn(conn.id);
+            // the writer drops the queue entry once the parting frames
+            // drain (or its socket errors)
+            ctx.outbound.retire(conn.id);
             report.disconnects += 1;
             progressed = true;
         }
@@ -123,22 +129,22 @@ pub(crate) fn shard_loop(ctx: ShardCtx) -> IntakeShardReport {
     // the reply table never outlives its sockets
     for conn in conns.drain(..) {
         ctx.table.drop_conn(conn.id);
+        ctx.outbound.retire(conn.id);
         report.disconnects += 1;
     }
     report
 }
 
-/// Switch an adopted connection to non-blocking and split off its write
-/// half. `None` = the socket died during handover.
-fn adopt(id: u64, stream: TcpStream) -> Option<Conn> {
+/// Switch an adopted connection to non-blocking and hand its write half
+/// to the outbound writer. `None` = the socket died during handover.
+fn adopt(id: u64, stream: TcpStream, outbound: &Outbound) -> Option<Conn> {
     stream.set_nonblocking(true).ok()?;
     stream.set_nodelay(true).ok();
-    let writer = Arc::new(Mutex::new(stream.try_clone().ok()?));
+    outbound.register(id, stream.try_clone().ok()?);
     Some(Conn {
         id,
         stream,
         buf: FrameBuf::new(),
-        writer,
     })
 }
 
@@ -210,8 +216,7 @@ fn handle_request(
     let n = req.ops.len();
     // register FIRST: once ops are forwarded, completions may resolve
     // on the router thread immediately
-    ctx.table
-        .register(conn.id, batch, req.id, n, Arc::clone(&conn.writer));
+    ctx.table.register(conn.id, batch, req.id, n);
     for (i, op) in req.ops.into_iter().enumerate() {
         let token = (batch << 16) | i as u64;
         let Some(&(group, d_in)) = ctx.slot_map.get(&op.model) else {

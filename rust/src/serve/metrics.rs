@@ -458,6 +458,16 @@ impl ServeMetrics {
                 self.jit.slo_attainment(),
             ));
         }
+        if self.jit.decide_ns.count() > 0 {
+            s.push_str(&format!(
+                "scheduler: decides={} decide_p50={}ns decide_p99={}ns buckets_reused={} buckets_repacked={}\n",
+                self.jit.decide_ns.count(),
+                self.jit.decide_ns.quantile_us(0.5) as u64,
+                self.jit.decide_ns.quantile_us(0.99) as u64,
+                self.jit.buckets_reused,
+                self.jit.buckets_repacked,
+            ));
+        }
         if self.estimator.total_hits() > 0 {
             s.push_str(&format!(
                 "estimator: measured={} tuned={} prior={} err_p50={:.1}us err_p99={:.1}us\n",
@@ -790,6 +800,21 @@ mod tests {
         m.estimator.est_err.record_us(40.0);
         let r = m.render();
         assert!(r.contains("estimator: measured=5 tuned=2 prior=1"), "{r}");
+    }
+
+    #[test]
+    fn render_shows_decide_histogram_when_present() {
+        let mut m = ServeMetrics::default();
+        m.span_us = 1e6;
+        assert!(!m.render().contains("scheduler:"), "no line before decides");
+        m.jit.decide_ns.record_us(1_500.0);
+        m.jit.decide_ns.record_us(2_500.0);
+        m.jit.buckets_reused = 7;
+        m.jit.buckets_repacked = 3;
+        let r = m.render();
+        assert!(r.contains("scheduler: decides=2"), "{r}");
+        assert!(r.contains("buckets_reused=7"), "{r}");
+        assert!(r.contains("buckets_repacked=3"), "{r}");
     }
 
     #[test]

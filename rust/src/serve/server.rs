@@ -492,6 +492,10 @@ impl<B: ModelBackend> PackExecutor<Vec<f32>> for ServeExecutor<B> {
         }
     }
 
+    fn estimate_generation(&self) -> u64 {
+        self.estimator_generation()
+    }
+
     fn execute_pack(
         &mut self,
         sk: &SuperKernel,

@@ -128,6 +128,63 @@ fn per_stream_order_holds_across_intake_shards_for_dependent_streams() {
 }
 
 #[test]
+fn stalled_reader_never_blocks_another_connections_replies() {
+    // One intake shard, so both connections share every server-side
+    // thread: reply isolation must come from the per-connection outbound
+    // queues, not from shard separation. Connection A floods request
+    // batches whose ops all name an unknown model — each op is rejected
+    // at intake, so the reply frames head straight for A's outbound
+    // queue with no engine latency in between. A never reads: its socket
+    // buffer fills, and a writer that blocked (or retried in place)
+    // on A's socket would stall every other connection's replies.
+    let ws = serve_wire(
+        || Server::new(SimBackend::default(), BatchPolicy::coalescing()),
+        vec![tenant(0)],
+        "127.0.0.1:0",
+        1,
+        None,
+    )
+    .expect("bind loopback");
+    let addr = ws.addr();
+    let mut a = TcpStream::connect(addr).expect("connect A");
+    a.set_nodelay(true).ok();
+    for k in 0..500u64 {
+        let req = WireRequest {
+            id: k,
+            ops: (0..64)
+                .map(|i| WireOp {
+                    tenant: 0,
+                    model: "no_such_model".into(),
+                    slo_us: 10_000_000.0,
+                    class: SloClass::Standard,
+                    seed: k * 64 + i,
+                })
+                .collect(),
+        };
+        write_frame(&mut a, FrameKind::Request, &encode_request(&req)).expect("A send");
+    }
+    // connection B: one real request. Its reply must arrive promptly
+    // even though A has hundreds of replies jammed ahead of it.
+    let mut b = TcpStream::connect(addr).expect("connect B");
+    b.set_nodelay(true).ok();
+    let req = WireRequest {
+        id: 9_999,
+        ops: vec![op(0, 1)],
+    };
+    write_frame(&mut b, FrameKind::Request, &encode_request(&req)).expect("B send");
+    b.set_read_timeout(Some(Duration::from_secs(30)))
+        .expect("timeout");
+    let f = read_frame(&mut b).expect("B's reply must not wait on A's stalled socket");
+    assert_eq!(f.kind, FrameKind::Reply);
+    let reply = decode_reply(&f.payload).expect("reply payload");
+    assert_eq!(reply.id, 9_999);
+    assert_eq!(reply.ops.len(), 1);
+    drop(a);
+    drop(b);
+    ws.shutdown();
+}
+
+#[test]
 fn mid_flight_disconnect_drops_pending_replies_without_leaking() {
     // Connection churn: clients fire a 2-op batch and vanish without
     // reading the reply. Whatever path each batch takes — reply written
